@@ -1,0 +1,74 @@
+//! The paper's motivating scenario (§1): continuously monitor a
+//! classifier in production and alarm on breakdowns.
+//!
+//! ```sh
+//! cargo run --release --example monitoring
+//! ```
+//!
+//! A Hepmass-like event stream is scored by an (analytic) classifier.
+//! Three failure modes are injected one after another:
+//!
+//! 1. a gradual concept drift (labels decouple from scores over time),
+//! 2. recovery (e.g. the model was retrained),
+//! 3. an abrupt system failure (score pipeline degrades with noise).
+//!
+//! The windowed approximate AUC (ε = 0.05) feeds an EWMA drift monitor;
+//! the example prints the timeline and the alarms it raises.
+
+use streamauc::coordinator::window::Window;
+use streamauc::coordinator::{ApproxAuc, AucMonitor, MonitorEvent};
+use streamauc::stream::synth::{hepmass_like, Dataset};
+use streamauc::stream::Drift;
+
+const WINDOW: usize = 2000;
+const EVENTS: usize = 120_000;
+
+fn main() {
+    let mut data = Dataset::new(hepmass_like(), 7);
+    let mut stream = data.score_stream(EVENTS);
+    // Failure 1: gradual label drift between 30k and 50k.
+    Drift::Gradual { from: 30_000, to: 50_000, rate: 0.35 }.apply(&mut stream, 1);
+    // Recovery: the clean generator resumes after 50k — re-draw the tail.
+    let tail = data.score_stream(EVENTS - 50_000);
+    stream.splice(50_000.., tail);
+    // Failure 2: abrupt score-noise failure at 90k.
+    Drift::NoiseRamp { from: 90_000, to: 92_000, sd: 0.35 }.apply(&mut stream, 2);
+
+    let mut window = Window::with_estimator(WINDOW, ApproxAuc::new(0.05));
+    let mut monitor = AucMonitor::new(0.0001, 0.06, 400, WINDOW as u32);
+    let mut alarms: Vec<usize> = Vec::new();
+
+    println!("injected: gradual drift @30k–50k, recovery @50k, noise failure @90k\n");
+    println!("{:>8}  {:>8}  {:>9}  state", "event", "auc~", "baseline");
+    for (i, &(score, label)) in stream.iter().enumerate() {
+        window.push(score, label);
+        if !window.is_full() {
+            continue;
+        }
+        let event = monitor.observe(window.auc());
+        if event == MonitorEvent::Alarm {
+            alarms.push(i);
+            println!(
+                "{i:>8}  {:>8.4}  {:>9.4}  *** ALARM ***",
+                window.auc(),
+                monitor.baseline()
+            );
+        } else if i % 10_000 == 0 {
+            println!(
+                "{i:>8}  {:>8.4}  {:>9.4}  {:?}",
+                window.auc(),
+                monitor.baseline(),
+                event
+            );
+        }
+    }
+
+    println!("\nalarms at events: {alarms:?}");
+    assert_eq!(alarms.len(), 2, "expected exactly two alarms (one per failure)");
+    assert!(
+        (30_000..55_000).contains(&alarms[0]),
+        "first alarm should land inside the gradual-drift span"
+    );
+    assert!(alarms[1] > 90_000, "second alarm should follow the noise failure");
+    println!("monitoring scenario reproduced: both failures caught, recovery quiet.");
+}

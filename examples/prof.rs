@@ -1,0 +1,31 @@
+//! Profiling workload used by the §Perf pass (EXPERIMENTS.md):
+//! 2M-event FIFO churn at k = 10⁴, ε = 0.01, with an ApproxAUC query
+//! per event. Run under `perf record -g` on a release build.
+//!
+//! ```sh
+//! cargo build --release --example prof
+//! perf record -g ./target/release/examples/prof && perf report
+//! ```
+
+use streamauc::coordinator::{ApproxAuc, AucEstimator};
+use streamauc::stream::Pcg;
+
+fn main() {
+    let mut rng = Pcg::seed(1);
+    let mut est = ApproxAuc::new(0.01);
+    let mut fifo = std::collections::VecDeque::new();
+    let mut sink = 0.0;
+    for _ in 0..2_000_000u64 {
+        let s = rng.uniform();
+        let l = rng.chance(0.5);
+        est.insert(s, l);
+        fifo.push_back((s, l));
+        if fifo.len() > 10_000 {
+            let (os, ol) = fifo.pop_front().unwrap();
+            est.remove(os, ol);
+        }
+        sink += est.auc();
+    }
+    std::hint::black_box(sink);
+    println!("prof done");
+}

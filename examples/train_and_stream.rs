@@ -1,0 +1,110 @@
+//! End-to-end driver over all three layers (the EXPERIMENTS.md §E2E run).
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example train_and_stream
+//! ```
+//!
+//! 1. **L1/L2 (build time, already done by `make artifacts`)**: the
+//!    JAX logistic-regression model with its Pallas scoring/gradient
+//!    kernels was AOT-lowered to HLO text.
+//! 2. **Runtime**: rust loads `train_step.hlo.txt` into PJRT and runs
+//!    the full SGD loop — Python is not involved.
+//! 3. **Scoring**: the trained parameters drive `score_batch.hlo.txt`
+//!    over a held-out miniboone-like stream.
+//! 4. **L3**: the scored stream feeds the paper's estimator; approximate
+//!    and exact sliding-window AUC run side by side, reporting the
+//!    relative error and the per-update speed-up.
+
+use std::time::Instant;
+
+use streamauc::coordinator::window::Window;
+use streamauc::coordinator::{ApproxAuc, ExactAuc, NaiveAuc};
+use streamauc::runtime::{Runtime, Scorer, Trainer};
+use streamauc::stream::synth::{miniboone_like, Dataset};
+
+const TRAIN_EXAMPLES: usize = 20_000;
+const TRAIN_STEPS: usize = 300;
+const TEST_EVENTS: usize = 100_000;
+const WINDOW: usize = 1000;
+const EPSILON: f64 = 0.01;
+
+fn main() -> anyhow::Result<()> {
+    // ---- Layer 2/1 artifacts into the PJRT runtime -------------------
+    let rt = Runtime::new(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"))?;
+    println!("PJRT platform: {}; contract {:?}", rt.platform(), rt.meta());
+
+    // ---- Train through the AOT train_step ----------------------------
+    let mut data = Dataset::new(miniboone_like(), 0xE2E);
+    let train = data.examples(TRAIN_EXAMPLES);
+    let trainer = Trainer::new(&rt, 0.5)?;
+    let t0 = Instant::now();
+    let report = trainer.train(&train, TRAIN_STEPS)?;
+    println!(
+        "trained {TRAIN_STEPS} steps × {} batch in {:.2?}: loss {:.4} → {:.4}",
+        trainer.batch_size(),
+        t0.elapsed(),
+        report.early_loss(10),
+        report.late_loss(10),
+    );
+    assert!(report.late_loss(10) < report.early_loss(10) * 0.8, "training failed to converge");
+
+    // ---- Score the held-out stream ------------------------------------
+    let test = data.examples(TEST_EVENTS);
+    let scorer = Scorer::new(&rt, report.params)?;
+    let rows: Vec<Vec<f32>> = test.iter().map(|e| e.features.clone()).collect();
+    let t1 = Instant::now();
+    let scores = scorer.score(&rows)?;
+    let score_elapsed = t1.elapsed();
+    let pairs: Vec<(f64, bool)> = scores.iter().zip(&test).map(|(&s, e)| (s, e.label)).collect();
+    println!(
+        "scored {TEST_EVENTS} events in {:.2?} ({:.0} events/s); stream AUC {:.4}",
+        score_elapsed,
+        TEST_EVENTS as f64 / score_elapsed.as_secs_f64(),
+        NaiveAuc::of(&pairs)
+    );
+
+    // ---- Sliding-window estimation: approx vs exact -------------------
+    let run = |label: &str, timed: &mut dyn FnMut() -> f64| {
+        let t = Instant::now();
+        let auc = timed();
+        let d = t.elapsed();
+        println!(
+            "{label:<22} {:.2?} total, {:>7.0} ns/event, final auc {auc:.4}",
+            d,
+            d.as_nanos() as f64 / TEST_EVENTS as f64
+        );
+        d
+    };
+
+    let mut approx = Window::with_estimator(WINDOW, ApproxAuc::new(EPSILON));
+    let approx_time = run(&format!("approx (ε={EPSILON})"), &mut || {
+        let mut sink = 0.0;
+        for &(s, l) in &pairs {
+            approx.push(s, l);
+            sink = approx.auc();
+        }
+        sink
+    });
+
+    let mut exact = Window::with_estimator(WINDOW, ExactAuc::new());
+    let exact_time = run("exact baseline", &mut || {
+        let mut sink = 0.0;
+        for &(s, l) in &pairs {
+            exact.push(s, l);
+            sink = exact.auc();
+        }
+        sink
+    });
+
+    // ---- Verify the paper's claims on this run ------------------------
+    let (a, e) = (approx.auc(), exact.auc());
+    let rel = (a - e).abs() / e;
+    let speedup = exact_time.as_secs_f64() / approx_time.as_secs_f64();
+    println!("\nrelative error {rel:.2e} (guarantee {:.2e})", EPSILON / 2.0);
+    println!("speed-up over exact recomputation at k={WINDOW}: {speedup:.1}×");
+    println!("compressed list |C| = {}", approx.estimator().compressed_len());
+    assert!(rel <= EPSILON / 2.0, "guarantee violated");
+    assert!(speedup > 2.0, "speed-up {speedup:.1} too small at k={WINDOW}");
+    println!("\nE2E OK: three layers composed, guarantee held, speed-up realized.");
+    Ok(())
+}

@@ -1,0 +1,49 @@
+//! §7 extension: weighted data points with from-scratch `(1+ε)`-lists.
+//!
+//! ```sh
+//! cargo run --release --example weighted_scratch
+//! ```
+//!
+//! Demonstrates the weighted estimator on an importance-weighted stream
+//! (e.g. events carrying sampling weights): exact vs approximate AUC
+//! across ε, the selection size, and the query-time trade-off the paper
+//! sketches (`O((log² k)/ε)` per evaluation instead of incremental
+//! maintenance).
+
+use std::time::Instant;
+
+use streamauc::coordinator::WeightedAuc;
+use streamauc::stream::Pcg;
+
+fn main() {
+    let mut rng = Pcg::seed(0x57);
+    let mut w = WeightedAuc::new();
+    // Importance-weighted stream: weights follow a heavy-ish tail.
+    let n = 200_000;
+    for _ in 0..n {
+        let pos = rng.chance(0.35);
+        let score = if pos { rng.normal_with(0.42, 0.18) } else { rng.normal_with(0.58, 0.18) };
+        let weight = (-rng.uniform().ln()).max(0.05); // Exp(1) weights
+        w.insert(score, pos, weight);
+    }
+    let t = Instant::now();
+    let exact = w.exact_auc();
+    let exact_time = t.elapsed();
+    println!("{n} weighted points; exact AUC {exact:.5} in {exact_time:.2?}\n");
+    println!(
+        "{:>8}  {:>9}  {:>9}  {:>10}  {:>9}",
+        "epsilon", "approx", "rel_err", "selection", "query"
+    );
+    for eps in [1.0, 0.3, 0.1, 0.03, 0.01] {
+        let t = Instant::now();
+        let approx = w.approx_auc(eps);
+        let q = t.elapsed();
+        let rel = (approx - exact).abs() / exact;
+        println!(
+            "{eps:>8}  {approx:>9.5}  {rel:>9.2e}  {:>10}  {q:>9.2?}",
+            w.selection_len(eps)
+        );
+        assert!(rel <= eps / 2.0 + 1e-9, "guarantee violated at ε={eps}");
+    }
+    println!("\nweighted §7 extension OK: guarantee holds for every ε.");
+}

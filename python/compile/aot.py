@@ -1,0 +1,79 @@
+"""AOT lowering: JAX model → HLO *text* artifacts for the rust runtime.
+
+Interchange format is HLO text, NOT a serialized ``HloModuleProto``:
+jax ≥ 0.5 emits protos with 64-bit instruction ids that the pinned
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage::
+
+    cd python && python -m compile.aot --out ../artifacts
+
+writes ``score_batch.hlo.txt``, ``train_step.hlo.txt`` and ``meta.json``
+(the shape contract the rust side validates against).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (return_tuple so the rust
+    side always unwraps a tuple)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_all():
+    """Lower both entry points; returns {name: hlo_text}."""
+    score_spec, train_spec = model.lowering_specs()
+    return {
+        "score_batch": to_hlo_text(jax.jit(model.score_batch).lower(*score_spec)),
+        "train_step": to_hlo_text(jax.jit(model.train_step).lower(*train_spec)),
+    }
+
+
+def metadata() -> dict:
+    """The shape contract shared with rust/src/runtime."""
+    return {
+        "dims": model.DIMS,
+        "score_batch": {"batch": model.SCORE_BATCH, "inputs": ["w", "b", "x"], "outputs": ["scores"]},
+        "train_step": {
+            "batch": model.TRAIN_BATCH,
+            "inputs": ["w", "b", "x", "y", "lr"],
+            "outputs": ["w", "b", "loss"],
+        },
+        "score_convention": "larger score => more likely negative (paper §2)",
+        "dtype": "f32",
+    }
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out", default="../artifacts", help="output directory")
+    args = parser.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    for name, text in lower_all().items():
+        path = os.path.join(args.out, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text)} chars)")
+    meta_path = os.path.join(args.out, "meta.json")
+    with open(meta_path, "w") as f:
+        json.dump(metadata(), f, indent=2)
+    print(f"wrote {meta_path}")
+
+
+if __name__ == "__main__":
+    main()

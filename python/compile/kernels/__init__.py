@@ -1,0 +1,2 @@
+"""Pallas kernels (L1)."""
+from . import logreg, ref  # noqa: F401

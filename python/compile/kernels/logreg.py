@@ -1,0 +1,131 @@
+"""Pallas kernels for the logistic-regression classifier (Layer 1).
+
+The paper scores its streams with scikit-learn logistic regression; here
+the classifier is a JAX/Pallas model compiled ahead-of-time and executed
+from the rust coordinator. Two kernels cover the compute hot-spots:
+
+* :func:`score_batch` — fused ``sigmoid(x @ w + b)`` over batch tiles
+  (the scoring path feeding the sliding-window estimator);
+* :func:`grad_partials` — fused logistic-loss gradient partials per
+  batch tile (the training path).
+
+TPU shaping (DESIGN.md §Hardware-Adaptation): the batch dimension is
+tiled into ``(block_b, d)`` VMEM blocks via ``BlockSpec``; the weight
+vector rides along as a ``(d, 1)`` block mapped to the same index for
+every grid step, so it stays VMEM-resident; matvec + bias + sigmoid are
+fused so each tile costs one HBM read of ``x`` and one write of the
+scores. ``interpret=True`` everywhere — real-TPU lowering emits Mosaic
+custom-calls the CPU PJRT plugin cannot execute (see
+/opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default batch-tile height. 128 matches the MXU/VPU lane width and, at
+# d = 128 features, puts a 64 KiB x-tile + 0.5 KiB weight block in VMEM —
+# far under the ~16 MiB budget, leaving room for double buffering.
+DEFAULT_BLOCK_B = 128
+
+
+def _pick_block(batch: int, block_b: int | None) -> int:
+    """Largest usable tile height: the provided/default block if it
+    divides the batch, otherwise the whole batch as a single tile."""
+    b = block_b or DEFAULT_BLOCK_B
+    return b if batch % b == 0 else batch
+
+
+def _score_kernel(x_ref, w_ref, b_ref, o_ref):
+    """One tile of fused ``sigmoid(x @ w + b)``.
+
+    x_ref: (block_b, d) VMEM tile; w_ref: (d, 1) resident block;
+    b_ref: (1, 1); o_ref: (block_b, 1).
+    """
+    logits = jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+    o_ref[...] = jax.nn.sigmoid(logits + b_ref[0, 0]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b",))
+def score_batch(w, b, x, block_b: int | None = None):
+    """Scores for a feature batch: ``sigmoid(x @ w + b)``.
+
+    Args:
+      w: (d,) weights. b: scalar bias. x: (batch, d) features.
+      block_b: batch-tile height (static); defaults to 128 when it
+        divides the batch, else one whole-batch tile.
+
+    Returns: (batch,) scores in (0, 1).
+    """
+    batch, d = x.shape
+    blk = _pick_block(batch, block_b)
+    out = pl.pallas_call(
+        _score_kernel,
+        grid=(batch // blk,),
+        in_specs=[
+            pl.BlockSpec((blk, d), lambda i: (i, 0)),
+            pl.BlockSpec((d, 1), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((blk, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((batch, 1), x.dtype),
+        interpret=True,
+    )(x, w.reshape(-1, 1), b.reshape(1, 1))
+    return out[:, 0]
+
+
+def _grad_kernel(x_ref, y_ref, w_ref, b_ref, gw_ref, gb_ref):
+    """Per-tile logistic-loss gradient partials.
+
+    With p = sigmoid(x @ w + b) and residual g = p − y:
+      gw_partial = gᵀ @ x   (1, d)
+      gb_partial = Σ g      (1, 1)
+    Forward and backward fuse in one VMEM pass over the tile.
+    """
+    logits = jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+    p = jax.nn.sigmoid(logits + b_ref[0, 0])
+    g = p - y_ref[...]  # (block_b, 1)
+    gw_ref[...] = jnp.dot(g.T, x_ref[...]).astype(gw_ref.dtype)
+    gb_ref[...] = jnp.sum(g).reshape(1, 1).astype(gb_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b",))
+def grad_partials(w, b, x, y, block_b: int | None = None):
+    """Per-tile partial gradients of the mean logistic loss.
+
+    Args:
+      w: (d,) weights. b: scalar bias. x: (batch, d). y: (batch,) in
+        {0, 1}. block_b: static tile height, as in :func:`score_batch`.
+
+    Returns: ``(gw_partials, gb_partials)`` of shapes (tiles, d) and
+    (tiles, 1); summing over the tile axis and dividing by ``batch``
+    yields the full mean-loss gradient (done in the L2 model so the sum
+    lowers into the same HLO).
+    """
+    batch, d = x.shape
+    blk = _pick_block(batch, block_b)
+    tiles = batch // blk
+    gw, gb = pl.pallas_call(
+        _grad_kernel,
+        grid=(tiles,),
+        in_specs=[
+            pl.BlockSpec((blk, d), lambda i: (i, 0)),
+            pl.BlockSpec((blk, 1), lambda i: (i, 0)),
+            pl.BlockSpec((d, 1), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, d), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((tiles, d), x.dtype),
+            jax.ShapeDtypeStruct((tiles, 1), x.dtype),
+        ],
+        interpret=True,
+    )(x, y.reshape(-1, 1), w.reshape(-1, 1), b.reshape(1, 1))
+    return gw, gb

@@ -1,0 +1,30 @@
+"""Pure-jnp oracles for the Pallas kernels (correctness ground truth).
+
+Every kernel in :mod:`compile.kernels.logreg` is checked against these
+references by ``python/tests/test_kernels.py`` (exact math, no tiling),
+including hypothesis sweeps over shapes and dtypes.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def score_batch(w, b, x):
+    """Reference ``sigmoid(x @ w + b)`` — shape (batch,)."""
+    return jax.nn.sigmoid(x @ w + b)
+
+
+def mean_logloss(w, b, x, y):
+    """Mean binary cross-entropy of the logistic model (stable form)."""
+    logits = x @ w + b
+    # log(1 + e^z) computed stably.
+    softplus = jnp.logaddexp(0.0, logits)
+    return jnp.mean(softplus - y * logits)
+
+
+def grad(w, b, x, y):
+    """Analytic mean-loss gradient: ``((p − y)ᵀ x / B, mean(p − y))``."""
+    g = jax.nn.sigmoid(x @ w + b) - y
+    return g @ x / x.shape[0], jnp.mean(g)

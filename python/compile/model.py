@@ -1,0 +1,88 @@
+"""Layer 2: the JAX logistic-regression model (build-time only).
+
+Defines the classifier the paper's pipeline uses to score streams —
+forward scoring and a fused SGD training step — on top of the Pallas
+kernels in :mod:`compile.kernels.logreg`. Both entry points are lowered
+once to HLO text by :mod:`compile.aot` and executed from the rust
+coordinator via PJRT; Python never runs on the streaming path.
+
+Fixed shapes (HLO is shape-specialised; the rust side zero-pads):
+  * feature width  ``DIMS = 128`` — covers hepmass (28), miniboone (50)
+    and tvads (124) with zero padding;
+  * scoring batch  ``SCORE_BATCH = 1024``;
+  * training batch ``TRAIN_BATCH = 256``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import logreg
+
+# Shape contract shared with the rust runtime via artifacts/meta.json.
+DIMS = 128
+SCORE_BATCH = 1024
+TRAIN_BATCH = 256
+
+
+def init_params(dims: int = DIMS):
+    """Zero-initialised parameters (w, b)."""
+    return jnp.zeros((dims,), jnp.float32), jnp.zeros((), jnp.float32)
+
+
+def score_batch(w, b, x):
+    """Scores for a feature batch via the fused Pallas kernel.
+
+    Output follows the paper's convention (§2): *larger score ⇒ more
+    likely negative*. ``sigmoid(x @ w + b)`` estimates P(label = 0 | x)
+    when training uses ``1 − y`` as the regression target, which
+    :func:`train_step` does.
+    """
+    return logreg.score_batch(w, b, x)
+
+
+def loss(w, b, x, y01):
+    """Mean logistic loss against the *negative-class* target
+    ``1 − y``. Matches :func:`score_batch`'s convention."""
+    t = 1.0 - y01
+    logits = x @ w + b
+    return jnp.mean(jnp.logaddexp(0.0, logits) - t * logits)
+
+
+def train_step(w, b, x, y01, lr):
+    """One fused SGD step; returns ``(w', b', loss)``.
+
+    The gradient comes from the Pallas :func:`~compile.kernels.logreg.
+    grad_partials` kernel (per-tile partials summed here, so the
+    reduction lowers into the same HLO module). ``y01`` is the true
+    label (1 = positive); the regression target is ``1 − y`` per the
+    score convention above.
+    """
+    t = (1.0 - y01).astype(x.dtype)
+    gw_parts, gb_parts = logreg.grad_partials(w, b, x, t)
+    batch = x.shape[0]
+    gw = jnp.sum(gw_parts, axis=0) / batch
+    gb = jnp.sum(gb_parts) / batch
+    new_w = w - lr * gw
+    new_b = b - lr * gb
+    return new_w, new_b, loss(w, b, x, y01)
+
+
+def lowering_specs():
+    """ShapeDtypeStructs for the two AOT entry points, in argument
+    order. Shared by :mod:`compile.aot` and the tests."""
+    f32 = jnp.float32
+    score = (
+        jax.ShapeDtypeStruct((DIMS,), f32),          # w
+        jax.ShapeDtypeStruct((), f32),               # b
+        jax.ShapeDtypeStruct((SCORE_BATCH, DIMS), f32),  # x
+    )
+    train = (
+        jax.ShapeDtypeStruct((DIMS,), f32),          # w
+        jax.ShapeDtypeStruct((), f32),               # b
+        jax.ShapeDtypeStruct((TRAIN_BATCH, DIMS), f32),  # x
+        jax.ShapeDtypeStruct((TRAIN_BATCH,), f32),   # y (0/1 floats)
+        jax.ShapeDtypeStruct((), f32),               # lr
+    )
+    return score, train

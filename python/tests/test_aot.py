@@ -1,0 +1,74 @@
+"""AOT path: lowering to HLO text and the artifact contract.
+
+The rust runtime consumes exactly what these tests pin down: HLO *text*
+modules (parseable, with the expected parameter/result shapes baked in)
+plus ``meta.json``.
+"""
+
+import json
+
+import pytest
+
+from compile import aot, model
+
+
+@pytest.fixture(scope="module")
+def lowered():
+    return aot.lower_all()
+
+
+def test_lowers_both_entry_points(lowered):
+    assert set(lowered) == {"score_batch", "train_step"}
+    for name, text in lowered.items():
+        assert text.startswith("HloModule"), f"{name} is not HLO text"
+        assert "ENTRY" in text
+
+
+def test_score_batch_shapes_in_hlo(lowered):
+    text = lowered["score_batch"]
+    # Parameters: w (128), b scalar, x (1024, 128); result tuple of (1024).
+    assert f"f32[{model.DIMS}]" in text
+    assert f"f32[{model.SCORE_BATCH},{model.DIMS}]" in text
+    # Result: a 1-tuple of (SCORE_BATCH,) scores (layout suffix varies).
+    assert f"->(f32[{model.SCORE_BATCH}]" in text
+
+
+def test_train_step_shapes_in_hlo(lowered):
+    text = lowered["train_step"]
+    assert f"f32[{model.TRAIN_BATCH},{model.DIMS}]" in text
+    # Result tuple: (w, b, loss) = (f32[128], f32[], f32[]); tolerate
+    # layout suffixes on the array member.
+    assert f"->(f32[{model.DIMS}]" in text
+    assert "f32[], f32[])" in text
+
+
+def test_no_custom_calls_in_hlo(lowered):
+    """interpret=True must lower Pallas to plain HLO ops — a Mosaic
+    custom-call would be unloadable by the CPU PJRT client."""
+    for name, text in lowered.items():
+        assert "custom-call" not in text, f"{name} contains a custom call"
+
+
+def test_artifact_writing(tmp_path, monkeypatch):
+    monkeypatch.setattr(
+        "sys.argv", ["aot", "--out", str(tmp_path)]
+    )
+    aot.main()
+    for name in ["score_batch.hlo.txt", "train_step.hlo.txt", "meta.json"]:
+        assert (tmp_path / name).exists(), name
+    meta = json.loads((tmp_path / "meta.json").read_text())
+    assert meta["dims"] == model.DIMS
+    assert meta["score_batch"]["batch"] == model.SCORE_BATCH
+    assert meta["train_step"]["batch"] == model.TRAIN_BATCH
+    assert meta["train_step"]["inputs"] == ["w", "b", "x", "y", "lr"]
+
+
+def test_hlo_text_round_trips_through_parser(lowered):
+    """The text must be parseable back into an XlaComputation — the same
+    code path the rust loader uses (HloModuleProto::from_text)."""
+    from jax._src.lib import xla_client as xc
+
+    for name, text in lowered.items():
+        # Will raise on malformed text.
+        mod = xc._xla.hlo_module_from_text(text)
+        assert mod is not None, name

@@ -1,0 +1,156 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes (batch heights around the tile boundary, several
+feature widths) and dtypes, asserting allclose against ``ref.py``. These
+are the core correctness signal for the kernel layer.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import logreg, ref
+
+F32_TOL = dict(rtol=1e-5, atol=1e-5)
+BF16_TOL = dict(rtol=2e-2, atol=2e-2)
+
+
+def draw_case(seed, batch, dims, dtype=jnp.float32, scale=1.0):
+    k = jax.random.PRNGKey(seed)
+    kw, kb, kx, ky = jax.random.split(k, 4)
+    w = (jax.random.normal(kw, (dims,)) * scale).astype(dtype)
+    b = (jax.random.normal(kb, ()) * scale).astype(dtype)
+    x = jax.random.normal(kx, (batch, dims)).astype(dtype)
+    y = jax.random.bernoulli(ky, 0.4, (batch,)).astype(dtype)
+    return w, b, x, y
+
+
+# ---------------------------------------------------------------- score
+
+@settings(max_examples=30, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    batch=st.sampled_from([1, 3, 64, 128, 256, 384, 1024]),
+    dims=st.sampled_from([4, 28, 50, 124, 128, 256]),
+)
+def test_score_matches_ref_shapes(seed, batch, dims):
+    w, b, x, _ = draw_case(seed, batch, dims)
+    got = logreg.score_batch(w, b, x)
+    want = ref.score_batch(w, b, x)
+    assert got.shape == (batch,)
+    np.testing.assert_allclose(got, want, **F32_TOL)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_score_matches_ref_bf16(seed):
+    w, b, x, _ = draw_case(seed, 128, 128, dtype=jnp.bfloat16)
+    got = logreg.score_batch(w, b, x).astype(jnp.float32)
+    want = ref.score_batch(
+        w.astype(jnp.float32), b.astype(jnp.float32), x.astype(jnp.float32)
+    )
+    np.testing.assert_allclose(got, want, **BF16_TOL)
+
+
+def test_score_explicit_block_sizes():
+    w, b, x, _ = draw_case(7, 512, 64)
+    want = ref.score_batch(w, b, x)
+    for blk in [32, 64, 128, 256, 512]:
+        got = logreg.score_batch(w, b, x, block_b=blk)
+        np.testing.assert_allclose(got, want, **F32_TOL)
+
+
+def test_score_extreme_logits_saturate_cleanly():
+    w = jnp.full((8,), 50.0, jnp.float32)
+    b = jnp.zeros((), jnp.float32)
+    x = jnp.stack([jnp.ones((8,)), -jnp.ones((8,))]).astype(jnp.float32)
+    got = logreg.score_batch(w, b, x)
+    np.testing.assert_allclose(got, jnp.array([1.0, 0.0]), atol=1e-6)
+    assert bool(jnp.all(jnp.isfinite(got)))
+
+
+def test_scores_are_probabilities():
+    w, b, x, _ = draw_case(3, 256, 128, scale=3.0)
+    got = logreg.score_batch(w, b, x)
+    assert bool(jnp.all((got >= 0) & (got <= 1)))
+
+
+# ----------------------------------------------------------------- grad
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    batch=st.sampled_from([1, 64, 128, 256, 512]),
+    dims=st.sampled_from([4, 28, 128]),
+)
+def test_grad_partials_match_ref(seed, batch, dims):
+    w, b, x, y = draw_case(seed, batch, dims)
+    gw_parts, gb_parts = logreg.grad_partials(w, b, x, y)
+    gw = jnp.sum(gw_parts, axis=0) / batch
+    gb = jnp.sum(gb_parts) / batch
+    want_gw, want_gb = ref.grad(w, b, x, y)
+    np.testing.assert_allclose(gw, want_gw, **F32_TOL)
+    np.testing.assert_allclose(gb, want_gb, **F32_TOL)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_grad_matches_autodiff(seed):
+    """Kernel gradient equals jax.grad of the reference loss."""
+    w, b, x, y = draw_case(seed, 128, 32)
+    gw_parts, gb_parts = logreg.grad_partials(w, b, x, y)
+    gw = jnp.sum(gw_parts, axis=0) / x.shape[0]
+    gb = jnp.sum(gb_parts) / x.shape[0]
+    a_gw, a_gb = jax.grad(ref.mean_logloss, argnums=(0, 1))(w, b, x, y)
+    np.testing.assert_allclose(gw, a_gw, **F32_TOL)
+    np.testing.assert_allclose(gb, a_gb, **F32_TOL)
+
+
+def test_grad_zero_at_optimum_of_separable_flat():
+    """Residual (p − y) is zero when p == y exactly."""
+    dims = 16
+    w = jnp.zeros((dims,), jnp.float32)
+    b = jnp.zeros((), jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(0), (64, dims), jnp.float32)
+    y = jnp.full((64,), 0.5, jnp.float32)  # p = 0.5 = y → zero grad
+    gw_parts, gb_parts = logreg.grad_partials(w, b, x, y)
+    np.testing.assert_allclose(jnp.sum(gw_parts, axis=0), jnp.zeros(dims), atol=1e-5)
+    np.testing.assert_allclose(jnp.sum(gb_parts), 0.0, atol=1e-5)
+
+
+def test_grad_tile_partials_sum_invariant():
+    """Partials with different tilings sum to the same gradient."""
+    w, b, x, y = draw_case(11, 512, 64)
+    sums = []
+    for blk in [64, 128, 512]:
+        gw_parts, gb_parts = logreg.grad_partials(w, b, x, y, block_b=blk)
+        assert gw_parts.shape == (512 // blk, 64)
+        sums.append(
+            (jnp.sum(gw_parts, axis=0), jnp.sum(gb_parts))
+        )
+    for gw, gb in sums[1:]:
+        np.testing.assert_allclose(gw, sums[0][0], **F32_TOL)
+        np.testing.assert_allclose(gb, sums[0][1], **F32_TOL)
+
+
+def test_indivisible_batch_falls_back_to_single_tile():
+    w, b, x, y = draw_case(5, 130, 16)  # 130 % 128 != 0
+    got = logreg.score_batch(w, b, x)
+    np.testing.assert_allclose(got, ref.score_batch(w, b, x), **F32_TOL)
+    gw_parts, _ = logreg.grad_partials(w, b, x, y)
+    assert gw_parts.shape[0] == 1
+
+
+def test_kernels_are_jittable_end_to_end():
+    """The kernels must lower inside a jitted caller (the L2 path)."""
+
+    @jax.jit
+    def pipeline(w, b, x):
+        return logreg.score_batch(w, b, x) * 2.0
+
+    w, b, x, _ = draw_case(13, 128, 128)
+    np.testing.assert_allclose(
+        pipeline(w, b, x), ref.score_batch(w, b, x) * 2.0, **F32_TOL
+    )

@@ -1,0 +1,103 @@
+"""L2 correctness: the logistic-regression model over the kernels.
+
+Checks the score convention (paper §2: larger score ⇒ more negative),
+that training reduces loss and reaches a discriminative model, and the
+shape contract the AOT artifacts freeze.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model
+
+
+def synthetic(seed, n, dims, sep=2.0):
+    """Two-Gaussian data along a random direction; returns (x, y01)."""
+    k = jax.random.PRNGKey(seed)
+    kd, kl, kn = jax.random.split(k, 3)
+    direction = jax.random.normal(kd, (dims,))
+    direction = direction / jnp.linalg.norm(direction)
+    y = jax.random.bernoulli(kl, 0.5, (n,)).astype(jnp.float32)
+    # positives shifted toward negative margin (low scores).
+    shift = (-sep) * y[:, None] * direction[None, :]
+    x = shift + jax.random.normal(kn, (n, dims))
+    return x.astype(jnp.float32), y
+
+
+def auc_of(scores, y):
+    """Plain numpy AUC under the paper's convention (positives low)."""
+    s = np.asarray(scores, dtype=np.float64)
+    yy = np.asarray(y, dtype=bool)
+    pos, neg = s[yy], s[~yy]
+    if len(pos) == 0 or len(neg) == 0:
+        return 0.5
+    correct = (pos[:, None] < neg[None, :]).sum()
+    ties = (pos[:, None] == neg[None, :]).sum()
+    return (correct + 0.5 * ties) / (len(pos) * len(neg))
+
+
+def train(x, y, steps=200, lr=0.5, batch=model.TRAIN_BATCH):
+    w, b = model.init_params(x.shape[1])
+    lr = jnp.asarray(lr, jnp.float32)
+    losses = []
+    n = x.shape[0]
+    for i in range(steps):
+        lo = (i * batch) % max(n - batch, 1)
+        xb, yb = x[lo : lo + batch], y[lo : lo + batch]
+        w, b, loss = model.train_step(w, b, xb, yb, lr)
+        losses.append(float(loss))
+    return w, b, losses
+
+
+def test_zero_params_score_half():
+    w, b = model.init_params(8)
+    x = jnp.ones((4, 8), jnp.float32)
+    np.testing.assert_allclose(model.score_batch(w, b, x), 0.5, atol=1e-6)
+
+
+def test_training_reduces_loss():
+    x, y = synthetic(0, 2048, 32)
+    _, _, losses = train(x, y, steps=100)
+    first = np.mean(losses[:10])
+    last = np.mean(losses[-10:])
+    assert last < first * 0.7, f"loss did not drop: {first} -> {last}"
+
+
+def test_trained_model_is_discriminative_with_paper_convention():
+    x, y = synthetic(1, 4096, 32)
+    w, b, _ = train(x, y, steps=200)
+    scores = model.score_batch(w, b, x[:1024])
+    auc = auc_of(scores, y[:1024])
+    # Positives must receive LOW scores (larger score ⇒ more negative).
+    assert auc > 0.9, f"AUC {auc} too low — convention or training broken"
+
+
+def test_loss_at_init_is_log2():
+    x, y = synthetic(2, 256, 16)
+    w, b = model.init_params(16)
+    loss = model.loss(w, b, x, y)
+    np.testing.assert_allclose(float(loss), np.log(2.0), rtol=1e-5)
+
+
+def test_train_step_is_pure_and_jittable():
+    x, y = synthetic(3, model.TRAIN_BATCH, model.DIMS)
+    w, b = model.init_params()
+    lr = jnp.asarray(0.1, jnp.float32)
+    step = jax.jit(model.train_step)
+    w1, b1, l1 = step(w, b, x, y, lr)
+    w2, b2, l2 = step(w, b, x, y, lr)
+    np.testing.assert_allclose(w1, w2)
+    np.testing.assert_allclose(b1, b2)
+    assert float(l1) == float(l2)
+    assert w1.shape == (model.DIMS,)
+    assert b1.shape == ()
+
+
+def test_lowering_specs_match_constants():
+    score, trainsp = model.lowering_specs()
+    assert score[0].shape == (model.DIMS,)
+    assert score[2].shape == (model.SCORE_BATCH, model.DIMS)
+    assert trainsp[2].shape == (model.TRAIN_BATCH, model.DIMS)
+    assert trainsp[3].shape == (model.TRAIN_BATCH,)
+    assert all(s.dtype == jnp.float32 for s in score + trainsp)

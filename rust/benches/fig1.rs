@@ -1,0 +1,21 @@
+//! Bench target regenerating Figure 1: average and maximum relative
+//! error as a function of ε (window k = 1000, 3 datasets).
+//!
+//! `cargo bench --bench fig1 [-- --events N --window K]`
+//!
+//! Expected shape (paper §6): every max ≤ ε/2; averages typically far
+//! below the guarantee; both grow with ε.
+
+use streamauc::experiments::{fig1, ExpConfig};
+
+fn main() {
+    let mut cfg = ExpConfig { events: 30_000, ..Default::default() };
+    let args: Vec<String> = std::env::args().collect();
+    if let Some(i) = args.iter().position(|a| a == "--events") {
+        cfg.events = args[i + 1].parse().expect("--events N");
+    }
+    if let Some(i) = args.iter().position(|a| a == "--window") {
+        cfg.window = args[i + 1].parse().expect("--window K");
+    }
+    println!("{}", fig1::run(cfg).render());
+}

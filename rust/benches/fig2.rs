@@ -1,0 +1,21 @@
+//! Bench target regenerating Figure 2: running time (top) and
+//! compressed-list size |C| (bottom) versus the achieved average error.
+//!
+//! `cargo bench --bench fig2 [-- --events N --window K]`
+//!
+//! Expected shape (paper §6): time falls as ε (and the error) grows,
+//! then plateaus on the ε-independent tree maintenance; |C| ~ (log k)/ε.
+
+use streamauc::experiments::{fig2, ExpConfig};
+
+fn main() {
+    let mut cfg = ExpConfig { events: 30_000, ..Default::default() };
+    let args: Vec<String> = std::env::args().collect();
+    if let Some(i) = args.iter().position(|a| a == "--events") {
+        cfg.events = args[i + 1].parse().expect("--events N");
+    }
+    if let Some(i) = args.iter().position(|a| a == "--window") {
+        cfg.window = args[i + 1].parse().expect("--window K");
+    }
+    println!("{}", fig2::run(cfg).render());
+}

@@ -1,0 +1,19 @@
+//! Bench target regenerating Figure 3: per-event cost versus window
+//! size, exact baseline against ε ∈ {0.01, 0.1} (miniboone).
+//!
+//! `cargo bench --bench fig3 [-- --events N]`
+//!
+//! Expected shape (paper §6): the speed-up grows with k; the paper
+//! reports ≈17× at k = 10⁴, ε = 0.1 (C++/2019 laptop — the ratio, not
+//! the absolute time, is the reproduction target).
+
+use streamauc::experiments::{fig3, ExpConfig};
+
+fn main() {
+    let mut cfg = ExpConfig { events: 40_000, ..Default::default() };
+    let args: Vec<String> = std::env::args().collect();
+    if let Some(i) = args.iter().position(|a| a == "--events") {
+        cfg.events = args[i + 1].parse().expect("--events N");
+    }
+    println!("{}", fig3::run(cfg).render());
+}

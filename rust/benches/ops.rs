@@ -1,0 +1,240 @@
+//! Micro-benchmarks and ablations over the §3/§4 data structures.
+//!
+//! `cargo bench --bench ops`
+//!
+//! Reported per operation (median of timed batches after warmup):
+//!
+//! * support-tree updates (`add/remove × pos/neg`) at several window
+//!   sizes — the `O(log k)` claims;
+//! * `HeadStats` and `MaxPos` queries, including the **TP-vs-accpos
+//!   ablation** (what the dedicated positive tree buys over descending
+//!   the main tree with subtree counters);
+//! * full estimator updates (`ApproxAuc` push+query vs `ExactAuc`
+//!   push+query) — the headline per-event costs;
+//! * `ApproxAUC` evaluation alone at several ε (the `O(|C|)` read);
+//! * **Compress ablation**: update cost with the paper's incremental
+//!   `AddNext`+`Compress` versus rebuilding C from scratch each event.
+
+use std::time::{Duration, Instant};
+
+use streamauc::coordinator::support::SupportTree;
+use streamauc::coordinator::{ApproxAuc, AucEstimator, ExactAuc};
+use streamauc::collections::Score;
+use streamauc::stream::Pcg;
+
+/// Median-of-batches timer: runs `op` in `batches` batches of
+/// `per_batch` calls, reports the median per-call latency.
+fn bench(name: &str, batches: usize, per_batch: usize, mut op: impl FnMut()) {
+    // Warmup.
+    for _ in 0..per_batch / 2 {
+        op();
+    }
+    let mut samples: Vec<Duration> = (0..batches)
+        .map(|_| {
+            let t = Instant::now();
+            for _ in 0..per_batch {
+                op();
+            }
+            t.elapsed() / per_batch as u32
+        })
+        .collect();
+    samples.sort();
+    let median = samples[samples.len() / 2];
+    println!("{name:<58} {:>10.0} ns/op", median.as_nanos() as f64);
+}
+
+fn filled_support(k: usize, rng: &mut Pcg) -> SupportTree {
+    let mut t = SupportTree::new();
+    for _ in 0..k {
+        let s = Score(rng.uniform());
+        if rng.chance(0.5) {
+            t.add_pos(s);
+        } else {
+            t.add_neg(s);
+        }
+    }
+    t
+}
+
+fn main() {
+    let mut rng = Pcg::seed(0x0B5);
+    println!("== ops: §3/§4 micro-benchmarks (median ns/op) ==\n");
+
+    // ---- support tree updates at several k ---------------------------
+    for &k in &[1_000usize, 10_000, 100_000] {
+        let mut t = filled_support(k, &mut rng);
+        let mut r = rng.fork();
+        bench(
+            &format!("support: add_pos+remove_pos churn (k={k})"),
+            30,
+            2_000,
+            || {
+                let s = Score(r.uniform());
+                t.add_pos(s);
+                t.remove_pos(s);
+            },
+        );
+        let mut r = rng.fork();
+        bench(
+            &format!("support: add_neg+remove_neg churn (k={k})"),
+            30,
+            2_000,
+            || {
+                let s = Score(r.uniform());
+                t.add_neg(s);
+                t.remove_neg(s);
+            },
+        );
+    }
+    println!();
+
+    // ---- queries: HeadStats, MaxPos (TP vs accpos descent) -----------
+    for &k in &[1_000usize, 100_000] {
+        let t = filled_support(k, &mut rng);
+        let mut r = rng.fork();
+        let mut sink = 0u64;
+        bench(&format!("query: HeadStats (k={k})"), 30, 5_000, || {
+            let (hp, hn) = t.head_stats(Score(r.uniform()));
+            sink = sink.wrapping_add(hp + hn);
+        });
+        let mut r = rng.fork();
+        bench(&format!("query: MaxPos via TP (k={k})"), 30, 5_000, || {
+            let (v, _) = t.max_pos(Score(r.uniform()));
+            sink = sink.wrapping_add(u64::from(v.0));
+        });
+        let mut r = rng.fork();
+        bench(
+            &format!("query: MaxPos via accpos descent [ablation] (k={k})"),
+            30,
+            5_000,
+            || {
+                let v = t.max_pos_via_t(Score(r.uniform()));
+                sink = sink.wrapping_add(u64::from(v.0));
+            },
+        );
+        std::hint::black_box(sink);
+    }
+    println!();
+
+    // ---- full estimator updates (push + query per event) -------------
+    for &k in &[1_000usize, 10_000] {
+        for &eps in &[0.01, 0.1] {
+            let mut est = ApproxAuc::new(eps);
+            let mut fifo = std::collections::VecDeque::new();
+            let mut r = rng.fork();
+            let mut sink = 0.0;
+            bench(
+                &format!("estimator: approx push+query (k={k}, ε={eps})"),
+                20,
+                2_000,
+                || {
+                    let s = r.uniform();
+                    let l = r.chance(0.5);
+                    est.insert(s, l);
+                    fifo.push_back((s, l));
+                    if fifo.len() > k {
+                        let (os, ol) = fifo.pop_front().unwrap();
+                        est.remove(os, ol);
+                    }
+                    sink += est.auc();
+                },
+            );
+            std::hint::black_box(sink);
+        }
+        let mut est = ExactAuc::new();
+        let mut fifo = std::collections::VecDeque::new();
+        let mut r = rng.fork();
+        let mut sink = 0.0;
+        bench(
+            &format!("estimator: exact push+query [baseline] (k={k})"),
+            10,
+            500,
+            || {
+                let s = r.uniform();
+                let l = r.chance(0.5);
+                est.insert(s, l);
+                fifo.push_back((s, l));
+                if fifo.len() > k {
+                    let (os, ol) = fifo.pop_front().unwrap();
+                    est.remove(os, ol);
+                }
+                sink += est.auc();
+            },
+        );
+        std::hint::black_box(sink);
+    }
+    println!();
+
+    // ---- ApproxAUC evaluation alone (the O(|C|) read) -----------------
+    for &eps in &[0.001, 0.01, 0.1, 1.0] {
+        let mut est = ApproxAuc::new(eps);
+        let mut r = rng.fork();
+        for _ in 0..10_000 {
+            est.insert(r.uniform(), r.chance(0.5));
+        }
+        let mut sink = 0.0;
+        bench(
+            &format!(
+                "query: ApproxAUC eval only (k=10000, ε={eps}, |C|={})",
+                est.compressed_len()
+            ),
+            30,
+            5_000,
+            || sink += est.auc(),
+        );
+        std::hint::black_box(sink);
+    }
+    println!();
+
+    // ---- ablation: incremental C vs from-scratch rebuild --------------
+    // The paper's design maintains C incrementally (AddNext + Compress).
+    // The alternative — rebuild C from P at every event — costs O(|P|).
+    {
+        let k = 10_000;
+        let mut est = ApproxAuc::new(0.1);
+        let mut fifo = std::collections::VecDeque::new();
+        let mut r = rng.fork();
+        bench(
+            "ablation: incremental C maintenance (paper) (k=10000, ε=0.1)",
+            20,
+            2_000,
+            || {
+                let s = r.uniform();
+                let l = r.chance(0.5);
+                est.insert(s, l);
+                fifo.push_back((s, l));
+                if fifo.len() > k {
+                    let (os, ol) = fifo.pop_front().unwrap();
+                    est.remove(os, ol);
+                }
+            },
+        );
+        // From-scratch comparator: the §7 construction run per event.
+        use streamauc::coordinator::WeightedAuc;
+        let mut w = WeightedAuc::new();
+        let mut r = rng.fork();
+        let mut fifo = std::collections::VecDeque::new();
+        for _ in 0..k {
+            let s = r.uniform();
+            let l = r.chance(0.5);
+            w.insert(s, l, 1.0);
+            fifo.push_back((s, l));
+        }
+        let mut sink = 0.0;
+        bench(
+            "ablation: from-scratch (1+ε)-list per event (k=10000, ε=0.1)",
+            10,
+            200,
+            || {
+                let s = r.uniform();
+                let l = r.chance(0.5);
+                w.insert(s, l, 1.0);
+                fifo.push_back((s, l));
+                let (os, ol) = fifo.pop_front().unwrap();
+                w.remove(os, ol, 1.0);
+                sink += w.approx_auc(0.1);
+            },
+        );
+        std::hint::black_box(sink);
+    }
+}

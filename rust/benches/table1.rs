@@ -1,0 +1,14 @@
+//! Bench target regenerating the paper's Table 1 (dataset
+//! characteristics + measured stream statistics of the stand-ins).
+//!
+//! `cargo bench --bench table1 [-- --events N]`
+
+use streamauc::experiments::{table1, ExpConfig};
+
+fn main() {
+    let mut cfg = ExpConfig::default();
+    if let Some(n) = std::env::args().skip_while(|a| a != "--events").nth(1) {
+        cfg.events = n.parse().expect("--events N");
+    }
+    println!("{}", table1::run(cfg).render());
+}

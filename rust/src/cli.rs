@@ -1,0 +1,144 @@
+//! Hand-rolled CLI argument parsing (clap is unavailable offline).
+//!
+//! Grammar: `streamauc <command> [--flag value]... [--switch]...`.
+//! [`Args::parse`] splits a raw argv into the command and a flag map;
+//! typed accessors mirror the config module so flags override config
+//! files uniformly.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+/// Parsed command line: one subcommand plus `--key value` flags.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    /// The subcommand (first positional argument).
+    pub command: String,
+    /// Positional arguments after the command.
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse from raw args (excluding argv[0]).
+    ///
+    /// `--key value` and `--key=value` are both accepted; a trailing
+    /// `--key` with no value is a boolean switch (stored as `"true"`).
+    pub fn parse(raw: impl IntoIterator<Item = String>) -> Result<Args> {
+        let mut it = raw.into_iter().peekable();
+        let command = it.next().unwrap_or_default();
+        let mut flags = BTreeMap::new();
+        let mut positional = Vec::new();
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                if name.is_empty() {
+                    bail!("bare `--` is not supported");
+                }
+                if let Some((k, v)) = name.split_once('=') {
+                    flags.insert(k.to_string(), v.to_string());
+                } else if it.peek().map_or(false, |n| !n.starts_with("--")) {
+                    flags.insert(name.to_string(), it.next().unwrap());
+                } else {
+                    flags.insert(name.to_string(), "true".to_string());
+                }
+            } else {
+                positional.push(tok);
+            }
+        }
+        Ok(Args { command, positional, flags })
+    }
+
+    /// Raw flag lookup.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(String::as_str)
+    }
+
+    /// Typed flag with default.
+    pub fn get_or<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(raw) => raw.parse().map_err(|e| anyhow!("flag --{key} {raw:?}: {e}")),
+        }
+    }
+
+    /// Boolean switch presence.
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+
+    /// Error on flags outside the allowed set.
+    pub fn validate_flags(&self, allowed: &[&str]) -> Result<()> {
+        for k in self.flags.keys() {
+            if !allowed.contains(&k.as_str()) {
+                bail!("unknown flag --{k} (allowed: {allowed:?})");
+            }
+        }
+        Ok(())
+    }
+
+    /// Fold flags into a config map (flags win).
+    pub fn overlay_on(&self, cfg: &mut crate::config::Config) {
+        for (k, v) in &self.flags {
+            cfg.set(k, v.clone());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn command_flags_positional() {
+        let a = parse("experiment fig1 --events 500 --csv=out --verbose");
+        assert_eq!(a.command, "experiment");
+        assert_eq!(a.positional, vec!["fig1"]);
+        assert_eq!(a.get("events"), Some("500"));
+        assert_eq!(a.get("csv"), Some("out"));
+        assert!(a.has("verbose"));
+        assert_eq!(a.get_or("events", 0usize).unwrap(), 500);
+    }
+
+    #[test]
+    fn boolean_switch_before_flag() {
+        let a = parse("run --fast --eps 0.1");
+        assert_eq!(a.get("fast"), Some("true"));
+        assert_eq!(a.get_or("eps", 0.0).unwrap(), 0.1);
+    }
+
+    #[test]
+    fn empty_args() {
+        let a = parse("");
+        assert_eq!(a.command, "");
+        assert!(a.positional.is_empty());
+    }
+
+    #[test]
+    fn type_errors_name_the_flag() {
+        let a = parse("x --n abc");
+        let err = a.get_or("n", 0usize).unwrap_err().to_string();
+        assert!(err.contains("--n"), "{err}");
+    }
+
+    #[test]
+    fn unknown_flag_rejected() {
+        let a = parse("x --bogus 1");
+        assert!(a.validate_flags(&["events"]).is_err());
+        assert!(a.validate_flags(&["bogus"]).is_ok());
+    }
+
+    #[test]
+    fn overlay_overrides_config() {
+        let mut cfg = crate::config::Config::parse("events = 10").unwrap();
+        let a = parse("x --events 99");
+        a.overlay_on(&mut cfg);
+        assert_eq!(cfg.get("events"), Some("99"));
+    }
+}

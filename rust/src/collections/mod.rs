@@ -1,0 +1,19 @@
+//! Supporting data structures for estimating AUC (paper §3).
+//!
+//! * [`rbtree`] — arena-based augmented red-black tree. Instantiated twice
+//!   by the coordinator: as the score tree `T` (per-node label counters
+//!   `p`, `n` plus subtree sums `accpos`, `accneg` maintained through
+//!   rotations) and as the positive-node index `TP`.
+//! * [`weighted_list`] — the weighted linked list with gap counters
+//!   `gp`/`gn` used for the positive list `P` and the `(1+ε)`-compressed
+//!   list `C`.
+//! * [`score`] — total ordering for `f64` classifier scores, including the
+//!   `±∞` sentinels of paper §3.1.
+
+pub mod rbtree;
+pub mod score;
+pub mod weighted_list;
+
+pub use rbtree::{Augment, NodeId, RbTree};
+pub use score::Score;
+pub use weighted_list::{CellId, WeightedList};

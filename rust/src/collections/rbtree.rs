@@ -1,0 +1,902 @@
+//! Arena-based augmented red-black tree (paper §3.1).
+//!
+//! The paper stores the sliding window in a red-black tree `T` sorted by
+//! score, augmented with subtree label sums `accpos`/`accneg` that are
+//! maintained through rotations “without additional costs”, and keeps a
+//! second tree `TP` over the positive nodes for the `MaxPos` query (§3.2).
+//!
+//! Both trees are instances of [`RbTree`]: nodes live in a slab (`Vec` with
+//! a free list), are addressed by [`NodeId`], and carry a user value `V`
+//! plus an augmentation `A` recomputed locally from a node's value and its
+//! children's augmentations. Rotations and the insert/delete fix-ups keep
+//! the augmentation consistent, so subtree-sum queries such as
+//! `HeadStats` (Algorithm 1) remain `O(log k)`.
+//!
+//! Augmentation-maintenance order (important for correctness):
+//! 1. structural change (BST insert / transplant-delete);
+//! 2. [`RbTree::update_upward`] from the deepest structurally changed node
+//!    — after this the whole path to the root is consistent;
+//! 3. rebalancing fix-up — each rotation recomputes exactly the two
+//!    rotated nodes from their (already consistent) children, and
+//!    recolourings never touch the augmentation.
+
+use super::score::Score;
+
+/// Handle to a tree node. Stable for the node's lifetime; slots are
+/// recycled after removal, so holders must not use a handle past `remove`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct NodeId(pub u32);
+
+const NIL: u32 = u32::MAX;
+
+impl NodeId {
+    #[inline]
+    fn idx(self) -> usize {
+        self.0 as usize
+    }
+}
+
+/// Subtree augmentation: recomputed locally from the node value and the
+/// children's augmentations whenever the subtree under a node changes.
+pub trait Augment<V>: Clone {
+    /// Value of the augmentation for a node with value `val` whose children
+    /// carry `left` / `right` (absent child ⇒ `None`).
+    fn recompute(val: &V, left: Option<&Self>, right: Option<&Self>) -> Self;
+}
+
+/// No augmentation (used by the positive-index tree `TP`).
+impl<V> Augment<V> for () {
+    #[inline]
+    fn recompute(_: &V, _: Option<&Self>, _: Option<&Self>) -> Self {}
+}
+
+#[derive(Clone, Debug)]
+struct Node<V, A> {
+    key: Score,
+    val: V,
+    aug: A,
+    left: u32,
+    right: u32,
+    parent: u32,
+    red: bool,
+}
+
+/// Augmented red-black tree keyed by [`Score`].
+///
+/// Duplicate keys are rejected by [`RbTree::insert`] (it returns the
+/// existing node), matching the paper where one tree node aggregates every
+/// window entry sharing a score.
+#[derive(Clone, Debug)]
+pub struct RbTree<V, A> {
+    nodes: Vec<Node<V, A>>,
+    free: Vec<u32>,
+    root: u32,
+    len: usize,
+}
+
+impl<V, A: Augment<V>> Default for RbTree<V, A> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<V, A: Augment<V>> RbTree<V, A> {
+    /// Empty tree.
+    pub fn new() -> Self {
+        RbTree { nodes: Vec::new(), free: Vec::new(), root: NIL, len: 0 }
+    }
+
+    /// Empty tree with room for `cap` nodes before reallocating.
+    pub fn with_capacity(cap: usize) -> Self {
+        RbTree { nodes: Vec::with_capacity(cap), free: Vec::new(), root: NIL, len: 0 }
+    }
+
+    /// Number of live nodes.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// True when the tree holds no nodes.
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Root node, if any.
+    #[inline]
+    pub fn root(&self) -> Option<NodeId> {
+        wrap(self.root)
+    }
+
+    #[inline]
+    fn node(&self, id: NodeId) -> &Node<V, A> {
+        &self.nodes[id.idx()]
+    }
+
+    #[inline]
+    fn node_mut(&mut self, id: NodeId) -> &mut Node<V, A> {
+        &mut self.nodes[id.idx()]
+    }
+
+    /// Key (score) of a node.
+    #[inline]
+    pub fn key(&self, id: NodeId) -> Score {
+        self.node(id).key
+    }
+
+    /// Value of a node.
+    #[inline]
+    pub fn val(&self, id: NodeId) -> &V {
+        &self.node(id).val
+    }
+
+    /// Augmentation of a node (the subtree summary).
+    #[inline]
+    pub fn aug(&self, id: NodeId) -> &A {
+        &self.node(id).aug
+    }
+
+    /// Left child.
+    #[inline]
+    pub fn left(&self, id: NodeId) -> Option<NodeId> {
+        wrap(self.node(id).left)
+    }
+
+    /// Right child.
+    #[inline]
+    pub fn right(&self, id: NodeId) -> Option<NodeId> {
+        wrap(self.node(id).right)
+    }
+
+    /// Parent node.
+    #[inline]
+    pub fn parent(&self, id: NodeId) -> Option<NodeId> {
+        wrap(self.node(id).parent)
+    }
+
+    /// Mutate a node's value, then restore the augmentation along the path
+    /// to the root (`O(log k)`, paper §3.3 “update the accpos counters …
+    /// only for the ancestors”).
+    pub fn with_val_mut<R>(&mut self, id: NodeId, f: impl FnOnce(&mut V) -> R) -> R {
+        let r = f(&mut self.node_mut(id.into()).val);
+        self.update_upward(id);
+        r
+    }
+
+    /// Recompute augmentations from `id` up to the root.
+    pub fn update_upward(&mut self, id: NodeId) {
+        let mut cur = id.0;
+        while cur != NIL {
+            self.recompute_aug(cur);
+            cur = self.nodes[cur as usize].parent;
+        }
+    }
+
+    fn recompute_aug(&mut self, i: u32) {
+        let (l, r) = {
+            let n = &self.nodes[i as usize];
+            (n.left, n.right)
+        };
+        let la = if l == NIL { None } else { Some(&self.nodes[l as usize].aug) };
+        let ra = if r == NIL { None } else { Some(&self.nodes[r as usize].aug) };
+        let aug = A::recompute(&self.nodes[i as usize].val, la, ra);
+        self.nodes[i as usize].aug = aug;
+    }
+
+    /// Find the node with exactly this key.
+    pub fn find(&self, key: Score) -> Option<NodeId> {
+        let mut cur = self.root;
+        while cur != NIL {
+            let n = &self.nodes[cur as usize];
+            cur = match key.cmp(&n.key) {
+                std::cmp::Ordering::Less => n.left,
+                std::cmp::Ordering::Greater => n.right,
+                std::cmp::Ordering::Equal => return Some(NodeId(cur)),
+            };
+        }
+        None
+    }
+
+    /// Largest node with key `≤ key` (the shape of `MaxPos`, paper §3.2).
+    pub fn floor(&self, key: Score) -> Option<NodeId> {
+        let mut cur = self.root;
+        let mut best = NIL;
+        while cur != NIL {
+            let n = &self.nodes[cur as usize];
+            if n.key <= key {
+                best = cur;
+                cur = n.right;
+            } else {
+                cur = n.left;
+            }
+        }
+        wrap(best)
+    }
+
+    /// Smallest node with key `≥ key`.
+    pub fn ceil(&self, key: Score) -> Option<NodeId> {
+        let mut cur = self.root;
+        let mut best = NIL;
+        while cur != NIL {
+            let n = &self.nodes[cur as usize];
+            if n.key >= key {
+                best = cur;
+                cur = n.left;
+            } else {
+                cur = n.right;
+            }
+        }
+        wrap(best)
+    }
+
+    /// Node with the smallest key.
+    pub fn first(&self) -> Option<NodeId> {
+        if self.root == NIL {
+            return None;
+        }
+        Some(NodeId(self.min_of(self.root)))
+    }
+
+    /// Node with the largest key.
+    pub fn last(&self) -> Option<NodeId> {
+        if self.root == NIL {
+            return None;
+        }
+        Some(NodeId(self.max_of(self.root)))
+    }
+
+    fn min_of(&self, mut i: u32) -> u32 {
+        while self.nodes[i as usize].left != NIL {
+            i = self.nodes[i as usize].left;
+        }
+        i
+    }
+
+    fn max_of(&self, mut i: u32) -> u32 {
+        while self.nodes[i as usize].right != NIL {
+            i = self.nodes[i as usize].right;
+        }
+        i
+    }
+
+    /// In-order successor.
+    pub fn successor(&self, id: NodeId) -> Option<NodeId> {
+        let mut i = id.0;
+        if self.nodes[i as usize].right != NIL {
+            return Some(NodeId(self.min_of(self.nodes[i as usize].right)));
+        }
+        let mut p = self.nodes[i as usize].parent;
+        while p != NIL && self.nodes[p as usize].right == i {
+            i = p;
+            p = self.nodes[p as usize].parent;
+        }
+        wrap(p)
+    }
+
+    /// In-order predecessor.
+    pub fn predecessor(&self, id: NodeId) -> Option<NodeId> {
+        let mut i = id.0;
+        if self.nodes[i as usize].left != NIL {
+            return Some(NodeId(self.max_of(self.nodes[i as usize].left)));
+        }
+        let mut p = self.nodes[i as usize].parent;
+        while p != NIL && self.nodes[p as usize].left == i {
+            i = p;
+            p = self.nodes[p as usize].parent;
+        }
+        wrap(p)
+    }
+
+    /// In-order iteration over node ids (ascending key).
+    pub fn iter(&self) -> InOrder<'_, V, A> {
+        InOrder { tree: self, next: self.first() }
+    }
+
+    /// Insert `key`, creating the node with `make()` if absent.
+    ///
+    /// Returns the node and whether it was newly created. On creation the
+    /// augmentation path to the root is restored.
+    pub fn insert(&mut self, key: Score, make: impl FnOnce() -> V) -> (NodeId, bool) {
+        let mut parent = NIL;
+        let mut cur = self.root;
+        let mut went_left = false;
+        while cur != NIL {
+            parent = cur;
+            let n = &self.nodes[cur as usize];
+            match key.cmp(&n.key) {
+                std::cmp::Ordering::Less => {
+                    cur = n.left;
+                    went_left = true;
+                }
+                std::cmp::Ordering::Greater => {
+                    cur = n.right;
+                    went_left = false;
+                }
+                std::cmp::Ordering::Equal => return (NodeId(cur), false),
+            }
+        }
+        let val = make();
+        let aug = A::recompute(&val, None, None);
+        let node = Node { key, val, aug, left: NIL, right: NIL, parent, red: true };
+        let id = match self.free.pop() {
+            Some(slot) => {
+                self.nodes[slot as usize] = node;
+                slot
+            }
+            None => {
+                self.nodes.push(node);
+                (self.nodes.len() - 1) as u32
+            }
+        };
+        if parent == NIL {
+            self.root = id;
+        } else if went_left {
+            self.nodes[parent as usize].left = id;
+        } else {
+            self.nodes[parent as usize].right = id;
+        }
+        self.len += 1;
+        if parent != NIL {
+            self.update_upward(NodeId(parent));
+        }
+        self.insert_fixup(id);
+        (NodeId(id), true)
+    }
+
+    /// Remove a node. The handle (and any copies) become invalid; the slot
+    /// may be recycled by a later insert.
+    pub fn remove(&mut self, id: NodeId) {
+        let z = id.0;
+        debug_assert!(self.is_live(id), "remove of dead node");
+        let (zl, zr) = (self.nodes[z as usize].left, self.nodes[z as usize].right);
+        // y: node physically unlinked or moved; x: subtree replacing y's
+        // old position (possibly NIL); xp: x's parent after the transplant.
+        let y_red;
+        let x;
+        let xp;
+        if zl == NIL {
+            y_red = self.nodes[z as usize].red;
+            x = zr;
+            xp = self.nodes[z as usize].parent;
+            self.transplant(z, zr);
+        } else if zr == NIL {
+            y_red = self.nodes[z as usize].red;
+            x = zl;
+            xp = self.nodes[z as usize].parent;
+            self.transplant(z, zl);
+        } else {
+            let y = self.min_of(zr);
+            y_red = self.nodes[y as usize].red;
+            x = self.nodes[y as usize].right;
+            if self.nodes[y as usize].parent == z {
+                xp = y;
+            } else {
+                xp = self.nodes[y as usize].parent;
+                self.transplant(y, x);
+                let zr_now = self.nodes[z as usize].right;
+                self.nodes[y as usize].right = zr_now;
+                self.nodes[zr_now as usize].parent = y;
+            }
+            self.transplant(z, y);
+            let zl_now = self.nodes[z as usize].left;
+            self.nodes[y as usize].left = zl_now;
+            self.nodes[zl_now as usize].parent = y;
+            self.nodes[y as usize].red = self.nodes[z as usize].red;
+        }
+        // Restore augmentation along the whole changed path before any
+        // rebalancing rotations (they recompute locally from children).
+        if xp != NIL {
+            self.update_upward(NodeId(xp));
+        }
+        if !y_red {
+            self.delete_fixup(x, xp);
+        }
+        // Retire the slot.
+        self.free.push(z);
+        self.len -= 1;
+        // Poison links in debug builds to catch stale handles.
+        if cfg!(debug_assertions) {
+            let n = &mut self.nodes[z as usize];
+            n.left = NIL;
+            n.right = NIL;
+            n.parent = NIL;
+        }
+    }
+
+    /// True if `id` currently addresses a live node (test/debug helper; it
+    /// is linear in the free list).
+    pub fn is_live(&self, id: NodeId) -> bool {
+        id.idx() < self.nodes.len() && !self.free.contains(&id.0)
+    }
+
+    fn transplant(&mut self, u: u32, v: u32) {
+        let p = self.nodes[u as usize].parent;
+        if p == NIL {
+            self.root = v;
+        } else if self.nodes[p as usize].left == u {
+            self.nodes[p as usize].left = v;
+        } else {
+            self.nodes[p as usize].right = v;
+        }
+        if v != NIL {
+            self.nodes[v as usize].parent = p;
+        }
+    }
+
+    /// Left rotation around `x`; recomputes the augmentation of exactly the
+    /// two rotated nodes (paper §3.3: counters are maintainable during
+    /// rotations without additional cost).
+    fn rotate_left(&mut self, x: u32) {
+        let y = self.nodes[x as usize].right;
+        debug_assert_ne!(y, NIL);
+        let yl = self.nodes[y as usize].left;
+        self.nodes[x as usize].right = yl;
+        if yl != NIL {
+            self.nodes[yl as usize].parent = x;
+        }
+        let xp = self.nodes[x as usize].parent;
+        self.nodes[y as usize].parent = xp;
+        if xp == NIL {
+            self.root = y;
+        } else if self.nodes[xp as usize].left == x {
+            self.nodes[xp as usize].left = y;
+        } else {
+            self.nodes[xp as usize].right = y;
+        }
+        self.nodes[y as usize].left = x;
+        self.nodes[x as usize].parent = y;
+        self.recompute_aug(x);
+        self.recompute_aug(y);
+    }
+
+    fn rotate_right(&mut self, x: u32) {
+        let y = self.nodes[x as usize].left;
+        debug_assert_ne!(y, NIL);
+        let yr = self.nodes[y as usize].right;
+        self.nodes[x as usize].left = yr;
+        if yr != NIL {
+            self.nodes[yr as usize].parent = x;
+        }
+        let xp = self.nodes[x as usize].parent;
+        self.nodes[y as usize].parent = xp;
+        if xp == NIL {
+            self.root = y;
+        } else if self.nodes[xp as usize].left == x {
+            self.nodes[xp as usize].left = y;
+        } else {
+            self.nodes[xp as usize].right = y;
+        }
+        self.nodes[y as usize].right = x;
+        self.nodes[x as usize].parent = y;
+        self.recompute_aug(x);
+        self.recompute_aug(y);
+    }
+
+    fn insert_fixup(&mut self, mut z: u32) {
+        while {
+            let p = self.nodes[z as usize].parent;
+            p != NIL && self.nodes[p as usize].red
+        } {
+            let p = self.nodes[z as usize].parent;
+            let g = self.nodes[p as usize].parent;
+            debug_assert_ne!(g, NIL, "red root");
+            if self.nodes[g as usize].left == p {
+                let u = self.nodes[g as usize].right;
+                if u != NIL && self.nodes[u as usize].red {
+                    self.nodes[p as usize].red = false;
+                    self.nodes[u as usize].red = false;
+                    self.nodes[g as usize].red = true;
+                    z = g;
+                } else {
+                    if self.nodes[p as usize].right == z {
+                        z = p;
+                        self.rotate_left(z);
+                    }
+                    let p = self.nodes[z as usize].parent;
+                    let g = self.nodes[p as usize].parent;
+                    self.nodes[p as usize].red = false;
+                    self.nodes[g as usize].red = true;
+                    self.rotate_right(g);
+                }
+            } else {
+                let u = self.nodes[g as usize].left;
+                if u != NIL && self.nodes[u as usize].red {
+                    self.nodes[p as usize].red = false;
+                    self.nodes[u as usize].red = false;
+                    self.nodes[g as usize].red = true;
+                    z = g;
+                } else {
+                    if self.nodes[p as usize].left == z {
+                        z = p;
+                        self.rotate_right(z);
+                    }
+                    let p = self.nodes[z as usize].parent;
+                    let g = self.nodes[p as usize].parent;
+                    self.nodes[p as usize].red = false;
+                    self.nodes[g as usize].red = true;
+                    self.rotate_left(g);
+                }
+            }
+        }
+        let r = self.root;
+        self.nodes[r as usize].red = false;
+    }
+
+    /// CLRS delete-fixup adapted to arena form: `x` may be NIL, so its
+    /// parent is tracked explicitly in `xp`.
+    fn delete_fixup(&mut self, mut x: u32, mut xp: u32) {
+        while x != self.root && (x == NIL || !self.nodes[x as usize].red) {
+            if xp == NIL {
+                break; // tree became empty
+            }
+            if self.nodes[xp as usize].left == x {
+                let mut w = self.nodes[xp as usize].right;
+                if w != NIL && self.nodes[w as usize].red {
+                    self.nodes[w as usize].red = false;
+                    self.nodes[xp as usize].red = true;
+                    self.rotate_left(xp);
+                    w = self.nodes[xp as usize].right;
+                }
+                if w == NIL {
+                    x = xp;
+                    xp = self.nodes[x as usize].parent;
+                    continue;
+                }
+                let wl = self.nodes[w as usize].left;
+                let wr = self.nodes[w as usize].right;
+                let wl_red = wl != NIL && self.nodes[wl as usize].red;
+                let wr_red = wr != NIL && self.nodes[wr as usize].red;
+                if !wl_red && !wr_red {
+                    self.nodes[w as usize].red = true;
+                    x = xp;
+                    xp = self.nodes[x as usize].parent;
+                } else {
+                    if !wr_red {
+                        if wl != NIL {
+                            self.nodes[wl as usize].red = false;
+                        }
+                        self.nodes[w as usize].red = true;
+                        self.rotate_right(w);
+                        w = self.nodes[xp as usize].right;
+                    }
+                    self.nodes[w as usize].red = self.nodes[xp as usize].red;
+                    self.nodes[xp as usize].red = false;
+                    let wr = self.nodes[w as usize].right;
+                    if wr != NIL {
+                        self.nodes[wr as usize].red = false;
+                    }
+                    self.rotate_left(xp);
+                    x = self.root;
+                    xp = NIL;
+                }
+            } else {
+                let mut w = self.nodes[xp as usize].left;
+                if w != NIL && self.nodes[w as usize].red {
+                    self.nodes[w as usize].red = false;
+                    self.nodes[xp as usize].red = true;
+                    self.rotate_right(xp);
+                    w = self.nodes[xp as usize].left;
+                }
+                if w == NIL {
+                    x = xp;
+                    xp = self.nodes[x as usize].parent;
+                    continue;
+                }
+                let wl = self.nodes[w as usize].left;
+                let wr = self.nodes[w as usize].right;
+                let wl_red = wl != NIL && self.nodes[wl as usize].red;
+                let wr_red = wr != NIL && self.nodes[wr as usize].red;
+                if !wl_red && !wr_red {
+                    self.nodes[w as usize].red = true;
+                    x = xp;
+                    xp = self.nodes[x as usize].parent;
+                } else {
+                    if !wl_red {
+                        if wr != NIL {
+                            self.nodes[wr as usize].red = false;
+                        }
+                        self.nodes[w as usize].red = true;
+                        self.rotate_left(w);
+                        w = self.nodes[xp as usize].left;
+                    }
+                    self.nodes[w as usize].red = self.nodes[xp as usize].red;
+                    self.nodes[xp as usize].red = false;
+                    let wl = self.nodes[w as usize].left;
+                    if wl != NIL {
+                        self.nodes[wl as usize].red = false;
+                    }
+                    self.rotate_right(xp);
+                    x = self.root;
+                    xp = NIL;
+                }
+            }
+        }
+        if x != NIL {
+            self.nodes[x as usize].red = false;
+        }
+    }
+
+    /// Validate every red-black + BST + augmentation invariant. Test and
+    /// property-test helper; panics with a description on violation.
+    pub fn check_invariants(&self)
+    where
+        A: PartialEq + std::fmt::Debug,
+    {
+        if self.root == NIL {
+            assert_eq!(self.len, 0, "len ≠ 0 for empty tree");
+            return;
+        }
+        assert!(!self.nodes[self.root as usize].red, "red root");
+        assert_eq!(self.nodes[self.root as usize].parent, NIL, "root has parent");
+        let (count, _) = self.check_node(self.root);
+        assert_eq!(count, self.len, "len mismatch");
+        // Keys strictly increasing in order.
+        let mut prev: Option<Score> = None;
+        for id in self.iter() {
+            if let Some(p) = prev {
+                assert!(p < self.key(id), "in-order keys not strictly increasing");
+            }
+            prev = Some(self.key(id));
+        }
+    }
+
+    /// Returns (node count, black height) of subtree `i`, checking
+    /// red-black, parent-pointer and augmentation invariants.
+    fn check_node(&self, i: u32) -> (usize, usize)
+    where
+        A: PartialEq + std::fmt::Debug,
+    {
+        let n = &self.nodes[i as usize];
+        for c in [n.left, n.right] {
+            if c != NIL {
+                assert_eq!(self.nodes[c as usize].parent, i, "broken parent pointer");
+                if n.red {
+                    assert!(!self.nodes[c as usize].red, "red node with red child");
+                }
+            }
+        }
+        let (lc, lb) = if n.left != NIL { self.check_node(n.left) } else { (0, 1) };
+        let (rc, rb) = if n.right != NIL { self.check_node(n.right) } else { (0, 1) };
+        assert_eq!(lb, rb, "black height mismatch");
+        let la = if n.left == NIL { None } else { Some(&self.nodes[n.left as usize].aug) };
+        let ra = if n.right == NIL { None } else { Some(&self.nodes[n.right as usize].aug) };
+        let expect = A::recompute(&n.val, la, ra);
+        assert_eq!(n.aug, expect, "stale augmentation at node {i}");
+        (lc + rc + 1, lb + usize::from(!n.red))
+    }
+}
+
+#[inline]
+fn wrap(i: u32) -> Option<NodeId> {
+    if i == NIL {
+        None
+    } else {
+        Some(NodeId(i))
+    }
+}
+
+/// Ascending in-order iterator over node ids.
+pub struct InOrder<'a, V, A> {
+    tree: &'a RbTree<V, A>,
+    next: Option<NodeId>,
+}
+
+impl<V, A: Augment<V>> Iterator for InOrder<'_, V, A> {
+    type Item = NodeId;
+
+    fn next(&mut self) -> Option<NodeId> {
+        let cur = self.next?;
+        self.next = self.tree.successor(cur);
+        Some(cur)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::Pcg;
+
+    /// Subtree size augmentation for tests (counts nodes).
+    #[derive(Clone, Copy, Debug, PartialEq)]
+    struct Size(usize);
+
+    impl Augment<u64> for Size {
+        fn recompute(_v: &u64, l: Option<&Self>, r: Option<&Self>) -> Self {
+            Size(1 + l.map_or(0, |s| s.0) + r.map_or(0, |s| s.0))
+        }
+    }
+
+    /// Sum-of-values augmentation (models accpos).
+    #[derive(Clone, Copy, Debug, PartialEq)]
+    struct Sum(u64);
+
+    impl Augment<u64> for Sum {
+        fn recompute(v: &u64, l: Option<&Self>, r: Option<&Self>) -> Self {
+            Sum(v + l.map_or(0, |s| s.0) + r.map_or(0, |s| s.0))
+        }
+    }
+
+    fn tree_from(keys: &[f64]) -> RbTree<u64, Size> {
+        let mut t = RbTree::new();
+        for &k in keys {
+            t.insert(Score(k), || 0);
+        }
+        t
+    }
+
+    #[test]
+    fn empty_tree() {
+        let t: RbTree<u64, Size> = RbTree::new();
+        assert!(t.is_empty());
+        assert_eq!(t.first(), None);
+        assert_eq!(t.last(), None);
+        assert_eq!(t.find(Score(1.0)), None);
+        assert_eq!(t.floor(Score(1.0)), None);
+        assert_eq!(t.ceil(Score(1.0)), None);
+        t.check_invariants();
+    }
+
+    #[test]
+    fn insert_ascending_descending() {
+        for order in [true, false] {
+            let mut keys: Vec<f64> = (0..200).map(f64::from).collect();
+            if !order {
+                keys.reverse();
+            }
+            let t = tree_from(&keys);
+            assert_eq!(t.len(), 200);
+            t.check_invariants();
+            let got: Vec<f64> = t.iter().map(|id| t.key(id).0).collect();
+            let mut want = keys.clone();
+            want.sort_by(f64::total_cmp);
+            assert_eq!(got, want);
+        }
+    }
+
+    #[test]
+    fn insert_duplicate_returns_existing() {
+        let mut t: RbTree<u64, Size> = RbTree::new();
+        let (a, fresh_a) = t.insert(Score(5.0), || 7);
+        let (b, fresh_b) = t.insert(Score(5.0), || panic!("must not be called"));
+        assert!(fresh_a && !fresh_b);
+        assert_eq!(a, b);
+        assert_eq!(*t.val(a), 7);
+        assert_eq!(t.len(), 1);
+    }
+
+    #[test]
+    fn floor_ceil_find() {
+        let t = tree_from(&[1.0, 3.0, 5.0, 7.0]);
+        let key = |id: Option<NodeId>| id.map(|i| t.key(i).0);
+        assert_eq!(key(t.floor(Score(0.0))), None);
+        assert_eq!(key(t.floor(Score(1.0))), Some(1.0));
+        assert_eq!(key(t.floor(Score(4.0))), Some(3.0));
+        assert_eq!(key(t.floor(Score(9.0))), Some(7.0));
+        assert_eq!(key(t.ceil(Score(0.0))), Some(1.0));
+        assert_eq!(key(t.ceil(Score(5.5))), Some(7.0));
+        assert_eq!(key(t.ceil(Score(8.0))), None);
+        assert_eq!(key(t.find(Score(3.0))), Some(3.0));
+        assert_eq!(t.find(Score(4.0)), None);
+    }
+
+    #[test]
+    fn successor_predecessor_chain() {
+        let t = tree_from(&[2.0, 4.0, 6.0, 8.0, 10.0]);
+        let mut cur = t.first();
+        let mut seen = Vec::new();
+        while let Some(id) = cur {
+            seen.push(t.key(id).0);
+            cur = t.successor(id);
+        }
+        assert_eq!(seen, vec![2.0, 4.0, 6.0, 8.0, 10.0]);
+        let mut cur = t.last();
+        seen.clear();
+        while let Some(id) = cur {
+            seen.push(t.key(id).0);
+            cur = t.predecessor(id);
+        }
+        assert_eq!(seen, vec![10.0, 8.0, 6.0, 4.0, 2.0]);
+    }
+
+    #[test]
+    fn remove_all_orders() {
+        // Remove in insertion, reverse, and middle-out orders.
+        let keys: Vec<f64> = (0..64).map(f64::from).collect();
+        for variant in 0..3 {
+            let mut t = tree_from(&keys);
+            let mut order: Vec<f64> = keys.clone();
+            match variant {
+                0 => {}
+                1 => order.reverse(),
+                _ => order.sort_by(|a, b| {
+                    (a - 32.0).abs().partial_cmp(&(b - 32.0).abs()).unwrap()
+                }),
+            }
+            for (i, k) in order.iter().enumerate() {
+                let id = t.find(Score(*k)).expect("present");
+                t.remove(id);
+                t.check_invariants();
+                assert_eq!(t.len(), keys.len() - i - 1);
+            }
+            assert!(t.is_empty());
+        }
+    }
+
+    #[test]
+    fn value_mutation_restores_augmentation() {
+        let mut t: RbTree<u64, Sum> = RbTree::new();
+        let mut ids = Vec::new();
+        for k in 0..100 {
+            let (id, _) = t.insert(Score(f64::from(k)), || 1);
+            ids.push(id);
+        }
+        t.with_val_mut(ids[42], |v| *v = 100);
+        let root = t.root().unwrap();
+        assert_eq!(t.aug(root).0, 100 + 99);
+        t.check_invariants();
+    }
+
+    #[test]
+    fn slot_recycling() {
+        let mut t = tree_from(&[1.0, 2.0, 3.0]);
+        let id = t.find(Score(2.0)).unwrap();
+        t.remove(id);
+        let (nid, fresh) = t.insert(Score(4.0), || 0);
+        assert!(fresh);
+        // Slot of the removed node is reused.
+        assert_eq!(nid.0, id.0);
+        t.check_invariants();
+    }
+
+    /// Randomized stress: mirror a `BTreeMap`, checking invariants and
+    /// queries after every operation.
+    #[test]
+    fn stress_against_btreemap() {
+        use std::collections::BTreeMap;
+        let mut rng = Pcg::seed(0xA0C_2019);
+        let mut t: RbTree<u64, Sum> = RbTree::new();
+        let mut model: BTreeMap<i64, u64> = BTreeMap::new();
+        for step in 0..4000 {
+            let key = i64::from(rng.below(64) as u32) - 32;
+            let ks = Score(key as f64);
+            match rng.below(4) {
+                0 | 1 => {
+                    let v = rng.below(10);
+                    let (id, fresh) = t.insert(ks, || v);
+                    if !fresh {
+                        t.with_val_mut(id, |old| *old = v);
+                    }
+                    model.insert(key, v);
+                }
+                2 => {
+                    if let Some(id) = t.find(ks) {
+                        t.remove(id);
+                        model.remove(&key);
+                    }
+                }
+                _ => {
+                    // floor query must agree with the model
+                    let got = t.floor(ks).map(|id| t.key(id).0 as i64);
+                    let want = model.range(..=key).next_back().map(|(k, _)| *k);
+                    assert_eq!(got, want, "floor({key}) disagrees at step {step}");
+                }
+            }
+            if step % 64 == 0 {
+                t.check_invariants();
+                assert_eq!(t.len(), model.len());
+                let total: u64 = model.values().sum();
+                let got = t.root().map_or(0, |r| t.aug(r).0);
+                assert_eq!(got, total, "sum augmentation diverged at step {step}");
+            }
+        }
+        // Drain fully.
+        let keys: Vec<i64> = model.keys().copied().collect();
+        for k in keys {
+            let id = t.find(Score(k as f64)).unwrap();
+            t.remove(id);
+        }
+        assert!(t.is_empty());
+        t.check_invariants();
+    }
+}

@@ -1,0 +1,91 @@
+//! Totally ordered classifier scores with `±∞` sentinels.
+//!
+//! The paper (§3.1) adds two sentinel nodes with scores `−∞` and `+∞` to
+//! the search tree and assumes real entries never take these values. We
+//! encode scores as `f64` and order them with IEEE-754 `total_cmp`, which
+//! gives a total order (NaN included, though the public API rejects NaN at
+//! the window boundary).
+
+use std::cmp::Ordering;
+
+/// A classifier score: an `f64` with a total order.
+///
+/// Wraps the raw score so the tree code can use `Ord` directly. `−∞` and
+/// `+∞` are reserved for the sentinel nodes of paper §3.1.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Score(pub f64);
+
+impl Score {
+    /// Sentinel score of the first node (`−∞`, paper §3.1).
+    pub const NEG_SENTINEL: Score = Score(f64::NEG_INFINITY);
+    /// Sentinel score of the last node (`+∞`, paper §3.1).
+    pub const POS_SENTINEL: Score = Score(f64::INFINITY);
+
+    /// True if this is one of the two reserved sentinel scores.
+    #[inline]
+    pub fn is_sentinel(self) -> bool {
+        self.0.is_infinite()
+    }
+
+    /// True for scores a data point is allowed to carry (finite, not NaN).
+    #[inline]
+    pub fn is_valid_entry(self) -> bool {
+        self.0.is_finite()
+    }
+}
+
+impl Eq for Score {}
+
+impl PartialOrd for Score {
+    #[inline]
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Score {
+    #[inline]
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.0.total_cmp(&other.0)
+    }
+}
+
+impl From<f64> for Score {
+    #[inline]
+    fn from(v: f64) -> Self {
+        Score(v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sentinels_bound_everything() {
+        for v in [-1e300, -1.0, 0.0, 1.0, 1e300] {
+            assert!(Score::NEG_SENTINEL < Score(v));
+            assert!(Score(v) < Score::POS_SENTINEL);
+        }
+        assert!(Score::NEG_SENTINEL < Score::POS_SENTINEL);
+    }
+
+    #[test]
+    fn total_order_on_negative_zero() {
+        // total_cmp orders -0.0 < 0.0; duplicates of the same bit pattern
+        // are equal. The window treats them as distinct scores, which is
+        // harmless for AUC (adjacent distinct nodes).
+        assert!(Score(-0.0) < Score(0.0));
+        assert_eq!(Score(1.5), Score(1.5));
+    }
+
+    #[test]
+    fn sentinel_classification() {
+        assert!(Score::NEG_SENTINEL.is_sentinel());
+        assert!(Score::POS_SENTINEL.is_sentinel());
+        assert!(!Score(0.0).is_sentinel());
+        assert!(Score(0.0).is_valid_entry());
+        assert!(!Score(f64::NAN).is_valid_entry());
+        assert!(!Score::POS_SENTINEL.is_valid_entry());
+    }
+}

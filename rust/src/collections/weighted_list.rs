@@ -1,0 +1,519 @@
+//! Weighted linked list with gap counters (paper §3.1).
+//!
+//! A weighted linked list `L` maintains a subset `U` of tree nodes sorted
+//! by score, with two gap counters per element: for `u ∈ L` with successor
+//! `v`, `gp(u; L)` / `gn(u; L)` are the total positive / negative label
+//! counts over the half-open score range `[s(u), s(v))` — i.e. `u` itself
+//! plus every tree node strictly between `u` and `v`.
+//!
+//! The two paper-critical operations are `O(1)`:
+//! * [`WeightedList::remove`] — delete an element, folding its gap into
+//!   the predecessor (`Remove(L, v)`);
+//! * [`WeightedList::insert_after`] — insert `v` after `u` given the label
+//!   sums over `[s(u), s(v))` (`Add(L, u, v, p, n)`).
+//!
+//! Cells live in a slab; a dense `tree-node → cell` map gives the `O(1)`
+//! membership test `w ∉ L` needed by `AddNext` (Algorithm 5).
+
+use super::rbtree::NodeId;
+
+/// Handle to a list cell.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CellId(u32);
+
+const NIL: u32 = u32::MAX;
+
+#[derive(Clone, Debug)]
+struct Cell {
+    node: NodeId,
+    next: u32,
+    prev: u32,
+    gp: u64,
+    gn: u64,
+    /// Cached copy of the tree node's score. Scores are immutable for a
+    /// node's lifetime, so this never goes stale; it keeps the hot
+    /// `c_floor` scan free of tree dereferences (see §Perf).
+    key: f64,
+    /// Cached copies of the node's own label counters `p(v)` / `n(v)`,
+    /// maintained by the list owner alongside the tree counters (the
+    /// invariant checkers in coordinator verify cache coherence).
+    p: u64,
+    n: u64,
+}
+
+/// Weighted linked list over tree nodes. See module docs.
+#[derive(Clone, Debug, Default)]
+pub struct WeightedList {
+    cells: Vec<Cell>,
+    free: Vec<u32>,
+    head: u32,
+    tail: u32,
+    /// Dense map: tree-node slot → cell id (NIL when absent).
+    by_node: Vec<u32>,
+    len: usize,
+}
+
+impl WeightedList {
+    /// Empty list (no sentinels yet).
+    pub fn new() -> Self {
+        WeightedList { cells: Vec::new(), free: Vec::new(), head: NIL, tail: NIL, by_node: Vec::new(), len: 0 }
+    }
+
+    /// Number of elements, including any sentinel cells the coordinator
+    /// pushed.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// True when no cells are present.
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// First cell.
+    #[inline]
+    pub fn head(&self) -> Option<CellId> {
+        wrap(self.head)
+    }
+
+    /// Last cell.
+    #[inline]
+    pub fn tail(&self) -> Option<CellId> {
+        wrap(self.tail)
+    }
+
+    /// `next(u; L)`.
+    #[inline]
+    pub fn next(&self, c: CellId) -> Option<CellId> {
+        wrap(self.cells[c.0 as usize].next)
+    }
+
+    /// `prev(u; L)`.
+    #[inline]
+    pub fn prev(&self, c: CellId) -> Option<CellId> {
+        wrap(self.cells[c.0 as usize].prev)
+    }
+
+    /// Tree node this cell references.
+    #[inline]
+    pub fn node(&self, c: CellId) -> NodeId {
+        self.cells[c.0 as usize].node
+    }
+
+    /// Gap positive count `gp(u; L)`.
+    #[inline]
+    pub fn gp(&self, c: CellId) -> u64 {
+        self.cells[c.0 as usize].gp
+    }
+
+    /// Gap negative count `gn(u; L)`.
+    #[inline]
+    pub fn gn(&self, c: CellId) -> u64 {
+        self.cells[c.0 as usize].gn
+    }
+
+    /// Add `delta` to `gp(u; L)` (counter maintenance on label arrival /
+    /// departure).
+    #[inline]
+    pub fn add_gp(&mut self, c: CellId, delta: i64) {
+        let g = &mut self.cells[c.0 as usize].gp;
+        *g = g.checked_add_signed(delta).expect("gp underflow");
+    }
+
+    /// Add `delta` to `gn(u; L)`.
+    #[inline]
+    pub fn add_gn(&mut self, c: CellId, delta: i64) {
+        let g = &mut self.cells[c.0 as usize].gn;
+        *g = g.checked_add_signed(delta).expect("gn underflow");
+    }
+
+    /// Cell holding `node`, if `node ∈ L`.
+    #[inline]
+    pub fn cell_of(&self, node: NodeId) -> Option<CellId> {
+        let i = node.0 as usize;
+        if i < self.by_node.len() {
+            wrap(self.by_node[i])
+        } else {
+            None
+        }
+    }
+
+    /// `O(1)` membership test.
+    #[inline]
+    pub fn contains(&self, node: NodeId) -> bool {
+        self.cell_of(node).is_some()
+    }
+
+    /// Cached score of the cell's node.
+    #[inline]
+    pub fn key(&self, c: CellId) -> f64 {
+        self.cells[c.0 as usize].key
+    }
+
+    /// Cached `p(v)` of the cell's node.
+    #[inline]
+    pub fn cp(&self, c: CellId) -> u64 {
+        self.cells[c.0 as usize].p
+    }
+
+    /// Cached `n(v)` of the cell's node.
+    #[inline]
+    pub fn cn(&self, c: CellId) -> u64 {
+        self.cells[c.0 as usize].n
+    }
+
+    /// Adjust the cached `p(v)` (call alongside the tree counter).
+    #[inline]
+    pub fn add_cp(&mut self, c: CellId, delta: i64) {
+        let p = &mut self.cells[c.0 as usize].p;
+        *p = p.checked_add_signed(delta).expect("cached p underflow");
+    }
+
+    /// Adjust the cached `n(v)` (call alongside the tree counter).
+    #[inline]
+    pub fn add_cn(&mut self, c: CellId, delta: i64) {
+        let n = &mut self.cells[c.0 as usize].n;
+        *n = n.checked_add_signed(delta).expect("cached n underflow");
+    }
+
+    /// Append a cell at the back with explicit gap counters. Used only to
+    /// seed the sentinel cells; ordinary insertion goes through
+    /// [`WeightedList::insert_after`].
+    pub fn push_back(&mut self, node: NodeId, key: f64, gp: u64, gn: u64) -> CellId {
+        let id = self.alloc(Cell { node, next: NIL, prev: self.tail, gp, gn, key, p: 0, n: 0 });
+        if self.tail != NIL {
+            self.cells[self.tail as usize].next = id;
+        } else {
+            self.head = id;
+        }
+        self.tail = id;
+        self.map(node, id);
+        self.len += 1;
+        CellId(id)
+    }
+
+    /// `Add(L, u, v, p, n)` — insert `v` immediately after `u`, where `p`
+    /// and `n` are the label sums over `[s(u), s(v))` *at the time of the
+    /// call*. Splits `u`'s gap: `gp(u)′ = p`, `gp(v)′ = gp(u) − p` (same
+    /// for `gn`). `key`/`vp`/`vn` seed the new cell's caches. `O(1)`.
+    pub fn insert_after(
+        &mut self,
+        u: CellId,
+        v: NodeId,
+        key: f64,
+        vp: u64,
+        vn: u64,
+        p: u64,
+        n: u64,
+    ) -> CellId {
+        debug_assert!(!self.contains(v), "insert_after of node already in list");
+        let (u_next, u_gp, u_gn) = {
+            let cu = &self.cells[u.0 as usize];
+            (cu.next, cu.gp, cu.gn)
+        };
+        debug_assert!(u_gp >= p, "gap split underflow (gp={u_gp}, p={p})");
+        debug_assert!(u_gn >= n, "gap split underflow (gn={u_gn}, n={n})");
+        let id = self.alloc(Cell {
+            node: v,
+            next: u_next,
+            prev: u.0,
+            gp: u_gp - p,
+            gn: u_gn - n,
+            key,
+            p: vp,
+            n: vn,
+        });
+        {
+            let cu = &mut self.cells[u.0 as usize];
+            cu.next = id;
+            cu.gp = p;
+            cu.gn = n;
+        }
+        if u_next != NIL {
+            self.cells[u_next as usize].prev = id;
+        } else {
+            self.tail = id;
+        }
+        self.map(v, id);
+        self.len += 1;
+        CellId(id)
+    }
+
+    /// `Remove(L, v)` — delete a cell, folding its gap counters into the
+    /// predecessor so coverage is preserved. `O(1)`. The head cell (the
+    /// `−∞` sentinel, which has no predecessor to absorb its gap) must not
+    /// be removed.
+    pub fn remove(&mut self, c: CellId) {
+        let Cell { node, next, prev, gp, gn, .. } = self.cells[c.0 as usize].clone();
+        assert_ne!(prev, NIL, "cannot remove the head cell of a weighted list");
+        {
+            let cp = &mut self.cells[prev as usize];
+            cp.next = next;
+            cp.gp += gp;
+            cp.gn += gn;
+        }
+        if next != NIL {
+            self.cells[next as usize].prev = prev;
+        } else {
+            self.tail = prev;
+        }
+        self.unmap(node);
+        self.free.push(c.0);
+        self.len -= 1;
+    }
+
+    /// Iterate cells front to back.
+    pub fn iter(&self) -> Cells<'_> {
+        Cells { list: self, cur: self.head }
+    }
+
+    /// Snapshot of one cell's hot fields (scan-friendly: one slab lookup
+    /// per cell instead of one per accessor; see §Perf).
+    #[inline]
+    pub fn view(&self, c: CellId) -> CellView {
+        let cell = &self.cells[c.0 as usize];
+        CellView { key: cell.key, p: cell.p, n: cell.n, gp: cell.gp, gn: cell.gn }
+    }
+
+    /// Iterate cell snapshots front to back (the `ApproxAUC` read path).
+    pub fn views(&self) -> Views<'_> {
+        Views { list: self, cur: self.head }
+    }
+
+    /// Largest cell with cached `key ≤ s`, plus the prefix `gp` sum of
+    /// the cells before it (the `c_floor` hot scan). Assumes the head
+    /// cell's key is `−∞`.
+    pub fn floor_scan(&self, s: f64) -> (CellId, u64) {
+        let mut cur = self.head;
+        let mut hp = 0u64;
+        loop {
+            let cell = &self.cells[cur as usize];
+            let next = cell.next;
+            if next == NIL || self.cells[next as usize].key > s {
+                return (CellId(cur), hp);
+            }
+            hp += cell.gp;
+            cur = next;
+        }
+    }
+
+    /// Total `gp` over all cells (= positive labels covered; test helper).
+    pub fn total_gp(&self) -> u64 {
+        self.iter().map(|c| self.gp(c)).sum()
+    }
+
+    /// Total `gn` over all cells.
+    pub fn total_gn(&self) -> u64 {
+        self.iter().map(|c| self.gn(c)).sum()
+    }
+
+    fn alloc(&mut self, cell: Cell) -> u32 {
+        match self.free.pop() {
+            Some(slot) => {
+                self.cells[slot as usize] = cell;
+                slot
+            }
+            None => {
+                self.cells.push(cell);
+                (self.cells.len() - 1) as u32
+            }
+        }
+    }
+
+    fn map(&mut self, node: NodeId, cell: u32) {
+        let i = node.0 as usize;
+        if i >= self.by_node.len() {
+            self.by_node.resize(i + 1, NIL);
+        }
+        debug_assert_eq!(self.by_node[i], NIL, "node already mapped");
+        self.by_node[i] = cell;
+    }
+
+    fn unmap(&mut self, node: NodeId) {
+        self.by_node[node.0 as usize] = NIL;
+    }
+}
+
+#[inline]
+fn wrap(i: u32) -> Option<CellId> {
+    if i == NIL {
+        None
+    } else {
+        Some(CellId(i))
+    }
+}
+
+/// Copy of a cell's hot fields for scan loops.
+#[derive(Clone, Copy, Debug)]
+pub struct CellView {
+    /// Cached node score.
+    pub key: f64,
+    /// Cached `p(v)`.
+    pub p: u64,
+    /// Cached `n(v)`.
+    pub n: u64,
+    /// Gap positive count.
+    pub gp: u64,
+    /// Gap negative count.
+    pub gn: u64,
+}
+
+/// Front-to-back snapshot iterator.
+pub struct Views<'a> {
+    list: &'a WeightedList,
+    cur: u32,
+}
+
+impl Iterator for Views<'_> {
+    type Item = CellView;
+
+    #[inline]
+    fn next(&mut self) -> Option<CellView> {
+        if self.cur == NIL {
+            return None;
+        }
+        let cell = &self.list.cells[self.cur as usize];
+        self.cur = cell.next;
+        Some(CellView { key: cell.key, p: cell.p, n: cell.n, gp: cell.gp, gn: cell.gn })
+    }
+}
+
+/// Front-to-back cell iterator.
+pub struct Cells<'a> {
+    list: &'a WeightedList,
+    cur: u32,
+}
+
+impl Iterator for Cells<'_> {
+    type Item = CellId;
+
+    fn next(&mut self) -> Option<CellId> {
+        if self.cur == NIL {
+            return None;
+        }
+        let c = CellId(self.cur);
+        self.cur = self.list.cells[self.cur as usize].next;
+        Some(c)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn nid(i: u32) -> NodeId {
+        NodeId(i)
+    }
+
+    /// Builds [sentinel, tail-sentinel] with the head gap holding (gp, gn).
+    fn seeded(gp: u64, gn: u64) -> (WeightedList, CellId, CellId) {
+        let mut l = WeightedList::new();
+        let h = l.push_back(nid(1000), f64::NEG_INFINITY, gp, gn);
+        let t = l.push_back(nid(1001), f64::INFINITY, 0, 0);
+        (l, h, t)
+    }
+
+    #[test]
+    fn sentinels_only() {
+        let (l, h, t) = seeded(5, 7);
+        assert_eq!(l.len(), 2);
+        assert_eq!(l.head(), Some(h));
+        assert_eq!(l.tail(), Some(t));
+        assert_eq!(l.next(h), Some(t));
+        assert_eq!(l.prev(t), Some(h));
+        assert_eq!(l.next(t), None);
+        assert_eq!(l.prev(h), None);
+        assert_eq!((l.total_gp(), l.total_gn()), (5, 7));
+    }
+
+    #[test]
+    fn insert_splits_gap() {
+        let (mut l, h, t) = seeded(10, 20);
+        // 4 positives and 6 negatives lie in [head, v)
+        let v = l.insert_after(h, nid(5), 5.0, 1, 0, 4, 6);
+        assert_eq!(l.gp(h), 4);
+        assert_eq!(l.gn(h), 6);
+        assert_eq!(l.gp(v), 6);
+        assert_eq!(l.gn(v), 14);
+        assert_eq!(l.next(h), Some(v));
+        assert_eq!(l.next(v), Some(t));
+        assert_eq!(l.prev(t), Some(v));
+        assert_eq!((l.total_gp(), l.total_gn()), (10, 20));
+        assert!(l.contains(nid(5)));
+        assert_eq!(l.cell_of(nid(5)), Some(v));
+    }
+
+    #[test]
+    fn remove_folds_gap_into_prev() {
+        let (mut l, h, _t) = seeded(10, 20);
+        let v = l.insert_after(h, nid(5), 5.0, 1, 0, 4, 6);
+        l.remove(v);
+        assert_eq!(l.gp(h), 10);
+        assert_eq!(l.gn(h), 20);
+        assert_eq!(l.len(), 2);
+        assert!(!l.contains(nid(5)));
+    }
+
+    #[test]
+    fn remove_middle_of_three() {
+        let (mut l, h, t) = seeded(12, 0);
+        let a = l.insert_after(h, nid(2), 2.0, 1, 0, 3, 0);
+        let b = l.insert_after(a, nid(3), 3.0, 1, 0, 4, 0);
+        // gaps now: h=3, a=4, b=5
+        assert_eq!(l.gp(b), 5);
+        l.remove(a);
+        assert_eq!(l.gp(h), 7); // 3 + 4
+        assert_eq!(l.next(h), Some(b));
+        assert_eq!(l.prev(b), Some(h));
+        assert_eq!(l.next(b), Some(t));
+        assert_eq!(l.total_gp(), 12);
+    }
+
+    #[test]
+    fn counter_deltas() {
+        let (mut l, h, _t) = seeded(1, 1);
+        l.add_gp(h, 3);
+        l.add_gn(h, -1);
+        assert_eq!(l.gp(h), 4);
+        assert_eq!(l.gn(h), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "underflow")]
+    fn gn_underflow_panics() {
+        let (mut l, h, _t) = seeded(0, 0);
+        l.add_gn(h, -1);
+    }
+
+    #[test]
+    #[should_panic(expected = "head cell")]
+    fn removing_head_panics() {
+        let (mut l, h, _t) = seeded(0, 0);
+        l.remove(h);
+    }
+
+    #[test]
+    fn slot_reuse_keeps_mapping_clean() {
+        let (mut l, h, _t) = seeded(6, 0);
+        let a = l.insert_after(h, nid(2), 2.0, 1, 0, 3, 0);
+        l.remove(a);
+        assert!(!l.contains(nid(2)));
+        let b = l.insert_after(h, nid(4), 4.0, 1, 0, 2, 0);
+        assert!(l.contains(nid(4)));
+        assert!(!l.contains(nid(2)));
+        assert_eq!(l.node(b), nid(4));
+        assert_eq!(l.len(), 3);
+    }
+
+    #[test]
+    fn iteration_order() {
+        let (mut l, h, _t) = seeded(10, 0);
+        let a = l.insert_after(h, nid(2), 2.0, 1, 0, 2, 0);
+        let b = l.insert_after(a, nid(3), 3.0, 1, 0, 3, 0);
+        let nodes: Vec<u32> = l.iter().map(|c| l.node(c).0).collect();
+        assert_eq!(nodes, vec![1000, 2, 3, 1001]);
+        let _ = b;
+    }
+}

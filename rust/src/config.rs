@@ -1,0 +1,204 @@
+//! Key = value configuration files.
+//!
+//! A deliberately small format (serde/toml are unavailable offline):
+//! one `key = value` pair per line, `#` comments, string values
+//! unquoted. CLI flags override file values; [`Settings`] is the merged
+//! view consumed by `main.rs` and the examples.
+//!
+//! ```text
+//! # streamauc.conf
+//! epsilon = 0.05
+//! window  = 1000
+//! dataset = miniboone
+//! events  = 50000
+//! ```
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+/// Parsed key→value map with typed accessors.
+#[derive(Clone, Debug, Default)]
+pub struct Config {
+    values: BTreeMap<String, String>,
+}
+
+impl Config {
+    /// Empty config.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Parse from text.
+    pub fn parse(text: &str) -> Result<Config> {
+        let mut values = BTreeMap::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| anyhow!("line {}: expected `key = value`", lineno + 1))?;
+            let key = k.trim();
+            if key.is_empty() {
+                bail!("line {}: empty key", lineno + 1);
+            }
+            values.insert(key.to_string(), v.trim().to_string());
+        }
+        Ok(Config { values })
+    }
+
+    /// Load from a file.
+    pub fn load(path: &Path) -> Result<Config> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read config {}", path.display()))?;
+        Self::parse(&text).with_context(|| format!("parse config {}", path.display()))
+    }
+
+    /// Set (or override) a key.
+    pub fn set(&mut self, key: &str, value: impl Into<String>) {
+        self.values.insert(key.to_string(), value.into());
+    }
+
+    /// Raw string lookup.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(String::as_str)
+    }
+
+    /// Typed lookup with default.
+    pub fn get_or<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.values.get(key) {
+            None => Ok(default),
+            Some(raw) => raw
+                .parse()
+                .map_err(|e| anyhow!("config key {key} = {raw:?}: {e}")),
+        }
+    }
+
+    /// Keys present (for unknown-key validation).
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.values.keys().map(String::as_str)
+    }
+
+    /// Error on keys outside the allowed set (catches typos early).
+    pub fn validate_keys(&self, allowed: &[&str]) -> Result<()> {
+        for k in self.keys() {
+            if !allowed.contains(&k) {
+                bail!("unknown config key {k:?} (allowed: {allowed:?})");
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Merged runtime settings for the CLI and examples.
+#[derive(Clone, Debug)]
+pub struct Settings {
+    /// Approximation parameter ε.
+    pub epsilon: f64,
+    /// Sliding-window size k.
+    pub window: usize,
+    /// Dataset name (`hepmass` / `miniboone` / `tvads`).
+    pub dataset: String,
+    /// Events to stream.
+    pub events: usize,
+    /// Master seed.
+    pub seed: u64,
+    /// Artifact directory for the PJRT runtime.
+    pub artifacts: String,
+}
+
+impl Default for Settings {
+    fn default() -> Self {
+        Settings {
+            epsilon: 0.05,
+            window: 1000,
+            dataset: "miniboone".into(),
+            events: 50_000,
+            seed: 0xA0C_2019,
+            artifacts: "artifacts".into(),
+        }
+    }
+}
+
+/// Keys [`Settings::from_config`] understands.
+pub const SETTINGS_KEYS: [&str; 6] =
+    ["epsilon", "window", "dataset", "events", "seed", "artifacts"];
+
+impl Settings {
+    /// Build from a config map, defaulting missing keys.
+    pub fn from_config(cfg: &Config) -> Result<Settings> {
+        cfg.validate_keys(&SETTINGS_KEYS)?;
+        let d = Settings::default();
+        let s = Settings {
+            epsilon: cfg.get_or("epsilon", d.epsilon)?,
+            window: cfg.get_or("window", d.window)?,
+            dataset: cfg.get("dataset").unwrap_or(&d.dataset).to_string(),
+            events: cfg.get_or("events", d.events)?,
+            seed: cfg.get_or("seed", d.seed)?,
+            artifacts: cfg.get("artifacts").unwrap_or(&d.artifacts).to_string(),
+        };
+        if s.epsilon < 0.0 || !s.epsilon.is_finite() {
+            bail!("epsilon must be finite and ≥ 0, got {}", s.epsilon);
+        }
+        if s.window == 0 {
+            bail!("window must be positive");
+        }
+        Ok(s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_pairs_comments_blanks() {
+        let c = Config::parse("a = 1\n# comment\n\nb= x y # trailing\n").unwrap();
+        assert_eq!(c.get("a"), Some("1"));
+        assert_eq!(c.get("b"), Some("x y"));
+        assert_eq!(c.get("missing"), None);
+    }
+
+    #[test]
+    fn typed_accessors() {
+        let c = Config::parse("n = 42\nf = 0.5\nflag = true").unwrap();
+        assert_eq!(c.get_or("n", 0usize).unwrap(), 42);
+        assert_eq!(c.get_or("f", 0.0f64).unwrap(), 0.5);
+        assert!(c.get_or("flag", false).unwrap());
+        assert_eq!(c.get_or("absent", 7u32).unwrap(), 7);
+        assert!(c.get_or("f", 0usize).is_err());
+    }
+
+    #[test]
+    fn rejects_malformed_lines() {
+        assert!(Config::parse("just a line").is_err());
+        assert!(Config::parse("= novalue").is_err());
+    }
+
+    #[test]
+    fn settings_defaults_and_overrides() {
+        let mut c = Config::parse("epsilon = 0.1\nwindow = 200").unwrap();
+        let s = Settings::from_config(&c).unwrap();
+        assert_eq!(s.epsilon, 0.1);
+        assert_eq!(s.window, 200);
+        assert_eq!(s.dataset, "miniboone");
+        c.set("dataset", "tvads");
+        assert_eq!(Settings::from_config(&c).unwrap().dataset, "tvads");
+    }
+
+    #[test]
+    fn settings_reject_bad_values() {
+        let c = Config::parse("epsilon = -1").unwrap();
+        assert!(Settings::from_config(&c).is_err());
+        let c = Config::parse("window = 0").unwrap();
+        assert!(Settings::from_config(&c).is_err());
+        let c = Config::parse("unknown_key = 1").unwrap();
+        assert!(Settings::from_config(&c).is_err());
+    }
+}

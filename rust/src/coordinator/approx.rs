@@ -1,0 +1,568 @@
+//! The paper's contribution: `ε/2`-approximate sliding-window AUC (§4).
+//!
+//! On top of the §3 support structure, the estimator maintains a weighted
+//! linked list `C` that is `(1+ε)`-**compressed**: for consecutive
+//! `v, w ∈ C`
+//!
+//! ```text
+//! hp(w) ≤ α·(hp(v) + p(v))                    (Eq. 3, accuracy)
+//! hp(next(w)) > α·(hp(v) + p(v)) if it exists (Eq. 4, size)
+//! ```
+//!
+//! with `α = 1 + ε` and `hp(x)` the number of positive labels *below*
+//! `s(x)`. Eq. 3 drives Proposition 1 (`|ãuc − auc| ≤ ε·auc/2`), Eq. 4
+//! drives Proposition 2 (`|C| ∈ O((log k)/ε)`); `ApproxAUC` (Algorithm 4)
+//! reads the estimate from `C`'s gap counters in `O(|C|)`.
+//!
+//! The update procedures follow §4.2: negatives only touch one gap
+//! counter; positives additionally repair Eq. 3 via `AddNext`
+//! (Algorithm 5 / Lemma 1) and re-establish Eq. 4 via `Compress`
+//! (Algorithm 6).
+//!
+//! Deviations from the paper's pseudo-code (all behaviour-preserving;
+//! rationale in DESIGN.md §Pseudo-code-fixes):
+//!
+//! * Algorithm 7 line 5 checks `α·(c + p(v))` with `v` the freshly
+//!   inserted tree node; Eq. 3 for the pair `(u, next(u; C))` requires
+//!   `p(u)` — we use `p(u)` (identical when `s(v)` coincides with `s(u)`,
+//!   which is the only case where the written form is meaningful).
+//! * Algorithm 8's scan omits the running-total update `c ← c + x`
+//!   between iterations; we restore it (otherwise `c` would stay 0 and
+//!   the scan would spuriously add nodes).
+//! * `ε = 0` is allowed and degenerates to the exact estimator over the
+//!   positive list `P` (paper §5: “essentially equivalent … if we set
+//!   ε = 0”).
+
+use super::support::SupportTree;
+use super::{finish_auc, AucEstimator};
+use crate::collections::{CellId, Score, WeightedList};
+
+/// Approximate sliding-window AUC estimator (`|ãuc − auc| ≤ ε·auc/2`).
+#[derive(Clone, Debug)]
+pub struct ApproxAuc {
+    sup: SupportTree,
+    /// The `(1+ε)`-compressed list `C`.
+    c: WeightedList,
+    /// `α = 1 + ε`.
+    alpha: f64,
+}
+
+impl ApproxAuc {
+    /// New estimator with approximation parameter `ε ≥ 0`.
+    ///
+    /// `ε = 0` yields the exact AUC with `|C| = |P|` (every positive node
+    /// enumerated); larger `ε` trades accuracy for a smaller `C`.
+    pub fn new(epsilon: f64) -> Self {
+        assert!(
+            epsilon >= 0.0 && epsilon.is_finite(),
+            "epsilon must be finite and non-negative"
+        );
+        let sup = SupportTree::new();
+        let mut c = WeightedList::new();
+        c.push_back(sup.neg_sentinel(), f64::NEG_INFINITY, 0, 0);
+        c.push_back(sup.pos_sentinel(), f64::INFINITY, 0, 0);
+        ApproxAuc { sup, c, alpha: 1.0 + epsilon }
+    }
+
+    /// The `ε` this estimator was built with.
+    #[inline]
+    pub fn epsilon(&self) -> f64 {
+        self.alpha - 1.0
+    }
+
+    /// Current size of the compressed list `C`, sentinels included (the
+    /// quantity plotted in Figure 2 bottom).
+    #[inline]
+    pub fn compressed_len(&self) -> usize {
+        self.c.len()
+    }
+
+    /// Positive / negative totals (exposed for experiment drivers).
+    pub fn class_totals(&self) -> (u64, u64) {
+        (self.sup.total_pos(), self.sup.total_neg())
+    }
+
+    /// Access to the underlying §3 structure (read-only).
+    pub fn support(&self) -> &SupportTree {
+        &self.sup
+    }
+
+    /// Exact AUC via `O(k)` enumeration of the support tree. Used by the
+    /// error-measurement experiments so approx and exact share one window.
+    pub fn exact_auc(&self) -> f64 {
+        self.sup.exact_auc()
+    }
+
+    // ------------------------------------------------------------------
+    // C-list helpers
+    // ------------------------------------------------------------------
+
+    /// Largest `u ∈ C` with `s(u) ≤ s`, plus `c = hp(u)` accumulated from
+    /// the gap counters of the cells before `u`. Linear in `|C|`, which
+    /// is the budgeted `O((log k)/ε)` (§4.2).
+    fn c_floor(&self, s: Score) -> (CellId, u64) {
+        // Hot loop: cached keys + single slab lookup per hop (§Perf).
+        self.c.floor_scan(s.0)
+    }
+
+    /// `AddNext(v, C, P)` (Algorithm 5): splice the `P`-successor of
+    /// `node(v_cell)` into `C` right after `v_cell`, with gap counters
+    /// taken from `P` in `O(1)`. No-op if the successor is already in `C`.
+    fn add_next(&mut self, v_cell: CellId) {
+        let v_node = self.c.node(v_cell);
+        let p = self.sup.p_list();
+        let v_in_p = p.cell_of(v_node).expect("C nodes are always in P");
+        let Some(w_in_p) = p.next(v_in_p) else {
+            return; // v is the +∞ sentinel; nothing follows
+        };
+        let w_node = p.node(w_in_p);
+        if self.c.contains(w_node) {
+            return;
+        }
+        let (gp, gn) = (p.gp(v_in_p), p.gn(v_in_p));
+        let (key, wp, wn) = (p.key(w_in_p), p.cp(w_in_p), p.cn(w_in_p));
+        self.c.insert_after(v_cell, w_node, key, wp, wn, gp, gn);
+    }
+
+    /// `Compress(C, α)` alone (Algorithm 6): merge-only pass for
+    /// `AddPos`, where Eq. 3 can only break at the floor cell and is
+    /// repaired before this runs — a full repair scan would double the
+    /// per-cell work for nothing (§Perf).
+    fn compress(&mut self) {
+        let Some(mut v) = self.c.head() else { return };
+        let mut c_hp = 0u64;
+        loop {
+            let Some(w) = self.c.next(v) else { break };
+            if self.c.next(w).is_none() {
+                break; // w is the last cell (+∞ sentinel): keep it
+            }
+            let merged = c_hp + self.c.gp(v) + self.c.gp(w);
+            let bound = self.alpha * (c_hp + self.c.cp(v)) as f64;
+            if (merged as f64) <= bound {
+                self.c.remove(w);
+            } else {
+                c_hp += self.c.gp(v);
+                v = w;
+            }
+        }
+    }
+
+    /// Eq. 3 check for the pair starting at cell `v` given `c = hp(v)`.
+    #[inline]
+    fn eq3_violated(&self, v: CellId, c_hp: u64) -> bool {
+        let hp_next = c_hp + self.c.gp(v);
+        (hp_next as f64) > self.alpha * (c_hp + self.c.cp(v)) as f64
+    }
+
+    /// `AddPos` (Algorithm 7).
+    fn add_pos(&mut self, s: Score) {
+        let _v = self.sup.add_pos(s);
+        let (u_cell, c_hp) = self.c_floor(s);
+        self.c.add_gp(u_cell, 1);
+        if self.c.key(u_cell) == s.0 {
+            self.c.add_cp(u_cell, 1);
+        }
+        // At most one Eq. 3 violation, at u (Lemma 1 discussion, §4.2).
+        if self.eq3_violated(u_cell, c_hp) {
+            self.add_next(u_cell);
+        }
+        self.compress();
+    }
+
+    /// `RemovePos` (Algorithm 8).
+    ///
+    /// Note the ordering fix versus the paper's pseudo-code: Algorithm 8
+    /// decrements `gp(u; C)` *before* `AddNext`, but `AddNext` splits the
+    /// gap using `gp(u; P) = p(u)` — when `u` is the only positive in its
+    /// own C-gap (`gp(u; C) = p(u) = 1`), the literal order drives the
+    /// new cell's counter to `−1`. Splitting first, then decrementing,
+    /// performs the identical net transfer without the underflow.
+    fn remove_pos(&mut self, s: Score) {
+        let (u_cell, _) = self.c_floor(s);
+        if self.c.key(u_cell) == s.0 && self.c.cp(u_cell) == 1 {
+            // u is about to stop being positive: pull in its P-successor
+            // so the coverage of C is preserved, account the departing
+            // label inside [u, w), then drop u from C.
+            self.add_next(u_cell);
+            self.c.add_gp(u_cell, -1);
+            self.c.remove(u_cell);
+        } else {
+            self.c.add_gp(u_cell, -1);
+            if self.c.key(u_cell) == s.0 {
+                self.c.add_cp(u_cell, -1);
+            }
+        }
+        self.sup.remove_pos(s);
+        // Re-establish Eq. 3 along the whole list (two violation shapes
+        // are possible after a removal; Lemma 1 repairs each by one
+        // AddNext), then Eq. 4. Measured §Perf note: fusing these two
+        // passes into one was tried and reverted — the branchier fused
+        // loop ran ~10% slower than two tight passes.
+        let Some(mut v) = self.c.head() else { return };
+        let mut c_hp = 0u64;
+        while let Some(w) = self.c.next(v) {
+            let x = self.c.gp(v);
+            if self.eq3_violated(v, c_hp) {
+                self.add_next(v);
+            }
+            c_hp += x;
+            v = w;
+        }
+        self.compress();
+    }
+
+    /// Add-negative update (§4.2): one gap counter in `C`.
+    fn add_neg(&mut self, s: Score) {
+        self.sup.add_neg(s);
+        let (u_cell, _) = self.c_floor(s);
+        self.c.add_gn(u_cell, 1);
+        if self.c.key(u_cell) == s.0 {
+            self.c.add_cn(u_cell, 1);
+        }
+    }
+
+    /// Remove-negative update (§4.2).
+    fn remove_neg(&mut self, s: Score) {
+        self.sup.remove_neg(s);
+        let (u_cell, _) = self.c_floor(s);
+        self.c.add_gn(u_cell, -1);
+        if self.c.key(u_cell) == s.0 {
+            self.c.add_cn(u_cell, -1);
+        }
+    }
+
+    /// Validate the §4 invariants on `C` (tests / property harness):
+    /// coverage, ordering, Eq. 3, Eq. 4, and gap counters against brute
+    /// force. Panics on violation.
+    pub fn check_invariants(&self) {
+        self.sup.check_invariants();
+        let cells: Vec<CellId> = self.c.iter().collect();
+        assert!(cells.len() >= 2, "C lost its sentinels");
+        assert_eq!(self.c.node(cells[0]), self.sup.neg_sentinel(), "C head sentinel");
+        assert_eq!(
+            self.c.node(*cells.last().unwrap()),
+            self.sup.pos_sentinel(),
+            "C tail sentinel"
+        );
+        // Every C node is in P (sentinels included), scores ascend, and
+        // the gap counters match brute-force head-stat differences.
+        for w in cells.windows(2) {
+            let (a, b) = (w[0], w[1]);
+            let (na, nb) = (self.c.node(a), self.c.node(b));
+            assert!(self.sup.p_list().contains(na), "C node not in P");
+            let (sa, sb) = (self.sup.score(na), self.sup.score(nb));
+            assert!(sa < sb, "C not score-ascending");
+            let (hp_a, hn_a) = self.sup.head_stats(sa);
+            let (hp_b, hn_b) = self.sup.head_stats(sb);
+            assert_eq!(self.c.gp(a), hp_b - hp_a, "gp(·;C) brute mismatch");
+            assert_eq!(self.c.gn(a), hn_b - hn_a, "gn(·;C) brute mismatch");
+        }
+        assert_eq!(self.c.total_gp(), self.sup.total_pos(), "C misses positives");
+        assert_eq!(self.c.total_gn(), self.sup.total_neg(), "C misses negatives");
+        // Cell caches (key, p, n) coherent with the tree.
+        for &cell in &cells {
+            let node = self.c.node(cell);
+            assert_eq!(self.c.key(cell), self.sup.score(node).0, "C cache: stale key");
+            let cnt = self.sup.counts(node);
+            assert_eq!(self.c.cp(cell), cnt.p, "C cache: stale p");
+            assert_eq!(self.c.cn(cell), cnt.n, "C cache: stale n");
+        }
+        // Eq. 3 for all consecutive pairs; Eq. 4 for all triples.
+        let mut hp = 0u64;
+        for (i, &v) in cells.iter().enumerate() {
+            let p_v = self.sup.counts(self.c.node(v)).p;
+            let bound = self.alpha * (hp + p_v) as f64;
+            if i + 1 < cells.len() {
+                let hp_w = hp + self.c.gp(v);
+                assert!(
+                    hp_w as f64 <= bound,
+                    "Eq. 3 violated at cell {i}: hp(w)={hp_w} > {bound}"
+                );
+                if i + 2 < cells.len() {
+                    let hp_u = hp_w + self.c.gp(cells[i + 1]);
+                    assert!(
+                        hp_u as f64 > bound,
+                        "Eq. 4 violated at cell {i}: hp(u)={hp_u} ≤ {bound}"
+                    );
+                }
+            }
+            hp += self.c.gp(v);
+        }
+    }
+}
+
+impl AucEstimator for ApproxAuc {
+    fn insert(&mut self, score: f64, pos: bool) {
+        let s = Score(super::canon(score));
+        assert!(s.is_valid_entry(), "scores must be finite");
+        if pos {
+            self.add_pos(s);
+        } else {
+            self.add_neg(s);
+        }
+    }
+
+    fn remove(&mut self, score: f64, pos: bool) {
+        let s = Score(super::canon(score));
+        if pos {
+            self.remove_pos(s);
+        } else {
+            self.remove_neg(s);
+        }
+    }
+
+    /// `ApproxAUC(C)` (Algorithm 4): `O(|C|)` read of the estimate.
+    fn auc(&self) -> f64 {
+        let mut hp: u64 = 0;
+        let mut a2: u128 = 0; // doubled area accumulator
+        // Cell-local read: cached (p, n), one slab lookup per cell
+        // (§Perf) — no tree dereferences at all.
+        for cell in self.c.views() {
+            // The C node itself, exact.
+            a2 += u128::from(2 * hp + cell.p) * u128::from(cell.n);
+            hp += cell.p;
+            // The grouped gap behind it, as one pseudo-node.
+            let gp = cell.gp - cell.p;
+            let gn = cell.gn - cell.n;
+            a2 += u128::from(2 * hp + gp) * u128::from(gn);
+            hp += gp;
+        }
+        finish_auc(a2, self.sup.total_pos(), self.sup.total_neg())
+    }
+
+    fn len(&self) -> usize {
+        self.sup.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::NaiveAuc;
+    use crate::testing::{check, gen_ops, Op, Pcg};
+
+    fn run_ops(eps: f64, ops: &[Op], check_every: usize) -> (ApproxAuc, NaiveAuc) {
+        let mut approx = ApproxAuc::new(eps);
+        let mut naive = NaiveAuc::new();
+        for (i, op) in ops.iter().enumerate() {
+            match *op {
+                Op::Insert { score, pos } => {
+                    approx.insert(score, pos);
+                    naive.insert(score, pos);
+                }
+                Op::Remove { score, pos } => {
+                    approx.remove(score, pos);
+                    naive.remove(score, pos);
+                }
+            }
+            if check_every > 0 && i % check_every == 0 {
+                approx.check_invariants();
+            }
+            // Proposition 1 after every op: |ãuc − auc| ≤ ε·auc/2.
+            let truth = naive.auc();
+            let est = approx.auc();
+            let tol = eps * truth / 2.0 + 1e-12;
+            assert!(
+                (est - truth).abs() <= tol,
+                "guarantee violated at op {i}: est {est}, truth {truth}, ε {eps}"
+            );
+        }
+        (approx, naive)
+    }
+
+    #[test]
+    fn empty_and_single_class() {
+        let e = ApproxAuc::new(0.1);
+        assert_eq!(e.auc(), 0.5);
+        assert_eq!(e.compressed_len(), 2);
+        let mut e = ApproxAuc::new(0.1);
+        for i in 0..20 {
+            e.insert(f64::from(i), true);
+        }
+        assert_eq!(e.auc(), 0.5); // no negatives
+        e.check_invariants();
+        let mut e = ApproxAuc::new(0.1);
+        for i in 0..20 {
+            e.insert(f64::from(i), false);
+        }
+        assert_eq!(e.auc(), 0.5);
+        e.check_invariants();
+    }
+
+    #[test]
+    fn perfect_separation_within_guarantee() {
+        // Grouping ties trailing negatives with grouped positives, so the
+        // estimate is not exactly 1 — but must obey ε·auc/2 (here 0.25),
+        // and tighten as ε shrinks.
+        let mut prev_err = f64::INFINITY;
+        for eps in [0.5, 0.1, 0.01, 0.0] {
+            let mut e = ApproxAuc::new(eps);
+            for i in 0..50 {
+                e.insert(f64::from(i), true);
+                e.insert(f64::from(i) + 1000.0, false);
+            }
+            e.check_invariants();
+            let err = (e.auc() - 1.0).abs();
+            assert!(err <= eps / 2.0 + 1e-12, "ε={eps}: err {err}");
+            assert!(err <= prev_err + 1e-12, "error should tighten with ε");
+            prev_err = err;
+        }
+        assert_eq!(prev_err, 0.0, "ε=0 must be exact");
+    }
+
+    #[test]
+    fn epsilon_zero_matches_naive_exactly() {
+        check(0xE0, 15, |rng| {
+            let ops = gen_ops(rng, 250, 50, Some(16));
+            let (approx, naive) = run_ops(0.0, &ops, 25);
+            let (a, b) = (approx.auc(), naive.auc());
+            assert!((a - b).abs() < 1e-12, "ε=0 mismatch: {a} vs {b}");
+        });
+    }
+
+    #[test]
+    fn guarantee_holds_for_all_epsilons_unique_scores() {
+        for eps in [0.001, 0.01, 0.1, 0.5, 1.0] {
+            check((eps * 1e4) as u64, 8, |rng| {
+                let ops = gen_ops(rng, 250, 60, None);
+                run_ops(eps, &ops, 25);
+            });
+        }
+    }
+
+    #[test]
+    fn guarantee_holds_with_heavy_duplicates() {
+        for eps in [0.01, 0.1, 0.5] {
+            check(0xD0 ^ (eps * 1e3) as u64, 8, |rng| {
+                let grid = 4 + rng.below(12);
+                let ops = gen_ops(rng, 250, 60, Some(grid));
+                run_ops(eps, &ops, 20);
+            });
+        }
+    }
+
+    #[test]
+    fn fifo_window_churn_with_invariants() {
+        for eps in [0.05, 0.25] {
+            let mut approx = ApproxAuc::new(eps);
+            let mut naive = NaiveAuc::new();
+            let mut window: std::collections::VecDeque<(f64, bool)> = Default::default();
+            let mut rng = Pcg::seed(0xF1F0);
+            for i in 0..1500 {
+                // Drifting score distribution.
+                let drift = f64::from(i / 300) * 0.1;
+                let pos = rng.chance(0.4);
+                let mean = if pos { 0.35 + drift } else { 0.65 };
+                let score = (rng.normal_with(mean, 0.15)).clamp(0.0, 1.0);
+                approx.insert(score, pos);
+                naive.insert(score, pos);
+                window.push_back((score, pos));
+                if window.len() > 200 {
+                    let (s, p) = window.pop_front().unwrap();
+                    approx.remove(s, p);
+                    naive.remove(s, p);
+                }
+                if i % 100 == 0 {
+                    approx.check_invariants();
+                }
+                let truth = naive.auc();
+                let est = approx.auc();
+                assert!(
+                    (est - truth).abs() <= eps * truth / 2.0 + 1e-12,
+                    "op {i}: est {est} truth {truth}"
+                );
+            }
+            approx.check_invariants();
+        }
+    }
+
+    #[test]
+    fn compressed_list_is_logarithmic() {
+        // Proposition 2: |C| ∈ O(log k / ε). Fill a large window and
+        // check |C| stays far below the number of distinct positives.
+        let mut e = ApproxAuc::new(0.1);
+        let mut rng = Pcg::seed(0x517E);
+        let k = 20_000;
+        for _ in 0..k {
+            e.insert(rng.uniform(), rng.chance(0.5));
+        }
+        let bound = ((k as f64).log2() / 0.1) as usize;
+        assert!(
+            e.compressed_len() < bound,
+            "|C| = {} exceeds O(log k/ε) ballpark {bound}",
+            e.compressed_len()
+        );
+        // And is much smaller than the positive count.
+        assert!(e.compressed_len() < 1000);
+    }
+
+    #[test]
+    fn monotone_epsilon_shrinks_c() {
+        let mut sizes = Vec::new();
+        for eps in [0.0, 0.01, 0.1, 1.0] {
+            let mut e = ApproxAuc::new(eps);
+            let mut rng = Pcg::seed(42);
+            for _ in 0..4000 {
+                e.insert(rng.uniform(), rng.chance(0.5));
+            }
+            sizes.push(e.compressed_len());
+        }
+        assert!(
+            sizes.windows(2).all(|w| w[0] >= w[1]),
+            "|C| not monotone in ε: {sizes:?}"
+        );
+        assert!(sizes[0] > 10 * sizes[3], "compression should be drastic: {sizes:?}");
+    }
+
+    #[test]
+    fn all_same_score_stream() {
+        let mut e = ApproxAuc::new(0.1);
+        for _ in 0..100 {
+            e.insert(0.5, true);
+            e.insert(0.5, false);
+        }
+        e.check_invariants();
+        assert_eq!(e.auc(), 0.5);
+        for _ in 0..100 {
+            e.remove(0.5, true);
+            e.remove(0.5, false);
+        }
+        assert!(e.is_empty());
+        e.check_invariants();
+    }
+
+    #[test]
+    fn drain_to_empty_and_refill() {
+        let mut rng = Pcg::seed(0xABCD);
+        let mut e = ApproxAuc::new(0.2);
+        let mut live: Vec<(f64, bool)> = Vec::new();
+        for round in 0..3 {
+            for _ in 0..200 {
+                let pair = (rng.below(20) as f64, rng.chance(0.5));
+                e.insert(pair.0, pair.1);
+                live.push(pair);
+            }
+            e.check_invariants();
+            rng.shuffle(&mut live);
+            while let Some((s, p)) = live.pop() {
+                e.remove(s, p);
+            }
+            assert!(e.is_empty(), "round {round}");
+            e.check_invariants();
+            assert_eq!(e.compressed_len(), 2);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "finite")]
+    fn rejects_nan_scores() {
+        let mut e = ApproxAuc::new(0.1);
+        e.insert(f64::NAN, true);
+    }
+
+    #[test]
+    #[should_panic(expected = "non-negative")]
+    fn rejects_negative_epsilon() {
+        ApproxAuc::new(-0.5);
+    }
+}

@@ -1,0 +1,228 @@
+//! Error and latency accounting for the experiment drivers.
+//!
+//! The paper's evaluation (§6) reports the *relative* approximation error
+//! `|ãuc − auc| / auc` averaged and maximised over all sliding windows,
+//! plus per-update running time. These accumulators are shared by the
+//! Figure 1–3 drivers and the examples.
+
+use std::time::Duration;
+
+/// Streaming summary of a scalar series: count / mean / max / min.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Summary {
+    count: u64,
+    sum: f64,
+    max: f64,
+    min: f64,
+}
+
+impl Summary {
+    /// Empty summary.
+    pub fn new() -> Self {
+        Summary { count: 0, sum: 0.0, max: f64::NEG_INFINITY, min: f64::INFINITY }
+    }
+
+    /// Fold one observation.
+    pub fn push(&mut self, x: f64) {
+        self.count += 1;
+        self.sum += x;
+        self.max = self.max.max(x);
+        self.min = self.min.min(x);
+    }
+
+    /// Number of observations.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Arithmetic mean (0 when empty).
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    /// Maximum (0 when empty).
+    pub fn max(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.max
+        }
+    }
+
+    /// Minimum (0 when empty).
+    pub fn min(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.min
+        }
+    }
+}
+
+/// Relative-error tracker: feeds Figure 1 (average and maximum relative
+/// error over all sliding windows).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RelErr {
+    summary: Summary,
+    skipped: u64,
+}
+
+impl RelErr {
+    /// Empty tracker.
+    pub fn new() -> Self {
+        RelErr { summary: Summary::new(), skipped: 0 }
+    }
+
+    /// Record one window: the estimate against the exact value. Windows
+    /// with `auc = 0` are skipped (relative error undefined), counted in
+    /// [`RelErr::skipped`].
+    pub fn record(&mut self, estimate: f64, exact: f64) {
+        if exact == 0.0 {
+            self.skipped += 1;
+            return;
+        }
+        self.summary.push((estimate - exact).abs() / exact);
+    }
+
+    /// Average relative error over recorded windows.
+    pub fn avg(&self) -> f64 {
+        self.summary.mean()
+    }
+
+    /// Maximum relative error over recorded windows.
+    pub fn max(&self) -> f64 {
+        self.summary.max()
+    }
+
+    /// Number of recorded windows.
+    pub fn count(&self) -> u64 {
+        self.summary.count()
+    }
+
+    /// Windows skipped because the exact AUC was zero.
+    pub fn skipped(&self) -> u64 {
+        self.skipped
+    }
+}
+
+/// Latency tracker with mean and high percentiles, for per-update cost.
+///
+/// Keeps raw nanosecond samples (the experiment streams are bounded, and
+/// exact percentiles beat a histogram's bucketing error at this scale).
+#[derive(Clone, Debug, Default)]
+pub struct Latency {
+    nanos: Vec<u64>,
+}
+
+impl Latency {
+    /// Empty tracker.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Pre-sized tracker.
+    pub fn with_capacity(n: usize) -> Self {
+        Latency { nanos: Vec::with_capacity(n) }
+    }
+
+    /// Record one duration.
+    pub fn push(&mut self, d: Duration) {
+        self.nanos.push(d.as_nanos() as u64);
+    }
+
+    /// Number of samples.
+    pub fn count(&self) -> usize {
+        self.nanos.len()
+    }
+
+    /// Total recorded time.
+    pub fn total(&self) -> Duration {
+        Duration::from_nanos(self.nanos.iter().sum())
+    }
+
+    /// Mean per-sample time.
+    pub fn mean(&self) -> Duration {
+        if self.nanos.is_empty() {
+            return Duration::ZERO;
+        }
+        Duration::from_nanos(self.nanos.iter().sum::<u64>() / self.nanos.len() as u64)
+    }
+
+    /// Exact percentile (`q ∈ [0, 1]`) by nearest-rank.
+    pub fn percentile(&self, q: f64) -> Duration {
+        if self.nanos.is_empty() {
+            return Duration::ZERO;
+        }
+        let mut sorted = self.nanos.clone();
+        sorted.sort_unstable();
+        let rank = ((q * sorted.len() as f64).ceil() as usize).clamp(1, sorted.len());
+        Duration::from_nanos(sorted[rank - 1])
+    }
+
+    /// Median.
+    pub fn median(&self) -> Duration {
+        self.percentile(0.5)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_moments() {
+        let mut s = Summary::new();
+        for x in [1.0, 2.0, 3.0, 10.0] {
+            s.push(x);
+        }
+        assert_eq!(s.count(), 4);
+        assert_eq!(s.mean(), 4.0);
+        assert_eq!(s.max(), 10.0);
+        assert_eq!(s.min(), 1.0);
+    }
+
+    #[test]
+    fn empty_summary_is_zero() {
+        let s = Summary::new();
+        assert_eq!(s.mean(), 0.0);
+        assert_eq!(s.max(), 0.0);
+        assert_eq!(s.min(), 0.0);
+    }
+
+    #[test]
+    fn rel_err_tracks_avg_and_max() {
+        let mut r = RelErr::new();
+        r.record(0.99, 1.0); // 1%
+        r.record(0.90, 1.0); // 10%
+        r.record(0.5, 0.0); // skipped
+        assert_eq!(r.count(), 2);
+        assert_eq!(r.skipped(), 1);
+        assert!((r.avg() - 0.055).abs() < 1e-12);
+        assert!((r.max() - 0.10).abs() < 1e-12);
+    }
+
+    #[test]
+    fn latency_percentiles() {
+        let mut l = Latency::new();
+        for i in 1..=100u64 {
+            l.push(Duration::from_nanos(i));
+        }
+        assert_eq!(l.median(), Duration::from_nanos(50));
+        assert_eq!(l.percentile(0.95), Duration::from_nanos(95));
+        assert_eq!(l.percentile(1.0), Duration::from_nanos(100));
+        assert_eq!(l.mean(), Duration::from_nanos(50));
+        assert_eq!(l.count(), 100);
+    }
+
+    #[test]
+    fn empty_latency_is_zero() {
+        let l = Latency::new();
+        assert_eq!(l.median(), Duration::ZERO);
+        assert_eq!(l.mean(), Duration::ZERO);
+        assert_eq!(l.total(), Duration::ZERO);
+    }
+}

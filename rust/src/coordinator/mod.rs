@@ -1,0 +1,139 @@
+//! Estimators and sliding-window coordination (paper §4).
+//!
+//! * [`support`] — the §3 supporting structure: score tree `T`, positive
+//!   index `TP`, positive weighted list `P`, `HeadStats`, `MaxPos`, and
+//!   the four tree update procedures.
+//! * [`approx`] — the paper's contribution: the `(1+ε)`-compressed list
+//!   `C` and `ApproxAUC` with the `ε/2` relative-error guarantee.
+//! * [`exact`] — the Brzezinski & Stefanowski-style baseline: same
+//!   balanced tree, exact `O(k)` recomputation per query.
+//! * [`naive`] — sort-based from-scratch oracle used by tests.
+//! * [`flipped`] — §4.1 remark: label-flipped estimator with a
+//!   `(1−auc)·ε/2` guarantee, preferable when AUC ≈ 1.
+//! * [`scratch`] — §7 extension: weighted data points, `(1+ε)`-list
+//!   construction from scratch via threshold queries.
+//! * [`decay`] — §5 future-work line: AUC under exponential decay,
+//!   built on the weighted machinery via weight-scale invariance.
+//! * [`window`] — FIFO sliding-window driver over any estimator.
+//! * [`monitor`] — drift monitor raising alarms on AUC degradation (the
+//!   intro's motivating application).
+//! * [`metrics`] — error/latency accounting shared by the experiment
+//!   drivers.
+
+pub mod approx;
+pub mod decay;
+pub mod exact;
+pub mod flipped;
+pub mod metrics;
+pub mod monitor;
+pub mod naive;
+pub mod scratch;
+pub mod support;
+pub mod window;
+
+pub use approx::ApproxAuc;
+pub use decay::DecayedAuc;
+pub use exact::ExactAuc;
+pub use flipped::FlippedAuc;
+pub use monitor::{AucMonitor, MonitorEvent};
+pub use naive::NaiveAuc;
+pub use scratch::WeightedAuc;
+pub use window::SlidingAuc;
+
+/// A sliding-window AUC estimator: multiset of `(score, label)` pairs
+/// under insertion and removal, queried for the area under the ROC curve.
+///
+/// Score convention follows the paper (§2 footnote): *larger scores mean
+/// the negative label (0) is more likely*; AUC is the probability that a
+/// uniformly random positive/negative pair is ordered correctly under
+/// this convention, with ties counting one half.
+pub trait AucEstimator {
+    /// Insert one `(score, label)` pair. `pos` is the true label
+    /// (`ℓ = 1`).
+    fn insert(&mut self, score: f64, pos: bool);
+
+    /// Remove one previously inserted pair.
+    fn remove(&mut self, score: f64, pos: bool);
+
+    /// Current AUC. Returns 0.5 when one of the classes is empty (AUC is
+    /// undefined there; 0.5 = “no discriminative information”, the same
+    /// convention across all estimators in this crate).
+    fn auc(&self) -> f64;
+
+    /// Number of pairs currently held.
+    fn len(&self) -> usize;
+
+    /// True when no pairs are held.
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Canonicalize a score at the estimator boundary: maps `−0.0` to
+/// `+0.0` so the tree order (`total_cmp`, which distinguishes the two
+/// zeros) and the cached-`f64` comparisons on the hot path agree.
+#[inline]
+pub(crate) fn canon(score: f64) -> f64 {
+    score + 0.0
+}
+
+/// Exact AUC from label-count pairs `(p, n)` listed in ascending score
+/// order, one entry per distinct score (Eq. 1). Doubled-integer
+/// arithmetic: returns `(2·Σ (hp + p/2)·n, pos_total, neg_total)`.
+pub(crate) fn auc_terms_doubled(groups: impl Iterator<Item = (u64, u64)>) -> (u128, u64, u64) {
+    let mut hp: u64 = 0;
+    let mut a2: u128 = 0;
+    let mut neg: u64 = 0;
+    for (p, n) in groups {
+        a2 += u128::from(2 * hp + p) * u128::from(n);
+        hp += p;
+        neg += n;
+    }
+    (a2, hp, neg)
+}
+
+/// Turn doubled AUC terms into the final ratio with the empty-class
+/// convention.
+pub(crate) fn finish_auc(a2: u128, pos: u64, neg: u64) -> f64 {
+    let area = u128::from(pos) * u128::from(neg);
+    if area == 0 {
+        return 0.5;
+    }
+    (a2 as f64) / (2.0 * area as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn auc_terms_perfect_separation() {
+        // positives at low scores, negatives at high scores → AUC = 1
+        // (paper convention: larger score ⇒ more negative).
+        let groups = [(2u64, 0u64), (3, 0), (0, 4)];
+        let (a2, p, n) = auc_terms_doubled(groups.into_iter());
+        assert_eq!((p, n), (5, 4));
+        assert_eq!(finish_auc(a2, p, n), 1.0);
+    }
+
+    #[test]
+    fn auc_terms_reversed() {
+        let groups = [(0u64, 4u64), (5, 0)];
+        let (a2, p, n) = auc_terms_doubled(groups.into_iter());
+        assert_eq!(finish_auc(a2, p, n), 0.0);
+    }
+
+    #[test]
+    fn auc_terms_all_tied_is_half() {
+        let groups = [(3u64, 7u64)];
+        let (a2, p, n) = auc_terms_doubled(groups.into_iter());
+        assert_eq!(finish_auc(a2, p, n), 0.5);
+    }
+
+    #[test]
+    fn empty_class_convention() {
+        assert_eq!(finish_auc(0, 0, 5), 0.5);
+        assert_eq!(finish_auc(0, 5, 0), 0.5);
+        assert_eq!(finish_auc(0, 0, 0), 0.5);
+    }
+}

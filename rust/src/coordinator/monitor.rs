@@ -1,0 +1,181 @@
+//! AUC drift monitor — the paper's motivating application (§1).
+//!
+//! “It is vital to monitor such a system continuously to notice
+//! breakdowns early. Possible causes may be changes in the underlying
+//! distribution or a system failure.” The monitor watches the windowed
+//! AUC estimate, smooths it with an EWMA baseline, and raises an alarm
+//! when the estimate degrades below the baseline by a configurable
+//! margin for a sustained number of updates (debouncing transient dips).
+//!
+//! Because the estimate carries the `ε/2` relative guarantee, a margin
+//! `δ` on the estimate corresponds to a true degradation of at least
+//! `δ − ε/2` — the monitor's sensitivity floor is explicit.
+
+/// Monitor outcome for one observation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MonitorEvent {
+    /// Baseline still warming up (fewer than `warmup` observations).
+    Warmup,
+    /// AUC within margin of the baseline.
+    Ok,
+    /// Below margin, but not yet for `patience` consecutive updates.
+    Degrading,
+    /// Alarm: sustained degradation. Fires once per excursion.
+    Alarm,
+}
+
+/// EWMA-based drift monitor over an AUC series.
+#[derive(Clone, Debug)]
+pub struct AucMonitor {
+    /// EWMA decay factor for the baseline (weight of the new sample).
+    lambda: f64,
+    /// Absolute AUC margin below baseline that counts as degradation.
+    margin: f64,
+    /// Consecutive degraded updates before the alarm fires.
+    patience: u32,
+    /// Observations before the baseline is trusted.
+    warmup: u32,
+    baseline: f64,
+    seen: u32,
+    below: u32,
+    alarmed: bool,
+}
+
+impl AucMonitor {
+    /// New monitor.
+    ///
+    /// Choosing `lambda`: a sliding window of length `k` turns an abrupt
+    /// drift into a ramp of ≈ `Δ/k` per update. The EWMA tracks a ramp
+    /// with steady-state lag `(Δ/k)/lambda`; degradation is only
+    /// detected when that lag exceeds `margin`, so pick
+    /// `lambda < Δ_min / (k · margin)` — i.e. a baseline time-constant
+    /// much longer than the window. For `k = 500`, `margin = 0.08` and a
+    /// minimum interesting drop of `0.2`, `lambda ≲ 0.005`; the tests
+    /// use `0.001`.
+    pub fn new(lambda: f64, margin: f64, patience: u32, warmup: u32) -> Self {
+        assert!(lambda > 0.0 && lambda <= 1.0, "lambda in (0, 1]");
+        assert!(margin >= 0.0, "margin must be non-negative");
+        AucMonitor {
+            lambda,
+            margin,
+            patience,
+            warmup,
+            baseline: 0.0,
+            seen: 0,
+            below: 0,
+            alarmed: false,
+        }
+    }
+
+    /// Current EWMA baseline.
+    pub fn baseline(&self) -> f64 {
+        self.baseline
+    }
+
+    /// Feed one AUC observation; returns the monitor state transition.
+    pub fn observe(&mut self, auc: f64) -> MonitorEvent {
+        self.seen += 1;
+        if self.seen == 1 {
+            self.baseline = auc;
+            return MonitorEvent::Warmup;
+        }
+        let degraded = auc < self.baseline - self.margin;
+        if self.seen <= self.warmup {
+            self.baseline += self.lambda * (auc - self.baseline);
+            return MonitorEvent::Warmup;
+        }
+        if degraded {
+            // Freeze the baseline while degraded so the alarm threshold
+            // does not chase the failure downward.
+            self.below += 1;
+            if self.below >= self.patience {
+                if !self.alarmed {
+                    self.alarmed = true;
+                    return MonitorEvent::Alarm;
+                }
+                return MonitorEvent::Degrading;
+            }
+            MonitorEvent::Degrading
+        } else {
+            self.baseline += self.lambda * (auc - self.baseline);
+            self.below = 0;
+            self.alarmed = false;
+            MonitorEvent::Ok
+        }
+    }
+
+    /// True while inside an alarmed excursion.
+    pub fn is_alarmed(&self) -> bool {
+        self.alarmed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn feed(m: &mut AucMonitor, auc: f64, n: u32) -> Vec<MonitorEvent> {
+        (0..n).map(|_| m.observe(auc)).collect()
+    }
+
+    #[test]
+    fn stable_stream_never_alarms() {
+        let mut m = AucMonitor::new(0.05, 0.05, 10, 20);
+        let events = feed(&mut m, 0.9, 200);
+        assert!(!events.contains(&MonitorEvent::Alarm));
+        assert!((m.baseline() - 0.9).abs() < 1e-9);
+    }
+
+    #[test]
+    fn abrupt_drop_alarms_after_patience() {
+        let mut m = AucMonitor::new(0.05, 0.05, 10, 20);
+        feed(&mut m, 0.9, 100);
+        let events = feed(&mut m, 0.6, 30);
+        let alarm_at = events.iter().position(|e| *e == MonitorEvent::Alarm);
+        assert_eq!(alarm_at, Some(9), "alarm after exactly `patience` updates");
+        assert!(m.is_alarmed());
+        // Alarm fires once, then stays in Degrading.
+        assert_eq!(events.iter().filter(|e| **e == MonitorEvent::Alarm).count(), 1);
+    }
+
+    #[test]
+    fn transient_dip_is_debounced() {
+        let mut m = AucMonitor::new(0.05, 0.05, 10, 20);
+        feed(&mut m, 0.9, 100);
+        let events = feed(&mut m, 0.6, 5); // shorter than patience
+        assert!(events.iter().all(|e| *e == MonitorEvent::Degrading));
+        let events = feed(&mut m, 0.9, 20);
+        assert!(events.iter().all(|e| *e == MonitorEvent::Ok));
+        assert!(!m.is_alarmed());
+    }
+
+    #[test]
+    fn recovery_rearms_the_monitor() {
+        let mut m = AucMonitor::new(0.05, 0.05, 5, 10);
+        feed(&mut m, 0.9, 50);
+        let first = feed(&mut m, 0.5, 10);
+        assert!(first.contains(&MonitorEvent::Alarm));
+        feed(&mut m, 0.9, 50); // recover
+        assert!(!m.is_alarmed());
+        let second = feed(&mut m, 0.5, 10);
+        assert!(second.contains(&MonitorEvent::Alarm), "second excursion re-alarms");
+    }
+
+    #[test]
+    fn baseline_frozen_while_degraded() {
+        let mut m = AucMonitor::new(0.5, 0.05, 1000, 5);
+        feed(&mut m, 0.9, 50);
+        let before = m.baseline();
+        feed(&mut m, 0.4, 100); // long degradation, patience never reached
+        assert_eq!(m.baseline(), before, "baseline must not chase a failure");
+    }
+
+    #[test]
+    fn warmup_counts() {
+        let mut m = AucMonitor::new(0.1, 0.05, 5, 10);
+        let events = feed(&mut m, 0.8, 10);
+        assert!(events.iter().all(|e| *e == MonitorEvent::Warmup));
+        let ev = m.observe(0.8);
+        assert_eq!(ev, MonitorEvent::Ok);
+    }
+}

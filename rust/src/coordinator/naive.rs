@@ -1,0 +1,147 @@
+//! Sort-based from-scratch AUC oracle.
+//!
+//! The simplest correct implementation of Eq. 1: keep the raw multiset,
+//! sort on every query, group duplicate scores and sum. `O(k log k)` per
+//! query — used as ground truth in tests and as the “recompute from
+//! scratch” point of comparison in the related-work discussion (§5).
+
+use super::{auc_terms_doubled, finish_auc, AucEstimator};
+
+/// From-scratch AUC oracle over a raw multiset of pairs.
+#[derive(Clone, Debug, Default)]
+pub struct NaiveAuc {
+    entries: Vec<(f64, bool)>,
+}
+
+impl NaiveAuc {
+    /// Empty oracle.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Compute AUC of an arbitrary slice without building an estimator.
+    pub fn of(pairs: &[(f64, bool)]) -> f64 {
+        let mut sorted: Vec<(f64, bool)> = pairs.to_vec();
+        sorted.sort_by(|a, b| a.0.total_cmp(&b.0));
+        let mut groups: Vec<(u64, u64)> = Vec::new();
+        let mut i = 0;
+        while i < sorted.len() {
+            let score = sorted[i].0;
+            let mut p = 0;
+            let mut n = 0;
+            while i < sorted.len() && sorted[i].0 == score {
+                if sorted[i].1 {
+                    p += 1;
+                } else {
+                    n += 1;
+                }
+                i += 1;
+            }
+            groups.push((p, n));
+        }
+        let (a2, pos, neg) = auc_terms_doubled(groups.into_iter());
+        finish_auc(a2, pos, neg)
+    }
+}
+
+impl AucEstimator for NaiveAuc {
+    fn insert(&mut self, score: f64, pos: bool) {
+        self.entries.push((score, pos));
+    }
+
+    fn remove(&mut self, score: f64, pos: bool) {
+        let i = self
+            .entries
+            .iter()
+            .position(|&(s, p)| s == score && p == pos)
+            .expect("naive remove: pair not present");
+        self.entries.swap_remove(i);
+    }
+
+    fn auc(&self) -> f64 {
+        NaiveAuc::of(&self.entries)
+    }
+
+    fn len(&self) -> usize {
+        self.entries.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_values() {
+        // Convention: larger score ⇒ more negative, so positives-low is 1.
+        assert_eq!(NaiveAuc::of(&[(0.1, true), (0.9, false)]), 1.0);
+        assert_eq!(NaiveAuc::of(&[(0.9, true), (0.1, false)]), 0.0);
+        assert_eq!(NaiveAuc::of(&[(0.5, true), (0.5, false)]), 0.5);
+        assert_eq!(
+            NaiveAuc::of(&[(0.1, true), (0.5, true), (0.3, false), (0.5, false)]),
+            2.5 / 4.0
+        );
+    }
+
+    #[test]
+    fn empty_class_is_half() {
+        assert_eq!(NaiveAuc::of(&[]), 0.5);
+        assert_eq!(NaiveAuc::of(&[(0.3, true)]), 0.5);
+        assert_eq!(NaiveAuc::of(&[(0.3, false)]), 0.5);
+    }
+
+    #[test]
+    fn estimator_interface_roundtrip() {
+        let mut e = NaiveAuc::new();
+        e.insert(0.1, true);
+        e.insert(0.9, false);
+        e.insert(0.5, false);
+        assert_eq!(e.len(), 3);
+        assert_eq!(e.auc(), 1.0);
+        e.remove(0.5, false);
+        assert_eq!(e.auc(), 1.0);
+        e.remove(0.1, true);
+        assert_eq!(e.auc(), 0.5);
+    }
+
+    #[test]
+    #[should_panic(expected = "not present")]
+    fn remove_missing_panics() {
+        let mut e = NaiveAuc::new();
+        e.insert(0.1, true);
+        e.remove(0.1, false);
+    }
+
+    /// AUC equals the pair-counting probability definition.
+    #[test]
+    fn matches_pair_counting() {
+        use crate::testing::Pcg;
+        let mut rng = Pcg::seed(11);
+        for _ in 0..50 {
+            let k = 2 + rng.below(40) as usize;
+            let pairs: Vec<(f64, bool)> = (0..k)
+                .map(|_| (rng.below(10) as f64 / 10.0, rng.chance(0.5)))
+                .collect();
+            let pos: Vec<f64> = pairs.iter().filter(|e| e.1).map(|e| e.0).collect();
+            let neg: Vec<f64> = pairs.iter().filter(|e| !e.1).map(|e| e.0).collect();
+            if pos.is_empty() || neg.is_empty() {
+                continue;
+            }
+            let mut num = 0.0;
+            for &sp in &pos {
+                for &sn in &neg {
+                    // Correct ordering under the paper's convention: the
+                    // positive scores lower than the negative.
+                    if sp < sn {
+                        num += 1.0;
+                    } else if sp == sn {
+                        num += 0.5;
+                    }
+                }
+            }
+            let want = num / (pos.len() * neg.len()) as f64;
+            let got = NaiveAuc::of(&pairs);
+            assert!((got - want).abs() < 1e-12, "got {got}, want {want}");
+        }
+    }
+}

@@ -1,0 +1,361 @@
+//! Weighted data points: from-scratch `(1+ε)`-list construction (§7).
+//!
+//! The incremental machinery of §4 relies on updates changing counters by
+//! exactly 1 (Lemma 1). With *weighted* points that fails, so the paper
+//! sketches the alternative implemented here: keep the augmented tree,
+//! and at query time build a `(1+ε)`-grouped list from scratch using a
+//! new query — *the node `v` with the largest `hp(v) ≤ σ`* — issued with
+//! exponentially increasing thresholds. Each query is `O(log k)` (same
+//! descent trick as `HeadStats`), the list has `O(log_{1+ε} W)` nodes,
+//! giving `O((log² k)/ε)` per AUC evaluation for integer-ish weights.
+//!
+//! Greedy construction: from the current node `u`, the next threshold is
+//! `σ = α·(hp(u) + p(u))`; take the rightmost node with `hp ≤ σ`, or, if
+//! that does not advance (the very next node already overshoots), take
+//! the immediate successor — mirroring how Eq. 4 lets *pairs* of groups
+//! overshoot. Every selected pair then satisfies Eq. 3, so the
+//! Proposition 1 argument applies verbatim and the estimate is within
+//! `ε·auc/2`.
+
+use crate::collections::{Augment, NodeId, RbTree, Score};
+
+/// Weighted per-score label mass.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct WCounts {
+    /// Total positive weight at this score.
+    pub wp: f64,
+    /// Total negative weight at this score.
+    pub wn: f64,
+}
+
+/// Weighted subtree sums.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct WAcc {
+    /// Subtree positive weight.
+    pub pos: f64,
+    /// Subtree negative weight.
+    pub neg: f64,
+}
+
+impl Augment<WCounts> for WAcc {
+    #[inline]
+    fn recompute(val: &WCounts, left: Option<&Self>, right: Option<&Self>) -> Self {
+        WAcc {
+            pos: val.wp + left.map_or(0.0, |a| a.pos) + right.map_or(0.0, |a| a.pos),
+            neg: val.wn + left.map_or(0.0, |a| a.neg) + right.map_or(0.0, |a| a.neg),
+        }
+    }
+}
+
+/// Weighted-point AUC with from-scratch `(1+ε)`-grouped estimation (§7).
+#[derive(Clone, Debug, Default)]
+pub struct WeightedAuc {
+    t: RbTree<WCounts, WAcc>,
+    total_wp: f64,
+    total_wn: f64,
+    points: usize,
+}
+
+impl WeightedAuc {
+    /// Empty structure.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Number of insert-minus-remove operations currently live.
+    pub fn len(&self) -> usize {
+        self.points
+    }
+
+    /// True when nothing is held.
+    pub fn is_empty(&self) -> bool {
+        self.points == 0
+    }
+
+    /// Total positive / negative weight.
+    pub fn totals(&self) -> (f64, f64) {
+        (self.total_wp, self.total_wn)
+    }
+
+    /// Insert a point with label `pos` and weight `w > 0`. `O(log k)`.
+    pub fn insert(&mut self, score: f64, pos: bool, w: f64) {
+        assert!(w > 0.0 && w.is_finite(), "weight must be positive and finite");
+        let s = Score(score);
+        assert!(s.is_valid_entry(), "scores must be finite");
+        let init = if pos { WCounts { wp: w, wn: 0.0 } } else { WCounts { wp: 0.0, wn: w } };
+        let (v, fresh) = self.t.insert(s, || init);
+        if !fresh {
+            self.t.with_val_mut(v, |c| if pos { c.wp += w } else { c.wn += w });
+        }
+        if pos {
+            self.total_wp += w;
+        } else {
+            self.total_wn += w;
+        }
+        self.points += 1;
+    }
+
+    /// Remove weight `w` previously inserted at `(score, pos)`. `O(log k)`.
+    pub fn remove(&mut self, score: f64, pos: bool, w: f64) {
+        let v = self.t.find(Score(score)).expect("weighted remove: score not present");
+        self.t.with_val_mut(v, |c| {
+            let slot = if pos { &mut c.wp } else { &mut c.wn };
+            assert!(*slot >= w - 1e-9, "weighted remove: more weight than present");
+            *slot = (*slot - w).max(0.0);
+        });
+        let c = *self.t.val(v);
+        if c.wp <= 0.0 && c.wn <= 0.0 {
+            self.t.remove(v);
+        }
+        if pos {
+            self.total_wp = (self.total_wp - w).max(0.0);
+        } else {
+            self.total_wn = (self.total_wn - w).max(0.0);
+        }
+        self.points -= 1;
+    }
+
+    /// Exact weighted AUC by full enumeration (Eq. 1 with weights),
+    /// `O(k)`.
+    pub fn exact_auc(&self) -> f64 {
+        let area = self.total_wp * self.total_wn;
+        if area <= 0.0 {
+            return 0.5;
+        }
+        let mut hp = 0.0;
+        let mut a = 0.0;
+        for id in self.t.iter() {
+            let c = self.t.val(id);
+            a += (hp + 0.5 * c.wp) * c.wn;
+            hp += c.wp;
+        }
+        a / area
+    }
+
+    /// §7 query: the node with the largest `hp(v) ≤ σ` (rightmost), via
+    /// an `accpos`-guided descent. `O(log k)`.
+    fn floor_by_hp(&self, sigma: f64) -> Option<NodeId> {
+        let mut cur = self.t.root();
+        let mut run = 0.0; // positive weight strictly left of the subtree
+        let mut best = None;
+        while let Some(v) = cur {
+            let left_pos = self.t.left(v).map_or(0.0, |l| self.t.aug(l).pos);
+            let hp_v = run + left_pos;
+            if hp_v <= sigma {
+                best = Some(v);
+                run = hp_v + self.t.val(v).wp;
+                cur = self.t.right(v);
+            } else {
+                cur = self.t.left(v);
+            }
+        }
+        best
+    }
+
+    /// `hp`/`hn` below a node (weighted `HeadStats`). `O(log k)`.
+    fn head_stats(&self, s: Score) -> (f64, f64) {
+        let mut hp = 0.0;
+        let mut hn = 0.0;
+        let mut cur = self.t.root();
+        while let Some(v) = cur {
+            if self.t.key(v) < s {
+                let c = self.t.val(v);
+                hp += c.wp;
+                hn += c.wn;
+                if let Some(l) = self.t.left(v) {
+                    let a = self.t.aug(l);
+                    hp += a.pos;
+                    hn += a.neg;
+                }
+                cur = self.t.right(v);
+            } else {
+                cur = self.t.left(v);
+            }
+        }
+        (hp, hn)
+    }
+
+    /// Build the from-scratch `(1+ε)` node selection. Returns the chosen
+    /// nodes in score order. `O((log k)·m)` where `m` is the list length.
+    fn build_selection(&self, epsilon: f64) -> Vec<NodeId> {
+        let alpha = 1.0 + epsilon;
+        let mut sel = Vec::new();
+        let Some(first) = self.t.first() else { return sel };
+        sel.push(first);
+        let mut u = first;
+        let (mut hp_u, _) = (0.0, 0.0);
+        loop {
+            let pu = self.t.val(u).wp;
+            // Smallest meaningful threshold: must at least admit hp(u)+p(u)
+            // (the successor's lower bound); α-scale it per Eq. 3.
+            let sigma = alpha * (hp_u + pu).max(f64::MIN_POSITIVE);
+            let cand = self.floor_by_hp(sigma).unwrap_or(u);
+            let next = if self.t.key(cand) > self.t.key(u) {
+                cand
+            } else {
+                match self.t.successor(u) {
+                    Some(nxt) => nxt,
+                    None => break,
+                }
+            };
+            sel.push(next);
+            let (hp_next, _) = self.head_stats(self.t.key(next));
+            hp_u = hp_next;
+            u = next;
+        }
+        sel
+    }
+
+    /// Approximate weighted AUC within `ε·auc/2`, rebuilding the grouped
+    /// list from scratch (§7). `O((log² k)/ε)` for weights bounded below.
+    pub fn approx_auc(&self, epsilon: f64) -> f64 {
+        assert!(epsilon >= 0.0, "epsilon must be non-negative");
+        let area = self.total_wp * self.total_wn;
+        if area <= 0.0 {
+            return 0.5;
+        }
+        let sel = self.build_selection(epsilon);
+        let mut a = 0.0;
+        let mut hp = 0.0;
+        for (i, &v) in sel.iter().enumerate() {
+            let c = self.t.val(v);
+            // Exact node term.
+            a += (hp + 0.5 * c.wp) * c.wn;
+            hp += c.wp;
+            // Grouped gap to the next selected node.
+            if let Some(&w) = sel.get(i + 1) {
+                let (hp_v, hn_v) = self.head_stats(self.t.key(v));
+                let (hp_w, hn_w) = self.head_stats(self.t.key(w));
+                let gp = hp_w - hp_v - c.wp;
+                let gn = hn_w - hn_v - c.wn;
+                a += (hp + 0.5 * gp) * gn;
+                hp += gp;
+            }
+        }
+        a / area
+    }
+
+    /// Length of the from-scratch selection for a given `ε` (reported by
+    /// the extension bench).
+    pub fn selection_len(&self, epsilon: f64) -> usize {
+        self.build_selection(epsilon).len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::NaiveAuc;
+    use crate::testing::{check, Pcg};
+
+    #[test]
+    fn unit_weights_match_naive() {
+        check(0x57C, 15, |rng| {
+            let mut w = WeightedAuc::new();
+            let mut naive = NaiveAuc::new();
+            use crate::coordinator::AucEstimator;
+            for _ in 0..150 {
+                let s = rng.below(40) as f64 / 40.0;
+                let pos = rng.chance(0.5);
+                w.insert(s, pos, 1.0);
+                naive.insert(s, pos);
+            }
+            let (a, b) = (w.exact_auc(), naive.auc());
+            assert!((a - b).abs() < 1e-9, "weighted-exact {a} vs naive {b}");
+        });
+    }
+
+    #[test]
+    fn approx_guarantee_weighted() {
+        for eps in [0.01, 0.1, 0.5] {
+            check(0x3E1 ^ (eps * 100.0) as u64, 10, |rng| {
+                let mut w = WeightedAuc::new();
+                for _ in 0..300 {
+                    let pos = rng.chance(0.4);
+                    let s = if pos { rng.normal_with(0.4, 0.2) } else { rng.normal_with(0.6, 0.2) };
+                    let weight = 0.5 + rng.uniform() * 4.0;
+                    w.insert(s, pos, weight);
+                }
+                let truth = w.exact_auc();
+                let est = w.approx_auc(eps);
+                let tol = eps * truth / 2.0 + 1e-9;
+                assert!(
+                    (est - truth).abs() <= tol,
+                    "ε={eps}: est {est}, truth {truth}, tol {tol}"
+                );
+            });
+        }
+    }
+
+    #[test]
+    fn epsilon_zero_is_exact() {
+        let mut rng = Pcg::seed(0xE0E0);
+        let mut w = WeightedAuc::new();
+        for _ in 0..200 {
+            w.insert(rng.uniform(), rng.chance(0.5), 1.0 + rng.uniform());
+        }
+        assert!((w.approx_auc(0.0) - w.exact_auc()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn selection_shrinks_with_epsilon() {
+        let mut rng = Pcg::seed(0x5E1);
+        let mut w = WeightedAuc::new();
+        for _ in 0..5000 {
+            w.insert(rng.uniform(), rng.chance(0.5), 1.0);
+        }
+        let small = w.selection_len(1.0);
+        let large = w.selection_len(0.01);
+        assert!(small < large, "selection must shrink: {small} vs {large}");
+        assert!(small < 100, "ε=1 selection should be tiny, got {small}");
+    }
+
+    #[test]
+    fn remove_weight_roundtrip() {
+        let mut w = WeightedAuc::new();
+        w.insert(0.3, true, 2.0);
+        w.insert(0.7, false, 3.0);
+        assert_eq!(w.exact_auc(), 1.0);
+        w.remove(0.3, true, 2.0);
+        assert_eq!(w.exact_auc(), 0.5);
+        w.remove(0.7, false, 3.0);
+        assert!(w.is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "positive and finite")]
+    fn zero_weight_rejected() {
+        WeightedAuc::new().insert(0.5, true, 0.0);
+    }
+
+    #[test]
+    fn floor_by_hp_brute_force() {
+        check(0xF100, 10, |rng| {
+            let mut w = WeightedAuc::new();
+            let mut pts: Vec<(f64, bool, f64)> = Vec::new();
+            for _ in 0..80 {
+                let s = rng.below(30) as f64 / 30.0;
+                let pos = rng.chance(0.5);
+                let weight = 1.0 + rng.below(5) as f64;
+                w.insert(s, pos, weight);
+                pts.push((s, pos, weight));
+            }
+            for _ in 0..20 {
+                let sigma = rng.uniform() * w.totals().0 * 1.2;
+                let got = w.floor_by_hp(sigma).map(|v| w.t.key(v).0);
+                // Brute force: rightmost distinct score whose hp ≤ σ.
+                let mut scores: Vec<f64> = pts.iter().map(|p| p.0).collect();
+                scores.sort_by(f64::total_cmp);
+                scores.dedup();
+                let mut want = None;
+                for &sc in &scores {
+                    let hp: f64 = pts.iter().filter(|p| p.1 && p.0 < sc).map(|p| p.2).sum();
+                    if hp <= sigma {
+                        want = Some(sc);
+                    }
+                }
+                assert_eq!(got, want, "σ={sigma}");
+            }
+        });
+    }
+}

@@ -1,0 +1,655 @@
+//! Supporting data structures for estimating AUC (paper §3).
+//!
+//! [`SupportTree`] bundles the three §3 structures and their maintenance:
+//!
+//! * `T` — augmented red-black tree over distinct scores with per-node
+//!   counters `p(v)`, `n(v)` and subtree sums `accpos(v)`, `accneg(v)`;
+//! * `TP` — red-black tree over *positive* nodes, answering `MaxPos(s)`
+//!   (largest positive node with score `≤ s`) in `O(log k)`;
+//! * `P` — weighted linked list of all positive nodes with gap counters,
+//!   giving `AddNext` its `O(1)` access to `gp(v; P)`, `gn(v; P)`.
+//!
+//! Both `T` and the lists carry the `±∞` sentinel nodes of §3.1, so every
+//! query has a well-defined predecessor.
+//!
+//! Two places fix small gaps in the paper's pseudo-code (behaviour is
+//! unchanged for unique scores, which is the paper's implicit setting):
+//!
+//! 1. Algorithm 3 line 8 passes `1` for the positive-gap split; with
+//!    duplicate scores the positives in `[s(w), s(v))` amount to `p(w)`,
+//!    which is what [`SupportTree::add_pos`] uses (computed from
+//!    `HeadStats` and asserted equal to `p(w)` in debug builds).
+//! 2. Algorithm 3 only shows the new-node path; when the score already
+//!    exists as a positive node, `gp(v; P)` must still be increased.
+
+use crate::collections::{Augment, CellId, NodeId, RbTree, Score, WeightedList};
+
+/// Per-node label counters (paper §3.1): `p(v)` positives and `n(v)`
+/// negatives sharing the node's score.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Counts {
+    /// `p(v)` — window entries with this score and label 1.
+    pub p: u64,
+    /// `n(v)` — window entries with this score and label 0.
+    pub n: u64,
+}
+
+/// Subtree sums `accpos(v)` / `accneg(v)` (paper §3.1).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Acc {
+    /// Sum of `p(w)` over the node's subtree (node included).
+    pub pos: u64,
+    /// Sum of `n(w)` over the node's subtree.
+    pub neg: u64,
+}
+
+impl Augment<Counts> for Acc {
+    #[inline]
+    fn recompute(val: &Counts, left: Option<&Self>, right: Option<&Self>) -> Self {
+        Acc {
+            pos: val.p + left.map_or(0, |a| a.pos) + right.map_or(0, |a| a.pos),
+            neg: val.n + left.map_or(0, |a| a.neg) + right.map_or(0, |a| a.neg),
+        }
+    }
+}
+
+/// The bundled §3 structure (`T`, `TP`, `P`); see module docs.
+#[derive(Clone, Debug)]
+pub struct SupportTree {
+    /// `T`: all distinct scores in the window (+ sentinels).
+    t: RbTree<Counts, Acc>,
+    /// `TP`: scores of positive nodes (+ sentinels) → node in `T`.
+    tp: RbTree<NodeId, ()>,
+    /// `P`: weighted linked list over positive nodes (+ sentinels).
+    p: WeightedList,
+    neg_sentinel: NodeId,
+    pos_sentinel: NodeId,
+    total_pos: u64,
+    total_neg: u64,
+}
+
+impl Default for SupportTree {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl SupportTree {
+    /// Fresh structure holding only the two sentinels.
+    pub fn new() -> Self {
+        let mut t = RbTree::new();
+        let (lo, _) = t.insert(Score::NEG_SENTINEL, Counts::default);
+        let (hi, _) = t.insert(Score::POS_SENTINEL, Counts::default);
+        let mut tp = RbTree::new();
+        tp.insert(Score::NEG_SENTINEL, || lo);
+        tp.insert(Score::POS_SENTINEL, || hi);
+        let mut p = WeightedList::new();
+        p.push_back(lo, f64::NEG_INFINITY, 0, 0);
+        p.push_back(hi, f64::INFINITY, 0, 0);
+        SupportTree { t, tp, p, neg_sentinel: lo, pos_sentinel: hi, total_pos: 0, total_neg: 0 }
+    }
+
+    /// Total positive labels in the window.
+    #[inline]
+    pub fn total_pos(&self) -> u64 {
+        self.total_pos
+    }
+
+    /// Total negative labels in the window.
+    #[inline]
+    pub fn total_neg(&self) -> u64 {
+        self.total_neg
+    }
+
+    /// Window size `k` (all entries).
+    #[inline]
+    pub fn len(&self) -> usize {
+        (self.total_pos + self.total_neg) as usize
+    }
+
+    /// True when the window holds no entries (sentinels don't count).
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Number of distinct-score nodes in `T`, sentinels included.
+    #[inline]
+    pub fn t_len(&self) -> usize {
+        self.t.len()
+    }
+
+    /// The `−∞` sentinel node.
+    #[inline]
+    pub fn neg_sentinel(&self) -> NodeId {
+        self.neg_sentinel
+    }
+
+    /// The `+∞` sentinel node.
+    #[inline]
+    pub fn pos_sentinel(&self) -> NodeId {
+        self.pos_sentinel
+    }
+
+    /// Score of a `T` node.
+    #[inline]
+    pub fn score(&self, v: NodeId) -> Score {
+        self.t.key(v)
+    }
+
+    /// Label counters of a `T` node.
+    #[inline]
+    pub fn counts(&self, v: NodeId) -> Counts {
+        *self.t.val(v)
+    }
+
+    /// The positive list `P` (read access for `AddNext` and checks).
+    #[inline]
+    pub fn p_list(&self) -> &WeightedList {
+        &self.p
+    }
+
+    /// `MaxPos(s)` (paper §3.2): the positive node with the largest score
+    /// `≤ s`, falling back to the `−∞` sentinel. Also returns its `P`
+    /// cell. `O(log k)`.
+    pub fn max_pos(&self, s: Score) -> (NodeId, CellId) {
+        let id = self.tp.floor(s).expect("−∞ sentinel bounds every query");
+        let node = *self.tp.val(id);
+        let cell = self.p.cell_of(node).expect("TP node must be in P");
+        (node, cell)
+    }
+
+    /// `HeadStats(s)` (Algorithm 1): cumulative counts
+    /// `hp = Σ_{s(v) < s} p(v)` and `hn = Σ_{s(v) < s} n(v)`, in
+    /// `O(log k)`. Generalised to not require a node with score `s`.
+    pub fn head_stats(&self, s: Score) -> (u64, u64) {
+        let mut hp = 0;
+        let mut hn = 0;
+        let mut cur = self.t.root();
+        while let Some(v) = cur {
+            if self.t.key(v) < s {
+                let c = self.t.val(v);
+                hp += c.p;
+                hn += c.n;
+                if let Some(l) = self.t.left(v) {
+                    let a = self.t.aug(l);
+                    hp += a.pos;
+                    hn += a.neg;
+                }
+                cur = self.t.right(v);
+            } else {
+                cur = self.t.left(v);
+            }
+        }
+        (hp, hn)
+    }
+
+    /// `AddTreePos(s)` (Algorithm 3): insert a positive entry. Returns the
+    /// node holding the score. `O(log k)`.
+    pub fn add_pos(&mut self, s: Score) -> NodeId {
+        debug_assert!(s.is_valid_entry(), "scores must be finite");
+        // w = MaxPos(s) *before* the insertion.
+        let (w, w_cell) = self.max_pos(s);
+        let (v, fresh_in_t) = self.t.insert(s, || Counts { p: 1, n: 0 });
+        if !fresh_in_t {
+            self.t.with_val_mut(v, |c| c.p += 1);
+        }
+        self.total_pos += 1;
+        if w == v {
+            // Score already existed as a positive node: its own gap in P
+            // absorbs the new label (pseudo-code gap 2 in module docs).
+            self.p.add_gp(w_cell, 1);
+            self.p.add_cp(w_cell, 1);
+        } else if self.p.contains(v) {
+            // Unreachable: if v were positive before, MaxPos(s) == v.
+            unreachable!("positive node not returned by MaxPos");
+        } else {
+            // v is new to P (either a brand-new node, or an existing
+            // negative-only node turning positive). Account the new label
+            // in w's gap, then split the gap at v.
+            self.p.add_gp(w_cell, 1);
+            let (hp_w, hn_w) = self.head_stats(self.t.key(w));
+            let (hp_v, hn_v) = self.head_stats(s);
+            let p_wv = hp_v - hp_w;
+            let n_wv = hn_v - hn_w;
+            debug_assert_eq!(
+                p_wv,
+                self.t.val(w).p,
+                "positives in [w, v) must equal p(w) since w = MaxPos"
+            );
+            let cv = *self.t.val(v);
+            self.p.insert_after(w_cell, v, s.0, cv.p, cv.n, p_wv, n_wv);
+            self.tp.insert(s, || v);
+        }
+        v
+    }
+
+    /// `AddTreeNeg(s)` (§3.3): insert a negative entry. Returns the node.
+    /// `O(log k)`.
+    pub fn add_neg(&mut self, s: Score) -> NodeId {
+        debug_assert!(s.is_valid_entry(), "scores must be finite");
+        let (v, fresh) = self.t.insert(s, || Counts { p: 0, n: 1 });
+        if !fresh {
+            self.t.with_val_mut(v, |c| c.n += 1);
+        }
+        self.total_neg += 1;
+        let (_, u_cell) = self.max_pos(s);
+        self.p.add_gn(u_cell, 1);
+        if self.p.key(u_cell) == s.0 {
+            self.p.add_cn(u_cell, 1);
+        }
+        v
+    }
+
+    /// `RemoveTreePos(s)` (Algorithm 2): remove one positive entry with
+    /// score `s` (must exist). `O(log k)`.
+    pub fn remove_pos(&mut self, s: Score) {
+        let v = self.t.find(s).expect("remove_pos: score not present");
+        let c = *self.t.val(v);
+        assert!(c.p > 0, "remove_pos: node has no positive labels");
+        self.t.with_val_mut(v, |c| c.p -= 1);
+        self.total_pos -= 1;
+        let v_cell = self.p.cell_of(v).expect("positive node must be in P");
+        self.p.add_gp(v_cell, -1);
+        self.p.add_cp(v_cell, -1);
+        if c.p == 1 {
+            // v is no longer positive: leaves P and TP; its remaining gap
+            // (negatives between v and the next positive) folds into the
+            // predecessor's gap.
+            self.p.remove(v_cell);
+            let tp_id = self.tp.find(s).expect("positive node must be in TP");
+            self.tp.remove(tp_id);
+            if c.n == 0 {
+                self.t.remove(v);
+            }
+        }
+    }
+
+    /// `RemoveTreeNeg(s)` (§3.3): remove one negative entry with score `s`
+    /// (must exist). `O(log k)`.
+    pub fn remove_neg(&mut self, s: Score) {
+        let v = self.t.find(s).expect("remove_neg: score not present");
+        let c = *self.t.val(v);
+        assert!(c.n > 0, "remove_neg: node has no negative labels");
+        self.t.with_val_mut(v, |c| c.n -= 1);
+        self.total_neg -= 1;
+        let (_, u_cell) = self.max_pos(s);
+        self.p.add_gn(u_cell, -1);
+        if self.p.key(u_cell) == s.0 {
+            self.p.add_cn(u_cell, -1);
+        }
+        if c.n == 1 && c.p == 0 {
+            self.t.remove(v);
+        }
+    }
+
+    /// Exact AUC by full in-order enumeration of `T` (Eq. 1); `O(k)`. This
+    /// is the §5 baseline query (Brzezinski & Stefanowski recompute).
+    pub fn exact_auc(&self) -> f64 {
+        let groups = self.t.iter().map(|id| {
+            let c = self.t.val(id);
+            (c.p, c.n)
+        });
+        let (a2, pos, neg) = super::auc_terms_doubled(groups);
+        debug_assert_eq!(pos, self.total_pos);
+        debug_assert_eq!(neg, self.total_neg);
+        super::finish_auc(a2, pos, neg)
+    }
+
+    /// Iterate `(score, p, n)` for all live non-sentinel nodes ascending.
+    pub fn groups(&self) -> impl Iterator<Item = (Score, u64, u64)> + '_ {
+        self.t.iter().filter_map(move |id| {
+            let k = self.t.key(id);
+            if k.is_sentinel() {
+                None
+            } else {
+                let c = self.t.val(id);
+                Some((k, c.p, c.n))
+            }
+        })
+    }
+
+    /// `MaxPos` computed from `T` alone by descending with `accpos` (no
+    /// `TP`). Used by the ablation bench (`benches/ops.rs`) to quantify
+    /// what the dedicated `TP` buys; also a cross-check in tests.
+    pub fn max_pos_via_t(&self, s: Score) -> NodeId {
+        self.rightmost_pos(self.t.root(), s).unwrap_or(self.neg_sentinel)
+    }
+
+    /// Rightmost node in `sub` with `key ≤ s` and `p > 0`, pruning
+    /// positive-free subtrees via `accpos`.
+    fn rightmost_pos(&self, sub: Option<NodeId>, s: Score) -> Option<NodeId> {
+        let v = sub?;
+        if self.t.aug(v).pos == 0 {
+            return None;
+        }
+        if self.t.key(v) > s {
+            return self.rightmost_pos(self.t.left(v), s);
+        }
+        // key(v) ≤ s: everything in the right subtree is > key(v) but may
+        // exceed s; prefer it, then v itself, then the left subtree.
+        self.rightmost_pos(self.t.right(v), s)
+            .or_else(|| if self.t.val(v).p > 0 { Some(v) } else { None })
+            .or_else(|| self.rightmost_pos(self.t.left(v), s))
+    }
+
+    /// Validate every §3 invariant (tests / property harness). Panics with
+    /// a description on violation. `O(k)`.
+    pub fn check_invariants(&self) {
+        self.t.check_invariants();
+        self.tp.check_invariants();
+        // Totals match the root accumulators.
+        let root = self.t.root().expect("sentinels always present");
+        assert_eq!(self.t.aug(root).pos, self.total_pos, "accpos total");
+        assert_eq!(self.t.aug(root).neg, self.total_neg, "accneg total");
+        // Every positive node is in TP and P; TP/P contain nothing else
+        // beyond the sentinels.
+        let mut pos_nodes = 2; // sentinels
+        for id in self.t.iter() {
+            let k = self.t.key(id);
+            let c = self.t.val(id);
+            if k.is_sentinel() {
+                assert_eq!((c.p, c.n), (0, 0), "sentinel with labels");
+                continue;
+            }
+            assert!(c.p + c.n > 0, "empty node left in T");
+            if c.p > 0 {
+                pos_nodes += 1;
+                let tp = self.tp.find(k).expect("positive node missing from TP");
+                assert_eq!(*self.tp.val(tp), id, "TP maps to wrong T node");
+                assert!(self.p.contains(id), "positive node missing from P");
+            } else {
+                assert!(self.tp.find(k).is_none(), "non-positive node in TP");
+                assert!(!self.p.contains(id), "non-positive node in P");
+            }
+        }
+        assert_eq!(self.tp.len(), pos_nodes, "TP size");
+        assert_eq!(self.p.len(), pos_nodes, "P size");
+        // P is score-ascending and its gap counters match brute force.
+        let cells: Vec<_> = self.p.iter().collect();
+        assert_eq!(self.p.node(cells[0]), self.neg_sentinel, "P head sentinel");
+        assert_eq!(
+            self.p.node(*cells.last().unwrap()),
+            self.pos_sentinel,
+            "P tail sentinel"
+        );
+        for w in cells.windows(2) {
+            let (a, b) = (w[0], w[1]);
+            let (sa, sb) = (self.score(self.p.node(a)), self.score(self.p.node(b)));
+            assert!(sa < sb, "P not score-ascending");
+            let (hp_a, hn_a) = self.head_stats(sa);
+            let (hp_b, hn_b) = self.head_stats(sb);
+            assert_eq!(self.p.gp(a), hp_b - hp_a, "gp(a;P) brute mismatch");
+            assert_eq!(self.p.gn(a), hn_b - hn_a, "gn(a;P) brute mismatch");
+            // In P specifically, gaps contain no other positive node.
+            assert_eq!(self.p.gp(a), self.t.val(self.p.node(a)).p, "gp(a;P) ≠ p(a)");
+        }
+        // Cell caches (key, p, n) coherent with the tree.
+        for &c in &cells {
+            let node = self.p.node(c);
+            assert_eq!(self.p.key(c), self.score(node).0, "P cache: stale key");
+            let cnt = self.t.val(node);
+            assert_eq!(self.p.cp(c), cnt.p, "P cache: stale p");
+            assert_eq!(self.p.cn(c), cnt.n, "P cache: stale n");
+        }
+        assert_eq!(self.p.total_gp(), self.total_pos, "P covers all positives");
+        assert_eq!(self.p.total_gn(), self.total_neg, "P covers all negatives");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::{check, gen_ops, Op, Pcg};
+
+    fn s(v: f64) -> Score {
+        Score(v)
+    }
+
+    #[test]
+    fn fresh_tree_is_sentinels_only() {
+        let t = SupportTree::new();
+        assert!(t.is_empty());
+        assert_eq!(t.t_len(), 2);
+        assert_eq!(t.exact_auc(), 0.5);
+        t.check_invariants();
+    }
+
+    #[test]
+    fn head_stats_basics() {
+        let mut t = SupportTree::new();
+        t.add_pos(s(1.0));
+        t.add_pos(s(1.0));
+        t.add_neg(s(2.0));
+        t.add_pos(s(3.0));
+        t.add_neg(s(3.0));
+        t.check_invariants();
+        assert_eq!(t.head_stats(s(0.5)), (0, 0));
+        assert_eq!(t.head_stats(s(1.0)), (0, 0));
+        assert_eq!(t.head_stats(s(1.5)), (2, 0));
+        assert_eq!(t.head_stats(s(2.5)), (2, 1));
+        assert_eq!(t.head_stats(s(3.0)), (2, 1));
+        assert_eq!(t.head_stats(s(9.0)), (3, 2));
+    }
+
+    #[test]
+    fn max_pos_falls_back_to_sentinel() {
+        let mut t = SupportTree::new();
+        t.add_neg(s(1.0));
+        let (v, _) = t.max_pos(s(5.0));
+        assert_eq!(v, t.neg_sentinel());
+        t.add_pos(s(2.0));
+        let (v, _) = t.max_pos(s(5.0));
+        assert_eq!(t.score(v), s(2.0));
+        let (v, _) = t.max_pos(s(1.5));
+        assert_eq!(v, t.neg_sentinel());
+        t.check_invariants();
+    }
+
+    #[test]
+    fn duplicate_scores_aggregate() {
+        let mut t = SupportTree::new();
+        for _ in 0..5 {
+            t.add_pos(s(1.0));
+        }
+        for _ in 0..3 {
+            t.add_neg(s(1.0));
+        }
+        assert_eq!(t.t_len(), 3); // one real node + sentinels
+        let v = t.max_pos(s(1.0)).0;
+        assert_eq!(t.counts(v), Counts { p: 5, n: 3 });
+        assert_eq!(t.exact_auc(), 0.5); // all tied
+        t.check_invariants();
+    }
+
+    #[test]
+    fn perfect_and_reversed_auc() {
+        let mut t = SupportTree::new();
+        // positives low, negatives high → AUC 1 (paper's convention).
+        for i in 0..10 {
+            t.add_pos(s(f64::from(i)));
+            t.add_neg(s(f64::from(i) + 100.0));
+        }
+        assert_eq!(t.exact_auc(), 1.0);
+        t.check_invariants();
+        let mut t = SupportTree::new();
+        for i in 0..10 {
+            t.add_neg(s(f64::from(i)));
+            t.add_pos(s(f64::from(i) + 100.0));
+        }
+        assert_eq!(t.exact_auc(), 0.0);
+    }
+
+    #[test]
+    fn remove_pos_demotes_and_deletes_nodes() {
+        let mut t = SupportTree::new();
+        t.add_pos(s(1.0));
+        t.add_neg(s(1.0));
+        t.add_pos(s(2.0));
+        t.check_invariants();
+        // Node 1.0 stays (still has a negative), leaves P/TP.
+        t.remove_pos(s(1.0));
+        t.check_invariants();
+        assert_eq!(t.t_len(), 4);
+        assert_eq!(t.max_pos(s(1.5)).0, t.neg_sentinel());
+        // Node 2.0 disappears entirely.
+        t.remove_pos(s(2.0));
+        t.check_invariants();
+        assert_eq!(t.t_len(), 3);
+        assert_eq!(t.total_pos(), 0);
+    }
+
+    #[test]
+    fn negative_gap_accounting_across_positive_removal() {
+        let mut t = SupportTree::new();
+        t.add_pos(s(1.0));
+        t.add_neg(s(2.0));
+        t.add_neg(s(3.0));
+        t.add_pos(s(4.0));
+        t.add_neg(s(5.0));
+        t.check_invariants();
+        // Removing the positive at 1.0 folds its gap (two negatives) into
+        // the −∞ sentinel's gap.
+        t.remove_pos(s(1.0));
+        t.check_invariants();
+        let head = t.p_list().head().unwrap();
+        assert_eq!(t.p_list().gn(head), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "not present")]
+    fn remove_missing_score_panics() {
+        let mut t = SupportTree::new();
+        t.remove_pos(s(1.0));
+    }
+
+    #[test]
+    #[should_panic(expected = "no positive labels")]
+    fn remove_wrong_label_panics() {
+        let mut t = SupportTree::new();
+        t.add_neg(s(1.0));
+        t.remove_pos(s(1.0));
+    }
+
+    #[test]
+    fn exact_auc_matches_naive_small() {
+        // Hand-checked: P = {0.1, 0.5}, N = {0.3, 0.5}.
+        // Pairs (p, n): (0.1 vs 0.3) correct, (0.1 vs 0.5) correct,
+        // (0.5 vs 0.3) wrong, (0.5 vs 0.5) tie → (2 + 0.5) / 4.
+        let mut t = SupportTree::new();
+        t.add_pos(s(0.1));
+        t.add_pos(s(0.5));
+        t.add_neg(s(0.3));
+        t.add_neg(s(0.5));
+        assert_eq!(t.exact_auc(), 2.5 / 4.0);
+    }
+
+    #[test]
+    fn max_pos_via_t_matches_tp() {
+        check(0x51AB, 30, |rng| {
+            let mut t = SupportTree::new();
+            let ops = gen_ops(rng, 120, 40, Some(16));
+            for op in ops {
+                match op {
+                    Op::Insert { score, pos: true } => {
+                        t.add_pos(s(score));
+                    }
+                    Op::Insert { score, pos: false } => {
+                        t.add_neg(s(score));
+                    }
+                    Op::Remove { score, pos: true } => t.remove_pos(s(score)),
+                    Op::Remove { score, pos: false } => t.remove_neg(s(score)),
+                }
+                for q in [0.0, 0.25, 0.5, 0.75, 1.0, rng.uniform()] {
+                    assert_eq!(
+                        t.max_pos(s(q)).0,
+                        t.max_pos_via_t(s(q)),
+                        "MaxPos disagreement at {q}"
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn property_invariants_hold_under_random_ops() {
+        for grid in [Some(8), Some(64), None] {
+            check(0x7EE7 ^ grid.unwrap_or(0), 25, |rng| {
+                let mut t = SupportTree::new();
+                let len = 150 + rng.below(100) as usize;
+                let ops = gen_ops(rng, len, 50, grid);
+                for (i, op) in ops.iter().enumerate() {
+                    match *op {
+                        Op::Insert { score, pos: true } => {
+                            t.add_pos(s(score));
+                        }
+                        Op::Insert { score, pos: false } => {
+                            t.add_neg(s(score));
+                        }
+                        Op::Remove { score, pos: true } => t.remove_pos(s(score)),
+                        Op::Remove { score, pos: false } => t.remove_neg(s(score)),
+                    }
+                    if i % 10 == 0 {
+                        t.check_invariants();
+                    }
+                }
+                t.check_invariants();
+            });
+        }
+    }
+
+    #[test]
+    fn head_stats_matches_brute_force() {
+        check(0xB0B, 20, |rng| {
+            let mut t = SupportTree::new();
+            let mut entries: Vec<(f64, bool)> = Vec::new();
+            for _ in 0..100 {
+                let score = rng.below(32) as f64 / 32.0;
+                let pos = rng.chance(0.5);
+                if pos {
+                    t.add_pos(s(score));
+                } else {
+                    t.add_neg(s(score));
+                }
+                entries.push((score, pos));
+            }
+            for _ in 0..20 {
+                let q = rng.uniform();
+                let hp = entries.iter().filter(|(sc, p)| *sc < q && *p).count() as u64;
+                let hn = entries.iter().filter(|(sc, p)| *sc < q && !*p).count() as u64;
+                assert_eq!(t.head_stats(s(q)), (hp, hn));
+            }
+        });
+    }
+
+    #[test]
+    fn alternating_churn_keeps_structures_tight() {
+        // FIFO window churn: the workload of the actual system.
+        let mut t = SupportTree::new();
+        let mut rng = Pcg::seed(99);
+        let mut window: std::collections::VecDeque<(f64, bool)> = Default::default();
+        for i in 0..2000 {
+            let score = rng.below(128) as f64 / 128.0;
+            let pos = rng.chance(0.3);
+            if pos {
+                t.add_pos(s(score));
+            } else {
+                t.add_neg(s(score));
+            }
+            window.push_back((score, pos));
+            if window.len() > 100 {
+                let (score, pos) = window.pop_front().unwrap();
+                if pos {
+                    t.remove_pos(s(score));
+                } else {
+                    t.remove_neg(s(score));
+                }
+            }
+            if i % 250 == 0 {
+                t.check_invariants();
+            }
+        }
+        assert_eq!(t.len(), 100);
+        t.check_invariants();
+    }
+}

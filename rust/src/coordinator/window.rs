@@ -1,0 +1,205 @@
+//! FIFO sliding-window driver.
+//!
+//! The estimators operate on a multiset; this wrapper adds the *sliding*
+//! semantics of the paper's streaming setting: push the newest pair,
+//! evict the oldest once the window exceeds `k`. Any [`AucEstimator`]
+//! plugs in; [`SlidingAuc`] is the convenience alias over [`ApproxAuc`]
+//! that downstream code (examples, CLI, runtime) uses.
+
+use std::collections::VecDeque;
+
+use super::{ApproxAuc, AucEstimator};
+
+/// Sliding window of capacity `k` over any estimator.
+#[derive(Clone, Debug)]
+pub struct Window<E> {
+    est: E,
+    fifo: VecDeque<(f64, bool)>,
+    capacity: usize,
+}
+
+impl<E: AucEstimator> Window<E> {
+    /// Wrap an estimator with FIFO eviction at `capacity` entries.
+    pub fn with_estimator(capacity: usize, est: E) -> Self {
+        assert!(capacity > 0, "window capacity must be positive");
+        Window { est, fifo: VecDeque::with_capacity(capacity + 1), capacity }
+    }
+
+    /// Push a pair; evicts and returns the oldest pair when the window
+    /// is full.
+    pub fn push(&mut self, score: f64, pos: bool) -> Option<(f64, bool)> {
+        self.est.insert(score, pos);
+        self.fifo.push_back((score, pos));
+        if self.fifo.len() > self.capacity {
+            let (s, p) = self.fifo.pop_front().expect("non-empty");
+            self.est.remove(s, p);
+            Some((s, p))
+        } else {
+            None
+        }
+    }
+
+    /// Current AUC of the windowed estimator.
+    pub fn auc(&self) -> f64 {
+        self.est.auc()
+    }
+
+    /// Number of pairs currently in the window.
+    pub fn len(&self) -> usize {
+        self.fifo.len()
+    }
+
+    /// True until the first push.
+    pub fn is_empty(&self) -> bool {
+        self.fifo.is_empty()
+    }
+
+    /// True once the window reached capacity (estimates before this point
+    /// cover a partial window).
+    pub fn is_full(&self) -> bool {
+        self.fifo.len() == self.capacity
+    }
+
+    /// Window capacity `k`.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// The wrapped estimator.
+    pub fn estimator(&self) -> &E {
+        &self.est
+    }
+
+    /// Window contents, oldest first (test / experiment helper).
+    pub fn entries(&self) -> impl Iterator<Item = (f64, bool)> + '_ {
+        self.fifo.iter().copied()
+    }
+}
+
+/// The paper's configuration: approximate estimator in a sliding window.
+pub type SlidingApprox = Window<ApproxAuc>;
+
+/// Approximate sliding-window AUC — the crate's main entry point.
+///
+/// ```
+/// use streamauc::coordinator::SlidingAuc;
+/// let mut w = SlidingAuc::new(100, 0.05);
+/// for i in 0..500 {
+///     let pos = i % 2 == 0;
+///     w.push(if pos { 0.2 } else { 0.8 }, pos);
+/// }
+/// assert_eq!(w.auc(), 1.0);
+/// ```
+#[derive(Clone, Debug)]
+pub struct SlidingAuc {
+    inner: SlidingApprox,
+}
+
+impl SlidingAuc {
+    /// Window of capacity `k` with approximation parameter `ε`.
+    pub fn new(k: usize, epsilon: f64) -> Self {
+        SlidingAuc { inner: Window::with_estimator(k, ApproxAuc::new(epsilon)) }
+    }
+
+    /// Push a pair, evicting the oldest beyond capacity.
+    pub fn push(&mut self, score: f64, pos: bool) -> Option<(f64, bool)> {
+        self.inner.push(score, pos)
+    }
+
+    /// Current approximate AUC (`|ãuc − auc| ≤ ε·auc/2`).
+    pub fn auc(&self) -> f64 {
+        self.inner.auc()
+    }
+
+    /// Exact AUC over the same window (`O(k)`, for monitoring error).
+    pub fn exact_auc(&self) -> f64 {
+        self.inner.estimator().exact_auc()
+    }
+
+    /// Current `|C|` (compressed-list size).
+    pub fn compressed_len(&self) -> usize {
+        self.inner.estimator().compressed_len()
+    }
+
+    /// Pairs currently in the window.
+    pub fn len(&self) -> usize {
+        self.inner.len()
+    }
+
+    /// True before the first push.
+    pub fn is_empty(&self) -> bool {
+        self.inner.is_empty()
+    }
+
+    /// True once `len() == k`.
+    pub fn is_full(&self) -> bool {
+        self.inner.is_full()
+    }
+
+    /// Window capacity `k`.
+    pub fn capacity(&self) -> usize {
+        self.inner.capacity()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{ExactAuc, NaiveAuc};
+    use crate::testing::Pcg;
+
+    #[test]
+    fn eviction_is_fifo() {
+        let mut w = Window::with_estimator(3, NaiveAuc::new());
+        assert_eq!(w.push(0.1, true), None);
+        assert_eq!(w.push(0.2, false), None);
+        assert_eq!(w.push(0.3, true), None);
+        assert!(w.is_full());
+        assert_eq!(w.push(0.4, false), Some((0.1, true)));
+        assert_eq!(w.push(0.5, true), Some((0.2, false)));
+        assert_eq!(w.len(), 3);
+    }
+
+    #[test]
+    fn windowed_approx_tracks_windowed_exact() {
+        let mut approx = SlidingAuc::new(150, 0.05);
+        let mut exact = Window::with_estimator(150, ExactAuc::new());
+        let mut rng = Pcg::seed(0x77);
+        for i in 0..2000 {
+            let pos = rng.chance(0.5);
+            // Shift the distribution midway to exercise churn.
+            let base = if i < 1000 { 0.0 } else { 0.3 };
+            let s = base + if pos { rng.normal_with(0.4, 0.1) } else { rng.normal_with(0.6, 0.1) };
+            approx.push(s, pos);
+            exact.push(s, pos);
+            let (a, b) = (approx.auc(), exact.auc());
+            assert!((a - b).abs() <= 0.05 * b / 2.0 + 1e-12, "step {i}: {a} vs {b}");
+        }
+        assert_eq!(approx.len(), 150);
+    }
+
+    #[test]
+    fn capacity_one() {
+        let mut w = SlidingAuc::new(1, 0.1);
+        w.push(0.5, true);
+        assert_eq!(w.push(0.6, false), Some((0.5, true)));
+        assert_eq!(w.len(), 1);
+        assert_eq!(w.auc(), 0.5); // single class
+    }
+
+    #[test]
+    #[should_panic(expected = "positive")]
+    fn zero_capacity_rejected() {
+        SlidingAuc::new(0, 0.1);
+    }
+
+    #[test]
+    fn doc_example() {
+        let mut w = SlidingAuc::new(100, 0.05);
+        for i in 0..500 {
+            let pos = i % 2 == 0;
+            w.push(if pos { 0.2 } else { 0.8 }, pos);
+        }
+        assert_eq!(w.auc(), 1.0);
+    }
+}

@@ -1,0 +1,154 @@
+//! Figure 2: computational cost and `|C|` versus the achieved error.
+//!
+//! Paper setup: window k = 1000; top row plots total running time as a
+//! function of the *average relative error* achieved by each ε, bottom
+//! row the compressed-list size |C|. Expected shape: time falls as the
+//! error grows, then plateaus (the ε-independent `O(log k)` tree
+//! maintenance dominates); |C| shrinks like `(log k)/ε`.
+//!
+//! Timing protocol (paper §6: “running times measure only the
+//! computation of AUC”): a separate pass per ε measures
+//! `push + ApproxAUC query` per event, without the exact-AUC
+//! enumeration; the error comes from the same pass as Fig. 1.
+
+use std::time::Instant;
+
+use super::report::{fmt_duration, fmt_sci, Table};
+use super::{ExpConfig, EPSILONS};
+use crate::coordinator::metrics::{RelErr, Summary};
+use crate::coordinator::window::Window;
+use crate::coordinator::{ApproxAuc, AucEstimator};
+use crate::stream::synth::{paper_datasets, Dataset};
+
+/// One sweep point.
+#[derive(Clone, Debug)]
+pub struct Point {
+    /// Dataset name.
+    pub dataset: &'static str,
+    /// Approximation parameter.
+    pub epsilon: f64,
+    /// Average relative error (x-axis of both plots).
+    pub avg_err: f64,
+    /// Total time for the timed pass (maintenance + query per event).
+    pub total: std::time::Duration,
+    /// Mean per-event time.
+    pub per_event: std::time::Duration,
+    /// Mean / max compressed-list size (sentinels included).
+    pub avg_c: f64,
+    /// Maximum |C| observed.
+    pub max_c: usize,
+}
+
+/// Run the sweep: an error pass (exact comparison) plus a timed pass.
+pub fn sweep(cfg: ExpConfig, epsilons: &[f64]) -> Vec<Point> {
+    let mut points = Vec::new();
+    for spec in paper_datasets() {
+        let name = spec.name;
+        let mut data = Dataset::new(spec, cfg.seed);
+        let stream = data.score_stream(cfg.events);
+        for &eps in epsilons {
+            // Pass 1: error + |C| statistics.
+            let mut win = Window::with_estimator(cfg.window, ApproxAuc::new(eps));
+            let mut err = RelErr::new();
+            let mut csize = Summary::new();
+            for &(s, l) in &stream {
+                win.push(s, l);
+                if win.is_full() {
+                    err.record(win.auc(), win.estimator().exact_auc());
+                    csize.push(win.estimator().compressed_len() as f64);
+                }
+            }
+            // Pass 2: timed (no exact enumeration in the loop).
+            let mut est = ApproxAuc::new(eps);
+            let mut fifo = std::collections::VecDeque::with_capacity(cfg.window + 1);
+            let start = Instant::now();
+            let mut sink = 0.0;
+            for &(s, l) in &stream {
+                est.insert(s, l);
+                fifo.push_back((s, l));
+                if fifo.len() > cfg.window {
+                    let (os, ol) = fifo.pop_front().unwrap();
+                    est.remove(os, ol);
+                }
+                sink += est.auc();
+            }
+            let total = start.elapsed();
+            std::hint::black_box(sink);
+            points.push(Point {
+                dataset: name,
+                epsilon: eps,
+                avg_err: err.avg(),
+                total,
+                per_event: total / cfg.events.max(1) as u32,
+                avg_c: csize.mean(),
+                max_c: csize.max() as usize,
+            });
+        }
+    }
+    points
+}
+
+/// Build the Figure 2 table (top: time vs error; bottom: |C| vs error).
+pub fn run(cfg: ExpConfig) -> Table {
+    let mut table = Table::new(
+        format!(
+            "fig2: runtime and |C| vs avg error (k={}, {} events/dataset)",
+            cfg.window, cfg.events
+        ),
+        &["dataset", "epsilon", "avg_rel_err", "total_time", "per_event", "avg_|C|", "max_|C|"],
+    );
+    for p in sweep(cfg, &EPSILONS) {
+        table.push(vec![
+            p.dataset.to_string(),
+            fmt_sci(p.epsilon),
+            fmt_sci(p.avg_err),
+            fmt_duration(p.total),
+            fmt_duration(p.per_event),
+            format!("{:.1}", p.avg_c),
+            p.max_c.to_string(),
+        ]);
+    }
+    table
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn c_shrinks_and_time_improves_with_epsilon() {
+        let cfg = ExpConfig { events: 6000, window: 500, seed: 3 };
+        let points = sweep(cfg, &[1e-3, 1.0]);
+        for chunk in points.chunks(2) {
+            let (tight, loose) = (&chunk[0], &chunk[1]);
+            assert!(
+                loose.avg_c < tight.avg_c,
+                "{}: |C| must shrink with ε ({} vs {})",
+                tight.dataset,
+                loose.avg_c,
+                tight.avg_c
+            );
+            // Large ε must not be slower than tight ε by more than noise.
+            assert!(
+                loose.total.as_secs_f64() < tight.total.as_secs_f64() * 1.5,
+                "{}: ε=1 pass slower than ε=1e-3",
+                tight.dataset
+            );
+        }
+    }
+
+    #[test]
+    fn c_matches_log_over_epsilon_shape() {
+        let cfg = ExpConfig { events: 5000, window: 1000, seed: 4 };
+        let points = sweep(cfg, &[0.01, 0.1]);
+        for chunk in points.chunks(2) {
+            let ratio = chunk[0].avg_c / chunk[1].avg_c;
+            // |C| ~ log(k)/ε ⇒ tenfold ε should shrink |C| severalfold.
+            assert!(
+                ratio > 2.0,
+                "{}: |C| ratio {ratio} too flat for 10× ε",
+                chunk[0].dataset
+            );
+        }
+    }
+}

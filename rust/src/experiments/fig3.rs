@@ -1,0 +1,137 @@
+//! Figure 3: computational cost versus window size.
+//!
+//! Paper setup: Miniboone, exact (`O(k)`/update) against the estimator
+//! at ε ∈ {0.01, 0.1} (`O((log k)/ε)`/update), window sizes swept on a
+//! log grid. The paper reports the estimate being **17× faster at
+//! k = 10 000 with ε = 0.1**, with the speed-up growing in k.
+//!
+//! Protocol: for each k, stream the same scored events through (a) the
+//! exact baseline — tree maintenance + full `O(k)` recompute per event,
+//! exactly the §5 Brzezinski & Stefanowski loop — and (b) the
+//! approximate estimator with its `O(|C|)` query per event.
+
+use std::time::{Duration, Instant};
+
+use super::report::{fmt_duration, Table};
+use super::ExpConfig;
+use crate::coordinator::{ApproxAuc, AucEstimator, ExactAuc};
+use crate::stream::synth::{miniboone_like, Dataset};
+
+/// Window sizes swept by default (paper: up to 10⁴).
+pub const WINDOWS: [usize; 5] = [100, 316, 1000, 3162, 10_000];
+
+/// ε values compared against exact (paper's figure legend).
+pub const FIG3_EPSILONS: [f64; 2] = [0.01, 0.1];
+
+/// One sweep point.
+#[derive(Clone, Debug)]
+pub struct Point {
+    /// Window size `k`.
+    pub window: usize,
+    /// Exact per-event time.
+    pub exact: Duration,
+    /// Approx per-event time per ε (same order as
+    /// [`FIG3_EPSILONS`]).
+    pub approx: Vec<Duration>,
+}
+
+impl Point {
+    /// Speed-up of the `i`-th ε over exact.
+    pub fn speedup(&self, i: usize) -> f64 {
+        self.exact.as_secs_f64() / self.approx[i].as_secs_f64().max(1e-12)
+    }
+}
+
+fn timed_pass<E: AucEstimator>(stream: &[(f64, bool)], window: usize, mut est: E) -> Duration {
+    let mut fifo = std::collections::VecDeque::with_capacity(window + 1);
+    let start = Instant::now();
+    let mut sink = 0.0;
+    for &(s, l) in stream {
+        est.insert(s, l);
+        fifo.push_back((s, l));
+        if fifo.len() > window {
+            let (os, ol) = fifo.pop_front().unwrap();
+            est.remove(os, ol);
+        }
+        sink += est.auc();
+    }
+    let total = start.elapsed();
+    std::hint::black_box(sink);
+    total / stream.len().max(1) as u32
+}
+
+/// Run the sweep. `events` is clamped below `4·k` so every window size
+/// sees several full turnovers.
+pub fn sweep(cfg: ExpConfig, windows: &[usize]) -> Vec<Point> {
+    let mut data = Dataset::new(miniboone_like(), cfg.seed);
+    let mut points = Vec::new();
+    for &k in windows {
+        let n = cfg.events.max(4 * k);
+        let stream = data.score_stream(n);
+        let exact = timed_pass(&stream, k, ExactAuc::new());
+        let approx = FIG3_EPSILONS
+            .iter()
+            .map(|&eps| timed_pass(&stream, k, ApproxAuc::new(eps)))
+            .collect();
+        points.push(Point { window: k, exact, approx });
+    }
+    points
+}
+
+/// Build the Figure 3 table.
+pub fn run(cfg: ExpConfig) -> Table {
+    let mut table = Table::new(
+        format!("fig3: per-event cost vs window size (miniboone, ≥4k events per k)"),
+        &[
+            "window_k",
+            "exact/event",
+            "eps=0.01/event",
+            "eps=0.1/event",
+            "speedup@0.01",
+            "speedup@0.1",
+        ],
+    );
+    for p in sweep(cfg, &WINDOWS) {
+        table.push(vec![
+            p.window.to_string(),
+            fmt_duration(p.exact),
+            fmt_duration(p.approx[0]),
+            fmt_duration(p.approx[1]),
+            format!("{:.1}x", p.speedup(0)),
+            format!("{:.1}x", p.speedup(1)),
+        ]);
+    }
+    table
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn speedup_grows_with_window_size() {
+        let cfg = ExpConfig { events: 2000, window: 0, seed: 5 };
+        let points = sweep(cfg, &[100, 2000]);
+        let small = points[0].speedup(1);
+        let large = points[1].speedup(1);
+        assert!(
+            large > small,
+            "speed-up must grow with k: {small:.2} → {large:.2}"
+        );
+        // At k = 2000 the estimate must already be clearly faster.
+        assert!(large > 2.0, "k=2000 ε=0.1 speed-up only {large:.2}x");
+    }
+
+    #[test]
+    fn looser_epsilon_is_not_slower() {
+        let cfg = ExpConfig { events: 2000, window: 0, seed: 6 };
+        let points = sweep(cfg, &[3000]);
+        let p = &points[0];
+        assert!(
+            p.approx[1] <= p.approx[0].mul_f64(1.3),
+            "ε=0.1 should not be slower than ε=0.01: {:?} vs {:?}",
+            p.approx[1],
+            p.approx[0]
+        );
+    }
+}

@@ -1,0 +1,53 @@
+//! # streamauc — efficient estimation of AUC in a sliding window
+//!
+//! Rust + JAX/Pallas reproduction of *“Efficient estimation of AUC in a
+//! sliding window”* (Nikolaj Tatti, ECML-PKDD 2019).
+//!
+//! The crate maintains an `ε/2`-approximate area under the ROC curve over a
+//! sliding window of `(score, label)` pairs in `O((log k)/ε)` time per
+//! update, versus `O(k)` for exact recomputation. The estimator groups
+//! neighbouring score nodes into a `(1+ε)`-*compressed* weighted linked
+//! list (paper Eqs. 3–4) built on top of an augmented red-black tree.
+//!
+//! ## Layer map
+//!
+//! * [`collections`] — the supporting data structures of paper §3:
+//!   augmented red-black tree (`T`, `TP`) and weighted linked lists
+//!   (`P`, `C`).
+//! * [`coordinator`] — the estimators of paper §4 (approximate, exact
+//!   baseline, naive oracle, flipped variant, §7 weighted extension), the
+//!   sliding-window driver, drift monitor and metrics.
+//! * [`stream`] — deterministic synthetic data sources standing in for the
+//!   paper's UCI datasets (see `DESIGN.md` §Substitutions), drift
+//!   injectors and CSV I/O.
+//! * [`runtime`] — PJRT execution of the AOT-compiled JAX/Pallas
+//!   logistic-regression classifier (`artifacts/*.hlo.txt`): training loop
+//!   and batch scorer. Python never runs on the streaming path.
+//! * [`experiments`] — drivers regenerating every table and figure of the
+//!   paper's §6 evaluation.
+//!
+//! ## Quickstart
+//!
+//! ```
+//! use streamauc::coordinator::SlidingAuc;
+//!
+//! let mut w = SlidingAuc::new(1000, 0.01); // window k=1000, ε=0.01
+//! for i in 0..5000u32 {
+//!     let label = i % 3 == 0;
+//!     let score = if label { 0.3 } else { 0.7 } + 0.01 * f64::from(i % 100);
+//!     w.push(score, label);
+//! }
+//! let auc = w.auc();
+//! assert!(auc > 0.5 && auc <= 1.0);
+//! ```
+
+pub mod cli;
+pub mod collections;
+pub mod config;
+pub mod coordinator;
+pub mod experiments;
+pub mod runtime;
+pub mod stream;
+pub mod testing;
+
+pub use coordinator::{ApproxAuc, AucEstimator, ExactAuc, SlidingAuc};

@@ -1,0 +1,222 @@
+//! `streamauc` — CLI for the sliding-window AUC system.
+//!
+//! ```text
+//! streamauc experiment <table1|fig1|fig2|fig3|all> [--events N] [--window K] [--seed S] [--csv DIR]
+//! streamauc stream [--dataset D] [--epsilon E] [--window K] [--events N] [--drift-at I --drift-rate R]
+//! streamauc train  [--dataset D] [--steps N] [--lr X] [--events N] [--artifacts DIR] [--out FILE]
+//! streamauc help
+//! ```
+//!
+//! `experiment` regenerates the paper's tables/figures; `stream` runs
+//! the monitoring pipeline on a synthetic scored stream; `train` runs
+//! the full three-layer path (PJRT-compiled JAX/Pallas classifier
+//! trained and scored from rust, stream fed into the estimator).
+
+use anyhow::{bail, Context, Result};
+
+use streamauc::cli::Args;
+use streamauc::config::{Config, Settings};
+use streamauc::coordinator::window::Window;
+use streamauc::coordinator::{ApproxAuc, AucMonitor, MonitorEvent, NaiveAuc};
+use streamauc::experiments::{fig1, fig2, fig3, table1, ExpConfig, Table};
+use streamauc::runtime::{Runtime, Scorer, Trainer};
+use streamauc::stream::source::write_csv;
+use streamauc::stream::synth::{paper_datasets, Dataset, DatasetSpec};
+use streamauc::stream::Drift;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1))?;
+    match args.command.as_str() {
+        "experiment" => cmd_experiment(&args),
+        "stream" => cmd_stream(&args),
+        "train" => cmd_train(&args),
+        "help" | "" => {
+            print!("{}", HELP);
+            Ok(())
+        }
+        other => bail!("unknown command {other:?}; see `streamauc help`"),
+    }
+}
+
+const HELP: &str = "\
+streamauc — efficient estimation of AUC in a sliding window (Tatti, 2019)
+
+USAGE:
+  streamauc experiment <table1|fig1|fig2|fig3|all> [--events N] [--window K] [--seed S] [--csv DIR]
+  streamauc stream [--dataset D] [--epsilon E] [--window K] [--events N]
+                   [--drift-at I --drift-rate R] [--config FILE]
+  streamauc train  [--dataset D] [--steps N] [--lr X] [--events N]
+                   [--artifacts DIR] [--out stream.csv]
+  streamauc help
+";
+
+fn dataset_by_name(name: &str) -> Result<DatasetSpec> {
+    paper_datasets()
+        .into_iter()
+        .find(|s| s.name == name)
+        .with_context(|| format!("unknown dataset {name:?} (hepmass|miniboone|tvads)"))
+}
+
+fn settings(args: &Args) -> Result<Settings> {
+    let mut cfg = match args.get("config") {
+        Some(path) => Config::load(std::path::Path::new(path))?,
+        None => Config::new(),
+    };
+    // CLI wins over the file; strip non-settings flags first.
+    let mut overlay = args.clone();
+    let _ = &mut overlay; // settings-relevant flags only
+    for key in ["epsilon", "window", "dataset", "events", "seed", "artifacts"] {
+        if let Some(v) = args.get(key) {
+            cfg.set(key, v);
+        }
+    }
+    Settings::from_config(&cfg)
+}
+
+fn cmd_experiment(args: &Args) -> Result<()> {
+    args.validate_flags(&["events", "window", "seed", "csv"])?;
+    let which = args.positional.first().map(String::as_str).unwrap_or("all");
+    let cfg = ExpConfig {
+        events: args.get_or("events", ExpConfig::default().events)?,
+        window: args.get_or("window", ExpConfig::default().window)?,
+        seed: args.get_or("seed", ExpConfig::default().seed)?,
+    };
+    let tables: Vec<Table> = match which {
+        "table1" => vec![table1::run(cfg)],
+        "fig1" => vec![fig1::run(cfg)],
+        "fig2" => vec![fig2::run(cfg)],
+        "fig3" => vec![fig3::run(cfg)],
+        "all" => vec![table1::run(cfg), fig1::run(cfg), fig2::run(cfg), fig3::run(cfg)],
+        other => bail!("unknown experiment {other:?} (table1|fig1|fig2|fig3|all)"),
+    };
+    for t in &tables {
+        println!("{}", t.render());
+        if let Some(dir) = args.get("csv") {
+            let dir = std::path::Path::new(dir);
+            std::fs::create_dir_all(dir)?;
+            let name = t.title.split(':').next().unwrap_or("table").trim().to_string();
+            let path = dir.join(format!("{name}.csv"));
+            t.write_csv(&path)?;
+            println!("wrote {}\n", path.display());
+        }
+    }
+    Ok(())
+}
+
+fn cmd_stream(args: &Args) -> Result<()> {
+    args.validate_flags(&[
+        "dataset", "epsilon", "window", "events", "seed", "config", "drift-at", "drift-rate",
+        "report-every",
+    ])?;
+    let s = settings(args)?;
+    let spec = dataset_by_name(&s.dataset)?;
+    let mut data = Dataset::new(spec, s.seed);
+    let mut stream = data.score_stream(s.events);
+    let drift_at: usize = args.get_or("drift-at", 0)?;
+    if drift_at > 0 {
+        let rate: f64 = args.get_or("drift-rate", 0.5)?;
+        Drift::Abrupt { at: drift_at, rate }.apply(&mut stream, s.seed ^ 0xD21F7);
+        println!("# injected abrupt drift at {drift_at} (flip rate {rate})");
+    }
+    let report_every: usize = args.get_or("report-every", (s.events / 20).max(1))?;
+
+    let mut win = Window::with_estimator(s.window, ApproxAuc::new(s.epsilon));
+    let mut monitor = AucMonitor::new(0.001, 0.08, (s.window / 5) as u32, s.window as u32);
+    let started = std::time::Instant::now();
+    let mut alarms = Vec::new();
+    println!("# dataset={} k={} ε={} events={}", s.dataset, s.window, s.epsilon, s.events);
+    println!("{:>10}  {:>8}  {:>8}  {:>6}", "event", "auc~", "baseline", "|C|");
+    for (i, &(score, label)) in stream.iter().enumerate() {
+        win.push(score, label);
+        if win.is_full() {
+            let auc = win.auc();
+            if monitor.observe(auc) == MonitorEvent::Alarm {
+                alarms.push(i);
+                println!("{i:>10}  ALARM: AUC {auc:.4} fell below baseline {:.4}", monitor.baseline());
+            }
+        }
+        if (i + 1) % report_every == 0 {
+            println!(
+                "{:>10}  {:>8.4}  {:>8.4}  {:>6}",
+                i + 1,
+                win.auc(),
+                monitor.baseline(),
+                win.estimator().compressed_len()
+            );
+        }
+    }
+    let elapsed = started.elapsed();
+    println!(
+        "# {} events in {:.2?} ({:.0} events/s); final AUC~ {:.4}; alarms: {:?}",
+        s.events,
+        elapsed,
+        s.events as f64 / elapsed.as_secs_f64(),
+        win.auc(),
+        alarms
+    );
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    args.validate_flags(&["dataset", "steps", "lr", "events", "seed", "artifacts", "out", "config"])?;
+    let s = settings(args)?;
+    let steps: usize = args.get_or("steps", 300)?;
+    let lr: f32 = args.get_or("lr", 0.5)?;
+    let spec = dataset_by_name(&s.dataset)?;
+    println!("# loading PJRT runtime from {}/", s.artifacts);
+    let rt = Runtime::new(&s.artifacts)?;
+    println!("# platform: {}, contract: {:?}", rt.platform(), rt.meta());
+
+    let mut data = Dataset::new(spec, s.seed);
+    let train_n = s.events.min(data.spec().train_size);
+    let train = data.examples(train_n);
+    println!("# training on {train_n} examples, {steps} SGD steps, lr {lr}");
+    let trainer = Trainer::new(&rt, lr)?;
+    let t0 = std::time::Instant::now();
+    let report = trainer.train(&train, steps)?;
+    println!(
+        "# trained in {:.2?}: loss {:.4} -> {:.4}",
+        t0.elapsed(),
+        report.early_loss(10),
+        report.late_loss(10)
+    );
+
+    let test_n = s.events.min(data.spec().test_size);
+    let test = data.examples(test_n);
+    let scorer = Scorer::new(&rt, report.params)?;
+    let rows: Vec<Vec<f32>> = test.iter().map(|e| e.features.clone()).collect();
+    let t1 = std::time::Instant::now();
+    let scores = scorer.score(&rows)?;
+    println!(
+        "# scored {test_n} examples in {:.2?} ({:.0}/s)",
+        t1.elapsed(),
+        test_n as f64 / t1.elapsed().as_secs_f64()
+    );
+    let pairs: Vec<(f64, bool)> = scores.iter().zip(&test).map(|(&sc, e)| (sc, e.label)).collect();
+    println!("# held-out AUC (exact): {:.4}", NaiveAuc::of(&pairs));
+
+    let mut win = Window::with_estimator(s.window, ApproxAuc::new(s.epsilon));
+    for &(sc, l) in &pairs {
+        win.push(sc, l);
+    }
+    println!(
+        "# windowed (k={} ε={}): approx {:.4} vs exact {:.4}, |C| = {}",
+        s.window,
+        s.epsilon,
+        win.auc(),
+        win.estimator().exact_auc(),
+        win.estimator().compressed_len()
+    );
+    if let Some(out) = args.get("out") {
+        write_csv(std::path::Path::new(out), &pairs)?;
+        println!("# wrote scored stream to {out}");
+    }
+    Ok(())
+}

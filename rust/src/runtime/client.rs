@@ -1,0 +1,70 @@
+//! PJRT CPU client and artifact loading.
+//!
+//! Wraps the `xla` crate: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile`. HLO *text* is
+//! the interchange format (see python/compile/aot.py and
+//! /opt/xla-example/README.md for the proto-id rationale).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use super::executable::Executable;
+use super::meta::Meta;
+
+/// A PJRT CPU client bound to an artifact directory.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    artifact_dir: PathBuf,
+    meta: Meta,
+}
+
+impl Runtime {
+    /// Create a CPU client and read the shape contract from
+    /// `artifact_dir/meta.json`.
+    pub fn new(artifact_dir: impl Into<PathBuf>) -> Result<Runtime> {
+        let artifact_dir = artifact_dir.into();
+        let meta = Meta::load(&artifact_dir)?;
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        Ok(Runtime { client, artifact_dir, meta })
+    }
+
+    /// The artifact shape contract.
+    pub fn meta(&self) -> Meta {
+        self.meta
+    }
+
+    /// PJRT platform string (e.g. `"cpu"`), for logs.
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load and compile `<artifact_dir>/<name>.hlo.txt`.
+    pub fn load(&self, name: &str) -> Result<Executable> {
+        let path = self.artifact_dir.join(format!("{name}.hlo.txt"));
+        self.load_path(&path)
+    }
+
+    /// Load and compile an HLO text file at an explicit path.
+    pub fn load_path(&self, path: &Path) -> Result<Executable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path is not UTF-8")?,
+        )
+        .with_context(|| format!("parse HLO text {} (run `make artifacts`)", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("PJRT compile {}", path.display()))?;
+        Ok(Executable::new(exe, path.display().to_string()))
+    }
+}
+
+impl std::fmt::Debug for Runtime {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Runtime")
+            .field("artifact_dir", &self.artifact_dir)
+            .field("meta", &self.meta)
+            .finish_non_exhaustive()
+    }
+}

@@ -1,0 +1,110 @@
+//! Typed execution helpers over a compiled PJRT executable.
+//!
+//! The AOT entry points are lowered with `return_tuple=True`, so every
+//! run returns one tuple literal; [`Executable::run`] unpacks it into
+//! its member literals and [`Executable::run_f32`] further converts to
+//! host `Vec<f32>`s — the only dtype the shape contract uses.
+
+use anyhow::{Context, Result};
+
+/// A compiled artifact plus its origin (for error messages).
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    origin: String,
+}
+
+impl Executable {
+    pub(crate) fn new(exe: xla::PjRtLoadedExecutable, origin: String) -> Self {
+        Executable { exe, origin }
+    }
+
+    /// Execute with literal inputs; returns the members of the result
+    /// tuple.
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let result = self
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .with_context(|| format!("execute {}", self.origin))?;
+        let literal = result[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetch result of {}", self.origin))?;
+        let parts = literal
+            .to_tuple()
+            .with_context(|| format!("untuple result of {}", self.origin))?;
+        Ok(parts)
+    }
+
+    /// Execute and convert every result-tuple member to a host
+    /// `Vec<f32>` (scalars become length-1 vectors).
+    pub fn run_f32(&self, inputs: &[xla::Literal]) -> Result<Vec<Vec<f32>>> {
+        self.run(inputs)?
+            .into_iter()
+            .enumerate()
+            .map(|(i, lit)| {
+                lit.to_vec::<f32>()
+                    .with_context(|| format!("result {i} of {} as f32", self.origin))
+            })
+            .collect()
+    }
+}
+
+impl std::fmt::Debug for Executable {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Executable").field("origin", &self.origin).finish_non_exhaustive()
+    }
+}
+
+/// Build the `(batch, dims)` feature literal, zero-padding each row to
+/// `dims` and the batch to `batch` rows.
+///
+/// The model is lowered at a fixed feature width (`meta.dims`); dataset
+/// rows may be narrower (hepmass 28, miniboone 50, tvads 124). Zero
+/// padding is exact for a linear model: padded coordinates contribute
+/// nothing to `x·w` and their trained weights stay 0.
+pub fn features_literal(rows: &[Vec<f32>], batch: usize, dims: usize) -> Result<xla::Literal> {
+    anyhow::ensure!(rows.len() <= batch, "batch overflow: {} > {batch}", rows.len());
+    let mut flat = vec![0f32; batch * dims];
+    for (i, row) in rows.iter().enumerate() {
+        anyhow::ensure!(row.len() <= dims, "feature row wider than model: {} > {dims}", row.len());
+        flat[i * dims..i * dims + row.len()].copy_from_slice(row);
+    }
+    Ok(xla::Literal::vec1(&flat).reshape(&[batch as i64, dims as i64])?)
+}
+
+/// Build the `(batch,)` label literal (0/1 as f32), zero-padded.
+pub fn labels_literal(labels: &[bool], batch: usize) -> Result<xla::Literal> {
+    anyhow::ensure!(labels.len() <= batch, "batch overflow");
+    let mut flat = vec![0f32; batch];
+    for (i, &l) in labels.iter().enumerate() {
+        flat[i] = f32::from(u8::from(l));
+    }
+    Ok(xla::Literal::vec1(&flat))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn features_pad_rows_and_batch() {
+        let rows = vec![vec![1.0, 2.0], vec![3.0]];
+        let lit = features_literal(&rows, 3, 4).unwrap();
+        let v = lit.to_vec::<f32>().unwrap();
+        assert_eq!(
+            v,
+            vec![1.0, 2.0, 0.0, 0.0, 3.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0]
+        );
+    }
+
+    #[test]
+    fn features_reject_overflow() {
+        assert!(features_literal(&[vec![0.0; 5]], 1, 4).is_err());
+        assert!(features_literal(&vec![Vec::new(); 3], 2, 4).is_err());
+    }
+
+    #[test]
+    fn labels_encode_and_pad() {
+        let lit = labels_literal(&[true, false, true], 5).unwrap();
+        assert_eq!(lit.to_vec::<f32>().unwrap(), vec![1.0, 0.0, 1.0, 0.0, 0.0]);
+    }
+}

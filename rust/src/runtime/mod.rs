@@ -1,0 +1,24 @@
+//! PJRT runtime: load and execute the AOT-compiled classifier.
+//!
+//! The JAX/Pallas model (python/compile) is lowered once to HLO *text*
+//! (`make artifacts`); this module loads those artifacts into a PJRT CPU
+//! client and drives them from rust — training loop and batch scorer —
+//! so Python never runs on the streaming path.
+//!
+//! * [`meta`] — minimal JSON parsing for `artifacts/meta.json` (the
+//!   shape contract; serde is unavailable offline).
+//! * [`client`] — PJRT client + HLO-text loading.
+//! * [`executable`] — typed execute helpers over `xla::Literal`s.
+//! * [`trainer`] — minibatch SGD through the `train_step` artifact.
+//! * [`scorer`] — batched scoring through the `score_batch` artifact.
+
+pub mod client;
+pub mod executable;
+pub mod meta;
+pub mod scorer;
+pub mod trainer;
+
+pub use client::Runtime;
+pub use meta::Meta;
+pub use scorer::Scorer;
+pub use trainer::{TrainReport, Trainer};

@@ -1,0 +1,65 @@
+//! Batched scoring through the `score_batch` artifact.
+//!
+//! Turns feature rows into classifier scores on the rust side of the
+//! stack — the producer end of the paper's pipeline (“we first receive a
+//! data point … we predict the missing label with a score”, §1). Rows
+//! are zero-padded to the artifact's feature width and scored in batches
+//! of `meta.score_batch`, with a short final batch padded and truncated.
+
+use anyhow::{ensure, Context, Result};
+
+use super::executable::{features_literal, Executable};
+use super::trainer::Params;
+use super::Runtime;
+
+/// Batch scorer bound to the `score_batch` artifact and fixed params.
+pub struct Scorer {
+    exec: Executable,
+    params: Params,
+    dims: usize,
+    batch: usize,
+}
+
+impl Scorer {
+    /// Load the `score_batch` artifact and bind trained parameters.
+    pub fn new(rt: &Runtime, params: Params) -> Result<Scorer> {
+        let meta = rt.meta();
+        ensure!(
+            params.w.len() == meta.dims,
+            "params width {} != model dims {}",
+            params.w.len(),
+            meta.dims
+        );
+        let exec = rt.load("score_batch").context("load score_batch artifact")?;
+        Ok(Scorer { exec, params, dims: meta.dims, batch: meta.score_batch })
+    }
+
+    /// Scoring batch size frozen into the artifact.
+    pub fn batch_size(&self) -> usize {
+        self.batch
+    }
+
+    /// Score arbitrary-length feature rows (internally batched). Scores
+    /// follow the paper's convention: larger ⇒ more likely negative.
+    pub fn score(&self, rows: &[Vec<f32>]) -> Result<Vec<f64>> {
+        let mut out = Vec::with_capacity(rows.len());
+        for chunk in rows.chunks(self.batch) {
+            let x = features_literal(chunk, self.batch, self.dims)?;
+            let w = xla::Literal::vec1(&self.params.w);
+            let b = xla::Literal::scalar(self.params.b);
+            let result = self.exec.run_f32(&[w, b, x])?;
+            ensure!(result.len() == 1, "score_batch must return (scores,)");
+            out.extend(result[0][..chunk.len()].iter().map(|&s| f64::from(s)));
+        }
+        Ok(out)
+    }
+}
+
+impl std::fmt::Debug for Scorer {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Scorer")
+            .field("dims", &self.dims)
+            .field("batch", &self.batch)
+            .finish_non_exhaustive()
+    }
+}

@@ -1,0 +1,128 @@
+//! Minibatch SGD training loop over the `train_step` artifact.
+//!
+//! The entire loop runs in rust: parameters live as host vectors, each
+//! step executes the fused AOT `train_step` (forward + Pallas gradient
+//! kernel + SGD update in one HLO module) and reads back the updated
+//! parameters and the pre-update loss.
+
+use anyhow::{ensure, Context, Result};
+
+use super::executable::{features_literal, labels_literal, Executable};
+use super::Runtime;
+use crate::stream::synth::Example;
+
+/// Model parameters on the host.
+#[derive(Clone, Debug)]
+pub struct Params {
+    /// Weight vector (length = `meta.dims`).
+    pub w: Vec<f32>,
+    /// Bias.
+    pub b: f32,
+}
+
+/// Outcome of a training run.
+#[derive(Clone, Debug)]
+pub struct TrainReport {
+    /// Final parameters.
+    pub params: Params,
+    /// Loss recorded at every step (pre-update).
+    pub losses: Vec<f32>,
+    /// Steps executed.
+    pub steps: usize,
+}
+
+impl TrainReport {
+    /// Mean loss over the first `n` steps.
+    pub fn early_loss(&self, n: usize) -> f32 {
+        mean(&self.losses[..n.min(self.losses.len())])
+    }
+
+    /// Mean loss over the final `n` steps.
+    pub fn late_loss(&self, n: usize) -> f32 {
+        let len = self.losses.len();
+        mean(&self.losses[len.saturating_sub(n)..])
+    }
+}
+
+fn mean(xs: &[f32]) -> f32 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f32>() / xs.len() as f32
+}
+
+/// SGD trainer bound to the `train_step` artifact.
+pub struct Trainer {
+    exec: Executable,
+    dims: usize,
+    batch: usize,
+    lr: f32,
+}
+
+impl Trainer {
+    /// Load the `train_step` artifact from a runtime.
+    pub fn new(rt: &Runtime, lr: f32) -> Result<Trainer> {
+        ensure!(lr > 0.0 && lr.is_finite(), "learning rate must be positive");
+        let meta = rt.meta();
+        let exec = rt.load("train_step").context("load train_step artifact")?;
+        Ok(Trainer { exec, dims: meta.dims, batch: meta.train_batch, lr })
+    }
+
+    /// Training batch size frozen into the artifact.
+    pub fn batch_size(&self) -> usize {
+        self.batch
+    }
+
+    /// Run `steps` minibatch SGD steps over `data` (cycled in order;
+    /// shuffle beforehand if desired). Starts from zero parameters.
+    pub fn train(&self, data: &[Example], steps: usize) -> Result<TrainReport> {
+        self.train_from(Params { w: vec![0.0; self.dims], b: 0.0 }, data, steps)
+    }
+
+    /// Run `steps` SGD steps starting from explicit parameters.
+    pub fn train_from(
+        &self,
+        mut params: Params,
+        data: &[Example],
+        steps: usize,
+    ) -> Result<TrainReport> {
+        ensure!(!data.is_empty(), "no training data");
+        ensure!(params.w.len() == self.dims, "params width != model dims");
+        let mut losses = Vec::with_capacity(steps);
+        let mut cursor = 0usize;
+        // Reusable row buffers to avoid re-allocating per step.
+        let mut rows: Vec<Vec<f32>> = Vec::with_capacity(self.batch);
+        let mut labels: Vec<bool> = Vec::with_capacity(self.batch);
+        for _ in 0..steps {
+            rows.clear();
+            labels.clear();
+            for _ in 0..self.batch {
+                let ex = &data[cursor];
+                rows.push(ex.features.clone());
+                labels.push(ex.label);
+                cursor = (cursor + 1) % data.len();
+            }
+            let x = features_literal(&rows, self.batch, self.dims)?;
+            let y = labels_literal(&labels, self.batch)?;
+            let w = xla::Literal::vec1(&params.w);
+            let b = xla::Literal::scalar(params.b);
+            let lr = xla::Literal::scalar(self.lr);
+            let out = self.exec.run_f32(&[w, b, x, y, lr])?;
+            ensure!(out.len() == 3, "train_step must return (w, b, loss)");
+            params.w = out[0].clone();
+            params.b = out[1][0];
+            losses.push(out[2][0]);
+        }
+        Ok(TrainReport { params, losses, steps })
+    }
+}
+
+impl std::fmt::Debug for Trainer {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Trainer")
+            .field("dims", &self.dims)
+            .field("batch", &self.batch)
+            .field("lr", &self.lr)
+            .finish_non_exhaustive()
+    }
+}

@@ -1,0 +1,129 @@
+//! Concept-drift injectors.
+//!
+//! The paper motivates windowed AUC monitoring with “changes in the
+//! underlying distribution or a system failure” (§1). These injectors
+//! transform a scored stream to reproduce the failure modes the monitor
+//! (coordinator::monitor) must catch:
+//!
+//! * [`Drift::Abrupt`] — at a point in the stream, a fraction of labels
+//!   flips (sudden regime change / upstream failure);
+//! * [`Drift::Gradual`] — the score-label association decays linearly
+//!   over a span (slow distribution shift);
+//! * [`Drift::NoiseRamp`] — score noise grows over a span (sensor or
+//!   feature-pipeline degradation).
+
+use super::rng::Pcg;
+
+/// A drift to inject into a scored stream.
+#[derive(Clone, Copy, Debug)]
+pub enum Drift {
+    /// From `at` onward, each label flips with probability `rate`.
+    Abrupt {
+        /// Stream index where the change happens.
+        at: usize,
+        /// Probability a post-change label flips.
+        rate: f64,
+    },
+    /// Between `from` and `to`, flip probability ramps 0 → `rate`.
+    Gradual {
+        /// Ramp start index.
+        from: usize,
+        /// Ramp end index (flip probability `rate` from here on).
+        to: usize,
+        /// Final flip probability.
+        rate: f64,
+    },
+    /// Between `from` and `to`, zero-mean score noise ramps 0 → `sd`;
+    /// scores stay clamped to [0, 1].
+    NoiseRamp {
+        /// Ramp start index.
+        from: usize,
+        /// Ramp end index.
+        to: usize,
+        /// Final noise standard deviation.
+        sd: f64,
+    },
+}
+
+impl Drift {
+    /// Apply the drift to a scored stream in place, deterministically.
+    pub fn apply(self, stream: &mut [(f64, bool)], seed: u64) {
+        let mut rng = Pcg::seed_stream(seed, 0xD21F7);
+        match self {
+            Drift::Abrupt { at, rate } => {
+                for pair in stream.iter_mut().skip(at) {
+                    if rng.chance(rate) {
+                        pair.1 = !pair.1;
+                    }
+                }
+            }
+            Drift::Gradual { from, to, rate } => {
+                assert!(to > from, "empty ramp");
+                for (i, pair) in stream.iter_mut().enumerate().skip(from) {
+                    let t = ((i - from) as f64 / (to - from) as f64).min(1.0);
+                    if rng.chance(rate * t) {
+                        pair.1 = !pair.1;
+                    }
+                }
+            }
+            Drift::NoiseRamp { from, to, sd } => {
+                assert!(to > from, "empty ramp");
+                for (i, pair) in stream.iter_mut().enumerate().skip(from) {
+                    let t = ((i - from) as f64 / (to - from) as f64).min(1.0);
+                    pair.0 = (pair.0 + rng.normal() * sd * t).clamp(0.0, 1.0);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::NaiveAuc;
+    use crate::stream::synth::{hepmass_like, Dataset};
+
+    fn clean_stream(n: usize) -> Vec<(f64, bool)> {
+        Dataset::new(hepmass_like().scaled(1000), 11).score_stream(n)
+    }
+
+    #[test]
+    fn abrupt_degrades_only_after_the_point() {
+        let mut s = clean_stream(4000);
+        let before_auc = NaiveAuc::of(&s[..2000]);
+        Drift::Abrupt { at: 2000, rate: 0.5 }.apply(&mut s, 1);
+        assert_eq!(NaiveAuc::of(&s[..2000]), before_auc, "prefix untouched");
+        let after = NaiveAuc::of(&s[2000..]);
+        assert!(after < 0.65, "full flip noise should kill AUC, got {after}");
+    }
+
+    #[test]
+    fn gradual_is_monotone_decay() {
+        let mut s = clean_stream(6000);
+        Drift::Gradual { from: 2000, to: 5000, rate: 0.5 }.apply(&mut s, 2);
+        let early = NaiveAuc::of(&s[2000..3000]);
+        let late = NaiveAuc::of(&s[4500..5500]);
+        assert!(early > late + 0.05, "decay not monotone: {early} vs {late}");
+    }
+
+    #[test]
+    fn noise_ramp_degrades_scores_not_labels() {
+        let mut s = clean_stream(4000);
+        let labels_before: Vec<bool> = s.iter().map(|p| p.1).collect();
+        Drift::NoiseRamp { from: 1000, to: 3000, sd: 0.4 }.apply(&mut s, 3);
+        let labels_after: Vec<bool> = s.iter().map(|p| p.1).collect();
+        assert_eq!(labels_before, labels_after);
+        let clean = NaiveAuc::of(&s[..1000]);
+        let noisy = NaiveAuc::of(&s[3000..]);
+        assert!(noisy < clean - 0.05, "noise must reduce AUC: {noisy} vs {clean}");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = clean_stream(1000);
+        let mut b = a.clone();
+        Drift::Abrupt { at: 100, rate: 0.3 }.apply(&mut a, 42);
+        Drift::Abrupt { at: 100, rate: 0.3 }.apply(&mut b, 42);
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,16 @@
+//! Stream sources, synthetic datasets and drift injection.
+//!
+//! * [`rng`] — deterministic PCG random numbers (no external crates);
+//! * [`synth`] — parametric generators standing in for the paper's UCI
+//!   datasets (DESIGN.md §Substitutions);
+//! * [`drift`] — concept-drift injectors for the monitoring scenario;
+//! * [`source`] — CSV stream I/O.
+
+pub mod drift;
+pub mod rng;
+pub mod source;
+pub mod synth;
+
+pub use drift::Drift;
+pub use rng::Pcg;
+pub use synth::{hepmass_like, miniboone_like, paper_datasets, tvads_like, Dataset, DatasetSpec};

@@ -1,0 +1,105 @@
+//! Stream sources and sinks.
+//!
+//! The coordinator consumes an iterator of `(score, label)` pairs; this
+//! module provides the ways to produce one — synthetic generators, CSV
+//! files (`score,label` per line), and pre-materialized vectors — plus
+//! the CSV writer used by experiment drivers to persist streams.
+
+use std::fs::File;
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+/// Read a scored stream from a CSV file with `score,label` lines
+/// (`label ∈ {0, 1}`; `#`-prefixed lines and a `score,label` header are
+/// skipped).
+pub fn read_csv(path: &Path) -> Result<Vec<(f64, bool)>> {
+    let file = File::open(path).with_context(|| format!("open {}", path.display()))?;
+    let mut out = Vec::new();
+    for (lineno, line) in BufReader::new(file).lines().enumerate() {
+        let line = line?;
+        let trimmed = line.trim();
+        if trimmed.is_empty() || trimmed.starts_with('#') || trimmed == "score,label" {
+            continue;
+        }
+        let mut parts = trimmed.split(',');
+        let (Some(score), Some(label)) = (parts.next(), parts.next()) else {
+            bail!("{}:{}: expected `score,label`", path.display(), lineno + 1);
+        };
+        let score: f64 = score
+            .trim()
+            .parse()
+            .with_context(|| format!("{}:{}: bad score", path.display(), lineno + 1))?;
+        if !score.is_finite() {
+            bail!("{}:{}: non-finite score", path.display(), lineno + 1);
+        }
+        let label = match label.trim() {
+            "1" | "true" => true,
+            "0" | "false" => false,
+            other => bail!("{}:{}: bad label {other:?}", path.display(), lineno + 1),
+        };
+        out.push((score, label));
+    }
+    Ok(out)
+}
+
+/// Write a scored stream as CSV (with header), the inverse of
+/// [`read_csv`].
+pub fn write_csv(path: &Path, stream: &[(f64, bool)]) -> Result<()> {
+    let file = File::create(path).with_context(|| format!("create {}", path.display()))?;
+    let mut w = BufWriter::new(file);
+    writeln!(w, "score,label")?;
+    for (score, label) in stream {
+        writeln!(w, "{score},{}", u8::from(*label))?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("streamauc-tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn roundtrip() {
+        let path = tmp("roundtrip.csv");
+        let stream = vec![(0.25, true), (0.5, false), (1e-9, true)];
+        write_csv(&path, &stream).unwrap();
+        assert_eq!(read_csv(&path).unwrap(), stream);
+    }
+
+    #[test]
+    fn skips_comments_and_header() {
+        let path = tmp("comments.csv");
+        std::fs::write(&path, "# comment\nscore,label\n0.5,1\n\n0.25,0\n").unwrap();
+        assert_eq!(read_csv(&path).unwrap(), vec![(0.5, true), (0.25, false)]);
+    }
+
+    #[test]
+    fn rejects_bad_label() {
+        let path = tmp("badlabel.csv");
+        std::fs::write(&path, "0.5,2\n").unwrap();
+        assert!(read_csv(&path).is_err());
+    }
+
+    #[test]
+    fn rejects_nan_score() {
+        let path = tmp("nan.csv");
+        std::fs::write(&path, "NaN,1\n").unwrap();
+        assert!(read_csv(&path).is_err());
+    }
+
+    #[test]
+    fn rejects_missing_field() {
+        let path = tmp("short.csv");
+        std::fs::write(&path, "0.5\n").unwrap();
+        assert!(read_csv(&path).is_err());
+    }
+}

@@ -1,0 +1,291 @@
+//! Synthetic dataset generators standing in for the paper's UCI datasets.
+//!
+//! The paper evaluates on three UCI datasets scored by a scikit-learn
+//! logistic regression (Table 1). Those datasets are not redistributable
+//! inside this environment, so each is replaced by a parametric generator
+//! that reproduces the *regime* the dataset exercises (DESIGN.md
+//! §Substitutions):
+//!
+//! | paper       | stand-in           | regime preserved                    |
+//! |-------------|--------------------|-------------------------------------|
+//! | Hepmass     | [`hepmass_like`]   | large test stream, balanced classes, well-separated scores (high AUC) |
+//! | Miniboone   | [`miniboone_like`] | class imbalance (28% positive), moderate overlap |
+//! | Tvads       | [`tvads_like`]     | low separability **and quantized scores** — many duplicate-score nodes |
+//!
+//! Generators produce *feature vectors + labels*; the classifier layers
+//! (L1/L2 via the PJRT runtime) turn features into scores on the real
+//! pipeline. For algorithm-only experiments, [`Dataset::score_stream`]
+//! shortcuts with the generator's analytic margin + noise, which follows
+//! the same sigmoid-margin family a trained logistic regression emits.
+
+use super::rng::Pcg;
+
+/// One labelled example: dense features + binary label.
+#[derive(Clone, Debug)]
+pub struct Example {
+    /// Dense feature vector (length = [`DatasetSpec::dims`]).
+    pub features: Vec<f32>,
+    /// True label (`ℓ = 1` is the positive / anomalous class).
+    pub label: bool,
+}
+
+/// Parameters of a two-class Gaussian-mixture dataset with an analytic
+/// margin, mimicking one of the paper's benchmark datasets.
+#[derive(Clone, Debug)]
+pub struct DatasetSpec {
+    /// Dataset name used in reports (matches the paper's tables).
+    pub name: &'static str,
+    /// Feature dimensionality.
+    pub dims: usize,
+    /// Training-set size (Table 1).
+    pub train_size: usize,
+    /// Test-set (stream) size (Table 1).
+    pub test_size: usize,
+    /// P(label = 1).
+    pub pos_rate: f64,
+    /// Distance between class means along the discriminative direction;
+    /// controls achievable AUC.
+    pub separation: f64,
+    /// Per-class feature noise.
+    pub noise: f64,
+    /// If set, scores are quantized to this many distinct levels —
+    /// reproducing Tvads' duplicate-heavy score distribution.
+    pub quantize: Option<u32>,
+}
+
+impl DatasetSpec {
+    /// Scaled-down sizes for tests and quick runs (`scale` divides both
+    /// train and test sizes, minimum 100).
+    pub fn scaled(mut self, scale: usize) -> Self {
+        self.train_size = (self.train_size / scale).max(100);
+        self.test_size = (self.test_size / scale).max(100);
+        self
+    }
+}
+
+/// Hepmass-like: 28 features, 50/50 classes, strong separation. The
+/// paper's largest stream (500k train / 3.5M test).
+pub fn hepmass_like() -> DatasetSpec {
+    DatasetSpec {
+        name: "hepmass",
+        dims: 28,
+        train_size: 500_000,
+        test_size: 3_500_000,
+        pos_rate: 0.5,
+        separation: 2.4,
+        noise: 1.0,
+        quantize: None,
+    }
+}
+
+/// Miniboone-like: 50 features, 28% positives, moderate overlap
+/// (30k train / 100k test).
+pub fn miniboone_like() -> DatasetSpec {
+    DatasetSpec {
+        name: "miniboone",
+        dims: 50,
+        train_size: 30_064,
+        test_size: 100_000,
+        pos_rate: 0.28,
+        separation: 1.6,
+        noise: 1.0,
+        quantize: None,
+    }
+}
+
+/// Tvads-like: wide features, near-balanced, weak separation and
+/// *quantized* scores (40k train / 89k test). The quantization forces
+/// duplicate-score tree nodes, the structurally distinct regime.
+pub fn tvads_like() -> DatasetSpec {
+    DatasetSpec {
+        name: "tvads",
+        dims: 124,
+        train_size: 40_265,
+        test_size: 89_420,
+        pos_rate: 0.45,
+        separation: 1.0,
+        noise: 1.3,
+        quantize: Some(256),
+    }
+}
+
+/// The paper's three benchmark datasets (Table 1 order).
+pub fn paper_datasets() -> Vec<DatasetSpec> {
+    vec![hepmass_like(), miniboone_like(), tvads_like()]
+}
+
+/// Instantiated generator: draws examples and analytic score streams.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    spec: DatasetSpec,
+    /// Unit discriminative direction (class mean offset).
+    direction: Vec<f64>,
+    rng: Pcg,
+}
+
+impl Dataset {
+    /// Instantiate a spec with a seed (direction and draws deterministic).
+    pub fn new(spec: DatasetSpec, seed: u64) -> Self {
+        let mut rng = Pcg::seed_stream(seed, 0xD5);
+        let mut direction: Vec<f64> = (0..spec.dims).map(|_| rng.normal()).collect();
+        let norm = direction.iter().map(|x| x * x).sum::<f64>().sqrt().max(1e-12);
+        for d in &mut direction {
+            *d /= norm;
+        }
+        Dataset { spec, direction, rng }
+    }
+
+    /// The spec this dataset was built from.
+    pub fn spec(&self) -> &DatasetSpec {
+        &self.spec
+    }
+
+    /// Draw one labelled example. Positives are shifted by `−separation`
+    /// along the discriminative direction (lower margin ⇒ lower score,
+    /// matching the paper's convention: larger score ⇒ more negative).
+    pub fn example(&mut self) -> Example {
+        let label = self.rng.chance(self.spec.pos_rate);
+        let shift = if label { -self.spec.separation } else { 0.0 };
+        let features: Vec<f32> = self
+            .direction
+            .iter()
+            .map(|&d| (d * shift + self.rng.normal() * self.spec.noise) as f32)
+            .collect();
+        Example { features, label }
+    }
+
+    /// Draw a batch of examples.
+    pub fn examples(&mut self, n: usize) -> Vec<Example> {
+        (0..n).map(|_| self.example()).collect()
+    }
+
+    /// Analytic score for an example: the logistic of its margin along
+    /// the discriminative direction — the Bayes-optimal family the
+    /// trained logistic regression converges to. Quantized per spec.
+    pub fn analytic_score(&self, ex: &Example) -> f64 {
+        let margin: f64 = ex
+            .features
+            .iter()
+            .zip(&self.direction)
+            .map(|(&f, &d)| f64::from(f) * d)
+            .sum::<f64>()
+            + 0.5 * self.spec.separation;
+        let score = 1.0 / (1.0 + (-margin).exp());
+        self.quantize(score)
+    }
+
+    /// Apply the spec's score quantization.
+    pub fn quantize(&self, score: f64) -> f64 {
+        match self.spec.quantize {
+            Some(levels) => (score * f64::from(levels)).floor() / f64::from(levels),
+            None => score,
+        }
+    }
+
+    /// Draw `n` scored pairs `(score, label)` from the analytic-score
+    /// shortcut (no classifier in the loop).
+    pub fn score_stream(&mut self, n: usize) -> Vec<(f64, bool)> {
+        (0..n)
+            .map(|_| {
+                let ex = self.example();
+                (self.analytic_score(&ex), ex.label)
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::NaiveAuc;
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = Dataset::new(miniboone_like().scaled(100), 7);
+        let mut b = Dataset::new(miniboone_like().scaled(100), 7);
+        for _ in 0..50 {
+            let (ea, eb) = (a.example(), b.example());
+            assert_eq!(ea.features, eb.features);
+            assert_eq!(ea.label, eb.label);
+        }
+    }
+
+    #[test]
+    fn pos_rate_respected() {
+        for spec in paper_datasets() {
+            let rate = spec.pos_rate;
+            let mut d = Dataset::new(spec, 1);
+            let n = 20_000;
+            let pos = (0..n).filter(|_| d.example().label).count();
+            let got = pos as f64 / n as f64;
+            assert!((got - rate).abs() < 0.02, "{}: {got} vs {rate}", d.spec().name);
+        }
+    }
+
+    #[test]
+    fn analytic_scores_discriminate_as_specified() {
+        // Separation ordering must translate into AUC ordering, with
+        // hepmass clearly high and tvads clearly lower.
+        let mut aucs = std::collections::HashMap::new();
+        for spec in paper_datasets() {
+            let name = spec.name;
+            let mut d = Dataset::new(spec, 3);
+            let pairs = d.score_stream(8000);
+            aucs.insert(name, NaiveAuc::of(&pairs));
+        }
+        let (h, m, t) = (aucs["hepmass"], aucs["miniboone"], aucs["tvads"]);
+        assert!(h > 0.90, "hepmass AUC {h}");
+        assert!(m > 0.75 && m < h, "miniboone AUC {m}");
+        assert!(t > 0.60 && t < m, "tvads AUC {t}");
+    }
+
+    #[test]
+    fn quantization_produces_duplicates() {
+        let mut d = Dataset::new(tvads_like().scaled(100), 5);
+        let pairs = d.score_stream(2000);
+        let mut scores: Vec<f64> = pairs.iter().map(|p| p.0).collect();
+        scores.sort_by(f64::total_cmp);
+        scores.dedup();
+        assert!(
+            scores.len() <= 256,
+            "tvads must quantize to ≤256 levels, got {}",
+            scores.len()
+        );
+        let mut d = Dataset::new(hepmass_like().scaled(1000), 5);
+        let pairs = d.score_stream(2000);
+        let mut scores: Vec<f64> = pairs.iter().map(|p| p.0).collect();
+        scores.sort_by(f64::total_cmp);
+        scores.dedup();
+        assert!(scores.len() > 1900, "hepmass scores continuous");
+    }
+
+    #[test]
+    fn scores_are_valid_probabilities() {
+        for spec in paper_datasets() {
+            let mut d = Dataset::new(spec.scaled(100), 9);
+            for (s, _) in d.score_stream(1000) {
+                assert!((0.0..=1.0).contains(&s), "score {s} out of range");
+            }
+        }
+    }
+
+    #[test]
+    fn scaled_reduces_sizes() {
+        let s = hepmass_like().scaled(1000);
+        assert_eq!(s.train_size, 500);
+        assert_eq!(s.test_size, 3500);
+        let tiny = hepmass_like().scaled(usize::MAX);
+        assert_eq!(tiny.train_size, 100);
+    }
+
+    #[test]
+    fn table1_sizes_match_paper() {
+        let specs = paper_datasets();
+        assert_eq!(specs[0].train_size, 500_000);
+        assert_eq!(specs[0].test_size, 3_500_000);
+        assert_eq!(specs[1].train_size, 30_064);
+        assert_eq!(specs[1].test_size, 100_000);
+        assert_eq!(specs[2].train_size, 40_265);
+        assert_eq!(specs[2].test_size, 89_420);
+    }
+}

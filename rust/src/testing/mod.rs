@@ -1,0 +1,129 @@
+//! In-repo property-testing harness.
+//!
+//! `proptest` is not available in this offline environment (see DESIGN.md
+//! §Substitutions), so invariants are exercised with a deterministic
+//! randomized harness: each property runs over many seeded cases, and a
+//! failure reports the case seed for exact replay. Shrinking is
+//! approximated by replaying with geometrically shorter operation
+//! prefixes (the op-sequence generators all take an explicit length).
+
+pub use crate::stream::rng::Pcg;
+
+/// Run `prop` for `cases` deterministic cases derived from `master_seed`.
+///
+/// On panic, re-raises with the failing case seed in the message so the
+/// case can be replayed in isolation:
+/// `check(0xBEEF, 1, |rng| ...)` with the printed seed.
+pub fn check(master_seed: u64, cases: u64, mut prop: impl FnMut(&mut Pcg)) {
+    for case in 0..cases {
+        let seed = master_seed ^ case.wrapping_mul(0x9e3779b97f4a7c15);
+        let mut rng = Pcg::seed(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            prop(&mut rng);
+        }));
+        if let Err(err) = result {
+            let msg = err
+                .downcast_ref::<String>()
+                .map(String::as_str)
+                .or_else(|| err.downcast_ref::<&str>().copied())
+                .unwrap_or("<non-string panic>");
+            panic!("property failed (case {case}, replay seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// A random operation on a sliding-window estimator, drawn by the
+/// generators below and consumed by the coordinator property tests.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Op {
+    /// Insert a (score, label) pair into the window.
+    Insert { score: f64, pos: bool },
+    /// Remove a previously inserted pair (generators only emit removals of
+    /// live pairs).
+    Remove { score: f64, pos: bool },
+}
+
+/// Generate a window-like op sequence: bounded live multiset, scores drawn
+/// from a small grid (forcing duplicate-score nodes, the regime where the
+/// paper's pseudo-code is subtlest) or a continuum, removals in FIFO or
+/// random order.
+pub fn gen_ops(rng: &mut Pcg, len: usize, max_live: usize, score_grid: Option<u64>) -> Vec<Op> {
+    let mut ops = Vec::with_capacity(len);
+    let mut live: Vec<(f64, bool)> = Vec::new();
+    let fifo = rng.chance(0.5);
+    for _ in 0..len {
+        let must_remove = live.len() >= max_live;
+        let must_insert = live.is_empty();
+        let insert = must_insert || (!must_remove && rng.chance(0.55));
+        if insert {
+            let score = match score_grid {
+                Some(g) => rng.below(g) as f64 / g as f64,
+                None => rng.uniform(),
+            };
+            let pos = rng.chance(0.5);
+            live.push((score, pos));
+            ops.push(Op::Insert { score, pos });
+        } else {
+            let idx = if fifo { 0 } else { rng.below(live.len() as u64) as usize };
+            let (score, pos) = live.remove(idx);
+            ops.push(Op::Remove { score, pos });
+        }
+    }
+    ops
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_runs_all_cases() {
+        let mut n = 0;
+        check(42, 10, |_| n += 1);
+        assert_eq!(n, 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "replay seed")]
+    fn check_reports_seed_on_failure() {
+        check(42, 10, |rng| {
+            assert!(rng.below(10) < 9, "drew a 9");
+        });
+    }
+
+    #[test]
+    fn gen_ops_removals_are_live() {
+        let mut rng = Pcg::seed(1);
+        for _ in 0..50 {
+            let ops = gen_ops(&mut rng, 200, 20, Some(8));
+            let mut live: Vec<(f64, bool)> = Vec::new();
+            for op in ops {
+                match op {
+                    Op::Insert { score, pos } => live.push((score, pos)),
+                    Op::Remove { score, pos } => {
+                        let i = live
+                            .iter()
+                            .position(|&(s, p)| s == score && p == pos)
+                            .expect("removal of dead pair");
+                        live.remove(i);
+                    }
+                }
+            }
+            assert!(live.len() <= 20);
+        }
+    }
+
+    #[test]
+    fn gen_ops_respects_max_live() {
+        let mut rng = Pcg::seed(2);
+        let ops = gen_ops(&mut rng, 500, 10, None);
+        let mut live = 0i64;
+        for op in ops {
+            match op {
+                Op::Insert { .. } => live += 1,
+                Op::Remove { .. } => live -= 1,
+            }
+            assert!(live <= 10 && live >= 0);
+        }
+    }
+}

@@ -1,0 +1,122 @@
+//! Cross-module integration over the pure-rust pipeline (no artifacts
+//! needed): synthetic streams → window driver → estimators → monitor,
+//! checked against the naive oracle throughout.
+
+use streamauc::coordinator::window::Window;
+use streamauc::coordinator::{
+    ApproxAuc, AucEstimator, AucMonitor, ExactAuc, MonitorEvent, NaiveAuc,
+};
+use streamauc::stream::synth::{paper_datasets, Dataset};
+use streamauc::stream::Drift;
+
+#[test]
+fn approx_and_exact_agree_on_every_paper_dataset() {
+    for spec in paper_datasets() {
+        let name = spec.name;
+        let mut data = Dataset::new(spec.scaled(200), 1);
+        let stream = data.score_stream(3000);
+        for eps in [0.01, 0.1] {
+            let mut approx = Window::with_estimator(500, ApproxAuc::new(eps));
+            let mut exact = Window::with_estimator(500, ExactAuc::new());
+            let mut max_rel = 0.0f64;
+            for &(s, l) in &stream {
+                approx.push(s, l);
+                exact.push(s, l);
+                let (a, e) = (approx.auc(), exact.auc());
+                if e > 0.0 {
+                    max_rel = max_rel.max((a - e).abs() / e);
+                }
+                assert!(
+                    (a - e).abs() <= eps * e / 2.0 + 1e-12,
+                    "{name} ε={eps}: {a} vs {e}"
+                );
+            }
+            // Paper §6: the observed error is well below the guarantee.
+            assert!(
+                max_rel <= eps / 2.0,
+                "{name} ε={eps}: max rel err {max_rel} exceeds ε/2"
+            );
+        }
+    }
+}
+
+#[test]
+fn windowed_estimates_match_naive_recompute_exactly_with_eps0() {
+    let mut data = Dataset::new(paper_datasets().swap_remove(2).scaled(500), 3); // tvads: duplicates
+    let stream = data.score_stream(1200);
+    let mut approx = Window::with_estimator(300, ApproxAuc::new(0.0));
+    let mut raw: std::collections::VecDeque<(f64, bool)> = Default::default();
+    for &(s, l) in &stream {
+        approx.push(s, l);
+        raw.push_back((s, l));
+        if raw.len() > 300 {
+            raw.pop_front();
+        }
+        let window: Vec<_> = raw.iter().copied().collect();
+        let want = NaiveAuc::of(&window);
+        let got = approx.auc();
+        assert!((got - want).abs() < 1e-12, "{got} vs {want}");
+    }
+}
+
+#[test]
+fn monitor_catches_injected_abrupt_drift() {
+    let mut data = Dataset::new(paper_datasets().swap_remove(0).scaled(500), 5);
+    let mut stream = data.score_stream(8000);
+    Drift::Abrupt { at: 5000, rate: 0.6 }.apply(&mut stream, 99);
+
+    let mut window = Window::with_estimator(500, ApproxAuc::new(0.05));
+    let mut monitor = AucMonitor::new(0.001, 0.08, 100, 500);
+    let mut alarm_at = None;
+    for (i, &(s, l)) in stream.iter().enumerate() {
+        window.push(s, l);
+        if window.is_full() {
+            if monitor.observe(window.auc()) == MonitorEvent::Alarm {
+                alarm_at = alarm_at.or(Some(i));
+            }
+        }
+    }
+    let at = alarm_at.expect("monitor must alarm on 60% label-flip drift");
+    assert!(at > 5000, "alarm before the drift (false positive) at {at}");
+    assert!(
+        at < 7000,
+        "alarm too late ({at}); window 500 + patience 100 should catch it quickly"
+    );
+}
+
+#[test]
+fn monitor_is_quiet_on_clean_streams() {
+    let mut data = Dataset::new(paper_datasets().swap_remove(1).scaled(200), 8);
+    let stream = data.score_stream(6000);
+    let mut window = Window::with_estimator(500, ApproxAuc::new(0.05));
+    let mut monitor = AucMonitor::new(0.001, 0.08, 100, 500);
+    for &(s, l) in &stream {
+        window.push(s, l);
+        if window.is_full() {
+            assert_ne!(
+                monitor.observe(window.auc()),
+                MonitorEvent::Alarm,
+                "false alarm on a clean stream"
+            );
+        }
+    }
+}
+
+#[test]
+fn csv_roundtrip_preserves_estimates() {
+    let dir = std::env::temp_dir().join("streamauc-pipeline");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("stream.csv");
+    let mut data = Dataset::new(paper_datasets().swap_remove(1).scaled(500), 13);
+    let stream = data.score_stream(2000);
+    streamauc::stream::source::write_csv(&path, &stream).unwrap();
+    let loaded = streamauc::stream::source::read_csv(&path).unwrap();
+    assert_eq!(stream, loaded);
+    let mut a = ApproxAuc::new(0.1);
+    let mut b = ApproxAuc::new(0.1);
+    for (&(s1, l1), &(s2, l2)) in stream.iter().zip(&loaded) {
+        a.insert(s1, l1);
+        b.insert(s2, l2);
+    }
+    assert_eq!(a.auc(), b.auc());
+}

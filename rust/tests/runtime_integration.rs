@@ -1,0 +1,125 @@
+//! End-to-end runtime integration: PJRT loads the AOT artifacts, the
+//! rust training loop reaches a discriminative model, and the scorer
+//! feeds the sliding-window estimator.
+//!
+//! Requires `artifacts/` (run `make artifacts`); every test is skipped
+//! with a notice when the artifacts are absent so `cargo test` stays
+//! green in a fresh checkout.
+
+use streamauc::coordinator::{NaiveAuc, SlidingAuc};
+use streamauc::runtime::{Runtime, Scorer, Trainer};
+use streamauc::runtime::trainer::Params;
+use streamauc::stream::synth::{hepmass_like, miniboone_like, Dataset};
+
+fn runtime() -> Option<Runtime> {
+    let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+    if !std::path::Path::new(dir).join("meta.json").exists() {
+        eprintln!("skipping: no artifacts (run `make artifacts`)");
+        return None;
+    }
+    Some(Runtime::new(dir).expect("create runtime"))
+}
+
+#[test]
+fn meta_contract_loaded() {
+    let Some(rt) = runtime() else { return };
+    let meta = rt.meta();
+    assert_eq!(meta.dims, 128);
+    assert_eq!(meta.score_batch, 1024);
+    assert_eq!(meta.train_batch, 256);
+    assert_eq!(rt.platform(), "cpu");
+}
+
+#[test]
+fn zero_params_score_half() {
+    let Some(rt) = runtime() else { return };
+    let params = Params { w: vec![0.0; rt.meta().dims], b: 0.0 };
+    let scorer = Scorer::new(&rt, params).unwrap();
+    let rows = vec![vec![1.0f32; 28]; 10];
+    let scores = scorer.score(&rows).unwrap();
+    assert_eq!(scores.len(), 10);
+    for s in scores {
+        assert!((s - 0.5).abs() < 1e-6, "zero model must score 0.5, got {s}");
+    }
+}
+
+#[test]
+fn scorer_handles_partial_and_multi_batches() {
+    let Some(rt) = runtime() else { return };
+    let meta = rt.meta();
+    let params = Params { w: vec![0.01; meta.dims], b: -0.1 };
+    let scorer = Scorer::new(&rt, params).unwrap();
+    // 1 element, one full batch, and one-and-a-half batches.
+    for n in [1, meta.score_batch, meta.score_batch + meta.score_batch / 2] {
+        let rows: Vec<Vec<f32>> = (0..n).map(|i| vec![(i % 7) as f32 * 0.1; 50]).collect();
+        let scores = scorer.score(&rows).unwrap();
+        assert_eq!(scores.len(), n);
+        assert!(scores.iter().all(|s| (0.0..=1.0).contains(s)));
+        // Identical rows must score identically (padding is consistent).
+        let s0 = scorer.score(&rows[..1]).unwrap()[0];
+        assert!((scores[0] - s0).abs() < 1e-6);
+    }
+}
+
+#[test]
+fn training_reduces_loss_and_discriminates() {
+    let Some(rt) = runtime() else { return };
+    let mut data = Dataset::new(miniboone_like().scaled(20), 42);
+    let train = data.examples(4000);
+    let trainer = Trainer::new(&rt, 0.5).unwrap();
+    let report = trainer.train(&train, 120).unwrap();
+    let early = report.early_loss(10);
+    let late = report.late_loss(10);
+    assert!(
+        late < early * 0.8,
+        "loss must drop substantially: {early} -> {late}"
+    );
+
+    // Score a held-out stream and check AUC through the estimator stack.
+    let test = data.examples(4000);
+    let scorer = Scorer::new(&rt, report.params).unwrap();
+    let rows: Vec<Vec<f32>> = test.iter().map(|e| e.features.clone()).collect();
+    let scores = scorer.score(&rows).unwrap();
+    let pairs: Vec<(f64, bool)> = scores
+        .iter()
+        .zip(&test)
+        .map(|(&s, e)| (s, e.label))
+        .collect();
+    let auc = NaiveAuc::of(&pairs);
+    assert!(auc > 0.85, "trained model AUC {auc} too low");
+
+    // The paper's full pipeline: feed the scored stream into the
+    // approximate sliding window and compare against exact.
+    let mut window = SlidingAuc::new(1000, 0.05);
+    for &(s, l) in &pairs {
+        window.push(s, l);
+    }
+    let est = window.auc();
+    let exact = window.exact_auc();
+    assert!(
+        (est - exact).abs() <= 0.05 * exact / 2.0 + 1e-12,
+        "windowed estimate {est} vs exact {exact}"
+    );
+}
+
+#[test]
+fn training_is_deterministic() {
+    let Some(rt) = runtime() else { return };
+    let mut data = Dataset::new(hepmass_like().scaled(1000), 7);
+    let train = data.examples(1024);
+    let trainer = Trainer::new(&rt, 0.2).unwrap();
+    let a = trainer.train(&train, 10).unwrap();
+    let b = trainer.train(&train, 10).unwrap();
+    assert_eq!(a.params.w, b.params.w);
+    assert_eq!(a.params.b, b.params.b);
+    assert_eq!(a.losses, b.losses);
+}
+
+#[test]
+fn trainer_rejects_bad_inputs() {
+    let Some(rt) = runtime() else { return };
+    assert!(Trainer::new(&rt, 0.0).is_err());
+    assert!(Trainer::new(&rt, f32::NAN).is_err());
+    let trainer = Trainer::new(&rt, 0.1).unwrap();
+    assert!(trainer.train(&[], 5).is_err());
+}
