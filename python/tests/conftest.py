@@ -1,0 +1,9 @@
+"""Put the ``python/`` layer root on sys.path so ``from compile import …``
+works when pytest is invoked from the repository root (as CI does)."""
+
+import sys
+from pathlib import Path
+
+LAYER_ROOT = Path(__file__).resolve().parent.parent
+if str(LAYER_ROOT) not in sys.path:
+    sys.path.insert(0, str(LAYER_ROOT))

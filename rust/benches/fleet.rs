@@ -1,0 +1,94 @@
+//! Fleet ingestion throughput: updates/sec versus stream count,
+//! batched (`push_batch`) against the naive one-at-a-time loop.
+//!
+//! `cargo bench --bench fleet [-- --events N]`
+//!
+//! Each row streams the same pre-generated bursty event soup into a
+//! fresh fleet three ways:
+//!
+//! * `one-at-a-time` — `push` per event: full dispatch (stream-id hash
+//!   + shard index probe) on every update;
+//! * `batched` — `push_batch` in chunks of 4096: per-shard bucketing
+//!   with the stream lookup amortized over same-stream runs;
+//! * `batched+monitor` — ditto with the per-stream drift monitor on
+//!   (adds one `O(|C|)` AUC read per update), the full service
+//!   configuration.
+//!
+//! Expected shape: batched ≥ one-at-a-time everywhere, with the gap
+//! widening as the stream count (and thus the dispatch share of the
+//! per-event cost) grows; absolute throughput drops from 1 stream to
+//! 10k streams as the working set leaves cache.
+
+use std::time::Instant;
+
+use streamauc::fleet::{AucFleet, FleetConfig, StreamConfig};
+use streamauc::stream::MultiStream;
+
+const WINDOW: usize = 100;
+const EPSILON: f64 = 0.1;
+const BATCH: usize = 4096;
+
+fn fresh_fleet(monitor: bool) -> AucFleet {
+    let stream_defaults = if monitor {
+        StreamConfig::new(WINDOW, EPSILON)
+    } else {
+        StreamConfig::new(WINDOW, EPSILON).without_monitor()
+    };
+    AucFleet::new(FleetConfig { shards: 64, stream_defaults })
+}
+
+fn throughput(events: &[(u64, f64, bool)], mut ingest: impl FnMut(&[(u64, f64, bool)])) -> f64 {
+    let start = Instant::now();
+    ingest(events);
+    events.len() as f64 / start.elapsed().as_secs_f64()
+}
+
+fn main() {
+    let mut events_per_row = 400_000usize;
+    let args: Vec<String> = std::env::args().collect();
+    if let Some(i) = args.iter().position(|a| a == "--events") {
+        events_per_row = args.get(i + 1).expect("--events N").parse().expect("--events N");
+    }
+
+    println!("== fleet: ingestion throughput, batched vs one-at-a-time ==");
+    println!("   (k={WINDOW}, ε={EPSILON}, batch={BATCH}, {events_per_row} events/row)\n");
+    println!(
+        "{:>8}  {:>14}  {:>14}  {:>7}  {:>16}  {:>8}",
+        "streams", "one-at-a-time", "batched", "gain", "batched+monitor", "live"
+    );
+
+    for &n_streams in &[1usize, 100, 10_000] {
+        // Pre-generate outside the timed region; bursty + mildly skewed
+        // traffic (the regime push_batch's run-grouping exploits).
+        let mut gen = MultiStream::new(n_streams, 0xBE7C).with_mean_burst(8.0);
+        let soup = gen.next_batch(events_per_row);
+
+        let mut fleet = fresh_fleet(false);
+        let one = throughput(&soup, |evs| {
+            for &(id, s, l) in evs {
+                fleet.push(id, s, l);
+            }
+        });
+        let live = fleet.stream_count();
+
+        let mut fleet = fresh_fleet(false);
+        let batched = throughput(&soup, |evs| {
+            for chunk in evs.chunks(BATCH) {
+                fleet.push_batch(chunk);
+            }
+        });
+
+        let mut fleet = fresh_fleet(true);
+        let monitored = throughput(&soup, |evs| {
+            for chunk in evs.chunks(BATCH) {
+                fleet.push_batch(chunk);
+            }
+        });
+
+        println!(
+            "{n_streams:>8}  {one:>12.0}/s  {batched:>12.0}/s  {:>6.2}x  {monitored:>14.0}/s  {live:>8}",
+            batched / one
+        );
+    }
+    println!("\n(gain = batched / one-at-a-time; live = distinct streams touched)");
+}

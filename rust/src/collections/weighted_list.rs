@@ -198,6 +198,7 @@ impl WeightedList {
     /// and `n` are the label sums over `[s(u), s(v))` *at the time of the
     /// call*. Splits `u`'s gap: `gp(u)′ = p`, `gp(v)′ = gp(u) − p` (same
     /// for `gn`). `key`/`vp`/`vn` seed the new cell's caches. `O(1)`.
+    #[allow(clippy::too_many_arguments)] // mirrors the paper's Add(L, u, v, p, n) plus caches
     pub fn insert_after(
         &mut self,
         u: CellId,

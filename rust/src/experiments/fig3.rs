@@ -81,7 +81,7 @@ pub fn sweep(cfg: ExpConfig, windows: &[usize]) -> Vec<Point> {
 /// Build the Figure 3 table.
 pub fn run(cfg: ExpConfig) -> Table {
     let mut table = Table::new(
-        format!("fig3: per-event cost vs window size (miniboone, ≥4k events per k)"),
+        "fig3: per-event cost vs window size (miniboone, ≥4k events per k)",
         &[
             "window_k",
             "exact/event",

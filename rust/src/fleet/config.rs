@@ -1,0 +1,116 @@
+//! Fleet and per-stream configuration.
+//!
+//! Every stream in an [`AucFleet`](super::AucFleet) owns an independent
+//! sliding window; the fleet applies [`FleetConfig::stream_defaults`]
+//! to streams it has never seen and per-stream overrides registered
+//! with [`AucFleet::configure_stream`](super::AucFleet::configure_stream)
+//! otherwise. All configs are plain `Copy` data so the hot ingestion
+//! path never clones heap state.
+
+use crate::coordinator::AucMonitor;
+
+/// Drift-monitor parameters for one stream (see [`AucMonitor::new`] for
+/// the λ-vs-window guidance).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct MonitorConfig {
+    /// EWMA decay factor for the baseline (weight of the new sample).
+    pub lambda: f64,
+    /// Absolute AUC margin below baseline that counts as degradation.
+    pub margin: f64,
+    /// Consecutive degraded observations before the alarm fires.
+    pub patience: u32,
+    /// Observations before the baseline is trusted.
+    pub warmup: u32,
+}
+
+impl Default for MonitorConfig {
+    fn default() -> Self {
+        // Tuned for the default stream window of 500: baseline time
+        // constant ≫ window, margin above windowed-estimate noise.
+        MonitorConfig { lambda: 0.001, margin: 0.08, patience: 100, warmup: 500 }
+    }
+}
+
+impl MonitorConfig {
+    /// Instantiate the monitor.
+    pub fn build(&self) -> AucMonitor {
+        AucMonitor::new(self.lambda, self.margin, self.patience, self.warmup)
+    }
+}
+
+/// Per-stream estimator configuration.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct StreamConfig {
+    /// Sliding-window capacity `k`.
+    pub window: usize,
+    /// Approximation parameter `ε ≥ 0` (`|ãuc − auc| ≤ ε·auc/2`).
+    pub epsilon: f64,
+    /// Drift monitor; `None` disables monitoring for the stream (saves
+    /// one `O(|C|)` AUC read per update).
+    pub monitor: Option<MonitorConfig>,
+}
+
+impl Default for StreamConfig {
+    fn default() -> Self {
+        StreamConfig { window: 500, epsilon: 0.05, monitor: Some(MonitorConfig::default()) }
+    }
+}
+
+impl StreamConfig {
+    /// Window/ε constructor with default monitoring.
+    pub fn new(window: usize, epsilon: f64) -> Self {
+        StreamConfig { window, epsilon, ..Default::default() }
+    }
+
+    /// Disable the drift monitor.
+    pub fn without_monitor(mut self) -> Self {
+        self.monitor = None;
+        self
+    }
+
+    /// Replace the drift monitor parameters.
+    pub fn with_monitor(mut self, monitor: MonitorConfig) -> Self {
+        self.monitor = Some(monitor);
+        self
+    }
+}
+
+/// Fleet-wide configuration.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FleetConfig {
+    /// Shard count; rounded up to the next power of two, minimum 1.
+    /// Streams are distributed by a mixed hash of their id, so shard
+    /// occupancy stays balanced regardless of id patterns.
+    pub shards: usize,
+    /// Configuration applied to streams without an explicit override.
+    pub stream_defaults: StreamConfig,
+}
+
+impl Default for FleetConfig {
+    fn default() -> Self {
+        FleetConfig { shards: 64, stream_defaults: StreamConfig::default() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builders_compose() {
+        let c = StreamConfig::new(200, 0.1);
+        assert_eq!(c.window, 200);
+        assert_eq!(c.epsilon, 0.1);
+        assert!(c.monitor.is_some());
+        assert!(c.without_monitor().monitor.is_none());
+        let m = MonitorConfig { lambda: 0.01, margin: 0.1, patience: 5, warmup: 10 };
+        assert_eq!(StreamConfig::new(10, 0.5).with_monitor(m).monitor, Some(m));
+    }
+
+    #[test]
+    fn monitor_config_builds() {
+        let m = MonitorConfig::default().build();
+        assert!(!m.is_alarmed());
+        assert_eq!(m.baseline(), 0.0);
+    }
+}

@@ -1,0 +1,562 @@
+//! Multi-stream AUC fleet engine — the service layer over the paper's
+//! estimator.
+//!
+//! The §4 machinery maintains *one* `ε/2`-approximate window in
+//! `O((log k)/ε)` per update. A production monitoring system maintains
+//! one such window **per user / model / segment** — thousands to
+//! millions of concurrent streams under bursty traffic. [`AucFleet`]
+//! owns that multiplexing:
+//!
+//! * **Shard-level storage** — streams live in `2^s` shards selected by
+//!   a mixed hash of the stream id. Each shard packs its stream states
+//!   into a dense slab (`Vec`) with a side index, so a hot stream's
+//!   working set stays contiguous and cold shards stay untouched —
+//!   hot streams don't evict cold ones from cache.
+//! * **Batched ingestion** — [`AucFleet::push_batch`] buckets a batch
+//!   by shard (reusing per-shard scratch buffers across calls), then
+//!   drains shard by shard, resolving the stream-id → slot lookup once
+//!   per *run* of same-stream events. Bursty traffic produces long
+//!   runs, so the per-event dispatch cost (hash + map probe) amortizes
+//!   away and consecutive updates hit a warm window. `benches/fleet.rs`
+//!   measures the batched-vs-one-at-a-time gap at 1 / 100 / 10 000
+//!   streams.
+//! * **Per-stream configuration** — window size `k`, accuracy `ε` and
+//!   drift-monitor parameters default from
+//!   [`FleetConfig::stream_defaults`] and can be overridden per stream
+//!   ([`AucFleet::configure_stream`]).
+//! * **Fleet-wide observability** — every monitored stream feeds its
+//!   windowed estimate into an [`AucMonitor`]; alarms accumulate in a
+//!   fleet-level log ([`AucFleet::alarms`], [`AucFleet::take_alarms`])
+//!   and [`AucFleet::snapshot`] returns the current AUC of every
+//!   stream plus the set currently alarmed.
+//!
+//! ```
+//! use streamauc::fleet::AucFleet;
+//!
+//! let mut fleet = AucFleet::with_defaults();
+//! fleet.push_batch(&[(7, 0.2, true), (7, 0.8, false), (9, 0.4, true)]);
+//! assert_eq!(fleet.stream_count(), 2);
+//! assert_eq!(fleet.auc(7), Some(1.0)); // positives score low: perfect
+//! assert_eq!(fleet.auc(9), Some(0.5)); // single class: undefined ⇒ ½
+//! ```
+
+mod config;
+mod snapshot;
+
+pub use config::{FleetConfig, MonitorConfig, StreamConfig};
+pub use snapshot::{FleetAlarm, FleetSnapshot, StreamSnapshot};
+
+use std::collections::HashMap;
+
+use crate::coordinator::window::Window;
+use crate::coordinator::{ApproxAuc, AucMonitor, MonitorEvent};
+
+/// One stream's state: sliding estimator window plus optional monitor.
+#[derive(Clone, Debug)]
+struct StreamState {
+    id: u64,
+    win: Window<ApproxAuc>,
+    monitor: Option<AucMonitor>,
+    events: u64,
+    alarms: u32,
+}
+
+impl StreamState {
+    fn new(id: u64, cfg: &StreamConfig) -> StreamState {
+        StreamState {
+            id,
+            win: Window::with_estimator(cfg.window, ApproxAuc::new(cfg.epsilon)),
+            monitor: cfg.monitor.map(|m| m.build()),
+            events: 0,
+            alarms: 0,
+        }
+    }
+}
+
+/// One shard: dense stream slab + id index.
+#[derive(Clone, Debug, Default)]
+struct Shard {
+    streams: Vec<StreamState>,
+    index: HashMap<u64, u32>,
+}
+
+/// A fleet of independent sliding-window AUC estimators keyed by
+/// stream id. See the module docs for the design.
+#[derive(Clone, Debug)]
+pub struct AucFleet {
+    shards: Vec<Shard>,
+    /// `shards.len() - 1`; shard count is a power of two.
+    mask: u64,
+    defaults: StreamConfig,
+    overrides: HashMap<u64, StreamConfig>,
+    /// Per-shard batch buckets, reused across `push_batch` calls.
+    scratch: Vec<Vec<(u64, f64, bool)>>,
+    total_events: u64,
+    alarm_log: Vec<FleetAlarm>,
+}
+
+/// splitmix64 finalizer: decorrelates sequential / structured stream
+/// ids before the power-of-two shard mask.
+#[inline]
+fn mix64(mut x: u64) -> u64 {
+    x ^= x >> 30;
+    x = x.wrapping_mul(0xbf58476d1ce4e5b9);
+    x ^= x >> 27;
+    x = x.wrapping_mul(0x94d049bb133111eb);
+    x ^ (x >> 31)
+}
+
+impl AucFleet {
+    /// New fleet from a configuration.
+    pub fn new(cfg: FleetConfig) -> AucFleet {
+        let shards = cfg.shards.max(1).next_power_of_two();
+        AucFleet {
+            shards: (0..shards).map(|_| Shard::default()).collect(),
+            mask: shards as u64 - 1,
+            defaults: cfg.stream_defaults,
+            overrides: HashMap::new(),
+            scratch: (0..shards).map(|_| Vec::new()).collect(),
+            total_events: 0,
+            alarm_log: Vec::new(),
+        }
+    }
+
+    /// New fleet with [`FleetConfig::default`].
+    pub fn with_defaults() -> AucFleet {
+        AucFleet::new(FleetConfig::default())
+    }
+
+    #[inline]
+    fn shard_of(&self, id: u64) -> usize {
+        (mix64(id) & self.mask) as usize
+    }
+
+    /// Register a per-stream configuration override. If the stream is
+    /// already live its state is **reset** under the new configuration
+    /// (window contents, monitor state and alarm counters start fresh);
+    /// otherwise the override applies on the stream's first event.
+    pub fn configure_stream(&mut self, id: u64, cfg: StreamConfig) {
+        let s = self.shard_of(id);
+        let shard = &mut self.shards[s];
+        if let Some(&slot) = shard.index.get(&id) {
+            shard.streams[slot as usize] = StreamState::new(id, &cfg);
+        }
+        self.overrides.insert(id, cfg);
+    }
+
+    /// Effective configuration for a stream (override or defaults).
+    pub fn stream_config(&self, id: u64) -> StreamConfig {
+        self.overrides.get(&id).copied().unwrap_or(self.defaults)
+    }
+
+    /// Slot of `id` in shard `s`, creating the stream on first contact.
+    fn ensure_slot(&mut self, s: usize, id: u64) -> usize {
+        if let Some(&slot) = self.shards[s].index.get(&id) {
+            return slot as usize;
+        }
+        let cfg = self.overrides.get(&id).copied().unwrap_or(self.defaults);
+        let shard = &mut self.shards[s];
+        let slot = shard.streams.len();
+        shard.streams.push(StreamState::new(id, &cfg));
+        shard.index.insert(id, slot as u32);
+        slot
+    }
+
+    /// Ingest one event into a resolved stream slot: window update plus
+    /// monitor observation (only on full windows, so partially filled
+    /// streams never alarm on warm-up noise).
+    fn push_at(&mut self, s: usize, slot: usize, score: f64, label: bool) {
+        let st = &mut self.shards[s].streams[slot];
+        st.win.push(score, label);
+        st.events += 1;
+        self.total_events += 1;
+        if st.win.is_full() {
+            if let Some(m) = st.monitor.as_mut() {
+                let auc = st.win.auc();
+                if m.observe(auc) == MonitorEvent::Alarm {
+                    st.alarms += 1;
+                    let alarm = FleetAlarm {
+                        stream: st.id,
+                        stream_event: st.events,
+                        auc,
+                        baseline: m.baseline(),
+                    };
+                    self.alarm_log.push(alarm);
+                }
+            }
+        }
+    }
+
+    /// Ingest one `(stream, score, label)` event. The one-at-a-time
+    /// path: full dispatch (hash + index probe) on every call. Prefer
+    /// [`AucFleet::push_batch`] under load.
+    pub fn push(&mut self, stream: u64, score: f64, label: bool) {
+        let s = self.shard_of(stream);
+        let slot = self.ensure_slot(s, stream);
+        self.push_at(s, slot, score, label);
+    }
+
+    /// Ingest a batch of `(stream, score, label)` events.
+    ///
+    /// Events are bucketed per shard, then each shard is drained in
+    /// arrival order with the stream lookup resolved once per run of
+    /// same-stream events. Per-stream event order is preserved, so
+    /// every *per-stream* outcome (window contents, AUC, monitor
+    /// state, alarms) is identical to pushing one at a time; only the
+    /// interleaving of the fleet-wide [`AucFleet::alarms`] log across
+    /// *different* streams within one batch may differ from strict
+    /// arrival order.
+    pub fn push_batch(&mut self, batch: &[(u64, f64, bool)]) {
+        for bucket in &mut self.scratch {
+            bucket.clear();
+        }
+        for &(id, score, label) in batch {
+            let s = self.shard_of(id);
+            self.scratch[s].push((id, score, label));
+        }
+        for s in 0..self.shards.len() {
+            if self.scratch[s].is_empty() {
+                continue;
+            }
+            // Take the bucket out so `push_at(&mut self)` can run while
+            // we iterate it; hand the allocation back afterwards.
+            let bucket = std::mem::take(&mut self.scratch[s]);
+            let mut i = 0;
+            while i < bucket.len() {
+                let id = bucket[i].0;
+                let mut j = i + 1;
+                while j < bucket.len() && bucket[j].0 == id {
+                    j += 1;
+                }
+                let slot = self.ensure_slot(s, id);
+                for &(_, score, label) in &bucket[i..j] {
+                    self.push_at(s, slot, score, label);
+                }
+                i = j;
+            }
+            self.scratch[s] = bucket;
+        }
+    }
+
+    fn find(&self, id: u64) -> Option<&StreamState> {
+        let shard = &self.shards[self.shard_of(id)];
+        shard.index.get(&id).map(|&slot| &shard.streams[slot as usize])
+    }
+
+    /// Current windowed AUC estimate of a stream (`None` if unseen).
+    pub fn auc(&self, id: u64) -> Option<f64> {
+        self.find(id).map(|st| st.win.auc())
+    }
+
+    /// Pairs currently in a stream's window (`None` if unseen).
+    pub fn stream_len(&self, id: u64) -> Option<usize> {
+        self.find(id).map(|st| st.win.len())
+    }
+
+    /// A stream's window contents, oldest first (`None` if unseen).
+    /// Test / audit helper: lets callers recompute the exact AUC over
+    /// the identical window.
+    pub fn entries(&self, id: u64) -> Option<impl Iterator<Item = (f64, bool)> + '_> {
+        self.find(id).map(|st| st.win.entries())
+    }
+
+    /// True while a stream's monitor is inside an alarmed excursion.
+    pub fn is_alarmed(&self, id: u64) -> bool {
+        self.find(id)
+            .and_then(|st| st.monitor.as_ref())
+            .map_or(false, AucMonitor::is_alarmed)
+    }
+
+    /// True once a stream has been seen.
+    pub fn contains(&self, id: u64) -> bool {
+        self.find(id).is_some()
+    }
+
+    /// Number of live streams across all shards.
+    pub fn stream_count(&self) -> usize {
+        self.shards.iter().map(|s| s.streams.len()).sum()
+    }
+
+    /// Total events ingested across the fleet.
+    pub fn total_events(&self) -> u64 {
+        self.total_events
+    }
+
+    /// Shard count (power of two).
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Streams per shard (balance diagnostics).
+    pub fn shard_sizes(&self) -> Vec<usize> {
+        self.shards.iter().map(|s| s.streams.len()).collect()
+    }
+
+    /// Alarms accumulated since construction (or the last
+    /// [`AucFleet::take_alarms`]), in firing order.
+    pub fn alarms(&self) -> &[FleetAlarm] {
+        &self.alarm_log
+    }
+
+    /// Drain the alarm log.
+    pub fn take_alarms(&mut self) -> Vec<FleetAlarm> {
+        std::mem::take(&mut self.alarm_log)
+    }
+
+    /// Point-in-time snapshot of every stream: AUC, window fill, `|C|`,
+    /// alarm state. Streams are sorted by id. `O(total |C|)`.
+    pub fn snapshot(&self) -> FleetSnapshot {
+        let mut streams = Vec::with_capacity(self.stream_count());
+        for shard in &self.shards {
+            for st in &shard.streams {
+                streams.push(StreamSnapshot {
+                    stream: st.id,
+                    auc: st.win.auc(),
+                    len: st.win.len(),
+                    compressed_len: st.win.estimator().compressed_len(),
+                    events: st.events,
+                    alarms: st.alarms,
+                    alarmed: st.monitor.as_ref().map_or(false, AucMonitor::is_alarmed),
+                    baseline: st.monitor.as_ref().map(AucMonitor::baseline),
+                });
+            }
+        }
+        streams.sort_by_key(|s| s.stream);
+        let alarmed_streams = streams.iter().filter(|s| s.alarmed).map(|s| s.stream).collect();
+        FleetSnapshot { streams, alarmed_streams, total_events: self.total_events }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::NaiveAuc;
+    use crate::testing::Pcg;
+
+    fn small_fleet(window: usize, epsilon: f64) -> AucFleet {
+        AucFleet::new(FleetConfig {
+            shards: 8,
+            stream_defaults: StreamConfig::new(window, epsilon),
+        })
+    }
+
+    /// Deterministic event soup over `n_streams` streams.
+    fn soup(n_streams: u64, events: usize, seed: u64) -> Vec<(u64, f64, bool)> {
+        let mut rng = Pcg::seed(seed);
+        (0..events)
+            .map(|_| {
+                let id = rng.below(n_streams);
+                let pos = rng.chance(0.5);
+                // Separable per-stream scores so AUCs are interesting.
+                let s = if pos { rng.normal_with(0.35, 0.15) } else { rng.normal_with(0.65, 0.15) };
+                (id, s, pos)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn batched_equals_one_at_a_time() {
+        let events = soup(17, 4000, 0xBA7C);
+        let mut one = small_fleet(100, 0.1);
+        let mut bat = small_fleet(100, 0.1);
+        for &(id, s, l) in &events {
+            one.push(id, s, l);
+        }
+        for chunk in events.chunks(257) {
+            bat.push_batch(chunk);
+        }
+        assert_eq!(one.stream_count(), bat.stream_count());
+        assert_eq!(one.total_events(), bat.total_events());
+        // The fleet-wide log may interleave streams differently across
+        // a batch; per-stream alarm sequences must match exactly.
+        let by_stream = |alarms: &[FleetAlarm]| {
+            let mut v = alarms.to_vec();
+            v.sort_by_key(|a| (a.stream, a.stream_event));
+            v
+        };
+        assert_eq!(by_stream(one.alarms()), by_stream(bat.alarms()));
+        for id in 0..17 {
+            assert_eq!(one.auc(id), bat.auc(id), "stream {id} AUC diverged");
+            assert_eq!(one.stream_len(id), bat.stream_len(id));
+            let a: Vec<_> = one.entries(id).unwrap().collect();
+            let b: Vec<_> = bat.entries(id).unwrap().collect();
+            assert_eq!(a, b, "stream {id} window contents diverged");
+        }
+    }
+
+    #[test]
+    fn streams_are_isolated() {
+        let mut fleet = small_fleet(50, 0.05);
+        // Stream 1: perfectly separated. Stream 2: adversarial noise.
+        let mut rng = Pcg::seed(3);
+        for _ in 0..200 {
+            fleet.push(1, 0.2, true);
+            fleet.push(1, 0.8, false);
+            fleet.push(2, rng.uniform(), rng.chance(0.5));
+        }
+        assert_eq!(fleet.auc(1), Some(1.0), "noise in stream 2 leaked into stream 1");
+        assert_eq!(fleet.stream_len(1), Some(50));
+    }
+
+    #[test]
+    fn windows_evict_fifo_per_stream() {
+        let mut fleet = small_fleet(3, 0.1);
+        for (i, id) in [(1, 7u64), (2, 9), (3, 7), (4, 7), (5, 7)] {
+            fleet.push(id, f64::from(i), true);
+        }
+        // Stream 7 saw scores 1, 3, 4, 5 with capacity 3 → {3, 4, 5}.
+        let got: Vec<f64> = fleet.entries(7).unwrap().map(|(s, _)| s).collect();
+        assert_eq!(got, vec![3.0, 4.0, 5.0]);
+        assert_eq!(fleet.stream_len(9), Some(1));
+    }
+
+    #[test]
+    fn per_stream_config_overrides_apply() {
+        let mut fleet = small_fleet(100, 0.0);
+        fleet.configure_stream(5, StreamConfig::new(10, 0.0).without_monitor());
+        let events = soup(1, 300, 9); // all events on stream 0…
+        for &(_, s, l) in &events {
+            fleet.push(0, s, l); // …default config
+            fleet.push(5, s, l); // …override
+        }
+        assert_eq!(fleet.stream_len(0), Some(100));
+        assert_eq!(fleet.stream_len(5), Some(10), "override window ignored");
+        assert_eq!(fleet.stream_config(5).window, 10);
+        assert_eq!(fleet.stream_config(0).window, 100);
+    }
+
+    #[test]
+    fn configure_resets_live_stream() {
+        let mut fleet = small_fleet(50, 0.1);
+        for i in 0..40 {
+            fleet.push(3, f64::from(i) / 40.0, i % 2 == 0);
+        }
+        assert_eq!(fleet.stream_len(3), Some(40));
+        fleet.configure_stream(3, StreamConfig::new(20, 0.1));
+        assert_eq!(fleet.stream_len(3), Some(0), "reconfigure must reset the window");
+        fleet.push(3, 0.5, true);
+        assert_eq!(fleet.stream_len(3), Some(1));
+    }
+
+    #[test]
+    fn estimates_track_naive_oracle_per_stream() {
+        let eps = 0.1;
+        let events = soup(11, 6000, 0x0A7E);
+        let mut fleet = small_fleet(120, eps);
+        for chunk in events.chunks(512) {
+            fleet.push_batch(chunk);
+        }
+        for id in 0..11 {
+            let window: Vec<(f64, bool)> = fleet.entries(id).unwrap().collect();
+            let truth = NaiveAuc::of(&window);
+            let est = fleet.auc(id).unwrap();
+            assert!(
+                (est - truth).abs() <= eps * truth / 2.0 + 1e-12,
+                "stream {id}: est {est} vs naive {truth}"
+            );
+        }
+    }
+
+    #[test]
+    fn monitor_alarms_surface_in_log_and_snapshot() {
+        let mut fleet = AucFleet::new(FleetConfig {
+            shards: 4,
+            stream_defaults: StreamConfig {
+                window: 100,
+                epsilon: 0.1,
+                monitor: Some(MonitorConfig {
+                    lambda: 0.001,
+                    margin: 0.08,
+                    patience: 20,
+                    warmup: 100,
+                }),
+            },
+        });
+        let mut rng = Pcg::seed(0xA1A);
+        // Healthy phase on both streams.
+        for _ in 0..1500 {
+            for id in [1u64, 2] {
+                let pos = rng.chance(0.5);
+                let s = if pos { rng.normal_with(0.3, 0.1) } else { rng.normal_with(0.7, 0.1) };
+                fleet.push(id, s, pos);
+            }
+        }
+        assert!(fleet.alarms().is_empty(), "healthy phase must not alarm");
+        // Stream 2 breaks: labels decouple from scores.
+        for _ in 0..1500 {
+            let pos = rng.chance(0.5);
+            let s = if pos { rng.normal_with(0.3, 0.1) } else { rng.normal_with(0.7, 0.1) };
+            fleet.push(1, s, pos);
+            fleet.push(2, rng.uniform(), rng.chance(0.5));
+        }
+        let alarmed: Vec<u64> = fleet.alarms().iter().map(|a| a.stream).collect();
+        assert!(alarmed.contains(&2), "broken stream must alarm");
+        assert!(!alarmed.contains(&1), "healthy stream must stay quiet");
+        assert!(fleet.is_alarmed(2));
+        assert!(!fleet.is_alarmed(1));
+        let snap = fleet.snapshot();
+        assert_eq!(snap.alarmed_streams, vec![2]);
+        let drained = fleet.take_alarms();
+        assert!(!drained.is_empty());
+        assert!(fleet.alarms().is_empty());
+    }
+
+    #[test]
+    fn snapshot_is_sorted_and_complete() {
+        let mut fleet = small_fleet(30, 0.2);
+        let events = soup(23, 2000, 0x51AB);
+        fleet.push_batch(&events);
+        let snap = fleet.snapshot();
+        assert_eq!(snap.streams.len(), fleet.stream_count());
+        assert_eq!(snap.total_events, 2000);
+        let ids: Vec<u64> = snap.streams.iter().map(|s| s.stream).collect();
+        let mut sorted = ids.clone();
+        sorted.sort_unstable();
+        assert_eq!(ids, sorted, "snapshot must be id-sorted");
+        for s in &snap.streams {
+            assert!(s.len <= 30);
+            assert!(s.compressed_len >= 2);
+            assert!((0.0..=1.0).contains(&s.auc));
+        }
+        assert!(snap.mean_auc() > 0.5, "separable soup should score above chance");
+    }
+
+    #[test]
+    fn sharding_spreads_streams() {
+        let mut fleet = AucFleet::new(FleetConfig {
+            shards: 16,
+            stream_defaults: StreamConfig::new(10, 0.5).without_monitor(),
+        });
+        // Sequential ids — the adversarial pattern for naive modulo.
+        for id in 0..1600u64 {
+            fleet.push(id, 0.5, true);
+        }
+        assert_eq!(fleet.shard_count(), 16);
+        assert_eq!(fleet.stream_count(), 1600);
+        let sizes = fleet.shard_sizes();
+        let (min, max) = (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+        assert!(*min > 50 && *max < 200, "unbalanced shards: {sizes:?}");
+    }
+
+    #[test]
+    fn shard_count_rounds_to_power_of_two() {
+        let fleet = AucFleet::new(FleetConfig { shards: 5, ..FleetConfig::default() });
+        assert_eq!(fleet.shard_count(), 8);
+        let fleet = AucFleet::new(FleetConfig { shards: 0, ..FleetConfig::default() });
+        assert_eq!(fleet.shard_count(), 1);
+    }
+
+    #[test]
+    fn empty_batch_and_unseen_queries() {
+        let mut fleet = AucFleet::with_defaults();
+        fleet.push_batch(&[]);
+        assert_eq!(fleet.stream_count(), 0);
+        assert_eq!(fleet.total_events(), 0);
+        assert_eq!(fleet.auc(42), None);
+        assert_eq!(fleet.stream_len(42), None);
+        assert!(!fleet.contains(42));
+        assert!(!fleet.is_alarmed(42));
+        assert!(fleet.entries(42).is_none());
+        assert!(fleet.snapshot().streams.is_empty());
+    }
+}

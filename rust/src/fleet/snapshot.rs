@@ -1,0 +1,110 @@
+//! Fleet observability types: per-stream snapshots and alarm records.
+
+/// One monitor alarm raised during ingestion (drained or read via
+/// [`AucFleet::alarms`](super::AucFleet::alarms)).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FleetAlarm {
+    /// Stream that degraded.
+    pub stream: u64,
+    /// Stream-local event count at which the alarm fired (1-based).
+    pub stream_event: u64,
+    /// Windowed AUC estimate at the alarm.
+    pub auc: f64,
+    /// Monitor baseline at the alarm.
+    pub baseline: f64,
+}
+
+/// Point-in-time state of one stream.
+#[derive(Clone, Debug)]
+pub struct StreamSnapshot {
+    /// Stream id.
+    pub stream: u64,
+    /// Current windowed AUC estimate.
+    pub auc: f64,
+    /// Pairs currently in the window (≤ configured capacity).
+    pub len: usize,
+    /// Compressed-list size `|C|` (sentinels included).
+    pub compressed_len: usize,
+    /// Stream-local events ingested so far.
+    pub events: u64,
+    /// Alarms raised over the stream's lifetime.
+    pub alarms: u32,
+    /// True while the stream's monitor is inside an alarmed excursion.
+    pub alarmed: bool,
+    /// Monitor baseline (`None` when monitoring is disabled).
+    pub baseline: Option<f64>,
+}
+
+/// Point-in-time state of the whole fleet
+/// ([`AucFleet::snapshot`](super::AucFleet::snapshot)).
+#[derive(Clone, Debug, Default)]
+pub struct FleetSnapshot {
+    /// All streams, sorted by stream id.
+    pub streams: Vec<StreamSnapshot>,
+    /// Ids of streams currently inside an alarmed excursion (same order
+    /// as [`FleetSnapshot::streams`]).
+    pub alarmed_streams: Vec<u64>,
+    /// Total events ingested across the fleet.
+    pub total_events: u64,
+}
+
+impl FleetSnapshot {
+    /// Streams sorted by ascending AUC (worst first) — the triage view.
+    pub fn worst_streams(&self, n: usize) -> Vec<&StreamSnapshot> {
+        let mut refs: Vec<&StreamSnapshot> = self.streams.iter().collect();
+        refs.sort_by(|a, b| a.auc.total_cmp(&b.auc));
+        refs.truncate(n);
+        refs
+    }
+
+    /// Mean AUC across streams with a non-empty window (0.5 if none).
+    pub fn mean_auc(&self) -> f64 {
+        let live: Vec<f64> =
+            self.streams.iter().filter(|s| s.len > 0).map(|s| s.auc).collect();
+        if live.is_empty() {
+            0.5
+        } else {
+            live.iter().sum::<f64>() / live.len() as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn snap(stream: u64, auc: f64, len: usize) -> StreamSnapshot {
+        StreamSnapshot {
+            stream,
+            auc,
+            len,
+            compressed_len: 2,
+            events: len as u64,
+            alarms: 0,
+            alarmed: false,
+            baseline: None,
+        }
+    }
+
+    #[test]
+    fn worst_streams_sorts_ascending() {
+        let s = FleetSnapshot {
+            streams: vec![snap(1, 0.9, 5), snap(2, 0.4, 5), snap(3, 0.7, 5)],
+            alarmed_streams: Vec::new(),
+            total_events: 15,
+        };
+        let worst: Vec<u64> = s.worst_streams(2).iter().map(|x| x.stream).collect();
+        assert_eq!(worst, vec![2, 3]);
+    }
+
+    #[test]
+    fn mean_auc_skips_empty_windows() {
+        let s = FleetSnapshot {
+            streams: vec![snap(1, 1.0, 4), snap(2, 0.5, 0)],
+            alarmed_streams: Vec::new(),
+            total_events: 4,
+        };
+        assert_eq!(s.mean_auc(), 1.0);
+        assert_eq!(FleetSnapshot::default().mean_auc(), 0.5);
+    }
+}

@@ -17,9 +17,12 @@
 //! * [`coordinator`] — the estimators of paper §4 (approximate, exact
 //!   baseline, naive oracle, flipped variant, §7 weighted extension), the
 //!   sliding-window driver, drift monitor and metrics.
+//! * [`fleet`] — the multi-stream service layer: an [`AucFleet`] of
+//!   thousands of independent sliding windows keyed by stream id, with
+//!   sharded storage, batched ingestion and fleet-wide drift alarms.
 //! * [`stream`] — deterministic synthetic data sources standing in for the
-//!   paper's UCI datasets (see `DESIGN.md` §Substitutions), drift
-//!   injectors and CSV I/O.
+//!   paper's UCI datasets (see `DESIGN.md` §Substitutions), the
+//!   multi-stream fleet generator, drift injectors and CSV I/O.
 //! * [`runtime`] — PJRT execution of the AOT-compiled JAX/Pallas
 //!   logistic-regression classifier (`artifacts/*.hlo.txt`): training loop
 //!   and batch scorer. Python never runs on the streaming path.
@@ -40,14 +43,28 @@
 //! let auc = w.auc();
 //! assert!(auc > 0.5 && auc <= 1.0);
 //! ```
+//!
+//! At service scale, maintain many windows at once through the fleet
+//! layer:
+//!
+//! ```
+//! use streamauc::fleet::AucFleet;
+//!
+//! let mut fleet = AucFleet::with_defaults();
+//! fleet.push_batch(&[(7, 0.2, true), (7, 0.8, false), (9, 0.4, true)]);
+//! assert_eq!(fleet.stream_count(), 2);
+//! assert_eq!(fleet.auc(7), Some(1.0));
+//! ```
 
 pub mod cli;
 pub mod collections;
 pub mod config;
 pub mod coordinator;
 pub mod experiments;
+pub mod fleet;
 pub mod runtime;
 pub mod stream;
 pub mod testing;
 
 pub use coordinator::{ApproxAuc, AucEstimator, ExactAuc, SlidingAuc};
+pub use fleet::AucFleet;

@@ -3,14 +3,18 @@
 //! ```text
 //! streamauc experiment <table1|fig1|fig2|fig3|all> [--events N] [--window K] [--seed S] [--csv DIR]
 //! streamauc stream [--dataset D] [--epsilon E] [--window K] [--events N] [--drift-at I --drift-rate R]
+//! streamauc fleet  [--streams N] [--events N] [--shards S] [--window K] [--epsilon E]
+//!                  [--batch B] [--drift-frac F] [--skew X] [--seed S]
 //! streamauc train  [--dataset D] [--steps N] [--lr X] [--events N] [--artifacts DIR] [--out FILE]
 //! streamauc help
 //! ```
 //!
 //! `experiment` regenerates the paper's tables/figures; `stream` runs
-//! the monitoring pipeline on a synthetic scored stream; `train` runs
-//! the full three-layer path (PJRT-compiled JAX/Pallas classifier
-//! trained and scored from rust, stream fed into the estimator).
+//! the monitoring pipeline on a synthetic scored stream; `fleet` runs
+//! the multi-stream engine over a bursty synthetic fleet with injected
+//! per-stream drift; `train` runs the full three-layer path
+//! (PJRT-compiled JAX/Pallas classifier trained and scored from rust,
+//! stream fed into the estimator).
 
 use anyhow::{bail, Context, Result};
 
@@ -19,10 +23,11 @@ use streamauc::config::{Config, Settings};
 use streamauc::coordinator::window::Window;
 use streamauc::coordinator::{ApproxAuc, AucMonitor, MonitorEvent, NaiveAuc};
 use streamauc::experiments::{fig1, fig2, fig3, table1, ExpConfig, Table};
+use streamauc::fleet::{AucFleet, FleetConfig, StreamConfig};
 use streamauc::runtime::{Runtime, Scorer, Trainer};
 use streamauc::stream::source::write_csv;
 use streamauc::stream::synth::{paper_datasets, Dataset, DatasetSpec};
-use streamauc::stream::Drift;
+use streamauc::stream::{Drift, DriftSchedule, MultiStream, StreamProfile};
 
 fn main() {
     if let Err(e) = run() {
@@ -36,6 +41,7 @@ fn run() -> Result<()> {
     match args.command.as_str() {
         "experiment" => cmd_experiment(&args),
         "stream" => cmd_stream(&args),
+        "fleet" => cmd_fleet(&args),
         "train" => cmd_train(&args),
         "help" | "" => {
             print!("{}", HELP);
@@ -52,6 +58,8 @@ USAGE:
   streamauc experiment <table1|fig1|fig2|fig3|all> [--events N] [--window K] [--seed S] [--csv DIR]
   streamauc stream [--dataset D] [--epsilon E] [--window K] [--events N]
                    [--drift-at I --drift-rate R] [--config FILE]
+  streamauc fleet  [--streams N] [--events N] [--shards S] [--window K] [--epsilon E]
+                   [--batch B] [--drift-frac F] [--skew X] [--seed S]
   streamauc train  [--dataset D] [--steps N] [--lr X] [--events N]
                    [--artifacts DIR] [--out stream.csv]
   streamauc help
@@ -161,6 +169,91 @@ fn cmd_stream(args: &Args) -> Result<()> {
         win.auc(),
         alarms
     );
+    Ok(())
+}
+
+fn cmd_fleet(args: &Args) -> Result<()> {
+    args.validate_flags(&[
+        "streams", "events", "shards", "window", "epsilon", "batch", "drift-frac", "skew", "seed",
+    ])?;
+    let streams: usize = args.get_or("streams", 1000)?;
+    let events: usize = args.get_or("events", 500_000)?;
+    let shards: usize = args.get_or("shards", 64)?;
+    let window: usize = args.get_or("window", 300)?;
+    let epsilon: f64 = args.get_or("epsilon", 0.05)?;
+    let batch: usize = args.get_or("batch", 2048)?;
+    let drift_frac: f64 = args.get_or("drift-frac", 0.05)?;
+    let skew: f64 = args.get_or("skew", 1.5)?;
+    let seed: u64 = args.get_or("seed", 0xF1EE7)?;
+    if streams == 0 || events == 0 || batch == 0 {
+        bail!("--streams, --events and --batch must be positive");
+    }
+    if !(0.0..=1.0).contains(&drift_frac) {
+        bail!("--drift-frac must be in [0, 1]");
+    }
+    if skew < 1.0 {
+        bail!("--skew must be ≥ 1 (1 = uniform stream popularity)");
+    }
+
+    // Drift hits the first `drift_frac` of streams halfway through
+    // their expected per-stream traffic.
+    let drifted = (streams as f64 * drift_frac).round() as u64;
+    let per_stream = (events / streams).max(1) as u64;
+    let profiles: Vec<StreamProfile> = (0..streams as u64)
+        .map(|id| {
+            let p = StreamProfile::healthy(id);
+            if id < drifted {
+                p.with_drift(DriftSchedule::Abrupt { at: per_stream / 2, rate: 0.6 })
+            } else {
+                p
+            }
+        })
+        .collect();
+    let mut gen = MultiStream::with_profiles(profiles, seed).with_skew(skew);
+    let mut fleet = AucFleet::new(FleetConfig {
+        shards,
+        stream_defaults: StreamConfig::new(window, epsilon),
+    });
+
+    println!(
+        "# fleet: {streams} streams ({drifted} drifted), {events} events, \
+         batch {batch}, {} shards, k={window}, ε={epsilon}",
+        fleet.shard_count()
+    );
+    let started = std::time::Instant::now();
+    let mut remaining = events;
+    while remaining > 0 {
+        let n = remaining.min(batch);
+        let chunk = gen.next_batch(n);
+        fleet.push_batch(&chunk);
+        remaining -= n;
+    }
+    let elapsed = started.elapsed();
+
+    let snap = fleet.snapshot();
+    println!(
+        "# ingested {} events into {} streams in {:.2?} ({:.0} events/s)",
+        fleet.total_events(),
+        fleet.stream_count(),
+        elapsed,
+        events as f64 / elapsed.as_secs_f64()
+    );
+    println!("# fleet mean AUC {:.4}; {} streams alarmed", snap.mean_auc(), snap.alarmed_streams.len());
+    println!("\n{:>10}  {:>8}  {:>6}  {:>6}  {:>7}  alarmed", "stream", "auc~", "fill", "|C|", "alarms");
+    for s in snap.worst_streams(10) {
+        println!(
+            "{:>10}  {:>8.4}  {:>6}  {:>6}  {:>7}  {}",
+            s.stream, s.auc, s.len, s.compressed_len, s.alarms, s.alarmed
+        );
+    }
+    let alarms = fleet.alarms();
+    println!("\n# {} alarms total; first 5:", alarms.len());
+    for a in alarms.iter().take(5) {
+        println!(
+            "#   stream {} at its event {}: auc {:.4} vs baseline {:.4}",
+            a.stream, a.stream_event, a.auc, a.baseline
+        );
+    }
     Ok(())
 }
 

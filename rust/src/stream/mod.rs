@@ -2,7 +2,8 @@
 //!
 //! * [`rng`] — deterministic PCG random numbers (no external crates);
 //! * [`synth`] — parametric generators standing in for the paper's UCI
-//!   datasets (DESIGN.md §Substitutions);
+//!   datasets (DESIGN.md §Substitutions), plus the multi-stream fleet
+//!   generator ([`MultiStream`]) with per-stream drift schedules;
 //! * [`drift`] — concept-drift injectors for the monitoring scenario;
 //! * [`source`] — CSV stream I/O.
 
@@ -13,4 +14,7 @@ pub mod synth;
 
 pub use drift::Drift;
 pub use rng::Pcg;
-pub use synth::{hepmass_like, miniboone_like, paper_datasets, tvads_like, Dataset, DatasetSpec};
+pub use synth::{
+    hepmass_like, miniboone_like, paper_datasets, tvads_like, Dataset, DatasetSpec,
+    DriftSchedule, MultiStream, StreamProfile,
+};

@@ -194,6 +194,235 @@ impl Dataset {
     }
 }
 
+// ---------------------------------------------------------------------
+// Multi-stream fleet generator
+// ---------------------------------------------------------------------
+
+/// Per-stream drift schedule for the fleet generator. Indices are
+/// **stream-local** event counts (the `t`-th event emitted on that
+/// stream), unlike [`crate::stream::Drift`] which rewrites a
+/// materialized single-stream slice.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum DriftSchedule {
+    /// No drift: the stream stays healthy.
+    None,
+    /// From stream-local event `at` onward, labels flip with
+    /// probability `rate` (sudden regime change / upstream failure).
+    Abrupt {
+        /// Stream-local event index where the change happens.
+        at: u64,
+        /// Probability a post-change label flips.
+        rate: f64,
+    },
+    /// Between `from` and `to`, flip probability ramps 0 → `rate`
+    /// (slow distribution shift), staying at `rate` afterwards.
+    Gradual {
+        /// Ramp start (stream-local).
+        from: u64,
+        /// Ramp end (stream-local).
+        to: u64,
+        /// Final flip probability.
+        rate: f64,
+    },
+}
+
+impl DriftSchedule {
+    /// Label-flip probability at stream-local event `t`.
+    pub fn flip_rate(self, t: u64) -> f64 {
+        match self {
+            DriftSchedule::None => 0.0,
+            DriftSchedule::Abrupt { at, rate } => {
+                if t >= at {
+                    rate
+                } else {
+                    0.0
+                }
+            }
+            DriftSchedule::Gradual { from, to, rate } => {
+                if t < from {
+                    0.0
+                } else if t >= to {
+                    rate
+                } else {
+                    rate * (t - from) as f64 / (to - from).max(1) as f64
+                }
+            }
+        }
+    }
+}
+
+/// Profile of one synthetic stream in a [`MultiStream`] fleet: a 1-D
+/// sigmoid-margin classifier stand-in (same family as [`Dataset`], but
+/// per-stream and cheap enough to instantiate thousands of times).
+#[derive(Clone, Debug)]
+pub struct StreamProfile {
+    /// Stream id (the key the fleet shards by).
+    pub id: u64,
+    /// P(label = 1).
+    pub pos_rate: f64,
+    /// Distance between class margin means; controls the clean AUC.
+    pub separation: f64,
+    /// Margin noise standard deviation.
+    pub noise: f64,
+    /// Quantize scores to this many levels (duplicate-score regime).
+    pub quantize: Option<u32>,
+    /// Drift schedule (stream-local event indexing).
+    pub drift: DriftSchedule,
+}
+
+impl StreamProfile {
+    /// A healthy, well-separated stream (clean AUC ≈ 0.94).
+    pub fn healthy(id: u64) -> StreamProfile {
+        StreamProfile {
+            id,
+            pos_rate: 0.4,
+            separation: 2.2,
+            noise: 1.0,
+            quantize: None,
+            drift: DriftSchedule::None,
+        }
+    }
+
+    /// Attach a drift schedule.
+    pub fn with_drift(mut self, drift: DriftSchedule) -> StreamProfile {
+        self.drift = drift;
+        self
+    }
+
+    /// Quantize scores to `levels` distinct values.
+    pub fn quantized(mut self, levels: u32) -> StreamProfile {
+        self.quantize = Some(levels);
+        self
+    }
+}
+
+/// Generator state for one stream.
+#[derive(Clone, Debug)]
+struct StreamGen {
+    profile: StreamProfile,
+    rng: Pcg,
+    emitted: u64,
+}
+
+impl StreamGen {
+    /// Emit one `(id, score, label)` event. Positives carry *lower*
+    /// scores (paper §2 convention: larger score ⇒ more negative).
+    fn emit(&mut self) -> (u64, f64, bool) {
+        let p = &self.profile;
+        let mut label = self.rng.chance(p.pos_rate);
+        let half = 0.5 * p.separation;
+        let margin = if label { -half } else { half } + self.rng.normal() * p.noise;
+        let mut score = 1.0 / (1.0 + (-margin).exp());
+        if let Some(levels) = p.quantize {
+            score = (score * f64::from(levels)).floor() / f64::from(levels);
+        }
+        let rate = p.drift.flip_rate(self.emitted);
+        if rate > 0.0 && self.rng.chance(rate) {
+            label = !label;
+        }
+        self.emitted += 1;
+        (p.id, score, label)
+    }
+}
+
+/// Deterministic multi-stream event source: interleaves per-stream
+/// generators with bursty, optionally skewed traffic — the workload
+/// shape [`crate::fleet::AucFleet`] is built for.
+///
+/// * **Bursty**: the generator stays on one stream for a geometric
+///   number of events (mean [`MultiStream::with_mean_burst`]) before
+///   re-drawing, producing the same-stream runs real ingest pipelines
+///   see.
+/// * **Skewed**: stream selection draws `⌊n·u^skew⌋`; `skew = 1` is
+///   uniform popularity, larger values concentrate traffic on
+///   low-index streams (hot heads, long cold tail).
+///
+/// Every stream owns a forked [`Pcg`], so the emitted event sequence is
+/// fully determined by the construction seed.
+#[derive(Clone, Debug)]
+pub struct MultiStream {
+    gens: Vec<StreamGen>,
+    pick: Pcg,
+    current: usize,
+    burst_left: u32,
+    mean_burst: f64,
+    skew: f64,
+}
+
+impl MultiStream {
+    /// Fleet of `n_streams` healthy streams with ids `0..n_streams`.
+    pub fn new(n_streams: usize, seed: u64) -> MultiStream {
+        let profiles = (0..n_streams).map(|i| StreamProfile::healthy(i as u64)).collect();
+        MultiStream::with_profiles(profiles, seed)
+    }
+
+    /// Fleet from explicit per-stream profiles.
+    pub fn with_profiles(profiles: Vec<StreamProfile>, seed: u64) -> MultiStream {
+        assert!(!profiles.is_empty(), "need at least one stream profile");
+        let mut master = Pcg::seed_stream(seed, 0xF1EE7);
+        let gens = profiles
+            .into_iter()
+            .map(|profile| StreamGen { profile, rng: master.fork(), emitted: 0 })
+            .collect();
+        MultiStream {
+            gens,
+            pick: master.fork(),
+            current: 0,
+            burst_left: 0,
+            mean_burst: 8.0,
+            skew: 1.0,
+        }
+    }
+
+    /// Mean burst length (events on one stream before switching).
+    pub fn with_mean_burst(mut self, mean: f64) -> MultiStream {
+        assert!(mean >= 1.0, "mean burst must be at least 1");
+        self.mean_burst = mean;
+        self
+    }
+
+    /// Traffic skew exponent (`≥ 1`; 1 = uniform popularity).
+    pub fn with_skew(mut self, skew: f64) -> MultiStream {
+        assert!(skew >= 1.0, "skew exponent must be at least 1");
+        self.skew = skew;
+        self
+    }
+
+    /// Number of streams in the fleet.
+    pub fn stream_count(&self) -> usize {
+        self.gens.len()
+    }
+
+    /// Events emitted so far on a stream (by vector index).
+    pub fn emitted(&self, idx: usize) -> u64 {
+        self.gens[idx].emitted
+    }
+
+    /// Emit the next `(stream_id, score, label)` event.
+    pub fn next_event(&mut self) -> (u64, f64, bool) {
+        if self.burst_left == 0 {
+            let u = self.pick.uniform();
+            let idx = (u.powf(self.skew) * self.gens.len() as f64) as usize;
+            self.current = idx.min(self.gens.len() - 1);
+            // Geometric burst length with the configured mean, capped
+            // so a pathological draw cannot starve the other streams.
+            let continue_p = 1.0 - 1.0 / self.mean_burst;
+            let cap = (64.0 * self.mean_burst) as u32;
+            self.burst_left = 1;
+            while self.burst_left < cap && self.pick.chance(continue_p) {
+                self.burst_left += 1;
+            }
+        }
+        self.burst_left -= 1;
+        self.gens[self.current].emit()
+    }
+
+    /// Emit a batch of `n` events (the fleet-ingestion unit).
+    pub fn next_batch(&mut self, n: usize) -> Vec<(u64, f64, bool)> {
+        (0..n).map(|_| self.next_event()).collect()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -287,5 +516,108 @@ mod tests {
         assert_eq!(specs[1].test_size, 100_000);
         assert_eq!(specs[2].train_size, 40_265);
         assert_eq!(specs[2].test_size, 89_420);
+    }
+
+    // ---- multi-stream fleet generator --------------------------------
+
+    #[test]
+    fn multi_stream_deterministic_and_in_range() {
+        let mut a = MultiStream::new(20, 7);
+        let mut b = MultiStream::new(20, 7);
+        for _ in 0..500 {
+            let (ea, eb) = (a.next_event(), b.next_event());
+            assert_eq!(ea, eb);
+            assert!(ea.0 < 20, "stream id out of range");
+            assert!((0.0..=1.0).contains(&ea.1), "score {}", ea.1);
+        }
+        let mut c = MultiStream::new(20, 8);
+        let same = (0..200).filter(|_| b.next_event() == c.next_event()).count();
+        assert!(same < 20, "different seeds should diverge");
+    }
+
+    #[test]
+    fn multi_stream_covers_all_streams() {
+        let n = 50;
+        let mut gen = MultiStream::new(n, 11).with_mean_burst(4.0);
+        let batch = gen.next_batch(20_000);
+        assert_eq!(batch.len(), 20_000);
+        let mut seen = vec![0u32; n];
+        for (id, _, _) in &batch {
+            seen[*id as usize] += 1;
+        }
+        assert!(seen.iter().all(|&c| c > 0), "cold streams never emitted: {seen:?}");
+    }
+
+    #[test]
+    fn bursts_produce_same_stream_runs() {
+        let mut gen = MultiStream::new(100, 13).with_mean_burst(16.0);
+        let batch = gen.next_batch(10_000);
+        let switches = batch.windows(2).filter(|w| w[0].0 != w[1].0).count();
+        // Mean burst 16 ⇒ roughly 10_000/16 switches; far below the
+        // ~9_900 a memoryless uniform draw over 100 streams would give.
+        assert!(switches < 2_000, "traffic not bursty: {switches} switches");
+    }
+
+    #[test]
+    fn skew_concentrates_on_low_ids() {
+        let n = 100;
+        let mut gen = MultiStream::new(n, 17).with_skew(3.0).with_mean_burst(2.0);
+        let batch = gen.next_batch(30_000);
+        let head = batch.iter().filter(|e| e.0 < 10).count();
+        // u^3 puts ~46% of draws below 0.1; uniform would put 10%.
+        assert!(
+            head > batch.len() / 4,
+            "skew 3.0 should concentrate on the head, got {head}/30000"
+        );
+    }
+
+    #[test]
+    fn healthy_streams_have_high_auc() {
+        let mut gen = MultiStream::new(4, 23);
+        let batch = gen.next_batch(12_000);
+        for id in 0..4u64 {
+            let pairs: Vec<(f64, bool)> =
+                batch.iter().filter(|e| e.0 == id).map(|e| (e.1, e.2)).collect();
+            assert!(pairs.len() > 1000, "stream {id} underfed: {}", pairs.len());
+            let auc = NaiveAuc::of(&pairs);
+            assert!(auc > 0.85, "stream {id}: healthy AUC only {auc}");
+        }
+    }
+
+    #[test]
+    fn abrupt_drift_degrades_after_the_point() {
+        let profile = StreamProfile::healthy(0)
+            .with_drift(DriftSchedule::Abrupt { at: 3000, rate: 0.6 });
+        let mut gen = MultiStream::with_profiles(vec![profile], 29);
+        let batch = gen.next_batch(6000);
+        let before: Vec<(f64, bool)> = batch[..3000].iter().map(|e| (e.1, e.2)).collect();
+        let after: Vec<(f64, bool)> = batch[3000..].iter().map(|e| (e.1, e.2)).collect();
+        let (clean, broken) = (NaiveAuc::of(&before), NaiveAuc::of(&after));
+        assert!(clean > 0.85, "pre-drift AUC {clean}");
+        assert!(broken < 0.65, "post-drift AUC {broken} should collapse");
+    }
+
+    #[test]
+    fn gradual_drift_ramps() {
+        let s = DriftSchedule::Gradual { from: 100, to: 300, rate: 0.5 };
+        assert_eq!(s.flip_rate(0), 0.0);
+        assert_eq!(s.flip_rate(100), 0.0);
+        assert!((s.flip_rate(200) - 0.25).abs() < 1e-12);
+        assert_eq!(s.flip_rate(300), 0.5);
+        assert_eq!(s.flip_rate(10_000), 0.5);
+        assert_eq!(DriftSchedule::None.flip_rate(9), 0.0);
+        assert_eq!(DriftSchedule::Abrupt { at: 5, rate: 0.3 }.flip_rate(4), 0.0);
+        assert_eq!(DriftSchedule::Abrupt { at: 5, rate: 0.3 }.flip_rate(5), 0.3);
+    }
+
+    #[test]
+    fn quantized_profiles_duplicate_scores() {
+        let profile = StreamProfile::healthy(0).quantized(16);
+        let mut gen = MultiStream::with_profiles(vec![profile], 31);
+        let batch = gen.next_batch(2000);
+        let mut scores: Vec<f64> = batch.iter().map(|e| e.1).collect();
+        scores.sort_by(f64::total_cmp);
+        scores.dedup();
+        assert!(scores.len() <= 16, "expected ≤16 levels, got {}", scores.len());
     }
 }

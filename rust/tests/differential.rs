@@ -1,0 +1,166 @@
+//! Differential property suite: every estimator against the sort-based
+//! naive oracle over random operation sequences.
+//!
+//! Driven by the in-repo harness (`testing::check` / `testing::gen_ops`):
+//! each property runs ≥100 deterministic seeded cases; on violation the
+//! harness panics with the failing case's replay seed
+//! (`property failed (case N, replay seed 0x…)`), so any failure here is
+//! reproducible with `Pcg::seed(<printed seed>)`.
+//!
+//! Covered contracts:
+//! * Proposition 1: `|ApproxAuc − NaiveAuc| ≤ ε·auc/2` (and therefore
+//!   `≤ ε/2`) after **every** operation, for ε ∈ {0.5, 0.1, 0.01}, in
+//!   both the duplicate-score grid regime (the paper pseudo-code's
+//!   subtlest case) and the continuum regime;
+//! * `ExactAuc == NaiveAuc` exactly (identical doubled-integer
+//!   arithmetic ⇒ bit-equal results);
+//! * `FlippedAuc` mirror guarantee `|est − auc| ≤ (1 − auc)·ε/2`.
+
+use streamauc::coordinator::{
+    ApproxAuc, AucEstimator, ExactAuc, FlippedAuc, NaiveAuc,
+};
+use streamauc::testing::{check, gen_ops, Op};
+
+const CASES: u64 = 100;
+const EPSILONS: [f64; 3] = [0.5, 0.1, 0.01];
+
+fn apply(est: &mut impl AucEstimator, op: Op) {
+    match op {
+        Op::Insert { score, pos } => est.insert(score, pos),
+        Op::Remove { score, pos } => est.remove(score, pos),
+    }
+}
+
+/// Drive `approx` and the naive oracle through one random op sequence,
+/// asserting the Proposition 1 bound after every operation.
+fn assert_tracks_naive(eps: f64, ops: &[Op]) {
+    let mut approx = ApproxAuc::new(eps);
+    let mut naive = NaiveAuc::new();
+    for (i, &op) in ops.iter().enumerate() {
+        apply(&mut approx, op);
+        apply(&mut naive, op);
+        let truth = naive.auc();
+        let est = approx.auc();
+        // The relative form of Proposition 1…
+        assert!(
+            (est - truth).abs() <= eps * truth / 2.0 + 1e-12,
+            "op {i}: |{est} − {truth}| > ε·auc/2 (ε = {eps})"
+        );
+        // …which implies the absolute ε/2 cap (auc ≤ 1).
+        assert!(
+            (est - truth).abs() <= eps / 2.0 + 1e-12,
+            "op {i}: |{est} − {truth}| > ε/2 (ε = {eps})"
+        );
+    }
+    assert_eq!(approx.len(), naive.len());
+}
+
+#[test]
+fn approx_tracks_naive_duplicate_score_grid() {
+    for (k, &eps) in EPSILONS.iter().enumerate() {
+        check(0xD1FF_0000 ^ k as u64, CASES, |rng| {
+            // Coarse grids force many same-score tree nodes.
+            let grid = 3 + rng.below(29);
+            let ops = gen_ops(rng, 250, 60, Some(grid));
+            assert_tracks_naive(eps, &ops);
+        });
+    }
+}
+
+#[test]
+fn approx_tracks_naive_continuum_scores() {
+    for (k, &eps) in EPSILONS.iter().enumerate() {
+        check(0xC047_0000 ^ k as u64, CASES, |rng| {
+            let ops = gen_ops(rng, 250, 60, None);
+            assert_tracks_naive(eps, &ops);
+        });
+    }
+}
+
+#[test]
+fn approx_epsilon_zero_is_bit_exact() {
+    check(0xE0AC, CASES, |rng| {
+        let grid = if rng.chance(0.5) { Some(2 + rng.below(14)) } else { None };
+        let ops = gen_ops(rng, 200, 50, grid);
+        let mut approx = ApproxAuc::new(0.0);
+        let mut naive = NaiveAuc::new();
+        for &op in &ops {
+            apply(&mut approx, op);
+            apply(&mut naive, op);
+            let (a, b) = (approx.auc(), naive.auc());
+            assert!((a - b).abs() < 1e-12, "ε = 0 drifted: {a} vs {b}");
+        }
+    });
+}
+
+#[test]
+fn exact_equals_naive_exactly() {
+    check(0xE4C7, CASES, |rng| {
+        // Alternate between the duplicate-heavy and continuum regimes.
+        let grid = if rng.chance(0.5) { Some(2 + rng.below(30)) } else { None };
+        let ops = gen_ops(rng, 250, 60, grid);
+        let mut exact = ExactAuc::new();
+        let mut naive = NaiveAuc::new();
+        for (i, &op) in ops.iter().enumerate() {
+            apply(&mut exact, op);
+            apply(&mut naive, op);
+            // Same grouping, same doubled-integer terms, same final
+            // division ⇒ the values must be *identical*, not just close.
+            let (a, b) = (exact.auc(), naive.auc());
+            assert!(
+                a == b,
+                "op {i}: exact {a} != naive {b} (bits {:#x} vs {:#x})",
+                a.to_bits(),
+                b.to_bits()
+            );
+        }
+        assert_eq!(exact.len(), naive.len());
+    });
+}
+
+#[test]
+fn flipped_guarantee_against_naive() {
+    for (k, &eps) in EPSILONS.iter().enumerate() {
+        check(0xF11_0000 ^ k as u64, CASES, |rng| {
+            let ops = gen_ops(rng, 200, 50, None);
+            let mut flipped = FlippedAuc::new(eps);
+            let mut naive = NaiveAuc::new();
+            for &op in &ops {
+                apply(&mut flipped, op);
+                apply(&mut naive, op);
+            }
+            let truth = naive.auc();
+            let est = flipped.auc();
+            let tol = (1.0 - truth) * eps / 2.0 + 1e-12;
+            assert!(
+                (est - truth).abs() <= tol,
+                "flipped: |{est} − {truth}| > (1 − auc)·ε/2 (ε = {eps})"
+            );
+        });
+    }
+}
+
+/// The harness itself must report a replayable seed — the contract the
+/// suite's debuggability rests on.
+#[test]
+fn violations_report_a_replay_seed() {
+    let result = std::panic::catch_unwind(|| {
+        check(0xBAD, CASES, |rng| {
+            let ops = gen_ops(rng, 50, 20, Some(4));
+            // Impossible "guarantee": est must equal naive with ε = 0.5.
+            let mut approx = ApproxAuc::new(0.5);
+            let mut naive = NaiveAuc::new();
+            for &op in &ops {
+                apply(&mut approx, op);
+                apply(&mut naive, op);
+            }
+            assert!((approx.auc() - naive.auc()).abs() < 1e-15, "intentional");
+        });
+    });
+    let err = result.expect_err("the intentional violation must fire");
+    let msg = err
+        .downcast_ref::<String>()
+        .cloned()
+        .unwrap_or_else(|| "<non-string>".to_string());
+    assert!(msg.contains("replay seed"), "no replay seed in: {msg}");
+}

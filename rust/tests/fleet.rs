@@ -1,0 +1,137 @@
+//! Fleet integration: 200 streams × ~5k events each with per-stream
+//! drift, spot-checked against freshly built naive oracles over the
+//! identical window contents, with alarm coverage assertions.
+//!
+//! The event soup comes from the bursty [`MultiStream`] generator;
+//! streams 0..20 break abruptly halfway through their traffic. The
+//! fleet maintains one ε/2-approximate window + drift monitor per
+//! stream, with a handful of streams running on per-stream config
+//! overrides (tighter ε, smaller window).
+
+use std::collections::HashSet;
+
+use streamauc::coordinator::NaiveAuc;
+use streamauc::fleet::{AucFleet, FleetConfig, MonitorConfig, StreamConfig};
+use streamauc::stream::{DriftSchedule, MultiStream, Pcg, StreamProfile};
+
+const STREAMS: u64 = 200;
+const DRIFTED: u64 = 20;
+const EVENTS: usize = 1_000_000; // ≈ 5k events per stream
+const BATCH: usize = 4_096;
+const DEFAULT_EPS: f64 = 0.2;
+const OVERRIDE_EPS: f64 = 0.05;
+/// Streams 190..200 run with the tighter override config.
+const OVERRIDE_FROM: u64 = 190;
+
+fn build_fleet() -> AucFleet {
+    let mut fleet = AucFleet::new(FleetConfig {
+        shards: 32,
+        stream_defaults: StreamConfig {
+            window: 200,
+            epsilon: DEFAULT_EPS,
+            monitor: Some(MonitorConfig {
+                lambda: 0.001,
+                margin: 0.08,
+                patience: 50,
+                warmup: 250,
+            }),
+        },
+    });
+    for id in OVERRIDE_FROM..STREAMS {
+        fleet.configure_stream(id, StreamConfig::new(120, OVERRIDE_EPS));
+    }
+    fleet
+}
+
+fn build_generator() -> MultiStream {
+    let per_stream = EVENTS as u64 / STREAMS; // ≈ 5000
+    let profiles: Vec<StreamProfile> = (0..STREAMS)
+        .map(|id| {
+            let p = StreamProfile::healthy(id);
+            if id < DRIFTED {
+                p.with_drift(DriftSchedule::Abrupt { at: per_stream / 2, rate: 0.6 })
+            } else {
+                p
+            }
+        })
+        .collect();
+    MultiStream::with_profiles(profiles, 0x200_5000).with_mean_burst(8.0)
+}
+
+#[test]
+fn fleet_200_streams_drift_and_differential_spot_checks() {
+    let mut fleet = build_fleet();
+    let mut gen = build_generator();
+
+    let mut pushed = 0;
+    while pushed < EVENTS {
+        let n = BATCH.min(EVENTS - pushed);
+        fleet.push_batch(&gen.next_batch(n));
+        pushed += n;
+    }
+    assert_eq!(fleet.total_events(), EVENTS as u64);
+    assert_eq!(fleet.stream_count(), STREAMS as usize, "every stream must be live");
+
+    // ---- differential spot-checks: ≥20 random streams against a
+    // freshly built naive oracle over the same window contents -------
+    let mut rng = Pcg::seed(0x5707);
+    let mut checked = HashSet::new();
+    while checked.len() < 20 {
+        checked.insert(rng.below(STREAMS));
+    }
+    // Always include override streams so both configs are exercised.
+    checked.insert(OVERRIDE_FROM);
+    checked.insert(STREAMS - 1);
+    for &id in &checked {
+        let window: Vec<(f64, bool)> = fleet.entries(id).expect("live stream").collect();
+        let cfg = fleet.stream_config(id);
+        assert!(!window.is_empty() && window.len() <= cfg.window, "stream {id} window size");
+        let truth = NaiveAuc::of(&window);
+        let est = fleet.auc(id).expect("live stream");
+        assert!(
+            (est - truth).abs() <= cfg.epsilon * truth / 2.0 + 1e-12,
+            "stream {id} (ε = {}): est {est} vs naive {truth}",
+            cfg.epsilon
+        );
+    }
+
+    // ---- alarms fire on the drifted streams, and only there --------
+    let alarmed: HashSet<u64> = fleet.alarms().iter().map(|a| a.stream).collect();
+    for id in 0..DRIFTED {
+        assert!(alarmed.contains(&id), "drifted stream {id} never alarmed");
+    }
+    for &id in &alarmed {
+        assert!(id < DRIFTED, "healthy stream {id} raised a false alarm");
+    }
+    // Drifted streams are still degraded at end-of-stream, so the
+    // snapshot must report them as currently alarmed.
+    let snap = fleet.snapshot();
+    let snap_alarmed: HashSet<u64> = snap.alarmed_streams.iter().copied().collect();
+    for id in 0..DRIFTED {
+        assert!(snap_alarmed.contains(&id), "stream {id} not alarmed in snapshot");
+    }
+
+    // ---- snapshot-level health separation --------------------------
+    let (mut drifted_auc, mut healthy_auc) = (0.0, 0.0);
+    for s in &snap.streams {
+        if s.stream < DRIFTED {
+            drifted_auc += s.auc;
+        } else {
+            healthy_auc += s.auc;
+        }
+    }
+    drifted_auc /= DRIFTED as f64;
+    healthy_auc /= (STREAMS - DRIFTED) as f64;
+    assert!(healthy_auc > 0.85, "healthy fleet mean AUC {healthy_auc}");
+    assert!(drifted_auc < 0.6, "drifted fleet mean AUC {drifted_auc} should collapse");
+    assert!(
+        snap.streams.iter().all(|s| s.events > 3_000),
+        "bursty scheduling starved a stream"
+    );
+
+    // Alarm records carry consistent metadata.
+    for a in fleet.alarms() {
+        assert!(a.auc < a.baseline - 0.08 + 1e-9, "alarm without margin violation");
+        assert!(a.stream_event > 200, "alarm before the window ever filled");
+    }
+}

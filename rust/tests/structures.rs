@@ -1,0 +1,172 @@
+//! Structural property suite: data-structure invariants checked after
+//! **every** operation of random op sequences.
+//!
+//! * [`RbTree`]: red-black shape (root black, no red-red edge, equal
+//!   black heights), BST order, parent pointers, and the augmented
+//!   subtree sums — all via `RbTree::check_invariants`, which
+//!   recomputes every node's augmentation from its children and
+//!   panics on mismatch. Cross-checked against a `BTreeMap` model.
+//! * [`SupportTree`] (§3): `T`/`TP`/`P` coherence, sentinel placement,
+//!   gap counters vs brute-force `HeadStats` differences.
+//! * [`ApproxAuc`] (§4): the compressed-list invariants — coverage,
+//!   score order, cell-cache coherence, and the Eq. 3 / Eq. 4
+//!   group-size bounds (`hp(w) ≤ α·(hp(v) + p(v))` for consecutive
+//!   cells; strict violation for cell *pairs*, which is what keeps
+//!   `|C| ∈ O((log k)/ε)`).
+//!
+//! All sequences come from the seeded harness; failures print a replay
+//! seed.
+
+use std::collections::BTreeMap;
+
+use streamauc::collections::{Augment, RbTree, Score};
+use streamauc::coordinator::support::SupportTree;
+use streamauc::coordinator::ApproxAuc;
+use streamauc::testing::{check, gen_ops, Op};
+
+/// Subtree (count, value-sum) augmentation — the same shape as the
+/// estimator's `accpos`/`accneg`, verifiable against a flat model.
+#[derive(Clone, Copy, Debug, PartialEq)]
+struct CountSum {
+    count: u64,
+    sum: u64,
+}
+
+impl Augment<u64> for CountSum {
+    fn recompute(val: &u64, left: Option<&Self>, right: Option<&Self>) -> Self {
+        let l = left.copied().unwrap_or(CountSum { count: 0, sum: 0 });
+        let r = right.copied().unwrap_or(CountSum { count: 0, sum: 0 });
+        CountSum { count: 1 + l.count + r.count, sum: val + l.sum + r.sum }
+    }
+}
+
+#[test]
+fn rbtree_invariants_hold_after_every_op() {
+    check(0x4B7EE, 60, |rng| {
+        let mut tree: RbTree<u64, CountSum> = RbTree::new();
+        let mut model: BTreeMap<i64, u64> = BTreeMap::new();
+        let key_space = 4 + rng.below(60);
+        let ops = 150 + rng.below(100);
+        for step in 0..ops {
+            let key = rng.below(key_space) as i64 - (key_space / 2) as i64;
+            let ks = Score(key as f64);
+            match rng.below(3) {
+                0 | 1 => {
+                    let v = rng.below(100);
+                    let (id, fresh) = tree.insert(ks, || v);
+                    if !fresh {
+                        tree.with_val_mut(id, |old| *old = v);
+                    }
+                    model.insert(key, v);
+                }
+                _ => {
+                    if let Some(id) = tree.find(ks) {
+                        tree.remove(id);
+                        model.remove(&key);
+                    }
+                }
+            }
+            // Every red-black + BST + augmentation invariant, every op.
+            tree.check_invariants();
+            assert_eq!(tree.len(), model.len(), "len diverged at step {step}");
+            // Augmented subtree counts and sums against the model.
+            let (count, sum) = tree
+                .root()
+                .map_or((0, 0), |r| (tree.aug(r).count, tree.aug(r).sum));
+            assert_eq!(count as usize, model.len(), "aug count at step {step}");
+            assert_eq!(sum, model.values().sum::<u64>(), "aug sum at step {step}");
+            // Order queries agree with the model.
+            let probe = Score((rng.below(key_space) as i64 - (key_space / 2) as i64) as f64);
+            let got = tree.floor(probe).map(|id| tree.key(id).0 as i64);
+            let want = model.range(..=(probe.0 as i64)).next_back().map(|(k, _)| *k);
+            assert_eq!(got, want, "floor({}) diverged at step {step}", probe.0);
+        }
+        // Drain in model order; invariants must survive every removal.
+        let keys: Vec<i64> = model.keys().copied().collect();
+        for key in keys {
+            let id = tree.find(Score(key as f64)).expect("model key present");
+            tree.remove(id);
+            tree.check_invariants();
+        }
+        assert!(tree.is_empty());
+    });
+}
+
+#[test]
+fn support_tree_invariants_hold_after_every_op() {
+    for grid in [Some(6), Some(24), None] {
+        check(0x5077 ^ grid.unwrap_or(99), 30, |rng| {
+            let mut t = SupportTree::new();
+            let ops = gen_ops(rng, 180, 45, grid);
+            for op in ops {
+                match op {
+                    Op::Insert { score, pos: true } => {
+                        t.add_pos(Score(score));
+                    }
+                    Op::Insert { score, pos: false } => {
+                        t.add_neg(Score(score));
+                    }
+                    Op::Remove { score, pos: true } => t.remove_pos(Score(score)),
+                    Op::Remove { score, pos: false } => t.remove_neg(Score(score)),
+                }
+                t.check_invariants();
+            }
+        });
+    }
+}
+
+#[test]
+fn compressed_list_eq3_eq4_hold_after_every_op() {
+    // `ApproxAuc::check_invariants` asserts, besides cache coherence
+    // and coverage, exactly the paper's Eqs. 3–4 on C; ε = 0 pins the
+    // degenerate exact mode, large ε the aggressive-merging mode.
+    for eps in [0.0, 0.05, 0.3, 1.0] {
+        for grid in [Some(5), Some(32), None] {
+            check(
+                0xC3_0000 ^ (eps * 1e3) as u64 ^ grid.unwrap_or(7),
+                25,
+                |rng| {
+                    let mut approx = ApproxAuc::new(eps);
+                    let ops = gen_ops(rng, 160, 40, grid);
+                    for op in ops {
+                        match op {
+                            Op::Insert { score, pos } => approx.insert(score, pos),
+                            Op::Remove { score, pos } => approx.remove(score, pos),
+                        }
+                        approx.check_invariants();
+                    }
+                    approx.check_invariants();
+                },
+            );
+        }
+    }
+}
+
+#[test]
+fn compressed_list_stays_logarithmic_under_churn() {
+    // Eq. 4's purpose (Proposition 2): |C| ∈ O((log k)/ε). FIFO churn
+    // at k = 2000 must keep |C| far below the positive count.
+    check(0x10C7, 8, |rng| {
+        let eps = 0.1;
+        let mut approx = ApproxAuc::new(eps);
+        let mut fifo: std::collections::VecDeque<(f64, bool)> = Default::default();
+        let k = 2000;
+        for _ in 0..3 * k {
+            let s = rng.uniform();
+            let l = rng.chance(0.5);
+            approx.insert(s, l);
+            fifo.push_back((s, l));
+            if fifo.len() > k {
+                let (os, ol) = fifo.pop_front().unwrap();
+                approx.remove(os, ol);
+            }
+        }
+        let bound = ((k as f64).log2() / eps) as usize; // ≈ 110
+        assert!(
+            approx.compressed_len() < bound,
+            "|C| = {} exceeds the O(log k/ε) ballpark {bound}",
+            approx.compressed_len()
+        );
+        approx.check_invariants();
+    });
+}

@@ -1,0 +1,202 @@
+//! Offline stand-in for the `anyhow` crate.
+//!
+//! crates.io is unreachable in this environment, so the subset of the
+//! anyhow API the workspace uses is reimplemented here with the same
+//! semantics: a context-chained error type, the `anyhow!` / `bail!` /
+//! `ensure!` macros, and the [`Context`] extension trait for `Result`
+//! and `Option`.
+//!
+//! Mirrored behaviour that callers rely on:
+//! * `{}` displays the outermost message only; `{:#}` joins the whole
+//!   chain with `": "` (used by `main.rs` error reporting and asserted
+//!   by the runtime meta tests);
+//! * `Debug` prints the outermost message plus a `Caused by:` list, so
+//!   `unwrap()` failures stay readable;
+//! * any `std::error::Error + Send + Sync + 'static` converts via `?`,
+//!   capturing its source chain — exactly anyhow's blanket `From`.
+//!
+//! Deliberately omitted (unused in this workspace): downcasting,
+//! backtraces, `Error::new`, `Chain` iteration.
+
+use std::fmt;
+
+/// A context-chained error. The first entry is the outermost message;
+/// the rest are causes, outermost first.
+pub struct Error {
+    head: String,
+    causes: Vec<String>,
+}
+
+impl Error {
+    /// Error from a printable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { head: message.to_string(), causes: Vec::new() }
+    }
+
+    /// Wrap this error with an outer context message.
+    pub fn context<C: fmt::Display>(self, context: C) -> Error {
+        let mut causes = Vec::with_capacity(self.causes.len() + 1);
+        causes.push(self.head);
+        causes.extend(self.causes);
+        Error { head: context.to_string(), causes }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.head)?;
+        if f.alternate() {
+            for cause in &self.causes {
+                write!(f, ": {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.head)?;
+        if !self.causes.is_empty() {
+            write!(f, "\n\nCaused by:")?;
+            for (i, cause) in self.causes.iter().enumerate() {
+                write!(f, "\n    {i}: {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// The blanket conversion anyhow ships: any std error (with its source
+// chain) becomes an `Error`. Sound because `Error` itself does not
+// implement `std::error::Error`, so this cannot overlap the reflexive
+// `From<T> for T`.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        let head = e.to_string();
+        let mut causes = Vec::new();
+        let mut source = e.source();
+        while let Some(s) = source {
+            causes.push(s.to_string());
+            source = s.source();
+        }
+        Error { head, causes }
+    }
+}
+
+/// `anyhow::Result<T>`: a `Result` defaulting to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding `.context(...)` / `.with_context(...)` to
+/// `Result` and `Option`.
+pub trait Context<T, E> {
+    /// Attach a context message, converting the error to [`Error`].
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error>;
+
+    /// Attach a lazily evaluated context message.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: Into<Error>> Context<T, E> for Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| e.into().context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T, Error> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Build an [`Error`] from a format string (implicit captures work).
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::anyhow!(concat!("condition failed: ", stringify!($cond))));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing file")
+    }
+
+    #[test]
+    fn display_outermost_alternate_chain() {
+        let e: Error = Error::from(io_err()).context("reading config");
+        assert_eq!(format!("{e}"), "reading config");
+        assert_eq!(format!("{e:#}"), "reading config: missing file");
+    }
+
+    #[test]
+    fn debug_lists_causes() {
+        let e = Error::msg("inner").context("mid").context("outer");
+        let s = format!("{e:?}");
+        assert!(s.contains("outer"));
+        assert!(s.contains("Caused by:"));
+        assert!(s.contains("0: mid"));
+        assert!(s.contains("1: inner"));
+    }
+
+    #[test]
+    fn macros_and_question_mark() {
+        fn inner(fail: bool, n: u64) -> Result<u64> {
+            ensure!(n < 10, "n too large: {n}");
+            if fail {
+                bail!("failed with {n}");
+            }
+            let parsed: u64 = "42".parse()?;
+            Ok(parsed)
+        }
+        assert_eq!(inner(false, 1).unwrap(), 42);
+        assert_eq!(inner(true, 1).unwrap_err().to_string(), "failed with 1");
+        assert_eq!(inner(false, 11).unwrap_err().to_string(), "n too large: 11");
+    }
+
+    #[test]
+    fn context_on_result_and_option() {
+        let r: Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("outer").unwrap_err();
+        assert_eq!(format!("{e:#}"), "outer: missing file");
+        let o: Option<u32> = None;
+        let e = o.with_context(|| format!("missing {}", "thing")).unwrap_err();
+        assert_eq!(e.to_string(), "missing thing");
+        let some: Option<u32> = Some(7);
+        assert_eq!(some.context("unused").unwrap(), 7);
+    }
+}
