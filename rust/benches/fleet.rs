@@ -1,24 +1,34 @@
 //! Fleet ingestion throughput: updates/sec versus stream count,
-//! batched (`push_batch`) against the naive one-at-a-time loop.
+//! batched (`push_batch`) against the naive one-at-a-time loop, and
+//! serial against the scoped-thread parallel executor.
 //!
-//! `cargo bench --bench fleet [-- --events N]`
+//! `cargo bench --bench fleet [-- --events N] [-- --workers W]`
 //!
 //! Each row streams the same pre-generated bursty event soup into a
-//! fresh fleet three ways:
+//! fresh fleet five ways:
 //!
 //! * `one-at-a-time` — `push` per event: full dispatch (stream-id hash
 //!   + shard index probe) on every update;
-//! * `batched` — `push_batch` in chunks of 4096: per-shard bucketing
-//!   with the stream lookup amortized over same-stream runs;
-//! * `batched+monitor` — ditto with the per-stream drift monitor on
-//!   (adds one `O(|C|)` AUC read per update), the full service
-//!   configuration.
+//! * `batched` — `push_batch` in chunks: per-shard bucketing with the
+//!   stream lookup amortized over same-stream runs, serial drain;
+//! * `batched ∥` — ditto, shards drained on `--workers` scoped threads;
+//! * `monitor` / `monitor ∥` — batched with the per-stream drift
+//!   monitor on (adds one `O(|C|)` AUC read per update — the full
+//!   service configuration, and the regime where parallelism pays most).
 //!
-//! Expected shape: batched ≥ one-at-a-time everywhere, with the gap
-//! widening as the stream count (and thus the dispatch share of the
-//! per-event cost) grows; absolute throughput drops from 1 stream to
-//! 10k streams as the working set leaves cache.
+//! Besides the human-readable table, the run writes machine-readable
+//! `BENCH_fleet.json` at the repository root (events/sec per scenario
+//! per stream count, plus parallel speedups) so the perf trajectory is
+//! tracked across PRs.
+//!
+//! Expected shape: batched ≥ one-at-a-time everywhere, the gap widening
+//! with stream count; parallel ≈ serial at 1 stream (one shard is hot,
+//! and thread scope overhead is paid for nothing) and pulling ahead at
+//! 10k streams where every shard carries work. Each parallel fleet is
+//! asserted bit-identical to its serial twin before timings are
+//! reported — the bench doubles as a determinism smoke test.
 
+use std::fmt::Write as _;
 use std::time::Instant;
 
 use streamauc::fleet::{AucFleet, FleetConfig, StreamConfig};
@@ -26,15 +36,26 @@ use streamauc::stream::MultiStream;
 
 const WINDOW: usize = 100;
 const EPSILON: f64 = 0.1;
-const BATCH: usize = 4096;
+const BATCH: usize = 8192;
+const SHARDS: usize = 64;
 
-fn fresh_fleet(monitor: bool) -> AucFleet {
+struct Row {
+    streams: usize,
+    one_at_a_time: f64,
+    batched_serial: f64,
+    batched_parallel: f64,
+    monitor_serial: f64,
+    monitor_parallel: f64,
+    live: usize,
+}
+
+fn fresh_fleet(monitor: bool, workers: usize) -> AucFleet {
     let stream_defaults = if monitor {
         StreamConfig::new(WINDOW, EPSILON)
     } else {
         StreamConfig::new(WINDOW, EPSILON).without_monitor()
     };
-    AucFleet::new(FleetConfig { shards: 64, stream_defaults })
+    AucFleet::new(FleetConfig { shards: SHARDS, workers, stream_defaults })
 }
 
 fn throughput(events: &[(u64, f64, bool)], mut ingest: impl FnMut(&[(u64, f64, bool)])) -> f64 {
@@ -43,27 +64,91 @@ fn throughput(events: &[(u64, f64, bool)], mut ingest: impl FnMut(&[(u64, f64, b
     events.len() as f64 / start.elapsed().as_secs_f64()
 }
 
-fn main() {
-    let mut events_per_row = 400_000usize;
-    let args: Vec<String> = std::env::args().collect();
-    if let Some(i) = args.iter().position(|a| a == "--events") {
-        events_per_row = args.get(i + 1).expect("--events N").parse().expect("--events N");
-    }
+fn batched(fleet: &mut AucFleet, soup: &[(u64, f64, bool)]) -> f64 {
+    throughput(soup, |evs| {
+        for chunk in evs.chunks(BATCH) {
+            fleet.push_batch(chunk);
+        }
+    })
+}
 
-    println!("== fleet: ingestion throughput, batched vs one-at-a-time ==");
-    println!("   (k={WINDOW}, ε={EPSILON}, batch={BATCH}, {events_per_row} events/row)\n");
+fn flag(args: &[String], name: &str, default: usize) -> usize {
+    match args.iter().position(|a| a == name) {
+        Some(i) => args
+            .get(i + 1)
+            .unwrap_or_else(|| panic!("{name} N"))
+            .parse()
+            .unwrap_or_else(|_| panic!("{name} N")),
+        None => default,
+    }
+}
+
+fn json_report(events_per_row: usize, workers: usize, rows: &[Row]) -> String {
+    let mut s = String::new();
+    s.push_str("{\n");
+    let _ = writeln!(s, "  \"bench\": \"fleet\",");
+    let _ = writeln!(s, "  \"unit\": \"events_per_sec\",");
+    let _ = writeln!(s, "  \"events_per_row\": {events_per_row},");
+    let _ = writeln!(s, "  \"window\": {WINDOW},");
+    let _ = writeln!(s, "  \"epsilon\": {EPSILON},");
+    let _ = writeln!(s, "  \"batch\": {BATCH},");
+    let _ = writeln!(s, "  \"shards\": {SHARDS},");
+    let _ = writeln!(s, "  \"workers\": {workers},");
+    s.push_str("  \"rows\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        let _ = write!(
+            s,
+            "    {{\"streams\": {}, \"live_streams\": {}, \"one_at_a_time\": {:.1}, \
+             \"batched_serial\": {:.1}, \"batched_parallel\": {:.1}, \
+             \"monitor_serial\": {:.1}, \"monitor_parallel\": {:.1}, \
+             \"speedup_batched\": {:.3}, \"speedup_monitor\": {:.3}}}",
+            r.streams,
+            r.live,
+            r.one_at_a_time,
+            r.batched_serial,
+            r.batched_parallel,
+            r.monitor_serial,
+            r.monitor_parallel,
+            r.batched_parallel / r.batched_serial,
+            r.monitor_parallel / r.monitor_serial,
+        );
+        s.push_str(if i + 1 < rows.len() { ",\n" } else { "\n" });
+    }
+    s.push_str("  ]\n}\n");
+    s
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let events_per_row = flag(&args, "--events", 400_000);
+    let workers = flag(&args, "--workers", 4);
+
+    println!("== fleet: ingestion throughput, batched vs one-at-a-time, serial vs parallel ==");
     println!(
-        "{:>8}  {:>14}  {:>14}  {:>7}  {:>16}  {:>8}",
-        "streams", "one-at-a-time", "batched", "gain", "batched+monitor", "live"
+        "   (k={WINDOW}, ε={EPSILON}, batch={BATCH}, {SHARDS} shards, {workers} workers, \
+         {events_per_row} events/row)\n"
+    );
+    println!(
+        "{:>8}  {:>13}  {:>12}  {:>12}  {:>6}  {:>12}  {:>12}  {:>6}  {:>7}",
+        "streams",
+        "one-at-a-time",
+        "batched",
+        "batched ∥",
+        "gain",
+        "monitor",
+        "monitor ∥",
+        "gain",
+        "live"
     );
 
+    let mut rows = Vec::new();
     for &n_streams in &[1usize, 100, 10_000] {
         // Pre-generate outside the timed region; bursty + mildly skewed
         // traffic (the regime push_batch's run-grouping exploits).
         let mut gen = MultiStream::new(n_streams, 0xBE7C).with_mean_burst(8.0);
         let soup = gen.next_batch(events_per_row);
 
-        let mut fleet = fresh_fleet(false);
+        let mut fleet = fresh_fleet(false, 1);
         let one = throughput(&soup, |evs| {
             for &(id, s, l) in evs {
                 fleet.push(id, s, l);
@@ -71,24 +156,42 @@ fn main() {
         });
         let live = fleet.stream_count();
 
-        let mut fleet = fresh_fleet(false);
-        let batched = throughput(&soup, |evs| {
-            for chunk in evs.chunks(BATCH) {
-                fleet.push_batch(chunk);
-            }
-        });
+        let mut serial = fresh_fleet(false, 1);
+        let batched_serial = batched(&mut serial, &soup);
+        let mut parallel = fresh_fleet(false, workers);
+        let batched_parallel = batched(&mut parallel, &soup);
+        assert_eq!(serial.snapshot(), parallel.snapshot(), "parallel ingest diverged");
+        assert_eq!(serial.aggregate(), parallel.aggregate(), "parallel aggregate diverged");
 
-        let mut fleet = fresh_fleet(true);
-        let monitored = throughput(&soup, |evs| {
-            for chunk in evs.chunks(BATCH) {
-                fleet.push_batch(chunk);
-            }
-        });
+        let mut serial = fresh_fleet(true, 1);
+        let monitor_serial = batched(&mut serial, &soup);
+        let mut parallel = fresh_fleet(true, workers);
+        let monitor_parallel = batched(&mut parallel, &soup);
+        assert_eq!(serial.alarms(), parallel.alarms(), "parallel alarms diverged");
+        assert_eq!(serial.snapshot(), parallel.snapshot(), "parallel monitor ingest diverged");
 
         println!(
-            "{n_streams:>8}  {one:>12.0}/s  {batched:>12.0}/s  {:>6.2}x  {monitored:>14.0}/s  {live:>8}",
-            batched / one
+            "{n_streams:>8}  {one:>11.0}/s  {batched_serial:>10.0}/s  {batched_parallel:>10.0}/s  \
+             {:>5.2}x  {monitor_serial:>10.0}/s  {monitor_parallel:>10.0}/s  {:>5.2}x  {live:>7}",
+            batched_parallel / batched_serial,
+            monitor_parallel / monitor_serial,
         );
+        rows.push(Row {
+            streams: n_streams,
+            one_at_a_time: one,
+            batched_serial,
+            batched_parallel,
+            monitor_serial,
+            monitor_parallel,
+            live,
+        });
     }
-    println!("\n(gain = batched / one-at-a-time; live = distinct streams touched)");
+    println!("\n(gain = parallel / serial at {workers} workers; live = distinct streams touched)");
+
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_fleet.json");
+    let report = json_report(events_per_row, workers, &rows);
+    match std::fs::write(&path, &report) {
+        Ok(()) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("could not write {}: {e}", path.display()),
+    }
 }

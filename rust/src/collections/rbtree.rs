@@ -667,6 +667,16 @@ impl<V, A: Augment<V>> RbTree<V, A> {
     }
 }
 
+// The arena is plain owned data (a `Vec` of nodes addressed by index —
+// no `Rc`, no interior mutability), so a tree is `Send` whenever its
+// value and augmentation types are. The fleet's scoped-thread executor
+// relies on this to move whole per-stream estimators across workers;
+// keep it provable at compile time.
+const _: () = {
+    const fn assert_send<T: Send>() {}
+    assert_send::<RbTree<u64, ()>>();
+};
+
 #[inline]
 fn wrap(i: u32) -> Option<NodeId> {
     if i == NIL {

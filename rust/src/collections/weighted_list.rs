@@ -400,6 +400,14 @@ impl Iterator for Cells<'_> {
     }
 }
 
+// Cells live in a plain `Vec` slab addressed by index — no `Rc`, no
+// interior mutability — so the list moves freely across the fleet's
+// scoped worker threads. Enforced at compile time.
+const _: () = {
+    const fn assert_send<T: Send>() {}
+    assert_send::<WeightedList>();
+};
+
 #[cfg(test)]
 mod tests {
     use super::*;

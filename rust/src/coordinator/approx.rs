@@ -335,6 +335,14 @@ impl AucEstimator for ApproxAuc {
     }
 }
 
+// The estimator owns its support structure and compressed list outright
+// (`Send`-clean from the rbtree up), so whole per-stream windows can be
+// drained on the fleet executor's scoped worker threads.
+const _: () = {
+    const fn assert_send<T: Send>() {}
+    assert_send::<ApproxAuc>();
+};
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -110,6 +110,13 @@ impl AucMonitor {
     }
 }
 
+// Monitors ride along with their stream state onto the fleet's scoped
+// worker threads; plain-data state keeps that provable.
+const _: () = {
+    const fn assert_send<T: Send>() {}
+    assert_send::<AucMonitor>();
+};
+
 #[cfg(test)]
 mod tests {
     use super::*;

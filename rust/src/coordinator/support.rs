@@ -397,6 +397,16 @@ impl SupportTree {
     }
 }
 
+// `T`, `TP` and `P` are all index-addressed arenas of plain data, so
+// the bundled support structure is `Send` — the property the fleet's
+// parallel executor needs to drain per-stream estimators on worker
+// threads. A regression (e.g. an `Rc` cache sneaking into a hot path)
+// fails compilation here, not at a distant executor call site.
+const _: () = {
+    const fn assert_send<T: Send>() {}
+    assert_send::<SupportTree>();
+};
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -142,6 +142,14 @@ impl SlidingAuc {
     }
 }
 
+// One stream's full per-stream state (estimator + FIFO) is `Send`:
+// this is the window the fleet layer moves onto scoped worker threads.
+const _: () = {
+    const fn assert_send<T: Send>() {}
+    assert_send::<SlidingAuc>();
+    assert_send::<Window<ApproxAuc>>();
+};
+
 #[cfg(test)]
 mod tests {
     use super::*;

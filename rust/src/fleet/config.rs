@@ -82,13 +82,20 @@ pub struct FleetConfig {
     /// Streams are distributed by a mixed hash of their id, so shard
     /// occupancy stays balanced regardless of id patterns.
     pub shards: usize,
+    /// Ingestion worker threads for batched ingestion and aggregate
+    /// queries; `0` and `1` both mean the serial inline path. Worker
+    /// count never changes results, only wall-clock (the executor's
+    /// determinism contract), so it is safe to tune freely. More workers
+    /// than shards is wasteful — the executor caps at one worker per
+    /// shard.
+    pub workers: usize,
     /// Configuration applied to streams without an explicit override.
     pub stream_defaults: StreamConfig,
 }
 
 impl Default for FleetConfig {
     fn default() -> Self {
-        FleetConfig { shards: 64, stream_defaults: StreamConfig::default() }
+        FleetConfig { shards: 64, workers: 1, stream_defaults: StreamConfig::default() }
     }
 }
 

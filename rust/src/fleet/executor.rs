@@ -1,0 +1,103 @@
+//! Scoped-thread parallel executor over fleet shards.
+//!
+//! The paper makes one window cheap (`O((log k)/ε)` per update); this
+//! module makes *many* windows scale across cores. A [`FleetExecutor`]
+//! runs a closure once per shard, either inline (serial path, `workers
+//! ≤ 1` — zero thread overhead, the default) or on [`std::thread::scope`]
+//! workers, each owning a contiguous chunk of the shard slice. No
+//! threadpool crate is available offline (`rust/DESIGN.md`
+//! §Offline-deps), and scoped threads need no `'static` bounds or
+//! channels: disjoint `&mut Shard` borrows move into the workers and the
+//! scope joins them before returning.
+//!
+//! Determinism: workers never share state, each shard's work depends
+//! only on its own inputs, and result collection ([`map_shards`]) is
+//! reassembled in shard-index order — so the executor's output is
+//! independent of thread scheduling, and parallel ingestion is
+//! bit-identical to serial (property-tested in `rust/tests/fleet.rs`).
+//!
+//! [`map_shards`]: FleetExecutor::map_shards
+
+use super::shard::Shard;
+
+/// Runs per-shard work serially or on scoped worker threads.
+#[derive(Clone, Debug)]
+pub struct FleetExecutor {
+    workers: usize,
+}
+
+impl FleetExecutor {
+    /// Executor with `workers` threads; `0` and `1` both mean the serial
+    /// inline path.
+    pub fn new(workers: usize) -> FleetExecutor {
+        FleetExecutor { workers: workers.max(1) }
+    }
+
+    /// Configured worker count (≥ 1; 1 = serial).
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Run `f(shard_index, &mut shard)` for every shard. With more than
+    /// one worker, shards are split into contiguous chunks, one scoped
+    /// thread per chunk; the scope joins all workers before returning.
+    pub(super) fn for_each_shard<F>(&self, shards: &mut [Shard], f: F)
+    where
+        F: Fn(usize, &mut Shard) + Sync,
+    {
+        let workers = self.workers.min(shards.len()).max(1);
+        if workers <= 1 {
+            for (i, shard) in shards.iter_mut().enumerate() {
+                f(i, shard);
+            }
+            return;
+        }
+        let chunk = shards.len() / workers + usize::from(shards.len() % workers != 0);
+        std::thread::scope(|scope| {
+            for (c, slice) in shards.chunks_mut(chunk).enumerate() {
+                let f = &f;
+                scope.spawn(move || {
+                    for (off, shard) in slice.iter_mut().enumerate() {
+                        f(c * chunk + off, shard);
+                    }
+                });
+            }
+        });
+    }
+
+    /// Map `f(shard_index, &shard)` over every shard, returning the
+    /// results in shard-index order regardless of which worker computed
+    /// them (per-chunk result vectors are concatenated in chunk order).
+    pub(super) fn map_shards<T, F>(&self, shards: &[Shard], f: F) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(usize, &Shard) -> T + Sync,
+    {
+        let workers = self.workers.min(shards.len()).max(1);
+        if workers <= 1 {
+            return shards.iter().enumerate().map(|(i, s)| f(i, s)).collect();
+        }
+        let chunk = shards.len() / workers + usize::from(shards.len() % workers != 0);
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = shards
+                .chunks(chunk)
+                .enumerate()
+                .map(|(c, slice)| {
+                    let f = &f;
+                    scope.spawn(move || {
+                        slice
+                            .iter()
+                            .enumerate()
+                            .map(|(off, shard)| f(c * chunk + off, shard))
+                            .collect::<Vec<T>>()
+                    })
+                })
+                .collect();
+            let mut out = Vec::with_capacity(shards.len());
+            for h in handles {
+                out.extend(h.join().expect("fleet worker panicked"));
+            }
+            out
+        })
+    }
+}

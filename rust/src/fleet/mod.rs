@@ -5,30 +5,39 @@
 //! `O((log k)/ε)` per update. A production monitoring system maintains
 //! one such window **per user / model / segment** — thousands to
 //! millions of concurrent streams under bursty traffic. [`AucFleet`]
-//! owns that multiplexing:
+//! owns that multiplexing as a layered engine:
 //!
-//! * **Shard-level storage** — streams live in `2^s` shards selected by
-//!   a mixed hash of the stream id. Each shard packs its stream states
-//!   into a dense slab (`Vec`) with a side index, so a hot stream's
-//!   working set stays contiguous and cold shards stay untouched —
-//!   hot streams don't evict cold ones from cache.
-//! * **Batched ingestion** — [`AucFleet::push_batch`] buckets a batch
-//!   by shard (reusing per-shard scratch buffers across calls), then
-//!   drains shard by shard, resolving the stream-id → slot lookup once
-//!   per *run* of same-stream events. Bursty traffic produces long
-//!   runs, so the per-event dispatch cost (hash + map probe) amortizes
-//!   away and consecutive updates hit a warm window. `benches/fleet.rs`
-//!   measures the batched-vs-one-at-a-time gap at 1 / 100 / 10 000
-//!   streams.
+//! * **Shard-owned state** (`fleet/shard.rs`) — streams live in `2^s`
+//!   shards selected by a mixed hash of the stream id. Each shard owns
+//!   its dense stream slab, id index, ingestion bucket and a
+//!   shard-local alarm log, so shards never share mutable state and a
+//!   shard is the unit of parallelism.
+//! * **Parallel execution** (`fleet/executor.rs`) — [`AucFleet::push_batch`]
+//!   partitions a batch by shard, then a [`FleetExecutor`] drains the
+//!   shards either inline (serial, the default) or on
+//!   [`std::thread::scope`] workers (`workers ≥ 2`). Events carry
+//!   precomputed fleet-wide ticks and alarms merge in shard-index
+//!   order, so **parallel and serial ingestion produce bit-identical
+//!   snapshots, aggregates and alarm logs** — property-tested in
+//!   `rust/tests/fleet.rs`.
+//! * **Batched ingestion** — within a shard, the bucket is drained in
+//!   arrival order with the stream-id → slot lookup resolved once per
+//!   *run* of same-stream events; bursty traffic produces long runs, so
+//!   per-event dispatch cost amortizes away (`benches/fleet.rs`).
 //! * **Per-stream configuration** — window size `k`, accuracy `ε` and
 //!   drift-monitor parameters default from
 //!   [`FleetConfig::stream_defaults`] and can be overridden per stream
 //!   ([`AucFleet::configure_stream`]).
-//! * **Fleet-wide observability** — every monitored stream feeds its
-//!   windowed estimate into an [`AucMonitor`]; alarms accumulate in a
-//!   fleet-level log ([`AucFleet::alarms`], [`AucFleet::take_alarms`])
-//!   and [`AucFleet::snapshot`] returns the current AUC of every
-//!   stream plus the set currently alarmed.
+//! * **Fleet-wide observability** — monitor alarms accumulate in a
+//!   deterministic fleet-level log ([`AucFleet::alarms`]);
+//!   [`AucFleet::snapshot`] materializes every stream,
+//!   [`AucFleet::snapshot_iter`] streams the same records without
+//!   materializing them, and [`AucFleet::aggregate`] computes fleet
+//!   quantiles (min/p10/median/p90/max AUC, alarmed-stream count)
+//!   shard-parallel.
+//! * **Eviction** — [`AucFleet::evict_idle`] drops streams that have
+//!   seen no traffic for a configurable number of fleet-wide events,
+//!   compacting the shard slabs.
 //!
 //! ```
 //! use streamauc::fleet::AucFleet;
@@ -41,44 +50,19 @@
 //! ```
 
 mod config;
+mod executor;
+mod shard;
 mod snapshot;
 
 pub use config::{FleetConfig, MonitorConfig, StreamConfig};
-pub use snapshot::{FleetAlarm, FleetSnapshot, StreamSnapshot};
+pub use executor::FleetExecutor;
+pub use snapshot::{FleetAggregate, FleetAlarm, FleetSnapshot, StreamSnapshot};
 
 use std::collections::HashMap;
 
-use crate::coordinator::window::Window;
-use crate::coordinator::{ApproxAuc, AucMonitor, MonitorEvent};
+use shard::{Shard, StreamState};
 
-/// One stream's state: sliding estimator window plus optional monitor.
-#[derive(Clone, Debug)]
-struct StreamState {
-    id: u64,
-    win: Window<ApproxAuc>,
-    monitor: Option<AucMonitor>,
-    events: u64,
-    alarms: u32,
-}
-
-impl StreamState {
-    fn new(id: u64, cfg: &StreamConfig) -> StreamState {
-        StreamState {
-            id,
-            win: Window::with_estimator(cfg.window, ApproxAuc::new(cfg.epsilon)),
-            monitor: cfg.monitor.map(|m| m.build()),
-            events: 0,
-            alarms: 0,
-        }
-    }
-}
-
-/// One shard: dense stream slab + id index.
-#[derive(Clone, Debug, Default)]
-struct Shard {
-    streams: Vec<StreamState>,
-    index: HashMap<u64, u32>,
-}
+use crate::coordinator::AucMonitor;
 
 /// A fleet of independent sliding-window AUC estimators keyed by
 /// stream id. See the module docs for the design.
@@ -89,8 +73,8 @@ pub struct AucFleet {
     mask: u64,
     defaults: StreamConfig,
     overrides: HashMap<u64, StreamConfig>,
-    /// Per-shard batch buckets, reused across `push_batch` calls.
-    scratch: Vec<Vec<(u64, f64, bool)>>,
+    executor: FleetExecutor,
+    /// Fleet-wide tick: total events ingested since construction.
     total_events: u64,
     alarm_log: Vec<FleetAlarm>,
 }
@@ -115,7 +99,7 @@ impl AucFleet {
             mask: shards as u64 - 1,
             defaults: cfg.stream_defaults,
             overrides: HashMap::new(),
-            scratch: (0..shards).map(|_| Vec::new()).collect(),
+            executor: FleetExecutor::new(cfg.workers),
             total_events: 0,
             alarm_log: Vec::new(),
         }
@@ -124,6 +108,17 @@ impl AucFleet {
     /// New fleet with [`FleetConfig::default`].
     pub fn with_defaults() -> AucFleet {
         AucFleet::new(FleetConfig::default())
+    }
+
+    /// Ingestion worker threads (1 = serial).
+    pub fn workers(&self) -> usize {
+        self.executor.workers()
+    }
+
+    /// Reconfigure the ingestion worker count at runtime. Worker count
+    /// never affects results (only wall-clock), so this is always safe.
+    pub fn set_workers(&mut self, workers: usize) {
+        self.executor = FleetExecutor::new(workers);
     }
 
     #[inline]
@@ -135,12 +130,11 @@ impl AucFleet {
     /// already live its state is **reset** under the new configuration
     /// (window contents, monitor state and alarm counters start fresh);
     /// otherwise the override applies on the stream's first event.
+    /// Overrides survive [`AucFleet::evict_idle`]: a re-appearing stream
+    /// is recreated under its override.
     pub fn configure_stream(&mut self, id: u64, cfg: StreamConfig) {
         let s = self.shard_of(id);
-        let shard = &mut self.shards[s];
-        if let Some(&slot) = shard.index.get(&id) {
-            shard.streams[slot as usize] = StreamState::new(id, &cfg);
-        }
+        self.shards[s].reset_stream(id, &cfg, self.total_events);
         self.overrides.insert(id, cfg);
     }
 
@@ -149,98 +143,80 @@ impl AucFleet {
         self.overrides.get(&id).copied().unwrap_or(self.defaults)
     }
 
-    /// Slot of `id` in shard `s`, creating the stream on first contact.
-    fn ensure_slot(&mut self, s: usize, id: u64) -> usize {
-        if let Some(&slot) = self.shards[s].index.get(&id) {
-            return slot as usize;
-        }
-        let cfg = self.overrides.get(&id).copied().unwrap_or(self.defaults);
-        let shard = &mut self.shards[s];
-        let slot = shard.streams.len();
-        shard.streams.push(StreamState::new(id, &cfg));
-        shard.index.insert(id, slot as u32);
-        slot
-    }
-
-    /// Ingest one event into a resolved stream slot: window update plus
-    /// monitor observation (only on full windows, so partially filled
-    /// streams never alarm on warm-up noise).
-    fn push_at(&mut self, s: usize, slot: usize, score: f64, label: bool) {
-        let st = &mut self.shards[s].streams[slot];
-        st.win.push(score, label);
-        st.events += 1;
-        self.total_events += 1;
-        if st.win.is_full() {
-            if let Some(m) = st.monitor.as_mut() {
-                let auc = st.win.auc();
-                if m.observe(auc) == MonitorEvent::Alarm {
-                    st.alarms += 1;
-                    let alarm = FleetAlarm {
-                        stream: st.id,
-                        stream_event: st.events,
-                        auc,
-                        baseline: m.baseline(),
-                    };
-                    self.alarm_log.push(alarm);
-                }
-            }
-        }
-    }
-
     /// Ingest one `(stream, score, label)` event. The one-at-a-time
     /// path: full dispatch (hash + index probe) on every call. Prefer
     /// [`AucFleet::push_batch`] under load.
     pub fn push(&mut self, stream: u64, score: f64, label: bool) {
         let s = self.shard_of(stream);
-        let slot = self.ensure_slot(s, stream);
-        self.push_at(s, slot, score, label);
+        let tick = self.total_events + 1;
+        let shard = &mut self.shards[s];
+        let slot = shard.ensure_slot(stream, &self.defaults, &self.overrides);
+        shard.push_at(slot, score, label, tick);
+        shard.take_alarms_into(&mut self.alarm_log);
+        self.total_events = tick;
     }
 
     /// Ingest a batch of `(stream, score, label)` events.
     ///
-    /// Events are bucketed per shard, then each shard is drained in
-    /// arrival order with the stream lookup resolved once per run of
-    /// same-stream events. Per-stream event order is preserved, so
-    /// every *per-stream* outcome (window contents, AUC, monitor
-    /// state, alarms) is identical to pushing one at a time; only the
-    /// interleaving of the fleet-wide [`AucFleet::alarms`] log across
-    /// *different* streams within one batch may differ from strict
-    /// arrival order.
+    /// Events are bucketed per shard, then every shard drains its bucket
+    /// in arrival order — inline when `workers ≤ 1`, on scoped worker
+    /// threads otherwise. Per-stream event order is always preserved.
+    /// The fleet-wide alarm log orders a batch's alarms by shard index
+    /// (then arrival order within the shard); this order is identical
+    /// for serial and parallel ingestion, so the two modes produce
+    /// bit-identical fleets.
     pub fn push_batch(&mut self, batch: &[(u64, f64, bool)]) {
-        for bucket in &mut self.scratch {
-            bucket.clear();
+        if batch.is_empty() {
+            return;
+        }
+        // Buckets are normally left empty by `drain`; clear defensively
+        // so events stranded by a caught mid-batch panic can never be
+        // re-ingested with stale ticks on the next call.
+        for shard in &mut self.shards {
+            shard.bucket.clear();
         }
         for &(id, score, label) in batch {
             let s = self.shard_of(id);
-            self.scratch[s].push((id, score, label));
+            self.shards[s].bucket.push((id, score, label));
         }
+        // Bucket sizes are known before draining starts, so every shard
+        // can stamp its events with the exact fleet-wide ticks the
+        // serial shard-by-shard drain would assign — the key to
+        // scheduling-independent results.
+        let mut start_ticks = Vec::with_capacity(self.shards.len());
+        let mut tick = self.total_events;
+        for shard in &self.shards {
+            start_ticks.push(tick);
+            tick += shard.bucket.len() as u64;
+        }
+        let defaults = &self.defaults;
+        let overrides = &self.overrides;
+        let ticks = &start_ticks;
+        self.executor.for_each_shard(&mut self.shards, |i: usize, shard: &mut Shard| {
+            shard.drain(defaults, overrides, ticks[i]);
+        });
+        self.total_events = tick;
+        // Deterministic merge of the shard-local alarm logs.
         for s in 0..self.shards.len() {
-            if self.scratch[s].is_empty() {
-                continue;
-            }
-            // Take the bucket out so `push_at(&mut self)` can run while
-            // we iterate it; hand the allocation back afterwards.
-            let bucket = std::mem::take(&mut self.scratch[s]);
-            let mut i = 0;
-            while i < bucket.len() {
-                let id = bucket[i].0;
-                let mut j = i + 1;
-                while j < bucket.len() && bucket[j].0 == id {
-                    j += 1;
-                }
-                let slot = self.ensure_slot(s, id);
-                for &(_, score, label) in &bucket[i..j] {
-                    self.push_at(s, slot, score, label);
-                }
-                i = j;
-            }
-            self.scratch[s] = bucket;
+            self.shards[s].take_alarms_into(&mut self.alarm_log);
         }
     }
 
+    /// Drop every stream that has seen no events for at least
+    /// `max_idle_events` fleet-wide events (the fleet tick advances by
+    /// one per ingested event, across all streams). Shard slabs are
+    /// compacted in place; per-stream overrides are kept, so a stream
+    /// that re-appears is recreated fresh under its configured override.
+    /// Returns the number of evicted streams.
+    ///
+    /// `max_idle_events = 0` evicts every stream.
+    pub fn evict_idle(&mut self, max_idle_events: u64) -> usize {
+        let now = self.total_events;
+        self.shards.iter_mut().map(|sh| sh.evict_idle(now, max_idle_events)).sum()
+    }
+
     fn find(&self, id: u64) -> Option<&StreamState> {
-        let shard = &self.shards[self.shard_of(id)];
-        shard.index.get(&id).map(|&slot| &shard.streams[slot as usize])
+        self.shards[self.shard_of(id)].get(id)
     }
 
     /// Current windowed AUC estimate of a stream (`None` if unseen).
@@ -267,17 +243,17 @@ impl AucFleet {
             .map_or(false, AucMonitor::is_alarmed)
     }
 
-    /// True once a stream has been seen.
+    /// True once a stream has been seen (and not evicted).
     pub fn contains(&self, id: u64) -> bool {
         self.find(id).is_some()
     }
 
     /// Number of live streams across all shards.
     pub fn stream_count(&self) -> usize {
-        self.shards.iter().map(|s| s.streams.len()).sum()
+        self.shards.iter().map(Shard::len).sum()
     }
 
-    /// Total events ingested across the fleet.
+    /// Total events ingested across the fleet (the fleet tick).
     pub fn total_events(&self) -> u64 {
         self.total_events
     }
@@ -289,11 +265,11 @@ impl AucFleet {
 
     /// Streams per shard (balance diagnostics).
     pub fn shard_sizes(&self) -> Vec<usize> {
-        self.shards.iter().map(|s| s.streams.len()).collect()
+        self.shards.iter().map(Shard::len).collect()
     }
 
     /// Alarms accumulated since construction (or the last
-    /// [`AucFleet::take_alarms`]), in firing order.
+    /// [`AucFleet::take_alarms`]), in deterministic firing order.
     pub fn alarms(&self) -> &[FleetAlarm] {
         &self.alarm_log
     }
@@ -303,29 +279,58 @@ impl AucFleet {
         std::mem::take(&mut self.alarm_log)
     }
 
+    /// Stream every live stream's snapshot without materializing the
+    /// whole fleet, in shard-major slab order (**not** id-sorted — sort
+    /// requires materialization; use [`AucFleet::snapshot`] for the
+    /// sorted view). `O(|C|)` per yielded stream, `O(1)` extra memory.
+    pub fn snapshot_iter(&self) -> impl Iterator<Item = StreamSnapshot> + '_ {
+        self.shards.iter().flat_map(|sh| sh.streams().iter().map(StreamState::snapshot))
+    }
+
     /// Point-in-time snapshot of every stream: AUC, window fill, `|C|`,
     /// alarm state. Streams are sorted by id. `O(total |C|)`.
     pub fn snapshot(&self) -> FleetSnapshot {
-        let mut streams = Vec::with_capacity(self.stream_count());
-        for shard in &self.shards {
-            for st in &shard.streams {
-                streams.push(StreamSnapshot {
-                    stream: st.id,
-                    auc: st.win.auc(),
-                    len: st.win.len(),
-                    compressed_len: st.win.estimator().compressed_len(),
-                    events: st.events,
-                    alarms: st.alarms,
-                    alarmed: st.monitor.as_ref().map_or(false, AucMonitor::is_alarmed),
-                    baseline: st.monitor.as_ref().map(AucMonitor::baseline),
-                });
-            }
-        }
+        let mut streams: Vec<StreamSnapshot> = self.snapshot_iter().collect();
         streams.sort_by_key(|s| s.stream);
         let alarmed_streams = streams.iter().filter(|s| s.alarmed).map(|s| s.stream).collect();
         FleetSnapshot { streams, alarmed_streams, total_events: self.total_events }
     }
+
+    /// Fleet-level aggregate metrics — stream counts plus the
+    /// min/p10/median/p90/max/mean of the per-stream windowed AUCs and
+    /// the currently-alarmed stream count. Per-shard collection runs on
+    /// the executor's workers; the merge is in shard order, so the
+    /// result is identical under any worker count.
+    pub fn aggregate(&self) -> FleetAggregate {
+        let per_shard = self.executor.map_shards(&self.shards, |_: usize, shard: &Shard| {
+            let mut aucs = Vec::with_capacity(shard.len());
+            let mut alarmed = 0usize;
+            for st in shard.streams() {
+                if !st.win.is_empty() {
+                    aucs.push(st.win.auc());
+                }
+                if st.monitor.as_ref().map_or(false, AucMonitor::is_alarmed) {
+                    alarmed += 1;
+                }
+            }
+            (aucs, alarmed)
+        });
+        let mut aucs = Vec::new();
+        let mut alarmed = 0;
+        for (a, al) in per_shard {
+            aucs.extend(a);
+            alarmed += al;
+        }
+        FleetAggregate::compute(aucs, self.stream_count(), alarmed, self.total_events)
+    }
 }
+
+// The whole fleet is `Send`: it can be owned by a service thread, moved
+// into spawned workers, or sharded further by an embedding application.
+const _: () = {
+    const fn assert_send<T: Send>() {}
+    assert_send::<AucFleet>();
+};
 
 #[cfg(test)]
 mod tests {
@@ -336,6 +341,7 @@ mod tests {
     fn small_fleet(window: usize, epsilon: f64) -> AucFleet {
         AucFleet::new(FleetConfig {
             shards: 8,
+            workers: 1,
             stream_defaults: StreamConfig::new(window, epsilon),
         })
     }
@@ -382,6 +388,22 @@ mod tests {
             let b: Vec<_> = bat.entries(id).unwrap().collect();
             assert_eq!(a, b, "stream {id} window contents diverged");
         }
+    }
+
+    #[test]
+    fn workers_do_not_change_results() {
+        let events = soup(31, 6000, 0x9A11);
+        let mut serial = small_fleet(100, 0.1);
+        let mut parallel = small_fleet(100, 0.1);
+        parallel.set_workers(4);
+        assert_eq!(parallel.workers(), 4);
+        for chunk in events.chunks(513) {
+            serial.push_batch(chunk);
+            parallel.push_batch(chunk);
+        }
+        assert_eq!(serial.snapshot(), parallel.snapshot());
+        assert_eq!(serial.aggregate(), parallel.aggregate());
+        assert_eq!(serial.alarms(), parallel.alarms());
     }
 
     #[test]
@@ -461,6 +483,7 @@ mod tests {
     fn monitor_alarms_surface_in_log_and_snapshot() {
         let mut fleet = AucFleet::new(FleetConfig {
             shards: 4,
+            workers: 1,
             stream_defaults: StreamConfig {
                 window: 100,
                 epsilon: 0.1,
@@ -496,6 +519,9 @@ mod tests {
         assert!(!fleet.is_alarmed(1));
         let snap = fleet.snapshot();
         assert_eq!(snap.alarmed_streams, vec![2]);
+        let agg = fleet.aggregate();
+        assert_eq!(agg.alarmed_streams, 1);
+        assert_eq!(agg.streams, 2);
         let drained = fleet.take_alarms();
         assert!(!drained.is_empty());
         assert!(fleet.alarms().is_empty());
@@ -522,9 +548,112 @@ mod tests {
     }
 
     #[test]
+    fn snapshot_iter_matches_snapshot() {
+        let mut fleet = small_fleet(30, 0.2);
+        fleet.push_batch(&soup(19, 1500, 0x17E8));
+        let mut streamed: Vec<StreamSnapshot> = fleet.snapshot_iter().collect();
+        assert_eq!(streamed.len(), fleet.stream_count());
+        streamed.sort_by_key(|s| s.stream);
+        assert_eq!(streamed, fleet.snapshot().streams);
+    }
+
+    #[test]
+    fn aggregate_quantiles_over_known_aucs() {
+        let mut fleet = AucFleet::new(FleetConfig {
+            shards: 4,
+            workers: 2,
+            stream_defaults: StreamConfig::new(10, 0.0).without_monitor(),
+        });
+        // Stream 1: AUC 1.0; stream 2: AUC 0.0; stream 3: single class ⇒ ½.
+        for _ in 0..5 {
+            fleet.push(1, 0.2, true);
+            fleet.push(1, 0.8, false);
+            fleet.push(2, 0.8, true);
+            fleet.push(2, 0.2, false);
+            fleet.push(3, 0.5, true);
+        }
+        let agg = fleet.aggregate();
+        assert_eq!(agg.streams, 3);
+        assert_eq!(agg.live_streams, 3);
+        assert_eq!(agg.alarmed_streams, 0);
+        assert_eq!(agg.total_events, 25);
+        assert_eq!(agg.min_auc, 0.0);
+        assert_eq!(agg.max_auc, 1.0);
+        assert_eq!(agg.median_auc, 0.5);
+        assert_eq!(agg.p10_auc, 0.0); // round(0.1 · 2) = 0
+        assert_eq!(agg.p90_auc, 1.0); // round(0.9 · 2) = 2
+        assert_eq!(agg.mean_auc, 0.5);
+    }
+
+    #[test]
+    fn aggregate_of_empty_fleet_is_the_convention() {
+        let agg = AucFleet::with_defaults().aggregate();
+        assert_eq!(agg.streams, 0);
+        assert_eq!(agg.live_streams, 0);
+        assert_eq!(agg.median_auc, 0.5);
+        assert_eq!(agg.min_auc, 0.5);
+        assert_eq!(agg.max_auc, 0.5);
+        assert_eq!(agg.mean_auc, 0.5);
+    }
+
+    #[test]
+    fn evict_idle_compacts_and_preserves_survivors() {
+        let mut fleet = small_fleet(20, 0.1);
+        // Phase 1: streams 0..6 all take traffic.
+        for round in 0..30 {
+            for id in 0..6u64 {
+                fleet.push(id, 0.1 * f64::from(round % 10), round % 2 == 0);
+            }
+        }
+        // Phase 2: only streams 3..6 stay active.
+        for round in 0..100 {
+            for id in 3..6u64 {
+                fleet.push(id, 0.1 * f64::from(round % 10), round % 2 == 0);
+            }
+        }
+        let survivors_before: Vec<Vec<(f64, bool)>> =
+            (3..6).map(|id| fleet.entries(id).unwrap().collect()).collect();
+        // Streams 0..3 idle ≥ 300 ticks; 3..6 idle < 10.
+        let evicted = fleet.evict_idle(200);
+        assert_eq!(evicted, 3);
+        assert_eq!(fleet.stream_count(), 3);
+        for id in 0..3u64 {
+            assert!(!fleet.contains(id), "stream {id} should be evicted");
+            assert_eq!(fleet.auc(id), None);
+        }
+        for (i, id) in (3..6u64).enumerate() {
+            let after: Vec<(f64, bool)> = fleet.entries(id).unwrap().collect();
+            assert_eq!(after, survivors_before[i], "stream {id} disturbed by compaction");
+        }
+        // Evicted streams come back fresh on their next event.
+        fleet.push(1, 0.5, true);
+        assert_eq!(fleet.stream_len(1), Some(1));
+        // max_idle 0 clears the fleet.
+        assert_eq!(fleet.evict_idle(0), 4);
+        assert_eq!(fleet.stream_count(), 0);
+    }
+
+    #[test]
+    fn evict_idle_keeps_overrides() {
+        let mut fleet = small_fleet(100, 0.1);
+        fleet.configure_stream(9, StreamConfig::new(7, 0.1).without_monitor());
+        for i in 0..50 {
+            fleet.push(9, f64::from(i), i % 2 == 0);
+        }
+        fleet.push(1, 0.5, true); // keep the tick moving
+        assert_eq!(fleet.stream_len(9), Some(7));
+        assert_eq!(fleet.evict_idle(1), 1); // stream 9 idle exactly 1 tick
+        assert!(!fleet.contains(9));
+        fleet.push(9, 0.5, true);
+        assert_eq!(fleet.stream_config(9).window, 7, "override lost across eviction");
+        assert_eq!(fleet.stream_len(9), Some(1));
+    }
+
+    #[test]
     fn sharding_spreads_streams() {
         let mut fleet = AucFleet::new(FleetConfig {
             shards: 16,
+            workers: 1,
             stream_defaults: StreamConfig::new(10, 0.5).without_monitor(),
         });
         // Sequential ids — the adversarial pattern for naive modulo.
@@ -558,5 +687,6 @@ mod tests {
         assert!(!fleet.is_alarmed(42));
         assert!(fleet.entries(42).is_none());
         assert!(fleet.snapshot().streams.is_empty());
+        assert_eq!(fleet.snapshot_iter().count(), 0);
     }
 }

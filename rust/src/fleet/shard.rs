@@ -1,0 +1,236 @@
+//! Shard-owned fleet state: the unit of parallelism.
+//!
+//! A [`Shard`] owns everything needed to ingest its slice of the fleet's
+//! traffic without touching any other shard: the dense stream slab, the
+//! stream-id → slot index, the ingestion bucket the batch partitioner
+//! fills, and a shard-local alarm log. Because the state is fully
+//! shard-owned (no `Rc`, no interior mutability — see the compile-time
+//! `Send` assertion at the bottom), disjoint `&mut Shard` borrows can be
+//! handed to [`std::thread::scope`] workers by the
+//! [`FleetExecutor`](super::FleetExecutor) and drained concurrently.
+//!
+//! Determinism contract: a shard's observable state after
+//! [`Shard::drain`] depends only on its bucket contents and the
+//! `start_tick` it is given — never on which thread ran it or when.
+//! Alarms accumulate in the shard-local log and are merged into the
+//! fleet-wide log in shard-index order, which is exactly the order the
+//! serial path produces, so parallel and serial ingestion are
+//! bit-identical (`rust/DESIGN.md` §Parallelism).
+
+use std::collections::HashMap;
+
+use crate::coordinator::window::Window;
+use crate::coordinator::{ApproxAuc, AucMonitor, MonitorEvent};
+
+use super::config::StreamConfig;
+use super::snapshot::{FleetAlarm, StreamSnapshot};
+
+/// One stream's state: sliding estimator window plus optional drift
+/// monitor. Factored out of the shard so future per-stream features
+/// (decay, flipped estimators) have one place to live.
+#[derive(Clone, Debug)]
+pub(super) struct StreamState {
+    /// Stream id (also the key in the owning shard's index).
+    pub(super) id: u64,
+    /// The ε/2-approximate sliding window.
+    pub(super) win: Window<ApproxAuc>,
+    /// Drift monitor; `None` when monitoring is disabled for the stream.
+    pub(super) monitor: Option<AucMonitor>,
+    /// Stream-local events ingested over the stream's lifetime.
+    pub(super) events: u64,
+    /// Alarms raised over the stream's lifetime.
+    pub(super) alarms: u32,
+    /// Fleet-wide tick (total fleet event count) at this stream's most
+    /// recent event; drives [`Shard::evict_idle`].
+    pub(super) last_seen: u64,
+}
+
+impl StreamState {
+    pub(super) fn new(id: u64, cfg: &StreamConfig) -> StreamState {
+        StreamState {
+            id,
+            win: Window::with_estimator(cfg.window, ApproxAuc::new(cfg.epsilon)),
+            monitor: cfg.monitor.map(|m| m.build()),
+            events: 0,
+            alarms: 0,
+            last_seen: 0,
+        }
+    }
+
+    /// Point-in-time snapshot of this stream.
+    pub(super) fn snapshot(&self) -> StreamSnapshot {
+        StreamSnapshot {
+            stream: self.id,
+            auc: self.win.auc(),
+            len: self.win.len(),
+            compressed_len: self.win.estimator().compressed_len(),
+            events: self.events,
+            alarms: self.alarms,
+            alarmed: self.monitor.as_ref().map_or(false, AucMonitor::is_alarmed),
+            baseline: self.monitor.as_ref().map(AucMonitor::baseline),
+        }
+    }
+}
+
+/// One shard: dense stream slab, id index, ingestion bucket and local
+/// alarm log. See the module docs for the ownership/determinism rules.
+#[derive(Clone, Debug, Default)]
+pub(super) struct Shard {
+    /// Dense slab of stream states (hot streams stay contiguous).
+    streams: Vec<StreamState>,
+    /// Stream id → slot in `streams`.
+    index: HashMap<u64, u32>,
+    /// Batch bucket, filled by the fleet's partitioner and emptied by
+    /// [`Shard::drain`]; the allocation is reused across batches.
+    pub(super) bucket: Vec<(u64, f64, bool)>,
+    /// Shard-local alarm log, merged into the fleet log in shard order.
+    alarms: Vec<FleetAlarm>,
+}
+
+impl Shard {
+    /// Number of live streams in this shard.
+    pub(super) fn len(&self) -> usize {
+        self.streams.len()
+    }
+
+    /// The stream slab (slot order: insertion order, perturbed only by
+    /// [`Shard::evict_idle`] compaction).
+    pub(super) fn streams(&self) -> &[StreamState] {
+        &self.streams
+    }
+
+    /// Look up a stream by id.
+    pub(super) fn get(&self, id: u64) -> Option<&StreamState> {
+        self.index.get(&id).map(|&slot| &self.streams[slot as usize])
+    }
+
+    /// Slot of `id`, creating the stream on first contact with the
+    /// override config if one is registered, the defaults otherwise.
+    pub(super) fn ensure_slot(
+        &mut self,
+        id: u64,
+        defaults: &StreamConfig,
+        overrides: &HashMap<u64, StreamConfig>,
+    ) -> usize {
+        if let Some(&slot) = self.index.get(&id) {
+            return slot as usize;
+        }
+        let cfg = overrides.get(&id).copied().unwrap_or(*defaults);
+        let slot = self.streams.len();
+        self.streams.push(StreamState::new(id, &cfg));
+        self.index.insert(id, slot as u32);
+        slot
+    }
+
+    /// Reset a live stream under a new configuration (window contents,
+    /// monitor state and counters start fresh). Returns false when the
+    /// stream is not live. `now` is the current fleet tick, recorded as
+    /// the reset stream's `last_seen` so a reconfigure does not make it
+    /// instantly eligible for idle eviction.
+    pub(super) fn reset_stream(&mut self, id: u64, cfg: &StreamConfig, now: u64) -> bool {
+        match self.index.get(&id) {
+            Some(&slot) => {
+                let mut st = StreamState::new(id, cfg);
+                st.last_seen = now;
+                self.streams[slot as usize] = st;
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Ingest one event into a resolved slot: window update plus monitor
+    /// observation (only on full windows, so partially filled streams
+    /// never alarm on warm-up noise). `tick` is the fleet-wide event
+    /// number of this event (1-based).
+    pub(super) fn push_at(&mut self, slot: usize, score: f64, label: bool, tick: u64) {
+        let st = &mut self.streams[slot];
+        st.win.push(score, label);
+        st.events += 1;
+        st.last_seen = tick;
+        if st.win.is_full() {
+            if let Some(m) = st.monitor.as_mut() {
+                let auc = st.win.auc();
+                if m.observe(auc) == MonitorEvent::Alarm {
+                    st.alarms += 1;
+                    self.alarms.push(FleetAlarm {
+                        stream: st.id,
+                        stream_event: st.events,
+                        auc,
+                        baseline: m.baseline(),
+                    });
+                }
+            }
+        }
+    }
+
+    /// Drain the ingestion bucket in arrival order, resolving the
+    /// stream-id → slot lookup once per run of same-stream events.
+    /// Events are stamped with fleet ticks `start_tick + 1, + 2, …` —
+    /// the exact ticks the serial shard-by-shard drain would assign,
+    /// which is what makes parallel draining deterministic.
+    pub(super) fn drain(
+        &mut self,
+        defaults: &StreamConfig,
+        overrides: &HashMap<u64, StreamConfig>,
+        start_tick: u64,
+    ) {
+        // Take the bucket out so `push_at(&mut self)` can run while we
+        // iterate it; hand the allocation back (cleared) afterwards.
+        let mut bucket = std::mem::take(&mut self.bucket);
+        let mut tick = start_tick;
+        let mut i = 0;
+        while i < bucket.len() {
+            let id = bucket[i].0;
+            let mut j = i + 1;
+            while j < bucket.len() && bucket[j].0 == id {
+                j += 1;
+            }
+            let slot = self.ensure_slot(id, defaults, overrides);
+            for &(_, score, label) in &bucket[i..j] {
+                tick += 1;
+                self.push_at(slot, score, label, tick);
+            }
+            i = j;
+        }
+        bucket.clear();
+        self.bucket = bucket;
+    }
+
+    /// Append this shard's pending alarms to `out` (emptying the local
+    /// log). Called in shard-index order by the fleet after every
+    /// ingestion step, which fixes the fleet-wide alarm order.
+    pub(super) fn take_alarms_into(&mut self, out: &mut Vec<FleetAlarm>) {
+        out.append(&mut self.alarms);
+    }
+
+    /// Drop streams idle for at least `max_idle` fleet ticks (`now` is
+    /// the current fleet tick), compacting the slab via swap-remove and
+    /// repairing the index. Returns the number of evicted streams.
+    pub(super) fn evict_idle(&mut self, now: u64, max_idle: u64) -> usize {
+        let mut evicted = 0;
+        let mut slot = 0;
+        while slot < self.streams.len() {
+            if now.saturating_sub(self.streams[slot].last_seen) >= max_idle {
+                let dead = self.streams.swap_remove(slot);
+                self.index.remove(&dead.id);
+                if let Some(moved) = self.streams.get(slot) {
+                    self.index.insert(moved.id, slot as u32);
+                }
+                evicted += 1;
+            } else {
+                slot += 1;
+            }
+        }
+        evicted
+    }
+}
+
+// Shards are handed to scoped worker threads as disjoint `&mut Shard`;
+// this compiles only while every constituent (rbtree arena, weighted
+// lists, window FIFO, monitor) stays free of `Rc`/interior mutability.
+const _: () = {
+    const fn assert_send<T: Send>() {}
+    assert_send::<StreamState>();
+    assert_send::<Shard>();
+};

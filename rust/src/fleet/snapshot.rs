@@ -1,4 +1,9 @@
-//! Fleet observability types: per-stream snapshots and alarm records.
+//! Fleet observability types: per-stream snapshots, alarm records and
+//! fleet-level aggregate metrics.
+//!
+//! Everything here derives `PartialEq` so the executor's determinism
+//! contract — parallel ingestion is bit-identical to serial — can be
+//! asserted directly on whole snapshots and aggregates in tests.
 
 /// One monitor alarm raised during ingestion (drained or read via
 /// [`AucFleet::alarms`](super::AucFleet::alarms)).
@@ -15,7 +20,7 @@ pub struct FleetAlarm {
 }
 
 /// Point-in-time state of one stream.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct StreamSnapshot {
     /// Stream id.
     pub stream: u64,
@@ -37,7 +42,7 @@ pub struct StreamSnapshot {
 
 /// Point-in-time state of the whole fleet
 /// ([`AucFleet::snapshot`](super::AucFleet::snapshot)).
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct FleetSnapshot {
     /// All streams, sorted by stream id.
     pub streams: Vec<StreamSnapshot>,
@@ -65,6 +70,81 @@ impl FleetSnapshot {
             0.5
         } else {
             live.iter().sum::<f64>() / live.len() as f64
+        }
+    }
+}
+
+/// Fleet-level aggregate metrics
+/// ([`AucFleet::aggregate`](super::AucFleet::aggregate)): distribution
+/// of the per-stream windowed AUC estimates plus alarm counts. Streams
+/// with an empty window carry no estimate and are excluded from the
+/// distribution (`live_streams` counts the included ones); with no live
+/// streams every distribution field falls back to the crate-wide `0.5`
+/// "no information" convention.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FleetAggregate {
+    /// Live streams in the fleet (evicted streams excluded).
+    pub streams: usize,
+    /// Streams with at least one pair in the window.
+    pub live_streams: usize,
+    /// Streams currently inside an alarmed excursion.
+    pub alarmed_streams: usize,
+    /// Total events ingested across the fleet.
+    pub total_events: u64,
+    /// Smallest per-stream AUC.
+    pub min_auc: f64,
+    /// 10th-percentile per-stream AUC (nearest-rank).
+    pub p10_auc: f64,
+    /// Median per-stream AUC (nearest-rank).
+    pub median_auc: f64,
+    /// 90th-percentile per-stream AUC (nearest-rank).
+    pub p90_auc: f64,
+    /// Largest per-stream AUC.
+    pub max_auc: f64,
+    /// Mean per-stream AUC.
+    pub mean_auc: f64,
+}
+
+impl FleetAggregate {
+    /// Build the aggregate from the collected per-stream AUCs. Sorting
+    /// and summation run over the id-independent sorted order, so the
+    /// result does not depend on collection order beyond the multiset
+    /// of values — a prerequisite for serial/parallel bit-identity.
+    pub(super) fn compute(
+        mut aucs: Vec<f64>,
+        streams: usize,
+        alarmed_streams: usize,
+        total_events: u64,
+    ) -> FleetAggregate {
+        let live_streams = aucs.len();
+        if live_streams == 0 {
+            return FleetAggregate {
+                streams,
+                live_streams,
+                alarmed_streams,
+                total_events,
+                min_auc: 0.5,
+                p10_auc: 0.5,
+                median_auc: 0.5,
+                p90_auc: 0.5,
+                max_auc: 0.5,
+                mean_auc: 0.5,
+            };
+        }
+        aucs.sort_unstable_by(f64::total_cmp);
+        // Nearest-rank quantile over the sorted estimates.
+        let q = |frac: f64| aucs[((live_streams - 1) as f64 * frac).round() as usize];
+        FleetAggregate {
+            streams,
+            live_streams,
+            alarmed_streams,
+            total_events,
+            min_auc: aucs[0],
+            p10_auc: q(0.1),
+            median_auc: q(0.5),
+            p90_auc: q(0.9),
+            max_auc: aucs[live_streams - 1],
+            mean_auc: aucs.iter().sum::<f64>() / live_streams as f64,
         }
     }
 }
@@ -106,5 +186,39 @@ mod tests {
         };
         assert_eq!(s.mean_auc(), 1.0);
         assert_eq!(FleetSnapshot::default().mean_auc(), 0.5);
+    }
+
+    #[test]
+    fn aggregate_quantiles_nearest_rank() {
+        // 11 values 0.0, 0.1, …, 1.0: every quantile lands on a rank.
+        let aucs: Vec<f64> = (0..11).map(|i| f64::from(i) / 10.0).collect();
+        let agg = FleetAggregate::compute(aucs, 11, 2, 99);
+        assert_eq!(agg.streams, 11);
+        assert_eq!(agg.live_streams, 11);
+        assert_eq!(agg.alarmed_streams, 2);
+        assert_eq!(agg.total_events, 99);
+        assert_eq!(agg.min_auc, 0.0);
+        assert_eq!(agg.p10_auc, 0.1);
+        assert_eq!(agg.median_auc, 0.5);
+        assert_eq!(agg.p90_auc, 0.9);
+        assert_eq!(agg.max_auc, 1.0);
+        assert!((agg.mean_auc - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn aggregate_is_order_independent() {
+        let a = FleetAggregate::compute(vec![0.9, 0.1, 0.5], 3, 0, 3);
+        let b = FleetAggregate::compute(vec![0.5, 0.9, 0.1], 3, 0, 3);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn aggregate_empty_is_half() {
+        let agg = FleetAggregate::compute(Vec::new(), 0, 0, 0);
+        assert_eq!(agg.live_streams, 0);
+        assert_eq!(agg.min_auc, 0.5);
+        assert_eq!(agg.median_auc, 0.5);
+        assert_eq!(agg.max_auc, 0.5);
+        assert_eq!(agg.mean_auc, 0.5);
     }
 }

@@ -18,8 +18,12 @@
 //!   baseline, naive oracle, flipped variant, §7 weighted extension), the
 //!   sliding-window driver, drift monitor and metrics.
 //! * [`fleet`] — the multi-stream service layer: an [`AucFleet`] of
-//!   thousands of independent sliding windows keyed by stream id, with
-//!   sharded storage, batched ingestion and fleet-wide drift alarms.
+//!   thousands of independent sliding windows keyed by stream id. Each
+//!   shard owns its slab of stream states outright (`Send`-clean from
+//!   the rbtree up), so batched ingestion and aggregate queries run
+//!   either serially or on scoped worker threads with bit-identical
+//!   results; plus fleet-wide drift alarms, quantile aggregates,
+//!   streaming snapshots and idle-stream eviction.
 //! * [`stream`] — deterministic synthetic data sources standing in for the
 //!   paper's UCI datasets (see `DESIGN.md` §Substitutions), the
 //!   multi-stream fleet generator, drift injectors and CSV I/O.

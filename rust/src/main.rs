@@ -3,8 +3,9 @@
 //! ```text
 //! streamauc experiment <table1|fig1|fig2|fig3|all> [--events N] [--window K] [--seed S] [--csv DIR]
 //! streamauc stream [--dataset D] [--epsilon E] [--window K] [--events N] [--drift-at I --drift-rate R]
-//! streamauc fleet  [--streams N] [--events N] [--shards S] [--window K] [--epsilon E]
-//!                  [--batch B] [--drift-frac F] [--skew X] [--seed S]
+//! streamauc fleet  [--streams N] [--events N] [--shards S] [--workers W] [--window K]
+//!                  [--epsilon E] [--batch B] [--drift-frac F] [--skew X] [--seed S]
+//!                  [--evict-idle N]
 //! streamauc train  [--dataset D] [--steps N] [--lr X] [--events N] [--artifacts DIR] [--out FILE]
 //! streamauc help
 //! ```
@@ -12,7 +13,8 @@
 //! `experiment` regenerates the paper's tables/figures; `stream` runs
 //! the monitoring pipeline on a synthetic scored stream; `fleet` runs
 //! the multi-stream engine over a bursty synthetic fleet with injected
-//! per-stream drift; `train` runs the full three-layer path
+//! per-stream drift (`--workers N` drains shards on scoped worker
+//! threads — results are bit-identical to serial); `train` runs the full three-layer path
 //! (PJRT-compiled JAX/Pallas classifier trained and scored from rust,
 //! stream fed into the estimator).
 
@@ -58,8 +60,9 @@ USAGE:
   streamauc experiment <table1|fig1|fig2|fig3|all> [--events N] [--window K] [--seed S] [--csv DIR]
   streamauc stream [--dataset D] [--epsilon E] [--window K] [--events N]
                    [--drift-at I --drift-rate R] [--config FILE]
-  streamauc fleet  [--streams N] [--events N] [--shards S] [--window K] [--epsilon E]
-                   [--batch B] [--drift-frac F] [--skew X] [--seed S]
+  streamauc fleet  [--streams N] [--events N] [--shards S] [--workers W] [--window K]
+                   [--epsilon E] [--batch B] [--drift-frac F] [--skew X] [--seed S]
+                   [--evict-idle N]
   streamauc train  [--dataset D] [--steps N] [--lr X] [--events N]
                    [--artifacts DIR] [--out stream.csv]
   streamauc help
@@ -174,17 +177,20 @@ fn cmd_stream(args: &Args) -> Result<()> {
 
 fn cmd_fleet(args: &Args) -> Result<()> {
     args.validate_flags(&[
-        "streams", "events", "shards", "window", "epsilon", "batch", "drift-frac", "skew", "seed",
+        "streams", "events", "shards", "workers", "window", "epsilon", "batch", "drift-frac",
+        "skew", "seed", "evict-idle",
     ])?;
     let streams: usize = args.get_or("streams", 1000)?;
     let events: usize = args.get_or("events", 500_000)?;
     let shards: usize = args.get_or("shards", 64)?;
+    let workers: usize = args.get_or("workers", 1)?;
     let window: usize = args.get_or("window", 300)?;
     let epsilon: f64 = args.get_or("epsilon", 0.05)?;
     let batch: usize = args.get_or("batch", 2048)?;
     let drift_frac: f64 = args.get_or("drift-frac", 0.05)?;
     let skew: f64 = args.get_or("skew", 1.5)?;
     let seed: u64 = args.get_or("seed", 0xF1EE7)?;
+    let evict_idle: u64 = args.get_or("evict-idle", 0)?;
     if streams == 0 || events == 0 || batch == 0 {
         bail!("--streams, --events and --batch must be positive");
     }
@@ -212,13 +218,15 @@ fn cmd_fleet(args: &Args) -> Result<()> {
     let mut gen = MultiStream::with_profiles(profiles, seed).with_skew(skew);
     let mut fleet = AucFleet::new(FleetConfig {
         shards,
+        workers,
         stream_defaults: StreamConfig::new(window, epsilon),
     });
 
     println!(
         "# fleet: {streams} streams ({drifted} drifted), {events} events, \
-         batch {batch}, {} shards, k={window}, ε={epsilon}",
-        fleet.shard_count()
+         batch {batch}, {} shards, {} worker(s), k={window}, ε={epsilon}",
+        fleet.shard_count(),
+        fleet.workers()
     );
     let started = std::time::Instant::now();
     let mut remaining = events;
@@ -230,7 +238,6 @@ fn cmd_fleet(args: &Args) -> Result<()> {
     }
     let elapsed = started.elapsed();
 
-    let snap = fleet.snapshot();
     println!(
         "# ingested {} events into {} streams in {:.2?} ({:.0} events/s)",
         fleet.total_events(),
@@ -238,7 +245,22 @@ fn cmd_fleet(args: &Args) -> Result<()> {
         elapsed,
         events as f64 / elapsed.as_secs_f64()
     );
-    println!("# fleet mean AUC {:.4}; {} streams alarmed", snap.mean_auc(), snap.alarmed_streams.len());
+    if evict_idle > 0 {
+        let dropped = fleet.evict_idle(evict_idle);
+        println!(
+            "# evicted {dropped} stream(s) idle ≥ {evict_idle} events; {} remain",
+            fleet.stream_count()
+        );
+    }
+    let agg = fleet.aggregate();
+    println!(
+        "# AUC across {} live streams: min {:.4}  p10 {:.4}  median {:.4}  p90 {:.4}  max {:.4}  \
+         mean {:.4}",
+        agg.live_streams, agg.min_auc, agg.p10_auc, agg.median_auc, agg.p90_auc, agg.max_auc,
+        agg.mean_auc
+    );
+    let snap = fleet.snapshot();
+    println!("# fleet mean AUC {:.4}; {} streams alarmed", snap.mean_auc(), agg.alarmed_streams);
     println!("\n{:>10}  {:>8}  {:>6}  {:>6}  {:>7}  alarmed", "stream", "auc~", "fill", "|C|", "alarms");
     for s in snap.worst_streams(10) {
         println!(

@@ -1,6 +1,8 @@
 //! Fleet integration: 200 streams × ~5k events each with per-stream
 //! drift, spot-checked against freshly built naive oracles over the
-//! identical window contents, with alarm coverage assertions.
+//! identical window contents, with alarm coverage assertions; plus the
+//! executor determinism property (parallel ≡ serial, bit-identical)
+//! and idle-stream eviction.
 //!
 //! The event soup comes from the bursty [`MultiStream`] generator;
 //! streams 0..20 break abruptly halfway through their traffic. The
@@ -24,8 +26,11 @@ const OVERRIDE_EPS: f64 = 0.05;
 const OVERRIDE_FROM: u64 = 190;
 
 fn build_fleet() -> AucFleet {
+    // Parallel drain on purpose: the main integration scenario also
+    // exercises the scoped-thread executor against the naive oracle.
     let mut fleet = AucFleet::new(FleetConfig {
         shards: 32,
+        workers: 4,
         stream_defaults: StreamConfig {
             window: 200,
             epsilon: DEFAULT_EPS,
@@ -134,4 +139,138 @@ fn fleet_200_streams_drift_and_differential_spot_checks() {
         assert!(a.auc < a.baseline - 0.08 + 1e-9, "alarm without margin violation");
         assert!(a.stream_event > 200, "alarm before the window ever filled");
     }
+}
+
+/// Executor determinism: ingesting the same `MultiStream` trace with
+/// `workers ∈ {2, 4, 8}` must yield **bit-identical** snapshots,
+/// aggregate metrics and alarm logs to the serial path. Each property
+/// case draws its own fleet shape, traffic mix and batch size.
+#[test]
+fn parallel_ingestion_is_bit_identical_to_serial() {
+    streamauc::testing::check(0x9A11E1, 2, |rng| {
+        let n_streams = 50 + rng.below(50);
+        let drifted = n_streams / 10;
+        let per_stream = 1_500u64;
+        let events = (n_streams * per_stream) as usize;
+        let chunk = 256 + rng.below(3_841) as usize; // 256..=4096
+        let profiles: Vec<StreamProfile> = (0..n_streams)
+            .map(|id| {
+                let p = StreamProfile::healthy(id);
+                if id < drifted {
+                    p.with_drift(DriftSchedule::Abrupt { at: per_stream / 2, rate: 0.6 })
+                } else {
+                    p
+                }
+            })
+            .collect();
+        let trace = MultiStream::with_profiles(profiles, 0xD17E ^ n_streams)
+            .with_mean_burst(6.0)
+            .next_batch(events);
+
+        let config = |workers: usize| FleetConfig {
+            shards: 16,
+            workers,
+            stream_defaults: StreamConfig {
+                window: 200,
+                epsilon: 0.1,
+                monitor: Some(MonitorConfig {
+                    lambda: 0.001,
+                    margin: 0.08,
+                    patience: 50,
+                    warmup: 250,
+                }),
+            },
+        };
+        let mut serial = AucFleet::new(config(1));
+        for batch in trace.chunks(chunk) {
+            serial.push_batch(batch);
+        }
+        // The drift injection makes alarms part of what must match.
+        assert!(!serial.alarms().is_empty(), "scenario produced no alarms to compare");
+
+        for workers in [2usize, 4, 8] {
+            let mut parallel = AucFleet::new(config(workers));
+            for batch in trace.chunks(chunk) {
+                parallel.push_batch(batch);
+            }
+            assert_eq!(
+                serial.snapshot(),
+                parallel.snapshot(),
+                "snapshot diverged at {workers} workers (chunk {chunk}, {n_streams} streams)"
+            );
+            assert_eq!(
+                serial.aggregate(),
+                parallel.aggregate(),
+                "aggregate diverged at {workers} workers"
+            );
+            assert_eq!(
+                serial.alarms(),
+                parallel.alarms(),
+                "alarm log diverged at {workers} workers"
+            );
+            assert_eq!(serial.total_events(), parallel.total_events());
+        }
+    });
+}
+
+/// Idle-stream eviction: dead streams are dropped fleet-wide, surviving
+/// streams keep their exact window state through slab compaction, and
+/// revived streams start fresh.
+#[test]
+fn evict_idle_drops_dead_streams_and_preserves_the_rest() {
+    let mut fleet = AucFleet::new(FleetConfig {
+        shards: 8,
+        workers: 2,
+        stream_defaults: StreamConfig::new(50, 0.1).without_monitor(),
+    });
+    let mut rng = Pcg::seed(0xE71C);
+    let event = |rng: &mut Pcg| {
+        let pos = rng.chance(0.5);
+        let s = if pos { rng.normal_with(0.35, 0.15) } else { rng.normal_with(0.65, 0.15) };
+        (s, pos)
+    };
+    // Phase 1: streams 0..20 all take traffic (2 000 events).
+    let mut batch = Vec::new();
+    for _ in 0..100 {
+        for id in 0..20u64 {
+            let (s, l) = event(&mut rng);
+            batch.push((id, s, l));
+        }
+    }
+    fleet.push_batch(&batch);
+    // Phase 2: only streams 10..20 stay active (3 000 events).
+    batch.clear();
+    for _ in 0..300 {
+        for id in 10..20u64 {
+            let (s, l) = event(&mut rng);
+            batch.push((id, s, l));
+        }
+    }
+    fleet.push_batch(&batch);
+    assert_eq!(fleet.total_events(), 5_000);
+    assert_eq!(fleet.stream_count(), 20);
+
+    let survivors: Vec<Vec<(f64, bool)>> =
+        (10..20u64).map(|id| fleet.entries(id).unwrap().collect()).collect();
+    // Streams 0..10 have been idle ≥ 3 000 ticks; survivors < 20.
+    let evicted = fleet.evict_idle(3_000);
+    assert_eq!(evicted, 10);
+    assert_eq!(fleet.stream_count(), 10);
+    for id in 0..10u64 {
+        assert!(!fleet.contains(id), "stream {id} should have been evicted");
+        assert_eq!(fleet.auc(id), None);
+    }
+    for (i, id) in (10..20u64).enumerate() {
+        let after: Vec<(f64, bool)> = fleet.entries(id).unwrap().collect();
+        assert_eq!(after, survivors[i], "stream {id} window disturbed by compaction");
+        assert_eq!(after.len(), 50, "stream {id} window should have stayed full");
+    }
+    // The snapshot and aggregate reflect the smaller fleet.
+    let snap = fleet.snapshot();
+    assert_eq!(snap.streams.len(), 10);
+    assert!(snap.streams.iter().all(|s| s.stream >= 10));
+    assert_eq!(fleet.aggregate().streams, 10);
+    // A revived stream starts from an empty window.
+    fleet.push(3, 0.5, true);
+    assert_eq!(fleet.stream_len(3), Some(1));
 }
