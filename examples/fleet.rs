@@ -9,7 +9,9 @@
 //! suffer an abrupt label-flip failure halfway through. Events arrive
 //! in bursty, head-skewed batches; the [`AucFleet`] maintains one
 //! `ε/2`-approximate window plus a drift monitor per stream, draining
-//! its shards on 4 scoped worker threads (results are bit-identical to
+//! its shards on a persistent pool of 4 work-stealing workers with
+//! cross-batch pipelining — the next batch is generated and bucketed
+//! while the previous one drains (results are bit-identical to
 //! serial). The example prints ingestion throughput, fleet aggregate
 //! quantiles, the snapshot's triage view, and checks the alarms landed
 //! exactly on the broken streams.
@@ -42,6 +44,8 @@ fn main() {
     let mut fleet = AucFleet::new(FleetConfig {
         shards: 64,
         workers: 4,
+        pool: true,
+        pipeline: true,
         stream_defaults: StreamConfig {
             window: 200,
             epsilon: 0.1,
@@ -58,12 +62,16 @@ fn main() {
         fleet.push_batch(&gen.next_batch(n));
         pushed += n;
     }
+    // `stream_count` synchronizes with the pipelined final batch, so
+    // the clock below includes the full drain.
+    let live = fleet.stream_count();
     let elapsed = started.elapsed();
     println!(
-        "ingested {EVENTS} events across {} streams in {:.2?} ({:.0} events/s)",
-        fleet.stream_count(),
+        "ingested {EVENTS} events across {live} streams in {:.2?} ({:.0} events/s, \
+         {} workers on the last batch)",
         elapsed,
-        EVENTS as f64 / elapsed.as_secs_f64()
+        EVENTS as f64 / elapsed.as_secs_f64(),
+        fleet.last_batch_workers()
     );
 
     let agg = fleet.aggregate();

@@ -1,19 +1,27 @@
 //! Fleet ingestion throughput: updates/sec versus stream count,
 //! batched (`push_batch`) against the naive one-at-a-time loop, and
-//! serial against the scoped-thread parallel executor.
+//! the three execution strategies against each other — serial inline,
+//! scoped threads spawned per batch (the PR-2 baseline), and the
+//! persistent work-stealing pool (with and without cross-batch
+//! pipelining).
 //!
 //! `cargo bench --bench fleet [-- --events N] [-- --workers W]`
 //!
 //! Each row streams the same pre-generated bursty event soup into a
-//! fresh fleet five ways:
+//! fresh fleet seven ways:
 //!
 //! * `one-at-a-time` — `push` per event: full dispatch (stream-id hash
 //!   + shard index probe) on every update;
 //! * `batched` — `push_batch` in chunks: per-shard bucketing with the
 //!   stream lookup amortized over same-stream runs, serial drain;
-//! * `batched ∥` — ditto, shards drained on `--workers` scoped threads;
-//! * `monitor` / `monitor ∥` — batched with the per-stream drift
-//!   monitor on (adds one `O(|C|)` AUC read per update — the full
+//! * `scoped ∥` — ditto, shards drained by `--workers` scoped threads
+//!   spawned (and joined) on every batch;
+//! * `pooled ∥` — ditto, drained by the persistent pool: workers spawn
+//!   once, park between batches, and steal shards largest-bucket-first;
+//! * `piped ∥` — pooled plus cross-batch pipelining: the next batch is
+//!   bucketed while the previous one drains;
+//! * `monitor` / `mon ∥` — batched serial / pooled with the per-stream
+//!   drift monitor on (adds one `O(|C|)` AUC read per update — the full
 //!   service configuration, and the regime where parallelism pays most).
 //!
 //! Besides the human-readable table, the run writes machine-readable
@@ -21,12 +29,13 @@
 //! per stream count, plus parallel speedups) so the perf trajectory is
 //! tracked across PRs.
 //!
-//! Expected shape: batched ≥ one-at-a-time everywhere, the gap widening
-//! with stream count; parallel ≈ serial at 1 stream (one shard is hot,
-//! and thread scope overhead is paid for nothing) and pulling ahead at
-//! 10k streams where every shard carries work. Each parallel fleet is
-//! asserted bit-identical to its serial twin before timings are
-//! reported — the bench doubles as a determinism smoke test.
+//! Expected shape: batched ≥ one-at-a-time everywhere; pooled ≥ scoped
+//! at small batches (no spawn/join per batch) and under skew (stealing
+//! instead of fixed chunks); piped ≥ pooled when generation is a
+//! visible fraction of the loop; every parallel mode ≈ serial at 1
+//! stream (one shard is hot). Each parallel fleet is asserted
+//! bit-identical to its serial twin before timings are reported — the
+//! bench doubles as a determinism smoke test.
 
 use std::fmt::Write as _;
 use std::time::Instant;
@@ -43,19 +52,21 @@ struct Row {
     streams: usize,
     one_at_a_time: f64,
     batched_serial: f64,
-    batched_parallel: f64,
+    batched_scoped: f64,
+    batched_pooled: f64,
+    pipelined: f64,
     monitor_serial: f64,
-    monitor_parallel: f64,
+    monitor_pooled: f64,
     live: usize,
 }
 
-fn fresh_fleet(monitor: bool, workers: usize) -> AucFleet {
+fn fresh_fleet(monitor: bool, workers: usize, pool: bool, pipeline: bool) -> AucFleet {
     let stream_defaults = if monitor {
         StreamConfig::new(WINDOW, EPSILON)
     } else {
         StreamConfig::new(WINDOW, EPSILON).without_monitor()
     };
-    AucFleet::new(FleetConfig { shards: SHARDS, workers, stream_defaults })
+    AucFleet::new(FleetConfig { shards: SHARDS, workers, pool, pipeline, stream_defaults })
 }
 
 fn throughput(events: &[(u64, f64, bool)], mut ingest: impl FnMut(&[(u64, f64, bool)])) -> f64 {
@@ -69,6 +80,9 @@ fn batched(fleet: &mut AucFleet, soup: &[(u64, f64, bool)]) -> f64 {
         for chunk in evs.chunks(BATCH) {
             fleet.push_batch(chunk);
         }
+        // A pipelined fleet may still be draining its last batch; fold
+        // the wait into the timed region so strategies stay comparable.
+        let _ = fleet.stream_count();
     })
 }
 
@@ -99,18 +113,23 @@ fn json_report(events_per_row: usize, workers: usize, rows: &[Row]) -> String {
         let _ = write!(
             s,
             "    {{\"streams\": {}, \"live_streams\": {}, \"one_at_a_time\": {:.1}, \
-             \"batched_serial\": {:.1}, \"batched_parallel\": {:.1}, \
-             \"monitor_serial\": {:.1}, \"monitor_parallel\": {:.1}, \
-             \"speedup_batched\": {:.3}, \"speedup_monitor\": {:.3}}}",
+             \"batched_serial\": {:.1}, \"batched_scoped\": {:.1}, \"batched_pooled\": {:.1}, \
+             \"pipelined\": {:.1}, \"monitor_serial\": {:.1}, \"monitor_pooled\": {:.1}, \
+             \"speedup_scoped\": {:.3}, \"speedup_pooled\": {:.3}, \"speedup_pipelined\": {:.3}, \
+             \"speedup_monitor\": {:.3}}}",
             r.streams,
             r.live,
             r.one_at_a_time,
             r.batched_serial,
-            r.batched_parallel,
+            r.batched_scoped,
+            r.batched_pooled,
+            r.pipelined,
             r.monitor_serial,
-            r.monitor_parallel,
-            r.batched_parallel / r.batched_serial,
-            r.monitor_parallel / r.monitor_serial,
+            r.monitor_pooled,
+            r.batched_scoped / r.batched_serial,
+            r.batched_pooled / r.batched_serial,
+            r.pipelined / r.batched_serial,
+            r.monitor_pooled / r.monitor_serial,
         );
         s.push_str(if i + 1 < rows.len() { ",\n" } else { "\n" });
     }
@@ -123,20 +142,22 @@ fn main() {
     let events_per_row = flag(&args, "--events", 400_000);
     let workers = flag(&args, "--workers", 4);
 
-    println!("== fleet: ingestion throughput, batched vs one-at-a-time, serial vs parallel ==");
+    println!("== fleet: ingestion throughput — batching and execution strategies ==");
     println!(
         "   (k={WINDOW}, ε={EPSILON}, batch={BATCH}, {SHARDS} shards, {workers} workers, \
          {events_per_row} events/row)\n"
     );
     println!(
-        "{:>8}  {:>13}  {:>12}  {:>12}  {:>6}  {:>12}  {:>12}  {:>6}  {:>7}",
+        "{:>8}  {:>13}  {:>12}  {:>12}  {:>12}  {:>12}  {:>6}  {:>12}  {:>12}  {:>6}  {:>7}",
         "streams",
         "one-at-a-time",
         "batched",
-        "batched ∥",
+        "scoped ∥",
+        "pooled ∥",
+        "piped ∥",
         "gain",
         "monitor",
-        "monitor ∥",
+        "mon ∥",
         "gain",
         "live"
     );
@@ -144,11 +165,12 @@ fn main() {
     let mut rows = Vec::new();
     for &n_streams in &[1usize, 100, 10_000] {
         // Pre-generate outside the timed region; bursty + mildly skewed
-        // traffic (the regime push_batch's run-grouping exploits).
+        // traffic (the regime push_batch's run-grouping and the
+        // size-aware claim queue both exploit).
         let mut gen = MultiStream::new(n_streams, 0xBE7C).with_mean_burst(8.0);
         let soup = gen.next_batch(events_per_row);
 
-        let mut fleet = fresh_fleet(false, 1);
+        let mut fleet = fresh_fleet(false, 1, false, false);
         let one = throughput(&soup, |evs| {
             for &(id, s, l) in evs {
                 fleet.push(id, s, l);
@@ -156,37 +178,48 @@ fn main() {
         });
         let live = fleet.stream_count();
 
-        let mut serial = fresh_fleet(false, 1);
+        let mut serial = fresh_fleet(false, 1, false, false);
         let batched_serial = batched(&mut serial, &soup);
-        let mut parallel = fresh_fleet(false, workers);
-        let batched_parallel = batched(&mut parallel, &soup);
-        assert_eq!(serial.snapshot(), parallel.snapshot(), "parallel ingest diverged");
-        assert_eq!(serial.aggregate(), parallel.aggregate(), "parallel aggregate diverged");
+        let mut scoped = fresh_fleet(false, workers, false, false);
+        let batched_scoped = batched(&mut scoped, &soup);
+        let mut pooled = fresh_fleet(false, workers, true, false);
+        let batched_pooled = batched(&mut pooled, &soup);
+        let mut piped = fresh_fleet(false, workers, true, true);
+        let pipelined = batched(&mut piped, &soup);
+        assert_eq!(serial.snapshot(), scoped.snapshot(), "scoped ingest diverged");
+        assert_eq!(serial.snapshot(), pooled.snapshot(), "pooled ingest diverged");
+        assert_eq!(serial.snapshot(), piped.snapshot(), "pipelined ingest diverged");
+        assert_eq!(serial.aggregate(), pooled.aggregate(), "pooled aggregate diverged");
 
-        let mut serial = fresh_fleet(true, 1);
-        let monitor_serial = batched(&mut serial, &soup);
-        let mut parallel = fresh_fleet(true, workers);
-        let monitor_parallel = batched(&mut parallel, &soup);
-        assert_eq!(serial.alarms(), parallel.alarms(), "parallel alarms diverged");
-        assert_eq!(serial.snapshot(), parallel.snapshot(), "parallel monitor ingest diverged");
+        let mut mon_serial = fresh_fleet(true, 1, false, false);
+        let monitor_serial = batched(&mut mon_serial, &soup);
+        let mut mon_pooled = fresh_fleet(true, workers, true, false);
+        let monitor_pooled = batched(&mut mon_pooled, &soup);
+        assert_eq!(mon_serial.alarms(), mon_pooled.alarms(), "pooled alarms diverged");
+        assert_eq!(mon_serial.snapshot(), mon_pooled.snapshot(), "pooled monitor ingest diverged");
 
         println!(
-            "{n_streams:>8}  {one:>11.0}/s  {batched_serial:>10.0}/s  {batched_parallel:>10.0}/s  \
-             {:>5.2}x  {monitor_serial:>10.0}/s  {monitor_parallel:>10.0}/s  {:>5.2}x  {live:>7}",
-            batched_parallel / batched_serial,
-            monitor_parallel / monitor_serial,
+            "{n_streams:>8}  {one:>11.0}/s  {batched_serial:>10.0}/s  {batched_scoped:>10.0}/s  \
+             {batched_pooled:>10.0}/s  {pipelined:>10.0}/s  {:>5.2}x  {monitor_serial:>10.0}/s  \
+             {monitor_pooled:>10.0}/s  {:>5.2}x  {live:>7}",
+            batched_pooled / batched_serial,
+            monitor_pooled / monitor_serial,
         );
         rows.push(Row {
             streams: n_streams,
             one_at_a_time: one,
             batched_serial,
-            batched_parallel,
+            batched_scoped,
+            batched_pooled,
+            pipelined,
             monitor_serial,
-            monitor_parallel,
+            monitor_pooled,
             live,
         });
     }
-    println!("\n(gain = parallel / serial at {workers} workers; live = distinct streams touched)");
+    println!(
+        "\n(gain = pooled / serial at {workers} workers; live = distinct streams touched)"
+    );
 
     let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_fleet.json");
     let report = json_report(events_per_row, workers, &rows);

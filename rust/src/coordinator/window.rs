@@ -27,7 +27,17 @@ impl<E: AucEstimator> Window<E> {
 
     /// Push a pair; evicts and returns the oldest pair when the window
     /// is full.
+    ///
+    /// # Panics
+    ///
+    /// On a non-finite score: `NaN` has no place in the score order and
+    /// `±∞` are reserved for the §3.1 sentinel nodes
+    /// (`collections/score.rs`). The check runs **before** any state is
+    /// touched, so a caught panic leaves the window exactly as it was —
+    /// the property the fleet's worker-pool panic recovery relies on
+    /// (`rust/tests/executor.rs`).
     pub fn push(&mut self, score: f64, pos: bool) -> Option<(f64, bool)> {
+        assert!(score.is_finite(), "window scores must be finite, got {score}");
         self.est.insert(score, pos);
         self.fifo.push_back((score, pos));
         if self.fifo.len() > self.capacity {
@@ -199,6 +209,31 @@ mod tests {
     #[should_panic(expected = "positive")]
     fn zero_capacity_rejected() {
         SlidingAuc::new(0, 0.1);
+    }
+
+    #[test]
+    #[should_panic(expected = "finite")]
+    fn nan_score_rejected_at_the_boundary() {
+        let mut w = SlidingAuc::new(10, 0.1);
+        w.push(f64::NAN, true);
+    }
+
+    #[test]
+    fn rejected_push_leaves_window_untouched() {
+        let mut w = Window::with_estimator(10, ApproxAuc::new(0.1));
+        w.push(0.3, true);
+        w.push(0.7, false);
+        let before: Vec<(f64, bool)> = w.entries().collect();
+        let auc_before = w.auc();
+        let err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            w.push(f64::INFINITY, false);
+        }));
+        assert!(err.is_err(), "sentinel scores must be rejected");
+        assert_eq!(w.entries().collect::<Vec<_>>(), before);
+        assert_eq!(w.auc(), auc_before);
+        assert_eq!(w.len(), 2);
+        w.push(0.5, true); // still fully usable
+        assert_eq!(w.len(), 3);
     }
 
     #[test]

@@ -86,16 +86,34 @@ pub struct FleetConfig {
     /// queries; `0` and `1` both mean the serial inline path. Worker
     /// count never changes results, only wall-clock (the executor's
     /// determinism contract), so it is safe to tune freely. More workers
-    /// than shards is wasteful — the executor caps at one worker per
-    /// shard.
+    /// than busy shards is wasteful — the executor caps participation at
+    /// one worker per claimable shard.
     pub workers: usize,
+    /// Use the persistent worker pool (threads spawned once per fleet,
+    /// parked between batches) for batch drains. With `false`, parallel
+    /// drains fall back to a `std::thread::scope` per batch — the PR-2
+    /// baseline, kept for comparison benchmarks. Irrelevant when
+    /// `workers ≤ 1`. Execution strategy never changes results.
+    pub pool: bool,
+    /// Pipeline batches: `push_batch` returns as soon as the drain is
+    /// handed to the pool, so the caller buckets/generates the next
+    /// batch while workers drain the previous one. Results stay
+    /// bit-identical — every read synchronizes on the in-flight batch
+    /// first. Effective only with `pool` and `workers ≥ 2`.
+    pub pipeline: bool,
     /// Configuration applied to streams without an explicit override.
     pub stream_defaults: StreamConfig,
 }
 
 impl Default for FleetConfig {
     fn default() -> Self {
-        FleetConfig { shards: 64, workers: 1, stream_defaults: StreamConfig::default() }
+        FleetConfig {
+            shards: 64,
+            workers: 1,
+            pool: true,
+            pipeline: false,
+            stream_defaults: StreamConfig::default(),
+        }
     }
 }
 
@@ -112,6 +130,14 @@ mod tests {
         assert!(c.without_monitor().monitor.is_none());
         let m = MonitorConfig { lambda: 0.01, margin: 0.1, patience: 5, warmup: 10 };
         assert_eq!(StreamConfig::new(10, 0.5).with_monitor(m).monitor, Some(m));
+    }
+
+    #[test]
+    fn fleet_defaults_prefer_the_pool_without_pipelining() {
+        let c = FleetConfig::default();
+        assert_eq!(c.workers, 1);
+        assert!(c.pool, "pooled execution is the default strategy");
+        assert!(!c.pipeline, "pipelining is opt-in");
     }
 
     #[test]

@@ -1,36 +1,62 @@
-//! Scoped-thread parallel executor over fleet shards.
+//! Fleet execution strategies: serial, scoped threads, or the
+//! persistent work-stealing pool.
 //!
 //! The paper makes one window cheap (`O((log k)/ε)` per update); this
 //! module makes *many* windows scale across cores. A [`FleetExecutor`]
-//! runs a closure once per shard, either inline (serial path, `workers
-//! ≤ 1` — zero thread overhead, the default) or on [`std::thread::scope`]
-//! workers, each owning a contiguous chunk of the shard slice. No
-//! threadpool crate is available offline (`rust/DESIGN.md`
-//! §Offline-deps), and scoped threads need no `'static` bounds or
-//! channels: disjoint `&mut Shard` borrows move into the workers and the
-//! scope joins them before returning.
+//! runs per-shard work one of three ways:
 //!
-//! Determinism: workers never share state, each shard's work depends
-//! only on its own inputs, and result collection ([`map_shards`]) is
-//! reassembled in shard-index order — so the executor's output is
-//! independent of thread scheduling, and parallel ingestion is
-//! bit-identical to serial (property-tested in `rust/tests/fleet.rs`).
+//! * **serial** (`workers ≤ 1`, the default) — inline on the caller,
+//!   zero thread overhead;
+//! * **scoped** (`workers ≥ 2`, pooling off) — a `std::thread::scope`
+//!   per call, retained as the spawn-per-batch baseline the benches
+//!   compare against, and as the engine behind the borrowed-closure
+//!   helpers [`FleetExecutor::for_each_index`] /
+//!   [`FleetExecutor::map_indexed`];
+//! * **pooled** (`workers ≥ 2`, pooling on) — batch drains go to the
+//!   persistent `WorkerPool` (threads spawned once, parked between
+//!   batches), which also unlocks cross-batch pipelining (see
+//!   `AucFleet::push_batch`).
 //!
-//! [`map_shards`]: FleetExecutor::map_shards
+//! Every parallel path uses **work stealing**, not chunking: workers
+//! claim the next item from a shared atomic cursor until the queue is
+//! empty. PR-2's ceil-sized chunking could build fewer chunks than
+//! workers (9 shards / 4 workers → ceil(9/4) = 3 chunks of 3), silently
+//! idling a worker; with a claim cursor every worker participates
+//! whenever at least `workers` items exist (regression-tested in
+//! `rust/tests/executor.rs`), and a skewed queue no longer serializes
+//! behind its largest chunk.
+//!
+//! Determinism: scheduling decides only *who* computes, never *what* —
+//! per-item work touches disjoint state, and result collection
+//! ([`map_indexed`]) is reassembled in index order. Parallel ingestion
+//! stays bit-identical to serial under every strategy
+//! (adversarially tested in `rust/tests/executor.rs`).
+//!
+//! [`map_indexed`]: FleetExecutor::map_indexed
 
-use super::shard::Shard;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, PoisonError};
 
-/// Runs per-shard work serially or on scoped worker threads.
-#[derive(Clone, Debug)]
+use super::pool::{lock, DrainJob, WorkerPool};
+
+/// Runs fleet work serially, on scoped threads, or on the persistent
+/// worker pool. See the module docs for the strategy split.
+#[derive(Debug)]
 pub struct FleetExecutor {
     workers: usize,
+    use_pool: bool,
+    pool: Option<WorkerPool>,
 }
 
 impl FleetExecutor {
-    /// Executor with `workers` threads; `0` and `1` both mean the serial
-    /// inline path.
-    pub fn new(workers: usize) -> FleetExecutor {
-        FleetExecutor { workers: workers.max(1) }
+    /// Executor with `workers` threads; `0` and `1` both mean the
+    /// serial inline path. With `use_pool` (and ≥ 2 workers) the
+    /// persistent pool is spawned immediately and reused for every
+    /// batch until the executor is dropped or reconfigured.
+    pub fn new(workers: usize, use_pool: bool) -> FleetExecutor {
+        let workers = workers.max(1);
+        let pool = (use_pool && workers > 1).then(|| WorkerPool::spawn(workers));
+        FleetExecutor { workers, use_pool, pool }
     }
 
     /// Configured worker count (≥ 1; 1 = serial).
@@ -38,66 +64,165 @@ impl FleetExecutor {
         self.workers
     }
 
-    /// Run `f(shard_index, &mut shard)` for every shard. With more than
-    /// one worker, shards are split into contiguous chunks, one scoped
-    /// thread per chunk; the scope joins all workers before returning.
-    pub(super) fn for_each_shard<F>(&self, shards: &mut [Shard], f: F)
-    where
-        F: Fn(usize, &mut Shard) + Sync,
-    {
-        let workers = self.workers.min(shards.len()).max(1);
+    /// True when this executor was configured to use the persistent
+    /// pool (even if the current worker count keeps it serial).
+    pub fn uses_pool(&self) -> bool {
+        self.use_pool
+    }
+
+    /// True when a persistent pool is actually live (pooling on and
+    /// `workers ≥ 2`).
+    pub fn is_pooled(&self) -> bool {
+        self.pool.is_some()
+    }
+
+    /// Workers a job over `items` claimable units will engage:
+    /// `min(workers, items)`, at least 1. This is the participation
+    /// guarantee the old ceil-chunked dispatch violated (9 items on 4
+    /// workers built only 3 chunks).
+    pub fn planned_workers(&self, items: usize) -> usize {
+        self.workers.min(items).max(1)
+    }
+
+    /// Launch a drain job on `workers` threads (as computed by
+    /// [`FleetExecutor::planned_workers`] — the job's latch is armed
+    /// for exactly that many arrivals). Serial runs inline; the pool
+    /// returns immediately after submission (enabling pipelining);
+    /// scoped joins before returning.
+    pub(super) fn run_job(&self, job: &Arc<DrainJob>, workers: usize) {
         if workers <= 1 {
-            for (i, shard) in shards.iter_mut().enumerate() {
-                f(i, shard);
+            job.run_worker();
+        } else if let Some(pool) = &self.pool {
+            // planned_workers caps at self.workers == pool.size(), so
+            // exactly `workers` run_worker calls reach the job — the
+            // count its completion latch is armed for.
+            debug_assert!(workers <= pool.size());
+            for w in 0..workers {
+                let j = Arc::clone(job);
+                pool.submit(w, Box::new(move || j.run_worker()));
+            }
+        } else {
+            std::thread::scope(|scope| {
+                for _ in 0..workers {
+                    let j: &DrainJob = job;
+                    scope.spawn(move || j.run_worker());
+                }
+            });
+        }
+    }
+
+    /// Run `f(i)` once for every `i in 0..n`, work-stealing indices off
+    /// a shared cursor. Serial inline for `workers ≤ 1`; otherwise
+    /// `min(workers, n)` scoped threads (borrowed closures cannot move
+    /// onto the persistent pool without `'static` ownership, and the
+    /// call sites — aggregates, eviction, tests — are far off the
+    /// per-batch hot path).
+    pub fn for_each_index<F>(&self, n: usize, f: F)
+    where
+        F: Fn(usize) + Sync,
+    {
+        let threads = self.planned_workers(n);
+        if threads <= 1 {
+            for i in 0..n {
+                f(i);
             }
             return;
         }
-        let chunk = shards.len() / workers + usize::from(shards.len() % workers != 0);
+        let cursor = AtomicUsize::new(0);
         std::thread::scope(|scope| {
-            for (c, slice) in shards.chunks_mut(chunk).enumerate() {
-                let f = &f;
-                scope.spawn(move || {
-                    for (off, shard) in slice.iter_mut().enumerate() {
-                        f(c * chunk + off, shard);
+            for _ in 0..threads {
+                scope.spawn(|| loop {
+                    let i = cursor.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
                     }
+                    f(i);
                 });
             }
         });
     }
 
-    /// Map `f(shard_index, &shard)` over every shard, returning the
-    /// results in shard-index order regardless of which worker computed
-    /// them (per-chunk result vectors are concatenated in chunk order).
-    pub(super) fn map_shards<T, F>(&self, shards: &[Shard], f: F) -> Vec<T>
+    /// Map `f(i)` over `0..n` with work stealing, returning results in
+    /// index order regardless of which worker computed them.
+    pub fn map_indexed<T, F>(&self, n: usize, f: F) -> Vec<T>
     where
         T: Send,
-        F: Fn(usize, &Shard) -> T + Sync,
+        F: Fn(usize) -> T + Sync,
     {
-        let workers = self.workers.min(shards.len()).max(1);
-        if workers <= 1 {
-            return shards.iter().enumerate().map(|(i, s)| f(i, s)).collect();
+        let threads = self.planned_workers(n);
+        if threads <= 1 {
+            return (0..n).map(f).collect();
         }
-        let chunk = shards.len() / workers + usize::from(shards.len() % workers != 0);
+        let results = Mutex::new(Vec::with_capacity(n));
+        let cursor = AtomicUsize::new(0);
         std::thread::scope(|scope| {
-            let handles: Vec<_> = shards
-                .chunks(chunk)
-                .enumerate()
-                .map(|(c, slice)| {
-                    let f = &f;
-                    scope.spawn(move || {
-                        slice
-                            .iter()
-                            .enumerate()
-                            .map(|(off, shard)| f(c * chunk + off, shard))
-                            .collect::<Vec<T>>()
-                    })
-                })
-                .collect();
-            let mut out = Vec::with_capacity(shards.len());
-            for h in handles {
-                out.extend(h.join().expect("fleet worker panicked"));
+            for _ in 0..threads {
+                scope.spawn(|| loop {
+                    let i = cursor.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    let value = f(i);
+                    lock(&results).push((i, value));
+                });
             }
-            out
-        })
+        });
+        let mut pairs = results.into_inner().unwrap_or_else(PoisonError::into_inner);
+        pairs.sort_unstable_by_key(|&(i, _)| i);
+        pairs.into_iter().map(|(_, value)| value).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashSet;
+
+    #[test]
+    fn serial_executor_runs_inline() {
+        let ex = FleetExecutor::new(1, true);
+        assert_eq!(ex.workers(), 1);
+        assert!(!ex.is_pooled(), "one worker must not spawn pool threads");
+        let main = std::thread::current().id();
+        ex.for_each_index(5, |_| assert_eq!(std::thread::current().id(), main));
+    }
+
+    #[test]
+    fn planned_workers_never_exceeds_items() {
+        let ex = FleetExecutor::new(4, false);
+        assert_eq!(ex.planned_workers(0), 1);
+        assert_eq!(ex.planned_workers(1), 1);
+        assert_eq!(ex.planned_workers(3), 3);
+        // The ceil-chunking regression: 9 items on 4 workers must plan
+        // 4 participants, not ceil-chunk down to 3.
+        assert_eq!(ex.planned_workers(9), 4);
+        assert_eq!(ex.planned_workers(100), 4);
+    }
+
+    #[test]
+    fn map_indexed_preserves_index_order() {
+        for (workers, pool) in [(1, false), (4, false), (4, true), (16, false)] {
+            let ex = FleetExecutor::new(workers, pool);
+            let out = ex.map_indexed(97, |i| i * 3);
+            assert_eq!(out, (0..97).map(|i| i * 3).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn for_each_index_visits_every_index_exactly_once() {
+        let ex = FleetExecutor::new(8, false);
+        let seen = Mutex::new(HashSet::new());
+        ex.for_each_index(1000, |i| {
+            assert!(seen.lock().unwrap().insert(i), "index {i} visited twice");
+        });
+        assert_eq!(seen.lock().unwrap().len(), 1000);
+    }
+
+    #[test]
+    fn pooled_executor_spawns_and_drops_cleanly() {
+        let ex = FleetExecutor::new(4, true);
+        assert!(ex.is_pooled());
+        assert!(ex.uses_pool());
+        drop(ex); // joins the parked workers without hanging
     }
 }

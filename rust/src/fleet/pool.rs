@@ -1,0 +1,336 @@
+//! Persistent worker pool and the shared drain-job state it executes.
+//!
+//! PR-2's executor paid a `std::thread::scope` spawn+join on **every
+//! batch** and split shards into fixed contiguous chunks, so a skewed
+//! batch (one hot shard) serialized the whole drain while the other
+//! workers idled. This module replaces both mechanisms:
+//!
+//! * [`WorkerPool`] — threads spawned **once** per fleet (lazily, when
+//!   the executor is built with pooling and ≥ 2 workers) and parked on
+//!   their job channels between batches. Submitting a batch costs one
+//!   boxed closure per worker instead of a thread spawn.
+//! * [`DrainJob`] — everything one batch drain needs, shared behind an
+//!   `Arc`: the per-shard event buckets, the size-aware claim queue, the
+//!   precomputed fleet ticks, and a completion latch. Workers *steal*
+//!   shards from the queue through an atomic cursor — largest pending
+//!   bucket first — so a hot shard occupies one worker while the rest
+//!   drain the tail, and no worker idles while work remains.
+//!
+//! Determinism: claiming order affects only wall-clock. Each shard's
+//! observable state depends solely on its own bucket and its
+//! precomputed `start_tick`, and the batch's alarms are merged into the
+//! fleet-wide pending log in shard-index order by whichever worker
+//! finishes last — the exact order the serial drain produces. See
+//! `rust/DESIGN.md` §Parallelism.
+//!
+//! Panic safety: a panic inside one shard's drain (e.g. a non-finite
+//! score hitting the window's comparator boundary) is caught per shard,
+//! recorded on the job, and re-raised as a clean panic at the fleet's
+//! next synchronization point. The pool threads never unwind, so the
+//! same `AucFleet` keeps ingesting afterwards — no poisoned, parked or
+//! deadlocked workers (property-tested in `rust/tests/executor.rs`).
+
+use std::collections::HashMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex, MutexGuard, PoisonError};
+use std::thread;
+
+use super::config::StreamConfig;
+use super::shard::Shard;
+use super::snapshot::FleetAlarm;
+
+/// One ingestion event: `(stream id, score, label)`.
+pub(super) type Event = (u64, f64, bool);
+
+/// A unit of work shipped to a pool thread.
+pub(super) type Task = Box<dyn FnOnce() + Send + 'static>;
+
+/// Lock a mutex, ignoring poisoning: fleet invariants are maintained at
+/// a coarser level (a drain panic marks the whole job poisoned and the
+/// fleet re-raises it at the next sync), so an unwound worker must not
+/// brick every later lock of the same shard.
+pub(super) fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// The shard state shared between the fleet handle and the pool
+/// workers. Everything a drain job mutates lives here, behind one
+/// mutex per shard (always uncontended: the claim cursor hands each
+/// shard to exactly one worker, and the fleet only locks after the
+/// job's completion latch).
+#[derive(Debug)]
+pub(super) struct FleetCore {
+    /// One mutex per shard; the shard is the unit of parallelism.
+    pub(super) shards: Vec<Mutex<Shard>>,
+    /// Alarms of the in-flight (or just-finished) batch, merged here in
+    /// shard-index order by the job's last worker; the fleet moves them
+    /// into its public log at the next sync.
+    pub(super) pending_alarms: Mutex<Vec<FleetAlarm>>,
+    /// Drained bucket allocations handed back for reuse by later
+    /// batches (capacity recycling across the pipeline).
+    pub(super) spare_buckets: Mutex<Vec<Vec<Event>>>,
+}
+
+impl FleetCore {
+    pub(super) fn new(shards: usize) -> FleetCore {
+        FleetCore {
+            shards: (0..shards).map(|_| Mutex::new(Shard::default())).collect(),
+            pending_alarms: Mutex::new(Vec::new()),
+            spare_buckets: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// Shard count (power of two).
+    pub(super) fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Lock one shard (unpoisoning — see [`lock`]).
+    pub(super) fn lock_shard(&self, s: usize) -> MutexGuard<'_, Shard> {
+        lock(&self.shards[s])
+    }
+}
+
+/// One batch drain, shared by every worker participating in it.
+///
+/// The fleet constructs the job with the batch's buckets, the
+/// size-aware claim queue and the precomputed per-shard start ticks,
+/// then hands an `Arc` of it to the executor. Workers call
+/// [`DrainJob::run_worker`]; the fleet calls [`DrainJob::wait`] at its
+/// next synchronization point (immediately unless pipelining).
+#[derive(Debug)]
+pub(super) struct DrainJob {
+    core: Arc<FleetCore>,
+    /// Per-shard event buckets (full shard indexing; untouched shards
+    /// hold empty vectors). Mutexed so any worker can take one.
+    buckets: Vec<Mutex<Vec<Event>>>,
+    /// Claim queue: indices of non-empty shards, largest bucket first
+    /// (ties broken by shard index — the queue is deterministic even
+    /// though claiming is not, and neither affects results).
+    order: Vec<usize>,
+    /// Fleet tick immediately before each shard's first event — the
+    /// exact ticks the serial shard-by-shard drain would assign.
+    start_ticks: Vec<u64>,
+    defaults: StreamConfig,
+    /// Shared with the fleet (copy-on-write there), so a job costs one
+    /// `Arc` bump instead of a map clone per batch.
+    overrides: Arc<HashMap<u64, StreamConfig>>,
+    /// Next claim-queue position to steal.
+    cursor: AtomicUsize,
+    /// Workers that have not yet finished their claim loop.
+    remaining: AtomicUsize,
+    /// Workers that drained at least one shard (scheduling diagnostics).
+    pub(super) participants: AtomicUsize,
+    /// Set when any shard's drain panicked; the fleet re-raises once at
+    /// the next sync.
+    pub(super) poisoned: AtomicBool,
+    /// Completion latch: flipped by the last worker *after* the
+    /// shard-order alarm merge, so waiters always observe merged state.
+    done: Mutex<bool>,
+    cv: Condvar,
+}
+
+impl DrainJob {
+    pub(super) fn new(
+        core: Arc<FleetCore>,
+        buckets: Vec<Mutex<Vec<Event>>>,
+        order: Vec<usize>,
+        start_ticks: Vec<u64>,
+        defaults: StreamConfig,
+        overrides: Arc<HashMap<u64, StreamConfig>>,
+        workers: usize,
+    ) -> DrainJob {
+        DrainJob {
+            core,
+            buckets,
+            order,
+            start_ticks,
+            defaults,
+            overrides,
+            cursor: AtomicUsize::new(0),
+            remaining: AtomicUsize::new(workers.max(1)),
+            participants: AtomicUsize::new(0),
+            poisoned: AtomicBool::new(false),
+            done: Mutex::new(false),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Worker entry point: steal shards off the claim queue until it is
+    /// empty, then arrive at the latch. Called exactly `workers` times
+    /// per job (inline for the serial path).
+    pub(super) fn run_worker(&self) {
+        let mut claimed = false;
+        loop {
+            let i = self.cursor.fetch_add(1, Ordering::Relaxed);
+            let Some(&s) = self.order.get(i) else { break };
+            claimed = true;
+            // Catch per shard: one poisoned stream must not stop this
+            // worker from draining the shards it would steal next, and
+            // must never unwind into the pool's run loop.
+            if catch_unwind(AssertUnwindSafe(|| self.drain_shard(s))).is_err() {
+                self.poisoned.store(true, Ordering::Relaxed);
+            }
+        }
+        if claimed {
+            self.participants.fetch_add(1, Ordering::Relaxed);
+        }
+        self.finish();
+    }
+
+    /// Drain one claimed shard, then recycle its bucket allocation.
+    fn drain_shard(&self, s: usize) {
+        let mut bucket = std::mem::take(&mut *lock(&self.buckets[s]));
+        {
+            let mut shard = self.core.lock_shard(s);
+            shard.drain_events(&bucket, &self.defaults, &self.overrides, self.start_ticks[s]);
+        }
+        bucket.clear();
+        lock(&self.core.spare_buckets).push(bucket);
+    }
+
+    /// Arrive at the latch; the last worker merges the batch's alarms in
+    /// shard-index order (the serial order) before releasing waiters.
+    fn finish(&self) {
+        if self.remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
+            {
+                let mut out = lock(&self.core.pending_alarms);
+                for shard in &self.core.shards {
+                    lock(shard).take_alarms_into(&mut out);
+                }
+            }
+            *lock(&self.done) = true;
+            self.cv.notify_all();
+        }
+    }
+
+    /// Block until every worker has finished and the alarm merge is
+    /// visible. Cheap (one uncontended lock) once the job is done.
+    pub(super) fn wait(&self) {
+        let mut done = lock(&self.done);
+        while !*done {
+            done = self.cv.wait(done).unwrap_or_else(PoisonError::into_inner);
+        }
+    }
+}
+
+/// Persistent ingestion threads, spawned once per fleet and parked on
+/// their job channels between batches.
+#[derive(Debug)]
+pub(super) struct WorkerPool {
+    senders: Vec<mpsc::Sender<Task>>,
+    handles: Vec<thread::JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    /// Spawn `workers` named threads, each parked on its own channel.
+    pub(super) fn spawn(workers: usize) -> WorkerPool {
+        let mut senders = Vec::with_capacity(workers);
+        let mut handles = Vec::with_capacity(workers);
+        for w in 0..workers {
+            let (tx, rx) = mpsc::channel::<Task>();
+            let handle = thread::Builder::new()
+                .name(format!("fleet-worker-{w}"))
+                .spawn(move || {
+                    // Parked in `recv` between batches; exits when the
+                    // pool drops its sender. Tasks are already
+                    // panic-proofed by `DrainJob::run_worker`; the
+                    // catch here is defense in depth so no panic can
+                    // ever take a pool thread down.
+                    while let Ok(task) = rx.recv() {
+                        let _ = catch_unwind(AssertUnwindSafe(task));
+                    }
+                })
+                .expect("failed to spawn fleet worker thread");
+            senders.push(tx);
+            handles.push(handle);
+        }
+        WorkerPool { senders, handles }
+    }
+
+    /// Number of pool threads.
+    pub(super) fn size(&self) -> usize {
+        self.senders.len()
+    }
+
+    /// Hand a task to worker `w`. If that thread is somehow gone the
+    /// task runs inline so the job's completion latch still resolves.
+    pub(super) fn submit(&self, w: usize, task: Task) {
+        if let Err(mpsc::SendError(task)) = self.senders[w].send(task) {
+            task();
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        // Disconnect the channels; each worker finishes its in-flight
+        // task (if any) and exits its recv loop, then we join.
+        self.senders.clear();
+        for handle in self.handles.drain(..) {
+            let _ = handle.join();
+        }
+    }
+}
+
+// The job is shared across worker threads behind an `Arc`, and the pool
+// (inside the executor, inside the fleet) must move with the fleet.
+const _: () = {
+    const fn assert_send_sync<T: Send + Sync>() {}
+    const fn assert_send<T: Send>() {}
+    assert_send_sync::<DrainJob>();
+    assert_send_sync::<FleetCore>();
+    assert_send::<WorkerPool>();
+};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pool_runs_tasks_and_survives_panics() {
+        let pool = WorkerPool::spawn(2);
+        assert_eq!(pool.size(), 2);
+        let hits = Arc::new(AtomicUsize::new(0));
+        // A panicking task must not kill the worker...
+        pool.submit(0, Box::new(|| panic!("boom")));
+        for w in 0..2 {
+            let hits = Arc::clone(&hits);
+            pool.submit(
+                w,
+                Box::new(move || {
+                    hits.fetch_add(1, Ordering::SeqCst);
+                }),
+            );
+        }
+        // ...so both workers still drain their queues before the drop
+        // below joins them.
+        drop(pool);
+        assert_eq!(hits.load(Ordering::SeqCst), 2);
+    }
+
+    #[test]
+    fn latch_waits_for_all_workers_and_merge() {
+        let core = Arc::new(FleetCore::new(4));
+        let buckets: Vec<Mutex<Vec<Event>>> =
+            (0..4).map(|_| Mutex::new(Vec::new())).collect();
+        let job = Arc::new(DrainJob::new(
+            Arc::clone(&core),
+            buckets,
+            Vec::new(), // nothing to claim: workers arrive immediately
+            vec![0; 4],
+            StreamConfig::default(),
+            Arc::new(HashMap::new()),
+            3,
+        ));
+        let pool = WorkerPool::spawn(3);
+        for w in 0..3 {
+            let j = Arc::clone(&job);
+            pool.submit(w, Box::new(move || j.run_worker()));
+        }
+        job.wait();
+        assert!(!job.poisoned.load(Ordering::Relaxed));
+        assert_eq!(job.participants.load(Ordering::Relaxed), 0);
+    }
+}

@@ -2,17 +2,20 @@
 //!
 //! A [`Shard`] owns everything needed to ingest its slice of the fleet's
 //! traffic without touching any other shard: the dense stream slab, the
-//! stream-id → slot index, the ingestion bucket the batch partitioner
-//! fills, and a shard-local alarm log. Because the state is fully
-//! shard-owned (no `Rc`, no interior mutability — see the compile-time
-//! `Send` assertion at the bottom), disjoint `&mut Shard` borrows can be
-//! handed to [`std::thread::scope`] workers by the
-//! [`FleetExecutor`](super::FleetExecutor) and drained concurrently.
+//! stream-id → slot index, and a shard-local alarm log. Because the
+//! state is fully shard-owned (no `Rc`, no interior mutability — see
+//! the compile-time `Send` assertion at the bottom), each shard sits
+//! behind its own mutex in the fleet core and is claimed by exactly one
+//! worker of the work-stealing drain (`fleet/pool.rs`), so the locks
+//! never contend. Batch buckets live fleet-side (`AucFleet` stages
+//! them while the previous batch drains — the pipelining overlap) and
+//! arrive here as plain slices; their *sizes* drive both the
+//! precomputed tick stamps and the size-aware claim queue.
 //!
 //! Determinism contract: a shard's observable state after
-//! [`Shard::drain`] depends only on its bucket contents and the
-//! `start_tick` it is given — never on which thread ran it or when.
-//! Alarms accumulate in the shard-local log and are merged into the
+//! [`Shard::drain_events`] depends only on the events it is given and
+//! the `start_tick` — never on which thread ran it or when. Alarms
+//! accumulate in the shard-local log and are merged into the
 //! fleet-wide log in shard-index order, which is exactly the order the
 //! serial path produces, so parallel and serial ingestion are
 //! bit-identical (`rust/DESIGN.md` §Parallelism).
@@ -72,17 +75,14 @@ impl StreamState {
     }
 }
 
-/// One shard: dense stream slab, id index, ingestion bucket and local
-/// alarm log. See the module docs for the ownership/determinism rules.
+/// One shard: dense stream slab, id index and local alarm log. See the
+/// module docs for the ownership/determinism rules.
 #[derive(Clone, Debug, Default)]
 pub(super) struct Shard {
     /// Dense slab of stream states (hot streams stay contiguous).
     streams: Vec<StreamState>,
     /// Stream id → slot in `streams`.
     index: HashMap<u64, u32>,
-    /// Batch bucket, filled by the fleet's partitioner and emptied by
-    /// [`Shard::drain`]; the allocation is reused across batches.
-    pub(super) bucket: Vec<(u64, f64, bool)>,
     /// Shard-local alarm log, merged into the fleet log in shard order.
     alarms: Vec<FleetAlarm>,
 }
@@ -164,37 +164,33 @@ impl Shard {
         }
     }
 
-    /// Drain the ingestion bucket in arrival order, resolving the
+    /// Ingest one batch bucket in arrival order, resolving the
     /// stream-id → slot lookup once per run of same-stream events.
     /// Events are stamped with fleet ticks `start_tick + 1, + 2, …` —
     /// the exact ticks the serial shard-by-shard drain would assign,
-    /// which is what makes parallel draining deterministic.
-    pub(super) fn drain(
+    /// which is what makes out-of-order parallel draining deterministic.
+    pub(super) fn drain_events(
         &mut self,
+        events: &[(u64, f64, bool)],
         defaults: &StreamConfig,
         overrides: &HashMap<u64, StreamConfig>,
         start_tick: u64,
     ) {
-        // Take the bucket out so `push_at(&mut self)` can run while we
-        // iterate it; hand the allocation back (cleared) afterwards.
-        let mut bucket = std::mem::take(&mut self.bucket);
         let mut tick = start_tick;
         let mut i = 0;
-        while i < bucket.len() {
-            let id = bucket[i].0;
+        while i < events.len() {
+            let id = events[i].0;
             let mut j = i + 1;
-            while j < bucket.len() && bucket[j].0 == id {
+            while j < events.len() && events[j].0 == id {
                 j += 1;
             }
             let slot = self.ensure_slot(id, defaults, overrides);
-            for &(_, score, label) in &bucket[i..j] {
+            for &(_, score, label) in &events[i..j] {
                 tick += 1;
                 self.push_at(slot, score, label, tick);
             }
             i = j;
         }
-        bucket.clear();
-        self.bucket = bucket;
     }
 
     /// Append this shard's pending alarms to `out` (emptying the local
@@ -226,7 +222,7 @@ impl Shard {
     }
 }
 
-// Shards are handed to scoped worker threads as disjoint `&mut Shard`;
+// Shards cross thread boundaries (pool workers lock and drain them);
 // this compiles only while every constituent (rbtree arena, weighted
 // lists, window FIFO, monitor) stays free of `Rc`/interior mutability.
 const _: () = {

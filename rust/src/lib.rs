@@ -20,9 +20,12 @@
 //! * [`fleet`] — the multi-stream service layer: an [`AucFleet`] of
 //!   thousands of independent sliding windows keyed by stream id. Each
 //!   shard owns its slab of stream states outright (`Send`-clean from
-//!   the rbtree up), so batched ingestion and aggregate queries run
-//!   either serially or on scoped worker threads with bit-identical
-//!   results; plus fleet-wide drift alarms, quantile aggregates,
+//!   the rbtree up); batched ingestion drains shards work-stealing on
+//!   a persistent worker pool (spawned once, parked between batches,
+//!   optionally pipelining the next batch while the previous drains)
+//!   with results bit-identical to serial under every strategy — the
+//!   contract `rust/tests/executor.rs` attacks with adversarial
+//!   schedules. Plus fleet-wide drift alarms, quantile aggregates,
 //!   streaming snapshots and idle-stream eviction.
 //! * [`stream`] — deterministic synthetic data sources standing in for the
 //!   paper's UCI datasets (see `DESIGN.md` §Substitutions), the

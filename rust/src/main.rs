@@ -5,7 +5,7 @@
 //! streamauc stream [--dataset D] [--epsilon E] [--window K] [--events N] [--drift-at I --drift-rate R]
 //! streamauc fleet  [--streams N] [--events N] [--shards S] [--workers W] [--window K]
 //!                  [--epsilon E] [--batch B] [--drift-frac F] [--skew X] [--seed S]
-//!                  [--evict-idle N]
+//!                  [--evict-idle N] [--pool BOOL] [--pipeline]
 //! streamauc train  [--dataset D] [--steps N] [--lr X] [--events N] [--artifacts DIR] [--out FILE]
 //! streamauc help
 //! ```
@@ -13,10 +13,12 @@
 //! `experiment` regenerates the paper's tables/figures; `stream` runs
 //! the monitoring pipeline on a synthetic scored stream; `fleet` runs
 //! the multi-stream engine over a bursty synthetic fleet with injected
-//! per-stream drift (`--workers N` drains shards on scoped worker
-//! threads — results are bit-identical to serial); `train` runs the full three-layer path
-//! (PJRT-compiled JAX/Pallas classifier trained and scored from rust,
-//! stream fed into the estimator).
+//! per-stream drift (`--workers N` drains shards work-stealing on the
+//! persistent worker pool; `--pool false` falls back to a thread scope
+//! per batch, `--pipeline` overlaps batch generation with the previous
+//! drain — every combination is bit-identical to serial); `train` runs
+//! the full three-layer path (PJRT-compiled JAX/Pallas classifier
+//! trained and scored from rust, stream fed into the estimator).
 
 use anyhow::{bail, Context, Result};
 
@@ -62,7 +64,7 @@ USAGE:
                    [--drift-at I --drift-rate R] [--config FILE]
   streamauc fleet  [--streams N] [--events N] [--shards S] [--workers W] [--window K]
                    [--epsilon E] [--batch B] [--drift-frac F] [--skew X] [--seed S]
-                   [--evict-idle N]
+                   [--evict-idle N] [--pool BOOL] [--pipeline]
   streamauc train  [--dataset D] [--steps N] [--lr X] [--events N]
                    [--artifacts DIR] [--out stream.csv]
   streamauc help
@@ -178,12 +180,14 @@ fn cmd_stream(args: &Args) -> Result<()> {
 fn cmd_fleet(args: &Args) -> Result<()> {
     args.validate_flags(&[
         "streams", "events", "shards", "workers", "window", "epsilon", "batch", "drift-frac",
-        "skew", "seed", "evict-idle",
+        "skew", "seed", "evict-idle", "pool", "pipeline",
     ])?;
     let streams: usize = args.get_or("streams", 1000)?;
     let events: usize = args.get_or("events", 500_000)?;
     let shards: usize = args.get_or("shards", 64)?;
     let workers: usize = args.get_or("workers", 1)?;
+    let pool: bool = args.get_or("pool", true)?;
+    let pipeline: bool = args.get_or("pipeline", false)?;
     let window: usize = args.get_or("window", 300)?;
     let epsilon: f64 = args.get_or("epsilon", 0.05)?;
     let batch: usize = args.get_or("batch", 2048)?;
@@ -219,14 +223,18 @@ fn cmd_fleet(args: &Args) -> Result<()> {
     let mut fleet = AucFleet::new(FleetConfig {
         shards,
         workers,
+        pool,
+        pipeline,
         stream_defaults: StreamConfig::new(window, epsilon),
     });
 
     println!(
         "# fleet: {streams} streams ({drifted} drifted), {events} events, \
-         batch {batch}, {} shards, {} worker(s), k={window}, ε={epsilon}",
+         batch {batch}, {} shards, {} worker(s) [{}{}], k={window}, ε={epsilon}",
         fleet.shard_count(),
-        fleet.workers()
+        fleet.workers(),
+        if fleet.pooled() { "pooled" } else if fleet.workers() > 1 { "scoped" } else { "serial" },
+        if fleet.pipelined() { ", pipelined" } else { "" }
     );
     let started = std::time::Instant::now();
     let mut remaining = events;
@@ -236,12 +244,14 @@ fn cmd_fleet(args: &Args) -> Result<()> {
         fleet.push_batch(&chunk);
         remaining -= n;
     }
+    // `stream_count` synchronizes with a pipelined final batch, so the
+    // clock includes the full drain.
+    let live = fleet.stream_count();
     let elapsed = started.elapsed();
 
     println!(
-        "# ingested {} events into {} streams in {:.2?} ({:.0} events/s)",
+        "# ingested {} events into {live} streams in {:.2?} ({:.0} events/s)",
         fleet.total_events(),
-        fleet.stream_count(),
         elapsed,
         events as f64 / elapsed.as_secs_f64()
     );

@@ -27,10 +27,13 @@ const OVERRIDE_FROM: u64 = 190;
 
 fn build_fleet() -> AucFleet {
     // Parallel drain on purpose: the main integration scenario also
-    // exercises the scoped-thread executor against the naive oracle.
+    // exercises the pooled work-stealing executor (with cross-batch
+    // pipelining) against the naive oracle.
     let mut fleet = AucFleet::new(FleetConfig {
         shards: 32,
         workers: 4,
+        pool: true,
+        pipeline: true,
         stream_defaults: StreamConfig {
             window: 200,
             epsilon: DEFAULT_EPS,
@@ -88,7 +91,7 @@ fn fleet_200_streams_drift_and_differential_spot_checks() {
     checked.insert(OVERRIDE_FROM);
     checked.insert(STREAMS - 1);
     for &id in &checked {
-        let window: Vec<(f64, bool)> = fleet.entries(id).expect("live stream").collect();
+        let window = fleet.entries(id).expect("live stream");
         let cfg = fleet.stream_config(id);
         assert!(!window.is_empty() && window.len() <= cfg.window, "stream {id} window size");
         let truth = NaiveAuc::of(&window);
@@ -170,6 +173,8 @@ fn parallel_ingestion_is_bit_identical_to_serial() {
         let config = |workers: usize| FleetConfig {
             shards: 16,
             workers,
+            pool: true,
+            pipeline: false,
             stream_defaults: StreamConfig {
                 window: 200,
                 epsilon: 0.1,
@@ -222,6 +227,7 @@ fn evict_idle_drops_dead_streams_and_preserves_the_rest() {
         shards: 8,
         workers: 2,
         stream_defaults: StreamConfig::new(50, 0.1).without_monitor(),
+        ..FleetConfig::default()
     });
     let mut rng = Pcg::seed(0xE71C);
     let event = |rng: &mut Pcg| {
@@ -251,7 +257,7 @@ fn evict_idle_drops_dead_streams_and_preserves_the_rest() {
     assert_eq!(fleet.stream_count(), 20);
 
     let survivors: Vec<Vec<(f64, bool)>> =
-        (10..20u64).map(|id| fleet.entries(id).unwrap().collect()).collect();
+        (10..20u64).map(|id| fleet.entries(id).unwrap()).collect();
     // Streams 0..10 have been idle ≥ 3 000 ticks; survivors < 20.
     let evicted = fleet.evict_idle(3_000);
     assert_eq!(evicted, 10);
@@ -261,7 +267,7 @@ fn evict_idle_drops_dead_streams_and_preserves_the_rest() {
         assert_eq!(fleet.auc(id), None);
     }
     for (i, id) in (10..20u64).enumerate() {
-        let after: Vec<(f64, bool)> = fleet.entries(id).unwrap().collect();
+        let after = fleet.entries(id).unwrap();
         assert_eq!(after, survivors[i], "stream {id} window disturbed by compaction");
         assert_eq!(after.len(), 50, "stream {id} window should have stayed full");
     }
