@@ -12,9 +12,13 @@
 //! its shards on a persistent pool of 4 work-stealing workers with
 //! cross-batch pipelining — the next batch is generated and bucketed
 //! while the previous one drains (results are bit-identical to
-//! serial). The example prints ingestion throughput, fleet aggregate
-//! quantiles, the snapshot's triage view, and checks the alarms landed
-//! exactly on the broken streams.
+//! serial). The same pool then answers the monitoring queries: the
+//! `top_k_worst` triage view, the fleet AUC histogram, the
+//! `count_below` SLO count and a `select_streams` predicate scan —
+//! all shard-parallel, all bit-identical to their serial versions.
+//! The example prints ingestion throughput, fleet aggregate quantiles
+//! and the query results, and checks the alarms landed exactly on the
+//! broken streams.
 
 use std::collections::HashSet;
 use std::time::Instant;
@@ -46,6 +50,7 @@ fn main() {
         workers: 4,
         pool: true,
         pipeline: true,
+        adaptive: false,
         stream_defaults: StreamConfig {
             window: 200,
             epsilon: 0.1,
@@ -85,11 +90,36 @@ fn main() {
         snap.mean_auc(),
         snap.alarmed_streams.len()
     );
-    println!("worst streams (triage view):");
+
+    // Shard-parallel queries, answered on the same persistent pool the
+    // drains use (fleet/query.rs).
+    let hist = fleet.auc_histogram(10);
+    println!("AUC histogram ({} live streams):", hist.live_streams);
+    let peak = hist.counts.iter().copied().max().unwrap_or(0).max(1);
+    for (i, &count) in hist.counts.iter().enumerate() {
+        let (lo, hi) = hist.bin_range(i);
+        println!("  [{lo:.1}, {hi:.1})  {count:>5}  {}", "#".repeat(count * 40 / peak));
+    }
+    let below = fleet.count_below(0.7);
+    println!("{below} streams below AUC 0.7\n");
+
+    println!("worst streams (top_k_worst triage view):");
     println!("{:>8}  {:>8}  {:>6}  {:>6}  alarmed", "stream", "auc~", "fill", "|C|");
-    for s in snap.worst_streams(8) {
+    let worst = fleet.top_k_worst(8);
+    for s in &worst {
         println!("{:>8}  {:>8.4}  {:>6}  {:>6}  {}", s.stream, s.auc, s.len, s.compressed_len, s.alarmed);
     }
+    // The query layer and the materialized snapshot agree on triage.
+    let via_snapshot: Vec<u64> = snap.worst_streams(8).iter().map(|s| s.stream).collect();
+    let via_query: Vec<u64> = worst.iter().map(|s| s.stream).collect();
+    assert_eq!(via_query, via_snapshot, "query triage diverged from snapshot triage");
+    // A predicate scan sees exactly the streams the snapshot calls alarmed.
+    let alarmed_now = fleet.select_streams(|s| s.alarmed);
+    assert_eq!(
+        alarmed_now.iter().map(|s| s.stream).collect::<Vec<_>>(),
+        snap.alarmed_streams,
+        "select_streams(alarmed) diverged from the snapshot's alarm list"
+    );
 
     // Alarms must cover (essentially all of) the drifted streams and
     // none of the healthy ones.

@@ -1,14 +1,12 @@
-//! Fleet ingestion throughput: updates/sec versus stream count,
-//! batched (`push_batch`) against the naive one-at-a-time loop, and
-//! the three execution strategies against each other — serial inline,
-//! scoped threads spawned per batch (the PR-2 baseline), and the
-//! persistent work-stealing pool (with and without cross-batch
-//! pipelining).
+//! Fleet throughput: ingestion versus stream count across execution
+//! strategies, plus — since the typed-job engine — the **read paths**
+//! (aggregate, queries, snapshot) serial versus pooled, and the
+//! adaptive small-batch crossover.
 //!
 //! `cargo bench --bench fleet [-- --events N] [-- --workers W]`
 //!
-//! Each row streams the same pre-generated bursty event soup into a
-//! fresh fleet seven ways:
+//! Ingestion rows stream the same pre-generated bursty event soup into
+//! a fresh fleet seven ways:
 //!
 //! * `one-at-a-time` — `push` per event: full dispatch (stream-id hash
 //!   + shard index probe) on every update;
@@ -24,18 +22,28 @@
 //!   drift monitor on (adds one `O(|C|)` AUC read per update — the full
 //!   service configuration, and the regime where parallelism pays most).
 //!
-//! Besides the human-readable table, the run writes machine-readable
-//! `BENCH_fleet.json` at the repository root (events/sec per scenario
-//! per stream count, plus parallel speedups) so the perf trajectory is
-//! tracked across PRs.
+//! Read rows then time, on the already-ingested serial and pooled
+//! fleets, calls/sec of `aggregate()`, the query suite
+//! (`top_k_worst(10)` + `count_below(0.5)` + `auc_histogram(16)`) and
+//! `snapshot()` — all of which now execute as typed jobs on the
+//! persistent pool when `pool = true`. The small-batch row ingests the
+//! soup in 64-event batches with a fixed worker count versus
+//! `FleetConfig::adaptive`, which drains trickle batches inline — the
+//! crossover the adaptive satellite exists for.
+//!
+//! Besides the human-readable tables, the run writes machine-readable
+//! `BENCH_fleet.json` at the repository root (events/sec or calls/sec
+//! per scenario per stream count, plus parallel speedups) so the perf
+//! trajectory is tracked across PRs.
 //!
 //! Expected shape: batched ≥ one-at-a-time everywhere; pooled ≥ scoped
 //! at small batches (no spawn/join per batch) and under skew (stealing
-//! instead of fixed chunks); piped ≥ pooled when generation is a
-//! visible fraction of the loop; every parallel mode ≈ serial at 1
-//! stream (one shard is hot). Each parallel fleet is asserted
-//! bit-identical to its serial twin before timings are reported — the
-//! bench doubles as a determinism smoke test.
+//! instead of fixed chunks); pooled reads ≥ serial reads at 10k
+//! streams (shard-parallel collection) and ≈ serial at 1 stream;
+//! adaptive ≥ fixed-worker ingestion at 64-event batches. Every
+//! parallel fleet and every pooled read is asserted bit-identical to
+//! its serial twin before timings are reported — the bench doubles as
+//! a determinism smoke test.
 
 use std::fmt::Write as _;
 use std::time::Instant;
@@ -46,6 +54,7 @@ use streamauc::stream::MultiStream;
 const WINDOW: usize = 100;
 const EPSILON: f64 = 0.1;
 const BATCH: usize = 8192;
+const SMALL_BATCH: usize = 64;
 const SHARDS: usize = 64;
 
 struct Row {
@@ -57,16 +66,24 @@ struct Row {
     pipelined: f64,
     monitor_serial: f64,
     monitor_pooled: f64,
+    aggregate_serial: f64,
+    aggregate_pooled: f64,
+    query_serial: f64,
+    query_pooled: f64,
+    snapshot_serial: f64,
+    snapshot_pooled: f64,
+    small_batch_pooled: f64,
+    small_batch_adaptive: f64,
     live: usize,
 }
 
-fn fresh_fleet(monitor: bool, workers: usize, pool: bool, pipeline: bool) -> AucFleet {
+fn fresh_fleet(monitor: bool, workers: usize, pool: bool, pipeline: bool, adaptive: bool) -> AucFleet {
     let stream_defaults = if monitor {
         StreamConfig::new(WINDOW, EPSILON)
     } else {
         StreamConfig::new(WINDOW, EPSILON).without_monitor()
     };
-    AucFleet::new(FleetConfig { shards: SHARDS, workers, pool, pipeline, stream_defaults })
+    AucFleet::new(FleetConfig { shards: SHARDS, workers, pool, pipeline, adaptive, stream_defaults })
 }
 
 fn throughput(events: &[(u64, f64, bool)], mut ingest: impl FnMut(&[(u64, f64, bool)])) -> f64 {
@@ -75,15 +92,34 @@ fn throughput(events: &[(u64, f64, bool)], mut ingest: impl FnMut(&[(u64, f64, b
     events.len() as f64 / start.elapsed().as_secs_f64()
 }
 
-fn batched(fleet: &mut AucFleet, soup: &[(u64, f64, bool)]) -> f64 {
+fn batched_by(fleet: &mut AucFleet, soup: &[(u64, f64, bool)], chunk: usize) -> f64 {
     throughput(soup, |evs| {
-        for chunk in evs.chunks(BATCH) {
-            fleet.push_batch(chunk);
+        for batch in evs.chunks(chunk) {
+            fleet.push_batch(batch);
         }
         // A pipelined fleet may still be draining its last batch; fold
         // the wait into the timed region so strategies stay comparable.
-        let _ = fleet.stream_count();
+        fleet.sync();
     })
+}
+
+fn batched(fleet: &mut AucFleet, soup: &[(u64, f64, bool)]) -> f64 {
+    batched_by(fleet, soup, BATCH)
+}
+
+/// Calls/sec of a read op: repeat until the clock has something to
+/// measure (CI numbers are noise anyway; the shape is what matters).
+fn calls_per_sec(mut op: impl FnMut()) -> f64 {
+    let start = Instant::now();
+    let mut iters = 0u32;
+    loop {
+        op();
+        iters += 1;
+        if iters >= 200 || start.elapsed().as_millis() >= 150 {
+            break;
+        }
+    }
+    f64::from(iters) / start.elapsed().as_secs_f64()
 }
 
 fn flag(args: &[String], name: &str, default: usize) -> usize {
@@ -101,11 +137,12 @@ fn json_report(events_per_row: usize, workers: usize, rows: &[Row]) -> String {
     let mut s = String::new();
     s.push_str("{\n");
     let _ = writeln!(s, "  \"bench\": \"fleet\",");
-    let _ = writeln!(s, "  \"unit\": \"events_per_sec\",");
+    let _ = writeln!(s, "  \"unit\": \"events_per_sec (ingest) / calls_per_sec (reads)\",");
     let _ = writeln!(s, "  \"events_per_row\": {events_per_row},");
     let _ = writeln!(s, "  \"window\": {WINDOW},");
     let _ = writeln!(s, "  \"epsilon\": {EPSILON},");
     let _ = writeln!(s, "  \"batch\": {BATCH},");
+    let _ = writeln!(s, "  \"small_batch\": {SMALL_BATCH},");
     let _ = writeln!(s, "  \"shards\": {SHARDS},");
     let _ = writeln!(s, "  \"workers\": {workers},");
     s.push_str("  \"rows\": [\n");
@@ -115,8 +152,13 @@ fn json_report(events_per_row: usize, workers: usize, rows: &[Row]) -> String {
             "    {{\"streams\": {}, \"live_streams\": {}, \"one_at_a_time\": {:.1}, \
              \"batched_serial\": {:.1}, \"batched_scoped\": {:.1}, \"batched_pooled\": {:.1}, \
              \"pipelined\": {:.1}, \"monitor_serial\": {:.1}, \"monitor_pooled\": {:.1}, \
+             \"aggregate_serial\": {:.1}, \"aggregate_pooled\": {:.1}, \
+             \"query_serial\": {:.1}, \"query_pooled\": {:.1}, \
+             \"snapshot_serial\": {:.1}, \"snapshot_pooled\": {:.1}, \
+             \"small_batch_pooled\": {:.1}, \"small_batch_adaptive\": {:.1}, \
              \"speedup_scoped\": {:.3}, \"speedup_pooled\": {:.3}, \"speedup_pipelined\": {:.3}, \
-             \"speedup_monitor\": {:.3}}}",
+             \"speedup_monitor\": {:.3}, \"speedup_aggregate\": {:.3}, \"speedup_query\": {:.3}, \
+             \"speedup_snapshot\": {:.3}, \"speedup_small_batch\": {:.3}}}",
             r.streams,
             r.live,
             r.one_at_a_time,
@@ -126,10 +168,22 @@ fn json_report(events_per_row: usize, workers: usize, rows: &[Row]) -> String {
             r.pipelined,
             r.monitor_serial,
             r.monitor_pooled,
+            r.aggregate_serial,
+            r.aggregate_pooled,
+            r.query_serial,
+            r.query_pooled,
+            r.snapshot_serial,
+            r.snapshot_pooled,
+            r.small_batch_pooled,
+            r.small_batch_adaptive,
             r.batched_scoped / r.batched_serial,
             r.batched_pooled / r.batched_serial,
             r.pipelined / r.batched_serial,
             r.monitor_pooled / r.monitor_serial,
+            r.aggregate_pooled / r.aggregate_serial,
+            r.query_pooled / r.query_serial,
+            r.snapshot_pooled / r.snapshot_serial,
+            r.small_batch_adaptive / r.small_batch_pooled,
         );
         s.push_str(if i + 1 < rows.len() { ",\n" } else { "\n" });
     }
@@ -170,7 +224,7 @@ fn main() {
         let mut gen = MultiStream::new(n_streams, 0xBE7C).with_mean_burst(8.0);
         let soup = gen.next_batch(events_per_row);
 
-        let mut fleet = fresh_fleet(false, 1, false, false);
+        let mut fleet = fresh_fleet(false, 1, false, false, false);
         let one = throughput(&soup, |evs| {
             for &(id, s, l) in evs {
                 fleet.push(id, s, l);
@@ -178,22 +232,75 @@ fn main() {
         });
         let live = fleet.stream_count();
 
-        let mut serial = fresh_fleet(false, 1, false, false);
+        let mut serial = fresh_fleet(false, 1, false, false, false);
         let batched_serial = batched(&mut serial, &soup);
-        let mut scoped = fresh_fleet(false, workers, false, false);
+        let mut scoped = fresh_fleet(false, workers, false, false, false);
         let batched_scoped = batched(&mut scoped, &soup);
-        let mut pooled = fresh_fleet(false, workers, true, false);
+        let mut pooled = fresh_fleet(false, workers, true, false, false);
         let batched_pooled = batched(&mut pooled, &soup);
-        let mut piped = fresh_fleet(false, workers, true, true);
+        let mut piped = fresh_fleet(false, workers, true, true, false);
         let pipelined = batched(&mut piped, &soup);
         assert_eq!(serial.snapshot(), scoped.snapshot(), "scoped ingest diverged");
         assert_eq!(serial.snapshot(), pooled.snapshot(), "pooled ingest diverged");
         assert_eq!(serial.snapshot(), piped.snapshot(), "pipelined ingest diverged");
-        assert_eq!(serial.aggregate(), pooled.aggregate(), "pooled aggregate diverged");
 
-        let mut mon_serial = fresh_fleet(true, 1, false, false);
+        // ---- read paths on the already-ingested fleets: serial
+        // executor vs the persistent pool, same data in both ----------
+        assert_eq!(serial.aggregate(), pooled.aggregate(), "pooled aggregate diverged");
+        assert_eq!(
+            serial.top_k_worst(10),
+            pooled.top_k_worst(10),
+            "pooled top_k_worst diverged"
+        );
+        assert_eq!(
+            serial.auc_histogram(16),
+            pooled.auc_histogram(16),
+            "pooled histogram diverged"
+        );
+        assert_eq!(
+            serial.count_below(0.5),
+            pooled.count_below(0.5),
+            "pooled count_below diverged"
+        );
+        let aggregate_serial = calls_per_sec(|| {
+            let _ = serial.aggregate();
+        });
+        let aggregate_pooled = calls_per_sec(|| {
+            let _ = pooled.aggregate();
+        });
+        let query_serial = calls_per_sec(|| {
+            let _ = serial.top_k_worst(10);
+            let _ = serial.count_below(0.5);
+            let _ = serial.auc_histogram(16);
+        });
+        let query_pooled = calls_per_sec(|| {
+            let _ = pooled.top_k_worst(10);
+            let _ = pooled.count_below(0.5);
+            let _ = pooled.auc_histogram(16);
+        });
+        let snapshot_serial = calls_per_sec(|| {
+            let _ = serial.snapshot();
+        });
+        let snapshot_pooled = calls_per_sec(|| {
+            let _ = pooled.snapshot();
+        });
+
+        // ---- adaptive crossover: trickle batches, fixed vs adaptive -
+        let small_len = (events_per_row / 4).max(2_000).min(soup.len());
+        let small_soup = &soup[..small_len];
+        let mut small_fixed = fresh_fleet(false, workers, true, false, false);
+        let small_batch_pooled = batched_by(&mut small_fixed, small_soup, SMALL_BATCH);
+        let mut small_adaptive = fresh_fleet(false, workers, true, false, true);
+        let small_batch_adaptive = batched_by(&mut small_adaptive, small_soup, SMALL_BATCH);
+        assert_eq!(
+            small_fixed.snapshot(),
+            small_adaptive.snapshot(),
+            "adaptive ingest diverged"
+        );
+
+        let mut mon_serial = fresh_fleet(true, 1, false, false, false);
         let monitor_serial = batched(&mut mon_serial, &soup);
-        let mut mon_pooled = fresh_fleet(true, workers, true, false);
+        let mut mon_pooled = fresh_fleet(true, workers, true, false, false);
         let monitor_pooled = batched(&mut mon_pooled, &soup);
         assert_eq!(mon_serial.alarms(), mon_pooled.alarms(), "pooled alarms diverged");
         assert_eq!(mon_serial.snapshot(), mon_pooled.snapshot(), "pooled monitor ingest diverged");
@@ -214,6 +321,14 @@ fn main() {
             pipelined,
             monitor_serial,
             monitor_pooled,
+            aggregate_serial,
+            aggregate_pooled,
+            query_serial,
+            query_pooled,
+            snapshot_serial,
+            snapshot_pooled,
+            small_batch_pooled,
+            small_batch_adaptive,
             live,
         });
     }
@@ -221,10 +336,39 @@ fn main() {
         "\n(gain = pooled / serial at {workers} workers; live = distinct streams touched)"
     );
 
+    println!("\n== read paths (calls/s, serial vs pooled) and adaptive small batches ==\n");
+    println!(
+        "{:>8}  {:>20}  {:>20}  {:>20}  {:>24}",
+        "streams",
+        "aggregate s/∥ (gain)",
+        "query s/∥ (gain)",
+        "snapshot s/∥ (gain)",
+        "64-ev batch fix/adpt (gain)"
+    );
+    for r in &rows {
+        println!(
+            "{:>8}  {:>6.0}/{:<6.0} {:>5.2}x  {:>6.0}/{:<6.0} {:>5.2}x  {:>6.0}/{:<6.0} {:>5.2}x  \
+             {:>8.0}/{:<8.0} {:>5.2}x",
+            r.streams,
+            r.aggregate_serial,
+            r.aggregate_pooled,
+            r.aggregate_pooled / r.aggregate_serial,
+            r.query_serial,
+            r.query_pooled,
+            r.query_pooled / r.query_serial,
+            r.snapshot_serial,
+            r.snapshot_pooled,
+            r.snapshot_pooled / r.snapshot_serial,
+            r.small_batch_pooled,
+            r.small_batch_adaptive,
+            r.small_batch_adaptive / r.small_batch_pooled,
+        );
+    }
+
     let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_fleet.json");
     let report = json_report(events_per_row, workers, &rows);
     match std::fs::write(&path, &report) {
-        Ok(()) => println!("wrote {}", path.display()),
+        Ok(()) => println!("\nwrote {}", path.display()),
         Err(e) => eprintln!("could not write {}: {e}", path.display()),
     }
 }

@@ -101,6 +101,15 @@ pub struct FleetConfig {
     /// bit-identical — every read synchronizes on the in-flight batch
     /// first. Effective only with `pool` and `workers ≥ 2`.
     pub pipeline: bool,
+    /// Scale the active worker count to the observed batch size: a
+    /// batch engages roughly one worker per
+    /// [`ADAPTIVE_EVENTS_PER_WORKER`](super::ADAPTIVE_EVENTS_PER_WORKER)
+    /// events (capped at `workers`), and a batch small enough for one
+    /// worker skips the pool dispatch entirely and drains inline — so
+    /// trickle traffic stops paying the full parallel submission cost.
+    /// Worker count never changes results, so this only moves
+    /// wall-clock. Off by default (fixed worker count).
+    pub adaptive: bool,
     /// Configuration applied to streams without an explicit override.
     pub stream_defaults: StreamConfig,
 }
@@ -112,6 +121,7 @@ impl Default for FleetConfig {
             workers: 1,
             pool: true,
             pipeline: false,
+            adaptive: false,
             stream_defaults: StreamConfig::default(),
         }
     }
@@ -138,6 +148,7 @@ mod tests {
         assert_eq!(c.workers, 1);
         assert!(c.pool, "pooled execution is the default strategy");
         assert!(!c.pipeline, "pipelining is opt-in");
+        assert!(!c.adaptive, "adaptive worker scaling is opt-in");
     }
 
     #[test]

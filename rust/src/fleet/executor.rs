@@ -1,21 +1,27 @@
 //! Fleet execution strategies: serial, scoped threads, or the
-//! persistent work-stealing pool.
+//! persistent work-stealing pool — one dispatcher for every fleet job.
 //!
 //! The paper makes one window cheap (`O((log k)/ε)` per update); this
 //! module makes *many* windows scale across cores. A [`FleetExecutor`]
-//! runs per-shard work one of three ways:
+//! runs typed fleet jobs (`fleet/pool.rs` `ShardWork`) one of three
+//! ways:
 //!
 //! * **serial** (`workers ≤ 1`, the default) — inline on the caller,
 //!   zero thread overhead;
 //! * **scoped** (`workers ≥ 2`, pooling off) — a `std::thread::scope`
 //!   per call, retained as the spawn-per-batch baseline the benches
-//!   compare against, and as the engine behind the borrowed-closure
-//!   helpers [`FleetExecutor::for_each_index`] /
-//!   [`FleetExecutor::map_indexed`];
-//! * **pooled** (`workers ≥ 2`, pooling on) — batch drains go to the
+//!   compare against;
+//! * **pooled** (`workers ≥ 2`, pooling on) — jobs go to the
 //!   persistent `WorkerPool` (threads spawned once, parked between
-//!   batches), which also unlocks cross-batch pipelining (see
-//!   `AucFleet::push_batch`).
+//!   jobs). Drains submitted through [`FleetExecutor::run_job`] return
+//!   immediately (enabling pipelining); reads go through
+//!   [`FleetExecutor::map_shards`], which waits the job out and hands
+//!   back per-shard outputs in shard-index order.
+//!
+//! Since PR 4 every fleet operation — ingestion drains *and* the read
+//! paths (aggregate, snapshot prefetch, queries, eviction) — routes
+//! through this one dispatcher, so `FleetConfig::pool` governs them
+//! uniformly and reads stop paying a thread spawn per call.
 //!
 //! Every parallel path uses **work stealing**, not chunking: workers
 //! claim the next item from a shared atomic cursor until the queue is
@@ -28,16 +34,17 @@
 //!
 //! Determinism: scheduling decides only *who* computes, never *what* —
 //! per-item work touches disjoint state, and result collection
-//! ([`map_indexed`]) is reassembled in index order. Parallel ingestion
-//! stays bit-identical to serial under every strategy
-//! (adversarially tested in `rust/tests/executor.rs`).
+//! ([`map_shards`], [`map_indexed`]) is reassembled in index order.
+//! Every strategy stays bit-identical to serial (adversarially tested
+//! in `rust/tests/executor.rs`).
 //!
+//! [`map_shards`]: FleetExecutor::map_shards
 //! [`map_indexed`]: FleetExecutor::map_indexed
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, PoisonError};
 
-use super::pool::{lock, DrainJob, WorkerPool};
+use super::pool::{lock, FleetCore, FleetJob, ShardWork, WorkerPool};
 
 /// Runs fleet work serially, on scoped threads, or on the persistent
 /// worker pool. See the module docs for the strategy split.
@@ -52,7 +59,7 @@ impl FleetExecutor {
     /// Executor with `workers` threads; `0` and `1` both mean the
     /// serial inline path. With `use_pool` (and ≥ 2 workers) the
     /// persistent pool is spawned immediately and reused for every
-    /// batch until the executor is dropped or reconfigured.
+    /// job until the executor is dropped or reconfigured.
     pub fn new(workers: usize, use_pool: bool) -> FleetExecutor {
         let workers = workers.max(1);
         let pool = (use_pool && workers > 1).then(|| WorkerPool::spawn(workers));
@@ -84,12 +91,12 @@ impl FleetExecutor {
         self.workers.min(items).max(1)
     }
 
-    /// Launch a drain job on `workers` threads (as computed by
+    /// Launch a fleet job on `workers` threads (as computed by
     /// [`FleetExecutor::planned_workers`] — the job's latch is armed
     /// for exactly that many arrivals). Serial runs inline; the pool
     /// returns immediately after submission (enabling pipelining);
     /// scoped joins before returning.
-    pub(super) fn run_job(&self, job: &Arc<DrainJob>, workers: usize) {
+    pub(super) fn run_job<W: ShardWork>(&self, job: &Arc<FleetJob<W>>, workers: usize) {
         if workers <= 1 {
             job.run_worker();
         } else if let Some(pool) = &self.pool {
@@ -104,19 +111,45 @@ impl FleetExecutor {
         } else {
             std::thread::scope(|scope| {
                 for _ in 0..workers {
-                    let j: &DrainJob = job;
+                    let j: &FleetJob<W> = job;
                     scope.spawn(move || j.run_worker());
                 }
             });
         }
     }
 
+    /// Run `work` over every shard of `core` on the configured
+    /// strategy and return the per-shard outputs in **shard-index
+    /// order** — the uniform engine behind `aggregate`, snapshot
+    /// prefetching, the `fleet/query.rs` queries and both eviction
+    /// flavours. Serial visits inline (no job allocation); scoped and
+    /// pooled build a [`FleetJob`], wait out its latch, and re-raise a
+    /// visit panic on the caller (unless the caller is already
+    /// unwinding — reads stay panic-free mid-drop).
+    pub(super) fn map_shards<W: ShardWork>(&self, core: &Arc<FleetCore>, work: W) -> Vec<W::Output> {
+        let n = core.shard_count();
+        let workers = self.planned_workers(n);
+        if workers <= 1 {
+            let out = (0..n).map(|s| work.visit(s, core)).collect();
+            work.finish(core);
+            return out;
+        }
+        let job = Arc::new(FleetJob::new(Arc::clone(core), work, (0..n).collect(), workers));
+        self.run_job(&job, workers);
+        job.wait();
+        if !std::thread::panicking() && job.poisoned.swap(false, Ordering::Relaxed) {
+            panic!("a fleet worker panicked while executing a shard job");
+        }
+        job.take_outputs().into_iter().map(|(_, out)| out).collect()
+    }
+
     /// Run `f(i)` once for every `i in 0..n`, work-stealing indices off
     /// a shared cursor. Serial inline for `workers ≤ 1`; otherwise
-    /// `min(workers, n)` scoped threads (borrowed closures cannot move
-    /// onto the persistent pool without `'static` ownership, and the
-    /// call sites — aggregates, eviction, tests — are far off the
-    /// per-batch hot path).
+    /// `min(workers, n)` scoped threads. Borrowed-closure utility for
+    /// callers outside the fleet core (tests, ad-hoc tools): closures
+    /// cannot move onto the persistent pool without `'static`
+    /// ownership — fleet-internal work rides the typed-job engine
+    /// (`map_shards`) instead.
     pub fn for_each_index<F>(&self, n: usize, f: F)
     where
         F: Fn(usize) + Sync,
@@ -143,7 +176,8 @@ impl FleetExecutor {
     }
 
     /// Map `f(i)` over `0..n` with work stealing, returning results in
-    /// index order regardless of which worker computed them.
+    /// index order regardless of which worker computed them. Same
+    /// borrowed-closure scope as [`FleetExecutor::for_each_index`].
     pub fn map_indexed<T, F>(&self, n: usize, f: F) -> Vec<T>
     where
         T: Send,
@@ -216,6 +250,30 @@ mod tests {
             assert!(seen.lock().unwrap().insert(i), "index {i} visited twice");
         });
         assert_eq!(seen.lock().unwrap().len(), 1000);
+    }
+
+    /// Typed shard work used to exercise `map_shards` across all three
+    /// strategies without a full fleet.
+    struct ShardIndexWork;
+    impl ShardWork for ShardIndexWork {
+        type Output = usize;
+        fn visit(&self, s: usize, _core: &FleetCore) -> usize {
+            s + 100
+        }
+    }
+
+    #[test]
+    fn map_shards_is_identical_across_strategies() {
+        let core = Arc::new(FleetCore::new(16));
+        let expect: Vec<usize> = (0..16).map(|s| s + 100).collect();
+        for (workers, pool) in [(1, false), (1, true), (3, false), (3, true), (16, true)] {
+            let ex = FleetExecutor::new(workers, pool);
+            assert_eq!(
+                ex.map_shards(&core, ShardIndexWork),
+                expect,
+                "map_shards diverged at workers {workers}, pool {pool}"
+            );
+        }
     }
 
     #[test]

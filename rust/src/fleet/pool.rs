@@ -1,36 +1,49 @@
-//! Persistent worker pool and the shared drain-job state it executes.
+//! Persistent worker pool and the typed fleet-job engine it executes.
 //!
-//! PR-2's executor paid a `std::thread::scope` spawn+join on **every
-//! batch** and split shards into fixed contiguous chunks, so a skewed
-//! batch (one hot shard) serialized the whole drain while the other
-//! workers idled. This module replaces both mechanisms:
+//! PR-3 introduced the persistent [`WorkerPool`] but hardwired it to
+//! one job shape — the batch drain — so every *read* path (aggregates,
+//! snapshots, queries, eviction) fell back to scoped threads spawned
+//! per call, exactly the per-batch spawn cost the pool eliminated for
+//! writes. This module generalizes the engine:
 //!
-//! * [`WorkerPool`] — threads spawned **once** per fleet (lazily, when
-//!   the executor is built with pooling and ≥ 2 workers) and parked on
-//!   their job channels between batches. Submitting a batch costs one
-//!   boxed closure per worker instead of a thread spawn.
-//! * [`DrainJob`] — everything one batch drain needs, shared behind an
-//!   `Arc`: the per-shard event buckets, the size-aware claim queue, the
-//!   precomputed fleet ticks, and a completion latch. Workers *steal*
-//!   shards from the queue through an atomic cursor — largest pending
-//!   bucket first — so a hot shard occupies one worker while the rest
-//!   drain the tail, and no worker idles while work remains.
+//! * [`ShardWork`] — the typed unit of fleet work: what to do to one
+//!   shard ([`ShardWork::visit`]) plus an optional completion hook run
+//!   once by the job's last worker ([`ShardWork::finish`]). Work is
+//!   `Send + Sync + 'static` and owns everything it needs (the
+//!   **owned-state rule**), so the same value can ride pool threads,
+//!   scoped threads or run inline.
+//! * [`FleetJob`] — one work value plus the claim machinery shared by
+//!   every worker executing it: the shard claim queue, the stealing
+//!   cursor, per-shard **output slots**, a participant/poison record
+//!   and a completion latch. Workers claim shards off the queue until
+//!   it is empty; outputs land in slots indexed by claim position and
+//!   are reassembled in shard-index order by [`FleetJob::take_outputs`]
+//!   — which is why out-of-order claiming never changes results.
+//! * [`DrainWork`] — batched ingestion, now just one `ShardWork`
+//!   implementation among several: per-shard event buckets, precomputed
+//!   fleet ticks, and a finish hook that merges shard-local alarm logs
+//!   in shard-index order (the serial order).
+//! * [`WorkerPool`] — unchanged substrate: threads spawned **once** per
+//!   fleet (lazily, when the executor is built with pooling and ≥ 2
+//!   workers) and parked on their job channels between batches.
+//!   Submitting any job costs one boxed closure per worker instead of a
+//!   thread spawn.
 //!
 //! Determinism: claiming order affects only wall-clock. Each shard's
-//! observable state depends solely on its own bucket and its
-//! precomputed `start_tick`, and the batch's alarms are merged into the
-//! fleet-wide pending log in shard-index order by whichever worker
-//! finishes last — the exact order the serial drain produces. See
-//! `rust/DESIGN.md` §Parallelism.
+//! visit depends solely on that shard's state and the work value's own
+//! fields (precomputed ticks, batch timestamp, thresholds …), outputs
+//! are merged in shard-index order, and any cross-shard completion work
+//! runs in the finish hook — also in shard-index order. See
+//! `rust/DESIGN.md` §Jobs.
 //!
-//! Panic safety: a panic inside one shard's drain (e.g. a non-finite
-//! score hitting the window's comparator boundary) is caught per shard,
+//! Panic safety: a panic inside one shard's visit is caught per shard,
 //! recorded on the job, and re-raised as a clean panic at the fleet's
 //! next synchronization point. The pool threads never unwind, so the
-//! same `AucFleet` keeps ingesting afterwards — no poisoned, parked or
+//! same `AucFleet` keeps working afterwards — no poisoned, parked or
 //! deadlocked workers (property-tested in `rust/tests/executor.rs`).
 
 use std::collections::HashMap;
+use std::fmt;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex, MutexGuard, PoisonError};
@@ -38,7 +51,6 @@ use std::thread;
 
 use super::config::StreamConfig;
 use super::shard::Shard;
-use super::snapshot::FleetAlarm;
 
 /// One ingestion event: `(stream id, score, label)`.
 pub(super) type Event = (u64, f64, bool);
@@ -47,15 +59,15 @@ pub(super) type Event = (u64, f64, bool);
 pub(super) type Task = Box<dyn FnOnce() + Send + 'static>;
 
 /// Lock a mutex, ignoring poisoning: fleet invariants are maintained at
-/// a coarser level (a drain panic marks the whole job poisoned and the
-/// fleet re-raises it at the next sync), so an unwound worker must not
-/// brick every later lock of the same shard.
+/// a coarser level (a shard-visit panic marks the whole job poisoned
+/// and the fleet re-raises it at the next sync), so an unwound worker
+/// must not brick every later lock of the same shard.
 pub(super) fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
     m.lock().unwrap_or_else(PoisonError::into_inner)
 }
 
 /// The shard state shared between the fleet handle and the pool
-/// workers. Everything a drain job mutates lives here, behind one
+/// workers. Everything a fleet job touches lives here, behind one
 /// mutex per shard (always uncontended: the claim cursor hands each
 /// shard to exactly one worker, and the fleet only locks after the
 /// job's completion latch).
@@ -64,9 +76,9 @@ pub(super) struct FleetCore {
     /// One mutex per shard; the shard is the unit of parallelism.
     pub(super) shards: Vec<Mutex<Shard>>,
     /// Alarms of the in-flight (or just-finished) batch, merged here in
-    /// shard-index order by the job's last worker; the fleet moves them
-    /// into its public log at the next sync.
-    pub(super) pending_alarms: Mutex<Vec<FleetAlarm>>,
+    /// shard-index order by the drain job's finish hook; the fleet
+    /// moves them into its public log at the next sync.
+    pub(super) pending_alarms: Mutex<Vec<super::snapshot::FleetAlarm>>,
     /// Drained bucket allocations handed back for reuse by later
     /// batches (capacity recycling across the pipeline).
     pub(super) spare_buckets: Mutex<Vec<Vec<Event>>>,
@@ -92,66 +104,89 @@ impl FleetCore {
     }
 }
 
-/// One batch drain, shared by every worker participating in it.
+/// The typed unit of fleet work: what one job does to each shard it
+/// claims. Implementations own all their inputs (buckets, thresholds,
+/// predicates — the **owned-state rule**), so a job can outlive the
+/// call that launched it and ride the persistent pool's threads.
 ///
-/// The fleet constructs the job with the batch's buckets, the
-/// size-aware claim queue and the precomputed per-shard start ticks,
-/// then hands an `Arc` of it to the executor. Workers call
-/// [`DrainJob::run_worker`]; the fleet calls [`DrainJob::wait`] at its
-/// next synchronization point (immediately unless pipelining).
-#[derive(Debug)]
-pub(super) struct DrainJob {
+/// Determinism contract: `visit(s, …)` must depend only on shard `s`'s
+/// state and `self`'s owned fields — never on claim order, thread
+/// identity, or shared mutable scratch. `finish` runs exactly once, by
+/// the job's last worker, *before* the completion latch opens; any
+/// cross-shard merge it performs must iterate shards in index order.
+pub(super) trait ShardWork: Send + Sync + 'static {
+    /// Per-shard result, reassembled in shard-index order by
+    /// [`FleetJob::take_outputs`].
+    type Output: Send + 'static;
+
+    /// Visit one claimed shard. Lock it through `core` (uncontended —
+    /// the claim cursor hands each shard to exactly one worker).
+    fn visit(&self, s: usize, core: &FleetCore) -> Self::Output;
+
+    /// Completion hook: run once by the last worker before the latch
+    /// opens, so waiters always observe its effects.
+    fn finish(&self, _core: &FleetCore) {}
+}
+
+/// One fleet job: a [`ShardWork`] value plus the claim machinery shared
+/// by every worker executing it.
+///
+/// The fleet (or executor) constructs the job with the shard claim
+/// queue, hands an `Arc` of it to the execution strategy, and calls
+/// [`FleetJob::wait`] at its next synchronization point (immediately
+/// for reads and unpipelined drains). Workers call
+/// [`FleetJob::run_worker`].
+pub(super) struct FleetJob<W: ShardWork> {
     core: Arc<FleetCore>,
-    /// Per-shard event buckets (full shard indexing; untouched shards
-    /// hold empty vectors). Mutexed so any worker can take one.
-    buckets: Vec<Mutex<Vec<Event>>>,
-    /// Claim queue: indices of non-empty shards, largest bucket first
-    /// (ties broken by shard index — the queue is deterministic even
-    /// though claiming is not, and neither affects results).
+    work: W,
+    /// Claim queue: shard indices, in whatever priority order the
+    /// caller chose (drains: largest bucket first; reads: shard order).
+    /// The queue is deterministic even though claiming is not, and
+    /// neither affects results.
     order: Vec<usize>,
-    /// Fleet tick immediately before each shard's first event — the
-    /// exact ticks the serial shard-by-shard drain would assign.
-    start_ticks: Vec<u64>,
-    defaults: StreamConfig,
-    /// Shared with the fleet (copy-on-write there), so a job costs one
-    /// `Arc` bump instead of a map clone per batch.
-    overrides: Arc<HashMap<u64, StreamConfig>>,
     /// Next claim-queue position to steal.
     cursor: AtomicUsize,
     /// Workers that have not yet finished their claim loop.
     remaining: AtomicUsize,
-    /// Workers that drained at least one shard (scheduling diagnostics).
+    /// Workers that visited at least one shard (scheduling diagnostics).
     pub(super) participants: AtomicUsize,
-    /// Set when any shard's drain panicked; the fleet re-raises once at
+    /// Set when any shard visit panicked; the fleet re-raises once at
     /// the next sync.
     pub(super) poisoned: AtomicBool,
-    /// Completion latch: flipped by the last worker *after* the
-    /// shard-order alarm merge, so waiters always observe merged state.
+    /// Output slot per claim-queue position (`outputs[i]` belongs to
+    /// shard `order[i]`); filled by whichever worker claimed it.
+    outputs: Vec<Mutex<Option<W::Output>>>,
+    /// Completion latch: flipped by the last worker *after* the finish
+    /// hook, so waiters always observe merged state.
     done: Mutex<bool>,
     cv: Condvar,
 }
 
-impl DrainJob {
-    pub(super) fn new(
-        core: Arc<FleetCore>,
-        buckets: Vec<Mutex<Vec<Event>>>,
-        order: Vec<usize>,
-        start_ticks: Vec<u64>,
-        defaults: StreamConfig,
-        overrides: Arc<HashMap<u64, StreamConfig>>,
-        workers: usize,
-    ) -> DrainJob {
-        DrainJob {
+impl<W: ShardWork> fmt::Debug for FleetJob<W> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("FleetJob")
+            .field("shards", &self.order.len())
+            .field("claimed", &self.cursor.load(Ordering::Relaxed))
+            .field("poisoned", &self.poisoned.load(Ordering::Relaxed))
+            .finish_non_exhaustive()
+    }
+}
+
+impl<W: ShardWork> FleetJob<W> {
+    /// Job over the shards in `order`, to be executed by exactly
+    /// `workers` [`FleetJob::run_worker`] calls (the latch is armed for
+    /// that many arrivals).
+    pub(super) fn new(core: Arc<FleetCore>, work: W, order: Vec<usize>, workers: usize) -> Self {
+        let outputs = order.iter().map(|_| Mutex::new(None)).collect();
+        FleetJob {
             core,
-            buckets,
+            work,
             order,
-            start_ticks,
-            defaults,
-            overrides,
             cursor: AtomicUsize::new(0),
             remaining: AtomicUsize::new(workers.max(1)),
             participants: AtomicUsize::new(0),
             poisoned: AtomicBool::new(false),
+            outputs,
             done: Mutex::new(false),
             cv: Condvar::new(),
         }
@@ -166,11 +201,12 @@ impl DrainJob {
             let i = self.cursor.fetch_add(1, Ordering::Relaxed);
             let Some(&s) = self.order.get(i) else { break };
             claimed = true;
-            // Catch per shard: one poisoned stream must not stop this
-            // worker from draining the shards it would steal next, and
+            // Catch per shard: one poisoned shard must not stop this
+            // worker from visiting the shards it would steal next, and
             // must never unwind into the pool's run loop.
-            if catch_unwind(AssertUnwindSafe(|| self.drain_shard(s))).is_err() {
-                self.poisoned.store(true, Ordering::Relaxed);
+            match catch_unwind(AssertUnwindSafe(|| self.work.visit(s, &self.core))) {
+                Ok(out) => *lock(&self.outputs[i]) = Some(out),
+                Err(_) => self.poisoned.store(true, Ordering::Relaxed),
             }
         }
         if claimed {
@@ -179,33 +215,20 @@ impl DrainJob {
         self.finish();
     }
 
-    /// Drain one claimed shard, then recycle its bucket allocation.
-    fn drain_shard(&self, s: usize) {
-        let mut bucket = std::mem::take(&mut *lock(&self.buckets[s]));
-        {
-            let mut shard = self.core.lock_shard(s);
-            shard.drain_events(&bucket, &self.defaults, &self.overrides, self.start_ticks[s]);
-        }
-        bucket.clear();
-        lock(&self.core.spare_buckets).push(bucket);
-    }
-
-    /// Arrive at the latch; the last worker merges the batch's alarms in
-    /// shard-index order (the serial order) before releasing waiters.
+    /// Arrive at the latch; the last worker runs the work's completion
+    /// hook (e.g. the drain's shard-order alarm merge) before releasing
+    /// waiters.
     fn finish(&self) {
         if self.remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
-            {
-                let mut out = lock(&self.core.pending_alarms);
-                for shard in &self.core.shards {
-                    lock(shard).take_alarms_into(&mut out);
-                }
+            if catch_unwind(AssertUnwindSafe(|| self.work.finish(&self.core))).is_err() {
+                self.poisoned.store(true, Ordering::Relaxed);
             }
             *lock(&self.done) = true;
             self.cv.notify_all();
         }
     }
 
-    /// Block until every worker has finished and the alarm merge is
+    /// Block until every worker has finished and the finish hook is
     /// visible. Cheap (one uncontended lock) once the job is done.
     pub(super) fn wait(&self) {
         let mut done = lock(&self.done);
@@ -213,7 +236,81 @@ impl DrainJob {
             done = self.cv.wait(done).unwrap_or_else(PoisonError::into_inner);
         }
     }
+
+    /// Collect the per-shard outputs in **shard-index order**,
+    /// regardless of claim-queue priority or which worker computed
+    /// them. Call after [`FleetJob::wait`]. Slots a panicked visit
+    /// never filled are skipped (the fleet re-raises the panic at its
+    /// sync point instead).
+    pub(super) fn take_outputs(&self) -> Vec<(usize, W::Output)> {
+        let mut out = Vec::with_capacity(self.order.len());
+        for (i, &s) in self.order.iter().enumerate() {
+            if let Some(v) = lock(&self.outputs[i]).take() {
+                out.push((s, v));
+            }
+        }
+        out.sort_unstable_by_key(|&(s, _)| s);
+        out
+    }
 }
+
+/// Batched ingestion as a [`ShardWork`]: drain each claimed shard's
+/// event bucket with its precomputed start tick and the batch
+/// timestamp, then merge the batch's alarms in shard-index order (the
+/// serial order) in the finish hook.
+pub(super) struct DrainWork {
+    /// Per-shard event buckets (full shard indexing; untouched shards
+    /// hold empty vectors). Mutexed so any worker can take one.
+    buckets: Vec<Mutex<Vec<Event>>>,
+    /// Fleet tick immediately before each shard's first event — the
+    /// exact ticks the serial shard-by-shard drain would assign.
+    start_ticks: Vec<u64>,
+    /// Caller timestamp of the whole batch (see `AucFleet::push_batch_at`).
+    at: u64,
+    defaults: StreamConfig,
+    /// Shared with the fleet (copy-on-write there), so a job costs one
+    /// `Arc` bump instead of a map clone per batch.
+    overrides: Arc<HashMap<u64, StreamConfig>>,
+}
+
+impl DrainWork {
+    pub(super) fn new(
+        buckets: Vec<Mutex<Vec<Event>>>,
+        start_ticks: Vec<u64>,
+        at: u64,
+        defaults: StreamConfig,
+        overrides: Arc<HashMap<u64, StreamConfig>>,
+    ) -> DrainWork {
+        DrainWork { buckets, start_ticks, at, defaults, overrides }
+    }
+}
+
+impl ShardWork for DrainWork {
+    type Output = ();
+
+    /// Drain one claimed shard, then recycle its bucket allocation.
+    fn visit(&self, s: usize, core: &FleetCore) {
+        let mut bucket = std::mem::take(&mut *lock(&self.buckets[s]));
+        {
+            let mut shard = core.lock_shard(s);
+            shard.drain_events(&bucket, &self.defaults, &self.overrides, self.start_ticks[s], self.at);
+        }
+        bucket.clear();
+        lock(&core.spare_buckets).push(bucket);
+    }
+
+    /// Merge the batch's alarms into the fleet's pending log in
+    /// shard-index order — exactly the order the serial drain produces.
+    fn finish(&self, core: &FleetCore) {
+        let mut out = lock(&core.pending_alarms);
+        for shard in &core.shards {
+            lock(shard).take_alarms_into(&mut out);
+        }
+    }
+}
+
+/// The drain job the fleet keeps in flight while pipelining.
+pub(super) type DrainJob = FleetJob<DrainWork>;
 
 /// Persistent ingestion threads, spawned once per fleet and parked on
 /// their job channels between batches.
@@ -233,9 +330,9 @@ impl WorkerPool {
             let handle = thread::Builder::new()
                 .name(format!("fleet-worker-{w}"))
                 .spawn(move || {
-                    // Parked in `recv` between batches; exits when the
+                    // Parked in `recv` between jobs; exits when the
                     // pool drops its sender. Tasks are already
-                    // panic-proofed by `DrainJob::run_worker`; the
+                    // panic-proofed by `FleetJob::run_worker`; the
                     // catch here is defense in depth so no panic can
                     // ever take a pool thread down.
                     while let Ok(task) = rx.recv() {
@@ -274,7 +371,7 @@ impl Drop for WorkerPool {
     }
 }
 
-// The job is shared across worker threads behind an `Arc`, and the pool
+// Jobs are shared across worker threads behind an `Arc`, and the pool
 // (inside the executor, inside the fleet) must move with the fleet.
 const _: () = {
     const fn assert_send_sync<T: Send + Sync>() {}
@@ -311,17 +408,20 @@ mod tests {
     }
 
     #[test]
-    fn latch_waits_for_all_workers_and_merge() {
+    fn latch_waits_for_all_workers_and_finish_hook() {
         let core = Arc::new(FleetCore::new(4));
-        let buckets: Vec<Mutex<Vec<Event>>> =
-            (0..4).map(|_| Mutex::new(Vec::new())).collect();
-        let job = Arc::new(DrainJob::new(
-            Arc::clone(&core),
+        let buckets: Vec<Mutex<Vec<Event>>> = (0..4).map(|_| Mutex::new(Vec::new())).collect();
+        let work = DrainWork::new(
             buckets,
-            Vec::new(), // nothing to claim: workers arrive immediately
             vec![0; 4],
+            0,
             StreamConfig::default(),
             Arc::new(HashMap::new()),
+        );
+        let job = Arc::new(FleetJob::new(
+            Arc::clone(&core),
+            work,
+            Vec::new(), // nothing to claim: workers arrive immediately
             3,
         ));
         let pool = WorkerPool::spawn(3);
@@ -332,5 +432,60 @@ mod tests {
         job.wait();
         assert!(!job.poisoned.load(Ordering::Relaxed));
         assert_eq!(job.participants.load(Ordering::Relaxed), 0);
+    }
+
+    /// A read-shaped work: outputs must come back in shard-index order
+    /// no matter the claim-queue priority or which worker computed
+    /// each slot.
+    struct IndexWork;
+    impl ShardWork for IndexWork {
+        type Output = usize;
+        fn visit(&self, s: usize, _core: &FleetCore) -> usize {
+            s * 10
+        }
+    }
+
+    #[test]
+    fn outputs_reassemble_in_shard_order_despite_reversed_claim_queue() {
+        let core = Arc::new(FleetCore::new(8));
+        // Claim queue deliberately reversed — like a size-sorted drain.
+        let order: Vec<usize> = (0..8).rev().collect();
+        let job = Arc::new(FleetJob::new(Arc::clone(&core), IndexWork, order, 3));
+        let pool = WorkerPool::spawn(3);
+        for w in 0..3 {
+            let j = Arc::clone(&job);
+            pool.submit(w, Box::new(move || j.run_worker()));
+        }
+        job.wait();
+        let outputs = job.take_outputs();
+        let expect: Vec<(usize, usize)> = (0..8).map(|s| (s, s * 10)).collect();
+        assert_eq!(outputs, expect);
+        assert!(job.participants.load(Ordering::Relaxed) >= 1);
+    }
+
+    /// A panicking visit poisons the job but leaves the other slots
+    /// filled and the latch resolving.
+    struct PanicOn(usize);
+    impl ShardWork for PanicOn {
+        type Output = usize;
+        fn visit(&self, s: usize, _core: &FleetCore) -> usize {
+            assert_ne!(s, self.0, "injected shard panic");
+            s
+        }
+    }
+
+    #[test]
+    fn poisoned_visit_skips_its_slot_and_releases_the_latch() {
+        let core = Arc::new(FleetCore::new(4));
+        let job = Arc::new(FleetJob::new(Arc::clone(&core), PanicOn(2), (0..4).collect(), 2));
+        let pool = WorkerPool::spawn(2);
+        for w in 0..2 {
+            let j = Arc::clone(&job);
+            pool.submit(w, Box::new(move || j.run_worker()));
+        }
+        job.wait();
+        assert!(job.poisoned.load(Ordering::Relaxed));
+        let shards: Vec<usize> = job.take_outputs().into_iter().map(|(s, _)| s).collect();
+        assert_eq!(shards, vec![0, 1, 3], "panicked slot must be skipped, not fabricated");
     }
 }

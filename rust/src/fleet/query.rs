@@ -1,0 +1,280 @@
+//! Shard-parallel fleet query layer: the monitoring questions a fleet
+//! operator actually asks, answered on the typed job engine.
+//!
+//! The paper makes *maintaining* a windowed AUC cheap, which shifts
+//! fleet cost onto *reading* the maintained estimates: triage ("which
+//! streams are worst right now?"), SLO accounting ("how many streams
+//! sit below 0.8?"), and distribution shape ("is the fleet bimodal?").
+//! Each query here runs as a [`ShardWork`] job on the fleet's
+//! executor — inline, scoped, or on the persistent worker pool
+//! ([`FleetConfig::pool`](super::FleetConfig::pool)), exactly like
+//! ingestion drains — and merges per-shard partials in shard-index
+//! order, so results are **bit-identical under every execution
+//! strategy** (adversarially tested in `rust/tests/executor.rs`).
+//!
+//! All queries synchronize transparently with an in-flight pipelined
+//! batch before reading, like every other read path.
+
+use super::pool::{FleetCore, ShardWork};
+use super::shard::worst_first;
+use super::snapshot::StreamSnapshot;
+use super::AucFleet;
+
+/// Distribution of the per-stream windowed AUC estimates over `[0, 1]`
+/// in equal-width bins ([`AucFleet::auc_histogram`]). Streams with an
+/// empty window carry no estimate and are not counted.
+#[derive(Clone, Debug, PartialEq)]
+pub struct AucHistogram {
+    /// Per-bin stream counts; bin `i` covers
+    /// `[i · w, (i+1) · w)` with `w = 1 / counts.len()` (the last bin
+    /// is closed at 1.0).
+    pub counts: Vec<usize>,
+    /// Streams counted (= sum of `counts`).
+    pub live_streams: usize,
+}
+
+impl AucHistogram {
+    /// Number of bins.
+    pub fn bins(&self) -> usize {
+        self.counts.len()
+    }
+
+    /// Width of one bin.
+    pub fn bin_width(&self) -> f64 {
+        1.0 / self.counts.len() as f64
+    }
+
+    /// Inclusive-exclusive AUC range of bin `i` (the last bin closes
+    /// at 1.0).
+    pub fn bin_range(&self, i: usize) -> (f64, f64) {
+        let w = self.bin_width();
+        (i as f64 * w, (i as f64 + 1.0) * w)
+    }
+
+    /// Fraction of counted streams in bin `i` (0 when the fleet has no
+    /// live streams).
+    pub fn fraction(&self, i: usize) -> f64 {
+        if self.live_streams == 0 {
+            0.0
+        } else {
+            self.counts[i] as f64 / self.live_streams as f64
+        }
+    }
+}
+
+/// Per-shard top-k candidates for [`AucFleet::top_k_worst`]. Any
+/// global top-k member is necessarily in its own shard's top-k, so
+/// per-shard truncation loses nothing.
+struct TopKWork {
+    k: usize,
+}
+
+impl ShardWork for TopKWork {
+    type Output = Vec<StreamSnapshot>;
+    fn visit(&self, s: usize, core: &FleetCore) -> Self::Output {
+        core.lock_shard(s).top_k_worst(self.k)
+    }
+}
+
+/// Per-shard threshold counts for [`AucFleet::count_below`].
+struct CountBelowWork {
+    threshold: f64,
+}
+
+impl ShardWork for CountBelowWork {
+    type Output = usize;
+    fn visit(&self, s: usize, core: &FleetCore) -> usize {
+        core.lock_shard(s).count_below(self.threshold)
+    }
+}
+
+/// Per-shard histogram partials for [`AucFleet::auc_histogram`].
+struct HistogramWork {
+    bins: usize,
+}
+
+impl ShardWork for HistogramWork {
+    type Output = (Vec<usize>, usize);
+    fn visit(&self, s: usize, core: &FleetCore) -> Self::Output {
+        core.lock_shard(s).histogram(self.bins)
+    }
+}
+
+/// Per-shard predicate filtering for [`AucFleet::select_streams`]. The
+/// predicate is owned by the work value (the owned-state rule), so it
+/// can ride the persistent pool's threads; hence the `'static` bound
+/// on the public API.
+struct SelectWork<P> {
+    pred: P,
+}
+
+impl<P> ShardWork for SelectWork<P>
+where
+    P: Fn(&StreamSnapshot) -> bool + Send + Sync + 'static,
+{
+    type Output = Vec<StreamSnapshot>;
+    fn visit(&self, s: usize, core: &FleetCore) -> Self::Output {
+        let mut hits = core.lock_shard(s).snapshots();
+        hits.retain(|snap| (self.pred)(snap));
+        hits
+    }
+}
+
+impl AucFleet {
+    /// The `k` live streams with the lowest windowed AUC — the triage
+    /// view — sorted worst first (ties broken by stream id; the shared
+    /// `worst_first` order, which is also what makes the per-shard
+    /// truncation in `Shard::top_k_worst` lossless). Streams with an
+    /// empty window carry no estimate and are not ranked. Runs
+    /// shard-parallel on the executor; per-shard candidates merge in
+    /// shard order and re-sort on a total order, so the result is
+    /// identical under every strategy.
+    pub fn top_k_worst(&self, k: usize) -> Vec<StreamSnapshot> {
+        if k == 0 {
+            return Vec::new();
+        }
+        self.wait_inflight();
+        let mut all: Vec<StreamSnapshot> = self
+            .executor
+            .map_shards(&self.core, TopKWork { k })
+            .into_iter()
+            .flatten()
+            .collect();
+        all.sort_by(|a, b| worst_first((a.auc, a.stream), (b.auc, b.stream)));
+        all.truncate(k);
+        all
+    }
+
+    /// Number of live streams whose windowed AUC is strictly below
+    /// `threshold` — the SLO accounting query.
+    pub fn count_below(&self, threshold: f64) -> usize {
+        self.wait_inflight();
+        self.executor
+            .map_shards(&self.core, CountBelowWork { threshold })
+            .into_iter()
+            .sum()
+    }
+
+    /// Histogram of the per-stream windowed AUCs over `[0, 1]` in
+    /// `bins` equal-width buckets (at least 1; AUC 1.0 lands in the
+    /// last). Per-shard partials are summed bin-wise, so the result is
+    /// strategy-independent.
+    pub fn auc_histogram(&self, bins: usize) -> AucHistogram {
+        let bins = bins.max(1);
+        self.wait_inflight();
+        let mut counts = vec![0usize; bins];
+        let mut live_streams = 0usize;
+        for (partial, live) in self.executor.map_shards(&self.core, HistogramWork { bins }) {
+            for (bin, c) in counts.iter_mut().zip(partial) {
+                *bin += c;
+            }
+            live_streams += live;
+        }
+        AucHistogram { counts, live_streams }
+    }
+
+    /// Snapshots of every stream matching `pred`, sorted by stream id.
+    /// The predicate sees the same [`StreamSnapshot`] that
+    /// [`AucFleet::snapshot`] reports and must be pure (it may run
+    /// concurrently on several shards and its per-shard evaluation
+    /// order is unspecified). `'static` because the predicate is moved
+    /// into the job that rides the persistent pool's threads.
+    pub fn select_streams<P>(&self, pred: P) -> Vec<StreamSnapshot>
+    where
+        P: Fn(&StreamSnapshot) -> bool + Send + Sync + 'static,
+    {
+        self.wait_inflight();
+        let mut hits: Vec<StreamSnapshot> = self
+            .executor
+            .map_shards(&self.core, SelectWork { pred })
+            .into_iter()
+            .flatten()
+            .collect();
+        hits.sort_by_key(|s| s.stream);
+        hits
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{FleetConfig, StreamConfig};
+    use super::*;
+
+    fn demo_fleet(workers: usize) -> AucFleet {
+        let mut fleet = AucFleet::new(FleetConfig {
+            shards: 8,
+            workers,
+            stream_defaults: StreamConfig::new(10, 0.0).without_monitor(),
+            ..FleetConfig::default()
+        });
+        // AUCs: stream 1 → 1.0, stream 2 → 0.0, stream 3 → 0.5
+        // (single class), stream 4 → 1.0.
+        for _ in 0..5 {
+            fleet.push(1, 0.2, true);
+            fleet.push(1, 0.8, false);
+            fleet.push(2, 0.8, true);
+            fleet.push(2, 0.2, false);
+            fleet.push(3, 0.5, true);
+            fleet.push(4, 0.1, true);
+            fleet.push(4, 0.9, false);
+        }
+        fleet
+    }
+
+    #[test]
+    fn top_k_worst_ranks_and_breaks_ties_by_id() {
+        for workers in [1usize, 4] {
+            let fleet = demo_fleet(workers);
+            let worst: Vec<(u64, f64)> =
+                fleet.top_k_worst(3).into_iter().map(|s| (s.stream, s.auc)).collect();
+            assert_eq!(worst, vec![(2, 0.0), (3, 0.5), (1, 1.0)], "workers = {workers}");
+            // Tie at AUC 1.0 between streams 1 and 4: id breaks it.
+            let all: Vec<u64> = fleet.top_k_worst(10).into_iter().map(|s| s.stream).collect();
+            assert_eq!(all, vec![2, 3, 1, 4]);
+            assert!(fleet.top_k_worst(0).is_empty());
+        }
+    }
+
+    #[test]
+    fn count_below_is_strict() {
+        let fleet = demo_fleet(2);
+        assert_eq!(fleet.count_below(0.0), 0);
+        assert_eq!(fleet.count_below(0.25), 1); // stream 2
+        assert_eq!(fleet.count_below(0.75), 2); // + stream 3
+        assert_eq!(fleet.count_below(2.0), 4);
+    }
+
+    #[test]
+    fn histogram_bins_cover_the_unit_interval() {
+        let fleet = demo_fleet(4);
+        let hist = fleet.auc_histogram(4);
+        assert_eq!(hist.bins(), 4);
+        assert_eq!(hist.live_streams, 4);
+        // 0.0 → bin 0; 0.5 → bin 2; two 1.0s → last bin.
+        assert_eq!(hist.counts, vec![1, 0, 1, 2]);
+        assert_eq!(hist.counts.iter().sum::<usize>(), hist.live_streams);
+        assert_eq!(hist.bin_range(0), (0.0, 0.25));
+        assert!((hist.fraction(3) - 0.5).abs() < 1e-12);
+        // bins = 0 is clamped to one all-covering bin.
+        assert_eq!(fleet.auc_histogram(0).counts, vec![4]);
+    }
+
+    #[test]
+    fn histogram_of_empty_fleet_is_zero() {
+        let fleet = AucFleet::with_defaults();
+        let hist = fleet.auc_histogram(5);
+        assert_eq!(hist.counts, vec![0; 5]);
+        assert_eq!(hist.live_streams, 0);
+        assert_eq!(hist.fraction(0), 0.0);
+    }
+
+    #[test]
+    fn select_streams_filters_and_sorts_by_id() {
+        let fleet = demo_fleet(4);
+        let perfect: Vec<u64> =
+            fleet.select_streams(|s| s.auc >= 1.0).into_iter().map(|s| s.stream).collect();
+        assert_eq!(perfect, vec![1, 4]);
+        assert!(fleet.select_streams(|_| false).is_empty());
+        assert_eq!(fleet.select_streams(|_| true).len(), 4);
+    }
+}

@@ -13,12 +13,19 @@
 //! precomputed tick stamps and the size-aware claim queue.
 //!
 //! Determinism contract: a shard's observable state after
-//! [`Shard::drain_events`] depends only on the events it is given and
-//! the `start_tick` — never on which thread ran it or when. Alarms
-//! accumulate in the shard-local log and are merged into the
-//! fleet-wide log in shard-index order, which is exactly the order the
-//! serial path produces, so parallel and serial ingestion are
-//! bit-identical (`rust/DESIGN.md` §Parallelism).
+//! [`Shard::drain_events`] depends only on the events it is given, the
+//! `start_tick` and the batch timestamp — never on which thread ran it
+//! or when. Alarms accumulate in the shard-local log and are merged
+//! into the fleet-wide log in shard-index order, which is exactly the
+//! order the serial path produces, so parallel and serial ingestion
+//! are bit-identical (`rust/DESIGN.md` §Parallelism).
+//!
+//! Besides ingestion, the shard exposes the **read-only visitor
+//! methods** the typed job layer (`fleet/pool.rs` `ShardWork`) runs
+//! shard-parallel: per-shard snapshots, aggregate partials and the
+//! query primitives behind `fleet/query.rs`. Each returns plain owned
+//! data so per-shard results can be reassembled in shard-index order
+//! without further locking (`rust/DESIGN.md` §Jobs).
 
 use std::collections::HashMap;
 
@@ -27,6 +34,16 @@ use crate::coordinator::{ApproxAuc, AucMonitor, MonitorEvent};
 
 use super::config::StreamConfig;
 use super::snapshot::{FleetAlarm, StreamSnapshot};
+
+/// The "worst stream first" total order on `(windowed AUC, stream id)`
+/// keys: ascending AUC, ties broken by id. Shared by
+/// [`Shard::top_k_worst`] and the global merge in `fleet/query.rs` —
+/// the per-shard truncation argument ("any global top-k member is in
+/// its own shard's top-k") is sound **only** while both sorts use this
+/// exact order, so neither site may diverge from it.
+pub(super) fn worst_first(a: (f64, u64), b: (f64, u64)) -> std::cmp::Ordering {
+    a.0.total_cmp(&b.0).then(a.1.cmp(&b.1))
+}
 
 /// One stream's state: sliding estimator window plus optional drift
 /// monitor. Factored out of the shard so future per-stream features
@@ -46,6 +63,11 @@ pub(super) struct StreamState {
     /// Fleet-wide tick (total fleet event count) at this stream's most
     /// recent event; drives [`Shard::evict_idle`].
     pub(super) last_seen: u64,
+    /// Caller-supplied timestamp (wall clock, epoch seconds, … — any
+    /// monotone unit) at this stream's most recent event; drives
+    /// [`Shard::evict_older_than`]. `0` until the fleet is ever fed a
+    /// timestamp, in which case only tick-based eviction is meaningful.
+    pub(super) last_seen_at: u64,
 }
 
 impl StreamState {
@@ -57,6 +79,7 @@ impl StreamState {
             events: 0,
             alarms: 0,
             last_seen: 0,
+            last_seen_at: 0,
         }
     }
 
@@ -124,14 +147,16 @@ impl Shard {
 
     /// Reset a live stream under a new configuration (window contents,
     /// monitor state and counters start fresh). Returns false when the
-    /// stream is not live. `now` is the current fleet tick, recorded as
-    /// the reset stream's `last_seen` so a reconfigure does not make it
-    /// instantly eligible for idle eviction.
-    pub(super) fn reset_stream(&mut self, id: u64, cfg: &StreamConfig, now: u64) -> bool {
+    /// stream is not live. `now` is the current fleet tick and `at` the
+    /// current fleet timestamp, recorded as the reset stream's
+    /// `last_seen`/`last_seen_at` so a reconfigure does not make it
+    /// instantly eligible for either eviction flavour.
+    pub(super) fn reset_stream(&mut self, id: u64, cfg: &StreamConfig, now: u64, at: u64) -> bool {
         match self.index.get(&id) {
             Some(&slot) => {
                 let mut st = StreamState::new(id, cfg);
                 st.last_seen = now;
+                st.last_seen_at = at;
                 self.streams[slot as usize] = st;
                 true
             }
@@ -142,12 +167,14 @@ impl Shard {
     /// Ingest one event into a resolved slot: window update plus monitor
     /// observation (only on full windows, so partially filled streams
     /// never alarm on warm-up noise). `tick` is the fleet-wide event
-    /// number of this event (1-based).
-    pub(super) fn push_at(&mut self, slot: usize, score: f64, label: bool, tick: u64) {
+    /// number of this event (1-based); `at` is the caller's timestamp
+    /// for the batch the event arrived in.
+    pub(super) fn push_slot(&mut self, slot: usize, score: f64, label: bool, tick: u64, at: u64) {
         let st = &mut self.streams[slot];
         st.win.push(score, label);
         st.events += 1;
         st.last_seen = tick;
+        st.last_seen_at = at;
         if st.win.is_full() {
             if let Some(m) = st.monitor.as_mut() {
                 let auc = st.win.auc();
@@ -168,13 +195,16 @@ impl Shard {
     /// stream-id → slot lookup once per run of same-stream events.
     /// Events are stamped with fleet ticks `start_tick + 1, + 2, …` —
     /// the exact ticks the serial shard-by-shard drain would assign,
-    /// which is what makes out-of-order parallel draining deterministic.
+    /// which is what makes out-of-order parallel draining deterministic
+    /// — and with the batch-constant timestamp `at`, which is equally
+    /// scheduling-independent.
     pub(super) fn drain_events(
         &mut self,
         events: &[(u64, f64, bool)],
         defaults: &StreamConfig,
         overrides: &HashMap<u64, StreamConfig>,
         start_tick: u64,
+        at: u64,
     ) {
         let mut tick = start_tick;
         let mut i = 0;
@@ -187,7 +217,7 @@ impl Shard {
             let slot = self.ensure_slot(id, defaults, overrides);
             for &(_, score, label) in &events[i..j] {
                 tick += 1;
-                self.push_at(slot, score, label, tick);
+                self.push_slot(slot, score, label, tick, at);
             }
             i = j;
         }
@@ -200,16 +230,16 @@ impl Shard {
         out.append(&mut self.alarms);
     }
 
-    /// Drop streams idle for at least `max_idle` fleet ticks (`now` is
-    /// the current fleet tick), compacting the slab via swap-remove and
-    /// repairing the index. Returns the number of evicted streams.
-    pub(super) fn evict_idle(&mut self, now: u64, max_idle: u64) -> usize {
+    /// Drop every stream matching `dead`, compacting the slab via
+    /// swap-remove and repairing the index. Returns the number of
+    /// evicted streams. Shared engine behind both eviction flavours.
+    fn evict_where(&mut self, dead: impl Fn(&StreamState) -> bool) -> usize {
         let mut evicted = 0;
         let mut slot = 0;
         while slot < self.streams.len() {
-            if now.saturating_sub(self.streams[slot].last_seen) >= max_idle {
-                let dead = self.streams.swap_remove(slot);
-                self.index.remove(&dead.id);
+            if dead(&self.streams[slot]) {
+                let gone = self.streams.swap_remove(slot);
+                self.index.remove(&gone.id);
                 if let Some(moved) = self.streams.get(slot) {
                     self.index.insert(moved.id, slot as u32);
                 }
@@ -219,6 +249,88 @@ impl Shard {
             }
         }
         evicted
+    }
+
+    /// Drop streams idle for at least `max_idle` fleet ticks (`now` is
+    /// the current fleet tick). Returns the number of evicted streams.
+    pub(super) fn evict_idle(&mut self, now: u64, max_idle: u64) -> usize {
+        self.evict_where(|st| now.saturating_sub(st.last_seen) >= max_idle)
+    }
+
+    /// Drop streams whose last event's timestamp is at least `max_age`
+    /// behind `now` (both in the caller's clock units — see
+    /// [`StreamState::last_seen_at`]). Returns the number of evicted
+    /// streams.
+    pub(super) fn evict_older_than(&mut self, now: u64, max_age: u64) -> usize {
+        self.evict_where(|st| now.saturating_sub(st.last_seen_at) >= max_age)
+    }
+
+    // ---- read-only visitor methods (run shard-parallel by the typed
+    // job layer; each returns owned data merged in shard-index order) --
+
+    /// Snapshot every stream in slab order.
+    pub(super) fn snapshots(&self) -> Vec<StreamSnapshot> {
+        self.streams.iter().map(StreamState::snapshot).collect()
+    }
+
+    /// Aggregate partial: the windowed AUC of every live (non-empty)
+    /// stream in slab order, the currently-alarmed count, and the
+    /// total stream count.
+    pub(super) fn aggregate_partial(&self) -> (Vec<f64>, usize, usize) {
+        let mut aucs = Vec::with_capacity(self.streams.len());
+        let mut alarmed = 0usize;
+        for st in &self.streams {
+            if !st.win.is_empty() {
+                aucs.push(st.win.auc());
+            }
+            if st.monitor.as_ref().map_or(false, AucMonitor::is_alarmed) {
+                alarmed += 1;
+            }
+        }
+        (aucs, alarmed, self.streams.len())
+    }
+
+    /// This shard's `k` worst live streams by [`worst_first`] order,
+    /// snapshotted. Streams with an empty window carry no estimate and
+    /// are not ranked. Ranks lightweight `(auc, id, slot)` triples and
+    /// snapshots only the `k` winners — the full-snapshot
+    /// materialization is the expensive part on large shards.
+    pub(super) fn top_k_worst(&self, k: usize) -> Vec<StreamSnapshot> {
+        let mut ranked: Vec<(f64, u64, usize)> = self
+            .streams
+            .iter()
+            .enumerate()
+            .filter(|(_, st)| !st.win.is_empty())
+            .map(|(slot, st)| (st.win.auc(), st.id, slot))
+            .collect();
+        ranked.sort_by(|a, b| worst_first((a.0, a.1), (b.0, b.1)));
+        ranked.truncate(k);
+        ranked.into_iter().map(|(_, _, slot)| self.streams[slot].snapshot()).collect()
+    }
+
+    /// Live streams whose windowed AUC is strictly below `threshold`.
+    pub(super) fn count_below(&self, threshold: f64) -> usize {
+        self.streams
+            .iter()
+            .filter(|st| !st.win.is_empty() && st.win.auc() < threshold)
+            .count()
+    }
+
+    /// Histogram partial over `[0, 1]` split into `bins` equal-width
+    /// buckets (AUC 1.0 lands in the last). Returns the per-bin counts
+    /// and the number of live streams counted.
+    pub(super) fn histogram(&self, bins: usize) -> (Vec<usize>, usize) {
+        let mut counts = vec![0usize; bins];
+        let mut live = 0usize;
+        for st in &self.streams {
+            if st.win.is_empty() {
+                continue;
+            }
+            let bin = ((st.win.auc() * bins as f64) as usize).min(bins - 1);
+            counts[bin] += 1;
+            live += 1;
+        }
+        (counts, live)
     }
 }
 

@@ -20,13 +20,18 @@
 //! * [`fleet`] — the multi-stream service layer: an [`AucFleet`] of
 //!   thousands of independent sliding windows keyed by stream id. Each
 //!   shard owns its slab of stream states outright (`Send`-clean from
-//!   the rbtree up); batched ingestion drains shards work-stealing on
-//!   a persistent worker pool (spawned once, parked between batches,
-//!   optionally pipelining the next batch while the previous drains)
-//!   with results bit-identical to serial under every strategy — the
-//!   contract `rust/tests/executor.rs` attacks with adversarial
-//!   schedules. Plus fleet-wide drift alarms, quantile aggregates,
-//!   streaming snapshots and idle-stream eviction.
+//!   the rbtree up); every fleet operation — batched ingestion *and*
+//!   the read paths (aggregates, snapshots, queries, eviction) — runs
+//!   as a typed shard job (`fleet/pool.rs`) work-stealing on a
+//!   persistent worker pool (spawned once, parked between jobs,
+//!   optionally pipelining the next batch while the previous drains,
+//!   optionally scaling active workers to the batch size) with results
+//!   bit-identical to serial under every strategy — the contract
+//!   `rust/tests/executor.rs` attacks with adversarial schedules.
+//!   `fleet/query.rs` answers the monitoring questions shard-parallel
+//!   (worst-k triage, threshold counts, AUC histograms, predicate
+//!   scans); plus fleet-wide drift alarms, quantile aggregates,
+//!   streaming snapshots, and idle- and age-based stream eviction.
 //! * [`stream`] — deterministic synthetic data sources standing in for the
 //!   paper's UCI datasets (see `DESIGN.md` §Substitutions), the
 //!   multi-stream fleet generator, drift injectors and CSV I/O.

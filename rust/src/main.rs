@@ -5,7 +5,8 @@
 //! streamauc stream [--dataset D] [--epsilon E] [--window K] [--events N] [--drift-at I --drift-rate R]
 //! streamauc fleet  [--streams N] [--events N] [--shards S] [--workers W] [--window K]
 //!                  [--epsilon E] [--batch B] [--drift-frac F] [--skew X] [--seed S]
-//!                  [--evict-idle N] [--pool BOOL] [--pipeline]
+//!                  [--evict-idle N] [--evict-age N] [--pool BOOL] [--pipeline] [--adaptive]
+//!                  [--top K] [--count-below X] [--hist BINS]
 //! streamauc train  [--dataset D] [--steps N] [--lr X] [--events N] [--artifacts DIR] [--out FILE]
 //! streamauc help
 //! ```
@@ -13,12 +14,16 @@
 //! `experiment` regenerates the paper's tables/figures; `stream` runs
 //! the monitoring pipeline on a synthetic scored stream; `fleet` runs
 //! the multi-stream engine over a bursty synthetic fleet with injected
-//! per-stream drift (`--workers N` drains shards work-stealing on the
-//! persistent worker pool; `--pool false` falls back to a thread scope
-//! per batch, `--pipeline` overlaps batch generation with the previous
-//! drain — every combination is bit-identical to serial); `train` runs
-//! the full three-layer path (PJRT-compiled JAX/Pallas classifier
-//! trained and scored from rust, stream fed into the estimator).
+//! per-stream drift (`--workers N` runs ingestion *and* every read
+//! path — aggregates, queries, snapshots, eviction — work-stealing on
+//! the persistent worker pool; `--pool false` falls back to a thread
+//! scope per call, `--pipeline` overlaps batch generation with the
+//! previous drain, `--adaptive` scales active workers to the batch
+//! size — every combination is bit-identical to serial) and then
+//! answers the monitoring queries (`--top`, `--count-below`, `--hist`);
+//! `train` runs the full three-layer path (PJRT-compiled JAX/Pallas
+//! classifier trained and scored from rust, stream fed into the
+//! estimator).
 
 use anyhow::{bail, Context, Result};
 
@@ -64,7 +69,8 @@ USAGE:
                    [--drift-at I --drift-rate R] [--config FILE]
   streamauc fleet  [--streams N] [--events N] [--shards S] [--workers W] [--window K]
                    [--epsilon E] [--batch B] [--drift-frac F] [--skew X] [--seed S]
-                   [--evict-idle N] [--pool BOOL] [--pipeline]
+                   [--evict-idle N] [--evict-age N] [--pool BOOL] [--pipeline] [--adaptive]
+                   [--top K] [--count-below X] [--hist BINS]
   streamauc train  [--dataset D] [--steps N] [--lr X] [--events N]
                    [--artifacts DIR] [--out stream.csv]
   streamauc help
@@ -180,7 +186,8 @@ fn cmd_stream(args: &Args) -> Result<()> {
 fn cmd_fleet(args: &Args) -> Result<()> {
     args.validate_flags(&[
         "streams", "events", "shards", "workers", "window", "epsilon", "batch", "drift-frac",
-        "skew", "seed", "evict-idle", "pool", "pipeline",
+        "skew", "seed", "evict-idle", "evict-age", "pool", "pipeline", "adaptive", "top",
+        "count-below", "hist",
     ])?;
     let streams: usize = args.get_or("streams", 1000)?;
     let events: usize = args.get_or("events", 500_000)?;
@@ -188,6 +195,7 @@ fn cmd_fleet(args: &Args) -> Result<()> {
     let workers: usize = args.get_or("workers", 1)?;
     let pool: bool = args.get_or("pool", true)?;
     let pipeline: bool = args.get_or("pipeline", false)?;
+    let adaptive: bool = args.get_or("adaptive", false)?;
     let window: usize = args.get_or("window", 300)?;
     let epsilon: f64 = args.get_or("epsilon", 0.05)?;
     let batch: usize = args.get_or("batch", 2048)?;
@@ -195,6 +203,9 @@ fn cmd_fleet(args: &Args) -> Result<()> {
     let skew: f64 = args.get_or("skew", 1.5)?;
     let seed: u64 = args.get_or("seed", 0xF1EE7)?;
     let evict_idle: u64 = args.get_or("evict-idle", 0)?;
+    let evict_age: u64 = args.get_or("evict-age", 0)?;
+    let top: usize = args.get_or("top", 10)?;
+    let hist_bins: usize = args.get_or("hist", 10)?;
     if streams == 0 || events == 0 || batch == 0 {
         bail!("--streams, --events and --batch must be positive");
     }
@@ -225,23 +236,30 @@ fn cmd_fleet(args: &Args) -> Result<()> {
         workers,
         pool,
         pipeline,
+        adaptive,
         stream_defaults: StreamConfig::new(window, epsilon),
     });
 
     println!(
         "# fleet: {streams} streams ({drifted} drifted), {events} events, \
-         batch {batch}, {} shards, {} worker(s) [{}{}], k={window}, ε={epsilon}",
+         batch {batch}, {} shards, {} worker(s) [{}{}{}], k={window}, ε={epsilon}",
         fleet.shard_count(),
         fleet.workers(),
         if fleet.pooled() { "pooled" } else if fleet.workers() > 1 { "scoped" } else { "serial" },
-        if fleet.pipelined() { ", pipelined" } else { "" }
+        if fleet.pipelined() { ", pipelined" } else { "" },
+        if adaptive { ", adaptive" } else { "" }
     );
     let started = std::time::Instant::now();
     let mut remaining = events;
     while remaining > 0 {
         let n = remaining.min(batch);
         let chunk = gen.next_batch(n);
-        fleet.push_batch(&chunk);
+        // Event-count clock: each batch is stamped with the number of
+        // events ingested before it, so `--evict-age` thresholds are in
+        // events, like `--evict-idle`, but flow through the timestamp
+        // path.
+        let at = (events - remaining) as u64;
+        fleet.push_batch_at(&chunk, at);
         remaining -= n;
     }
     // `stream_count` synchronizes with a pipelined final batch, so the
@@ -262,6 +280,14 @@ fn cmd_fleet(args: &Args) -> Result<()> {
             fleet.stream_count()
         );
     }
+    if evict_age > 0 {
+        let dropped = fleet.evict_older_than(evict_age);
+        println!(
+            "# evicted {dropped} stream(s) older than {evict_age} (clock {}); {} remain",
+            fleet.clock(),
+            fleet.stream_count()
+        );
+    }
     let agg = fleet.aggregate();
     println!(
         "# AUC across {} live streams: min {:.4}  p10 {:.4}  median {:.4}  p90 {:.4}  max {:.4}  \
@@ -271,8 +297,29 @@ fn cmd_fleet(args: &Args) -> Result<()> {
     );
     let snap = fleet.snapshot();
     println!("# fleet mean AUC {:.4}; {} streams alarmed", snap.mean_auc(), agg.alarmed_streams);
+
+    // ---- shard-parallel queries (fleet/query.rs) --------------------
+    if hist_bins > 0 {
+        let hist = fleet.auc_histogram(hist_bins);
+        println!("\n# AUC histogram over {} live streams:", hist.live_streams);
+        let peak = hist.counts.iter().copied().max().unwrap_or(0).max(1);
+        for (i, &count) in hist.counts.iter().enumerate() {
+            let (lo, hi) = hist.bin_range(i);
+            let bar = "#".repeat(count * 50 / peak);
+            println!("#   [{lo:.2}, {hi:.2})  {count:>7}  {bar}");
+        }
+    }
+    if let Some(raw) = args.get("count-below") {
+        let threshold: f64 = raw
+            .parse()
+            .map_err(|e| anyhow::anyhow!("flag --count-below {raw:?}: {e}"))?;
+        println!(
+            "# {} stream(s) below AUC {threshold}",
+            fleet.count_below(threshold)
+        );
+    }
     println!("\n{:>10}  {:>8}  {:>6}  {:>6}  {:>7}  alarmed", "stream", "auc~", "fill", "|C|", "alarms");
-    for s in snap.worst_streams(10) {
+    for s in fleet.top_k_worst(top) {
         println!(
             "{:>10}  {:>8.4}  {:>6}  {:>6}  {:>7}  {}",
             s.stream, s.auc, s.len, s.compressed_len, s.alarms, s.alarmed

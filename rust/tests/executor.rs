@@ -23,8 +23,8 @@ use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use streamauc::fleet::{
-    AucFleet, FleetAggregate, FleetAlarm, FleetConfig, FleetExecutor, MonitorConfig,
-    StreamConfig, StreamSnapshot,
+    AucFleet, AucHistogram, FleetAggregate, FleetAlarm, FleetConfig, FleetExecutor,
+    MonitorConfig, StreamConfig, StreamSnapshot,
 };
 use streamauc::stream::Pcg;
 
@@ -34,18 +34,32 @@ type Event = (u64, f64, bool);
 // Adversarial schedule machinery
 // ---------------------------------------------------------------------
 
+/// Clock units one batch advances the fleet timestamp by (batch `i` is
+/// stamped `(i + 1) · BATCH_CLOCK`), so `EvictOlderThan` thresholds
+/// below are in "batches × 37".
+const BATCH_CLOCK: u64 = 37;
+
 /// One step of an ingest-loop schedule, replayed identically against
 /// the serial reference and every parallel fleet.
 #[derive(Clone, Copy, Debug)]
 enum Step {
-    /// Push batch `i` of the pre-generated trace.
+    /// Push batch `i` of the pre-generated trace, stamped with the
+    /// batch clock.
     Batch(usize),
     /// Fleet-wide aggregate between batches.
     Aggregate,
     /// Streaming snapshot between batches.
     SnapshotIter,
-    /// Idle eviction with the given threshold between batches.
+    /// Worst-k triage query between batches.
+    TopK(usize),
+    /// Threshold count query between batches.
+    CountBelow(f64),
+    /// AUC distribution query between batches.
+    Histogram(usize),
+    /// Tick-idleness eviction with the given threshold between batches.
     EvictIdle(u64),
+    /// Timestamp-age eviction with the given threshold between batches.
+    EvictOlderThan(u64),
 }
 
 /// Everything observable about a schedule run. Two fleets are
@@ -54,49 +68,70 @@ enum Step {
 struct Digest {
     aggregates: Vec<FleetAggregate>,
     iter_snapshots: Vec<Vec<StreamSnapshot>>,
+    top_k: Vec<Vec<StreamSnapshot>>,
+    below: Vec<usize>,
+    histograms: Vec<AucHistogram>,
     evicted: Vec<usize>,
+    evicted_by_age: Vec<usize>,
     final_streams: Vec<StreamSnapshot>,
     final_alarmed: Vec<u64>,
     alarms: Vec<FleetAlarm>,
     total_events: u64,
+    clock: u64,
 }
 
 fn run_schedule(fleet: &mut AucFleet, batches: &[Vec<Event>], steps: &[Step]) -> Digest {
     let mut aggregates = Vec::new();
     let mut iter_snapshots = Vec::new();
+    let mut top_k = Vec::new();
+    let mut below = Vec::new();
+    let mut histograms = Vec::new();
     let mut evicted = Vec::new();
+    let mut evicted_by_age = Vec::new();
     for &step in steps {
         match step {
-            Step::Batch(i) => fleet.push_batch(&batches[i]),
+            Step::Batch(i) => fleet.push_batch_at(&batches[i], (i as u64 + 1) * BATCH_CLOCK),
             Step::Aggregate => aggregates.push(fleet.aggregate()),
             Step::SnapshotIter => iter_snapshots.push(fleet.snapshot_iter().collect()),
+            Step::TopK(k) => top_k.push(fleet.top_k_worst(k)),
+            Step::CountBelow(t) => below.push(fleet.count_below(t)),
+            Step::Histogram(bins) => histograms.push(fleet.auc_histogram(bins)),
             Step::EvictIdle(max_idle) => evicted.push(fleet.evict_idle(max_idle)),
+            Step::EvictOlderThan(max_age) => evicted_by_age.push(fleet.evict_older_than(max_age)),
         }
     }
     let snap = fleet.snapshot();
     Digest {
         aggregates,
         iter_snapshots,
+        top_k,
+        below,
+        histograms,
         evicted,
+        evicted_by_age,
         final_streams: snap.streams,
         final_alarmed: snap.alarmed_streams,
         alarms: fleet.alarms().to_vec(),
         total_events: snap.total_events,
+        clock: fleet.clock(),
     }
 }
 
 /// Pathologically skewed event soup: streams 0..3 take ~70% of all
 /// traffic (one bucket dwarfs the rest — the regime that serialized
 /// the old chunked executor), the cold tail goes completely silent for
-/// the middle sixth of the run (guaranteeing `evict_idle` has victims),
-/// and the hot streams' labels decouple from their scores halfway
-/// through (feeding the drift monitors real alarms).
+/// the middle sixth of the run (guaranteeing `evict_idle` has victims)
+/// and again for a late stretch (guaranteeing `evict_older_than` has
+/// victims of its own after the tail was revived), and the hot
+/// streams' labels decouple from their scores halfway through (feeding
+/// the drift monitors real alarms).
 fn skewed_batches(rng: &mut Pcg, n_streams: u64, n_batches: usize) -> Vec<Vec<Event>> {
     let broken = 2.min(n_streams);
     (0..n_batches)
         .map(|b| {
             let len = 128 + rng.below(385) as usize; // 128..=512
-            let tail_silent = b >= n_batches / 3 && b < n_batches / 2;
+            let tail_silent = (b >= n_batches / 3 && b < n_batches / 2)
+                || (b >= 2 * n_batches / 3 && b < 5 * n_batches / 6);
             (0..len)
                 .map(|_| {
                     let id = if tail_silent || rng.chance(0.7) {
@@ -129,19 +164,26 @@ fn monitored_defaults() -> StreamConfig {
 }
 
 fn fleet_with(workers: usize, pool: bool, pipeline: bool) -> AucFleet {
+    fleet_with_adaptive(workers, pool, pipeline, false)
+}
+
+fn fleet_with_adaptive(workers: usize, pool: bool, pipeline: bool, adaptive: bool) -> AucFleet {
     AucFleet::new(FleetConfig {
         shards: 16,
         workers,
         pool,
         pipeline,
+        adaptive,
         stream_defaults: monitored_defaults(),
     })
 }
 
 /// The tentpole property: one persistent pool per fleet, reused across
-/// 100+ batches of pathologically skewed traffic with queries and
-/// eviction interleaved, must be bit-identical to serial for workers ∈
-/// {2, 4, 8, 16}, pipelined or not, and under the scoped fallback.
+/// 100+ batches of pathologically skewed traffic with queries (all
+/// four `fleet/query.rs` queries run as pooled jobs) and both eviction
+/// flavours interleaved, must be bit-identical to serial for workers ∈
+/// {2, 4, 8, 16}, pipelined or not, under the scoped fallback, and
+/// under adaptive worker scaling.
 #[test]
 fn pooled_ingestion_is_bit_identical_to_serial_under_adversarial_schedules() {
     streamauc::testing::check(0xADE5_CED1, 2, |rng| {
@@ -154,7 +196,14 @@ fn pooled_ingestion_is_bit_identical_to_serial_under_adversarial_schedules() {
         let batches = skewed_batches(rng, n_streams, n_batches);
         // Interleave queries and eviction between batches, identically
         // for every fleet: every 7th step an aggregate, every 11th a
-        // streaming snapshot, every 29th an eviction pass.
+        // streaming snapshot, every 13th/17th/19th one of the query
+        // layer's reads, every 29th a tick-idleness eviction pass, and
+        // one timestamp-age eviction pass placed inside the *second*
+        // silent stretch [2n/3, 5n/6) — which the idle passes skip, so
+        // the age pass deterministically finds its own victims (the
+        // tail last ticked at batch < 2n/3, an age of ≥ (n/6 − 5)
+        // batches ≥ 11 · 37 clock units > the 300..=399 threshold).
+        let age_step = 5 * n_batches / 6 - 5;
         let mut steps = Vec::new();
         for i in 0..n_batches {
             steps.push(Step::Batch(i));
@@ -164,11 +213,24 @@ fn pooled_ingestion_is_bit_identical_to_serial_under_adversarial_schedules() {
             if i % 11 == 5 {
                 steps.push(Step::SnapshotIter);
             }
-            if i % 29 == 17 {
+            if i % 13 == 6 {
+                steps.push(Step::TopK(1 + rng.below(8) as usize));
+            }
+            if i % 17 == 9 {
+                steps.push(Step::CountBelow(0.4 + rng.uniform() * 0.4));
+            }
+            if i % 19 == 7 {
+                steps.push(Step::Histogram(4 + rng.below(12) as usize));
+            }
+            let in_age_window = i >= 2 * n_batches / 3 && i < 5 * n_batches / 6;
+            if i % 29 == 17 && !in_age_window {
                 // Small enough that the tail's silent stretch (≥ 14
                 // batches of ≥ 128 events) guarantees victims at the
                 // eviction step landing inside it.
                 steps.push(Step::EvictIdle(500 + rng.below(500)));
+            }
+            if i == age_step {
+                steps.push(Step::EvictOlderThan(300 + rng.below(100)));
             }
         }
         let mut serial = fleet_with(1, false, false);
@@ -177,6 +239,15 @@ fn pooled_ingestion_is_bit_identical_to_serial_under_adversarial_schedules() {
         assert!(
             reference.evicted.iter().any(|&e| e > 0),
             "adversarial scenario must evict something to compare"
+        );
+        assert!(
+            reference.evicted_by_age.iter().any(|&e| e > 0),
+            "adversarial scenario must age-evict something to compare"
+        );
+        assert!(
+            reference.top_k.iter().any(|k| !k.is_empty())
+                && reference.histograms.iter().any(|h| h.live_streams > 0),
+            "adversarial scenario must produce query results to compare"
         );
 
         for workers in [2usize, 4, 8, 16] {
@@ -194,6 +265,16 @@ fn pooled_ingestion_is_bit_identical_to_serial_under_adversarial_schedules() {
         let mut scoped = fleet_with(4, false, false);
         let digest = run_schedule(&mut scoped, &batches, &steps);
         assert_eq!(reference, digest, "scoped fleet diverged from serial");
+        // So does adaptive worker scaling (batches of 128..=512 events
+        // land on every side of its crossover), pipelined or not.
+        for pipeline in [false, true] {
+            let mut adaptive = fleet_with_adaptive(8, true, pipeline, true);
+            let digest = run_schedule(&mut adaptive, &batches, &steps);
+            assert_eq!(
+                reference, digest,
+                "adaptive fleet diverged from serial (pipeline {pipeline})"
+            );
+        }
     });
 }
 
@@ -287,6 +368,7 @@ fn fleet_wide_queries_survive_awkward_shard_counts() {
         pool: false,
         pipeline: false,
         stream_defaults: StreamConfig::new(10, 0.1).without_monitor(),
+        ..FleetConfig::default()
     });
     for id in 0..200u64 {
         fleet.push(id, 0.5, true);
@@ -460,6 +542,7 @@ fn aggregate_nearest_rank_boundaries_on_tiny_fleets() {
         pool: true,
         pipeline: false,
         stream_defaults: StreamConfig::new(10, 0.0).without_monitor(),
+        ..FleetConfig::default()
     });
     for _ in 0..5 {
         one.push(7, 0.2, true);
@@ -479,6 +562,7 @@ fn aggregate_nearest_rank_boundaries_on_tiny_fleets() {
         pool: true,
         pipeline: false,
         stream_defaults: StreamConfig::new(10, 0.0).without_monitor(),
+        ..FleetConfig::default()
     });
     for _ in 0..5 {
         two.push(1, 0.2, true);
@@ -516,6 +600,7 @@ fn panicking_stream_does_not_poison_the_pool() {
             pool,
             pipeline,
             stream_defaults: StreamConfig::new(50, 0.1).without_monitor(),
+            ..FleetConfig::default()
         });
         let healthy: Vec<Event> =
             (0..400u64).map(|i| (i % 20, 0.3 + 0.001 * (i % 7) as f64, i % 2 == 0)).collect();
@@ -560,4 +645,166 @@ fn dropping_a_pipelined_fleet_mid_flight_joins_cleanly() {
         fleet.push_batch(batch);
     }
     drop(fleet); // last batch may still be draining right here
+}
+
+/// Dropping a *query* mid-stream on a pipelined fleet — an abandoned
+/// `snapshot_iter` — then dropping the fleet with the next batch still
+/// in flight must be panic-free: readers synchronize, iterators hold
+/// no locks past their shard, and drop never re-raises.
+#[test]
+fn drop_mid_flight_query_is_panic_free() {
+    let mut rng = Pcg::seed(0xD21A);
+    let batches = skewed_batches(&mut rng, 24, 10);
+    let mut fleet = fleet_with(8, true, true);
+    for batch in &batches[..5] {
+        fleet.push_batch(batch);
+    }
+    {
+        let mut iter = fleet.snapshot_iter();
+        let _first = iter.next();
+        // Abandon the iterator mid-shard.
+    }
+    fleet.push_batch(&batches[5]); // pipelined: returns at submission
+    let _ = fleet.top_k_worst(3); // query syncs with the in-flight drain
+    fleet.push_batch(&batches[6]);
+    drop(fleet); // batch 6 may still be draining right here
+}
+
+/// Explicit `sync()`: after it returns, a pipelined fleet's in-flight
+/// work is published — `alarms()` order, recycled buckets, participant
+/// counts — without needing to issue a read.
+#[test]
+fn explicit_sync_publishes_the_in_flight_batch() {
+    let mut rng = Pcg::seed(0x51CC);
+    let batches = skewed_batches(&mut rng, 20, 30);
+    let mut piped = fleet_with(4, true, true);
+    let mut serial = fleet_with(1, false, false);
+    for batch in &batches {
+        piped.push_batch(batch);
+        serial.push_batch(batch);
+    }
+    piped.sync(); // waits the last drain out
+    assert!(piped.last_batch_workers() >= 1);
+    assert_eq!(serial.alarms(), piped.alarms());
+    assert_eq!(serial.snapshot(), piped.snapshot());
+    // sync() on a quiescent (or serial) fleet is a no-op.
+    piped.sync();
+    serial.sync();
+    assert_eq!(serial.total_events(), piped.total_events());
+}
+
+/// Queries issued from a `Drop` while the thread is already unwinding
+/// — with a *poisoned* batch still in flight — must not double-panic
+/// (which would abort the process instead of failing the test). The
+/// regression: `wait_inflight` used to re-raise the worker panic
+/// unconditionally; a fleet owner running diagnostics in its `Drop`
+/// during a panic would abort.
+#[test]
+fn queries_during_unwind_do_not_double_panic() {
+    struct QueryOnDrop {
+        fleet: AucFleet,
+    }
+    impl Drop for QueryOnDrop {
+        fn drop(&mut self) {
+            // Diagnostics a service would plausibly log on the way
+            // down; each one syncs with the poisoned in-flight batch.
+            let agg = self.fleet.aggregate();
+            let _ = self.fleet.top_k_worst(3);
+            let _ = self.fleet.snapshot();
+            assert!(agg.streams > 0, "pre-poison streams must still be visible");
+        }
+    }
+
+    let healthy: Vec<Event> =
+        (0..600u64).map(|i| (i % 24, 0.3 + 0.001 * (i % 7) as f64, i % 2 == 0)).collect();
+    let result = catch_unwind(AssertUnwindSafe(|| {
+        let mut guard = QueryOnDrop { fleet: fleet_with(4, true, true) };
+        guard.fleet.push_batch(&healthy);
+        guard.fleet.sync();
+        let mut poisoned = healthy.clone();
+        poisoned[137] = (5, f64::NAN, true); // panics inside a worker
+        guard.fleet.push_batch(&poisoned); // pipelined: returns at submission
+        panic!("caller panics while the poisoned batch is in flight");
+    }));
+    assert!(result.is_err(), "the caller panic itself must surface");
+}
+
+/// Acceptance check for the typed-job engine: with `pool = true` the
+/// query jobs run on the persistent pool's threads, not inline on the
+/// caller; with a serial executor they run inline. Observed through a
+/// `select_streams` predicate, which executes inside the per-shard
+/// visit.
+#[test]
+fn query_jobs_run_on_pool_threads_when_pooled() {
+    use std::collections::HashSet as Set;
+    use std::sync::{Arc, Mutex as StdMutex};
+    use std::thread::ThreadId;
+
+    let spread: Vec<Event> = (0..400u64).map(|id| (id, 0.5, true)).collect();
+    let main = std::thread::current().id();
+
+    let mut pooled = fleet_with(4, true, false);
+    pooled.push_batch(&spread);
+    let seen: Arc<StdMutex<Set<ThreadId>>> = Arc::new(StdMutex::new(Set::new()));
+    let probe = Arc::clone(&seen);
+    let hits = pooled.select_streams(move |_| {
+        probe.lock().unwrap().insert(std::thread::current().id());
+        true
+    });
+    assert_eq!(hits.len(), 400);
+    let seen = seen.lock().unwrap();
+    assert!(!seen.is_empty());
+    assert!(
+        !seen.contains(&main),
+        "pooled query visits must run on pool threads, not the caller"
+    );
+
+    let mut serial = fleet_with(1, true, false);
+    serial.push_batch(&spread);
+    let seen: Arc<StdMutex<Set<ThreadId>>> = Arc::new(StdMutex::new(Set::new()));
+    let probe = Arc::clone(&seen);
+    serial.select_streams(move |_| {
+        probe.lock().unwrap().insert(std::thread::current().id());
+        true
+    });
+    assert_eq!(
+        *seen.lock().unwrap(),
+        Set::from([main]),
+        "serial query visits must run inline on the caller"
+    );
+}
+
+// ---------------------------------------------------------------------
+// Timestamp threading + adaptive scaling (through the executor)
+// ---------------------------------------------------------------------
+
+/// `evict_older_than` across strategies: timestamps ride the batch, so
+/// age eviction is as strategy-independent as tick eviction — checked
+/// against a serial twin running the identical timed schedule.
+#[test]
+fn age_eviction_is_bit_identical_across_strategies() {
+    let mut rng = Pcg::seed(0xA6E0);
+    let batches = skewed_batches(&mut rng, 32, 40);
+    let mut serial = fleet_with(1, false, false);
+    let mut pooled = fleet_with_adaptive(8, true, true, true);
+    let mut ages = Vec::new();
+    for fleet in [&mut serial, &mut pooled] {
+        let mut evicted = Vec::new();
+        for (i, batch) in batches.iter().enumerate() {
+            fleet.push_batch_at(batch, (i as u64 + 1) * 100);
+            // Steps 17 and 30 land inside the trace's silent stretches
+            // ([13, 20) and [26, 33) of 40 batches), where the cold
+            // tail is ≥ 4 batches = 400 clock units stale — so victims
+            // are guaranteed, deterministically.
+            if i % 13 == 4 && i > 4 {
+                evicted.push(fleet.evict_older_than(250));
+            }
+        }
+        ages.push(evicted);
+    }
+    assert_eq!(ages[0], ages[1], "age eviction counts diverged");
+    assert!(ages[0].iter().any(|&e| e > 0), "scenario must age-evict something");
+    assert_eq!(serial.snapshot(), pooled.snapshot());
+    assert_eq!(serial.clock(), pooled.clock());
+    assert_eq!(serial.alarms(), pooled.alarms());
 }

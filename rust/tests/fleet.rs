@@ -44,6 +44,7 @@ fn build_fleet() -> AucFleet {
                 warmup: 250,
             }),
         },
+        ..FleetConfig::default()
     });
     for id in OVERRIDE_FROM..STREAMS {
         fleet.configure_stream(id, StreamConfig::new(120, OVERRIDE_EPS));
@@ -185,6 +186,7 @@ fn parallel_ingestion_is_bit_identical_to_serial() {
                     warmup: 250,
                 }),
             },
+            ..FleetConfig::default()
         };
         let mut serial = AucFleet::new(config(1));
         for batch in trace.chunks(chunk) {
@@ -279,4 +281,127 @@ fn evict_idle_drops_dead_streams_and_preserves_the_rest() {
     // A revived stream starts from an empty window.
     fleet.push(3, 0.5, true);
     assert_eq!(fleet.stream_len(3), Some(1));
+}
+
+/// Time-based eviction: streams age against the caller-supplied batch
+/// timestamps (not the fleet tick), survivors ride out the slab
+/// compaction untouched, and per-stream overrides survive both the
+/// compaction and their own eviction.
+#[test]
+fn timed_eviction_ages_by_timestamp_and_overrides_survive() {
+    let mut fleet = AucFleet::new(FleetConfig {
+        shards: 8,
+        workers: 2,
+        stream_defaults: StreamConfig::new(50, 0.1).without_monitor(),
+        ..FleetConfig::default()
+    });
+    assert_eq!(fleet.clock(), 0);
+    fleet.configure_stream(7, StreamConfig::new(5, 0.0).without_monitor());
+
+    // t = 100: everyone takes traffic. t = 200..600: only 5..10.
+    let all: Vec<(u64, f64, bool)> =
+        (0..200u64).map(|i| (i % 10, 0.3 + 0.01 * (i % 40) as f64, i % 2 == 0)).collect();
+    fleet.push_batch_at(&all, 100);
+    for t in [200u64, 300, 400, 500, 600] {
+        let warm: Vec<(u64, f64, bool)> =
+            (0..100u64).map(|i| (5 + i % 5, 0.3 + 0.01 * (i % 40) as f64, i % 2 == 1)).collect();
+        fleet.push_batch_at(&warm, t);
+    }
+    assert_eq!(fleet.clock(), 600);
+    assert_eq!(fleet.stream_len(7), Some(5), "override window ignored");
+
+    let survivors: Vec<Vec<(f64, bool)>> =
+        (5..10u64).map(|id| fleet.entries(id).unwrap()).collect();
+    // Streams 0..5 were last seen at t = 100 (age 500); 5..10 at 600.
+    // A few events is plenty of *ticks*, so tick-idleness would not
+    // fire here — age does.
+    assert_eq!(fleet.evict_older_than(400), 5);
+    assert_eq!(fleet.stream_count(), 5);
+    for id in 0..5u64 {
+        assert!(!fleet.contains(id), "stream {id} should be age-evicted");
+    }
+    for (i, id) in (5..10u64).enumerate() {
+        assert_eq!(fleet.entries(id).unwrap(), survivors[i], "stream {id} disturbed");
+    }
+    assert_eq!(fleet.stream_len(7), Some(5), "override lost through compaction");
+
+    // An empty timed batch advances the clock; everything ages out.
+    fleet.push_batch_at(&[], 2_000);
+    assert_eq!(fleet.clock(), 2_000);
+    assert_eq!(fleet.evict_older_than(1_000), 5);
+    assert_eq!(fleet.stream_count(), 0);
+    // The override survives its stream's eviction: re-ingest recreates
+    // stream 7 under the 5-pair window.
+    for i in 0..20 {
+        fleet.push_at(7, 0.05 * f64::from(i), i % 2 == 0, 2_100);
+    }
+    assert_eq!(fleet.stream_len(7), Some(5), "override lost across age eviction");
+    assert_eq!(fleet.stream_config(7).window, 5);
+    // The clock never runs backwards: a stale timestamp is clamped.
+    fleet.push_batch_at(&[(1, 0.5, true)], 50);
+    assert_eq!(fleet.clock(), 2_100);
+}
+
+/// Adaptive worker scaling: trickle batches drain inline (one
+/// participant, no pool dispatch), large batches engage the pool, and
+/// the mixture is bit-identical to a serial twin.
+#[test]
+fn adaptive_scaling_is_invisible_and_skips_the_pool_for_trickles() {
+    use streamauc::fleet::{adaptive_workers, ADAPTIVE_EVENTS_PER_WORKER};
+
+    // The crossover arithmetic the satellite exists for.
+    assert_eq!(adaptive_workers(2, 8), 1, "a 2-event batch must stay serial");
+    assert_eq!(adaptive_workers(ADAPTIVE_EVENTS_PER_WORKER - 1, 8), 1);
+    assert_eq!(adaptive_workers(2 * ADAPTIVE_EVENTS_PER_WORKER, 8), 2);
+    assert_eq!(adaptive_workers(100 * ADAPTIVE_EVENTS_PER_WORKER, 8), 8, "capped at workers");
+    assert_eq!(adaptive_workers(0, 0), 1);
+
+    let config = |workers: usize, adaptive: bool| FleetConfig {
+        shards: 16,
+        workers,
+        adaptive,
+        stream_defaults: StreamConfig::new(80, 0.1),
+        ..FleetConfig::default()
+    };
+    let mut serial = AucFleet::new(config(1, false));
+    let mut adaptive = AucFleet::new(config(4, true));
+    assert!(adaptive.pooled());
+
+    let mut rng = Pcg::seed(0xADA7);
+    let soup: Vec<(u64, f64, bool)> = (0..30_000)
+        .map(|_| {
+            let id = rng.below(40);
+            let pos = rng.chance(0.5);
+            let s = if pos { rng.normal_with(0.35, 0.15) } else { rng.normal_with(0.65, 0.15) };
+            (id, s, pos)
+        })
+        .collect();
+    // Mixed batch sizes straddling the crossover either way.
+    let mut offset = 0;
+    let mut step = 0u64;
+    while offset < soup.len() {
+        let size = match step % 4 {
+            0 => 2,    // trickle: must drain inline
+            1 => 4096, // engages the pool
+            2 => 600,
+            _ => 64,
+        };
+        let end = (offset + size).min(soup.len());
+        serial.push_batch(&soup[offset..end]);
+        adaptive.push_batch(&soup[offset..end]);
+        if size <= 64 {
+            assert_eq!(
+                adaptive.last_batch_workers(),
+                1,
+                "a {size}-event batch must not engage the pool"
+            );
+        }
+        offset = end;
+        step += 1;
+    }
+    assert_eq!(serial.snapshot(), adaptive.snapshot());
+    assert_eq!(serial.aggregate(), adaptive.aggregate());
+    assert_eq!(serial.alarms(), adaptive.alarms());
+    assert_eq!(serial.top_k_worst(5), adaptive.top_k_worst(5));
+    assert_eq!(serial.auc_histogram(8), adaptive.auc_histogram(8));
 }
