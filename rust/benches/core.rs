@@ -1,0 +1,264 @@
+//! Core estimator micro-bench: per-update and per-read cost of the
+//! three single-window estimators, and the cached-vs-full-scan read
+//! comparison behind the incremental-`a2` tentpole.
+//!
+//! `cargo bench --bench core [-- --updates N] [-- --budget-ms B]`
+//!
+//! For every window size `k ∈ {1e3, 1e5}`:
+//!
+//! * `naive` — raw multiset, `O(k)` remove, `O(k log k)` sort per read
+//!   (the from-scratch baseline of §5);
+//! * `exact` — augmented tree, `O(log k)` update, `O(k)` read
+//!   (Brzezinski & Stefanowski);
+//! * `approx(ε)` for `ε ∈ {0.5, 0.1, 0.01}` — the paper's estimator,
+//!   `O((log k)/ε)` update, measured with **both** read paths:
+//!   - `cached_read_ns` — [`Window::auc`]: the `O(1)` read off the
+//!     running doubled-area accumulator (`DESIGN.md`
+//!     §Incremental-reads);
+//!   - `full_scan_read_ns` — `ApproxAuc::auc_full_scan`: the retained
+//!     Algorithm 4 scan over `C`, i.e. what every read cost before the
+//!     accumulator existed. `read_speedup` is their ratio.
+//!
+//! Windows are filled to capacity before timing; updates are then
+//! steady-state churn (every push evicts). Reads and updates are
+//! budget-capped (`--budget-ms`, default 150) so the expensive
+//! baselines cannot stall CI; absolute numbers from CI runners are
+//! noise — the *shape* (cached read flat in `1/ε` and `k`, scan read
+//! growing with `|C|`) is the point.
+//!
+//! Besides the human-readable table, the run writes machine-readable
+//! `BENCH_core.json` at the repository root (asserted present, with
+//! the cached-vs-scan rows, by the CI bench-smoke job).
+
+use std::fmt::Write as _;
+use std::hint::black_box;
+use std::time::Instant;
+
+use streamauc::coordinator::window::Window;
+use streamauc::coordinator::{ApproxAuc, ExactAuc, NaiveAuc};
+use streamauc::stream::Pcg;
+
+const WINDOWS: [usize; 2] = [1_000, 100_000];
+const EPSILONS: [f64; 3] = [0.5, 0.1, 0.01];
+
+struct Row {
+    estimator: &'static str,
+    k: usize,
+    /// `None` for the exact estimators (no accuracy knob).
+    epsilon: Option<f64>,
+    update_ns: f64,
+    /// The estimator's default read path.
+    read_ns: f64,
+    /// Approx only: the retained full-scan read and its slowdown.
+    full_scan_read_ns: Option<f64>,
+    /// Approx only: `|C|` at measurement time (what the scan walks).
+    compressed_len: Option<usize>,
+}
+
+/// ns/op of `op`, executed in blocks of `block` between clock checks
+/// (so sub-10ns ops are not swamped by `Instant::now`), capped by both
+/// the time budget and `max_iters`.
+fn ns_per(budget_ms: u64, max_iters: u64, block: u64, mut op: impl FnMut()) -> f64 {
+    let start = Instant::now();
+    let mut iters = 0u64;
+    while iters < max_iters {
+        for _ in 0..block {
+            op();
+        }
+        iters += block;
+        if start.elapsed().as_millis() >= u128::from(budget_ms) {
+            break;
+        }
+    }
+    start.elapsed().as_nanos() as f64 / iters.max(1) as f64
+}
+
+/// Pre-generated churn trace: scores/labels cycled through the window.
+fn trace(len: usize, seed: u64) -> Vec<(f64, bool)> {
+    let mut rng = Pcg::seed(seed);
+    (0..len).map(|_| (rng.uniform(), rng.chance(0.5))).collect()
+}
+
+/// Fill a window to capacity, then time steady-state updates and the
+/// default read. Returns (update_ns, read_ns).
+fn measure<E: streamauc::coordinator::AucEstimator>(
+    mut win: Window<E>,
+    events: &[(f64, bool)],
+    budget_ms: u64,
+    max_updates: u64,
+    update_block: u64,
+    read_block: u64,
+) -> (Window<E>, f64, f64) {
+    let k = win.capacity();
+    for &(s, l) in &events[..k] {
+        win.push(s, l);
+    }
+    let mut cursor = k;
+    let update_ns = ns_per(budget_ms, max_updates, update_block, || {
+        let (s, l) = events[cursor % events.len()];
+        cursor += 1;
+        win.push(s, l);
+    });
+    let mut acc = 0.0;
+    let read_ns = ns_per(budget_ms, max_updates.max(1 << 20), read_block, || {
+        acc += win.auc();
+    });
+    black_box(acc);
+    (win, update_ns, read_ns)
+}
+
+fn flag(args: &[String], name: &str, default: u64) -> u64 {
+    match args.iter().position(|a| a == name) {
+        Some(i) => args
+            .get(i + 1)
+            .unwrap_or_else(|| panic!("{name} N"))
+            .parse()
+            .unwrap_or_else(|_| panic!("{name} N")),
+        None => default,
+    }
+}
+
+fn json_report(updates: u64, budget_ms: u64, rows: &[Row]) -> String {
+    let mut s = String::new();
+    s.push_str("{\n");
+    let _ = writeln!(s, "  \"bench\": \"core\",");
+    let _ = writeln!(s, "  \"unit\": \"ns_per_op\",");
+    let _ = writeln!(s, "  \"max_updates\": {updates},");
+    let _ = writeln!(s, "  \"budget_ms\": {budget_ms},");
+    s.push_str("  \"rows\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        let eps = match r.epsilon {
+            Some(e) => format!("{e}"),
+            None => "null".to_string(),
+        };
+        let _ = write!(
+            s,
+            "    {{\"estimator\": \"{}\", \"k\": {}, \"epsilon\": {eps}, \
+             \"update_ns\": {:.1}, ",
+            r.estimator, r.k, r.update_ns
+        );
+        match (r.full_scan_read_ns, r.compressed_len) {
+            (Some(scan), Some(clen)) => {
+                let _ = write!(
+                    s,
+                    "\"cached_read_ns\": {:.1}, \"full_scan_read_ns\": {scan:.1}, \
+                     \"read_speedup\": {:.3}, \"compressed_len\": {clen}}}",
+                    r.read_ns,
+                    scan / r.read_ns,
+                );
+            }
+            _ => {
+                let _ = write!(s, "\"read_ns\": {:.1}}}", r.read_ns);
+            }
+        }
+        s.push_str(if i + 1 < rows.len() { ",\n" } else { "\n" });
+    }
+    s.push_str("  ]\n}\n");
+    s
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let updates = flag(&args, "--updates", 40_000);
+    let budget_ms = flag(&args, "--budget-ms", 150);
+
+    println!("== core: per-update / per-read ns (naive | exact | approx) ==");
+    println!("   (budget {budget_ms} ms/op-class, ≤ {updates} timed updates/row)\n");
+    println!(
+        "{:>8}  {:>11}  {:>5}  {:>11}  {:>12}  {:>12}  {:>8}  {:>5}",
+        "k", "estimator", "ε", "update", "read", "scan read", "speedup", "|C|"
+    );
+
+    let mut rows = Vec::new();
+    for &k in &WINDOWS {
+        // Enough events to fill + churn without recycling too tightly.
+        let events = trace(k + 65_536, 0xC0DE ^ k as u64);
+
+        // Naive: O(k) removal per churn update, O(k log k) per read —
+        // small blocks, the budget does the capping.
+        let (_, update_ns, read_ns) = measure(
+            Window::with_estimator(k, NaiveAuc::new()),
+            &events,
+            budget_ms,
+            updates,
+            (50_000 / k as u64).max(1),
+            1,
+        );
+        println!("{k:>8}  {:>11}  {:>5}  {update_ns:>9.0}ns  {read_ns:>10.0}ns", "naive", "-");
+        rows.push(Row {
+            estimator: "naive",
+            k,
+            epsilon: None,
+            update_ns,
+            read_ns,
+            full_scan_read_ns: None,
+            compressed_len: None,
+        });
+
+        let (_, update_ns, read_ns) = measure(
+            Window::with_estimator(k, ExactAuc::new()),
+            &events,
+            budget_ms,
+            updates,
+            256,
+            (200_000 / k as u64).max(1),
+        );
+        println!("{k:>8}  {:>11}  {:>5}  {update_ns:>9.0}ns  {read_ns:>10.0}ns", "exact", "-");
+        rows.push(Row {
+            estimator: "exact",
+            k,
+            epsilon: None,
+            update_ns,
+            read_ns,
+            full_scan_read_ns: None,
+            compressed_len: None,
+        });
+
+        for &eps in &EPSILONS {
+            let (win, update_ns, cached_read_ns) = measure(
+                Window::with_estimator(k, ApproxAuc::new(eps)),
+                &events,
+                budget_ms,
+                updates,
+                256,
+                4_096,
+            );
+            // The retained Algorithm 4 scan on the identical window —
+            // what the cached read replaced.
+            let mut acc = 0.0;
+            let scan_ns = ns_per(budget_ms, updates.max(1 << 20), 512, || {
+                acc += win.estimator().auc_full_scan();
+            });
+            black_box(acc);
+            assert_eq!(
+                win.auc().to_bits(),
+                win.estimator().auc_full_scan().to_bits(),
+                "cached and scan reads diverged (k = {k}, ε = {eps})"
+            );
+            let clen = win.estimator().compressed_len();
+            println!(
+                "{k:>8}  {:>11}  {eps:>5}  {update_ns:>9.0}ns  {cached_read_ns:>10.0}ns  \
+                 {scan_ns:>10.0}ns  {:>7.1}x  {clen:>5}",
+                "approx",
+                scan_ns / cached_read_ns,
+            );
+            rows.push(Row {
+                estimator: "approx",
+                k,
+                epsilon: Some(eps),
+                update_ns,
+                read_ns: cached_read_ns,
+                full_scan_read_ns: Some(scan_ns),
+                compressed_len: Some(clen),
+            });
+        }
+    }
+    println!("\n(speedup = scan read / cached read; both are bit-identical by assert)");
+
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_core.json");
+    let report = json_report(updates, budget_ms, &rows);
+    match std::fs::write(&path, &report) {
+        Ok(()) => println!("\nwrote {}", path.display()),
+        Err(e) => eprintln!("could not write {}: {e}", path.display()),
+    }
+}

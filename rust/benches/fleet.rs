@@ -19,8 +19,22 @@
 //! * `piped ∥` — pooled plus cross-batch pipelining: the next batch is
 //!   bucketed while the previous one drains;
 //! * `monitor` / `mon ∥` — batched serial / pooled with the per-stream
-//!   drift monitor on (adds one `O(|C|)` AUC read per update — the full
-//!   service configuration, and the regime where parallelism pays most).
+//!   drift monitor on (one AUC read per update — the full service
+//!   configuration; since the incremental-`a2` work that read is
+//!   `O(1)`, so monitoring is nearly free).
+//!
+//! Two **incremental-read speedup** experiments ride along
+//! (`DESIGN.md` §Incremental-reads):
+//!
+//! * `monitored_cached` vs `monitored_scan` — the same per-stream
+//!   window + monitor stack fed by the `O(1)` cached read versus the
+//!   retained `O(|C|)` full-scan read (what every monitored event paid
+//!   before the running accumulator); `speedup_monitor_read` is their
+//!   ratio.
+//! * `aggregate()` vs `aggregate_rescan()` — the sketch-backed
+//!   aggregate (merge shard sufficient stats + candidate-bin
+//!   refinement) versus the retained full per-stream rescan, asserted
+//!   bit-identical first; `speedup_aggregate_sketch` is their ratio.
 //!
 //! Read rows then time, on the already-ingested serial and pooled
 //! fleets, calls/sec of `aggregate()`, the query suite
@@ -48,6 +62,8 @@
 use std::fmt::Write as _;
 use std::time::Instant;
 
+use streamauc::coordinator::window::Window;
+use streamauc::coordinator::{ApproxAuc, AucMonitor};
 use streamauc::fleet::{AucFleet, FleetConfig, StreamConfig};
 use streamauc::stream::MultiStream;
 
@@ -66,8 +82,11 @@ struct Row {
     pipelined: f64,
     monitor_serial: f64,
     monitor_pooled: f64,
+    monitored_cached: f64,
+    monitored_scan: f64,
     aggregate_serial: f64,
     aggregate_pooled: f64,
+    aggregate_rescan: f64,
     query_serial: f64,
     query_pooled: f64,
     snapshot_serial: f64,
@@ -105,6 +124,32 @@ fn batched_by(fleet: &mut AucFleet, soup: &[(u64, f64, bool)], chunk: usize) -> 
 
 fn batched(fleet: &mut AucFleet, soup: &[(u64, f64, bool)]) -> f64 {
     batched_by(fleet, soup, BATCH)
+}
+
+/// The monitored per-stream stack without the fleet wrapper: one
+/// window + drift monitor per stream, the monitor fed either by the
+/// `O(1)` cached read or by the retained `O(|C|)` full-scan read —
+/// isolating exactly the read cost that incremental `a2` removed from
+/// every monitored event.
+fn monitored_stack(soup: &[(u64, f64, bool)], full_scan: bool) -> f64 {
+    use std::collections::HashMap;
+    let mut streams: HashMap<u64, (Window<ApproxAuc>, AucMonitor)> = HashMap::new();
+    throughput(soup, |evs| {
+        for &(id, s, l) in evs {
+            let (win, mon) = streams.entry(id).or_insert_with(|| {
+                (
+                    Window::with_estimator(WINDOW, ApproxAuc::new(EPSILON)),
+                    AucMonitor::new(0.001, 0.08, 100, 500),
+                )
+            });
+            win.push(s, l);
+            if win.is_full() {
+                let auc =
+                    if full_scan { win.estimator().auc_full_scan() } else { win.auc() };
+                mon.observe(auc);
+            }
+        }
+    })
 }
 
 /// Calls/sec of a read op: repeat until the clock has something to
@@ -152,12 +197,16 @@ fn json_report(events_per_row: usize, workers: usize, rows: &[Row]) -> String {
             "    {{\"streams\": {}, \"live_streams\": {}, \"one_at_a_time\": {:.1}, \
              \"batched_serial\": {:.1}, \"batched_scoped\": {:.1}, \"batched_pooled\": {:.1}, \
              \"pipelined\": {:.1}, \"monitor_serial\": {:.1}, \"monitor_pooled\": {:.1}, \
+             \"monitored_cached\": {:.1}, \"monitored_scan\": {:.1}, \
              \"aggregate_serial\": {:.1}, \"aggregate_pooled\": {:.1}, \
+             \"aggregate_rescan\": {:.1}, \
              \"query_serial\": {:.1}, \"query_pooled\": {:.1}, \
              \"snapshot_serial\": {:.1}, \"snapshot_pooled\": {:.1}, \
              \"small_batch_pooled\": {:.1}, \"small_batch_adaptive\": {:.1}, \
              \"speedup_scoped\": {:.3}, \"speedup_pooled\": {:.3}, \"speedup_pipelined\": {:.3}, \
-             \"speedup_monitor\": {:.3}, \"speedup_aggregate\": {:.3}, \"speedup_query\": {:.3}, \
+             \"speedup_monitor\": {:.3}, \"speedup_monitor_read\": {:.3}, \
+             \"speedup_aggregate\": {:.3}, \"speedup_aggregate_sketch\": {:.3}, \
+             \"speedup_query\": {:.3}, \
              \"speedup_snapshot\": {:.3}, \"speedup_small_batch\": {:.3}}}",
             r.streams,
             r.live,
@@ -168,8 +217,11 @@ fn json_report(events_per_row: usize, workers: usize, rows: &[Row]) -> String {
             r.pipelined,
             r.monitor_serial,
             r.monitor_pooled,
+            r.monitored_cached,
+            r.monitored_scan,
             r.aggregate_serial,
             r.aggregate_pooled,
+            r.aggregate_rescan,
             r.query_serial,
             r.query_pooled,
             r.snapshot_serial,
@@ -180,7 +232,9 @@ fn json_report(events_per_row: usize, workers: usize, rows: &[Row]) -> String {
             r.batched_pooled / r.batched_serial,
             r.pipelined / r.batched_serial,
             r.monitor_pooled / r.monitor_serial,
+            r.monitored_cached / r.monitored_scan,
             r.aggregate_pooled / r.aggregate_serial,
+            r.aggregate_serial / r.aggregate_rescan,
             r.query_pooled / r.query_serial,
             r.snapshot_pooled / r.snapshot_serial,
             r.small_batch_adaptive / r.small_batch_pooled,
@@ -262,11 +316,21 @@ fn main() {
             pooled.count_below(0.5),
             "pooled count_below diverged"
         );
+        // Sketch-backed aggregate vs the retained per-stream rescan,
+        // proven bit-identical before either is timed.
+        assert_eq!(
+            serial.aggregate(),
+            serial.aggregate_rescan(),
+            "sketch aggregate diverged from rescan"
+        );
         let aggregate_serial = calls_per_sec(|| {
             let _ = serial.aggregate();
         });
         let aggregate_pooled = calls_per_sec(|| {
             let _ = pooled.aggregate();
+        });
+        let aggregate_rescan = calls_per_sec(|| {
+            let _ = serial.aggregate_rescan();
         });
         let query_serial = calls_per_sec(|| {
             let _ = serial.top_k_worst(10);
@@ -305,6 +369,11 @@ fn main() {
         assert_eq!(mon_serial.alarms(), mon_pooled.alarms(), "pooled alarms diverged");
         assert_eq!(mon_serial.snapshot(), mon_pooled.snapshot(), "pooled monitor ingest diverged");
 
+        // Monitored ingestion with the O(1) cached read vs the retained
+        // full-scan read, same per-stream stack either way.
+        let monitored_cached = monitored_stack(&soup, false);
+        let monitored_scan = monitored_stack(&soup, true);
+
         println!(
             "{n_streams:>8}  {one:>11.0}/s  {batched_serial:>10.0}/s  {batched_scoped:>10.0}/s  \
              {batched_pooled:>10.0}/s  {pipelined:>10.0}/s  {:>5.2}x  {monitor_serial:>10.0}/s  \
@@ -321,8 +390,11 @@ fn main() {
             pipelined,
             monitor_serial,
             monitor_pooled,
+            monitored_cached,
+            monitored_scan,
             aggregate_serial,
             aggregate_pooled,
+            aggregate_rescan,
             query_serial,
             query_pooled,
             snapshot_serial,
@@ -335,6 +407,24 @@ fn main() {
     println!(
         "\n(gain = pooled / serial at {workers} workers; live = distinct streams touched)"
     );
+
+    println!("\n== incremental reads: monitored ingest (cached vs scan) and sketch aggregate ==\n");
+    println!(
+        "{:>8}  {:>26}  {:>30}",
+        "streams", "monitor cached/scan (gain)", "aggregate sketch/rescan (gain)"
+    );
+    for r in &rows {
+        println!(
+            "{:>8}  {:>9.0}/{:<9.0} {:>5.2}x  {:>10.0}/{:<10.0} {:>5.2}x",
+            r.streams,
+            r.monitored_cached,
+            r.monitored_scan,
+            r.monitored_cached / r.monitored_scan,
+            r.aggregate_serial,
+            r.aggregate_rescan,
+            r.aggregate_serial / r.aggregate_rescan,
+        );
+    }
 
     println!("\n== read paths (calls/s, serial vs pooled) and adaptive small batches ==\n");
     println!(

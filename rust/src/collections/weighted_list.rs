@@ -283,19 +283,25 @@ impl WeightedList {
         Views { list: self, cur: self.head }
     }
 
-    /// Largest cell with cached `key ≤ s`, plus the prefix `gp` sum of
-    /// the cells before it (the `c_floor` hot scan). Assumes the head
-    /// cell's key is `−∞`.
-    pub fn floor_scan(&self, s: f64) -> (CellId, u64) {
+    /// Largest cell with cached `key ≤ s`, plus the prefix `gp` *and*
+    /// `gn` sums of the cells before it (the `c_floor` hot scan).
+    /// Assumes the head cell's key is `−∞`. The `gn` prefix rides the
+    /// same hops for free; it is what lets the estimator's incremental
+    /// doubled-area accumulator compute its suffix-negative term in
+    /// `O(1)` instead of an extra tree query (approx.rs, DESIGN.md
+    /// §Incremental-reads).
+    pub fn floor_scan(&self, s: f64) -> (CellId, u64, u64) {
         let mut cur = self.head;
         let mut hp = 0u64;
+        let mut hn = 0u64;
         loop {
             let cell = &self.cells[cur as usize];
             let next = cell.next;
             if next == NIL || self.cells[next as usize].key > s {
-                return (CellId(cur), hp);
+                return (CellId(cur), hp, hn);
             }
             hp += cell.gp;
+            hn += cell.gn;
             cur = next;
         }
     }
@@ -514,6 +520,18 @@ mod tests {
         assert!(!l.contains(nid(2)));
         assert_eq!(l.node(b), nid(4));
         assert_eq!(l.len(), 3);
+    }
+
+    #[test]
+    fn floor_scan_accumulates_both_prefixes() {
+        let (mut l, h, _t) = seeded(10, 20);
+        let a = l.insert_after(h, nid(2), 2.0, 1, 0, 4, 6);
+        let b = l.insert_after(a, nid(5), 5.0, 1, 0, 3, 5);
+        // gaps now: h = (4, 6), a = (3, 5), b = (3, 9).
+        assert_eq!(l.floor_scan(1.0), (h, 0, 0));
+        assert_eq!(l.floor_scan(2.0), (a, 4, 6));
+        assert_eq!(l.floor_scan(4.9), (a, 4, 6));
+        assert_eq!(l.floor_scan(99.0), (b, 7, 11));
     }
 
     #[test]

@@ -19,6 +19,18 @@
 //! (Algorithm 5 / Lemma 1) and re-establish Eq. 4 via `Compress`
 //! (Algorithm 6).
 //!
+//! **Incremental read (this crate, beyond the paper).** Algorithm 4
+//! reads the estimate by scanning all of `C` — `O(|C|) = O((log k)/ε)`
+//! per read, which dominates monitored ingestion (one read per update).
+//! We instead maintain the doubled-area accumulator `a2` as a running
+//! `u128` updated delta-wise by every list mutation, so
+//! [`ApproxAuc::auc`] is `O(1)`. All deltas are integer arithmetic over
+//! exactly the terms the scan sums, so the running value is **bit-equal**
+//! to the from-scratch scan (retained as
+//! [`ApproxAuc::doubled_area_scan`]) after every operation — derivation
+//! in `DESIGN.md` §Incremental-reads, property-tested per op in
+//! `rust/tests/differential.rs` and in [`ApproxAuc::check_invariants`].
+//!
 //! Deviations from the paper's pseudo-code (all behaviour-preserving;
 //! rationale in DESIGN.md §Pseudo-code-fixes):
 //!
@@ -45,6 +57,11 @@ pub struct ApproxAuc {
     c: WeightedList,
     /// `α = 1 + ε`.
     alpha: f64,
+    /// Running doubled-area accumulator: at every op boundary equal —
+    /// bit-for-bit — to what the Algorithm 4 scan over `C` would sum
+    /// ([`ApproxAuc::doubled_area_scan`]). Maintained by integer deltas
+    /// at each list mutation; makes [`ApproxAuc::auc`] `O(1)`.
+    a2: u128,
 }
 
 impl ApproxAuc {
@@ -61,7 +78,7 @@ impl ApproxAuc {
         let mut c = WeightedList::new();
         c.push_back(sup.neg_sentinel(), f64::NEG_INFINITY, 0, 0);
         c.push_back(sup.pos_sentinel(), f64::INFINITY, 0, 0);
-        ApproxAuc { sup, c, alpha: 1.0 + epsilon }
+        ApproxAuc { sup, c, alpha: 1.0 + epsilon, a2: 0 }
     }
 
     /// The `ε` this estimator was built with.
@@ -93,22 +110,81 @@ impl ApproxAuc {
         self.sup.exact_auc()
     }
 
+    /// The running doubled-area accumulator behind the `O(1)`
+    /// [`ApproxAuc::auc`] read. Exposed for the bit-equality property
+    /// tests and the bench's cached-vs-scan comparison.
+    #[inline]
+    pub fn doubled_area(&self) -> u128 {
+        self.a2
+    }
+
+    /// The doubled-area accumulator recomputed from scratch by the
+    /// Algorithm 4 scan over `C` — `O(|C|)`. This is the reference the
+    /// running accumulator must equal bit-for-bit after every
+    /// operation (`rust/tests/differential.rs`,
+    /// [`ApproxAuc::check_invariants`]); it is also the read path every
+    /// call to [`ApproxAuc::auc`] used before the accumulator existed,
+    /// retained for the `benches/core.rs` speedup measurement.
+    pub fn doubled_area_scan(&self) -> u128 {
+        let mut hp: u64 = 0;
+        let mut a2: u128 = 0;
+        // Cell-local read: cached (p, n), one slab lookup per cell
+        // (§Perf) — no tree dereferences at all.
+        for cell in self.c.views() {
+            // The C node itself, exact.
+            a2 += u128::from(2 * hp + cell.p) * u128::from(cell.n);
+            hp += cell.p;
+            // The grouped gap behind it, as one pseudo-node.
+            let gp = cell.gp - cell.p;
+            let gn = cell.gn - cell.n;
+            a2 += u128::from(2 * hp + gp) * u128::from(gn);
+            hp += gp;
+        }
+        a2
+    }
+
+    /// The estimate read via the full `O(|C|)` scan instead of the
+    /// cached accumulator. Bit-identical to [`ApproxAuc::auc`]; kept as
+    /// the reference/benchmark read path.
+    pub fn auc_full_scan(&self) -> f64 {
+        finish_auc(self.doubled_area_scan(), self.sup.total_pos(), self.sup.total_neg())
+    }
+
     // ------------------------------------------------------------------
     // C-list helpers
     // ------------------------------------------------------------------
 
-    /// Largest `u ∈ C` with `s(u) ≤ s`, plus `c = hp(u)` accumulated from
-    /// the gap counters of the cells before `u`. Linear in `|C|`, which
-    /// is the budgeted `O((log k)/ε)` (§4.2).
-    fn c_floor(&self, s: Score) -> (CellId, u64) {
+    /// Largest `u ∈ C` with `s(u) ≤ s`, plus the prefix sums `hp(u)` /
+    /// `hn(u)` accumulated from the gap counters of the cells before
+    /// `u`. Linear in `|C|`, which is the budgeted `O((log k)/ε)`
+    /// (§4.2).
+    fn c_floor(&self, s: Score) -> (CellId, u64, u64) {
         // Hot loop: cached keys + single slab lookup per hop (§Perf).
         self.c.floor_scan(s.0)
     }
 
+    /// One cell's contribution to the doubled-area accumulator, given
+    /// `h` positives in the cells before it: the C node itself exactly,
+    /// then the grouped gap behind it as one pseudo-node — the two
+    /// terms the Algorithm 4 scan adds per cell.
+    #[inline]
+    fn cell_a2(&self, cell: CellId, h: u64) -> u128 {
+        let v = self.c.view(cell);
+        let node = u128::from(2 * h + v.p) * u128::from(v.n);
+        let gp = v.gp - v.p;
+        let gn = v.gn - v.n;
+        let gap = u128::from(2 * (h + v.p) + gp) * u128::from(gn);
+        node + gap
+    }
+
     /// `AddNext(v, C, P)` (Algorithm 5): splice the `P`-successor of
     /// `node(v_cell)` into `C` right after `v_cell`, with gap counters
-    /// taken from `P` in `O(1)`. No-op if the successor is already in `C`.
-    fn add_next(&mut self, v_cell: CellId) {
+    /// taken from `P` in `O(1)`. No-op if the successor is already in
+    /// `C`. `h` is `hp(v; C)` — the positives before `v_cell` — needed
+    /// to recompute the two touched cells' `a2` contributions (the gap
+    /// split moves no positives across later cells, so the delta is
+    /// purely local).
+    fn add_next(&mut self, v_cell: CellId, h: u64) {
         let v_node = self.c.node(v_cell);
         let p = self.sup.p_list();
         let v_in_p = p.cell_of(v_node).expect("C nodes are always in P");
@@ -121,13 +197,19 @@ impl ApproxAuc {
         }
         let (gp, gn) = (p.gp(v_in_p), p.gn(v_in_p));
         let (key, wp, wn) = (p.key(w_in_p), p.cp(w_in_p), p.cn(w_in_p));
-        self.c.insert_after(v_cell, w_node, key, wp, wn, gp, gn);
+        let old = self.cell_a2(v_cell, h);
+        let w_cell = self.c.insert_after(v_cell, w_node, key, wp, wn, gp, gn);
+        self.a2 = self.a2 - old
+            + self.cell_a2(v_cell, h)
+            + self.cell_a2(w_cell, h + self.c.gp(v_cell));
     }
 
     /// `Compress(C, α)` alone (Algorithm 6): merge-only pass for
     /// `AddPos`, where Eq. 3 can only break at the floor cell and is
     /// repaired before this runs — a full repair scan would double the
-    /// per-cell work for nothing (§Perf).
+    /// per-cell work for nothing (§Perf). A merge folds `w` into `v`
+    /// without moving positives across later cells, so each one is a
+    /// local `a2` recompute of the pair → merged cell.
     fn compress(&mut self) {
         let Some(mut v) = self.c.head() else { return };
         let mut c_hp = 0u64;
@@ -139,7 +221,9 @@ impl ApproxAuc {
             let merged = c_hp + self.c.gp(v) + self.c.gp(w);
             let bound = self.alpha * (c_hp + self.c.cp(v)) as f64;
             if (merged as f64) <= bound {
+                let old = self.cell_a2(v, c_hp) + self.cell_a2(w, c_hp + self.c.gp(v));
                 self.c.remove(w);
+                self.a2 = self.a2 - old + self.cell_a2(v, c_hp);
             } else {
                 c_hp += self.c.gp(v);
                 v = w;
@@ -157,14 +241,21 @@ impl ApproxAuc {
     /// `AddPos` (Algorithm 7).
     fn add_pos(&mut self, s: Score) {
         let _v = self.sup.add_pos(s);
-        let (u_cell, c_hp) = self.c_floor(s);
+        let (u_cell, c_hp, c_hn) = self.c_floor(s);
+        // The new positive becomes one more predecessor of every
+        // negative in the cells after u: their scan terms grow by
+        // 2·gn each, one suffix adjustment totalling 2·suffix_gn. The
+        // gn prefix rides the floor scan, so this is O(1) extra.
+        let suffix_gn = self.sup.total_neg() - c_hn - self.c.gn(u_cell);
+        let old = self.cell_a2(u_cell, c_hp);
         self.c.add_gp(u_cell, 1);
         if self.c.key(u_cell) == s.0 {
             self.c.add_cp(u_cell, 1);
         }
+        self.a2 = self.a2 - old + self.cell_a2(u_cell, c_hp) + 2 * u128::from(suffix_gn);
         // At most one Eq. 3 violation, at u (Lemma 1 discussion, §4.2).
         if self.eq3_violated(u_cell, c_hp) {
-            self.add_next(u_cell);
+            self.add_next(u_cell, c_hp);
         }
         self.compress();
     }
@@ -178,19 +269,33 @@ impl ApproxAuc {
     /// new cell's counter to `−1`. Splitting first, then decrementing,
     /// performs the identical net transfer without the underflow.
     fn remove_pos(&mut self, s: Score) {
-        let (u_cell, _) = self.c_floor(s);
+        let (u_cell, c_hp, c_hn) = self.c_floor(s);
         if self.c.key(u_cell) == s.0 && self.c.cp(u_cell) == 1 {
             // u is about to stop being positive: pull in its P-successor
             // so the coverage of C is preserved, account the departing
             // label inside [u, w), then drop u from C.
-            self.add_next(u_cell);
+            self.add_next(u_cell, c_hp);
+            // Fused a2 step for {gp(u) −= 1; remove u}: retract prev's
+            // and u's contributions while both are coherent, apply both
+            // mutations, re-add the merged predecessor, and charge the
+            // departed positive against the negatives after u.
+            let suffix_gn = self.sup.total_neg() - c_hn - self.c.gn(u_cell);
+            let prev = self.c.prev(u_cell).expect("floor of a finite score is never the head");
+            let h_prev = c_hp - self.c.gp(prev);
+            let old = self.cell_a2(prev, h_prev) + self.cell_a2(u_cell, c_hp);
             self.c.add_gp(u_cell, -1);
             self.c.remove(u_cell);
+            self.a2 =
+                self.a2 - old + self.cell_a2(prev, h_prev) - 2 * u128::from(suffix_gn);
         } else {
+            let suffix_gn = self.sup.total_neg() - c_hn - self.c.gn(u_cell);
+            let old = self.cell_a2(u_cell, c_hp);
             self.c.add_gp(u_cell, -1);
             if self.c.key(u_cell) == s.0 {
                 self.c.add_cp(u_cell, -1);
             }
+            self.a2 =
+                self.a2 - old + self.cell_a2(u_cell, c_hp) - 2 * u128::from(suffix_gn);
         }
         self.sup.remove_pos(s);
         // Re-establish Eq. 3 along the whole list (two violation shapes
@@ -203,7 +308,7 @@ impl ApproxAuc {
         while let Some(w) = self.c.next(v) {
             let x = self.c.gp(v);
             if self.eq3_violated(v, c_hp) {
-                self.add_next(v);
+                self.add_next(v, c_hp);
             }
             c_hp += x;
             v = w;
@@ -211,24 +316,30 @@ impl ApproxAuc {
         self.compress();
     }
 
-    /// Add-negative update (§4.2): one gap counter in `C`.
+    /// Add-negative update (§4.2): one gap counter in `C`. Negatives
+    /// never shift the positive prefix of later cells, so the `a2`
+    /// delta is purely local to the floor cell.
     fn add_neg(&mut self, s: Score) {
         self.sup.add_neg(s);
-        let (u_cell, _) = self.c_floor(s);
+        let (u_cell, c_hp, _) = self.c_floor(s);
+        let old = self.cell_a2(u_cell, c_hp);
         self.c.add_gn(u_cell, 1);
         if self.c.key(u_cell) == s.0 {
             self.c.add_cn(u_cell, 1);
         }
+        self.a2 = self.a2 - old + self.cell_a2(u_cell, c_hp);
     }
 
     /// Remove-negative update (§4.2).
     fn remove_neg(&mut self, s: Score) {
         self.sup.remove_neg(s);
-        let (u_cell, _) = self.c_floor(s);
+        let (u_cell, c_hp, _) = self.c_floor(s);
+        let old = self.cell_a2(u_cell, c_hp);
         self.c.add_gn(u_cell, -1);
         if self.c.key(u_cell) == s.0 {
             self.c.add_cn(u_cell, -1);
         }
+        self.a2 = self.a2 - old + self.cell_a2(u_cell, c_hp);
     }
 
     /// Validate the §4 invariants on `C` (tests / property harness):
@@ -267,6 +378,13 @@ impl ApproxAuc {
             assert_eq!(self.c.cp(cell), cnt.p, "C cache: stale p");
             assert_eq!(self.c.cn(cell), cnt.n, "C cache: stale n");
         }
+        // The running doubled-area accumulator never drifts from the
+        // from-scratch Algorithm 4 scan — integer bit-equality.
+        assert_eq!(
+            self.a2,
+            self.doubled_area_scan(),
+            "incremental a2 drifted from the full scan"
+        );
         // Eq. 3 for all consecutive pairs; Eq. 4 for all triples.
         let mut hp = 0u64;
         for (i, &v) in cells.iter().enumerate() {
@@ -311,23 +429,12 @@ impl AucEstimator for ApproxAuc {
         }
     }
 
-    /// `ApproxAUC(C)` (Algorithm 4): `O(|C|)` read of the estimate.
+    /// `ApproxAUC(C)` (Algorithm 4), read in `O(1)` from the running
+    /// doubled-area accumulator instead of the paper's `O(|C|)` scan
+    /// (bit-identical — see [`ApproxAuc::doubled_area_scan`]). No cell
+    /// iteration happens on this path.
     fn auc(&self) -> f64 {
-        let mut hp: u64 = 0;
-        let mut a2: u128 = 0; // doubled area accumulator
-        // Cell-local read: cached (p, n), one slab lookup per cell
-        // (§Perf) — no tree dereferences at all.
-        for cell in self.c.views() {
-            // The C node itself, exact.
-            a2 += u128::from(2 * hp + cell.p) * u128::from(cell.n);
-            hp += cell.p;
-            // The grouped gap behind it, as one pseudo-node.
-            let gp = cell.gp - cell.p;
-            let gn = cell.gn - cell.n;
-            a2 += u128::from(2 * hp + gp) * u128::from(gn);
-            hp += gp;
-        }
-        finish_auc(a2, self.sup.total_pos(), self.sup.total_neg())
+        finish_auc(self.a2, self.sup.total_pos(), self.sup.total_neg())
     }
 
     fn len(&self) -> usize {
@@ -481,6 +588,33 @@ mod tests {
                 );
             }
             approx.check_invariants();
+        }
+    }
+
+    #[test]
+    fn running_a2_matches_scan_after_every_op() {
+        // The O(1) read contract at unit scale: the running accumulator
+        // is bit-equal to the retained Algorithm 4 scan after *every*
+        // op, across grids (merge/regroup-heavy) and the continuum.
+        // The integration-scale version lives in tests/differential.rs.
+        for eps in [0.0, 0.01, 0.1, 0.5] {
+            check(0xA2 ^ (eps * 1e3) as u64, 6, |rng| {
+                let grid = if rng.chance(0.5) { Some(4 + rng.below(12)) } else { None };
+                let ops = gen_ops(rng, 300, 60, grid);
+                let mut e = ApproxAuc::new(eps);
+                for (i, op) in ops.iter().enumerate() {
+                    match *op {
+                        Op::Insert { score, pos } => e.insert(score, pos),
+                        Op::Remove { score, pos } => e.remove(score, pos),
+                    }
+                    assert_eq!(
+                        e.doubled_area(),
+                        e.doubled_area_scan(),
+                        "a2 drift at op {i} (ε = {eps})"
+                    );
+                    assert_eq!(e.auc().to_bits(), e.auc_full_scan().to_bits());
+                }
+            });
         }
     }
 

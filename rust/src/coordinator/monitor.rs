@@ -10,6 +10,13 @@
 //! Because the estimate carries the `ε/2` relative guarantee, a margin
 //! `δ` on the estimate corresponds to a true degradation of at least
 //! `δ − ε/2` — the monitor's sensitivity floor is explicit.
+//!
+//! Cost note: the monitor consumes one AUC reading per update. Since
+//! the estimator maintains its estimate incrementally (`DESIGN.md`
+//! §Incremental-reads), that reading is `O(1)` — monitoring no longer
+//! adds an `O(|C|)` scan to every ingested event, so fleets enable it
+//! by default without a throughput cliff (`benches/fleet.rs`
+//! monitored-ingestion rows).
 
 /// Monitor outcome for one observation.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]

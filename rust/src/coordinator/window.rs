@@ -49,7 +49,12 @@ impl<E: AucEstimator> Window<E> {
         }
     }
 
-    /// Current AUC of the windowed estimator.
+    /// Current AUC of the windowed estimator. For [`ApproxAuc`] this is
+    /// `O(1)`: the estimator maintains its doubled-area accumulator
+    /// incrementally, so reading never rescans the compressed list
+    /// (`DESIGN.md` §Incremental-reads) — which is what lets the fleet
+    /// feed per-event drift monitors and shard sketches from this value
+    /// at no asymptotic cost.
     pub fn auc(&self) -> f64 {
         self.est.auc()
     }
@@ -116,7 +121,8 @@ impl SlidingAuc {
         self.inner.push(score, pos)
     }
 
-    /// Current approximate AUC (`|ãuc − auc| ≤ ε·auc/2`).
+    /// Current approximate AUC (`|ãuc − auc| ≤ ε·auc/2`). `O(1)` — the
+    /// estimate is maintained incrementally, not recomputed per read.
     pub fn auc(&self) -> f64 {
         self.inner.auc()
     }

@@ -21,7 +21,11 @@
 //! Since PR 4 every fleet operation — ingestion drains *and* the read
 //! paths (aggregate, snapshot prefetch, queries, eviction) — routes
 //! through this one dispatcher, so `FleetConfig::pool` governs them
-//! uniformly and reads stop paying a thread spawn per call.
+//! uniformly and reads stop paying a thread spawn per call. The
+//! sketch-backed reads (PR 5, `DESIGN.md` §Incremental-reads) are the
+//! cheapest jobs it runs: an `O(bins)` sketch copy per shard, plus —
+//! for quantiles / top-k / threshold counts — one masked
+//! candidate-bin refinement pass over cached per-stream stats.
 //!
 //! Every parallel path uses **work stealing**, not chunking: workers
 //! claim the next item from a shared atomic cursor until the queue is

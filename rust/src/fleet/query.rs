@@ -12,11 +12,22 @@
 //! order, so results are **bit-identical under every execution
 //! strategy** (adversarially tested in `rust/tests/executor.rs`).
 //!
+//! Since the shards maintain running sketches (`fleet/shard.rs`
+//! `ShardSketch`), the queries no longer rescan streams:
+//! `count_below` reads whole bins from the merged sketch and refines
+//! only the bin containing the threshold; `auc_histogram` is a pure
+//! sketch merge whenever the requested bin count divides
+//! `SKETCH_BINS` (a cached-stat rebin otherwise); `top_k_worst` cuts
+//! the candidate set to the smallest bin prefix holding `k` live
+//! streams before ranking. Exactness survives because the bin
+//! partition is monotone in AUC with *exact* f64 boundaries
+//! (`auc · 64` never rounds) — see `DESIGN.md` §Incremental-reads.
+//!
 //! All queries synchronize transparently with an in-flight pipelined
 //! batch before reading, like every other read path.
 
 use super::pool::{FleetCore, ShardWork};
-use super::shard::worst_first;
+use super::shard::{worst_first, SKETCH_BINS};
 use super::snapshot::StreamSnapshot;
 use super::AucFleet;
 
@@ -62,33 +73,41 @@ impl AucHistogram {
     }
 }
 
-/// Per-shard top-k candidates for [`AucFleet::top_k_worst`]. Any
-/// global top-k member is necessarily in its own shard's top-k, so
+/// Per-shard top-k candidates for [`AucFleet::top_k_worst`], cut to
+/// the sketch-derived candidate bins. Any global top-k member is
+/// necessarily in its own shard's top-k of the candidates, so
 /// per-shard truncation loses nothing.
 struct TopKWork {
     k: usize,
+    /// Candidate sketch bins (`MergedSketch::worst_prefix_mask`).
+    mask: u64,
 }
 
 impl ShardWork for TopKWork {
     type Output = Vec<StreamSnapshot>;
     fn visit(&self, s: usize, core: &FleetCore) -> Self::Output {
-        core.lock_shard(s).top_k_worst(self.k)
+        core.lock_shard(s).top_k_worst(self.k, self.mask)
     }
 }
 
-/// Per-shard threshold counts for [`AucFleet::count_below`].
-struct CountBelowWork {
+/// Boundary-bin refinement for [`AucFleet::count_below`]: bins fully
+/// below the threshold are counted from the merged sketch alone; only
+/// the bin containing the threshold compares actual values.
+struct CountBelowBinWork {
+    bin: u8,
     threshold: f64,
 }
 
-impl ShardWork for CountBelowWork {
+impl ShardWork for CountBelowBinWork {
     type Output = usize;
     fn visit(&self, s: usize, core: &FleetCore) -> usize {
-        core.lock_shard(s).count_below(self.threshold)
+        core.lock_shard(s).count_below_in_bin(self.bin, self.threshold)
     }
 }
 
-/// Per-shard histogram partials for [`AucFleet::auc_histogram`].
+/// Per-shard histogram partials for [`AucFleet::auc_histogram`] —
+/// the cached-stat rebin fallback for bin counts that do not divide
+/// `SKETCH_BINS`.
 struct HistogramWork {
     bins: usize,
 }
@@ -125,18 +144,25 @@ impl AucFleet {
     /// view — sorted worst first (ties broken by stream id; the shared
     /// `worst_first` order, which is also what makes the per-shard
     /// truncation in `Shard::top_k_worst` lossless). Streams with an
-    /// empty window carry no estimate and are not ranked. Runs
-    /// shard-parallel on the executor; per-shard candidates merge in
-    /// shard order and re-sort on a total order, so the result is
-    /// identical under every strategy.
+    /// empty window carry no estimate and are not ranked.
+    ///
+    /// Two-phase: the merged sketch yields the smallest bin prefix
+    /// holding `k` live streams, then only those candidate bins are
+    /// ranked and snapshotted shard-parallel (equal estimates share a
+    /// bin, so id tie-breaks never straddle the cut). Per-shard
+    /// candidates merge in shard order and re-sort on a total order,
+    /// so the result is identical under every strategy.
     pub fn top_k_worst(&self, k: usize) -> Vec<StreamSnapshot> {
         if k == 0 {
             return Vec::new();
         }
-        self.wait_inflight();
+        let mask = self.merged_sketch().worst_prefix_mask(k);
+        if mask == 0 {
+            return Vec::new();
+        }
         let mut all: Vec<StreamSnapshot> = self
             .executor
-            .map_shards(&self.core, TopKWork { k })
+            .map_shards(&self.core, TopKWork { k, mask })
             .into_iter()
             .flatten()
             .collect();
@@ -147,20 +173,59 @@ impl AucFleet {
 
     /// Number of live streams whose windowed AUC is strictly below
     /// `threshold` — the SLO accounting query.
+    ///
+    /// Sketch-backed: every bin strictly below the threshold's bin is
+    /// counted from the merged histogram; only the boundary bin
+    /// compares actual cached estimates. Exact for any threshold —
+    /// `⌊64·t⌋` and the bin partition use exact f64 products, so a
+    /// value `v < t` can never sit in a bin above the boundary bin,
+    /// nor `v ≥ t` below it.
     pub fn count_below(&self, threshold: f64) -> usize {
-        self.wait_inflight();
-        self.executor
-            .map_shards(&self.core, CountBelowWork { threshold })
+        let sketch = self.merged_sketch();
+        if sketch.live == 0 {
+            return 0;
+        }
+        // NaN thresholds fall out naturally: the cast lands on bin 0
+        // and the strict comparison below rejects everything.
+        let boundary = ((threshold * SKETCH_BINS as f64) as usize).min(SKETCH_BINS - 1);
+        let whole_bins = sketch.count_before(boundary) as usize;
+        if sketch.bins[boundary] == 0 {
+            // Empty boundary bin: the refinement is provably 0, skip
+            // the per-shard dispatch entirely (the common case for a
+            // round SLO threshold on a healthy fleet).
+            return whole_bins;
+        }
+        let refined: usize = self
+            .executor
+            .map_shards(&self.core, CountBelowBinWork { bin: boundary as u8, threshold })
             .into_iter()
-            .sum()
+            .sum();
+        whole_bins + refined
     }
 
     /// Histogram of the per-stream windowed AUCs over `[0, 1]` in
     /// `bins` equal-width buckets (at least 1; AUC 1.0 lands in the
-    /// last). Per-shard partials are summed bin-wise, so the result is
+    /// last).
+    ///
+    /// When `bins` divides the sketch resolution (1, 2, 4, …, 64 —
+    /// all powers of two, so both partitions use exact products and
+    /// group-summing sketch bins is bit-identical to direct binning)
+    /// the answer is a pure `O(shards·bins)` sketch merge with no
+    /// stream visit at all. Other bin counts fall back to a
+    /// cached-stat rebin (`O(streams)`, no estimator work). Either
+    /// way, partials are summed bin-wise, so the result is
     /// strategy-independent.
     pub fn auc_histogram(&self, bins: usize) -> AucHistogram {
         let bins = bins.max(1);
+        if bins <= SKETCH_BINS && SKETCH_BINS % bins == 0 {
+            let sketch = self.merged_sketch();
+            let group = SKETCH_BINS / bins;
+            let mut counts = vec![0usize; bins];
+            for (b, &c) in sketch.bins.iter().enumerate() {
+                counts[b / group] += c as usize;
+            }
+            return AucHistogram { counts, live_streams: sketch.live };
+        }
         self.wait_inflight();
         let mut counts = vec![0usize; bins];
         let mut live_streams = 0usize;

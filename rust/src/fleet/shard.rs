@@ -26,6 +26,19 @@
 //! query primitives behind `fleet/query.rs`. Each returns plain owned
 //! data so per-shard results can be reassembled in shard-index order
 //! without further locking (`rust/DESIGN.md` §Jobs).
+//!
+//! **Running sketch.** Each shard additionally maintains a
+//! [`ShardSketch`] — per-bin live-stream counts over a fixed
+//! [`SKETCH_BINS`]-bin AUC histogram, the live/alarmed stream counts,
+//! and a fixed-point sum of the live AUCs — updated at drain time as
+//! each stream's estimate moves (old contribution retracted, new one
+//! recorded; both `O(1)` because the per-stream AUC read is the
+//! estimator's cached accumulator). Fleet-wide `aggregate()`,
+//! `count_below()` and `auc_histogram()` then answer from
+//! `O(shards·bins)` sketch merges with no per-stream rescan, and
+//! `top_k_worst` / quantile refinement scan only candidate bins — see
+//! `rust/DESIGN.md` §Incremental-reads for the invalidation rules
+//! (refresh on every ingested event; retract on evict and reset).
 
 use std::collections::HashMap;
 
@@ -35,6 +48,34 @@ use crate::coordinator::{ApproxAuc, AucMonitor, MonitorEvent};
 use super::config::StreamConfig;
 use super::snapshot::{FleetAlarm, StreamSnapshot};
 
+/// Bins of the shard-maintained AUC sketch. Exactly 64 so a set of
+/// candidate bins is a `u64` mask, and a power of two so `auc · 64` is
+/// an *exact* f64 product — which is what makes the bin partition
+/// provably consistent with the `total_cmp` value order (every
+/// refinement argument in `fleet/query.rs` leans on this).
+pub(super) const SKETCH_BINS: usize = 64;
+
+/// Fixed-point scale (2⁵²) for the sketch's running AUC sum. Integer
+/// add/sub is exactly reversible, so the running mean survives any
+/// interleaving of inserts, evictions and resets bit-identically to a
+/// from-scratch rebuild — an incrementally maintained `f64` sum would
+/// drift. Quantization error per stream is ≤ 2⁻⁵³ relative.
+pub(super) const AUC_QUANT: f64 = (1u64 << 52) as f64;
+
+/// Quantize one AUC estimate onto the fixed-point grid.
+#[inline]
+pub(super) fn quantize_auc(auc: f64) -> i64 {
+    (auc * AUC_QUANT).round() as i64
+}
+
+/// Sketch bin of one AUC estimate: `⌊auc · 64⌋`, clamped so 1.0 lands
+/// in the last bin. Monotone in `auc` (the product is exact — see
+/// [`SKETCH_BINS`]).
+#[inline]
+pub(super) fn sketch_bin(auc: f64) -> u8 {
+    ((auc * SKETCH_BINS as f64) as usize).min(SKETCH_BINS - 1) as u8
+}
+
 /// The "worst stream first" total order on `(windowed AUC, stream id)`
 /// keys: ascending AUC, ties broken by id. Shared by
 /// [`Shard::top_k_worst`] and the global merge in `fleet/query.rs` —
@@ -43,6 +84,91 @@ use super::snapshot::{FleetAlarm, StreamSnapshot};
 /// exact order, so neither site may diverge from it.
 pub(super) fn worst_first(a: (f64, u64), b: (f64, u64)) -> std::cmp::Ordering {
     a.0.total_cmp(&b.0).then(a.1.cmp(&b.1))
+}
+
+/// One stream's contribution as currently recorded in the owning
+/// shard's [`ShardSketch`]. Kept on the stream so the drain can
+/// retract exactly what it recorded (`Shard::refresh_stat`); also the
+/// cache the candidate-bin refinement scans read (`bin`, `auc`) —
+/// `auc` is bit-equal to `win.auc()` by construction.
+#[derive(Clone, Copy, Debug, Default)]
+pub(super) struct StreamStat {
+    /// Window non-empty: only live streams enter the distribution.
+    pub(super) live: bool,
+    /// Monitor currently inside an alarmed excursion.
+    pub(super) alarmed: bool,
+    /// [`sketch_bin`] of `auc` (meaningful only when `live`).
+    pub(super) bin: u8,
+    /// [`quantize_auc`] of `auc` (meaningful only when `live`).
+    pub(super) qauc: i64,
+    /// The windowed AUC estimate itself.
+    pub(super) auc: f64,
+}
+
+impl StreamStat {
+    /// The stat of a stream in its current state. `O(1)` — the AUC
+    /// read is the estimator's cached accumulator.
+    fn of(st: &StreamState) -> StreamStat {
+        let auc = st.win.auc();
+        StreamStat {
+            live: !st.win.is_empty(),
+            alarmed: st.monitor.as_ref().map_or(false, AucMonitor::is_alarmed),
+            bin: sketch_bin(auc),
+            qauc: quantize_auc(auc),
+            auc,
+        }
+    }
+}
+
+/// Running sufficient statistics over one shard's streams: per-bin
+/// live counts, live/alarmed totals and the fixed-point AUC sum.
+/// Maintained by [`Shard::refresh_stat`] (record/retract pairs), read
+/// by the fleet's sketch-backed aggregate and query paths. All fields
+/// are exactly reversible integers, so the running value equals a
+/// from-scratch rebuild bit-for-bit ([`Shard::verify_sketch`]).
+#[derive(Clone, Debug, PartialEq)]
+pub(super) struct ShardSketch {
+    /// Live streams per [`sketch_bin`].
+    pub(super) bins: [u32; SKETCH_BINS],
+    /// Streams with a non-empty window.
+    pub(super) live: usize,
+    /// Streams inside an alarmed excursion.
+    pub(super) alarmed: usize,
+    /// Σ [`quantize_auc`] over live streams (`i128`: fleet-scale sums
+    /// of 2⁵²-scaled values overflow `i64`).
+    pub(super) qauc_sum: i128,
+}
+
+impl Default for ShardSketch {
+    fn default() -> Self {
+        ShardSketch { bins: [0; SKETCH_BINS], live: 0, alarmed: 0, qauc_sum: 0 }
+    }
+}
+
+impl ShardSketch {
+    /// Add one stream's contribution.
+    fn record(&mut self, s: StreamStat) {
+        if s.live {
+            self.bins[s.bin as usize] += 1;
+            self.live += 1;
+            self.qauc_sum += i128::from(s.qauc);
+        }
+        if s.alarmed {
+            self.alarmed += 1;
+        }
+    }
+
+    /// Remove a previously recorded contribution (exact inverse).
+    fn retract(&mut self, s: StreamStat) {
+        if s.live {
+            self.bins[s.bin as usize] -= 1;
+            self.live -= 1;
+            self.qauc_sum -= i128::from(s.qauc);
+        }
+        if s.alarmed {
+            self.alarmed -= 1;
+        }
+    }
 }
 
 /// One stream's state: sliding estimator window plus optional drift
@@ -68,6 +194,10 @@ pub(super) struct StreamState {
     /// [`Shard::evict_older_than`]. `0` until the fleet is ever fed a
     /// timestamp, in which case only tick-based eviction is meaningful.
     pub(super) last_seen_at: u64,
+    /// Contribution currently recorded in the owning shard's sketch.
+    /// A fresh stream's default stat is inert (`live = false`,
+    /// `alarmed = false`), i.e. "nothing recorded".
+    pub(super) stat: StreamStat,
 }
 
 impl StreamState {
@@ -80,6 +210,7 @@ impl StreamState {
             alarms: 0,
             last_seen: 0,
             last_seen_at: 0,
+            stat: StreamStat::default(),
         }
     }
 
@@ -108,6 +239,8 @@ pub(super) struct Shard {
     index: HashMap<u64, u32>,
     /// Shard-local alarm log, merged into the fleet log in shard order.
     alarms: Vec<FleetAlarm>,
+    /// Running sufficient stats over the slab (see module docs).
+    sketch: ShardSketch,
 }
 
 impl Shard {
@@ -157,11 +290,26 @@ impl Shard {
                 let mut st = StreamState::new(id, cfg);
                 st.last_seen = now;
                 st.last_seen_at = at;
+                // Sketch invalidation: the old state's contribution
+                // goes; the fresh state's default stat is inert (empty
+                // window, no alarm), so nothing is recorded until the
+                // stream's next event refreshes it.
+                self.sketch.retract(self.streams[slot as usize].stat);
                 self.streams[slot as usize] = st;
                 true
             }
             None => false,
         }
+    }
+
+    /// Re-point one stream's sketch contribution at its current state:
+    /// retract what was recorded, record the fresh stat. `O(1)`.
+    fn refresh_stat(&mut self, slot: usize) {
+        let st = &mut self.streams[slot];
+        let fresh = StreamStat::of(st);
+        let old = std::mem::replace(&mut st.stat, fresh);
+        self.sketch.retract(old);
+        self.sketch.record(fresh);
     }
 
     /// Ingest one event into a resolved slot: window update plus monitor
@@ -177,6 +325,8 @@ impl Shard {
         st.last_seen_at = at;
         if st.win.is_full() {
             if let Some(m) = st.monitor.as_mut() {
+                // O(1): the window's cached accumulator — monitoring no
+                // longer pays a compressed-list scan per event.
                 let auc = st.win.auc();
                 if m.observe(auc) == MonitorEvent::Alarm {
                     st.alarms += 1;
@@ -189,6 +339,10 @@ impl Shard {
                 }
             }
         }
+        // Per event, not per batch: `Window::push` panics before
+        // mutating, so even a mid-bucket panic leaves the sketch
+        // coherent with exactly the events that landed.
+        self.refresh_stat(slot);
     }
 
     /// Ingest one batch bucket in arrival order, resolving the
@@ -239,6 +393,7 @@ impl Shard {
         while slot < self.streams.len() {
             if dead(&self.streams[slot]) {
                 let gone = self.streams.swap_remove(slot);
+                self.sketch.retract(gone.stat);
                 self.index.remove(&gone.id);
                 if let Some(moved) = self.streams.get(slot) {
                     self.index.insert(moved.id, slot as u32);
@@ -275,7 +430,11 @@ impl Shard {
 
     /// Aggregate partial: the windowed AUC of every live (non-empty)
     /// stream in slab order, the currently-alarmed count, and the
-    /// total stream count.
+    /// total stream count. This is the **rescan reference** behind
+    /// `AucFleet::aggregate_rescan` — it deliberately reads each
+    /// stream's estimator directly (not the cached stats), so tests
+    /// comparing it against the sketch-backed path prove the running
+    /// sketch never drifts.
     pub(super) fn aggregate_partial(&self) -> (Vec<f64>, usize, usize) {
         let mut aucs = Vec::with_capacity(self.streams.len());
         let mut alarmed = 0usize;
@@ -290,47 +449,96 @@ impl Shard {
         (aucs, alarmed, self.streams.len())
     }
 
+    /// The running sufficient stats over this shard's streams.
+    pub(super) fn sketch(&self) -> &ShardSketch {
+        &self.sketch
+    }
+
     /// This shard's `k` worst live streams by [`worst_first`] order,
-    /// snapshotted. Streams with an empty window carry no estimate and
-    /// are not ranked. Ranks lightweight `(auc, id, slot)` triples and
-    /// snapshots only the `k` winners — the full-snapshot
-    /// materialization is the expensive part on large shards.
-    pub(super) fn top_k_worst(&self, k: usize) -> Vec<StreamSnapshot> {
+    /// snapshotted — considering only streams whose sketch bin is in
+    /// `mask` (the fleet computes the smallest bin prefix holding ≥ k
+    /// live streams from the merged sketches, so everything outside
+    /// the mask is provably not in the global top-k; pass `!0` to rank
+    /// the whole shard). Ranks lightweight `(auc, id, slot)` triples
+    /// off the cached stats and snapshots only the `k` winners.
+    pub(super) fn top_k_worst(&self, k: usize, mask: u64) -> Vec<StreamSnapshot> {
         let mut ranked: Vec<(f64, u64, usize)> = self
             .streams
             .iter()
             .enumerate()
-            .filter(|(_, st)| !st.win.is_empty())
-            .map(|(slot, st)| (st.win.auc(), st.id, slot))
+            .filter(|(_, st)| st.stat.live && mask & (1u64 << st.stat.bin) != 0)
+            .map(|(slot, st)| (st.stat.auc, st.id, slot))
             .collect();
         ranked.sort_by(|a, b| worst_first((a.0, a.1), (b.0, b.1)));
         ranked.truncate(k);
         ranked.into_iter().map(|(_, _, slot)| self.streams[slot].snapshot()).collect()
     }
 
-    /// Live streams whose windowed AUC is strictly below `threshold`.
-    pub(super) fn count_below(&self, threshold: f64) -> usize {
+    /// Live streams in sketch bin `bin` with AUC strictly below `t` —
+    /// the boundary-bin refinement of the sketch-backed `count_below`
+    /// (bins fully below the threshold are counted from the sketch
+    /// alone; only the bin containing the threshold needs values).
+    pub(super) fn count_below_in_bin(&self, bin: u8, t: f64) -> usize {
         self.streams
             .iter()
-            .filter(|st| !st.win.is_empty() && st.win.auc() < threshold)
+            .filter(|st| st.stat.live && st.stat.bin == bin && st.stat.auc < t)
             .count()
+    }
+
+    /// The live streams whose sketch bin is in `mask`, as
+    /// `(bin, auc)` pairs in slab order — the quantile/min/max
+    /// refinement partial behind the sketch-backed `aggregate()`.
+    pub(super) fn bin_values(&self, mask: u64) -> Vec<(u8, f64)> {
+        self.streams
+            .iter()
+            .filter(|st| st.stat.live && mask & (1u64 << st.stat.bin) != 0)
+            .map(|st| (st.stat.bin, st.stat.auc))
+            .collect()
     }
 
     /// Histogram partial over `[0, 1]` split into `bins` equal-width
     /// buckets (AUC 1.0 lands in the last). Returns the per-bin counts
-    /// and the number of live streams counted.
+    /// and the number of live streams counted. This is the fallback
+    /// for bin counts that do not divide [`SKETCH_BINS`] (divisor
+    /// counts are answered from the sketch with no stream scan); it
+    /// reads the cached per-stream stats, so it is `O(streams)` with
+    /// no estimator work.
     pub(super) fn histogram(&self, bins: usize) -> (Vec<usize>, usize) {
         let mut counts = vec![0usize; bins];
         let mut live = 0usize;
         for st in &self.streams {
-            if st.win.is_empty() {
+            if !st.stat.live {
                 continue;
             }
-            let bin = ((st.win.auc() * bins as f64) as usize).min(bins - 1);
+            let bin = ((st.stat.auc * bins as f64) as usize).min(bins - 1);
             counts[bin] += 1;
             live += 1;
         }
         (counts, live)
+    }
+
+    /// Test support: rebuild the sketch from scratch and assert the
+    /// running one matches bit-for-bit, and that every cached stat
+    /// matches its stream's actual state. `O(streams)`.
+    pub(super) fn verify_sketch(&self) {
+        let mut rebuilt = ShardSketch::default();
+        for st in &self.streams {
+            let fresh = StreamStat::of(st);
+            assert_eq!(st.stat.live, fresh.live, "stale live flag on stream {}", st.id);
+            assert_eq!(st.stat.alarmed, fresh.alarmed, "stale alarm flag on stream {}", st.id);
+            if st.stat.live {
+                assert_eq!(
+                    st.stat.auc.to_bits(),
+                    fresh.auc.to_bits(),
+                    "stale cached AUC on stream {}",
+                    st.id
+                );
+                assert_eq!(st.stat.bin, fresh.bin, "stale bin on stream {}", st.id);
+                assert_eq!(st.stat.qauc, fresh.qauc, "stale qauc on stream {}", st.id);
+            }
+            rebuilt.record(fresh);
+        }
+        assert_eq!(self.sketch, rebuilt, "running shard sketch drifted from rebuild");
     }
 }
 

@@ -101,15 +101,57 @@ pub struct FleetAggregate {
     pub p90_auc: f64,
     /// Largest per-stream AUC.
     pub max_auc: f64,
-    /// Mean per-stream AUC.
+    /// Mean per-stream AUC, computed from a 2⁵²-fixed-point sum of the
+    /// estimates (≤ 2⁻⁵³ relative quantization per stream). The integer
+    /// sum is what lets the shard sketches maintain the mean
+    /// incrementally yet bit-identically to a from-scratch rescan.
     pub mean_auc: f64,
 }
 
 impl FleetAggregate {
-    /// Build the aggregate from the collected per-stream AUCs. Sorting
-    /// and summation run over the id-independent sorted order, so the
-    /// result does not depend on collection order beyond the multiset
-    /// of values — a prerequisite for serial/parallel bit-identity.
+    /// The all-0.5 convention aggregate of a fleet with no live stream.
+    pub(super) fn no_live(
+        streams: usize,
+        alarmed_streams: usize,
+        total_events: u64,
+    ) -> FleetAggregate {
+        FleetAggregate {
+            streams,
+            live_streams: 0,
+            alarmed_streams,
+            total_events,
+            min_auc: 0.5,
+            p10_auc: 0.5,
+            median_auc: 0.5,
+            p90_auc: 0.5,
+            max_auc: 0.5,
+            mean_auc: 0.5,
+        }
+    }
+
+    /// Nearest-rank indices of (min, p10, median, p90, max) over
+    /// `live` sorted values — one formula shared by the sketch-backed
+    /// path (`AucFleet::aggregate`) and the rescan reference, so the
+    /// two select the identical order statistics.
+    pub(super) fn ranks(live: usize) -> [usize; 5] {
+        let q = |frac: f64| ((live - 1) as f64 * frac).round() as usize;
+        [0, q(0.1), q(0.5), q(0.9), live - 1]
+    }
+
+    /// Mean of `live` AUCs from their fixed-point sum. One shared
+    /// formula (again: sketch path ≡ rescan reference bit-for-bit);
+    /// integer summation makes the value independent of summation
+    /// order and of the add/remove history that produced it.
+    pub(super) fn mean_of_quantized(qauc_sum: i128, live: usize) -> f64 {
+        (qauc_sum as f64) / super::shard::AUC_QUANT / live as f64
+    }
+
+    /// Build the aggregate from the collected per-stream AUCs — the
+    /// rescan reference implementation. Sorting and the fixed-point
+    /// summation are order-independent beyond the multiset of values,
+    /// a prerequisite for serial/parallel bit-identity; the mean uses
+    /// the same quantized sum the shard sketches maintain, so
+    /// `AucFleet::aggregate` ≡ `AucFleet::aggregate_rescan` exactly.
     pub(super) fn compute(
         mut aucs: Vec<f64>,
         streams: usize,
@@ -118,33 +160,23 @@ impl FleetAggregate {
     ) -> FleetAggregate {
         let live_streams = aucs.len();
         if live_streams == 0 {
-            return FleetAggregate {
-                streams,
-                live_streams,
-                alarmed_streams,
-                total_events,
-                min_auc: 0.5,
-                p10_auc: 0.5,
-                median_auc: 0.5,
-                p90_auc: 0.5,
-                max_auc: 0.5,
-                mean_auc: 0.5,
-            };
+            return FleetAggregate::no_live(streams, alarmed_streams, total_events);
         }
         aucs.sort_unstable_by(f64::total_cmp);
-        // Nearest-rank quantile over the sorted estimates.
-        let q = |frac: f64| aucs[((live_streams - 1) as f64 * frac).round() as usize];
+        let [r_min, r10, r50, r90, r_max] = FleetAggregate::ranks(live_streams);
+        let qauc_sum: i128 =
+            aucs.iter().map(|&a| i128::from(super::shard::quantize_auc(a))).sum();
         FleetAggregate {
             streams,
             live_streams,
             alarmed_streams,
             total_events,
-            min_auc: aucs[0],
-            p10_auc: q(0.1),
-            median_auc: q(0.5),
-            p90_auc: q(0.9),
-            max_auc: aucs[live_streams - 1],
-            mean_auc: aucs.iter().sum::<f64>() / live_streams as f64,
+            min_auc: aucs[r_min],
+            p10_auc: aucs[r10],
+            median_auc: aucs[r50],
+            p90_auc: aucs[r90],
+            max_auc: aucs[r_max],
+            mean_auc: FleetAggregate::mean_of_quantized(qauc_sum, live_streams),
         }
     }
 }

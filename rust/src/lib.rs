@@ -8,13 +8,18 @@
 //! update, versus `O(k)` for exact recomputation. The estimator groups
 //! neighbouring score nodes into a `(1+ε)`-*compressed* weighted linked
 //! list (paper Eqs. 3–4) built on top of an augmented red-black tree.
+//! Beyond the paper, *reading* the estimate is `O(1)`: the doubled-area
+//! accumulator is maintained incrementally in integer arithmetic,
+//! bit-identical to the paper's `O(|C|)` scan (`rust/DESIGN.md`
+//! §Incremental-reads).
 //!
 //! ## Layer map
 //!
 //! * [`collections`] — the supporting data structures of paper §3:
 //!   augmented red-black tree (`T`, `TP`) and weighted linked lists
 //!   (`P`, `C`).
-//! * [`coordinator`] — the estimators of paper §4 (approximate, exact
+//! * [`coordinator`] — the estimators of paper §4 (approximate — with
+//!   the incremental `O(1)` read, `coordinator/approx.rs` — exact
 //!   baseline, naive oracle, flipped variant, §7 weighted extension), the
 //!   sliding-window driver, drift monitor and metrics.
 //! * [`fleet`] — the multi-stream service layer: an [`AucFleet`] of
@@ -28,10 +33,14 @@
 //!   optionally scaling active workers to the batch size) with results
 //!   bit-identical to serial under every strategy — the contract
 //!   `rust/tests/executor.rs` attacks with adversarial schedules.
-//!   `fleet/query.rs` answers the monitoring questions shard-parallel
-//!   (worst-k triage, threshold counts, AUC histograms, predicate
-//!   scans); plus fleet-wide drift alarms, quantile aggregates,
-//!   streaming snapshots, and idle- and age-based stream eviction.
+//!   Each shard maintains a running sketch of its streams' estimates
+//!   (`fleet/shard.rs`), so fleet aggregates and the `fleet/query.rs`
+//!   monitoring queries (worst-k triage, threshold counts, AUC
+//!   histograms, predicate scans) answer from `O(shards·bins)` merges
+//!   plus candidate-bin refinement instead of per-stream rescans —
+//!   bit-identical to the retained rescan reference; plus fleet-wide
+//!   drift alarms, streaming snapshots, and idle- and age-based stream
+//!   eviction.
 //! * [`stream`] — deterministic synthetic data sources standing in for the
 //!   paper's UCI datasets (see `DESIGN.md` §Substitutions), the
 //!   multi-stream fleet generator, drift injectors and CSV I/O.

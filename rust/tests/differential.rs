@@ -93,6 +93,39 @@ fn approx_epsilon_zero_is_bit_exact() {
     });
 }
 
+/// The O(1)-read contract: the running doubled-area accumulator equals
+/// the retained from-scratch Algorithm 4 scan — **integer
+/// bit-equality**, not closeness — after *every* operation, across
+/// seeded insert/remove traces in both the duplicate-score grid regime
+/// (merge/regroup-heavy: every `AddNext`/`Compress` shape fires) and
+/// the continuum regime, for every paper ε. This is what makes the
+/// incremental `auc()` indistinguishable from the paper's scan to all
+/// downstream consumers (fleet digests included).
+#[test]
+fn incremental_a2_is_bit_exact_after_every_op() {
+    for (k, &eps) in EPSILONS.iter().enumerate() {
+        check(0xA2A2_0000 ^ k as u64, CASES, |rng| {
+            let grid = if rng.chance(0.5) { Some(3 + rng.below(29)) } else { None };
+            let ops = gen_ops(rng, 250, 60, grid);
+            let mut approx = ApproxAuc::new(eps);
+            for (i, &op) in ops.iter().enumerate() {
+                apply(&mut approx, op);
+                assert_eq!(
+                    approx.doubled_area(),
+                    approx.doubled_area_scan(),
+                    "running a2 drifted from the scan at op {i} (ε = {eps})"
+                );
+                let (cached, scanned) = (approx.auc(), approx.auc_full_scan());
+                assert_eq!(
+                    cached.to_bits(),
+                    scanned.to_bits(),
+                    "cached read {cached} != scan read {scanned} at op {i}"
+                );
+            }
+        });
+    }
+}
+
 #[test]
 fn exact_equals_naive_exactly() {
     check(0xE4C7, CASES, |rng| {

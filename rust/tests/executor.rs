@@ -91,15 +91,65 @@ fn run_schedule(fleet: &mut AucFleet, batches: &[Vec<Event>], steps: &[Step]) ->
     for &step in steps {
         match step {
             Step::Batch(i) => fleet.push_batch_at(&batches[i], (i as u64 + 1) * BATCH_CLOCK),
-            Step::Aggregate => aggregates.push(fleet.aggregate()),
+            Step::Aggregate => {
+                // Sketch ≡ pre-sketch: the running shard sketches must
+                // answer bit-identically to the retained per-stream
+                // rescan at every step of every schedule.
+                let agg = fleet.aggregate();
+                assert_eq!(
+                    agg,
+                    fleet.aggregate_rescan(),
+                    "sketch-backed aggregate drifted from the rescan reference"
+                );
+                aggregates.push(agg);
+            }
             Step::SnapshotIter => iter_snapshots.push(fleet.snapshot_iter().collect()),
-            Step::TopK(k) => top_k.push(fleet.top_k_worst(k)),
-            Step::CountBelow(t) => below.push(fleet.count_below(t)),
-            Step::Histogram(bins) => histograms.push(fleet.auc_histogram(bins)),
+            Step::TopK(k) => {
+                let worst = fleet.top_k_worst(k);
+                // Pre-sketch reference: full sort of the live snapshot
+                // on the same (auc, id) total order.
+                let mut reference: Vec<StreamSnapshot> = fleet
+                    .snapshot()
+                    .streams
+                    .into_iter()
+                    .filter(|s| s.len > 0)
+                    .collect();
+                reference.sort_by(|a, b| a.auc.total_cmp(&b.auc).then(a.stream.cmp(&b.stream)));
+                reference.truncate(k);
+                assert_eq!(worst, reference, "bin-pruned top-k drifted from the full sort");
+                top_k.push(worst);
+            }
+            Step::CountBelow(t) => {
+                let n = fleet.count_below(t);
+                let reference =
+                    fleet.snapshot().streams.iter().filter(|s| s.len > 0 && s.auc < t).count();
+                assert_eq!(n, reference, "sketch count_below({t}) drifted from rescan");
+                below.push(n);
+            }
+            Step::Histogram(bins) => {
+                let h = fleet.auc_histogram(bins);
+                // Pre-sketch reference: direct rebin of the snapshot.
+                let b = bins.max(1);
+                let mut counts = vec![0usize; b];
+                let mut live = 0usize;
+                for s in fleet.snapshot().streams.iter().filter(|s| s.len > 0) {
+                    counts[((s.auc * b as f64) as usize).min(b - 1)] += 1;
+                    live += 1;
+                }
+                assert_eq!(
+                    h,
+                    AucHistogram { counts, live_streams: live },
+                    "sketch histogram({bins}) drifted from rescan"
+                );
+                histograms.push(h);
+            }
             Step::EvictIdle(max_idle) => evicted.push(fleet.evict_idle(max_idle)),
             Step::EvictOlderThan(max_age) => evicted_by_age.push(fleet.evict_older_than(max_age)),
         }
     }
+    // Whatever the schedule did — drains, evictions, resets — every
+    // shard's running sketch must still equal a from-scratch rebuild.
+    fleet.verify_sketches();
     let snap = fleet.snapshot();
     Digest {
         aggregates,
@@ -220,7 +270,15 @@ fn pooled_ingestion_is_bit_identical_to_serial_under_adversarial_schedules() {
                 steps.push(Step::CountBelow(0.4 + rng.uniform() * 0.4));
             }
             if i % 19 == 7 {
-                steps.push(Step::Histogram(4 + rng.below(12) as usize));
+                // Alternate the pure-sketch-merge fast path (divisors
+                // of the 64-bin sketch) with the cached-stat rebin
+                // fallback (arbitrary bin counts).
+                let bins = if rng.chance(0.5) {
+                    [1usize, 2, 4, 8, 16, 32, 64][rng.below(7) as usize]
+                } else {
+                    3 + rng.below(13) as usize
+                };
+                steps.push(Step::Histogram(bins));
             }
             let in_age_window = i >= 2 * n_batches / 3 && i < 5 * n_batches / 6;
             if i % 29 == 17 && !in_age_window {

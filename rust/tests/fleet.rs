@@ -405,3 +405,85 @@ fn adaptive_scaling_is_invisible_and_skips_the_pool_for_trickles() {
     assert_eq!(serial.top_k_worst(5), adaptive.top_k_worst(5));
     assert_eq!(serial.auc_histogram(8), adaptive.auc_histogram(8));
 }
+
+/// Shard-sketch lifecycle: the running sufficient stats behind
+/// `aggregate()` / `count_below()` / `auc_histogram()` must survive
+/// every state transition a fleet performs — ingestion, tick- and
+/// age-based eviction with slab compaction, live-stream reconfigure
+/// (reset), evict-all and re-ingest — staying bit-identical to a
+/// from-scratch rebuild and to the retained rescan reference.
+#[test]
+fn shard_sketches_survive_eviction_reset_and_reingest() {
+    let mut fleet = AucFleet::new(FleetConfig {
+        shards: 8,
+        workers: 2,
+        stream_defaults: StreamConfig::new(50, 0.1),
+        ..FleetConfig::default()
+    });
+    let mut rng = Pcg::seed(0x5CE7);
+    let soup: Vec<(u64, f64, bool)> = (0..20_000)
+        .map(|_| {
+            let id = rng.below(60);
+            let pos = rng.chance(0.5);
+            let s = if pos { rng.normal_with(0.35, 0.15) } else { rng.normal_with(0.65, 0.15) };
+            (id, s, pos)
+        })
+        .collect();
+
+    let check = |fleet: &mut AucFleet, phase: &str| {
+        fleet.verify_sketches();
+        assert_eq!(
+            fleet.aggregate(),
+            fleet.aggregate_rescan(),
+            "sketch aggregate drifted from rescan after {phase}"
+        );
+        let snap = fleet.snapshot();
+        for t in [0.0, 0.25, 0.5, 0.75, 1.0, 1.5] {
+            let reference = snap.streams.iter().filter(|s| s.len > 0 && s.auc < t).count();
+            assert_eq!(
+                fleet.count_below(t),
+                reference,
+                "count_below({t}) drifted after {phase}"
+            );
+        }
+        for bins in [1usize, 7, 16, 64] {
+            let h = fleet.auc_histogram(bins);
+            let mut counts = vec![0usize; bins];
+            for s in snap.streams.iter().filter(|s| s.len > 0) {
+                counts[((s.auc * bins as f64) as usize).min(bins - 1)] += 1;
+            }
+            assert_eq!(h.counts, counts, "histogram({bins}) drifted after {phase}");
+        }
+    };
+
+    for chunk in soup.chunks(1_500) {
+        fleet.push_batch_at(chunk, fleet.clock() + 10);
+    }
+    check(&mut fleet, "ingest");
+
+    // Idle a tail of streams, evict by tick, compact the slabs.
+    let warm: Vec<(u64, f64, bool)> = (0..4_000u64).map(|i| (i % 12, 0.4, i % 2 == 0)).collect();
+    fleet.push_batch(&warm);
+    assert!(fleet.evict_idle(3_000) > 0, "scenario must evict something");
+    check(&mut fleet, "evict_idle");
+
+    // Reconfigure a live stream: reset must retract its contribution.
+    fleet.configure_stream(3, StreamConfig::new(10, 0.0).without_monitor());
+    check(&mut fleet, "configure_stream reset");
+    fleet.push(3, 0.2, true);
+    check(&mut fleet, "post-reset re-ingest");
+
+    // Age-based eviction path: advance the clock while touching only a
+    // few streams, so the untouched live ones go stale and age out.
+    let bump: Vec<(u64, f64, bool)> = (0..4u64).map(|id| (id, 0.5, true)).collect();
+    fleet.push_batch_at(&bump, fleet.clock() + 500);
+    assert!(fleet.evict_older_than(400) > 0, "scenario must age-evict something");
+    check(&mut fleet, "evict_older_than");
+
+    // Evict everything, then start fresh on the same fleet.
+    fleet.evict_idle(0);
+    check(&mut fleet, "evict-all");
+    assert_eq!(fleet.aggregate().live_streams, 0);
+    fleet.push_batch(&soup[..2_000]);
+    check(&mut fleet, "re-ingest after evict-all");
+}
