@@ -23,7 +23,7 @@
 use std::collections::HashSet;
 use std::time::Instant;
 
-use streamauc::fleet::{AucFleet, FleetConfig, MonitorConfig, StreamConfig};
+use streamauc::fleet::{AucFleet, EstimatorKind, FleetConfig, MonitorConfig, StreamConfig};
 use streamauc::stream::{DriftSchedule, MultiStream, StreamProfile};
 
 const STREAMS: u64 = 2_000;
@@ -45,18 +45,26 @@ fn main() {
         .collect();
     let mut gen = MultiStream::with_profiles(profiles, 0xF1EE7).with_mean_burst(8.0);
 
+    let monitor = MonitorConfig { lambda: 0.001, margin: 0.08, patience: 50, warmup: 250 };
+    let defaults = StreamConfig {
+        window: 200,
+        estimator: EstimatorKind::Approx { epsilon: 0.1 },
+        monitor: Some(monitor),
+    };
     let mut fleet = AucFleet::new(FleetConfig {
         shards: 64,
         workers: 4,
         pool: true,
         pipeline: true,
         adaptive: false,
-        stream_defaults: StreamConfig {
-            window: 200,
-            epsilon: 0.1,
-            monitor: Some(MonitorConfig { lambda: 0.001, margin: 0.08, patience: 50, warmup: 250 }),
-        },
+        stream_defaults: defaults,
     });
+    // Mixed fleet: a handful of exactness-critical streams run the
+    // tree-maintained exact estimator; the rest keep the ε-sketch.
+    // Both kinds share shards, pool, monitors and queries unchanged.
+    for id in 0..8 {
+        fleet.configure_stream(id, defaults.with_estimator(EstimatorKind::ExactMaintained));
+    }
 
     let drift_at = per_stream / 2;
     println!("{STREAMS} streams ({DRIFTED} will break at ~their event {drift_at}); {EVENTS} events\n");

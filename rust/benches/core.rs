@@ -10,6 +10,11 @@
 //!   (the from-scratch baseline of §5);
 //! * `exact` — augmented tree, `O(log k)` update, `O(k)` read
 //!   (Brzezinski & Stefanowski);
+//! * `exact_maintained` — the delta-maintained exact estimator:
+//!   `O(log k)` update, `O(1)` read off its running doubled-area
+//!   accumulator, no approximation. Timed with both read paths like
+//!   `approx` (its scan is the full Eq. 1 tree walk), so the JSON rows
+//!   carry the naive / exact-maintained / approx three-way comparison;
 //! * `approx(ε)` for `ε ∈ {0.5, 0.1, 0.01}` — the paper's estimator,
 //!   `O((log k)/ε)` update, measured with **both** read paths:
 //!   - `cached_read_ns` — [`Window::auc`]: the `O(1)` read off the
@@ -35,7 +40,7 @@ use std::hint::black_box;
 use std::time::Instant;
 
 use streamauc::coordinator::window::Window;
-use streamauc::coordinator::{ApproxAuc, ExactAuc, NaiveAuc};
+use streamauc::coordinator::{ApproxAuc, ExactAuc, MaintainedExactAuc, NaiveAuc};
 use streamauc::stream::Pcg;
 
 const WINDOWS: [usize; 2] = [1_000, 100_000];
@@ -212,6 +217,46 @@ fn main() {
             read_ns,
             full_scan_read_ns: None,
             compressed_len: None,
+        });
+
+        // Delta-maintained exact: same tree as `exact`, but the read
+        // comes off the running accumulator — O(1) and bit-identical
+        // to the Eq. 1 scan. `compressed_len` reports its footprint
+        // (distinct-score tree nodes ≈ k in this continuum trace).
+        let (win, update_ns, cached_read_ns) = measure(
+            Window::with_estimator(k, MaintainedExactAuc::new()),
+            &events,
+            budget_ms,
+            updates,
+            256,
+            4_096,
+        );
+        let mut acc = 0.0;
+        let scan_ns = ns_per(budget_ms, updates.max(1 << 20), 64, || {
+            acc += win.estimator().auc_full_scan();
+        });
+        black_box(acc);
+        assert_eq!(
+            win.auc().to_bits(),
+            win.estimator().auc_full_scan().to_bits(),
+            "maintained cached and scan reads diverged (k = {k})"
+        );
+        let nodes = win.estimator().distinct_scores();
+        println!(
+            "{k:>8}  {:>11}  {:>5}  {update_ns:>9.0}ns  {cached_read_ns:>10.0}ns  \
+             {scan_ns:>10.0}ns  {:>7.1}x  {nodes:>5}",
+            "exact-maint",
+            "-",
+            scan_ns / cached_read_ns,
+        );
+        rows.push(Row {
+            estimator: "exact_maintained",
+            k,
+            epsilon: None,
+            update_ns,
+            read_ns: cached_read_ns,
+            full_scan_read_ns: Some(scan_ns),
+            compressed_len: Some(nodes),
         });
 
         for &eps in &EPSILONS {

@@ -36,6 +36,13 @@
 //!   refinement) versus the retained full per-stream rescan, asserted
 //!   bit-identical first; `speedup_aggregate_sketch` is their ratio.
 //!
+//! A **mixed-estimator** ingest pair rides along: the same soup into a
+//! fleet whose every 4th stream is overridden to the tree-maintained
+//! exact estimator (`EstimatorKind::ExactMaintained`) while the rest
+//! keep the ε-sketch — serial vs pooled, asserted bit-identical first
+//! (`mixed_serial` / `mixed_pooled` in the JSON) — so the cost of
+//! mixing exactness-critical streams into a fleet is tracked per PR.
+//!
 //! Read rows then time, on the already-ingested serial and pooled
 //! fleets, calls/sec of `aggregate()`, the query suite
 //! (`top_k_worst(10)` + `count_below(0.5)` + `auc_histogram(16)`) and
@@ -93,6 +100,8 @@ struct Row {
     snapshot_pooled: f64,
     small_batch_pooled: f64,
     small_batch_adaptive: f64,
+    mixed_serial: f64,
+    mixed_pooled: f64,
     live: usize,
 }
 
@@ -203,11 +212,13 @@ fn json_report(events_per_row: usize, workers: usize, rows: &[Row]) -> String {
              \"query_serial\": {:.1}, \"query_pooled\": {:.1}, \
              \"snapshot_serial\": {:.1}, \"snapshot_pooled\": {:.1}, \
              \"small_batch_pooled\": {:.1}, \"small_batch_adaptive\": {:.1}, \
+             \"mixed_serial\": {:.1}, \"mixed_pooled\": {:.1}, \
              \"speedup_scoped\": {:.3}, \"speedup_pooled\": {:.3}, \"speedup_pipelined\": {:.3}, \
              \"speedup_monitor\": {:.3}, \"speedup_monitor_read\": {:.3}, \
              \"speedup_aggregate\": {:.3}, \"speedup_aggregate_sketch\": {:.3}, \
              \"speedup_query\": {:.3}, \
-             \"speedup_snapshot\": {:.3}, \"speedup_small_batch\": {:.3}}}",
+             \"speedup_snapshot\": {:.3}, \"speedup_small_batch\": {:.3}, \
+             \"speedup_mixed\": {:.3}}}",
             r.streams,
             r.live,
             r.one_at_a_time,
@@ -228,6 +239,8 @@ fn json_report(events_per_row: usize, workers: usize, rows: &[Row]) -> String {
             r.snapshot_pooled,
             r.small_batch_pooled,
             r.small_batch_adaptive,
+            r.mixed_serial,
+            r.mixed_pooled,
             r.batched_scoped / r.batched_serial,
             r.batched_pooled / r.batched_serial,
             r.pipelined / r.batched_serial,
@@ -238,6 +251,7 @@ fn json_report(events_per_row: usize, workers: usize, rows: &[Row]) -> String {
             r.query_pooled / r.query_serial,
             r.snapshot_pooled / r.snapshot_serial,
             r.small_batch_adaptive / r.small_batch_pooled,
+            r.mixed_pooled / r.mixed_serial,
         );
         s.push_str(if i + 1 < rows.len() { ",\n" } else { "\n" });
     }
@@ -362,6 +376,21 @@ fn main() {
             "adaptive ingest diverged"
         );
 
+        // ---- mixed-estimator fleet: every 4th stream overridden to
+        // the exact-maintained estimator, the rest on the ε-sketch ----
+        let mixed_fleet = |workers: usize, pool: bool| {
+            let mut fleet = fresh_fleet(false, workers, pool, false, false);
+            for id in (0..n_streams as u64).step_by(4) {
+                fleet.configure_stream(id, StreamConfig::exact(WINDOW).without_monitor());
+            }
+            fleet
+        };
+        let mut mixed_s = mixed_fleet(1, false);
+        let mixed_serial = batched(&mut mixed_s, &soup);
+        let mut mixed_p = mixed_fleet(workers, true);
+        let mixed_pooled = batched(&mut mixed_p, &soup);
+        assert_eq!(mixed_s.snapshot(), mixed_p.snapshot(), "mixed-estimator ingest diverged");
+
         let mut mon_serial = fresh_fleet(true, 1, false, false, false);
         let monitor_serial = batched(&mut mon_serial, &soup);
         let mut mon_pooled = fresh_fleet(true, workers, true, false, false);
@@ -401,6 +430,8 @@ fn main() {
             snapshot_pooled,
             small_batch_pooled,
             small_batch_adaptive,
+            mixed_serial,
+            mixed_pooled,
             live,
         });
     }
@@ -423,6 +454,22 @@ fn main() {
             r.aggregate_serial,
             r.aggregate_rescan,
             r.aggregate_serial / r.aggregate_rescan,
+        );
+    }
+
+    println!("\n== mixed-estimator ingestion (every 4th stream exact-maintained) ==\n");
+    println!(
+        "{:>8}  {:>12}  {:>12}  {:>6}  {:>14}",
+        "streams", "mixed", "mixed ∥", "gain", "vs all-approx"
+    );
+    for r in &rows {
+        println!(
+            "{:>8}  {:>10.0}/s  {:>10.0}/s  {:>5.2}x  {:>13.2}x",
+            r.streams,
+            r.mixed_serial,
+            r.mixed_pooled,
+            r.mixed_pooled / r.mixed_serial,
+            r.mixed_serial / r.batched_serial,
         );
     }
 

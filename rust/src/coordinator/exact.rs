@@ -53,12 +53,20 @@ impl ExactAuc {
                 self.t.remove(v);
             }
         }
-        let d = delta as i128;
-        if pos {
-            self.total_pos = (self.total_pos as i128 + d) as u64;
+        // Checked total maintenance: a silent wrap here would corrupt
+        // every subsequent read, so mismatched insert/remove traffic
+        // must fail loudly at the faulty call.
+        let total = if pos { &mut self.total_pos } else { &mut self.total_neg };
+        let class = if pos { "positive" } else { "negative" };
+        *total = if delta >= 0 {
+            total
+                .checked_add(delta as u64)
+                .unwrap_or_else(|| panic!("exact: {class} total overflow"))
         } else {
-            self.total_neg = (self.total_neg as i128 + d) as u64;
-        }
+            total.checked_sub(delta.unsigned_abs()).unwrap_or_else(|| {
+                panic!("exact: {class} total underflow — removed more {class}s than inserted")
+            })
+        };
     }
 }
 
@@ -72,14 +80,19 @@ impl AucEstimator for ExactAuc {
     }
 
     /// Full Eq. 1 enumeration over the tree: `O(k)`.
+    ///
+    /// The stored class totals are asserted against the scan's own
+    /// counts in release builds too — the scan already pays `O(k)`, so
+    /// the check is free, and a drift here means the tree and the
+    /// totals disagree about what the window holds.
     fn auc(&self) -> f64 {
         let groups = self.t.iter().map(|id| {
             let c = self.t.val(id);
             (c.p, c.n)
         });
         let (a2, pos, neg) = auc_terms_doubled(groups);
-        debug_assert_eq!(pos, self.total_pos);
-        debug_assert_eq!(neg, self.total_neg);
+        assert_eq!(pos, self.total_pos, "exact: positive total drifted from the tree");
+        assert_eq!(neg, self.total_neg, "exact: negative total drifted from the tree");
         finish_auc(a2, pos, neg)
     }
 
@@ -138,5 +151,32 @@ mod tests {
     fn remove_unknown_score_panics() {
         let mut e = ExactAuc::new();
         e.remove(3.0, true);
+    }
+
+    #[test]
+    #[should_panic(expected = "no positive at this score")]
+    fn remove_wrong_label_panics_descriptively() {
+        // The score exists but only as a negative: the per-node guard
+        // must fire before any count or total is touched.
+        let mut e = ExactAuc::new();
+        e.insert(1.0, false);
+        e.remove(1.0, true);
+    }
+
+    #[test]
+    fn totals_stay_coherent_with_the_tree() {
+        // The `auc()` totals check is a release-build invariant now; a
+        // read after every op exercises it across both score regimes.
+        check(0x7074, 10, |rng| {
+            let grid = if rng.chance(0.5) { Some(3 + rng.below(13)) } else { None };
+            let mut e = ExactAuc::new();
+            for op in gen_ops(rng, 200, 40, grid) {
+                match op {
+                    Op::Insert { score, pos } => e.insert(score, pos),
+                    Op::Remove { score, pos } => e.remove(score, pos),
+                }
+                let _ = e.auc();
+            }
+        });
     }
 }

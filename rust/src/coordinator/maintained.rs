@@ -1,0 +1,354 @@
+//! Tree-maintained exact AUC — O(log k) update, **O(1)** read, no ε.
+//!
+//! Tatti, *Maintaining AUC and H-measure over time* (arXiv 2112.06160),
+//! observes that the exact sliding-window AUC does not need the
+//! compressed list at all: the Eq. 1 doubled-area sum can be maintained
+//! delta-wise because one insert or remove at score `s` changes the sum
+//! by a quantity derivable from a single prefix query — exactly what
+//! the augmented rbtree answers in `O(log k)`.
+//!
+//! With `hp(v)` / `hn(v)` the positive / negative counts strictly below
+//! node `v` and `p(v)` / `n(v)` the counts at `v`, the scan total is
+//!
+//! ```text
+//! a2 = Σ_v (2·hp(v) + p(v)) · n(v)
+//! ```
+//!
+//! and the four mutations move it by (derivation in `DESIGN.md`
+//! §Estimators):
+//!
+//! * insert positive at `s`:  `Δa2 = +(2·(N − hn(s)) − n(s))`
+//! * remove positive at `s`:  `Δa2 = −(2·(N − hn(s)) − n(s))`
+//! * insert negative at `s`:  `Δa2 = +(2·hp(s) + p(s))`
+//! * remove negative at `s`:  `Δa2 = −(2·hp(s) + p(s))`
+//!
+//! where `N` is the pre-update negative total and `hp`/`hn`/`p`/`n` are
+//! read *before* the tree is touched. Every quantity is an integer, so
+//! the running `u128` accumulator telescopes to precisely the retained
+//! Eq. 1 scan — **bit-identical**, asserted after every op by the
+//! differential suite and [`MaintainedExactAuc::check_invariants`].
+//!
+//! The same tree yields the exact H-measure (Hand 2009; maintained
+//! exactly over time in the same paper) via
+//! [`MaintainedExactAuc::h_measure`] — an `O(k)` read over the score
+//! groups (see `coordinator/metrics.rs`; incremental hull maintenance
+//! is future work, `DESIGN.md` §Estimators).
+
+use super::metrics::h_measure;
+use super::support::{Acc, Counts};
+use super::{auc_terms_doubled, finish_auc, AucEstimator};
+use crate::collections::{RbTree, Score};
+
+/// Exact estimator with an O(log k) update and an O(1) AUC read.
+///
+/// Same augmented tree as [`super::ExactAuc`] (so the `benches/core.rs`
+/// three-way row isolates the read-path difference), plus the running
+/// doubled-area accumulator that replaces the per-read Eq. 1 scan.
+#[derive(Clone, Debug, Default)]
+pub struct MaintainedExactAuc {
+    t: RbTree<Counts, Acc>,
+    /// Running doubled area: at every op boundary bit-equal to the
+    /// retained scan ([`MaintainedExactAuc::doubled_area_scan`]).
+    a2: u128,
+    total_pos: u64,
+    total_neg: u64,
+}
+
+impl MaintainedExactAuc {
+    /// Empty estimator.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Number of distinct scores currently held (tree nodes) — the
+    /// exact-path analogue of `ApproxAuc::compressed_len` for footprint
+    /// reporting.
+    pub fn distinct_scores(&self) -> usize {
+        self.t.len()
+    }
+
+    /// Positive / negative totals (exposed for experiment drivers).
+    pub fn class_totals(&self) -> (u64, u64) {
+        (self.total_pos, self.total_neg)
+    }
+
+    /// The running doubled-area accumulator behind the O(1) read.
+    /// Exposed for the bit-equality property tests.
+    #[inline]
+    pub fn doubled_area(&self) -> u128 {
+        self.a2
+    }
+
+    /// The doubled area recomputed by the full Eq. 1 tree scan — `O(k)`.
+    /// This is the read path `ExactAuc` pays on every query, retained
+    /// here as the reference the running accumulator must equal
+    /// bit-for-bit after every operation.
+    pub fn doubled_area_scan(&self) -> u128 {
+        let groups = self.t.iter().map(|id| {
+            let c = self.t.val(id);
+            (c.p, c.n)
+        });
+        let (a2, pos, neg) = auc_terms_doubled(groups);
+        assert_eq!(pos, self.total_pos, "maintained exact: positive total drifted");
+        assert_eq!(neg, self.total_neg, "maintained exact: negative total drifted");
+        a2
+    }
+
+    /// The estimate read via the full scan instead of the accumulator.
+    /// Bit-identical to [`AucEstimator::auc`]; kept as the
+    /// reference/benchmark read path.
+    pub fn auc_full_scan(&self) -> f64 {
+        finish_auc(self.doubled_area_scan(), self.total_pos, self.total_neg)
+    }
+
+    /// `(hp, hn)`: positives / negatives strictly below `s`, from one
+    /// O(log k) descent over the augmented subtree sums.
+    fn head_stats(&self, s: Score) -> (u64, u64) {
+        let mut hp = 0;
+        let mut hn = 0;
+        let mut cur = self.t.root();
+        while let Some(v) = cur {
+            if self.t.key(v) < s {
+                let c = self.t.val(v);
+                hp += c.p;
+                hn += c.n;
+                if let Some(l) = self.t.left(v) {
+                    let a = self.t.aug(l);
+                    hp += a.pos;
+                    hn += a.neg;
+                }
+                cur = self.t.right(v);
+            } else {
+                cur = self.t.left(v);
+            }
+        }
+        (hp, hn)
+    }
+
+    fn update(&mut self, score: f64, pos: bool, add: bool) {
+        let s = Score(super::canon(score));
+        assert!(s.is_valid_entry(), "scores must be finite");
+        // Everything the delta needs is read before the tree mutates.
+        let (hp, hn) = self.head_stats(s);
+        let at_s = self.t.find(s).map_or(Counts { p: 0, n: 0 }, |v| *self.t.val(v));
+        let delta = if pos {
+            // The moved positive gains/loses 2 per negative strictly
+            // above s and 1 per negative tied at s:
+            // 2·(N − hn − n(s)) + n(s) = 2·(N − hn) − n(s).
+            u128::from(2 * (self.total_neg - hn) - at_s.n)
+        } else {
+            // The moved negative is worth its positive prefix, ties at
+            // half weight: 2·hp + p(s).
+            u128::from(2 * hp + at_s.p)
+        };
+        if add {
+            let init = if pos { Counts { p: 1, n: 0 } } else { Counts { p: 0, n: 1 } };
+            let (v, fresh) = self.t.insert(s, || init);
+            if !fresh {
+                self.t.with_val_mut(v, |c| if pos { c.p += 1 } else { c.n += 1 });
+            }
+            self.a2 = self
+                .a2
+                .checked_add(delta)
+                .expect("maintained exact: doubled-area accumulator overflow");
+            if pos {
+                self.total_pos += 1;
+            } else {
+                self.total_neg += 1;
+            }
+        } else {
+            let v = self.t.find(s).expect("maintained exact remove: score not present");
+            if pos {
+                assert!(at_s.p > 0, "maintained exact remove: no positive at this score");
+            } else {
+                assert!(at_s.n > 0, "maintained exact remove: no negative at this score");
+            }
+            self.t.with_val_mut(v, |c| if pos { c.p -= 1 } else { c.n -= 1 });
+            if at_s.p + at_s.n == 1 {
+                self.t.remove(v);
+            }
+            self.a2 = self
+                .a2
+                .checked_sub(delta)
+                .expect("maintained exact: doubled-area accumulator underflow");
+            if pos {
+                self.total_pos = self
+                    .total_pos
+                    .checked_sub(1)
+                    .expect("maintained exact: positive total underflow");
+            } else {
+                self.total_neg = self
+                    .total_neg
+                    .checked_sub(1)
+                    .expect("maintained exact: negative total underflow");
+            }
+        }
+    }
+
+    /// Exact H-measure (Hand 2009) of the current window under the
+    /// Beta(2,2) cost prior — an `O(k)` read over the tree's score
+    /// groups ([`h_measure`]). Returns 0 when either class is empty.
+    pub fn h_measure(&self) -> f64 {
+        h_measure(self.t.iter().map(|id| {
+            let c = self.t.val(id);
+            (c.p, c.n)
+        }))
+    }
+
+    /// Validate the tree invariants, the stored class totals and the
+    /// accumulator's bit-equality with the Eq. 1 scan. Panics on
+    /// violation (tests / property harness).
+    pub fn check_invariants(&self) {
+        self.t.check_invariants();
+        let mut pos = 0;
+        let mut neg = 0;
+        for id in self.t.iter() {
+            let c = self.t.val(id);
+            assert!(c.p + c.n > 0, "maintained exact: empty node survived");
+            pos += c.p;
+            neg += c.n;
+        }
+        assert_eq!(pos, self.total_pos, "maintained exact: positive total drifted");
+        assert_eq!(neg, self.total_neg, "maintained exact: negative total drifted");
+        // doubled_area_scan re-checks the totals; the assert here is
+        // the headline invariant — the O(1) read never drifts.
+        assert_eq!(
+            self.a2,
+            self.doubled_area_scan(),
+            "maintained exact: incremental a2 drifted from the full scan"
+        );
+    }
+}
+
+impl AucEstimator for MaintainedExactAuc {
+    fn insert(&mut self, score: f64, pos: bool) {
+        self.update(score, pos, true);
+    }
+
+    fn remove(&mut self, score: f64, pos: bool) {
+        self.update(score, pos, false);
+    }
+
+    /// O(1): the running accumulator over the stored totals — the same
+    /// `finish_auc` division the Eq. 1 scan ends with, so the result is
+    /// bit-identical to [`super::ExactAuc`]'s O(k) read.
+    fn auc(&self) -> f64 {
+        finish_auc(self.a2, self.total_pos, self.total_neg)
+    }
+
+    fn len(&self) -> usize {
+        (self.total_pos + self.total_neg) as usize
+    }
+}
+
+// Arena indices only — per-stream windows over this estimator drain on
+// the fleet executor's worker threads.
+const _: () = {
+    const fn assert_send<T: Send>() {}
+    assert_send::<MaintainedExactAuc>();
+};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{ExactAuc, NaiveAuc};
+    use crate::testing::{check, gen_ops, Op};
+
+    #[test]
+    fn matches_exact_bitwise_on_random_streams() {
+        for grid in [Some(4), Some(32), None] {
+            check(0x3A17 ^ grid.unwrap_or(7), 20, |rng| {
+                let mut maintained = MaintainedExactAuc::new();
+                let mut exact = ExactAuc::new();
+                let mut naive = NaiveAuc::new();
+                for (i, op) in gen_ops(rng, 300, 60, grid).into_iter().enumerate() {
+                    match op {
+                        Op::Insert { score, pos } => {
+                            maintained.insert(score, pos);
+                            exact.insert(score, pos);
+                            naive.insert(score, pos);
+                        }
+                        Op::Remove { score, pos } => {
+                            maintained.remove(score, pos);
+                            exact.remove(score, pos);
+                            naive.remove(score, pos);
+                        }
+                    }
+                    assert_eq!(maintained.len(), naive.len());
+                    assert_eq!(
+                        maintained.doubled_area(),
+                        maintained.doubled_area_scan(),
+                        "a2 drifted at op {i}"
+                    );
+                    let (m, e) = (maintained.auc(), exact.auc());
+                    assert_eq!(
+                        m.to_bits(),
+                        e.to_bits(),
+                        "op {i}: maintained {m} != exact {e}"
+                    );
+                }
+            });
+        }
+    }
+
+    #[test]
+    fn node_lifecycle() {
+        let mut e = MaintainedExactAuc::new();
+        e.insert(1.0, true);
+        e.insert(1.0, false);
+        assert_eq!(e.distinct_scores(), 1);
+        e.remove(1.0, true);
+        assert_eq!(e.distinct_scores(), 1);
+        e.remove(1.0, false);
+        assert_eq!(e.distinct_scores(), 0);
+        assert!(e.is_empty());
+        assert_eq!(e.auc(), 0.5);
+        assert_eq!(e.doubled_area(), 0);
+        e.check_invariants();
+    }
+
+    #[test]
+    fn perfect_and_reversed_separation_are_exact() {
+        let mut e = MaintainedExactAuc::new();
+        for i in 0..50 {
+            e.insert(f64::from(i), true);
+            e.insert(f64::from(i) + 1000.0, false);
+        }
+        assert_eq!(e.auc(), 1.0);
+        assert!((e.h_measure() - 1.0).abs() < 1e-12, "h = {}", e.h_measure());
+        let mut e = MaintainedExactAuc::new();
+        for i in 0..50 {
+            e.insert(f64::from(i), false);
+            e.insert(f64::from(i) + 1000.0, true);
+        }
+        assert_eq!(e.auc(), 0.0);
+        assert_eq!(e.h_measure(), 0.0);
+    }
+
+    #[test]
+    fn all_ties_is_chance_level() {
+        let mut e = MaintainedExactAuc::new();
+        for _ in 0..40 {
+            e.insert(0.5, true);
+            e.insert(0.5, false);
+        }
+        assert_eq!(e.auc(), 0.5);
+        assert!(e.h_measure().abs() < 1e-12, "h = {}", e.h_measure());
+        e.check_invariants();
+    }
+
+    #[test]
+    #[should_panic(expected = "not present")]
+    fn remove_unknown_score_panics() {
+        let mut e = MaintainedExactAuc::new();
+        e.remove(3.0, true);
+    }
+
+    #[test]
+    #[should_panic(expected = "no positive at this score")]
+    fn remove_wrong_label_panics() {
+        let mut e = MaintainedExactAuc::new();
+        e.insert(1.0, false);
+        e.remove(1.0, true);
+    }
+}

@@ -1,11 +1,106 @@
-//! Error and latency accounting for the experiment drivers.
+//! Error and latency accounting for the experiment drivers, plus the
+//! exact H-measure read shared by the maintained-exact estimator.
 //!
 //! The paper's evaluation (§6) reports the *relative* approximation error
 //! `|ãuc − auc| / auc` averaged and maximised over all sliding windows,
 //! plus per-update running time. These accumulators are shared by the
-//! Figure 1–3 drivers and the examples.
+//! Figure 1–3 drivers and the examples. [`h_measure`] implements the
+//! coherent alternative to AUC from Hand (2009) that Tatti's follow-up
+//! paper (arXiv 2112.06160) maintains over time next to the exact AUC;
+//! `MaintainedExactAuc::h_measure` feeds it the window's score groups.
 
 use std::time::Duration;
+
+/// Exact H-measure (Hand 2009) under the Beta(2,2) cost prior
+/// `u(c) = 6c(1 − c)`, from score groups in ascending order.
+///
+/// `groups` yields `(positives, negatives)` per distinct score. The
+/// crate's AUC convention has positives scoring *low* (AUC 1 means
+/// every positive is below every negative), so the implied classifier
+/// predicts positive at scores `≤` a threshold; sweeping the threshold
+/// over the groups traces ROC points `(FPR, TPR)` from `(0, 0)` to
+/// `(1, 1)`.
+///
+/// The expected minimum misclassification loss at cost `c ∈ (0, 1)`
+/// (cost `c` for a missed positive, `1 − c` for a false positive, class
+/// priors `π1 = P/(P+N)`, `π0 = N/(P+N)`) is attained on the upper
+/// convex hull of the ROC points; vertex `(x, y)` is optimal for `c`
+/// between the breakpoints of its adjacent hull segments,
+/// `c* = π0·Δx / (π1·Δy + π0·Δx)`. Integrating the per-vertex loss
+/// `c·π1·(1 − y) + (1 − c)·π0·x` against `u(c)` over each vertex's
+/// interval gives `L`; normalising by the trivial classifier's loss
+/// `L_max` (assign everything to the better class per `c`) gives
+/// `H = 1 − L / L_max ∈ [0, 1]`.
+///
+/// Hull decisions are made on the *integer* cumulative counts with
+/// `i128` cross-products, so the vertex set — and therefore the result
+/// — is deterministic, independent of score magnitudes. Returns 0 when
+/// either class is empty (no separation is measurable).
+pub fn h_measure(groups: impl IntoIterator<Item = (u64, u64)>) -> f64 {
+    // Cumulative integer ROC points (cum_neg, cum_pos), origin included.
+    let mut pts: Vec<(u64, u64)> = vec![(0, 0)];
+    let (mut cp, mut cn) = (0u64, 0u64);
+    for (p, n) in groups {
+        cp += p;
+        cn += n;
+        pts.push((cn, cp));
+    }
+    let (total_neg, total_pos) = (cn, cp);
+    if total_pos == 0 || total_neg == 0 {
+        return 0.0;
+    }
+    // Upper convex hull (slopes non-increasing): convexity is invariant
+    // under the per-axis 1/N, 1/P normalisation, so the hull of the
+    // integer points is the hull of the ROC points. Collinear middle
+    // vertices are dropped (they only split an interval in two without
+    // changing the envelope).
+    let mut hull: Vec<(u64, u64)> = Vec::with_capacity(pts.len());
+    for pt in pts {
+        while hull.len() >= 2 {
+            let o = hull[hull.len() - 2];
+            let a = hull[hull.len() - 1];
+            let cross = (a.0 as i128 - o.0 as i128) * (pt.1 as i128 - o.1 as i128)
+                - (a.1 as i128 - o.1 as i128) * (pt.0 as i128 - o.0 as i128);
+            if cross >= 0 {
+                hull.pop(); // `a` is on or below the chord o→pt
+            } else {
+                break;
+            }
+        }
+        hull.push(pt);
+    }
+
+    let total = (total_pos + total_neg) as f64;
+    let pi1 = total_pos as f64 / total;
+    let pi0 = total_neg as f64 / total;
+    // ∫ c·u(c) dc and ∫ (1−c)·u(c) dc for u(c) = 6c(1−c).
+    let int1 = |c: f64| 2.0 * c.powi(3) - 1.5 * c.powi(4);
+    let int0 = |c: f64| 3.0 * c.powi(2) - 4.0 * c.powi(3) + 1.5 * c.powi(4);
+
+    // Vertex i is optimal on [c_{i-1}, c_i]; the breakpoint between
+    // consecutive hull vertices solves c·π1·Δy = (1−c)·π0·Δx.
+    let mut loss = 0.0;
+    let mut c_lo = 0.0;
+    for (i, &(xn, yp)) in hull.iter().enumerate() {
+        let c_hi = if i + 1 < hull.len() {
+            let (nx, ny) = hull[i + 1];
+            let dx = pi0 * (nx - xn) as f64 / total_neg as f64;
+            let dy = pi1 * (ny - yp) as f64 / total_pos as f64;
+            dx / (dy + dx)
+        } else {
+            1.0
+        };
+        let x = xn as f64 / total_neg as f64;
+        let y = yp as f64 / total_pos as f64;
+        loss += pi1 * (1.0 - y) * (int1(c_hi) - int1(c_lo))
+            + pi0 * x * (int0(c_hi) - int0(c_lo));
+        c_lo = c_hi;
+    }
+    // Trivial classifier: all-positive costs (1−c)·π0, all-negative
+    // costs c·π1; the better of the two switches at c = π0.
+    let loss_max = pi1 * int1(pi0) + pi0 * (int0(1.0) - int0(pi0));
+    (1.0 - loss / loss_max).clamp(0.0, 1.0)
+}
 
 /// Streaming summary of a scalar series: count / mean / max / min.
 #[derive(Clone, Copy, Debug, Default)]
@@ -224,5 +319,85 @@ mod tests {
         assert_eq!(l.median(), Duration::ZERO);
         assert_eq!(l.mean(), Duration::ZERO);
         assert_eq!(l.total(), Duration::ZERO);
+    }
+
+    /// Reference H-measure by brute force: numeric integration of the
+    /// pointwise-minimum loss over *all* ROC points (the minimum picks
+    /// the hull vertices by itself, so no hull code is shared with the
+    /// implementation under test).
+    fn h_measure_brute(groups: &[(u64, u64)]) -> f64 {
+        let mut pts = vec![(0u64, 0u64)];
+        let (mut cp, mut cn) = (0u64, 0u64);
+        for &(p, n) in groups {
+            cp += p;
+            cn += n;
+            pts.push((cn, cp));
+        }
+        let (total_pos, total_neg) = (cp, cn);
+        if total_pos == 0 || total_neg == 0 {
+            return 0.0;
+        }
+        let total = (total_pos + total_neg) as f64;
+        let (pi1, pi0) = (total_pos as f64 / total, total_neg as f64 / total);
+        let u = |c: f64| 6.0 * c * (1.0 - c);
+        let steps = 200_000;
+        let (mut loss, mut loss_max) = (0.0, 0.0);
+        for i in 0..steps {
+            let c = (i as f64 + 0.5) / steps as f64;
+            let min = pts
+                .iter()
+                .map(|&(xn, yp)| {
+                    let x = xn as f64 / total_neg as f64;
+                    let y = yp as f64 / total_pos as f64;
+                    c * pi1 * (1.0 - y) + (1.0 - c) * pi0 * x
+                })
+                .fold(f64::INFINITY, f64::min);
+            loss += min * u(c) / steps as f64;
+            loss_max += (c * pi1).min((1.0 - c) * pi0) * u(c) / steps as f64;
+        }
+        1.0 - loss / loss_max
+    }
+
+    #[test]
+    fn h_measure_extremes() {
+        // Perfect separation (positives all below negatives) → 1.
+        assert!((h_measure([(10, 0), (0, 10)]) - 1.0).abs() < 1e-12);
+        // One indistinguishable group → 0.
+        assert!(h_measure([(10, 10)]).abs() < 1e-12);
+        // Reversed separation is no better than trivial → 0.
+        assert!(h_measure([(0, 10), (10, 0)]).abs() < 1e-12);
+        // Empty classes are the 0 convention.
+        assert_eq!(h_measure([]), 0.0);
+        assert_eq!(h_measure([(5, 0)]), 0.0);
+        assert_eq!(h_measure([(0, 5)]), 0.0);
+    }
+
+    #[test]
+    fn h_measure_matches_numeric_integration() {
+        let cases: [&[(u64, u64)]; 5] = [
+            &[(3, 1), (2, 2), (1, 4)],
+            &[(1, 0), (0, 1), (1, 0), (0, 1)],
+            &[(5, 1), (0, 3), (2, 2), (1, 7), (4, 0)],
+            &[(1, 2), (3, 3), (2, 1)],
+            &[(10, 1), (1, 10)],
+        ];
+        for groups in cases {
+            let fast = h_measure(groups.iter().copied());
+            let brute = h_measure_brute(groups);
+            assert!(
+                (fast - brute).abs() < 1e-4,
+                "H mismatch on {groups:?}: {fast} vs {brute}"
+            );
+        }
+    }
+
+    #[test]
+    fn h_measure_is_within_unit_interval_and_orders_separability() {
+        // More separable groupings must not score lower.
+        let weak = h_measure([(3, 2), (2, 3)]);
+        let strong = h_measure([(4, 1), (1, 4)]);
+        assert!((0.0..=1.0).contains(&weak));
+        assert!((0.0..=1.0).contains(&strong));
+        assert!(strong > weak, "H not ordering separability: {strong} vs {weak}");
     }
 }

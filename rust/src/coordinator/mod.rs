@@ -7,6 +7,9 @@
 //!   `C` and `ApproxAUC` with the `ε/2` relative-error guarantee.
 //! * [`exact`] — the Brzezinski & Stefanowski-style baseline: same
 //!   balanced tree, exact `O(k)` recomputation per query.
+//! * [`maintained`] — the Tatti (2021) follow-up: exact AUC maintained
+//!   delta-wise on the augmented tree, `O(log k)` update / `O(1)` read,
+//!   plus the exact H-measure.
 //! * [`naive`] — sort-based from-scratch oracle used by tests.
 //! * [`flipped`] — §4.1 remark: label-flipped estimator with a
 //!   `(1−auc)·ε/2` guarantee, preferable when AUC ≈ 1.
@@ -24,6 +27,7 @@ pub mod approx;
 pub mod decay;
 pub mod exact;
 pub mod flipped;
+pub mod maintained;
 pub mod metrics;
 pub mod monitor;
 pub mod naive;
@@ -35,6 +39,7 @@ pub use approx::ApproxAuc;
 pub use decay::DecayedAuc;
 pub use exact::ExactAuc;
 pub use flipped::FlippedAuc;
+pub use maintained::MaintainedExactAuc;
 pub use monitor::{AucMonitor, MonitorEvent};
 pub use naive::NaiveAuc;
 pub use scratch::WeightedAuc;

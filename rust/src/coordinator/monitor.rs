@@ -88,7 +88,13 @@ impl AucMonitor {
         }
         let degraded = auc < self.baseline - self.margin;
         if self.seen <= self.warmup {
-            self.baseline += self.lambda * (auc - self.baseline);
+            // Same freeze as the post-warmup branch: a stream already
+            // degrading during warmup must not drag the baseline down
+            // with it, or the broken level becomes the reference and
+            // the alarm can never fire.
+            if !degraded {
+                self.baseline += self.lambda * (auc - self.baseline);
+            }
             return MonitorEvent::Warmup;
         }
         if degraded {
@@ -182,6 +188,32 @@ mod tests {
         let before = m.baseline();
         feed(&mut m, 0.4, 100); // long degradation, patience never reached
         assert_eq!(m.baseline(), before, "baseline must not chase a failure");
+    }
+
+    #[test]
+    fn degradation_during_warmup_still_alarms() {
+        // Regression: a stream that breaks *during* warmup used to pull
+        // the EWMA baseline down to the broken level, so the alarm
+        // never fired. The baseline must freeze against degraded
+        // readings in warmup exactly as it does after it.
+        // Without the freeze, 90 broken readings at λ = 0.05 settle the
+        // baseline at ≈ 0.504 — within margin of the broken level, so
+        // the post-warmup stream would read as healthy forever.
+        let mut m = AucMonitor::new(0.05, 0.05, 10, 100);
+        feed(&mut m, 0.9, 10); // healthy start, then broken mid-warmup
+        let warm = feed(&mut m, 0.5, 90);
+        assert!(warm.iter().all(|e| *e == MonitorEvent::Warmup));
+        assert!(
+            m.baseline() > 0.85,
+            "baseline chased the failure during warmup: {}",
+            m.baseline()
+        );
+        let events = feed(&mut m, 0.5, 15);
+        assert_eq!(
+            events.iter().position(|e| *e == MonitorEvent::Alarm),
+            Some(9),
+            "born-broken stream must alarm right after warmup + patience"
+        );
     }
 
     #[test]

@@ -7,7 +7,105 @@
 //! otherwise. All configs are plain `Copy` data so the hot ingestion
 //! path never clones heap state.
 
-use crate::coordinator::AucMonitor;
+use crate::coordinator::window::Window;
+use crate::coordinator::{ApproxAuc, AucEstimator, AucMonitor, MaintainedExactAuc};
+
+/// Which estimator a stream runs behind its sliding window.
+///
+/// Both kinds satisfy the same O(1)-read contract (`DESIGN.md`
+/// §Estimators), so exactness-critical and approximate streams coexist
+/// in one fleet — sketches, snapshots, aggregates and the digest
+/// determinism contract are estimator-agnostic.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum EstimatorKind {
+    /// The paper's `(1+ε)`-compressed estimator:
+    /// `|ãuc − auc| ≤ ε·auc/2`, `O((log k)/ε)` update, smallest
+    /// footprint (`|C| ∈ O((log k)/ε)` cells).
+    Approx {
+        /// Approximation parameter `ε ≥ 0`.
+        epsilon: f64,
+    },
+    /// Tree-maintained exact AUC (Tatti 2021): no ε at all, `O(log k)`
+    /// update, one tree node per distinct score. Pick it for streams
+    /// where the estimate feeds decisions that cannot tolerate even the
+    /// ε/2 slack; pay ~`O(k)` memory per window in exchange.
+    ExactMaintained,
+}
+
+impl EstimatorKind {
+    /// Instantiate the per-stream estimator.
+    pub(crate) fn build(self) -> FleetEstimator {
+        match self {
+            EstimatorKind::Approx { epsilon } => {
+                FleetEstimator::Approx(ApproxAuc::new(epsilon))
+            }
+            EstimatorKind::ExactMaintained => {
+                FleetEstimator::Exact(MaintainedExactAuc::new())
+            }
+        }
+    }
+}
+
+/// The estimator actually held by a fleet stream: either kind behind
+/// one enum so `StreamState` stays a single concrete type (no dyn
+/// dispatch on the ingest hot path — one match, both arms inlinable).
+#[derive(Clone, Debug)]
+pub enum FleetEstimator {
+    /// `(1+ε)`-compressed approximate estimator.
+    Approx(ApproxAuc),
+    /// Tree-maintained exact estimator.
+    Exact(MaintainedExactAuc),
+}
+
+impl FleetEstimator {
+    /// Size of the structure the estimator maintains beyond the window
+    /// itself: compressed-list cells for [`ApproxAuc`], distinct-score
+    /// tree nodes for [`MaintainedExactAuc`]. Feeds
+    /// `StreamSnapshot::compressed_len`.
+    pub fn footprint(&self) -> usize {
+        match self {
+            FleetEstimator::Approx(e) => e.compressed_len(),
+            FleetEstimator::Exact(e) => e.distinct_scores(),
+        }
+    }
+}
+
+impl AucEstimator for FleetEstimator {
+    fn insert(&mut self, score: f64, pos: bool) {
+        match self {
+            FleetEstimator::Approx(e) => e.insert(score, pos),
+            FleetEstimator::Exact(e) => e.insert(score, pos),
+        }
+    }
+
+    fn remove(&mut self, score: f64, pos: bool) {
+        match self {
+            FleetEstimator::Approx(e) => e.remove(score, pos),
+            FleetEstimator::Exact(e) => e.remove(score, pos),
+        }
+    }
+
+    fn auc(&self) -> f64 {
+        match self {
+            FleetEstimator::Approx(e) => e.auc(),
+            FleetEstimator::Exact(e) => e.auc(),
+        }
+    }
+
+    fn len(&self) -> usize {
+        match self {
+            FleetEstimator::Approx(e) => e.len(),
+            FleetEstimator::Exact(e) => e.len(),
+        }
+    }
+}
+
+// Stream windows over this enum drain on the fleet's worker threads.
+const _: () = {
+    const fn assert_send<T: Send>() {}
+    assert_send::<FleetEstimator>();
+    assert_send::<Window<FleetEstimator>>();
+};
 
 /// Drift-monitor parameters for one stream (see [`AucMonitor::new`] for
 /// the λ-vs-window guidance).
@@ -43,23 +141,49 @@ impl MonitorConfig {
 pub struct StreamConfig {
     /// Sliding-window capacity `k`.
     pub window: usize,
-    /// Approximation parameter `ε ≥ 0` (`|ãuc − auc| ≤ ε·auc/2`).
-    pub epsilon: f64,
+    /// Which estimator backs the window (approximate with its ε, or
+    /// tree-maintained exact).
+    pub estimator: EstimatorKind,
     /// Drift monitor; `None` disables monitoring for the stream (saves
-    /// one `O(|C|)` AUC read per update).
+    /// one `O(1)` AUC read per update).
     pub monitor: Option<MonitorConfig>,
 }
 
 impl Default for StreamConfig {
     fn default() -> Self {
-        StreamConfig { window: 500, epsilon: 0.05, monitor: Some(MonitorConfig::default()) }
+        StreamConfig {
+            window: 500,
+            estimator: EstimatorKind::Approx { epsilon: 0.05 },
+            monitor: Some(MonitorConfig::default()),
+        }
     }
 }
 
 impl StreamConfig {
-    /// Window/ε constructor with default monitoring.
+    /// Window/ε constructor with default monitoring (the approximate
+    /// estimator — the fleet-scale default).
     pub fn new(window: usize, epsilon: f64) -> Self {
-        StreamConfig { window, epsilon, ..Default::default() }
+        StreamConfig { window, estimator: EstimatorKind::Approx { epsilon }, ..Default::default() }
+    }
+
+    /// Exact-maintained constructor with default monitoring, for
+    /// exactness-critical streams.
+    pub fn exact(window: usize) -> Self {
+        StreamConfig { window, estimator: EstimatorKind::ExactMaintained, ..Default::default() }
+    }
+
+    /// The ε of an approximate stream; `None` for exact-maintained.
+    pub fn epsilon(&self) -> Option<f64> {
+        match self.estimator {
+            EstimatorKind::Approx { epsilon } => Some(epsilon),
+            EstimatorKind::ExactMaintained => None,
+        }
+    }
+
+    /// Replace the estimator choice.
+    pub fn with_estimator(mut self, estimator: EstimatorKind) -> Self {
+        self.estimator = estimator;
+        self
     }
 
     /// Disable the drift monitor.
@@ -135,11 +259,33 @@ mod tests {
     fn builders_compose() {
         let c = StreamConfig::new(200, 0.1);
         assert_eq!(c.window, 200);
-        assert_eq!(c.epsilon, 0.1);
+        assert_eq!(c.estimator, EstimatorKind::Approx { epsilon: 0.1 });
+        assert_eq!(c.epsilon(), Some(0.1));
         assert!(c.monitor.is_some());
         assert!(c.without_monitor().monitor.is_none());
         let m = MonitorConfig { lambda: 0.01, margin: 0.1, patience: 5, warmup: 10 };
         assert_eq!(StreamConfig::new(10, 0.5).with_monitor(m).monitor, Some(m));
+        let e = StreamConfig::exact(64);
+        assert_eq!(e.estimator, EstimatorKind::ExactMaintained);
+        assert_eq!(e.epsilon(), None);
+        assert!(e.monitor.is_some());
+        let swapped = c.with_estimator(EstimatorKind::ExactMaintained);
+        assert_eq!(swapped.estimator, EstimatorKind::ExactMaintained);
+        assert_eq!(swapped.window, 200);
+    }
+
+    #[test]
+    fn estimator_kinds_build_their_estimators() {
+        match (EstimatorKind::Approx { epsilon: 0.25 }).build() {
+            FleetEstimator::Approx(e) => assert_eq!(e.epsilon(), 0.25),
+            other => panic!("expected approx, built {other:?}"),
+        }
+        let mut exact = EstimatorKind::ExactMaintained.build();
+        assert!(matches!(exact, FleetEstimator::Exact(_)));
+        exact.insert(0.2, true);
+        exact.insert(0.8, false);
+        assert_eq!(exact.auc(), 1.0);
+        assert_eq!(exact.footprint(), 2);
     }
 
     #[test]

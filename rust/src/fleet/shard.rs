@@ -43,9 +43,9 @@
 use std::collections::HashMap;
 
 use crate::coordinator::window::Window;
-use crate::coordinator::{ApproxAuc, AucMonitor, MonitorEvent};
+use crate::coordinator::{AucMonitor, MonitorEvent};
 
-use super::config::StreamConfig;
+use super::config::{FleetEstimator, StreamConfig};
 use super::snapshot::{FleetAlarm, StreamSnapshot};
 
 /// Bins of the shard-maintained AUC sketch. Exactly 64 so a set of
@@ -178,8 +178,11 @@ impl ShardSketch {
 pub(super) struct StreamState {
     /// Stream id (also the key in the owning shard's index).
     pub(super) id: u64,
-    /// The ε/2-approximate sliding window.
-    pub(super) win: Window<ApproxAuc>,
+    /// The sliding estimator window — approximate or exact-maintained
+    /// per the stream's [`EstimatorKind`](super::EstimatorKind); both
+    /// kinds read their AUC in `O(1)`, so everything downstream
+    /// (monitor, sketch, snapshots) is estimator-agnostic.
+    pub(super) win: Window<FleetEstimator>,
     /// Drift monitor; `None` when monitoring is disabled for the stream.
     pub(super) monitor: Option<AucMonitor>,
     /// Stream-local events ingested over the stream's lifetime.
@@ -204,7 +207,7 @@ impl StreamState {
     pub(super) fn new(id: u64, cfg: &StreamConfig) -> StreamState {
         StreamState {
             id,
-            win: Window::with_estimator(cfg.window, ApproxAuc::new(cfg.epsilon)),
+            win: Window::with_estimator(cfg.window, cfg.estimator.build()),
             monitor: cfg.monitor.map(|m| m.build()),
             events: 0,
             alarms: 0,
@@ -220,7 +223,7 @@ impl StreamState {
             stream: self.id,
             auc: self.win.auc(),
             len: self.win.len(),
-            compressed_len: self.win.estimator().compressed_len(),
+            compressed_len: self.win.estimator().footprint(),
             events: self.events,
             alarms: self.alarms,
             alarmed: self.monitor.as_ref().map_or(false, AucMonitor::is_alarmed),

@@ -28,7 +28,9 @@ pub struct StreamSnapshot {
     pub auc: f64,
     /// Pairs currently in the window (≤ configured capacity).
     pub len: usize,
-    /// Compressed-list size `|C|` (sentinels included).
+    /// Estimator footprint: compressed-list size `|C|` (sentinels
+    /// included) for approximate streams, distinct-score tree nodes for
+    /// exact-maintained streams.
     pub compressed_len: usize,
     /// Stream-local events ingested so far.
     pub events: u64,

@@ -20,10 +20,18 @@
 //!   (`P`, `C`).
 //! * [`coordinator`] — the estimators of paper §4 (approximate — with
 //!   the incremental `O(1)` read, `coordinator/approx.rs` — exact
-//!   baseline, naive oracle, flipped variant, §7 weighted extension), the
+//!   baseline, naive oracle, flipped variant, §7 weighted extension,
+//!   and the delta-maintained exact estimator
+//!   [`MaintainedExactAuc`] in `coordinator/maintained.rs`: `O(log k)`
+//!   update, `O(1)` read, zero approximation — plus the H-measure
+//!   coherent alternative in `coordinator/metrics.rs`), the
 //!   sliding-window driver, drift monitor and metrics.
 //! * [`fleet`] — the multi-stream service layer: an [`AucFleet`] of
-//!   thousands of independent sliding windows keyed by stream id. Each
+//!   thousands of independent sliding windows keyed by stream id.
+//!   Streams pick their estimator per
+//!   [`EstimatorKind`](fleet::EstimatorKind) — the paper's
+//!   `ε`-approximate sketch or the maintained exact accumulator —
+//!   and both kinds coexist in one fleet. Each
 //!   shard owns its slab of stream states outright (`Send`-clean from
 //!   the rbtree up); every fleet operation — batched ingestion *and*
 //!   the read paths (aggregates, snapshots, queries, eviction) — runs
@@ -87,5 +95,5 @@ pub mod runtime;
 pub mod stream;
 pub mod testing;
 
-pub use coordinator::{ApproxAuc, AucEstimator, ExactAuc, SlidingAuc};
+pub use coordinator::{ApproxAuc, AucEstimator, ExactAuc, MaintainedExactAuc, SlidingAuc};
 pub use fleet::AucFleet;

@@ -4,9 +4,9 @@
 //! streamauc experiment <table1|fig1|fig2|fig3|all> [--events N] [--window K] [--seed S] [--csv DIR]
 //! streamauc stream [--dataset D] [--epsilon E] [--window K] [--events N] [--drift-at I --drift-rate R]
 //! streamauc fleet  [--streams N] [--events N] [--shards S] [--workers W] [--window K]
-//!                  [--epsilon E] [--batch B] [--drift-frac F] [--skew X] [--seed S]
-//!                  [--evict-idle N] [--evict-age N] [--pool BOOL] [--pipeline] [--adaptive]
-//!                  [--top K] [--count-below X] [--hist BINS]
+//!                  [--estimator approx|exact] [--epsilon E] [--batch B] [--drift-frac F]
+//!                  [--skew X] [--seed S] [--evict-idle N] [--evict-age N] [--pool BOOL]
+//!                  [--pipeline] [--adaptive] [--top K] [--count-below X] [--hist BINS]
 //! streamauc train  [--dataset D] [--steps N] [--lr X] [--events N] [--artifacts DIR] [--out FILE]
 //! streamauc help
 //! ```
@@ -20,7 +20,13 @@
 //! scope per call, `--pipeline` overlaps batch generation with the
 //! previous drain, `--adaptive` scales active workers to the batch
 //! size — every combination is bit-identical to serial) and then
-//! answers the monitoring queries (`--top`, `--count-below`, `--hist`);
+//! answers the monitoring queries (`--top`, `--count-below`, `--hist`).
+//! `--estimator` selects the per-stream estimator: `approx` (default)
+//! runs the paper's `ε`-compressed sketch, `exact` the tree-maintained
+//! exact accumulator (no `ε`; `--epsilon` is ignored). Numeric flags
+//! are validated up front — zero `--workers`/`--hist`, a non-finite
+//! `--evict-age` and similar nonsense fail with a clear message before
+//! any work starts rather than panicking mid-run;
 //! `train` runs the full three-layer path (PJRT-compiled JAX/Pallas
 //! classifier trained and scored from rust, stream fed into the
 //! estimator).
@@ -32,7 +38,7 @@ use streamauc::config::{Config, Settings};
 use streamauc::coordinator::window::Window;
 use streamauc::coordinator::{ApproxAuc, AucMonitor, MonitorEvent, NaiveAuc};
 use streamauc::experiments::{fig1, fig2, fig3, table1, ExpConfig, Table};
-use streamauc::fleet::{AucFleet, FleetConfig, StreamConfig};
+use streamauc::fleet::{AucFleet, EstimatorKind, FleetConfig, StreamConfig};
 use streamauc::runtime::{Runtime, Scorer, Trainer};
 use streamauc::stream::source::write_csv;
 use streamauc::stream::synth::{paper_datasets, Dataset, DatasetSpec};
@@ -68,9 +74,9 @@ USAGE:
   streamauc stream [--dataset D] [--epsilon E] [--window K] [--events N]
                    [--drift-at I --drift-rate R] [--config FILE]
   streamauc fleet  [--streams N] [--events N] [--shards S] [--workers W] [--window K]
-                   [--epsilon E] [--batch B] [--drift-frac F] [--skew X] [--seed S]
-                   [--evict-idle N] [--evict-age N] [--pool BOOL] [--pipeline] [--adaptive]
-                   [--top K] [--count-below X] [--hist BINS]
+                   [--estimator approx|exact] [--epsilon E] [--batch B] [--drift-frac F]
+                   [--skew X] [--seed S] [--evict-idle N] [--evict-age N] [--pool BOOL]
+                   [--pipeline] [--adaptive] [--top K] [--count-below X] [--hist BINS]
   streamauc train  [--dataset D] [--steps N] [--lr X] [--events N]
                    [--artifacts DIR] [--out stream.csv]
   streamauc help
@@ -183,11 +189,36 @@ fn cmd_stream(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn cmd_fleet(args: &Args) -> Result<()> {
+/// Numeric knobs of `streamauc fleet`, parsed **and validated** up
+/// front: a zero `--workers`/`--hist`/`--window`, a non-finite
+/// `--evict-age` or an out-of-range fraction fails here with a message
+/// naming the flag, before any stream state is built — not as a panic
+/// (or silent nonsense) minutes into an ingest run.
+struct FleetFlags {
+    streams: usize,
+    events: usize,
+    shards: usize,
+    workers: usize,
+    pool: bool,
+    pipeline: bool,
+    adaptive: bool,
+    window: usize,
+    estimator: EstimatorKind,
+    batch: usize,
+    drift_frac: f64,
+    skew: f64,
+    seed: u64,
+    evict_idle: u64,
+    evict_age: u64,
+    top: usize,
+    hist_bins: usize,
+}
+
+fn parse_fleet_flags(args: &Args) -> Result<FleetFlags> {
     args.validate_flags(&[
-        "streams", "events", "shards", "workers", "window", "epsilon", "batch", "drift-frac",
-        "skew", "seed", "evict-idle", "evict-age", "pool", "pipeline", "adaptive", "top",
-        "count-below", "hist",
+        "streams", "events", "shards", "workers", "window", "estimator", "epsilon", "batch",
+        "drift-frac", "skew", "seed", "evict-idle", "evict-age", "pool", "pipeline", "adaptive",
+        "top", "count-below", "hist",
     ])?;
     let streams: usize = args.get_or("streams", 1000)?;
     let events: usize = args.get_or("events", 500_000)?;
@@ -203,18 +234,81 @@ fn cmd_fleet(args: &Args) -> Result<()> {
     let skew: f64 = args.get_or("skew", 1.5)?;
     let seed: u64 = args.get_or("seed", 0xF1EE7)?;
     let evict_idle: u64 = args.get_or("evict-idle", 0)?;
-    let evict_age: u64 = args.get_or("evict-age", 0)?;
+    // Parsed as f64 so `--evict-age inf`/`nan` is *rejected* instead of
+    // saturating into a silently-wrong u64 threshold.
+    let evict_age_raw: f64 = args.get_or("evict-age", 0.0)?;
     let top: usize = args.get_or("top", 10)?;
     let hist_bins: usize = args.get_or("hist", 10)?;
     if streams == 0 || events == 0 || batch == 0 {
         bail!("--streams, --events and --batch must be positive");
     }
+    if workers == 0 {
+        bail!("--workers must be ≥ 1 (1 = serial ingestion; >1 engages the pool)");
+    }
+    if window == 0 {
+        bail!("--window must be ≥ 1 pair");
+    }
+    if hist_bins == 0 {
+        bail!("--hist must be ≥ 1 bin");
+    }
+    if !epsilon.is_finite() || epsilon < 0.0 {
+        bail!("--epsilon must be a finite value ≥ 0, got {epsilon}");
+    }
+    if !evict_age_raw.is_finite() || evict_age_raw < 0.0 {
+        bail!("--evict-age must be a finite event count ≥ 0, got {evict_age_raw}");
+    }
     if !(0.0..=1.0).contains(&drift_frac) {
         bail!("--drift-frac must be in [0, 1]");
     }
-    if skew < 1.0 {
-        bail!("--skew must be ≥ 1 (1 = uniform stream popularity)");
+    if !skew.is_finite() || skew < 1.0 {
+        bail!("--skew must be finite and ≥ 1 (1 = uniform stream popularity)");
     }
+    let estimator = match args.get("estimator").unwrap_or("approx") {
+        "approx" => EstimatorKind::Approx { epsilon },
+        "exact" => EstimatorKind::ExactMaintained,
+        other => bail!("--estimator must be `approx` or `exact`, got {other:?}"),
+    };
+    Ok(FleetFlags {
+        streams,
+        events,
+        shards,
+        workers,
+        pool,
+        pipeline,
+        adaptive,
+        window,
+        estimator,
+        batch,
+        drift_frac,
+        skew,
+        seed,
+        evict_idle,
+        evict_age: evict_age_raw as u64,
+        top,
+        hist_bins,
+    })
+}
+
+fn cmd_fleet(args: &Args) -> Result<()> {
+    let FleetFlags {
+        streams,
+        events,
+        shards,
+        workers,
+        pool,
+        pipeline,
+        adaptive,
+        window,
+        estimator,
+        batch,
+        drift_frac,
+        skew,
+        seed,
+        evict_idle,
+        evict_age,
+        top,
+        hist_bins,
+    } = parse_fleet_flags(args)?;
 
     // Drift hits the first `drift_frac` of streams halfway through
     // their expected per-stream traffic.
@@ -237,12 +331,16 @@ fn cmd_fleet(args: &Args) -> Result<()> {
         pool,
         pipeline,
         adaptive,
-        stream_defaults: StreamConfig::new(window, epsilon),
+        stream_defaults: StreamConfig::new(window, 0.0).with_estimator(estimator),
     });
 
+    let estimator_desc = match estimator {
+        EstimatorKind::Approx { epsilon } => format!("approx ε={epsilon}"),
+        EstimatorKind::ExactMaintained => "exact-maintained".to_string(),
+    };
     println!(
         "# fleet: {streams} streams ({drifted} drifted), {events} events, \
-         batch {batch}, {} shards, {} worker(s) [{}{}{}], k={window}, ε={epsilon}",
+         batch {batch}, {} shards, {} worker(s) [{}{}{}], k={window}, {estimator_desc}",
         fleet.shard_count(),
         fleet.workers(),
         if fleet.pooled() { "pooled" } else if fleet.workers() > 1 { "scoped" } else { "serial" },
@@ -391,4 +489,65 @@ fn cmd_train(args: &Args) -> Result<()> {
         println!("# wrote scored stream to {out}");
     }
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fleet_args(extra: &str) -> Args {
+        let raw = format!("fleet {extra}");
+        Args::parse(raw.split_whitespace().map(String::from)).unwrap()
+    }
+
+    fn reject(extra: &str, needle: &str) {
+        let err = parse_fleet_flags(&fleet_args(extra))
+            .err()
+            .unwrap_or_else(|| panic!("`fleet {extra}` must be rejected"))
+            .to_string();
+        assert!(err.contains(needle), "`fleet {extra}` → {err:?} (wanted {needle:?})");
+    }
+
+    #[test]
+    fn fleet_defaults_parse_clean() {
+        let f = parse_fleet_flags(&fleet_args("")).unwrap();
+        assert_eq!(f.streams, 1000);
+        assert_eq!(f.workers, 1);
+        assert_eq!(f.hist_bins, 10);
+        assert_eq!(f.evict_age, 0);
+        assert_eq!(f.estimator, EstimatorKind::Approx { epsilon: 0.05 });
+    }
+
+    #[test]
+    fn fleet_rejects_zero_and_nonsense_numerics_up_front() {
+        reject("--workers 0", "--workers");
+        reject("--hist 0", "--hist");
+        reject("--window 0", "--window");
+        reject("--streams 0", "positive");
+        reject("--events 0", "positive");
+        reject("--batch 0", "positive");
+        reject("--evict-age inf", "--evict-age");
+        reject("--evict-age NaN", "--evict-age");
+        reject("--evict-age -3", "--evict-age");
+        reject("--epsilon -0.1", "--epsilon");
+        reject("--epsilon inf", "--epsilon");
+        reject("--drift-frac 1.5", "--drift-frac");
+        reject("--skew 0.5", "--skew");
+        reject("--skew nan", "--skew");
+    }
+
+    #[test]
+    fn fleet_estimator_flag_selects_the_kind() {
+        let f = parse_fleet_flags(&fleet_args("--estimator exact")).unwrap();
+        assert_eq!(f.estimator, EstimatorKind::ExactMaintained);
+        let f = parse_fleet_flags(&fleet_args("--estimator approx --epsilon 0.2")).unwrap();
+        assert_eq!(f.estimator, EstimatorKind::Approx { epsilon: 0.2 });
+        reject("--estimator fancy", "--estimator");
+    }
+
+    #[test]
+    fn fleet_age_threshold_truncates_to_events() {
+        let f = parse_fleet_flags(&fleet_args("--evict-age 1500")).unwrap();
+        assert_eq!(f.evict_age, 1500);
+    }
 }

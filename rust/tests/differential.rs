@@ -14,10 +14,15 @@
 //!   subtlest case) and the continuum regime;
 //! * `ExactAuc == NaiveAuc` exactly (identical doubled-integer
 //!   arithmetic ⇒ bit-equal results);
+//! * `MaintainedExactAuc == ExactAuc == NaiveAuc` **bit-wise** after
+//!   every operation: the delta-maintained doubled-area accumulator is
+//!   indistinguishable from both the Eq. 1 tree scan and the sort-based
+//!   oracle, in the duplicate-score grid regime and the continuum
+//!   regime alike;
 //! * `FlippedAuc` mirror guarantee `|est − auc| ≤ (1 − auc)·ε/2`.
 
 use streamauc::coordinator::{
-    ApproxAuc, AucEstimator, ExactAuc, FlippedAuc, NaiveAuc,
+    ApproxAuc, AucEstimator, ExactAuc, FlippedAuc, MaintainedExactAuc, NaiveAuc,
 };
 use streamauc::testing::{check, gen_ops, Op};
 
@@ -148,6 +153,54 @@ fn exact_equals_naive_exactly() {
             );
         }
         assert_eq!(exact.len(), naive.len());
+    });
+}
+
+/// Drive the three exact implementations through one op sequence,
+/// asserting three-way bit-equality after every operation.
+fn assert_maintained_is_bit_exact(ops: &[Op]) {
+    let mut maintained = MaintainedExactAuc::new();
+    let mut exact = ExactAuc::new();
+    let mut naive = NaiveAuc::new();
+    for (i, &op) in ops.iter().enumerate() {
+        apply(&mut maintained, op);
+        apply(&mut exact, op);
+        apply(&mut naive, op);
+        // The O(1)-read contract: the delta-maintained accumulator
+        // equals the retained Eq. 1 scan in *integer* arithmetic…
+        assert_eq!(
+            maintained.doubled_area(),
+            maintained.doubled_area_scan(),
+            "maintained a2 drifted from its own scan at op {i}"
+        );
+        // …so all three reads must be identical to the bit, not close.
+        let (m, e, n) = (maintained.auc(), exact.auc(), naive.auc());
+        assert_eq!(
+            m.to_bits(),
+            e.to_bits(),
+            "op {i}: maintained {m} != exact scan {e}"
+        );
+        assert_eq!(e.to_bits(), n.to_bits(), "op {i}: exact {e} != naive {n}");
+        assert_eq!(maintained.len(), naive.len());
+    }
+}
+
+#[test]
+fn maintained_exact_is_bit_exact_duplicate_score_grid() {
+    check(0x3E4A_C7D0, CASES, |rng| {
+        // Coarse grids force heavy same-score grouping: the `at_s`
+        // terms of every delta shape fire constantly.
+        let grid = 2 + rng.below(30);
+        let ops = gen_ops(rng, 250, 60, Some(grid));
+        assert_maintained_is_bit_exact(&ops);
+    });
+}
+
+#[test]
+fn maintained_exact_is_bit_exact_continuum_scores() {
+    check(0x3E4A_C7D1, CASES, |rng| {
+        let ops = gen_ops(rng, 250, 60, None);
+        assert_maintained_is_bit_exact(&ops);
     });
 }
 

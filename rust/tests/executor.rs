@@ -23,8 +23,8 @@ use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use streamauc::fleet::{
-    AucFleet, AucHistogram, FleetAggregate, FleetAlarm, FleetConfig, FleetExecutor,
-    MonitorConfig, StreamConfig, StreamSnapshot,
+    AucFleet, AucHistogram, EstimatorKind, FleetAggregate, FleetAlarm, FleetConfig,
+    FleetExecutor, MonitorConfig, StreamConfig, StreamSnapshot,
 };
 use streamauc::stream::Pcg;
 
@@ -208,7 +208,7 @@ fn skewed_batches(rng: &mut Pcg, n_streams: u64, n_batches: usize) -> Vec<Vec<Ev
 fn monitored_defaults() -> StreamConfig {
     StreamConfig {
         window: 100,
-        epsilon: 0.1,
+        estimator: EstimatorKind::Approx { epsilon: 0.1 },
         monitor: Some(MonitorConfig { lambda: 0.001, margin: 0.08, patience: 30, warmup: 150 }),
     }
 }
@@ -331,6 +331,66 @@ fn pooled_ingestion_is_bit_identical_to_serial_under_adversarial_schedules() {
             assert_eq!(
                 reference, digest,
                 "adaptive fleet diverged from serial (pipeline {pipeline})"
+            );
+        }
+    });
+}
+
+/// `EstimatorKind` threading through the engine: a fleet mixing
+/// ε-approximate and exact-maintained streams — overrides registered
+/// before ingestion, the *broken* hot stream 0 among the exact ones —
+/// obeys the same determinism contract as a homogeneous fleet. Every
+/// execution strategy must be digest-identical to serial with
+/// aggregates, triage queries and streaming snapshots interleaved.
+#[test]
+fn mixed_estimator_fleet_is_bit_identical_to_serial() {
+    streamauc::testing::check(0x313C_ED00, 2, |rng| {
+        let n_streams = 8 + rng.below(24); // 8..=31
+        let n_batches = 40;
+        let batches = skewed_batches(rng, n_streams, n_batches);
+        // Every third stream runs the exact-maintained estimator under
+        // the same window and monitor; stream 0 (hot *and* broken
+        // halfway through) is among them, so exact streams exercise the
+        // alarm path too.
+        let exact_ids: Vec<u64> = (0..n_streams).filter(|id| id % 3 == 0).collect();
+        let configure = |fleet: &mut AucFleet| {
+            for &id in &exact_ids {
+                fleet.configure_stream(
+                    id,
+                    monitored_defaults().with_estimator(EstimatorKind::ExactMaintained),
+                );
+            }
+        };
+        let mut steps = Vec::new();
+        for i in 0..n_batches {
+            steps.push(Step::Batch(i));
+            if i % 5 == 2 {
+                steps.push(Step::Aggregate);
+            }
+            if i % 7 == 3 {
+                steps.push(Step::TopK(5));
+            }
+            if i % 11 == 6 {
+                steps.push(Step::SnapshotIter);
+            }
+        }
+        let mut serial = fleet_with(1, false, false);
+        configure(&mut serial);
+        let reference = run_schedule(&mut serial, &batches, &steps);
+        assert!(!reference.alarms.is_empty(), "mixed scenario must alarm to compare");
+        for (workers, pool, pipeline, adaptive) in [
+            (4, true, false, false),
+            (8, true, true, false),
+            (8, true, true, true),
+            (4, false, false, false),
+        ] {
+            let mut fleet = fleet_with_adaptive(workers, pool, pipeline, adaptive);
+            configure(&mut fleet);
+            let digest = run_schedule(&mut fleet, &batches, &steps);
+            assert_eq!(
+                reference, digest,
+                "mixed-estimator fleet diverged from serial (workers {workers}, \
+                 pool {pool}, pipeline {pipeline}, adaptive {adaptive})"
             );
         }
     });

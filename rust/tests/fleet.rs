@@ -13,7 +13,7 @@
 use std::collections::HashSet;
 
 use streamauc::coordinator::NaiveAuc;
-use streamauc::fleet::{AucFleet, FleetConfig, MonitorConfig, StreamConfig};
+use streamauc::fleet::{AucFleet, EstimatorKind, FleetConfig, MonitorConfig, StreamConfig};
 use streamauc::stream::{DriftSchedule, MultiStream, Pcg, StreamProfile};
 
 const STREAMS: u64 = 200;
@@ -36,7 +36,7 @@ fn build_fleet() -> AucFleet {
         pipeline: true,
         stream_defaults: StreamConfig {
             window: 200,
-            epsilon: DEFAULT_EPS,
+            estimator: EstimatorKind::Approx { epsilon: DEFAULT_EPS },
             monitor: Some(MonitorConfig {
                 lambda: 0.001,
                 margin: 0.08,
@@ -178,7 +178,7 @@ fn parallel_ingestion_is_bit_identical_to_serial() {
             pipeline: false,
             stream_defaults: StreamConfig {
                 window: 200,
-                epsilon: 0.1,
+                estimator: EstimatorKind::Approx { epsilon: 0.1 },
                 monitor: Some(MonitorConfig {
                     lambda: 0.001,
                     margin: 0.08,

@@ -13,6 +13,9 @@
 //!   group-size bounds (`hp(w) ≤ α·(hp(v) + p(v))` for consecutive
 //!   cells; strict violation for cell *pairs*, which is what keeps
 //!   `|C| ∈ O((log k)/ε)`).
+//! * [`MaintainedExactAuc`]: tree shape, stored class totals vs a
+//!   recount, and the delta-maintained doubled-area accumulator vs the
+//!   Eq. 1 scan — all via `MaintainedExactAuc::check_invariants`.
 //!
 //! All sequences come from the seeded harness; failures print a replay
 //! seed.
@@ -21,7 +24,7 @@ use std::collections::BTreeMap;
 
 use streamauc::collections::{Augment, RbTree, Score};
 use streamauc::coordinator::support::SupportTree;
-use streamauc::coordinator::ApproxAuc;
+use streamauc::coordinator::{ApproxAuc, AucEstimator, MaintainedExactAuc};
 use streamauc::testing::{check, gen_ops, Op};
 
 /// Subtree (count, value-sum) augmentation — the same shape as the
@@ -139,6 +142,27 @@ fn compressed_list_eq3_eq4_hold_after_every_op() {
                 },
             );
         }
+    }
+}
+
+#[test]
+fn maintained_exact_invariants_hold_after_every_op() {
+    // `check_invariants` re-verifies the rbtree shape, recounts the
+    // class totals from the tree and recomputes the doubled-area
+    // accumulator with the Eq. 1 scan — so a single delta formula
+    // applied with the wrong pre-mutation ordering trips here at the
+    // exact op that broke it.
+    for grid in [Some(6), Some(24), None] {
+        check(0x3A17_5077 ^ grid.unwrap_or(99), 30, |rng| {
+            let mut m = MaintainedExactAuc::new();
+            for op in gen_ops(rng, 180, 45, grid) {
+                match op {
+                    Op::Insert { score, pos } => m.insert(score, pos),
+                    Op::Remove { score, pos } => m.remove(score, pos),
+                }
+                m.check_invariants();
+            }
+        });
     }
 }
 
