@@ -8,7 +8,9 @@
 //! 2 000 streams (each its own classifier stand-in), 5% of which
 //! suffer an abrupt label-flip failure halfway through. Events arrive
 //! in bursty, head-skewed batches; the [`AucFleet`] maintains one
-//! `ε/2`-approximate window plus a drift monitor per stream, draining
+//! sliding AUC window plus a drift monitor per stream — most on the
+//! `ε/2`-approximate sketch, a few on the tree-maintained exact
+//! accumulator and the binned bounded-score fast path — draining
 //! its shards on a persistent pool of 4 work-stealing workers with
 //! cross-batch pipelining — the next batch is generated and bucketed
 //! while the previous one drains (results are bit-identical to
@@ -60,10 +62,17 @@ fn main() {
         stream_defaults: defaults,
     });
     // Mixed fleet: a handful of exactness-critical streams run the
-    // tree-maintained exact estimator; the rest keep the ε-sketch.
-    // Both kinds share shards, pool, monitors and queries unchanged.
+    // tree-maintained exact estimator, another handful the binned
+    // bounded-score fast path (sigmoid scores are guaranteed inside
+    // the unit interval, so the declaration is safe); the rest keep
+    // the ε-sketch. All kinds share shards, pool, monitors and
+    // queries unchanged.
     for id in 0..8 {
         fleet.configure_stream(id, defaults.with_estimator(EstimatorKind::ExactMaintained));
+    }
+    for id in 8..16 {
+        let kind = EstimatorKind::Binned { bins: 128, lo: 0.0, hi: 1.0 };
+        fleet.configure_stream(id, defaults.with_estimator(kind));
     }
 
     let drift_at = per_stream / 2;
@@ -110,6 +119,18 @@ fn main() {
     }
     let below = fleet.count_below(0.7);
     println!("{below} streams below AUC 0.7\n");
+
+    // Raw score distribution over the unit interval; binned streams
+    // answer straight from their count arrays, everything else rescans.
+    let scores = fleet.score_histogram(10);
+    println!("score histogram ({} window entries):", scores.entries);
+    let speak = scores.counts.iter().copied().max().unwrap_or(0).max(1);
+    for (i, &count) in scores.counts.iter().enumerate() {
+        let lo = i as f64 / 10.0;
+        let bar = "#".repeat((count * 40 / speak) as usize);
+        println!("  [{lo:.1}, {:.1})  {count:>6}  {bar}", lo + 0.1);
+    }
+    println!();
 
     println!("worst streams (top_k_worst triage view):");
     println!("{:>8}  {:>8}  {:>6}  {:>6}  alarmed", "stream", "auc~", "fill", "|C|");

@@ -1,5 +1,5 @@
 //! Core estimator micro-bench: per-update and per-read cost of the
-//! three single-window estimators, and the cached-vs-full-scan read
+//! single-window estimators, and the cached-vs-full-scan read
 //! comparison behind the incremental-`a2` tentpole.
 //!
 //! `cargo bench --bench core [-- --updates N] [-- --budget-ms B]`
@@ -15,6 +15,12 @@
 //!   accumulator, no approximation. Timed with both read paths like
 //!   `approx` (its scan is the full Eq. 1 tree walk), so the JSON rows
 //!   carry the naive / exact-maintained / approx three-way comparison;
+//! * `binned` — the bounded-score count-array fast path at the
+//!   resolution the fleet's auto-selection rule picks for ε = 0.01
+//!   (`bins = ⌈2/ε⌉ = 200` over this trace's declared `[0, 1]`):
+//!   `O(bins)` update independent of `k`, `O(1)` cached read, a fixed
+//!   `2·bins` cells of footprint. The acceptance target is its update
+//!   beating `approx` at ε = 0.01, k = 1e5;
 //! * `approx(ε)` for `ε ∈ {0.5, 0.1, 0.01}` — the paper's estimator,
 //!   `O((log k)/ε)` update, measured with **both** read paths:
 //!   - `cached_read_ns` — [`Window::auc`]: the `O(1)` read off the
@@ -40,7 +46,7 @@ use std::hint::black_box;
 use std::time::Instant;
 
 use streamauc::coordinator::window::Window;
-use streamauc::coordinator::{ApproxAuc, ExactAuc, MaintainedExactAuc, NaiveAuc};
+use streamauc::coordinator::{ApproxAuc, BinnedAuc, ExactAuc, MaintainedExactAuc, NaiveAuc};
 use streamauc::stream::Pcg;
 
 const WINDOWS: [usize; 2] = [1_000, 100_000];
@@ -167,7 +173,7 @@ fn main() {
     let updates = flag(&args, "--updates", 40_000);
     let budget_ms = flag(&args, "--budget-ms", 150);
 
-    println!("== core: per-update / per-read ns (naive | exact | approx) ==");
+    println!("== core: per-update / per-read ns (naive | exact | binned | approx) ==");
     println!("   (budget {budget_ms} ms/op-class, ≤ {updates} timed updates/row)\n");
     println!(
         "{:>8}  {:>11}  {:>5}  {:>11}  {:>12}  {:>12}  {:>8}  {:>5}",
@@ -257,6 +263,48 @@ fn main() {
             read_ns: cached_read_ns,
             full_scan_read_ns: Some(scan_ns),
             compressed_len: Some(nodes),
+        });
+
+        // Binned bounded-score fast path at the ε = 0.01 auto
+        // resolution (`bins = ⌈2/0.01⌉ = 200` over the trace's [0, 1]):
+        // the update is an O(bins) prefix sum over contiguous counts,
+        // independent of k; the read comes off the running accumulator.
+        // `compressed_len` reports the fixed 2·bins-cell footprint.
+        let bins = 200;
+        let (win, update_ns, cached_read_ns) = measure(
+            Window::with_estimator(k, BinnedAuc::new(bins, 0.0, 1.0)),
+            &events,
+            budget_ms,
+            updates,
+            256,
+            4_096,
+        );
+        let mut acc = 0.0;
+        let scan_ns = ns_per(budget_ms, updates.max(1 << 20), 64, || {
+            acc += win.estimator().auc_full_scan();
+        });
+        black_box(acc);
+        assert_eq!(
+            win.auc().to_bits(),
+            win.estimator().auc_full_scan().to_bits(),
+            "binned cached and scan reads diverged (k = {k})"
+        );
+        println!(
+            "{k:>8}  {:>11}  {:>5}  {update_ns:>9.0}ns  {cached_read_ns:>10.0}ns  \
+             {scan_ns:>10.0}ns  {:>7.1}x  {:>5}",
+            "binned",
+            "-",
+            scan_ns / cached_read_ns,
+            2 * bins,
+        );
+        rows.push(Row {
+            estimator: "binned",
+            k,
+            epsilon: None,
+            update_ns,
+            read_ns: cached_read_ns,
+            full_scan_read_ns: Some(scan_ns),
+            compressed_len: Some(2 * bins),
         });
 
         for &eps in &EPSILONS {

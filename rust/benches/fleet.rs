@@ -42,6 +42,11 @@
 //! keep the ε-sketch — serial vs pooled, asserted bit-identical first
 //! (`mixed_serial` / `mixed_pooled` in the JSON) — so the cost of
 //! mixing exactness-critical streams into a fleet is tracked per PR.
+//! A **three-way** pair (`binned_serial` / `binned_pooled`) does the
+//! same with binned streams in the mix: every 4th stream
+//! exact-maintained, the next offset on the binned bounded-score fast
+//! path (`bins = ⌈2/ε⌉` over the sigmoid scores' declared `[0, 1]`),
+//! the rest on the ε-sketch.
 //!
 //! Read rows then time, on the already-ingested serial and pooled
 //! fleets, calls/sec of `aggregate()`, the query suite
@@ -102,6 +107,8 @@ struct Row {
     small_batch_adaptive: f64,
     mixed_serial: f64,
     mixed_pooled: f64,
+    binned_serial: f64,
+    binned_pooled: f64,
     live: usize,
 }
 
@@ -213,12 +220,13 @@ fn json_report(events_per_row: usize, workers: usize, rows: &[Row]) -> String {
              \"snapshot_serial\": {:.1}, \"snapshot_pooled\": {:.1}, \
              \"small_batch_pooled\": {:.1}, \"small_batch_adaptive\": {:.1}, \
              \"mixed_serial\": {:.1}, \"mixed_pooled\": {:.1}, \
+             \"binned_serial\": {:.1}, \"binned_pooled\": {:.1}, \
              \"speedup_scoped\": {:.3}, \"speedup_pooled\": {:.3}, \"speedup_pipelined\": {:.3}, \
              \"speedup_monitor\": {:.3}, \"speedup_monitor_read\": {:.3}, \
              \"speedup_aggregate\": {:.3}, \"speedup_aggregate_sketch\": {:.3}, \
              \"speedup_query\": {:.3}, \
              \"speedup_snapshot\": {:.3}, \"speedup_small_batch\": {:.3}, \
-             \"speedup_mixed\": {:.3}}}",
+             \"speedup_mixed\": {:.3}, \"speedup_binned\": {:.3}}}",
             r.streams,
             r.live,
             r.one_at_a_time,
@@ -241,6 +249,8 @@ fn json_report(events_per_row: usize, workers: usize, rows: &[Row]) -> String {
             r.small_batch_adaptive,
             r.mixed_serial,
             r.mixed_pooled,
+            r.binned_serial,
+            r.binned_pooled,
             r.batched_scoped / r.batched_serial,
             r.batched_pooled / r.batched_serial,
             r.pipelined / r.batched_serial,
@@ -252,6 +262,7 @@ fn json_report(events_per_row: usize, workers: usize, rows: &[Row]) -> String {
             r.snapshot_pooled / r.snapshot_serial,
             r.small_batch_adaptive / r.small_batch_pooled,
             r.mixed_pooled / r.mixed_serial,
+            r.binned_pooled / r.binned_serial,
         );
         s.push_str(if i + 1 < rows.len() { ",\n" } else { "\n" });
     }
@@ -391,6 +402,29 @@ fn main() {
         let mixed_pooled = batched(&mut mixed_p, &soup);
         assert_eq!(mixed_s.snapshot(), mixed_p.snapshot(), "mixed-estimator ingest diverged");
 
+        // ---- three-way mix: every 4th stream exact-maintained, the
+        // next offset binned at the ⌈2/ε⌉ auto resolution over the
+        // sigmoid scores' [0, 1], the rest on the ε-sketch ------------
+        let auto_bins = (2.0 / EPSILON).ceil() as usize;
+        let binned_fleet = |workers: usize, pool: bool| {
+            let mut fleet = fresh_fleet(false, workers, pool, false, false);
+            for id in (0..n_streams as u64).step_by(4) {
+                fleet.configure_stream(id, StreamConfig::exact(WINDOW).without_monitor());
+            }
+            for id in (2..n_streams as u64).step_by(4) {
+                fleet.configure_stream(
+                    id,
+                    StreamConfig::binned(WINDOW, auto_bins, 0.0, 1.0).without_monitor(),
+                );
+            }
+            fleet
+        };
+        let mut binned_s = binned_fleet(1, false);
+        let binned_serial = batched(&mut binned_s, &soup);
+        let mut binned_p = binned_fleet(workers, true);
+        let binned_pooled = batched(&mut binned_p, &soup);
+        assert_eq!(binned_s.snapshot(), binned_p.snapshot(), "three-way mix ingest diverged");
+
         let mut mon_serial = fresh_fleet(true, 1, false, false, false);
         let monitor_serial = batched(&mut mon_serial, &soup);
         let mut mon_pooled = fresh_fleet(true, workers, true, false, false);
@@ -432,6 +466,8 @@ fn main() {
             small_batch_adaptive,
             mixed_serial,
             mixed_pooled,
+            binned_serial,
+            binned_pooled,
             live,
         });
     }
@@ -457,18 +493,24 @@ fn main() {
         );
     }
 
-    println!("\n== mixed-estimator ingestion (every 4th stream exact-maintained) ==\n");
     println!(
-        "{:>8}  {:>12}  {:>12}  {:>6}  {:>14}",
-        "streams", "mixed", "mixed ∥", "gain", "vs all-approx"
+        "\n== mixed-estimator ingestion (exact mix; three-way mix adds binned streams) ==\n"
+    );
+    println!(
+        "{:>8}  {:>12}  {:>12}  {:>6}  {:>12}  {:>12}  {:>6}  {:>14}",
+        "streams", "mixed", "mixed ∥", "gain", "3-way", "3-way ∥", "gain", "vs all-approx"
     );
     for r in &rows {
         println!(
-            "{:>8}  {:>10.0}/s  {:>10.0}/s  {:>5.2}x  {:>13.2}x",
+            "{:>8}  {:>10.0}/s  {:>10.0}/s  {:>5.2}x  {:>10.0}/s  {:>10.0}/s  {:>5.2}x  \
+             {:>13.2}x",
             r.streams,
             r.mixed_serial,
             r.mixed_pooled,
             r.mixed_pooled / r.mixed_serial,
+            r.binned_serial,
+            r.binned_pooled,
+            r.binned_pooled / r.binned_serial,
             r.mixed_serial / r.batched_serial,
         );
     }

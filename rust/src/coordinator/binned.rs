@@ -1,0 +1,439 @@
+//! Binned AUC over a declared bounded score range — no tree, no list.
+//!
+//! When scores are known to live in a fixed interval `[lo, hi]` (bounded
+//! probabilities in `[0, 1]` — the overwhelmingly common production
+//! case), the whole §3 supporting structure is overkill: snap each score
+//! to one of `bins` equal cells and the window state is just two
+//! contiguous `u32` count arrays. A window slide touches two array
+//! cells; the Eq. 1 doubled-area total over the cells is maintained
+//! delta-wise exactly as in [`super::MaintainedExactAuc`], so the AUC
+//! read stays `O(1)`.
+//!
+//! [`BinnedAuc`] computes the **exact** AUC of the *quantized* multiset:
+//! scores are mapped through the monotone cell index
+//!
+//! ```text
+//! bin(s) = min(⌊(s − lo)/(hi − lo) · bins⌋, bins − 1)
+//! ```
+//!
+//! and [`super::auc_terms_doubled`] over the cells counts same-cell
+//! cross-class pairs at half weight — the trapezoidal (ties-at-half)
+//! treatment within a cell. The delta formulas are the maintained-exact
+//! ones (`DESIGN.md` §Estimators), with the `O(log k)` tree descent for
+//! the head counts `hp`/`hn` replaced by a prefix pass over the two
+//! count arrays: `O(bins)` worst-case, but `bins` is a small constant
+//! independent of the window size `k`, the arrays are contiguous `u32`s
+//! the compiler auto-vectorizes, and there is no allocation or pointer
+//! chasing anywhere — which is what lets the update beat the ε-sketch's
+//! `O((log k)/ε)` node walk at production ε (see `benches/core.rs`).
+//!
+//! **Discretization error.** `bin` is monotone, so a cross-class pair in
+//! *different* cells keeps its order and contributes identically to the
+//! true AUC; only pairs sharing a cell can differ, and a pair's
+//! contribution moves by at most `1/2`. Hence
+//!
+//! ```text
+//! |auc_binned − auc| ≤ Σ_b p_b·n_b / (2·P·N)
+//! ```
+//!
+//! with `p_b`/`n_b` the per-cell class counts — computable from the live
+//! state ([`BinnedAuc::error_bound`]) and asserted against the naive
+//! oracle by `tests/differential.rs`. Choosing `bins = ⌈2/ε⌉` makes the
+//! cell width `(hi − lo)·ε/2`, the resolution matched against the
+//! paper's `ε/2` guarantee by the fleet's per-stream auto-selection
+//! ([`crate::fleet::StreamConfig::auto`]). When every realized score
+//! sits on its own cell boundary (a duplicate grid with `bins` a
+//! multiple of the grid), quantization is injective on the realized
+//! scores and the estimate is **bit-identical** to the exact oracle.
+//!
+//! Determinism under the fleet pool is free: the cell index is one fixed
+//! monotone float map, counts and the doubled-area accumulator are
+//! integers, and per-stream op order is fixed by the shard — no worker
+//! interleaving can change a single bit.
+
+use super::{auc_terms_doubled, finish_auc, AucEstimator};
+
+/// Fixed-bin AUC estimator over a declared bounded score range:
+/// `O(bins)`-bounded update with `bins` a small `k`-independent
+/// constant, `O(1)` read, footprint `2·bins` cells regardless of `k`.
+#[derive(Clone, Debug)]
+pub struct BinnedAuc {
+    lo: f64,
+    hi: f64,
+    pos: Vec<u32>,
+    neg: Vec<u32>,
+    /// Running doubled area over the cells: at every op boundary
+    /// bit-equal to the retained scan ([`BinnedAuc::doubled_area_scan`]).
+    a2: u128,
+    total_pos: u64,
+    total_neg: u64,
+}
+
+impl BinnedAuc {
+    /// Empty estimator with `bins` equal cells over `[lo, hi]`.
+    ///
+    /// # Panics
+    ///
+    /// On `bins == 0`, non-finite bounds, or `lo >= hi` — the same
+    /// validation the fleet config and CLI apply at their boundaries;
+    /// kept here too so a hand-built estimator cannot exist in an
+    /// unusable state.
+    pub fn new(bins: usize, lo: f64, hi: f64) -> Self {
+        assert!(bins > 0, "binned estimator: bins must be ≥ 1");
+        assert!(
+            lo.is_finite() && hi.is_finite(),
+            "binned estimator: score range bounds must be finite, got [{lo}, {hi}]"
+        );
+        assert!(lo < hi, "binned estimator: score range must satisfy lo < hi, got [{lo}, {hi}]");
+        BinnedAuc {
+            lo,
+            hi,
+            pos: vec![0; bins],
+            neg: vec![0; bins],
+            a2: 0,
+            total_pos: 0,
+            total_neg: 0,
+        }
+    }
+
+    /// Number of cells.
+    pub fn bins(&self) -> usize {
+        self.pos.len()
+    }
+
+    /// The declared score range `(lo, hi)`.
+    pub fn range(&self) -> (f64, f64) {
+        (self.lo, self.hi)
+    }
+
+    /// Positive / negative totals (exposed for experiment drivers).
+    pub fn class_totals(&self) -> (u64, u64) {
+        (self.total_pos, self.total_neg)
+    }
+
+    /// Per-cell `(positive, negative)` counts, ascending score order.
+    /// The fleet's score-histogram fast path group-sums these directly
+    /// instead of rescanning window entries (`fleet/query.rs`).
+    pub fn cells(&self) -> impl Iterator<Item = (u32, u32)> + '_ {
+        self.pos.iter().zip(&self.neg).map(|(&p, &n)| (p, n))
+    }
+
+    /// The running doubled-area accumulator behind the O(1) read.
+    /// Exposed for the bit-equality property tests.
+    #[inline]
+    pub fn doubled_area(&self) -> u128 {
+        self.a2
+    }
+
+    /// The cell index of `score`: monotone, deterministic, the same map
+    /// for insert and remove (the window FIFO retains the raw score, so
+    /// eviction re-derives the identical cell).
+    #[inline]
+    fn bin_of(&self, score: f64) -> usize {
+        let t = (score - self.lo) / (self.hi - self.lo);
+        ((t * self.pos.len() as f64) as usize).min(self.pos.len() - 1)
+    }
+
+    /// The doubled area recomputed by the full Eq. 1 pass over the
+    /// cells — `O(bins)`, one run over contiguous memory. Retained as
+    /// the reference the running accumulator must equal bit-for-bit
+    /// after every operation.
+    pub fn doubled_area_scan(&self) -> u128 {
+        let groups = self.pos.iter().zip(&self.neg).map(|(&p, &n)| (u64::from(p), u64::from(n)));
+        let (a2, pos, neg) = auc_terms_doubled(groups);
+        assert_eq!(pos, self.total_pos, "binned: positive total drifted");
+        assert_eq!(neg, self.total_neg, "binned: negative total drifted");
+        a2
+    }
+
+    /// The estimate read via the full cell pass instead of the
+    /// accumulator. Bit-identical to [`AucEstimator::auc`]; kept as the
+    /// reference/benchmark read path.
+    pub fn auc_full_scan(&self) -> f64 {
+        finish_auc(self.doubled_area_scan(), self.total_pos, self.total_neg)
+    }
+
+    /// The discretization bound derived in the module docs, computed
+    /// from the live cell counts: `Σ_b p_b·n_b / (2·P·N)`. Zero when a
+    /// class is empty (both the binned and the true estimate are then
+    /// pinned at the 0.5 convention). `O(bins)`.
+    pub fn error_bound(&self) -> f64 {
+        let area = u128::from(self.total_pos) * u128::from(self.total_neg);
+        if area == 0 {
+            return 0.0;
+        }
+        let same: u128 =
+            self.pos.iter().zip(&self.neg).map(|(&p, &n)| u128::from(p) * u128::from(n)).sum();
+        (same as f64) / (2.0 * area as f64)
+    }
+
+    fn update(&mut self, score: f64, pos: bool, add: bool) {
+        // Reject before any state is touched (NaN fails the comparison
+        // too), mirroring the finite-score check in `Window::push`: a
+        // caught panic leaves the estimator exactly as it was.
+        assert!(
+            score >= self.lo && score <= self.hi,
+            "binned estimator: score {score} outside declared range [{}, {}]",
+            self.lo,
+            self.hi
+        );
+        let b = self.bin_of(score);
+        // Everything the delta needs is read before the counts mutate:
+        // one prefix pass per class over contiguous u32 cells.
+        let hp: u64 = self.pos[..b].iter().copied().map(u64::from).sum();
+        let hn: u64 = self.neg[..b].iter().copied().map(u64::from).sum();
+        let (at_p, at_n) = (u64::from(self.pos[b]), u64::from(self.neg[b]));
+        let delta = if pos {
+            // Same derivation as maintained.rs: 2·(N − hn) − n(s).
+            u128::from(2 * (self.total_neg - hn) - at_n)
+        } else {
+            // 2·hp + p(s).
+            u128::from(2 * hp + at_p)
+        };
+        if add {
+            if pos {
+                self.pos[b] += 1;
+                self.total_pos += 1;
+            } else {
+                self.neg[b] += 1;
+                self.total_neg += 1;
+            }
+            self.a2 =
+                self.a2.checked_add(delta).expect("binned: doubled-area accumulator overflow");
+        } else {
+            if pos {
+                assert!(at_p > 0, "binned remove: no positive in bin {b} (score {score})");
+                self.pos[b] -= 1;
+                self.total_pos -= 1;
+            } else {
+                assert!(at_n > 0, "binned remove: no negative in bin {b} (score {score})");
+                self.neg[b] -= 1;
+                self.total_neg -= 1;
+            }
+            self.a2 =
+                self.a2.checked_sub(delta).expect("binned: doubled-area accumulator underflow");
+        }
+    }
+
+    /// Validate the stored class totals and the accumulator's
+    /// bit-equality with the Eq. 1 cell pass. Panics on violation
+    /// (tests / property harness).
+    pub fn check_invariants(&self) {
+        let pos: u64 = self.pos.iter().copied().map(u64::from).sum();
+        let neg: u64 = self.neg.iter().copied().map(u64::from).sum();
+        assert_eq!(pos, self.total_pos, "binned: positive total drifted");
+        assert_eq!(neg, self.total_neg, "binned: negative total drifted");
+        assert_eq!(
+            self.a2,
+            self.doubled_area_scan(),
+            "binned: incremental a2 drifted from the full scan"
+        );
+    }
+}
+
+impl AucEstimator for BinnedAuc {
+    fn insert(&mut self, score: f64, pos: bool) {
+        self.update(score, pos, true);
+    }
+
+    fn remove(&mut self, score: f64, pos: bool) {
+        self.update(score, pos, false);
+    }
+
+    /// O(1): the running accumulator over the stored totals — the same
+    /// `finish_auc` division every estimator in this crate ends with.
+    fn auc(&self) -> f64 {
+        finish_auc(self.a2, self.total_pos, self.total_neg)
+    }
+
+    fn len(&self) -> usize {
+        (self.total_pos + self.total_neg) as usize
+    }
+}
+
+// Two flat Vec<u32>s and integers — per-stream windows over this
+// estimator drain on the fleet executor's worker threads.
+const _: () = {
+    const fn assert_send<T: Send>() {}
+    assert_send::<BinnedAuc>();
+};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::NaiveAuc;
+    use crate::testing::{check, gen_ops, Op};
+
+    #[test]
+    fn matches_naive_bitwise_on_bin_aligned_grids() {
+        // Power-of-two grids with bins a multiple of the grid: every
+        // realized score i/g is exactly representable, lands exactly on
+        // a cell boundary, and distinct scores land in distinct cells —
+        // quantization is order- and tie-preserving, so the binned
+        // estimate must equal the exact oracle bit-for-bit.
+        for (grid, bins) in [(4u64, 4usize), (4, 32), (32, 32), (32, 64)] {
+            check(0xB1A5 ^ grid ^ bins as u64, 20, |rng| {
+                let mut binned = BinnedAuc::new(bins, 0.0, 1.0);
+                let mut naive = NaiveAuc::new();
+                for (i, op) in gen_ops(rng, 300, 60, Some(grid)).into_iter().enumerate() {
+                    match op {
+                        Op::Insert { score, pos } => {
+                            binned.insert(score, pos);
+                            naive.insert(score, pos);
+                        }
+                        Op::Remove { score, pos } => {
+                            binned.remove(score, pos);
+                            naive.remove(score, pos);
+                        }
+                    }
+                    assert_eq!(binned.len(), naive.len());
+                    assert_eq!(
+                        binned.doubled_area(),
+                        binned.doubled_area_scan(),
+                        "a2 drifted at op {i}"
+                    );
+                    let (b, n) = (binned.auc(), naive.auc());
+                    assert_eq!(b.to_bits(), n.to_bits(), "op {i}: binned {b} != naive {n}");
+                }
+                binned.check_invariants();
+            });
+        }
+    }
+
+    #[test]
+    fn continuum_error_stays_within_the_derived_bound() {
+        check(0xC0117, 20, |rng| {
+            let mut binned = BinnedAuc::new(64, 0.0, 1.0);
+            let mut naive = NaiveAuc::new();
+            for (i, op) in gen_ops(rng, 300, 60, None).into_iter().enumerate() {
+                match op {
+                    Op::Insert { score, pos } => {
+                        binned.insert(score, pos);
+                        naive.insert(score, pos);
+                    }
+                    Op::Remove { score, pos } => {
+                        binned.remove(score, pos);
+                        naive.remove(score, pos);
+                    }
+                }
+                let (b, n) = (binned.auc(), naive.auc());
+                let bound = binned.error_bound();
+                assert!(
+                    (b - n).abs() <= bound + 1e-12,
+                    "op {i}: |{b} − {n}| exceeds derived bound {bound}"
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn bin_lifecycle() {
+        let mut e = BinnedAuc::new(8, 0.0, 1.0);
+        e.insert(0.5, true);
+        e.insert(0.5, false);
+        assert_eq!(e.len(), 2);
+        assert_eq!(e.auc(), 0.5);
+        e.remove(0.5, true);
+        e.remove(0.5, false);
+        assert!(e.is_empty());
+        assert_eq!(e.auc(), 0.5);
+        assert_eq!(e.doubled_area(), 0);
+        assert_eq!(e.error_bound(), 0.0);
+        e.check_invariants();
+    }
+
+    #[test]
+    fn perfect_and_reversed_separation_are_exact() {
+        let mut e = BinnedAuc::new(16, 0.0, 1.0);
+        for _ in 0..50 {
+            e.insert(0.1, true);
+            e.insert(0.9, false);
+        }
+        assert_eq!(e.auc(), 1.0);
+        assert_eq!(e.error_bound(), 0.0);
+        let mut e = BinnedAuc::new(16, 0.0, 1.0);
+        for _ in 0..50 {
+            e.insert(0.1, false);
+            e.insert(0.9, true);
+        }
+        assert_eq!(e.auc(), 0.0);
+        e.check_invariants();
+    }
+
+    #[test]
+    fn all_ties_is_chance_level() {
+        let mut e = BinnedAuc::new(4, 0.0, 1.0);
+        for _ in 0..40 {
+            e.insert(0.3, true);
+            e.insert(0.3, false);
+        }
+        assert_eq!(e.auc(), 0.5);
+        // Everything shares one cell: the bound degenerates to 1/2.
+        assert_eq!(e.error_bound(), 0.5);
+        e.check_invariants();
+    }
+
+    #[test]
+    fn range_endpoints_land_in_edge_bins() {
+        let mut e = BinnedAuc::new(10, -2.0, 2.0);
+        e.insert(-2.0, true); // lo → first cell
+        e.insert(2.0, false); // hi → clamped into the last cell
+        assert_eq!(e.auc(), 1.0);
+        assert_eq!(e.len(), 2);
+        e.remove(-2.0, true);
+        e.remove(2.0, false);
+        e.check_invariants();
+    }
+
+    #[test]
+    fn rejected_score_leaves_the_estimator_untouched() {
+        let mut e = BinnedAuc::new(8, 0.0, 1.0);
+        e.insert(0.2, true);
+        e.insert(0.8, false);
+        let (a2, auc) = (e.doubled_area(), e.auc());
+        for bad in [1.5, -0.1, f64::NAN, f64::INFINITY] {
+            let err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                e.insert(bad, true);
+            }));
+            assert!(err.is_err(), "score {bad} must be rejected");
+        }
+        assert_eq!(e.doubled_area(), a2);
+        assert_eq!(e.auc().to_bits(), auc.to_bits());
+        assert_eq!(e.len(), 2);
+        e.insert(0.5, true); // still fully usable
+        e.check_invariants();
+    }
+
+    #[test]
+    #[should_panic(expected = "outside declared range")]
+    fn out_of_range_score_panics_with_the_range() {
+        let mut e = BinnedAuc::new(8, 0.0, 1.0);
+        e.insert(1.5, true);
+    }
+
+    #[test]
+    #[should_panic(expected = "no positive in bin")]
+    fn remove_wrong_label_panics() {
+        let mut e = BinnedAuc::new(8, 0.0, 1.0);
+        e.insert(0.5, false);
+        e.remove(0.5, true);
+    }
+
+    #[test]
+    #[should_panic(expected = "bins must be ≥ 1")]
+    fn zero_bins_rejected() {
+        BinnedAuc::new(0, 0.0, 1.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "lo < hi")]
+    fn inverted_range_rejected() {
+        BinnedAuc::new(8, 1.0, 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "must be finite")]
+    fn non_finite_range_rejected() {
+        BinnedAuc::new(8, 0.0, f64::INFINITY);
+    }
+}

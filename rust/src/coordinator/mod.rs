@@ -10,6 +10,9 @@
 //! * [`maintained`] — the Tatti (2021) follow-up: exact AUC maintained
 //!   delta-wise on the augmented tree, `O(log k)` update / `O(1)` read,
 //!   plus the exact H-measure.
+//! * [`binned`] — bounded-score fast path: fixed cells over a declared
+//!   `[lo, hi]` range, two flat count arrays, the maintained doubled
+//!   area for an `O(1)` read, and a derived discretization bound.
 //! * [`naive`] — sort-based from-scratch oracle used by tests.
 //! * [`flipped`] — §4.1 remark: label-flipped estimator with a
 //!   `(1−auc)·ε/2` guarantee, preferable when AUC ≈ 1.
@@ -24,6 +27,7 @@
 //!   drivers.
 
 pub mod approx;
+pub mod binned;
 pub mod decay;
 pub mod exact;
 pub mod flipped;
@@ -36,6 +40,7 @@ pub mod support;
 pub mod window;
 
 pub use approx::ApproxAuc;
+pub use binned::BinnedAuc;
 pub use decay::DecayedAuc;
 pub use exact::ExactAuc;
 pub use flipped::FlippedAuc;

@@ -8,14 +8,20 @@
 //! path never clones heap state.
 
 use crate::coordinator::window::Window;
-use crate::coordinator::{ApproxAuc, AucEstimator, AucMonitor, MaintainedExactAuc};
+use crate::coordinator::{ApproxAuc, AucEstimator, AucMonitor, BinnedAuc, MaintainedExactAuc};
+
+/// Bin-count ceiling for [`StreamConfig::auto`]: a requested ε whose
+/// `⌈2/ε⌉` cells would exceed this stays on the `(1+ε)`-compressed
+/// sketch instead (beyond this the flat arrays stop being the obvious
+/// cache win, and `ε = 0` — exactness — is never binnable).
+pub const MAX_AUTO_BINS: usize = 4096;
 
 /// Which estimator a stream runs behind its sliding window.
 ///
-/// Both kinds satisfy the same O(1)-read contract (`DESIGN.md`
-/// §Estimators), so exactness-critical and approximate streams coexist
-/// in one fleet — sketches, snapshots, aggregates and the digest
-/// determinism contract are estimator-agnostic.
+/// All kinds satisfy the same O(1)-read contract (`DESIGN.md`
+/// §Estimators), so exactness-critical, approximate and bounded-score
+/// streams coexist in one fleet — sketches, snapshots, aggregates and
+/// the digest determinism contract are estimator-agnostic.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum EstimatorKind {
     /// The paper's `(1+ε)`-compressed estimator:
@@ -30,10 +36,32 @@ pub enum EstimatorKind {
     /// where the estimate feeds decisions that cannot tolerate even the
     /// ε/2 slack; pay ~`O(k)` memory per window in exchange.
     ExactMaintained,
+    /// Fixed-bin fast path over a declared bounded score range
+    /// (`coordinator/binned.rs`): two flat count arrays, no tree or
+    /// list, update bounded by the small `k`-independent bin count,
+    /// `O(1)` read, discretization error
+    /// `≤ Σ_b p_b·n_b / (2·P·N)` — cell width `(hi−lo)/bins` plays the
+    /// role of ε/2. Scores outside `[lo, hi]` are rejected at the shard
+    /// boundary with a panic naming the stream.
+    Binned {
+        /// Number of equal cells over `[lo, hi]`; must be ≥ 1.
+        bins: usize,
+        /// Inclusive lower score bound; must be finite and `< hi`.
+        lo: f64,
+        /// Inclusive upper score bound; must be finite and `> lo`.
+        hi: f64,
+    },
 }
 
 impl EstimatorKind {
     /// Instantiate the per-stream estimator.
+    ///
+    /// # Panics
+    ///
+    /// For [`EstimatorKind::Binned`], on `bins == 0`, non-finite
+    /// bounds, or `lo >= hi` ([`BinnedAuc::new`] validates) — the
+    /// backstop behind the CLI / [`StreamConfig::binned`] checks for
+    /// hand-built kinds.
     pub(crate) fn build(self) -> FleetEstimator {
         match self {
             EstimatorKind::Approx { epsilon } => {
@@ -41,6 +69,9 @@ impl EstimatorKind {
             }
             EstimatorKind::ExactMaintained => {
                 FleetEstimator::Exact(MaintainedExactAuc::new())
+            }
+            EstimatorKind::Binned { bins, lo, hi } => {
+                FleetEstimator::Binned(BinnedAuc::new(bins, lo, hi))
             }
         }
     }
@@ -55,17 +86,31 @@ pub enum FleetEstimator {
     Approx(ApproxAuc),
     /// Tree-maintained exact estimator.
     Exact(MaintainedExactAuc),
+    /// Fixed-bin bounded-score estimator.
+    Binned(BinnedAuc),
 }
 
 impl FleetEstimator {
     /// Size of the structure the estimator maintains beyond the window
     /// itself: compressed-list cells for [`ApproxAuc`], distinct-score
-    /// tree nodes for [`MaintainedExactAuc`]. Feeds
-    /// `StreamSnapshot::compressed_len`.
+    /// tree nodes for [`MaintainedExactAuc`], `2·bins` count cells for
+    /// [`BinnedAuc`]. Feeds `StreamSnapshot::compressed_len`.
     pub fn footprint(&self) -> usize {
         match self {
             FleetEstimator::Approx(e) => e.compressed_len(),
             FleetEstimator::Exact(e) => e.distinct_scores(),
+            FleetEstimator::Binned(e) => 2 * e.bins(),
+        }
+    }
+
+    /// The declared bounded score range of a binned stream; `None` for
+    /// the estimators that accept any finite score. The shard ingest
+    /// boundary uses this to reject out-of-range scores *before* any
+    /// state mutates, with a panic naming the stream.
+    pub fn declared_range(&self) -> Option<(f64, f64)> {
+        match self {
+            FleetEstimator::Binned(e) => Some(e.range()),
+            FleetEstimator::Approx(_) | FleetEstimator::Exact(_) => None,
         }
     }
 }
@@ -75,6 +120,7 @@ impl AucEstimator for FleetEstimator {
         match self {
             FleetEstimator::Approx(e) => e.insert(score, pos),
             FleetEstimator::Exact(e) => e.insert(score, pos),
+            FleetEstimator::Binned(e) => e.insert(score, pos),
         }
     }
 
@@ -82,6 +128,7 @@ impl AucEstimator for FleetEstimator {
         match self {
             FleetEstimator::Approx(e) => e.remove(score, pos),
             FleetEstimator::Exact(e) => e.remove(score, pos),
+            FleetEstimator::Binned(e) => e.remove(score, pos),
         }
     }
 
@@ -89,6 +136,7 @@ impl AucEstimator for FleetEstimator {
         match self {
             FleetEstimator::Approx(e) => e.auc(),
             FleetEstimator::Exact(e) => e.auc(),
+            FleetEstimator::Binned(e) => e.auc(),
         }
     }
 
@@ -96,6 +144,7 @@ impl AucEstimator for FleetEstimator {
         match self {
             FleetEstimator::Approx(e) => e.len(),
             FleetEstimator::Exact(e) => e.len(),
+            FleetEstimator::Binned(e) => e.len(),
         }
     }
 }
@@ -141,8 +190,8 @@ impl MonitorConfig {
 pub struct StreamConfig {
     /// Sliding-window capacity `k`.
     pub window: usize,
-    /// Which estimator backs the window (approximate with its ε, or
-    /// tree-maintained exact).
+    /// Which estimator backs the window (approximate with its ε,
+    /// tree-maintained exact, or binned over a declared score range).
     pub estimator: EstimatorKind,
     /// Drift monitor; `None` disables monitoring for the stream (saves
     /// one `O(1)` AUC read per update).
@@ -172,11 +221,61 @@ impl StreamConfig {
         StreamConfig { window, estimator: EstimatorKind::ExactMaintained, ..Default::default() }
     }
 
-    /// The ε of an approximate stream; `None` for exact-maintained.
+    /// Binned constructor with default monitoring, for streams whose
+    /// scores are declared bounded to `[lo, hi]`.
+    ///
+    /// # Panics
+    ///
+    /// On `bins == 0`, non-finite bounds, or `lo >= hi` — invalid
+    /// declarations are rejected at this boundary rather than at first
+    /// ingest.
+    pub fn binned(window: usize, bins: usize, lo: f64, hi: f64) -> Self {
+        // Build (and drop) the estimator once so BinnedAuc::new runs
+        // its validation here, where the declaration is made.
+        let kind = EstimatorKind::Binned { bins, lo, hi };
+        let _ = kind.build();
+        StreamConfig { window, estimator: kind, ..Default::default() }
+    }
+
+    /// Auto-selection: the config the fleet recommends for a stream
+    /// requesting accuracy `ε`, given an optionally declared bounded
+    /// score range.
+    ///
+    /// With a declared range and `ε > 0`, `bins = ⌈2/ε⌉` cells make the
+    /// cell width `(hi−lo)·ε/2` — resolution matching the paper's
+    /// `ε/2` guarantee — and the binned fast path wins on update cost;
+    /// it is chosen unless the requested ε demands more than
+    /// [`MAX_AUTO_BINS`] cells (or exactness, `ε == 0`), in which case
+    /// the `(1+ε)`-compressed sketch keeps the guarantee at any
+    /// resolution.
+    ///
+    /// # Panics
+    ///
+    /// On an invalid declared range (non-finite bounds or `lo >= hi`),
+    /// like [`StreamConfig::binned`].
+    pub fn auto(window: usize, epsilon: f64, range: Option<(f64, f64)>) -> Self {
+        if let Some((lo, hi)) = range {
+            assert!(
+                lo.is_finite() && hi.is_finite() && lo < hi,
+                "auto-selection: invalid declared score range [{lo}, {hi}]"
+            );
+            if epsilon > 0.0 {
+                let bins = (2.0 / epsilon).ceil() as usize;
+                if bins <= MAX_AUTO_BINS {
+                    return StreamConfig::binned(window, bins, lo, hi);
+                }
+            }
+        }
+        StreamConfig::new(window, epsilon)
+    }
+
+    /// The ε of an approximate stream; `None` for exact-maintained and
+    /// binned streams (the binned resolution is declared in cells, not
+    /// ε — see [`StreamConfig::auto`] for the correspondence).
     pub fn epsilon(&self) -> Option<f64> {
         match self.estimator {
             EstimatorKind::Approx { epsilon } => Some(epsilon),
-            EstimatorKind::ExactMaintained => None,
+            EstimatorKind::ExactMaintained | EstimatorKind::Binned { .. } => None,
         }
     }
 
@@ -269,6 +368,10 @@ mod tests {
         assert_eq!(e.estimator, EstimatorKind::ExactMaintained);
         assert_eq!(e.epsilon(), None);
         assert!(e.monitor.is_some());
+        let b = StreamConfig::binned(64, 32, 0.0, 1.0);
+        assert_eq!(b.estimator, EstimatorKind::Binned { bins: 32, lo: 0.0, hi: 1.0 });
+        assert_eq!(b.epsilon(), None);
+        assert!(b.monitor.is_some());
         let swapped = c.with_estimator(EstimatorKind::ExactMaintained);
         assert_eq!(swapped.estimator, EstimatorKind::ExactMaintained);
         assert_eq!(swapped.window, 200);
@@ -286,6 +389,61 @@ mod tests {
         exact.insert(0.8, false);
         assert_eq!(exact.auc(), 1.0);
         assert_eq!(exact.footprint(), 2);
+        assert_eq!(exact.declared_range(), None);
+        let mut binned = (EstimatorKind::Binned { bins: 16, lo: 0.0, hi: 1.0 }).build();
+        assert!(matches!(binned, FleetEstimator::Binned(_)));
+        binned.insert(0.2, true);
+        binned.insert(0.8, false);
+        assert_eq!(binned.auc(), 1.0);
+        assert_eq!(binned.footprint(), 32, "binned footprint is 2·bins, k-independent");
+        assert_eq!(binned.declared_range(), Some((0.0, 1.0)));
+    }
+
+    #[test]
+    fn auto_selection_prefers_binned_when_the_range_is_bounded() {
+        // Bounded range + moderate ε → binned with ⌈2/ε⌉ cells.
+        let c = StreamConfig::auto(100, 0.01, Some((0.0, 1.0)));
+        assert_eq!(c.estimator, EstimatorKind::Binned { bins: 200, lo: 0.0, hi: 1.0 });
+        // No declared range → the sketch, whatever the ε.
+        let c = StreamConfig::auto(100, 0.01, None);
+        assert_eq!(c.estimator, EstimatorKind::Approx { epsilon: 0.01 });
+        // ε finer than MAX_AUTO_BINS cells can deliver → the sketch.
+        let c = StreamConfig::auto(100, 1e-6, Some((0.0, 1.0)));
+        assert_eq!(c.estimator, EstimatorKind::Approx { epsilon: 1e-6 });
+        // ε = 0 means exactness — never binnable.
+        let c = StreamConfig::auto(100, 0.0, Some((0.0, 1.0)));
+        assert_eq!(c.estimator, EstimatorKind::Approx { epsilon: 0.0 });
+        // Boundary: ⌈2/ε⌉ exactly at the cap still bins.
+        let eps = 2.0 / MAX_AUTO_BINS as f64;
+        let c = StreamConfig::auto(100, eps, Some((-1.0, 2.0)));
+        assert_eq!(
+            c.estimator,
+            EstimatorKind::Binned { bins: MAX_AUTO_BINS, lo: -1.0, hi: 2.0 }
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "bins must be ≥ 1")]
+    fn binned_config_rejects_zero_bins() {
+        StreamConfig::binned(100, 0, 0.0, 1.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "lo < hi")]
+    fn binned_config_rejects_inverted_range() {
+        StreamConfig::binned(100, 8, 1.0, 1.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "must be finite")]
+    fn binned_config_rejects_non_finite_bounds() {
+        StreamConfig::binned(100, 8, f64::NEG_INFINITY, 1.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid declared score range")]
+    fn auto_rejects_invalid_declared_range() {
+        StreamConfig::auto(100, 0.1, Some((2.0, f64::NAN)));
     }
 
     #[test]

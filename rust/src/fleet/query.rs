@@ -73,6 +73,52 @@ impl AucHistogram {
     }
 }
 
+/// Distribution of the raw window-entry *scores* over `[0, 1]` in
+/// equal-width cells ([`AucFleet::score_histogram`]) — the input-side
+/// companion to [`AucHistogram`]'s estimate-side view. Out-of-range
+/// scores clamp into the edge cells.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ScoreHistogram {
+    /// Per-cell window-entry counts; cell `i` covers
+    /// `[i · w, (i+1) · w)` with `w = 1 / counts.len()` (edge cells
+    /// absorb out-of-range scores).
+    pub counts: Vec<u64>,
+    /// Window entries counted (= sum of `counts`).
+    pub entries: u64,
+}
+
+impl ScoreHistogram {
+    /// Number of cells.
+    pub fn bins(&self) -> usize {
+        self.counts.len()
+    }
+
+    /// Fraction of counted entries in cell `i` (0 when all windows are
+    /// empty).
+    pub fn fraction(&self, i: usize) -> f64 {
+        if self.entries == 0 {
+            0.0
+        } else {
+            self.counts[i] as f64 / self.entries as f64
+        }
+    }
+}
+
+/// Per-shard score-distribution partials for
+/// [`AucFleet::score_histogram`]. The shard visitor takes the binned
+/// fast path (count-array group-sum) per eligible stream and rescans
+/// window FIFOs otherwise.
+struct ScoreHistogramWork {
+    bins: usize,
+}
+
+impl ShardWork for ScoreHistogramWork {
+    type Output = (Vec<u64>, u64);
+    fn visit(&self, s: usize, core: &FleetCore) -> Self::Output {
+        core.lock_shard(s).score_histogram(self.bins)
+    }
+}
+
 /// Per-shard top-k candidates for [`AucFleet::top_k_worst`], cut to
 /// the sketch-derived candidate bins. Any global top-k member is
 /// necessarily in its own shard's top-k of the candidates, so
@@ -238,6 +284,32 @@ impl AucFleet {
         AucHistogram { counts, live_streams }
     }
 
+    /// Histogram of the raw window-entry scores over `[0, 1]` in
+    /// `bins` equal-width cells (at least 1; out-of-range scores clamp
+    /// into the edge cells) — the input-distribution view that pairs
+    /// with [`AucFleet::auc_histogram`]'s estimate distribution, e.g.
+    /// for spotting score drift before it moves the AUC.
+    ///
+    /// Binned streams declared over exactly `[0, 1]` whose cell count
+    /// is a multiple of `bins` are answered straight from their count
+    /// arrays (`Shard::score_histogram` fast path) — `O(stream_bins)`
+    /// per stream instead of `O(k)`; every other stream pays one pass
+    /// over its window FIFO. Partials are summed cell-wise, so the
+    /// result is strategy-independent.
+    pub fn score_histogram(&self, bins: usize) -> ScoreHistogram {
+        let bins = bins.max(1);
+        self.wait_inflight();
+        let mut counts = vec![0u64; bins];
+        let mut entries = 0u64;
+        for (partial, n) in self.executor.map_shards(&self.core, ScoreHistogramWork { bins }) {
+            for (cell, c) in counts.iter_mut().zip(partial) {
+                *cell += c;
+            }
+            entries += n;
+        }
+        ScoreHistogram { counts, entries }
+    }
+
     /// Snapshots of every stream matching `pred`, sorted by stream id.
     /// The predicate sees the same [`StreamSnapshot`] that
     /// [`AucFleet::snapshot`] reports and must be pure (it may run
@@ -331,6 +403,65 @@ mod tests {
         assert_eq!(hist.counts, vec![0; 5]);
         assert_eq!(hist.live_streams, 0);
         assert_eq!(hist.fraction(0), 0.0);
+    }
+
+    #[test]
+    fn score_histogram_counts_window_entries() {
+        let fleet = demo_fleet(2);
+        let h = fleet.score_histogram(4);
+        // Entries: 0.2/0.8 ×5 (stream 1), 0.8/0.2 ×5 (2), 0.5 ×5 (3),
+        // 0.1/0.9 ×5 (4) — 35 total.
+        assert_eq!(h.entries, 35);
+        assert_eq!(h.counts, vec![15, 0, 5, 15]);
+        assert_eq!(h.bins(), 4);
+        assert!((h.fraction(2) - 5.0 / 35.0).abs() < 1e-12);
+        // bins = 0 is clamped to one all-covering cell.
+        assert_eq!(fleet.score_histogram(0).counts, vec![35]);
+        let empty = AucFleet::with_defaults();
+        assert_eq!(empty.score_histogram(3).counts, vec![0; 3]);
+        assert_eq!(empty.score_histogram(3).fraction(0), 0.0);
+    }
+
+    #[test]
+    fn score_histogram_binned_fast_path_matches_the_rescan() {
+        use crate::testing::Pcg;
+        // Binned defaults (32 cells over [0,1]) take the count-array
+        // group-sum; two overridden streams (approx, exact) take the
+        // FIFO rescan. Query cells 8 divide 32 and everything is a
+        // power of two, so the fast path must equal the raw rescan
+        // bit-for-bit — computed here independently from `entries()`.
+        for workers in [1usize, 4] {
+            let mut fleet = AucFleet::new(FleetConfig {
+                shards: 8,
+                workers,
+                stream_defaults: StreamConfig::binned(16, 32, 0.0, 1.0).without_monitor(),
+                ..FleetConfig::default()
+            });
+            fleet.configure_stream(3, StreamConfig::new(16, 0.1).without_monitor());
+            fleet.configure_stream(4, StreamConfig::exact(16).without_monitor());
+            let mut rng = Pcg::seed(0x5C0E);
+            for _ in 0..400 {
+                let id = rng.below(8);
+                fleet.push(id, rng.uniform(), rng.chance(0.5));
+            }
+            let bins = 8;
+            let h = fleet.score_histogram(bins);
+            let mut expect = vec![0u64; bins];
+            let mut entries = 0u64;
+            for id in 0..8 {
+                for (score, _) in fleet.entries(id).into_iter().flatten() {
+                    expect[((score * bins as f64) as usize).min(bins - 1)] += 1;
+                    entries += 1;
+                }
+            }
+            assert!(entries > 0);
+            assert_eq!(h.counts, expect, "workers = {workers}");
+            assert_eq!(h.entries, entries);
+            // A cell count not dividing 32 forces the rescan for every
+            // stream; totals must still reconcile.
+            let h5 = fleet.score_histogram(5);
+            assert_eq!(h5.counts.iter().sum::<u64>(), entries);
+        }
     }
 
     #[test]

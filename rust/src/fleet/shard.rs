@@ -178,9 +178,9 @@ impl ShardSketch {
 pub(super) struct StreamState {
     /// Stream id (also the key in the owning shard's index).
     pub(super) id: u64,
-    /// The sliding estimator window — approximate or exact-maintained
-    /// per the stream's [`EstimatorKind`](super::EstimatorKind); both
-    /// kinds read their AUC in `O(1)`, so everything downstream
+    /// The sliding estimator window — approximate, exact-maintained or
+    /// binned per the stream's [`EstimatorKind`](super::EstimatorKind);
+    /// all kinds read their AUC in `O(1)`, so everything downstream
     /// (monitor, sketch, snapshots) is estimator-agnostic.
     pub(super) win: Window<FleetEstimator>,
     /// Drift monitor; `None` when monitoring is disabled for the stream.
@@ -322,6 +322,18 @@ impl Shard {
     /// for the batch the event arrived in.
     pub(super) fn push_slot(&mut self, slot: usize, score: f64, label: bool, tick: u64, at: u64) {
         let st = &mut self.streams[slot];
+        // Bounded-score declarations are enforced here, naming the
+        // stream — before any state mutates (like the finite-score
+        // check in `Window::push`), so a caught panic leaves stream,
+        // sketch and FIFO exactly as they were. NaN fails the
+        // comparison and is rejected by the same message.
+        if let Some((lo, hi)) = st.win.estimator().declared_range() {
+            assert!(
+                score >= lo && score <= hi,
+                "stream {}: score {score} outside declared range [{lo}, {hi}]",
+                st.id
+            );
+        }
         st.win.push(score, label);
         st.events += 1;
         st.last_seen = tick;
@@ -518,6 +530,50 @@ impl Shard {
             live += 1;
         }
         (counts, live)
+    }
+
+    /// Score-distribution partial over `[0, 1]` split into `bins`
+    /// equal-width cells (out-of-range scores clamp into the edge
+    /// cells): per-cell window-entry counts plus the number of entries
+    /// counted, summed over every stream in the shard.
+    ///
+    /// Binned streams declared exactly over `[0, 1]` with a cell count
+    /// divisible by `bins` contribute **directly from their count
+    /// arrays** — an `O(stream_bins)` group-sum with no window rescan:
+    /// the stream's finer cell index refines the query's
+    /// (`⌊⌊t·gb⌋/g⌋ = ⌊t·b⌋`), so grouping reports exactly where the
+    /// estimator itself holds each score. With power-of-two cell
+    /// counts the float products are exact and this is bit-identical
+    /// to the FIFO rescan (the cross-check in `fleet/query.rs` tests);
+    /// in general it is the estimator's own quantized view. Everything
+    /// else falls back to one pass over the window FIFO.
+    pub(super) fn score_histogram(&self, bins: usize) -> (Vec<u64>, u64) {
+        let mut counts = vec![0u64; bins];
+        let mut entries = 0u64;
+        for st in &self.streams {
+            match st.win.estimator() {
+                FleetEstimator::Binned(e)
+                    if e.range() == (0.0, 1.0) && e.bins() % bins == 0 =>
+                {
+                    let group = e.bins() / bins;
+                    for (i, (p, n)) in e.cells().enumerate() {
+                        let c = u64::from(p) + u64::from(n);
+                        counts[i / group] += c;
+                        entries += c;
+                    }
+                }
+                _ => {
+                    for (score, _) in st.win.entries() {
+                        // `as usize` saturates: negative scores land in
+                        // cell 0, the `.min` clamps `score ≥ 1`.
+                        let cell = ((score * bins as f64) as usize).min(bins - 1);
+                        counts[cell] += 1;
+                        entries += 1;
+                    }
+                }
+            }
+        }
+        (counts, entries)
     }
 
     /// Test support: rebuild the sketch from scratch and assert the

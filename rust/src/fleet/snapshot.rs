@@ -30,7 +30,8 @@ pub struct StreamSnapshot {
     pub len: usize,
     /// Estimator footprint: compressed-list size `|C|` (sentinels
     /// included) for approximate streams, distinct-score tree nodes for
-    /// exact-maintained streams.
+    /// exact-maintained streams, `2·bins` count cells (`k`-independent)
+    /// for binned streams.
     pub compressed_len: usize,
     /// Stream-local events ingested so far.
     pub events: u64,

@@ -23,15 +23,20 @@
 //!   baseline, naive oracle, flipped variant, §7 weighted extension,
 //!   and the delta-maintained exact estimator
 //!   [`MaintainedExactAuc`] in `coordinator/maintained.rs`: `O(log k)`
-//!   update, `O(1)` read, zero approximation — plus the H-measure
+//!   update, `O(1)` read, zero approximation — plus the bounded-score
+//!   fast path [`BinnedAuc`] in `coordinator/binned.rs`: fixed cells
+//!   over a declared `[lo, hi]` range, no tree at all, with a derived
+//!   discretization bound — and the H-measure
 //!   coherent alternative in `coordinator/metrics.rs`), the
 //!   sliding-window driver, drift monitor and metrics.
 //! * [`fleet`] — the multi-stream service layer: an [`AucFleet`] of
 //!   thousands of independent sliding windows keyed by stream id.
 //!   Streams pick their estimator per
 //!   [`EstimatorKind`](fleet::EstimatorKind) — the paper's
-//!   `ε`-approximate sketch or the maintained exact accumulator —
-//!   and both kinds coexist in one fleet. Each
+//!   `ε`-approximate sketch, the maintained exact accumulator, or the
+//!   binned bounded-score fast path (auto-selected from a declared
+//!   score range via [`StreamConfig::auto`](fleet::StreamConfig::auto))
+//!   — and all kinds coexist in one fleet. Each
 //!   shard owns its slab of stream states outright (`Send`-clean from
 //!   the rbtree up); every fleet operation — batched ingestion *and*
 //!   the read paths (aggregates, snapshots, queries, eviction) — runs
@@ -95,5 +100,7 @@ pub mod runtime;
 pub mod stream;
 pub mod testing;
 
-pub use coordinator::{ApproxAuc, AucEstimator, ExactAuc, MaintainedExactAuc, SlidingAuc};
+pub use coordinator::{
+    ApproxAuc, AucEstimator, BinnedAuc, ExactAuc, MaintainedExactAuc, SlidingAuc,
+};
 pub use fleet::AucFleet;

@@ -4,7 +4,8 @@
 //! streamauc experiment <table1|fig1|fig2|fig3|all> [--events N] [--window K] [--seed S] [--csv DIR]
 //! streamauc stream [--dataset D] [--epsilon E] [--window K] [--events N] [--drift-at I --drift-rate R]
 //! streamauc fleet  [--streams N] [--events N] [--shards S] [--workers W] [--window K]
-//!                  [--estimator approx|exact] [--epsilon E] [--batch B] [--drift-frac F]
+//!                  [--estimator approx|exact|binned] [--epsilon E] [--bins N]
+//!                  [--score-range LO,HI] [--batch B] [--drift-frac F]
 //!                  [--skew X] [--seed S] [--evict-idle N] [--evict-age N] [--pool BOOL]
 //!                  [--pipeline] [--adaptive] [--top K] [--count-below X] [--hist BINS]
 //! streamauc train  [--dataset D] [--steps N] [--lr X] [--events N] [--artifacts DIR] [--out FILE]
@@ -23,7 +24,10 @@
 //! answers the monitoring queries (`--top`, `--count-below`, `--hist`).
 //! `--estimator` selects the per-stream estimator: `approx` (default)
 //! runs the paper's `ε`-compressed sketch, `exact` the tree-maintained
-//! exact accumulator (no `ε`; `--epsilon` is ignored). Numeric flags
+//! exact accumulator (no `ε`; `--epsilon` is ignored), `binned` the
+//! bounded-score count-array fast path (`--bins` cells over the
+//! declared `--score-range LO,HI`; scores outside the range are a
+//! contract violation). Numeric flags
 //! are validated up front — zero `--workers`/`--hist`, a non-finite
 //! `--evict-age` and similar nonsense fail with a clear message before
 //! any work starts rather than panicking mid-run;
@@ -74,7 +78,8 @@ USAGE:
   streamauc stream [--dataset D] [--epsilon E] [--window K] [--events N]
                    [--drift-at I --drift-rate R] [--config FILE]
   streamauc fleet  [--streams N] [--events N] [--shards S] [--workers W] [--window K]
-                   [--estimator approx|exact] [--epsilon E] [--batch B] [--drift-frac F]
+                   [--estimator approx|exact|binned] [--epsilon E] [--bins N]
+                   [--score-range LO,HI] [--batch B] [--drift-frac F]
                    [--skew X] [--seed S] [--evict-idle N] [--evict-age N] [--pool BOOL]
                    [--pipeline] [--adaptive] [--top K] [--count-below X] [--hist BINS]
   streamauc train  [--dataset D] [--steps N] [--lr X] [--events N]
@@ -216,9 +221,9 @@ struct FleetFlags {
 
 fn parse_fleet_flags(args: &Args) -> Result<FleetFlags> {
     args.validate_flags(&[
-        "streams", "events", "shards", "workers", "window", "estimator", "epsilon", "batch",
-        "drift-frac", "skew", "seed", "evict-idle", "evict-age", "pool", "pipeline", "adaptive",
-        "top", "count-below", "hist",
+        "streams", "events", "shards", "workers", "window", "estimator", "epsilon", "bins",
+        "score-range", "batch", "drift-frac", "skew", "seed", "evict-idle", "evict-age", "pool",
+        "pipeline", "adaptive", "top", "count-below", "hist",
     ])?;
     let streams: usize = args.get_or("streams", 1000)?;
     let events: usize = args.get_or("events", 500_000)?;
@@ -263,10 +268,39 @@ fn parse_fleet_flags(args: &Args) -> Result<FleetFlags> {
     if !skew.is_finite() || skew < 1.0 {
         bail!("--skew must be finite and ≥ 1 (1 = uniform stream popularity)");
     }
+    // Bounded-score declarations are validated here, at the boundary,
+    // mirroring `BinnedAuc::new`'s contract: the run must fail before
+    // any stream state exists, not panic mid-ingest.
+    let bins: usize = args.get_or("bins", 256)?;
+    if bins == 0 {
+        bail!("--bins must be ≥ 1 count cell");
+    }
+    let range_raw = args.get("score-range").unwrap_or("0,1");
+    let (lo, hi) = match range_raw.split_once(',') {
+        Some((a, b)) => {
+            let lo: f64 = a
+                .trim()
+                .parse()
+                .map_err(|e| anyhow::anyhow!("flag --score-range {range_raw:?}: {e}"))?;
+            let hi: f64 = b
+                .trim()
+                .parse()
+                .map_err(|e| anyhow::anyhow!("flag --score-range {range_raw:?}: {e}"))?;
+            (lo, hi)
+        }
+        None => bail!("--score-range must be `LO,HI` (comma-separated), got {range_raw:?}"),
+    };
+    if !lo.is_finite() || !hi.is_finite() {
+        bail!("--score-range bounds must be finite, got [{lo}, {hi}]");
+    }
+    if lo >= hi {
+        bail!("--score-range must satisfy LO < HI, got [{lo}, {hi}]");
+    }
     let estimator = match args.get("estimator").unwrap_or("approx") {
         "approx" => EstimatorKind::Approx { epsilon },
         "exact" => EstimatorKind::ExactMaintained,
-        other => bail!("--estimator must be `approx` or `exact`, got {other:?}"),
+        "binned" => EstimatorKind::Binned { bins, lo, hi },
+        other => bail!("--estimator must be `approx`, `exact` or `binned`, got {other:?}"),
     };
     Ok(FleetFlags {
         streams,
@@ -337,6 +371,7 @@ fn cmd_fleet(args: &Args) -> Result<()> {
     let estimator_desc = match estimator {
         EstimatorKind::Approx { epsilon } => format!("approx ε={epsilon}"),
         EstimatorKind::ExactMaintained => "exact-maintained".to_string(),
+        EstimatorKind::Binned { bins, lo, hi } => format!("binned {bins}×[{lo}, {hi}]"),
     };
     println!(
         "# fleet: {streams} streams ({drifted} drifted), {events} events, \
@@ -543,6 +578,28 @@ mod tests {
         let f = parse_fleet_flags(&fleet_args("--estimator approx --epsilon 0.2")).unwrap();
         assert_eq!(f.estimator, EstimatorKind::Approx { epsilon: 0.2 });
         reject("--estimator fancy", "--estimator");
+    }
+
+    #[test]
+    fn fleet_binned_flags_select_and_validate_the_declaration() {
+        // Defaults: 256 cells over the unit interval.
+        let f = parse_fleet_flags(&fleet_args("--estimator binned")).unwrap();
+        assert_eq!(f.estimator, EstimatorKind::Binned { bins: 256, lo: 0.0, hi: 1.0 });
+        // Explicit declaration, negative lower bound included.
+        let f = parse_fleet_flags(&fleet_args("--estimator binned --bins 64 --score-range -1.5,2"))
+            .unwrap();
+        assert_eq!(f.estimator, EstimatorKind::Binned { bins: 64, lo: -1.5, hi: 2.0 });
+        // Invalid declarations fail at the boundary, naming the flag —
+        // even when the estimator is not binned (consistent with how
+        // `--epsilon` is vetted under `--estimator exact`).
+        reject("--bins 0", "--bins");
+        reject("--estimator binned --bins 0", "--bins");
+        reject("--score-range 1,0", "LO < HI");
+        reject("--score-range 1,1", "LO < HI");
+        reject("--score-range inf,1", "finite");
+        reject("--score-range 0,nan", "finite");
+        reject("--score-range 0:1", "comma-separated");
+        reject("--score-range zero,one", "--score-range");
     }
 
     #[test]

@@ -396,6 +396,99 @@ fn mixed_estimator_fleet_is_bit_identical_to_serial() {
     });
 }
 
+/// The full three-way mix: binned bounded-score, exact-maintained and
+/// ε-approximate streams in one fleet, with hot *broken* streams among
+/// the binned and exact ones so all three kinds drive the alarm path.
+/// The binned streams declare `[-1, 2]` — the trace's normal margins
+/// (mean 0.3/0.7, sd 0.1) cannot leave it — and every digest component
+/// (aggregates vs rescan, AUC histograms vs snapshot rebin, triage,
+/// streaming snapshots, count-below, sketch verification) must be
+/// bit-identical to serial under pooled, pipelined and adaptive
+/// execution. The raw score distribution query, which reads binned
+/// streams straight off their count arrays, must agree across
+/// strategies too.
+#[test]
+fn three_way_mixed_estimator_fleet_is_bit_identical_to_serial() {
+    streamauc::testing::check(0x3B1_ED01, 2, |rng| {
+        let n_streams = 8 + rng.below(24); // 8..=31
+        let n_batches = 40;
+        let batches = skewed_batches(rng, n_streams, n_batches);
+        // id % 3 == 0 → exact-maintained (stream 0: hot and broken),
+        // id % 3 == 1 → binned (stream 1: hot and broken),
+        // id % 3 == 2 → the ε-approximate default.
+        let configure = |fleet: &mut AucFleet| {
+            for id in 0..n_streams {
+                match id % 3 {
+                    0 => fleet.configure_stream(
+                        id,
+                        monitored_defaults().with_estimator(EstimatorKind::ExactMaintained),
+                    ),
+                    1 => fleet.configure_stream(
+                        id,
+                        monitored_defaults().with_estimator(EstimatorKind::Binned {
+                            bins: 96,
+                            lo: -1.0,
+                            hi: 2.0,
+                        }),
+                    ),
+                    _ => {}
+                }
+            }
+        };
+        let mut steps = Vec::new();
+        for i in 0..n_batches {
+            steps.push(Step::Batch(i));
+            if i % 5 == 2 {
+                steps.push(Step::Aggregate);
+            }
+            if i % 7 == 3 {
+                steps.push(Step::TopK(5));
+            }
+            if i % 9 == 4 {
+                // Cross-checked against the snapshot-derived rebin
+                // inside `run_schedule` — with binned streams present.
+                steps.push(Step::Histogram(3 + rng.below(13) as usize));
+            }
+            if i % 11 == 6 {
+                steps.push(Step::SnapshotIter);
+            }
+            if i % 13 == 7 {
+                steps.push(Step::CountBelow(0.4 + rng.uniform() * 0.4));
+            }
+        }
+        let mut serial = fleet_with(1, false, false);
+        configure(&mut serial);
+        let reference = run_schedule(&mut serial, &batches, &steps);
+        assert!(!reference.alarms.is_empty(), "three-way scenario must alarm to compare");
+        assert!(
+            reference.histograms.iter().any(|h| h.live_streams > 0),
+            "three-way scenario must produce histograms to compare"
+        );
+        let reference_scores = serial.score_histogram(8);
+        assert!(reference_scores.entries > 0, "score distribution must be non-empty");
+        for (workers, pool, pipeline, adaptive) in [
+            (4, true, false, false),
+            (8, true, true, false),
+            (8, true, true, true),
+            (4, false, false, false),
+        ] {
+            let mut fleet = fleet_with_adaptive(workers, pool, pipeline, adaptive);
+            configure(&mut fleet);
+            let digest = run_schedule(&mut fleet, &batches, &steps);
+            assert_eq!(
+                reference, digest,
+                "three-way mixed fleet diverged from serial (workers {workers}, \
+                 pool {pool}, pipeline {pipeline}, adaptive {adaptive})"
+            );
+            assert_eq!(
+                fleet.score_histogram(8),
+                reference_scores,
+                "score distribution diverged from serial (workers {workers})"
+            );
+        }
+    });
+}
+
 /// Reconfiguring workers mid-stream (respawning the pool) must splice
 /// invisibly: a fleet that switches 1 → 8 → 2 workers across a schedule
 /// matches one that stays serial throughout.
