@@ -1,0 +1,126 @@
+//! Serving quickstart: a fleet behind the wire, queried over both
+//! protocols while it keeps ingesting.
+//!
+//! ```sh
+//! cargo run --release --example serve
+//! ```
+//!
+//! Starts a [`FleetServer`] on an ephemeral loopback port (the same
+//! thing `streamauc fleet serve` does for a long-running process),
+//! ingests bursty multi-stream traffic *through* the server, and hits
+//! every endpoint both ways — HTTP/1.1 + JSON and the length-prefixed
+//! binary protocol, sharing one port — checking each wire answer
+//! against the in-process query it must be bit-identical to. A
+//! subscriber rides along: it takes the full fleet-sketch baseline
+//! once, then reconstructs the server's published state from the
+//! per-drain deltas alone, verifying sequence numbers stay gapless.
+//! Protocol details live in `rust/DESIGN.md` §Serving.
+
+use streamauc::fleet::{AucFleet, EstimatorKind, FleetConfig, StreamConfig};
+use streamauc::serve::{http_get, http_subscribe, json, wire, BinClient, FleetServer};
+use streamauc::stream::MultiStream;
+
+const STREAMS: u64 = 500;
+const BATCH: usize = 2_048;
+const ROUNDS: usize = 40;
+
+fn main() {
+    let defaults = StreamConfig {
+        window: 200,
+        estimator: EstimatorKind::Approx { epsilon: 0.1 },
+        monitor: None,
+    };
+    let fleet = AucFleet::new(FleetConfig {
+        shards: 32,
+        workers: 4,
+        pool: true,
+        pipeline: false,
+        adaptive: false,
+        stream_defaults: defaults,
+    });
+
+    // Ephemeral port: the OS picks, `local_addr` reports.
+    let server = FleetServer::start(fleet, "127.0.0.1:0").expect("bind loopback");
+    let addr = server.local_addr();
+    println!("serving fleet queries on http://{addr} (binary protocol on the same port)\n");
+
+    // A subscriber connected *before* traffic sees the empty baseline
+    // and then one delta per ingestion drain.
+    let mut deltas = http_subscribe(addr).expect("subscribe");
+    let baseline = deltas.next().expect("baseline line").expect("read baseline");
+    let (mut seq, mut mirror) = json::sketch_from_json(&baseline).expect("decode baseline");
+
+    // Ingest through the server so every drain publishes to the
+    // subscriber while the query surface stays live.
+    let mut gen = MultiStream::new(STREAMS as usize, 0x5E1F).with_mean_burst(8.0);
+    for _ in 0..ROUNDS {
+        server.ingest_batch(&gen.next_batch(BATCH));
+        let line = deltas.next().expect("delta line").expect("read delta");
+        let next = json::apply_subscription_json(&line, &mut mirror).expect("apply delta");
+        assert_eq!(next, seq + 1, "subscription skipped a sequence number");
+        seq = next;
+    }
+    let (published_seq, published) = server.last_published();
+    assert_eq!(seq, published_seq, "mirror fell behind the server");
+    assert_eq!(mirror, published, "delta-reconstructed sketch diverged");
+    println!(
+        "subscriber reconstructed the fleet sketch from {ROUNDS} deltas: \
+         {} live streams, mean AUC {:.4} (seq {seq})\n",
+        mirror.live,
+        mirror.mean_auc()
+    );
+
+    // Every endpoint, over HTTP/JSON — decoded and checked against the
+    // in-process answer.
+    let (status, body) = http_get(addr, "/aggregate").expect("GET /aggregate");
+    assert_eq!(status, 200);
+    let agg = json::aggregate_from_json(&body).expect("decode aggregate");
+    assert_eq!(agg, server.with_fleet(|f| f.aggregate()), "wire aggregate diverged");
+    println!(
+        "GET /aggregate        → {} streams, mean AUC {:.4}, median {:.4}",
+        agg.streams, agg.mean_auc, agg.median_auc
+    );
+
+    let (_, body) = http_get(addr, "/snapshot").expect("GET /snapshot");
+    let snap = json::snapshot_from_json(&body).expect("decode snapshot");
+    println!(
+        "GET /snapshot         → {} streams, {} total events",
+        snap.streams.len(),
+        snap.total_events
+    );
+
+    let (_, body) = http_get(addr, "/top_k_worst?k=3").expect("GET /top_k_worst");
+    let worst = json::top_k_from_json(&body).expect("decode top-k");
+    let ids: Vec<u64> = worst.iter().map(|s| s.stream).collect();
+    println!("GET /top_k_worst?k=3  → worst streams {ids:?}");
+
+    let (_, body) = http_get(addr, "/count_below?t=0.7").expect("GET /count_below");
+    let (threshold, count) = json::count_below_from_json(&body).expect("decode count");
+    println!("GET /count_below      → {count} streams below AUC {threshold}");
+
+    let (_, body) = http_get(addr, "/auc_histogram?bins=10").expect("GET /auc_histogram");
+    let hist = json::auc_histogram_from_json(&body).expect("decode histogram");
+    println!("GET /auc_histogram    → {:?} ({} live)", hist.counts, hist.live_streams);
+
+    let (_, body) = http_get(addr, "/score_histogram?bins=10").expect("GET /score_histogram");
+    let scores = json::score_histogram_from_json(&body).expect("decode scores");
+    println!("GET /score_histogram  → {:?} ({} entries)", scores.counts, scores.entries);
+
+    // Malformed queries come back as errors, not panics.
+    let (status, _) = http_get(addr, "/auc_histogram?bins=0").expect("GET bins=0");
+    assert_eq!(status, 400, "zero bins must be a client error");
+    let (status, _) = http_get(addr, "/count_below?t=nan").expect("GET t=nan");
+    assert_eq!(status, 400, "a NaN threshold must be a client error");
+
+    // The same queries over the binary protocol, bit-identical to HTTP.
+    let mut bin = BinClient::connect(addr).expect("binary session");
+    let (code, payload) = bin.request(wire::OP_AGGREGATE, &[]).expect("binary aggregate");
+    assert_eq!(code, wire::STATUS_OK);
+    assert_eq!(wire::decode_aggregate(&payload).expect("decode"), agg, "binary ≠ HTTP");
+    let (code, payload) =
+        bin.request(wire::OP_COUNT_BELOW, &0.7f64.to_bits().to_le_bytes()).expect("binary count");
+    assert_eq!(code, wire::STATUS_OK);
+    assert_eq!(wire::decode_count_below(&payload).expect("decode"), (0.7, count));
+    println!("\nbinary protocol answers decode bit-identical to the HTTP/JSON ones.");
+    println!("serving quickstart complete.");
+}

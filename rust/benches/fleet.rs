@@ -57,6 +57,14 @@
 //! `FleetConfig::adaptive`, which drains trickle batches inline — the
 //! crossover the adaptive satellite exists for.
 //!
+//! A **served-reads** measurement rides the same data over the wire
+//! (`rust/src/serve`): a pre-ingested pooled fleet goes behind a
+//! loopback `FleetServer` while a background thread keeps feeding
+//! 64-event batches through it, and `serve_qps` counts keep-alive HTTP
+//! `/aggregate` round-trips per second under that concurrent write
+//! load. The 1-stream row skips the server and reports 0 — one stream
+//! is not a serving scenario.
+//!
 //! Besides the human-readable tables, the run writes machine-readable
 //! `BENCH_fleet.json` at the repository root (events/sec or calls/sec
 //! per scenario per stream count, plus parallel speedups) so the perf
@@ -72,11 +80,14 @@
 //! a determinism smoke test.
 
 use std::fmt::Write as _;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
 use std::time::Instant;
 
 use streamauc::coordinator::window::Window;
 use streamauc::coordinator::{ApproxAuc, AucMonitor};
 use streamauc::fleet::{AucFleet, FleetConfig, StreamConfig};
+use streamauc::serve::{FleetServer, HttpClient};
 use streamauc::stream::MultiStream;
 
 const WINDOW: usize = 100;
@@ -109,6 +120,7 @@ struct Row {
     mixed_pooled: f64,
     binned_serial: f64,
     binned_pooled: f64,
+    serve_qps: f64,
     live: usize,
 }
 
@@ -221,6 +233,7 @@ fn json_report(events_per_row: usize, workers: usize, rows: &[Row]) -> String {
              \"small_batch_pooled\": {:.1}, \"small_batch_adaptive\": {:.1}, \
              \"mixed_serial\": {:.1}, \"mixed_pooled\": {:.1}, \
              \"binned_serial\": {:.1}, \"binned_pooled\": {:.1}, \
+             \"serve_qps\": {:.1}, \
              \"speedup_scoped\": {:.3}, \"speedup_pooled\": {:.3}, \"speedup_pipelined\": {:.3}, \
              \"speedup_monitor\": {:.3}, \"speedup_monitor_read\": {:.3}, \
              \"speedup_aggregate\": {:.3}, \"speedup_aggregate_sketch\": {:.3}, \
@@ -251,6 +264,7 @@ fn json_report(events_per_row: usize, workers: usize, rows: &[Row]) -> String {
             r.mixed_pooled,
             r.binned_serial,
             r.binned_pooled,
+            r.serve_qps,
             r.batched_scoped / r.batched_serial,
             r.batched_pooled / r.batched_serial,
             r.pipelined / r.batched_serial,
@@ -437,6 +451,44 @@ fn main() {
         let monitored_cached = monitored_stack(&soup, false);
         let monitored_scan = monitored_stack(&soup, true);
 
+        // ---- served reads: keep-alive HTTP /aggregate round-trips
+        // answered while a background thread keeps ingesting 64-event
+        // batches through the same server --------------------------
+        let serve_qps = if n_streams > 1 {
+            let mut fed = fresh_fleet(false, workers, true, false, false);
+            for batch in soup.chunks(BATCH) {
+                fed.push_batch(batch);
+            }
+            let server =
+                Arc::new(FleetServer::start(fed, "127.0.0.1:0").expect("bind loopback"));
+            let addr = server.local_addr();
+            let stop = Arc::new(AtomicBool::new(false));
+            let feeder = {
+                let server = Arc::clone(&server);
+                let stop = Arc::clone(&stop);
+                let chunks: Vec<Vec<(u64, f64, bool)>> =
+                    soup.chunks(SMALL_BATCH).map(<[_]>::to_vec).collect();
+                std::thread::spawn(move || {
+                    let mut i = 0usize;
+                    while !stop.load(Ordering::Relaxed) {
+                        server.ingest_batch(&chunks[i % chunks.len()]);
+                        i += 1;
+                    }
+                })
+            };
+            let mut client = HttpClient::connect(addr).expect("connect loopback");
+            let qps = calls_per_sec(|| {
+                let (status, body) = client.get("/aggregate").expect("served aggregate");
+                assert_eq!(status, 200, "served aggregate errored mid-bench");
+                assert!(!body.is_empty());
+            });
+            stop.store(true, Ordering::Relaxed);
+            feeder.join().expect("feeder thread");
+            qps
+        } else {
+            0.0
+        };
+
         println!(
             "{n_streams:>8}  {one:>11.0}/s  {batched_serial:>10.0}/s  {batched_scoped:>10.0}/s  \
              {batched_pooled:>10.0}/s  {pipelined:>10.0}/s  {:>5.2}x  {monitor_serial:>10.0}/s  \
@@ -468,6 +520,7 @@ fn main() {
             mixed_pooled,
             binned_serial,
             binned_pooled,
+            serve_qps,
             live,
         });
     }
@@ -542,6 +595,16 @@ fn main() {
             r.small_batch_adaptive,
             r.small_batch_adaptive / r.small_batch_pooled,
         );
+    }
+
+    println!("\n== served reads: HTTP /aggregate qps under concurrent ingestion ==\n");
+    println!("{:>8}  {:>12}", "streams", "serve_qps");
+    for r in &rows {
+        if r.serve_qps > 0.0 {
+            println!("{:>8}  {:>10.0}/s", r.streams, r.serve_qps);
+        } else {
+            println!("{:>8}  {:>12}", r.streams, "(skipped)");
+        }
     }
 
     let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_fleet.json");

@@ -27,7 +27,7 @@
 //! batch before reading, like every other read path.
 
 use super::pool::{FleetCore, ShardWork};
-use super::shard::{worst_first, SKETCH_BINS};
+use super::shard::{threshold_bin, worst_first, SKETCH_BINS};
 use super::snapshot::StreamSnapshot;
 use super::AucFleet;
 
@@ -220,20 +220,36 @@ impl AucFleet {
     /// Number of live streams whose windowed AUC is strictly below
     /// `threshold` — the SLO accounting query.
     ///
-    /// Sketch-backed: every bin strictly below the threshold's bin is
-    /// counted from the merged histogram; only the boundary bin
-    /// compares actual cached estimates. Exact for any threshold —
-    /// `⌊64·t⌋` and the bin partition use exact f64 products, so a
-    /// value `v < t` can never sit in a bin above the boundary bin,
-    /// nor `v ≥ t` below it.
+    /// Edge semantics are explicit at this surface (thresholds arrive
+    /// from the network through `crate::serve`, so "whatever the cast
+    /// does" is not a contract): estimates live in `[0, 1]`, hence
+    /// `t ≤ 0` (including `-∞`) and NaN count nothing, and `t > 1`
+    /// (including `+∞`) counts every live stream — each resolved
+    /// before any bin arithmetic, instead of a bare `as usize` cast
+    /// silently truncating negative or NaN thresholds to bin 0.
+    ///
+    /// Thresholds in `(0, 1]` are sketch-backed: every bin strictly
+    /// below the threshold's bin is counted from the merged histogram;
+    /// only the boundary bin compares actual cached estimates. Exact —
+    /// `⌊64·t⌋` and the bin partition use the same exact f64 products
+    /// (`shard::threshold_bin`), so a value `v < t` can never sit in a
+    /// bin above the boundary bin, nor `v ≥ t` below it.
     pub fn count_below(&self, threshold: f64) -> usize {
+        if threshold.is_nan() || threshold <= 0.0 {
+            // Strictly-below-t is empty for t ≤ 0 (estimates are
+            // ≥ 0) and for NaN (no value compares below it); skip the
+            // sketch merge entirely.
+            return 0;
+        }
         let sketch = self.merged_sketch();
         if sketch.live == 0 {
             return 0;
         }
-        // NaN thresholds fall out naturally: the cast lands on bin 0
-        // and the strict comparison below rejects everything.
-        let boundary = ((threshold * SKETCH_BINS as f64) as usize).min(SKETCH_BINS - 1);
+        if threshold > 1.0 {
+            // Every estimate is ≤ 1 < t (covers +∞).
+            return sketch.live;
+        }
+        let boundary = threshold_bin(threshold);
         let whole_bins = sketch.count_before(boundary) as usize;
         if sketch.bins[boundary] == 0 {
             // Empty boundary bin: the refinement is provably 0, skip
@@ -250,8 +266,15 @@ impl AucFleet {
     }
 
     /// Histogram of the per-stream windowed AUCs over `[0, 1]` in
-    /// `bins` equal-width buckets (at least 1; AUC 1.0 lands in the
-    /// last).
+    /// `bins` equal-width buckets (AUC 1.0 lands in the last).
+    ///
+    /// # Panics
+    ///
+    /// Panics if `bins == 0` — a zero-bin histogram has no shape, and
+    /// silently clamping it to one catch-all bucket gave a malformed
+    /// request a shape-surprising answer. Matches
+    /// [`AucFleet::score_histogram`]; the CLI and the serving layer
+    /// validate at their own boundaries and return an error instead.
     ///
     /// When `bins` divides the sketch resolution (1, 2, 4, …, 64 —
     /// all powers of two, so both partitions use exact products and
@@ -262,7 +285,7 @@ impl AucFleet {
     /// way, partials are summed bin-wise, so the result is
     /// strategy-independent.
     pub fn auc_histogram(&self, bins: usize) -> AucHistogram {
-        let bins = bins.max(1);
+        assert!(bins >= 1, "auc_histogram: bins must be >= 1");
         if bins <= SKETCH_BINS && SKETCH_BINS % bins == 0 {
             let sketch = self.merged_sketch();
             let group = SKETCH_BINS / bins;
@@ -285,10 +308,16 @@ impl AucFleet {
     }
 
     /// Histogram of the raw window-entry scores over `[0, 1]` in
-    /// `bins` equal-width cells (at least 1; out-of-range scores clamp
-    /// into the edge cells) — the input-distribution view that pairs
-    /// with [`AucFleet::auc_histogram`]'s estimate distribution, e.g.
-    /// for spotting score drift before it moves the AUC.
+    /// `bins` equal-width cells (out-of-range scores clamp into the
+    /// edge cells) — the input-distribution view that pairs with
+    /// [`AucFleet::auc_histogram`]'s estimate distribution, e.g. for
+    /// spotting score drift before it moves the AUC.
+    ///
+    /// # Panics
+    ///
+    /// Panics if `bins == 0`, unified with [`AucFleet::auc_histogram`]
+    /// (this query used to clamp to a single catch-all cell while the
+    /// CLI validated — a malformed request must error, not surprise).
     ///
     /// Binned streams declared over exactly `[0, 1]` whose cell count
     /// is a multiple of `bins` are answered straight from their count
@@ -297,7 +326,7 @@ impl AucFleet {
     /// over its window FIFO. Partials are summed cell-wise, so the
     /// result is strategy-independent.
     pub fn score_histogram(&self, bins: usize) -> ScoreHistogram {
-        let bins = bins.max(1);
+        assert!(bins >= 1, "score_histogram: bins must be >= 1");
         self.wait_inflight();
         let mut counts = vec![0u64; bins];
         let mut entries = 0u64;
@@ -382,6 +411,72 @@ mod tests {
     }
 
     #[test]
+    fn count_below_edge_thresholds_have_explicit_semantics() {
+        let fleet = demo_fleet(2);
+        // t ≤ 0 (estimates are ≥ 0) and NaN count nothing.
+        assert_eq!(fleet.count_below(-1.0), 0);
+        assert_eq!(fleet.count_below(f64::NEG_INFINITY), 0);
+        assert_eq!(fleet.count_below(f64::NAN), 0);
+        // t = 1 is strict: the two AUC-1.0 streams are not below it.
+        assert_eq!(fleet.count_below(1.0), 2);
+        // t > 1 (including +∞) counts every live stream.
+        assert_eq!(fleet.count_below(1.0 + f64::EPSILON), 4);
+        assert_eq!(fleet.count_below(f64::INFINITY), 4);
+        // An empty fleet answers 0 for every threshold.
+        let empty = AucFleet::with_defaults();
+        for t in [f64::NAN, -1.0, 0.0, 0.5, 1.0, 2.0, f64::INFINITY] {
+            assert_eq!(empty.count_below(t), 0, "threshold {t}");
+        }
+    }
+
+    #[test]
+    fn count_below_matches_the_snapshot_rescan_for_every_threshold() {
+        use crate::testing::Pcg;
+        // Regression for the boundary-bin cast: sweep thresholds across
+        // and beyond [0, 1] — including exact bin edges, which is where
+        // `as usize` truncation and the strict comparison can disagree
+        // — over a seeded mixed-estimator fleet, against the
+        // O(streams) rescan answer derived from the same snapshot the
+        // rescan aggregate uses.
+        for workers in [1usize, 4] {
+            let mut fleet = AucFleet::new(FleetConfig {
+                shards: 8,
+                workers,
+                stream_defaults: StreamConfig::new(32, 0.1).without_monitor(),
+                ..FleetConfig::default()
+            });
+            fleet.configure_stream(3, StreamConfig::exact(32).without_monitor());
+            fleet.configure_stream(5, StreamConfig::binned(32, 64, 0.0, 1.0).without_monitor());
+            let mut rng = Pcg::seed(0xC0B3);
+            for _ in 0..900 {
+                let id = rng.below(24);
+                fleet.push(id, rng.uniform(), rng.chance(0.5));
+            }
+            let snap = fleet.snapshot();
+            let rescan =
+                |t: f64| snap.streams.iter().filter(|s| s.len > 0 && s.auc < t).count();
+            let mut thresholds = vec![
+                f64::NEG_INFINITY,
+                -0.5,
+                0.0,
+                1.0,
+                1.5,
+                f64::INFINITY,
+            ];
+            for i in 0..=64 {
+                thresholds.push(i as f64 / 64.0); // every sketch-bin edge
+            }
+            for i in 0..50 {
+                thresholds.push(0.02 * i as f64 + 0.013);
+            }
+            for t in thresholds {
+                assert_eq!(fleet.count_below(t), rescan(t), "workers {workers}, t = {t}");
+            }
+            assert_eq!(fleet.count_below(f64::NAN), 0);
+        }
+    }
+
+    #[test]
     fn histogram_bins_cover_the_unit_interval() {
         let fleet = demo_fleet(4);
         let hist = fleet.auc_histogram(4);
@@ -392,8 +487,18 @@ mod tests {
         assert_eq!(hist.counts.iter().sum::<usize>(), hist.live_streams);
         assert_eq!(hist.bin_range(0), (0.0, 0.25));
         assert!((hist.fraction(3) - 0.5).abs() < 1e-12);
-        // bins = 0 is clamped to one all-covering bin.
-        assert_eq!(fleet.auc_histogram(0).counts, vec![4]);
+    }
+
+    #[test]
+    #[should_panic(expected = "auc_histogram: bins must be >= 1")]
+    fn auc_histogram_rejects_zero_bins() {
+        demo_fleet(1).auc_histogram(0);
+    }
+
+    #[test]
+    #[should_panic(expected = "score_histogram: bins must be >= 1")]
+    fn score_histogram_rejects_zero_bins() {
+        demo_fleet(1).score_histogram(0);
     }
 
     #[test]
@@ -415,8 +520,6 @@ mod tests {
         assert_eq!(h.counts, vec![15, 0, 5, 15]);
         assert_eq!(h.bins(), 4);
         assert!((h.fraction(2) - 5.0 / 35.0).abs() < 1e-12);
-        // bins = 0 is clamped to one all-covering cell.
-        assert_eq!(fleet.score_histogram(0).counts, vec![35]);
         let empty = AucFleet::with_defaults();
         assert_eq!(empty.score_histogram(3).counts, vec![0; 3]);
         assert_eq!(empty.score_histogram(3).fraction(0), 0.0);

@@ -76,6 +76,23 @@ pub(super) fn sketch_bin(auc: f64) -> u8 {
     ((auc * SKETCH_BINS as f64) as usize).min(SKETCH_BINS - 1) as u8
 }
 
+/// Sketch bin containing a `count_below`-style threshold. Defined next
+/// to [`sketch_bin`] because the refinement argument in
+/// `fleet/query.rs` needs the *same* partition for values and
+/// thresholds: a value `v < t` can never sit in a bin above
+/// `threshold_bin(t)`, nor `v ≥ t` below it. Meaningful only for
+/// `0 < t ≤ 1` — the query surface handles everything outside that
+/// range explicitly before binning (a bare `as usize` cast would
+/// silently truncate negative or NaN thresholds to bin 0).
+#[inline]
+pub(super) fn threshold_bin(threshold: f64) -> usize {
+    debug_assert!(
+        threshold > 0.0 && threshold <= 1.0,
+        "threshold {threshold} outside (0, 1] must be resolved before binning"
+    );
+    ((threshold * SKETCH_BINS as f64) as usize).min(SKETCH_BINS - 1)
+}
+
 /// The "worst stream first" total order on `(windowed AUC, stream id)`
 /// keys: ascending AUC, ties broken by id. Shared by
 /// [`Shard::top_k_worst`] and the global merge in `fleet/query.rs` —

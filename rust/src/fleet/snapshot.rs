@@ -135,17 +135,28 @@ impl FleetAggregate {
     /// Nearest-rank indices of (min, p10, median, p90, max) over
     /// `live` sorted values — one formula shared by the sketch-backed
     /// path (`AucFleet::aggregate`) and the rescan reference, so the
-    /// two select the identical order statistics.
+    /// two select the identical order statistics. Total over every
+    /// `live`, including 0 and 1: `live - 1` saturates instead of
+    /// underflowing, so a caller that forgets the empty-fleet guard
+    /// gets `[0; 5]` rather than a wrapped index — the endpoints of
+    /// the serving layer made that path reachable from the network.
     pub(super) fn ranks(live: usize) -> [usize; 5] {
-        let q = |frac: f64| ((live - 1) as f64 * frac).round() as usize;
-        [0, q(0.1), q(0.5), q(0.9), live - 1]
+        let top = live.saturating_sub(1);
+        let q = |frac: f64| (top as f64 * frac).round() as usize;
+        [0, q(0.1), q(0.5), q(0.9), top]
     }
 
     /// Mean of `live` AUCs from their fixed-point sum. One shared
     /// formula (again: sketch path ≡ rescan reference bit-for-bit);
     /// integer summation makes the value independent of summation
-    /// order and of the add/remove history that produced it.
+    /// order and of the add/remove history that produced it. Total at
+    /// `live == 0` (the crate-wide 0.5 "no information" convention
+    /// instead of a NaN from `0 / 0`), for the same
+    /// network-reachability reason as [`FleetAggregate::ranks`].
     pub(super) fn mean_of_quantized(qauc_sum: i128, live: usize) -> f64 {
+        if live == 0 {
+            return 0.5;
+        }
         (qauc_sum as f64) / super::shard::AUC_QUANT / live as f64
     }
 
@@ -181,6 +192,41 @@ impl FleetAggregate {
             max_auc: aucs[r_max],
             mean_auc: FleetAggregate::mean_of_quantized(qauc_sum, live_streams),
         }
+    }
+}
+
+/// Public view of the fleet-wide merge of the shard-maintained AUC
+/// sketches ([`AucFleet::sketch_state`](super::AucFleet::sketch_state))
+/// — exactly the state a dashboard needs, and what the serving layer's
+/// subscription stream pushes per drain as deltas (`crate::serve`).
+///
+/// `bins[i]` counts live streams whose windowed AUC falls in bin `i`
+/// of the fixed 64-bin partition `⌊auc · 64⌋` (AUC 1.0 lands in the
+/// last bin); `qauc_sum` is the 2⁵²-fixed-point sum of the live
+/// estimates, so [`FleetSketch::mean_auc`] reproduces the aggregate's
+/// mean bit-for-bit. All fields are exactly reversible integers:
+/// applying a subscription delta on top of a baseline reconstructs the
+/// server's state without drift.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct FleetSketch {
+    /// Live-stream counts per AUC bin (fixed 64-bin partition).
+    pub bins: Vec<u64>,
+    /// Streams with a non-empty window.
+    pub live: usize,
+    /// Streams inside an alarmed excursion.
+    pub alarmed: usize,
+    /// All streams, live or not (slab totals).
+    pub streams: usize,
+    /// Fixed-point (2⁵²) sum of the live AUC estimates.
+    pub qauc_sum: i128,
+}
+
+impl FleetSketch {
+    /// Mean per-stream AUC — bit-identical to
+    /// [`FleetAggregate::mean_auc`](FleetAggregate) (same fixed-point
+    /// formula); 0.5 with no live stream.
+    pub fn mean_auc(&self) -> f64 {
+        FleetAggregate::mean_of_quantized(self.qauc_sum, self.live)
     }
 }
 
@@ -255,5 +301,39 @@ mod tests {
         assert_eq!(agg.median_auc, 0.5);
         assert_eq!(agg.max_auc, 0.5);
         assert_eq!(agg.mean_auc, 0.5);
+    }
+
+    #[test]
+    fn ranks_are_total_at_zero_and_one() {
+        // `live == 0` must not underflow (no caller should index with
+        // the result, but the formula itself has to be total now that
+        // the serving layer reaches these paths from the network)…
+        assert_eq!(FleetAggregate::ranks(0), [0; 5]);
+        // …and a single live stream maps every quantile to itself.
+        assert_eq!(FleetAggregate::ranks(1), [0; 5]);
+        assert_eq!(FleetAggregate::ranks(2), [0, 0, 1, 1, 1]);
+    }
+
+    #[test]
+    fn mean_of_quantized_is_total_at_zero() {
+        assert_eq!(FleetAggregate::mean_of_quantized(0, 0), 0.5);
+        assert_eq!(FleetAggregate::mean_of_quantized(12345, 0), 0.5);
+        let one = i128::from(super::super::shard::quantize_auc(1.0));
+        assert_eq!(FleetAggregate::mean_of_quantized(one, 1), 1.0);
+    }
+
+    #[test]
+    fn sketch_mean_matches_the_aggregate_formula() {
+        let sk = FleetSketch {
+            bins: vec![0; 64],
+            live: 0,
+            alarmed: 0,
+            streams: 0,
+            qauc_sum: 0,
+        };
+        assert_eq!(sk.mean_auc(), 0.5);
+        let one = i128::from(super::super::shard::quantize_auc(1.0));
+        let sk = FleetSketch { live: 2, qauc_sum: one, ..sk };
+        assert_eq!(sk.mean_auc(), 0.5);
     }
 }

@@ -54,6 +54,12 @@
 //!   bit-identical to the retained rescan reference; plus fleet-wide
 //!   drift alarms, streaming snapshots, and idle- and age-based stream
 //!   eviction.
+//! * [`serve`] — the fleet's query surface over the wire: a std-only
+//!   [`FleetServer`](serve::FleetServer) speaking HTTP/1.1 (JSON) and a
+//!   length-prefixed binary protocol on one `TcpListener` port, with
+//!   every endpoint answering bit-identical to the in-process query and
+//!   a subscription stream pushing one fleet-sketch delta per ingestion
+//!   drain (`rust/DESIGN.md` §Serving).
 //! * [`stream`] — deterministic synthetic data sources standing in for the
 //!   paper's UCI datasets (see `DESIGN.md` §Substitutions), the
 //!   multi-stream fleet generator, drift injectors and CSV I/O.
@@ -97,6 +103,7 @@ pub mod coordinator;
 pub mod experiments;
 pub mod fleet;
 pub mod runtime;
+pub mod serve;
 pub mod stream;
 pub mod testing;
 
@@ -104,3 +111,4 @@ pub use coordinator::{
     ApproxAuc, AucEstimator, BinnedAuc, ExactAuc, MaintainedExactAuc, SlidingAuc,
 };
 pub use fleet::AucFleet;
+pub use serve::FleetServer;

@@ -8,6 +8,7 @@
 //!                  [--score-range LO,HI] [--batch B] [--drift-frac F]
 //!                  [--skew X] [--seed S] [--evict-idle N] [--evict-age N] [--pool BOOL]
 //!                  [--pipeline] [--adaptive] [--top K] [--count-below X] [--hist BINS]
+//! streamauc fleet serve [--addr HOST:PORT] [fleet flags as above]
 //! streamauc train  [--dataset D] [--steps N] [--lr X] [--events N] [--artifacts DIR] [--out FILE]
 //! streamauc help
 //! ```
@@ -22,6 +23,11 @@
 //! previous drain, `--adaptive` scales active workers to the batch
 //! size — every combination is bit-identical to serial) and then
 //! answers the monitoring queries (`--top`, `--count-below`, `--hist`).
+//! `fleet serve` runs the same ingest while serving every query over
+//! the wire — HTTP/1.1 JSON and a binary protocol on one `--addr`
+//! port, plus a `/subscribe` stream of per-drain sketch deltas
+//! (`rust/DESIGN.md` §Serving) — and keeps serving after the ingest
+//! completes, until interrupted.
 //! `--estimator` selects the per-stream estimator: `approx` (default)
 //! runs the paper's `ε`-compressed sketch, `exact` the tree-maintained
 //! exact accumulator (no `ε`; `--epsilon` is ignored), `binned` the
@@ -44,6 +50,7 @@ use streamauc::coordinator::{ApproxAuc, AucMonitor, MonitorEvent, NaiveAuc};
 use streamauc::experiments::{fig1, fig2, fig3, table1, ExpConfig, Table};
 use streamauc::fleet::{AucFleet, EstimatorKind, FleetConfig, StreamConfig};
 use streamauc::runtime::{Runtime, Scorer, Trainer};
+use streamauc::serve::FleetServer;
 use streamauc::stream::source::write_csv;
 use streamauc::stream::synth::{paper_datasets, Dataset, DatasetSpec};
 use streamauc::stream::{Drift, DriftSchedule, MultiStream, StreamProfile};
@@ -82,6 +89,7 @@ USAGE:
                    [--score-range LO,HI] [--batch B] [--drift-frac F]
                    [--skew X] [--seed S] [--evict-idle N] [--evict-age N] [--pool BOOL]
                    [--pipeline] [--adaptive] [--top K] [--count-below X] [--hist BINS]
+  streamauc fleet serve [--addr HOST:PORT] [fleet flags as above]
   streamauc train  [--dataset D] [--steps N] [--lr X] [--events N]
                    [--artifacts DIR] [--out stream.csv]
   streamauc help
@@ -217,14 +225,19 @@ struct FleetFlags {
     evict_age: u64,
     top: usize,
     hist_bins: usize,
+    count_below: Option<f64>,
 }
 
-fn parse_fleet_flags(args: &Args) -> Result<FleetFlags> {
-    args.validate_flags(&[
+fn parse_fleet_flags(args: &Args, serve: bool) -> Result<FleetFlags> {
+    let mut allowed = vec![
         "streams", "events", "shards", "workers", "window", "estimator", "epsilon", "bins",
         "score-range", "batch", "drift-frac", "skew", "seed", "evict-idle", "evict-age", "pool",
         "pipeline", "adaptive", "top", "count-below", "hist",
-    ])?;
+    ];
+    if serve {
+        allowed.push("addr");
+    }
+    args.validate_flags(&allowed)?;
     let streams: usize = args.get_or("streams", 1000)?;
     let events: usize = args.get_or("events", 500_000)?;
     let shards: usize = args.get_or("shards", 64)?;
@@ -244,6 +257,21 @@ fn parse_fleet_flags(args: &Args) -> Result<FleetFlags> {
     let evict_age_raw: f64 = args.get_or("evict-age", 0.0)?;
     let top: usize = args.get_or("top", 10)?;
     let hist_bins: usize = args.get_or("hist", 10)?;
+    // `t ≤ 0` counts nothing, `t > 1` counts every live stream — both
+    // finite edges are well-defined at the query layer. Non-finite
+    // thresholds are rejected here: `inf`/`nan` is a typo, not a query.
+    let count_below: Option<f64> = match args.get("count-below") {
+        Some(raw) => {
+            let threshold: f64 = raw
+                .parse()
+                .map_err(|e| anyhow::anyhow!("flag --count-below {raw:?}: {e}"))?;
+            if !threshold.is_finite() {
+                bail!("--count-below must be a finite AUC threshold, got {threshold}");
+            }
+            Some(threshold)
+        }
+        None => None,
+    };
     if streams == 0 || events == 0 || batch == 0 {
         bail!("--streams, --events and --batch must be positive");
     }
@@ -320,35 +348,17 @@ fn parse_fleet_flags(args: &Args) -> Result<FleetFlags> {
         evict_age: evict_age_raw as u64,
         top,
         hist_bins,
+        count_below,
     })
 }
 
-fn cmd_fleet(args: &Args) -> Result<()> {
-    let FleetFlags {
-        streams,
-        events,
-        shards,
-        workers,
-        pool,
-        pipeline,
-        adaptive,
-        window,
-        estimator,
-        batch,
-        drift_frac,
-        skew,
-        seed,
-        evict_idle,
-        evict_age,
-        top,
-        hist_bins,
-    } = parse_fleet_flags(args)?;
-
-    // Drift hits the first `drift_frac` of streams halfway through
-    // their expected per-stream traffic.
-    let drifted = (streams as f64 * drift_frac).round() as u64;
-    let per_stream = (events / streams).max(1) as u64;
-    let profiles: Vec<StreamProfile> = (0..streams as u64)
+/// Deterministic generator + fleet shared by `fleet` and
+/// `fleet serve`: drift hits the first `drift_frac` of streams halfway
+/// through their expected per-stream traffic.
+fn build_fleet(f: &FleetFlags) -> (MultiStream, AucFleet, u64) {
+    let drifted = (f.streams as f64 * f.drift_frac).round() as u64;
+    let per_stream = (f.events / f.streams).max(1) as u64;
+    let profiles: Vec<StreamProfile> = (0..f.streams as u64)
         .map(|id| {
             let p = StreamProfile::healthy(id);
             if id < drifted {
@@ -358,15 +368,38 @@ fn cmd_fleet(args: &Args) -> Result<()> {
             }
         })
         .collect();
-    let mut gen = MultiStream::with_profiles(profiles, seed).with_skew(skew);
-    let mut fleet = AucFleet::new(FleetConfig {
-        shards,
-        workers,
-        pool,
-        pipeline,
-        adaptive,
-        stream_defaults: StreamConfig::new(window, 0.0).with_estimator(estimator),
+    let gen = MultiStream::with_profiles(profiles, f.seed).with_skew(f.skew);
+    let fleet = AucFleet::new(FleetConfig {
+        shards: f.shards,
+        workers: f.workers,
+        pool: f.pool,
+        pipeline: f.pipeline,
+        adaptive: f.adaptive,
+        stream_defaults: StreamConfig::new(f.window, 0.0).with_estimator(f.estimator),
     });
+    (gen, fleet, drifted)
+}
+
+fn cmd_fleet(args: &Args) -> Result<()> {
+    if args.positional.first().map(String::as_str) == Some("serve") {
+        return cmd_fleet_serve(args);
+    }
+    let flags = parse_fleet_flags(args, false)?;
+    let (mut gen, mut fleet, drifted) = build_fleet(&flags);
+    let FleetFlags {
+        streams,
+        events,
+        window,
+        estimator,
+        batch,
+        evict_idle,
+        evict_age,
+        top,
+        hist_bins,
+        count_below,
+        adaptive,
+        ..
+    } = flags;
 
     let estimator_desc = match estimator {
         EstimatorKind::Approx { epsilon } => format!("approx ε={epsilon}"),
@@ -442,14 +475,8 @@ fn cmd_fleet(args: &Args) -> Result<()> {
             println!("#   [{lo:.2}, {hi:.2})  {count:>7}  {bar}");
         }
     }
-    if let Some(raw) = args.get("count-below") {
-        let threshold: f64 = raw
-            .parse()
-            .map_err(|e| anyhow::anyhow!("flag --count-below {raw:?}: {e}"))?;
-        println!(
-            "# {} stream(s) below AUC {threshold}",
-            fleet.count_below(threshold)
-        );
+    if let Some(threshold) = count_below {
+        println!("# {} stream(s) below AUC {threshold}", fleet.count_below(threshold));
     }
     println!("\n{:>10}  {:>8}  {:>6}  {:>6}  {:>7}  alarmed", "stream", "auc~", "fill", "|C|", "alarms");
     for s in fleet.top_k_worst(top) {
@@ -467,6 +494,48 @@ fn cmd_fleet(args: &Args) -> Result<()> {
         );
     }
     Ok(())
+}
+
+/// `streamauc fleet serve`: same synthetic ingest as `fleet`, but the
+/// fleet sits behind a [`FleetServer`] — queries are answered over the
+/// wire *while* batches drain on the worker pool, and the server keeps
+/// answering after the ingest completes, until the process is killed.
+fn cmd_fleet_serve(args: &Args) -> Result<()> {
+    let flags = parse_fleet_flags(args, true)?;
+    let addr = args.get("addr").unwrap_or("127.0.0.1:7878");
+    let (mut gen, fleet, drifted) = build_fleet(&flags);
+    let server = FleetServer::start(fleet, addr).with_context(|| format!("binding {addr}"))?;
+    // Flushed by the trailing newline — CI's smoke job waits for this
+    // line before it starts hitting endpoints.
+    println!("# serving fleet queries on http://{}", server.local_addr());
+    println!(
+        "#   GET /snapshot  /aggregate  /top_k_worst?k=K  /count_below?t=T  \
+         /auc_histogram?bins=B  /score_histogram?bins=B  /subscribe"
+    );
+    println!(
+        "# ingesting {} events over {} streams ({} drifted), batch {}",
+        flags.events, flags.streams, drifted, flags.batch
+    );
+    let started = std::time::Instant::now();
+    let mut remaining = flags.events;
+    while remaining > 0 {
+        let n = remaining.min(flags.batch);
+        let chunk = gen.next_batch(n);
+        let at = (flags.events - remaining) as u64;
+        server.ingest_batch_at(&chunk, at);
+        remaining -= n;
+    }
+    let (seq, sketch) = server.last_published();
+    println!(
+        "# ingest complete in {:.2?}: {} events, {} live streams, {seq} sketch delta(s) \
+         published; serving until interrupted",
+        started.elapsed(),
+        server.with_fleet(|f| f.total_events()),
+        sketch.live
+    );
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
 }
 
 fn cmd_train(args: &Args) -> Result<()> {
@@ -536,7 +605,7 @@ mod tests {
     }
 
     fn reject(extra: &str, needle: &str) {
-        let err = parse_fleet_flags(&fleet_args(extra))
+        let err = parse_fleet_flags(&fleet_args(extra), false)
             .err()
             .unwrap_or_else(|| panic!("`fleet {extra}` must be rejected"))
             .to_string();
@@ -545,11 +614,12 @@ mod tests {
 
     #[test]
     fn fleet_defaults_parse_clean() {
-        let f = parse_fleet_flags(&fleet_args("")).unwrap();
+        let f = parse_fleet_flags(&fleet_args(""), false).unwrap();
         assert_eq!(f.streams, 1000);
         assert_eq!(f.workers, 1);
         assert_eq!(f.hist_bins, 10);
         assert_eq!(f.evict_age, 0);
+        assert_eq!(f.count_below, None);
         assert_eq!(f.estimator, EstimatorKind::Approx { epsilon: 0.05 });
     }
 
@@ -572,10 +642,33 @@ mod tests {
     }
 
     #[test]
+    fn fleet_count_below_accepts_finite_edges_and_rejects_non_finite() {
+        // Finite thresholds — including out-of-range ones with defined
+        // semantics (t ≤ 0 counts nothing, t > 1 counts all live) —
+        // parse clean.
+        let f = parse_fleet_flags(&fleet_args("--count-below -1"), false).unwrap();
+        assert_eq!(f.count_below, Some(-1.0));
+        let f = parse_fleet_flags(&fleet_args("--count-below 1.5"), false).unwrap();
+        assert_eq!(f.count_below, Some(1.5));
+        // `inf`/`nan` is a typo, not a query.
+        reject("--count-below inf", "--count-below");
+        reject("--count-below -inf", "--count-below");
+        reject("--count-below nan", "--count-below");
+        reject("--count-below high", "--count-below");
+    }
+
+    #[test]
+    fn fleet_serve_gates_the_addr_flag() {
+        reject("--addr 127.0.0.1:0", "addr");
+        let ok = parse_fleet_flags(&fleet_args("--addr 127.0.0.1:0"), true);
+        assert!(ok.is_ok(), "{:?}", ok.err().map(|e| e.to_string()));
+    }
+
+    #[test]
     fn fleet_estimator_flag_selects_the_kind() {
-        let f = parse_fleet_flags(&fleet_args("--estimator exact")).unwrap();
+        let f = parse_fleet_flags(&fleet_args("--estimator exact"), false).unwrap();
         assert_eq!(f.estimator, EstimatorKind::ExactMaintained);
-        let f = parse_fleet_flags(&fleet_args("--estimator approx --epsilon 0.2")).unwrap();
+        let f = parse_fleet_flags(&fleet_args("--estimator approx --epsilon 0.2"), false).unwrap();
         assert_eq!(f.estimator, EstimatorKind::Approx { epsilon: 0.2 });
         reject("--estimator fancy", "--estimator");
     }
@@ -583,11 +676,14 @@ mod tests {
     #[test]
     fn fleet_binned_flags_select_and_validate_the_declaration() {
         // Defaults: 256 cells over the unit interval.
-        let f = parse_fleet_flags(&fleet_args("--estimator binned")).unwrap();
+        let f = parse_fleet_flags(&fleet_args("--estimator binned"), false).unwrap();
         assert_eq!(f.estimator, EstimatorKind::Binned { bins: 256, lo: 0.0, hi: 1.0 });
         // Explicit declaration, negative lower bound included.
-        let f = parse_fleet_flags(&fleet_args("--estimator binned --bins 64 --score-range -1.5,2"))
-            .unwrap();
+        let f = parse_fleet_flags(
+            &fleet_args("--estimator binned --bins 64 --score-range -1.5,2"),
+            false,
+        )
+        .unwrap();
         assert_eq!(f.estimator, EstimatorKind::Binned { bins: 64, lo: -1.5, hi: 2.0 });
         // Invalid declarations fail at the boundary, naming the flag —
         // even when the estimator is not binned (consistent with how
@@ -604,7 +700,7 @@ mod tests {
 
     #[test]
     fn fleet_age_threshold_truncates_to_events() {
-        let f = parse_fleet_flags(&fleet_args("--evict-age 1500")).unwrap();
+        let f = parse_fleet_flags(&fleet_args("--evict-age 1500"), false).unwrap();
         assert_eq!(f.evict_age, 1500);
     }
 }

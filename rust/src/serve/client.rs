@@ -1,0 +1,148 @@
+//! Minimal clients for both serving protocols — shared by the
+//! integration tests, the load-generating bench, and the example.
+//! They are deliberately thin: connect, frame, and hand bytes back;
+//! decoding belongs to `super::json` / `super::wire`.
+
+use std::io::{self, BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpStream};
+
+use super::wire;
+
+/// A keep-alive HTTP/1.1 client issuing `GET`s over one connection.
+pub struct HttpClient {
+    stream: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+impl HttpClient {
+    /// Connect to a server.
+    pub fn connect(addr: SocketAddr) -> io::Result<HttpClient> {
+        let stream = TcpStream::connect(addr)?;
+        let reader = BufReader::new(stream.try_clone()?);
+        Ok(HttpClient { stream, reader })
+    }
+
+    /// Issue `GET target` and return `(status, body)`.
+    pub fn get(&mut self, target: &str) -> io::Result<(u16, String)> {
+        let head = format!("GET {target} HTTP/1.1\r\nHost: fleet\r\n\r\n");
+        self.stream.write_all(head.as_bytes())?;
+        self.read_response()
+    }
+
+    fn read_response(&mut self) -> io::Result<(u16, String)> {
+        let mut status_line = String::new();
+        if self.reader.read_line(&mut status_line)? == 0 {
+            return Err(io::Error::new(io::ErrorKind::UnexpectedEof, "server closed"));
+        }
+        let status: u16 = status_line
+            .split_whitespace()
+            .nth(1)
+            .and_then(|s| s.parse().ok())
+            .ok_or_else(|| {
+                io::Error::new(io::ErrorKind::InvalidData, format!("bad status line {status_line:?}"))
+            })?;
+        let mut content_length: Option<usize> = None;
+        loop {
+            let mut header = String::new();
+            if self.reader.read_line(&mut header)? == 0 {
+                return Err(io::Error::new(io::ErrorKind::UnexpectedEof, "truncated head"));
+            }
+            let header = header.trim_end();
+            if header.is_empty() {
+                break;
+            }
+            if let Some((name, value)) = header.split_once(':') {
+                if name.eq_ignore_ascii_case("content-length") {
+                    content_length = value.trim().parse().ok();
+                }
+            }
+        }
+        let len = content_length.ok_or_else(|| {
+            io::Error::new(io::ErrorKind::InvalidData, "response without Content-Length")
+        })?;
+        let mut body = vec![0u8; len];
+        self.reader.read_exact(&mut body)?;
+        String::from_utf8(body)
+            .map(|b| (status, b))
+            .map_err(|_| io::Error::new(io::ErrorKind::InvalidData, "non-UTF8 body"))
+    }
+}
+
+/// One-shot `GET` on a fresh connection; returns `(status, body)`.
+pub fn http_get(addr: SocketAddr, target: &str) -> io::Result<(u16, String)> {
+    HttpClient::connect(addr)?.get(target)
+}
+
+/// Open `/subscribe` over HTTP and return a line iterator positioned
+/// at the baseline line (streaming ndjson body — read lines as the
+/// server drains batches).
+pub fn http_subscribe(addr: SocketAddr) -> io::Result<impl Iterator<Item = io::Result<String>>> {
+    let mut stream = TcpStream::connect(addr)?;
+    stream.write_all(b"GET /subscribe HTTP/1.1\r\nHost: fleet\r\n\r\n")?;
+    let mut reader = BufReader::new(stream);
+    let mut status_line = String::new();
+    reader.read_line(&mut status_line)?;
+    if !status_line.contains("200") {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            format!("subscribe refused: {status_line:?}"),
+        ));
+    }
+    loop {
+        let mut header = String::new();
+        if reader.read_line(&mut header)? == 0 {
+            return Err(io::Error::new(io::ErrorKind::UnexpectedEof, "truncated head"));
+        }
+        if header.trim_end().is_empty() {
+            break;
+        }
+    }
+    Ok(reader.lines())
+}
+
+/// A binary-protocol client over one framed connection.
+pub struct BinClient {
+    stream: TcpStream,
+}
+
+impl BinClient {
+    /// Connect and send the protocol magic.
+    pub fn connect(addr: SocketAddr) -> io::Result<BinClient> {
+        let mut stream = TcpStream::connect(addr)?;
+        stream.write_all(&wire::MAGIC)?;
+        Ok(BinClient { stream })
+    }
+
+    /// Issue one request frame and return `(status, payload)`.
+    pub fn request(&mut self, opcode: u8, payload: &[u8]) -> io::Result<(u8, Vec<u8>)> {
+        wire::write_frame(&mut self.stream, opcode, payload)?;
+        wire::read_frame(&mut self.stream)
+    }
+
+    /// Subscribe; returns the baseline payload (decode with
+    /// [`wire::decode_sketch`]), after which [`BinClient::next_delta`]
+    /// yields pushed deltas.
+    pub fn subscribe(&mut self) -> io::Result<Vec<u8>> {
+        let (status, payload) = self.request(wire::OP_SUBSCRIBE, &[])?;
+        if status != wire::STATUS_OK {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                String::from_utf8_lossy(&payload).into_owned(),
+            ));
+        }
+        Ok(payload)
+    }
+
+    /// Block for the next pushed delta frame payload (apply with
+    /// [`wire::apply_delta`]).
+    pub fn next_delta(&mut self) -> io::Result<Vec<u8>> {
+        let (op, payload) = wire::read_frame(&mut self.stream)?;
+        if op != wire::OP_DELTA {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                format!("expected a delta frame, got opcode {op}"),
+            ));
+        }
+        Ok(payload)
+    }
+}

@@ -1,0 +1,729 @@
+//! Human-readable JSON codec for the serving layer.
+//!
+//! Hand-rolled: the offline image forbids crates.io, so there is no
+//! serde here — just the handful of fixed document shapes the server
+//! emits (`crate::serve::FleetServer`) and a minimal recursive-descent
+//! parser for the clients and round-trip tests.
+//!
+//! **Wire ≡ in-process bit-identity.** Floats are written with Rust's
+//! `{}` formatting, which emits the shortest decimal that parses back
+//! to the identical bits for every finite `f64`; the decoder keeps the
+//! raw digits and re-parses them with `str::parse::<f64>`, so
+//! `decode(encode(x))` reproduces `x` bit-for-bit (`rust/DESIGN.md`
+//! §Serving). The 128-bit fixed-point AUC sum travels as a decimal
+//! *string* (`"qauc_sum":"…"`) because JSON numbers beyond 2⁵³ are not
+//! faithfully representable in consumers that funnel numbers through
+//! f64. Every float the fleet serves is finite by construction;
+//! encoding a non-finite one is a contract violation (debug-asserted).
+
+use std::fmt::Write as _;
+
+use crate::fleet::{
+    AucHistogram, FleetAggregate, FleetSketch, FleetSnapshot, ScoreHistogram, StreamSnapshot,
+};
+
+// ---------------------------------------------------------------------
+// Encoding
+// ---------------------------------------------------------------------
+
+/// Append one finite float in shortest-round-trip form.
+fn num(out: &mut String, v: f64) {
+    debug_assert!(v.is_finite(), "JSON codec requires finite floats, got {v}");
+    let _ = write!(out, "{v}");
+}
+
+fn stream_snapshot(out: &mut String, s: &StreamSnapshot) {
+    let _ = write!(out, "{{\"stream\":{},\"auc\":", s.stream);
+    num(out, s.auc);
+    let _ = write!(
+        out,
+        ",\"len\":{},\"compressed_len\":{},\"events\":{},\"alarms\":{},\"alarmed\":{}",
+        s.len, s.compressed_len, s.events, s.alarms, s.alarmed
+    );
+    out.push_str(",\"baseline\":");
+    match s.baseline {
+        Some(b) => num(out, b),
+        None => out.push_str("null"),
+    }
+    out.push('}');
+}
+
+/// `/snapshot` document.
+pub fn snapshot_to_json(s: &FleetSnapshot) -> String {
+    let mut out = String::with_capacity(64 + 112 * s.streams.len());
+    let _ = write!(out, "{{\"total_events\":{},\"alarmed_streams\":[", s.total_events);
+    for (i, id) in s.alarmed_streams.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        let _ = write!(out, "{id}");
+    }
+    out.push_str("],\"streams\":[");
+    for (i, st) in s.streams.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        stream_snapshot(&mut out, st);
+    }
+    out.push_str("]}");
+    out
+}
+
+/// `/aggregate` document.
+pub fn aggregate_to_json(a: &FleetAggregate) -> String {
+    let mut out = String::with_capacity(256);
+    let _ = write!(
+        out,
+        "{{\"streams\":{},\"live_streams\":{},\"alarmed_streams\":{},\"total_events\":{}",
+        a.streams, a.live_streams, a.alarmed_streams, a.total_events
+    );
+    for (key, v) in [
+        ("min_auc", a.min_auc),
+        ("p10_auc", a.p10_auc),
+        ("median_auc", a.median_auc),
+        ("p90_auc", a.p90_auc),
+        ("max_auc", a.max_auc),
+        ("mean_auc", a.mean_auc),
+    ] {
+        let _ = write!(out, ",\"{key}\":");
+        num(&mut out, v);
+    }
+    out.push('}');
+    out
+}
+
+/// `/top_k_worst` document.
+pub fn top_k_to_json(streams: &[StreamSnapshot]) -> String {
+    let mut out = String::with_capacity(16 + 112 * streams.len());
+    out.push_str("{\"streams\":[");
+    for (i, st) in streams.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        stream_snapshot(&mut out, st);
+    }
+    out.push_str("]}");
+    out
+}
+
+/// `/count_below` document.
+pub fn count_below_to_json(threshold: f64, count: usize) -> String {
+    let mut out = String::from("{\"threshold\":");
+    num(&mut out, threshold);
+    let _ = write!(out, ",\"count\":{count}}}");
+    out
+}
+
+/// `/auc_histogram` document.
+pub fn auc_histogram_to_json(h: &AucHistogram) -> String {
+    let mut out = String::with_capacity(32 + 8 * h.counts.len());
+    out.push_str("{\"counts\":[");
+    for (i, c) in h.counts.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        let _ = write!(out, "{c}");
+    }
+    let _ = write!(out, "],\"live_streams\":{}}}", h.live_streams);
+    out
+}
+
+/// `/score_histogram` document.
+pub fn score_histogram_to_json(h: &ScoreHistogram) -> String {
+    let mut out = String::with_capacity(32 + 8 * h.counts.len());
+    out.push_str("{\"counts\":[");
+    for (i, c) in h.counts.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        let _ = write!(out, "{c}");
+    }
+    let _ = write!(out, "],\"entries\":{}}}", h.entries);
+    out
+}
+
+fn sketch_scalars(out: &mut String, seq: u64, sk: &FleetSketch) {
+    let _ = write!(
+        out,
+        "{{\"seq\":{seq},\"streams\":{},\"live\":{},\"alarmed\":{},\"qauc_sum\":\"{}\"",
+        sk.streams, sk.live, sk.alarmed, sk.qauc_sum
+    );
+}
+
+/// A subscription **baseline** line: scalars plus the full bin array.
+/// Sent once when a subscriber attaches, so later deltas have a state
+/// to apply onto.
+pub fn sketch_to_json(seq: u64, sk: &FleetSketch) -> String {
+    let mut out = String::with_capacity(64 + 8 * sk.bins.len());
+    sketch_scalars(&mut out, seq, sk);
+    out.push_str(",\"bins\":[");
+    for (i, c) in sk.bins.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        let _ = write!(out, "{c}");
+    }
+    out.push_str("]}");
+    out
+}
+
+/// A subscription **delta** line: scalars are absolute (self-healing),
+/// bins are compressed to the `[bin, new_count]` pairs that changed
+/// since `prev`.
+pub fn delta_to_json(seq: u64, prev: &FleetSketch, next: &FleetSketch) -> String {
+    let mut out = String::with_capacity(128);
+    sketch_scalars(&mut out, seq, next);
+    out.push_str(",\"changed\":[");
+    let mut first = true;
+    for (b, (&p, &n)) in prev.bins.iter().zip(next.bins.iter()).enumerate() {
+        if p != n {
+            if !first {
+                out.push(',');
+            }
+            first = false;
+            let _ = write!(out, "[{b},{n}]");
+        }
+    }
+    out.push_str("]}");
+    out
+}
+
+// ---------------------------------------------------------------------
+// Parsing
+// ---------------------------------------------------------------------
+
+/// A parsed JSON value. Numbers keep their raw text until a typed
+/// accessor parses them — nothing is funneled through an intermediate
+/// f64, which is what preserves bit-identity and 128-bit integers.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Json {
+    /// `null`.
+    Null,
+    /// `true` / `false`.
+    Bool(bool),
+    /// A number, as its raw text.
+    Num(String),
+    /// A string.
+    Str(String),
+    /// An array.
+    Arr(Vec<Json>),
+    /// An object, fields in document order.
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    /// Parse one complete JSON document.
+    pub fn parse(text: &str) -> Result<Json, String> {
+        let mut p = Parser { b: text.as_bytes(), i: 0 };
+        p.ws();
+        let v = p.value()?;
+        p.ws();
+        if p.i != p.b.len() {
+            return Err(format!("trailing bytes at offset {}", p.i));
+        }
+        Ok(v)
+    }
+
+    /// Object field lookup.
+    pub fn get(&self, key: &str) -> Result<&Json, String> {
+        match self {
+            Json::Obj(fields) => fields
+                .iter()
+                .find(|(k, _)| k == key)
+                .map(|(_, v)| v)
+                .ok_or_else(|| format!("missing key {key:?}")),
+            _ => Err(format!("expected an object holding {key:?}")),
+        }
+    }
+
+    /// The value as a finite `f64` (exact reparse of the raw digits).
+    pub fn f64(&self) -> Result<f64, String> {
+        match self {
+            Json::Num(raw) => raw.parse().map_err(|e| format!("number {raw:?}: {e}")),
+            _ => Err("expected a number".to_string()),
+        }
+    }
+
+    /// The value as a `u64`.
+    pub fn u64(&self) -> Result<u64, String> {
+        match self {
+            Json::Num(raw) => raw.parse().map_err(|e| format!("number {raw:?}: {e}")),
+            _ => Err("expected a number".to_string()),
+        }
+    }
+
+    /// The value as a `u32`.
+    pub fn u32(&self) -> Result<u32, String> {
+        match self {
+            Json::Num(raw) => raw.parse().map_err(|e| format!("number {raw:?}: {e}")),
+            _ => Err("expected a number".to_string()),
+        }
+    }
+
+    /// The value as a `usize`.
+    pub fn usize(&self) -> Result<usize, String> {
+        match self {
+            Json::Num(raw) => raw.parse().map_err(|e| format!("number {raw:?}: {e}")),
+            _ => Err("expected a number".to_string()),
+        }
+    }
+
+    /// The value as an `i128` carried in a JSON *string* (the
+    /// `qauc_sum` convention).
+    pub fn i128_str(&self) -> Result<i128, String> {
+        match self {
+            Json::Str(raw) => raw.parse().map_err(|e| format!("i128 {raw:?}: {e}")),
+            _ => Err("expected a decimal string".to_string()),
+        }
+    }
+
+    /// The value as a `bool`.
+    pub fn bool(&self) -> Result<bool, String> {
+        match self {
+            Json::Bool(b) => Ok(*b),
+            _ => Err("expected a boolean".to_string()),
+        }
+    }
+
+    /// The value as `null`-or-finite-f64 (the `baseline` convention).
+    pub fn opt_f64(&self) -> Result<Option<f64>, String> {
+        match self {
+            Json::Null => Ok(None),
+            other => other.f64().map(Some),
+        }
+    }
+
+    /// The value as an array slice.
+    pub fn arr(&self) -> Result<&[Json], String> {
+        match self {
+            Json::Arr(items) => Ok(items),
+            _ => Err("expected an array".to_string()),
+        }
+    }
+}
+
+struct Parser<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl Parser<'_> {
+    fn ws(&mut self) {
+        while matches!(self.b.get(self.i), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+            self.i += 1;
+        }
+    }
+
+    fn value(&mut self) -> Result<Json, String> {
+        match self.b.get(self.i) {
+            None => Err("unexpected end of input".to_string()),
+            Some(b'{') => self.obj(),
+            Some(b'[') => self.array(),
+            Some(b'"') => self.string().map(Json::Str),
+            Some(b't') => self.lit("true", Json::Bool(true)),
+            Some(b'f') => self.lit("false", Json::Bool(false)),
+            Some(b'n') => self.lit("null", Json::Null),
+            Some(_) => self.number(),
+        }
+    }
+
+    fn lit(&mut self, word: &str, v: Json) -> Result<Json, String> {
+        if self.b[self.i..].starts_with(word.as_bytes()) {
+            self.i += word.len();
+            Ok(v)
+        } else {
+            Err(format!("invalid literal at offset {}", self.i))
+        }
+    }
+
+    fn number(&mut self) -> Result<Json, String> {
+        let start = self.i;
+        while matches!(
+            self.b.get(self.i),
+            Some(b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
+        ) {
+            self.i += 1;
+        }
+        if self.i == start {
+            return Err(format!("expected a value at offset {start}"));
+        }
+        // The slice is ASCII by construction of the loop above.
+        let raw = std::str::from_utf8(&self.b[start..self.i])
+            .map_err(|_| "non-UTF8 number".to_string())?;
+        Ok(Json::Num(raw.to_string()))
+    }
+
+    fn string(&mut self) -> Result<String, String> {
+        self.i += 1; // opening quote
+        let mut out = String::new();
+        loop {
+            match self.b.get(self.i) {
+                None => return Err("unterminated string".to_string()),
+                Some(b'"') => {
+                    self.i += 1;
+                    return Ok(out);
+                }
+                Some(b'\\') => {
+                    self.i += 1;
+                    let esc = *self
+                        .b
+                        .get(self.i)
+                        .ok_or_else(|| "unterminated escape".to_string())?;
+                    out.push(match esc {
+                        b'"' => '"',
+                        b'\\' => '\\',
+                        b'/' => '/',
+                        b'n' => '\n',
+                        b'r' => '\r',
+                        b't' => '\t',
+                        other => {
+                            return Err(format!("unsupported escape \\{}", other as char));
+                        }
+                    });
+                    self.i += 1;
+                }
+                Some(&c) if c < 0x80 => {
+                    out.push(c as char);
+                    self.i += 1;
+                }
+                Some(_) => {
+                    // Multibyte UTF-8 scalar: copy it whole.
+                    let rest = std::str::from_utf8(&self.b[self.i..])
+                        .map_err(|_| "non-UTF8 string".to_string())?;
+                    let ch = rest.chars().next().expect("non-empty by construction");
+                    out.push(ch);
+                    self.i += ch.len_utf8();
+                }
+            }
+        }
+    }
+
+    fn obj(&mut self) -> Result<Json, String> {
+        self.i += 1; // '{'
+        let mut fields = Vec::new();
+        self.ws();
+        if self.b.get(self.i) == Some(&b'}') {
+            self.i += 1;
+            return Ok(Json::Obj(fields));
+        }
+        loop {
+            self.ws();
+            if self.b.get(self.i) != Some(&b'"') {
+                return Err(format!("expected a key at offset {}", self.i));
+            }
+            let key = self.string()?;
+            self.ws();
+            if self.b.get(self.i) != Some(&b':') {
+                return Err(format!("expected ':' at offset {}", self.i));
+            }
+            self.i += 1;
+            self.ws();
+            let v = self.value()?;
+            fields.push((key, v));
+            self.ws();
+            match self.b.get(self.i) {
+                Some(b',') => self.i += 1,
+                Some(b'}') => {
+                    self.i += 1;
+                    return Ok(Json::Obj(fields));
+                }
+                _ => return Err(format!("expected ',' or '}}' at offset {}", self.i)),
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<Json, String> {
+        self.i += 1; // '['
+        let mut items = Vec::new();
+        self.ws();
+        if self.b.get(self.i) == Some(&b']') {
+            self.i += 1;
+            return Ok(Json::Arr(items));
+        }
+        loop {
+            self.ws();
+            items.push(self.value()?);
+            self.ws();
+            match self.b.get(self.i) {
+                Some(b',') => self.i += 1,
+                Some(b']') => {
+                    self.i += 1;
+                    return Ok(Json::Arr(items));
+                }
+                _ => return Err(format!("expected ',' or ']' at offset {}", self.i)),
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Typed decoding
+// ---------------------------------------------------------------------
+
+fn stream_snapshot_from(v: &Json) -> Result<StreamSnapshot, String> {
+    Ok(StreamSnapshot {
+        stream: v.get("stream")?.u64()?,
+        auc: v.get("auc")?.f64()?,
+        len: v.get("len")?.usize()?,
+        compressed_len: v.get("compressed_len")?.usize()?,
+        events: v.get("events")?.u64()?,
+        alarms: v.get("alarms")?.u32()?,
+        alarmed: v.get("alarmed")?.bool()?,
+        baseline: v.get("baseline")?.opt_f64()?,
+    })
+}
+
+/// Decode a `/snapshot` document.
+pub fn snapshot_from_json(text: &str) -> Result<FleetSnapshot, String> {
+    let v = Json::parse(text)?;
+    let streams = v
+        .get("streams")?
+        .arr()?
+        .iter()
+        .map(stream_snapshot_from)
+        .collect::<Result<Vec<_>, _>>()?;
+    let alarmed_streams = v
+        .get("alarmed_streams")?
+        .arr()?
+        .iter()
+        .map(Json::u64)
+        .collect::<Result<Vec<_>, _>>()?;
+    Ok(FleetSnapshot { streams, alarmed_streams, total_events: v.get("total_events")?.u64()? })
+}
+
+/// Decode an `/aggregate` document.
+pub fn aggregate_from_json(text: &str) -> Result<FleetAggregate, String> {
+    let v = Json::parse(text)?;
+    Ok(FleetAggregate {
+        streams: v.get("streams")?.usize()?,
+        live_streams: v.get("live_streams")?.usize()?,
+        alarmed_streams: v.get("alarmed_streams")?.usize()?,
+        total_events: v.get("total_events")?.u64()?,
+        min_auc: v.get("min_auc")?.f64()?,
+        p10_auc: v.get("p10_auc")?.f64()?,
+        median_auc: v.get("median_auc")?.f64()?,
+        p90_auc: v.get("p90_auc")?.f64()?,
+        max_auc: v.get("max_auc")?.f64()?,
+        mean_auc: v.get("mean_auc")?.f64()?,
+    })
+}
+
+/// Decode a `/top_k_worst` document.
+pub fn top_k_from_json(text: &str) -> Result<Vec<StreamSnapshot>, String> {
+    let v = Json::parse(text)?;
+    v.get("streams")?.arr()?.iter().map(stream_snapshot_from).collect()
+}
+
+/// Decode a `/count_below` document into `(threshold, count)`.
+pub fn count_below_from_json(text: &str) -> Result<(f64, usize), String> {
+    let v = Json::parse(text)?;
+    Ok((v.get("threshold")?.f64()?, v.get("count")?.usize()?))
+}
+
+/// Decode an `/auc_histogram` document.
+pub fn auc_histogram_from_json(text: &str) -> Result<AucHistogram, String> {
+    let v = Json::parse(text)?;
+    let counts =
+        v.get("counts")?.arr()?.iter().map(Json::usize).collect::<Result<Vec<_>, _>>()?;
+    Ok(AucHistogram { counts, live_streams: v.get("live_streams")?.usize()? })
+}
+
+/// Decode a `/score_histogram` document.
+pub fn score_histogram_from_json(text: &str) -> Result<ScoreHistogram, String> {
+    let v = Json::parse(text)?;
+    let counts = v.get("counts")?.arr()?.iter().map(Json::u64).collect::<Result<Vec<_>, _>>()?;
+    Ok(ScoreHistogram { counts, entries: v.get("entries")?.u64()? })
+}
+
+fn sketch_scalars_from(v: &Json, bins: Vec<u64>) -> Result<(u64, FleetSketch), String> {
+    Ok((
+        v.get("seq")?.u64()?,
+        FleetSketch {
+            bins,
+            live: v.get("live")?.usize()?,
+            alarmed: v.get("alarmed")?.usize()?,
+            streams: v.get("streams")?.usize()?,
+            qauc_sum: v.get("qauc_sum")?.i128_str()?,
+        },
+    ))
+}
+
+/// Decode a subscription **baseline** line into `(seq, sketch)`.
+pub fn sketch_from_json(text: &str) -> Result<(u64, FleetSketch), String> {
+    let v = Json::parse(text)?;
+    let bins = v.get("bins")?.arr()?.iter().map(Json::u64).collect::<Result<Vec<_>, _>>()?;
+    sketch_scalars_from(&v, bins)
+}
+
+/// Apply one subscription line — baseline (`"bins"`) or delta
+/// (`"changed"`) — onto `onto`, returning the line's sequence number.
+/// Scalars are absolute in every line; only the bin array is
+/// delta-compressed.
+pub fn apply_subscription_json(text: &str, onto: &mut FleetSketch) -> Result<u64, String> {
+    let v = Json::parse(text)?;
+    if let Ok(bins) = v.get("bins") {
+        let bins = bins.arr()?.iter().map(Json::u64).collect::<Result<Vec<_>, _>>()?;
+        let (seq, sk) = sketch_scalars_from(&v, bins)?;
+        *onto = sk;
+        return Ok(seq);
+    }
+    for pair in v.get("changed")?.arr()? {
+        let pair = pair.arr()?;
+        if pair.len() != 2 {
+            return Err("delta pair must be [bin, count]".to_string());
+        }
+        let bin = pair[0].usize()?;
+        let count = pair[1].u64()?;
+        let slot = onto
+            .bins
+            .get_mut(bin)
+            .ok_or_else(|| format!("delta bin {bin} out of range"))?;
+        *slot = count;
+    }
+    let (seq, scalars) = sketch_scalars_from(&v, Vec::new())?;
+    onto.live = scalars.live;
+    onto.alarmed = scalars.alarmed;
+    onto.streams = scalars.streams;
+    onto.qauc_sum = scalars.qauc_sum;
+    Ok(seq)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn snap(stream: u64, auc: f64, baseline: Option<f64>) -> StreamSnapshot {
+        StreamSnapshot {
+            stream,
+            auc,
+            len: 7,
+            compressed_len: 5,
+            events: 90,
+            alarms: 2,
+            alarmed: baseline.is_some(),
+            baseline,
+        }
+    }
+
+    #[test]
+    fn parser_handles_the_basics() {
+        let v = Json::parse(r#" {"a": [1, -2.5e3, "x\n"], "b": null, "c": true} "#).unwrap();
+        assert_eq!(v.get("a").unwrap().arr().unwrap().len(), 3);
+        assert_eq!(v.get("a").unwrap().arr().unwrap()[0].u64().unwrap(), 1);
+        assert_eq!(v.get("a").unwrap().arr().unwrap()[1].f64().unwrap(), -2.5e3);
+        assert_eq!(v.get("a").unwrap().arr().unwrap()[2], Json::Str("x\n".to_string()));
+        assert_eq!(v.get("b").unwrap().opt_f64().unwrap(), None);
+        assert!(v.get("c").unwrap().bool().unwrap());
+        assert!(v.get("missing").is_err());
+        assert!(Json::parse("{\"a\":1} trailing").is_err());
+        assert!(Json::parse("[1,]").is_err());
+        assert!(Json::parse("{").is_err());
+    }
+
+    #[test]
+    fn snapshot_round_trips_awkward_floats_bitwise() {
+        // Shortest-round-trip Display must reproduce these exactly.
+        let awkward = [
+            0.1 + 0.2,
+            1.0 / 3.0,
+            f64::MIN_POSITIVE,
+            5e-324, // subnormal
+            1.0 - f64::EPSILON,
+            0.999_999_999_999_999_9,
+        ];
+        let streams: Vec<StreamSnapshot> = awkward
+            .iter()
+            .enumerate()
+            .map(|(i, &a)| snap(i as u64, a, if i % 2 == 0 { Some(a / 2.0) } else { None }))
+            .collect();
+        let original = FleetSnapshot {
+            streams,
+            alarmed_streams: vec![0, 2, 4],
+            total_events: u64::MAX,
+        };
+        let text = snapshot_to_json(&original);
+        let back = snapshot_from_json(&text).unwrap();
+        assert_eq!(back, original);
+        for (a, b) in original.streams.iter().zip(&back.streams) {
+            assert_eq!(a.auc.to_bits(), b.auc.to_bits());
+        }
+        // Byte-derived equality: re-encoding the decoded value is the
+        // identical document.
+        assert_eq!(snapshot_to_json(&back), text);
+    }
+
+    #[test]
+    fn aggregate_and_histograms_round_trip() {
+        let agg = FleetAggregate {
+            streams: 11,
+            live_streams: 9,
+            alarmed_streams: 3,
+            total_events: 1 << 60,
+            min_auc: 0.0,
+            p10_auc: 0.1 + 0.2,
+            median_auc: 0.5,
+            p90_auc: 2.0 / 3.0,
+            max_auc: 1.0,
+            mean_auc: 0.123_456_789_012_345_67,
+        };
+        let back = aggregate_from_json(&aggregate_to_json(&agg)).unwrap();
+        assert_eq!(back, agg);
+        assert_eq!(back.p10_auc.to_bits(), agg.p10_auc.to_bits());
+
+        let h = AucHistogram { counts: vec![0, 3, 1, usize::MAX], live_streams: 4 };
+        assert_eq!(auc_histogram_from_json(&auc_histogram_to_json(&h)).unwrap(), h);
+        let s = ScoreHistogram { counts: vec![u64::MAX, 0, 7], entries: 42 };
+        assert_eq!(score_histogram_from_json(&score_histogram_to_json(&s)).unwrap(), s);
+    }
+
+    #[test]
+    fn top_k_and_count_below_round_trip() {
+        let streams = vec![snap(3, 0.25, None), snap(9, 0.75, Some(0.8))];
+        assert_eq!(top_k_from_json(&top_k_to_json(&streams)).unwrap(), streams);
+        assert_eq!(top_k_from_json(&top_k_to_json(&[])).unwrap(), Vec::new());
+        let (t, c) = count_below_from_json(&count_below_to_json(0.8, 17)).unwrap();
+        assert_eq!((t, c), (0.8, 17));
+    }
+
+    #[test]
+    fn subscription_deltas_reconstruct_the_sketch() {
+        let mut prev = FleetSketch {
+            bins: vec![0; 64],
+            live: 3,
+            alarmed: 1,
+            streams: 4,
+            qauc_sum: -(1_i128 << 100),
+        };
+        prev.bins[10] = 2;
+        prev.bins[63] = 1;
+        // Baseline line restores the whole state.
+        let (seq, back) = sketch_from_json(&sketch_to_json(7, &prev)).unwrap();
+        assert_eq!(seq, 7);
+        assert_eq!(back, prev);
+
+        // A delta line carries only the changed bins.
+        let mut next = prev.clone();
+        next.bins[10] = 0;
+        next.bins[11] = 3;
+        next.live = 4;
+        next.qauc_sum = 1 << 90;
+        let line = delta_to_json(8, &prev, &next);
+        assert!(line.contains("\"changed\":[[10,0],[11,3]]"), "{line}");
+        let mut applied = prev.clone();
+        assert_eq!(apply_subscription_json(&line, &mut applied).unwrap(), 8);
+        assert_eq!(applied, next);
+        // Applying a baseline line through the same entry point works.
+        let mut fresh = FleetSketch {
+            bins: vec![0; 64],
+            live: 0,
+            alarmed: 0,
+            streams: 0,
+            qauc_sum: 0,
+        };
+        assert_eq!(
+            apply_subscription_json(&sketch_to_json(9, &next), &mut fresh).unwrap(),
+            9
+        );
+        assert_eq!(fresh, next);
+    }
+}

@@ -1,0 +1,78 @@
+//! Serving layer: the fleet's query surface over the wire.
+//!
+//! [`FleetServer`] puts an [`crate::fleet::AucFleet`] behind a
+//! `std::net::TcpListener` and exposes every incremental read —
+//! snapshot, aggregate, worst-k, count-below, both histograms — plus
+//! a subscription stream that pushes one sketch delta per ingestion
+//! drain. Two protocols share the port, routed by the first byte:
+//!
+//! * **HTTP/1.1** (`GET`-only, keep-alive): `/snapshot`, `/aggregate`,
+//!   `/top_k_worst?k=`, `/count_below?t=`, `/auc_histogram?bins=`,
+//!   `/score_histogram?bins=`, `/subscribe` (streaming ndjson).
+//! * **Binary** (magic `0xAB 'S' 'A' '1'`, then
+//!   `[opcode][u32 len][payload]` frames): the same queries with
+//!   fixed little-endian payloads.
+//!
+//! Everything is hand-rolled on `std` — the build is offline, so there
+//! is no HTTP or serialization dependency to reach for. The codecs are
+//! lossless by construction (shortest-round-trip decimals in JSON, raw
+//! `f64` bits in binary), which upgrades "the server answers queries"
+//! to "a wire response decodes bit-identical to the in-process answer"
+//! — the property `rust/tests/serve.rs` and the executor digest
+//! harness pin down. Protocol grammar and the delta-subscription
+//! semantics are specified in `rust/DESIGN.md` §Serving.
+
+mod client;
+pub mod json;
+mod server;
+pub mod wire;
+
+pub use client::{http_get, http_subscribe, BinClient, HttpClient};
+pub use server::FleetServer;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fleet::{AucFleet, FleetConfig};
+
+    fn tiny_fleet() -> AucFleet {
+        let mut fleet = AucFleet::new(FleetConfig::default());
+        for round in 0..4u64 {
+            let batch: Vec<(u64, f64, bool)> = (1..=6u64)
+                .map(|id| {
+                    let score = (id as f64) / 7.0;
+                    (id, score, (id + round) % 2 == 0)
+                })
+                .collect();
+            fleet.push_batch(&batch);
+        }
+        fleet
+    }
+
+    #[test]
+    fn http_and_binary_share_one_port() {
+        let server = FleetServer::start(tiny_fleet(), "127.0.0.1:0").expect("bind loopback");
+        let addr = server.local_addr();
+
+        let (status, body) = http_get(addr, "/aggregate").expect("http round-trip");
+        assert_eq!(status, 200);
+        let via_http = json::aggregate_from_json(&body).expect("decodable body");
+
+        let mut bin = BinClient::connect(addr).expect("binary session");
+        let (code, payload) = bin.request(wire::OP_AGGREGATE, &[]).expect("binary round-trip");
+        assert_eq!(code, wire::STATUS_OK);
+        let via_bin = wire::decode_aggregate(&payload).expect("decodable payload");
+
+        let in_process = server.with_fleet(|f| f.aggregate());
+        assert_eq!(via_http, in_process);
+        assert_eq!(via_bin, in_process);
+    }
+
+    #[test]
+    fn shutdown_is_idempotent_and_runs_on_drop() {
+        let mut server = FleetServer::start(tiny_fleet(), "127.0.0.1:0").expect("bind loopback");
+        server.shutdown();
+        server.shutdown();
+        drop(server); // shutdown again via Drop — must not hang
+    }
+}

@@ -1,0 +1,497 @@
+//! The serving front-end: a [`FleetServer`] owns an [`AucFleet`]
+//! behind a mutex, answers read queries from any number of
+//! connections, and pushes sketch deltas to subscribers after every
+//! ingestion drain.
+//!
+//! One listener port speaks both protocols. The first byte of a
+//! connection routes it: [`wire::MAGIC`]'s `0xAB` can never begin an
+//! HTTP method token, so anything else is parsed as HTTP/1.1
+//! (`GET`-only, keep-alive, `Content-Length`-framed JSON bodies)
+//! and a `0xAB` preamble opens a length-prefixed binary session.
+//!
+//! **Wire ≡ in-process.** Handlers call the exact same [`AucFleet`]
+//! query methods a linked-in caller would, under the same lock, and
+//! the codecs (`super::json`, `super::wire`) are lossless for every
+//! served type — so a decoded response is bit-identical to the
+//! in-process answer at the same instant. `rust/tests/serve.rs` and
+//! the executor digest harness enforce this end to end.
+//!
+//! Malformed requests never panic the fleet: parameters are validated
+//! at the surface ([`validate`]) and rejected with HTTP 400 or a
+//! [`wire::STATUS_ERR`] frame — notably `bins=0` histograms (the
+//! in-process methods assert) and non-finite `count_below` thresholds
+//! (JSON cannot carry them back).
+
+use std::io::{self, BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::{self, JoinHandle};
+
+use super::{json, wire};
+use crate::fleet::{AucFleet, FleetSketch};
+
+/// A query decoded from either protocol; both surfaces funnel into
+/// the same fleet calls so their answers cannot diverge.
+enum Request {
+    Snapshot,
+    Aggregate,
+    TopK(usize),
+    CountBelow(f64),
+    AucHistogram(usize),
+    ScoreHistogram(usize),
+    Subscribe,
+}
+
+/// Surface validation — everything that would panic or be
+/// unserializable in-process is rejected here with a client error.
+fn validate(req: &Request) -> Result<(), String> {
+    match *req {
+        Request::CountBelow(t) if !t.is_finite() => {
+            Err(format!("count_below: threshold must be finite, got {t}"))
+        }
+        Request::AucHistogram(0) => Err("auc_histogram: bins must be >= 1".to_string()),
+        Request::ScoreHistogram(0) => Err("score_histogram: bins must be >= 1".to_string()),
+        _ => Ok(()),
+    }
+}
+
+fn answer_json(fleet: &AucFleet, req: &Request) -> String {
+    match *req {
+        Request::Snapshot => json::snapshot_to_json(&fleet.snapshot()),
+        Request::Aggregate => json::aggregate_to_json(&fleet.aggregate()),
+        Request::TopK(k) => json::top_k_to_json(&fleet.top_k_worst(k)),
+        Request::CountBelow(t) => json::count_below_to_json(t, fleet.count_below(t)),
+        Request::AucHistogram(b) => json::auc_histogram_to_json(&fleet.auc_histogram(b)),
+        Request::ScoreHistogram(b) => json::score_histogram_to_json(&fleet.score_histogram(b)),
+        Request::Subscribe => unreachable!("subscribe is handled by the session loop"),
+    }
+}
+
+fn answer_binary(fleet: &AucFleet, req: &Request) -> Vec<u8> {
+    match *req {
+        Request::Snapshot => wire::encode_snapshot(&fleet.snapshot()),
+        Request::Aggregate => wire::encode_aggregate(&fleet.aggregate()),
+        Request::TopK(k) => wire::encode_top_k(&fleet.top_k_worst(k)),
+        Request::CountBelow(t) => wire::encode_count_below(t, fleet.count_below(t)),
+        Request::AucHistogram(b) => wire::encode_auc_histogram(&fleet.auc_histogram(b)),
+        Request::ScoreHistogram(b) => wire::encode_score_histogram(&fleet.score_histogram(b)),
+        Request::Subscribe => unreachable!("subscribe is handled by the session loop"),
+    }
+}
+
+// ---------------------------------------------------------------------
+// Shared state
+// ---------------------------------------------------------------------
+
+enum Proto {
+    Http,
+    Binary,
+}
+
+struct Subscriber {
+    stream: TcpStream,
+    proto: Proto,
+}
+
+impl Subscriber {
+    /// Push one delta; a `false` return drops the subscriber.
+    fn send(&mut self, json_line: &str, bin_payload: &[u8]) -> bool {
+        let r = match self.proto {
+            Proto::Http => self
+                .stream
+                .write_all(json_line.as_bytes())
+                .and_then(|()| self.stream.write_all(b"\n")),
+            Proto::Binary => wire::write_frame(&mut self.stream, wire::OP_DELTA, bin_payload),
+        };
+        r.is_ok()
+    }
+}
+
+/// Publisher state: the last broadcast sketch and its sequence number.
+/// Lock order is `pub_state` → `subs` in both the publish and the
+/// subscribe paths, which is what makes the baseline/delta hand-off
+/// gapless: a subscriber's baseline is written while `pub_state` is
+/// held, so no delta can slip in between the baseline and the
+/// subscriber joining the broadcast list.
+struct PubState {
+    seq: u64,
+    last: FleetSketch,
+}
+
+struct Shared {
+    fleet: Mutex<AucFleet>,
+    subs: Mutex<Vec<Subscriber>>,
+    pub_state: Mutex<PubState>,
+    stop: AtomicBool,
+}
+
+const _: () = {
+    const fn assert_send_sync<T: Send + Sync>() {}
+    assert_send_sync::<Shared>();
+};
+
+// ---------------------------------------------------------------------
+// Server
+// ---------------------------------------------------------------------
+
+/// A running serving front-end over one [`AucFleet`].
+///
+/// The server is `Sync`: ingestion goes through `&self`
+/// ([`FleetServer::ingest_batch_at`]) while the acceptor thread
+/// answers queries concurrently, so one thread can drive the event
+/// feed while clients read. Dropping the server stops the acceptor
+/// and disconnects subscribers.
+pub struct FleetServer {
+    shared: Arc<Shared>,
+    addr: SocketAddr,
+    acceptor: Option<JoinHandle<()>>,
+}
+
+impl FleetServer {
+    /// Bind `addr` (e.g. `"127.0.0.1:0"` for an ephemeral port) and
+    /// start accepting connections over `fleet`.
+    pub fn start(fleet: AucFleet, addr: &str) -> io::Result<FleetServer> {
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        let baseline = fleet.sketch_state();
+        let shared = Arc::new(Shared {
+            fleet: Mutex::new(fleet),
+            subs: Mutex::new(Vec::new()),
+            pub_state: Mutex::new(PubState { seq: 0, last: baseline }),
+            stop: AtomicBool::new(false),
+        });
+        let accept_shared = Arc::clone(&shared);
+        let acceptor = thread::Builder::new()
+            .name("fleet-serve-accept".to_string())
+            .spawn(move || {
+                for conn in listener.incoming() {
+                    if accept_shared.stop.load(Ordering::Acquire) {
+                        break;
+                    }
+                    let Ok(stream) = conn else { continue };
+                    let conn_shared = Arc::clone(&accept_shared);
+                    // Handlers are detached: they exit when their
+                    // connection closes, and shutdown disconnects
+                    // subscribers by clearing the broadcast list.
+                    let _ = thread::Builder::new()
+                        .name("fleet-serve-conn".to_string())
+                        .spawn(move || {
+                            let _ = handle_connection(stream, &conn_shared);
+                        });
+                }
+            })?;
+        Ok(FleetServer { shared, addr: local, acceptor: Some(acceptor) })
+    }
+
+    /// The bound address (with the real port when bound to `:0`).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Feed a batch at the fleet's internal clock, then publish the
+    /// resulting sketch delta to subscribers.
+    pub fn ingest_batch(&self, batch: &[(u64, f64, bool)]) {
+        let next = {
+            let mut fleet = self.shared.fleet.lock().expect("fleet lock");
+            fleet.push_batch(batch);
+            // Waits for the drain — per-drain deltas are the contract.
+            fleet.sketch_state()
+        };
+        self.publish(next);
+    }
+
+    /// Feed a batch at an explicit clock, then publish the delta.
+    pub fn ingest_batch_at(&self, batch: &[(u64, f64, bool)], at: u64) {
+        let next = {
+            let mut fleet = self.shared.fleet.lock().expect("fleet lock");
+            fleet.push_batch_at(batch, at);
+            fleet.sketch_state()
+        };
+        self.publish(next);
+    }
+
+    /// Run `f` against the fleet under the serving lock — the
+    /// in-process answer a wire response must be bit-identical to.
+    pub fn with_fleet<R>(&self, f: impl FnOnce(&AucFleet) -> R) -> R {
+        f(&self.shared.fleet.lock().expect("fleet lock"))
+    }
+
+    /// Run `f` against the fleet mutably (eviction, reconfiguration).
+    /// No delta is published; pair with [`FleetServer::ingest_batch`]
+    /// or rely on the next drain to refresh subscribers.
+    pub fn with_fleet_mut<R>(&self, f: impl FnOnce(&mut AucFleet) -> R) -> R {
+        f(&mut self.shared.fleet.lock().expect("fleet lock"))
+    }
+
+    /// Currently attached subscribers.
+    pub fn subscriber_count(&self) -> usize {
+        self.shared.subs.lock().expect("subscriber list").len()
+    }
+
+    /// The last published `(seq, sketch)` — what an up-to-date
+    /// subscriber has reconstructed.
+    pub fn last_published(&self) -> (u64, FleetSketch) {
+        let st = self.shared.pub_state.lock().expect("publisher state");
+        (st.seq, st.last.clone())
+    }
+
+    fn publish(&self, next: FleetSketch) {
+        let mut st = self.shared.pub_state.lock().expect("publisher state");
+        if st.last == next {
+            return; // quiet drain: subscribers owe nothing
+        }
+        st.seq += 1;
+        let json_line = json::delta_to_json(st.seq, &st.last, &next);
+        let bin_payload = wire::encode_delta(st.seq, &st.last, &next);
+        st.last = next;
+        let mut subs = self.shared.subs.lock().expect("subscriber list");
+        subs.retain_mut(|sub| sub.send(&json_line, &bin_payload));
+    }
+
+    /// Stop accepting, join the acceptor, and drop all subscribers.
+    /// Idempotent; also runs on drop.
+    pub fn shutdown(&mut self) {
+        if self.shared.stop.swap(true, Ordering::AcqRel) {
+            return;
+        }
+        // Unblock the blocking accept() with a throwaway connection.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(handle) = self.acceptor.take() {
+            let _ = handle.join();
+        }
+        self.shared.subs.lock().expect("subscriber list").clear();
+    }
+}
+
+impl Drop for FleetServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+// ---------------------------------------------------------------------
+// Connection handling
+// ---------------------------------------------------------------------
+
+fn handle_connection(stream: TcpStream, shared: &Shared) -> io::Result<()> {
+    let mut first = [0u8; 1];
+    if stream.peek(&mut first)? == 0 {
+        return Ok(()); // closed before sending anything
+    }
+    if first[0] == wire::MAGIC[0] {
+        handle_binary(stream, shared)
+    } else {
+        handle_http(stream, shared)
+    }
+}
+
+fn handle_binary(mut stream: TcpStream, shared: &Shared) -> io::Result<()> {
+    let mut magic = [0u8; 4];
+    stream.read_exact(&mut magic)?;
+    if magic != wire::MAGIC {
+        return wire::write_frame(&mut stream, wire::STATUS_ERR, b"bad magic");
+    }
+    loop {
+        let Ok((op, payload)) = wire::read_frame(&mut stream) else {
+            return Ok(()); // client hung up
+        };
+        match binary_request(op, &payload) {
+            Ok(Request::Subscribe) => return subscribe_binary(stream, shared),
+            Ok(req) => {
+                let body = {
+                    let fleet = shared.fleet.lock().expect("fleet lock");
+                    answer_binary(&fleet, &req)
+                };
+                wire::write_frame(&mut stream, wire::STATUS_OK, &body)?;
+            }
+            Err(msg) => wire::write_frame(&mut stream, wire::STATUS_ERR, msg.as_bytes())?,
+        }
+    }
+}
+
+fn binary_request(op: u8, payload: &[u8]) -> Result<Request, String> {
+    let mut c = wire::Cursor::new(payload);
+    let req = match op {
+        wire::OP_SNAPSHOT => Request::Snapshot,
+        wire::OP_AGGREGATE => Request::Aggregate,
+        wire::OP_TOP_K => Request::TopK(c.u32()? as usize),
+        wire::OP_COUNT_BELOW => Request::CountBelow(c.f64()?),
+        wire::OP_AUC_HISTOGRAM => Request::AucHistogram(c.u32()? as usize),
+        wire::OP_SCORE_HISTOGRAM => Request::ScoreHistogram(c.u32()? as usize),
+        wire::OP_SUBSCRIBE => Request::Subscribe,
+        other => return Err(format!("unknown opcode {other}")),
+    };
+    c.done()?;
+    validate(&req)?;
+    Ok(req)
+}
+
+fn subscribe_binary(mut stream: TcpStream, shared: &Shared) -> io::Result<()> {
+    // Hold pub_state across baseline write + subscriber insertion so
+    // the first delta a subscriber sees is seq(baseline) + 1.
+    let st = shared.pub_state.lock().expect("publisher state");
+    let payload = wire::encode_sketch(st.seq, &st.last);
+    wire::write_frame(&mut stream, wire::STATUS_OK, &payload)?;
+    shared
+        .subs
+        .lock()
+        .expect("subscriber list")
+        .push(Subscriber { stream, proto: Proto::Binary });
+    drop(st);
+    Ok(())
+}
+
+enum HttpError {
+    /// 400 with a message.
+    Bad(String),
+    /// 404 for an unknown path.
+    NotFound(String),
+}
+
+fn handle_http(stream: TcpStream, shared: &Shared) -> io::Result<()> {
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut stream = stream;
+    loop {
+        let Some((method, target, close)) = read_http_request(&mut reader)? else {
+            return Ok(()); // client hung up between requests
+        };
+        match http_request(&method, &target) {
+            Ok(Request::Subscribe) => return subscribe_http(stream, shared),
+            Ok(req) => {
+                let body = {
+                    let fleet = shared.fleet.lock().expect("fleet lock");
+                    answer_json(&fleet, &req)
+                };
+                write_http(&mut stream, 200, &body, close)?;
+            }
+            Err(HttpError::NotFound(path)) => {
+                write_http(&mut stream, 404, &error_body(&format!("no such endpoint {path}")), close)?;
+            }
+            Err(HttpError::Bad(msg)) => {
+                write_http(&mut stream, 400, &error_body(&msg), close)?;
+            }
+        }
+        if close {
+            return Ok(());
+        }
+    }
+}
+
+/// Read one request head; `None` on a clean EOF.
+fn read_http_request(
+    reader: &mut BufReader<TcpStream>,
+) -> io::Result<Option<(String, String, bool)>> {
+    let mut line = String::new();
+    if reader.read_line(&mut line)? == 0 {
+        return Ok(None);
+    }
+    let mut parts = line.split_whitespace();
+    let method = parts.next().unwrap_or("").to_string();
+    let target = parts.next().unwrap_or("/").to_string();
+    let mut close = false;
+    loop {
+        let mut header = String::new();
+        if reader.read_line(&mut header)? == 0 {
+            return Ok(None); // truncated head
+        }
+        let header = header.trim_end();
+        if header.is_empty() {
+            break;
+        }
+        if let Some((name, value)) = header.split_once(':') {
+            if name.eq_ignore_ascii_case("connection") && value.trim().eq_ignore_ascii_case("close")
+            {
+                close = true;
+            }
+        }
+    }
+    Ok(Some((method, target, close)))
+}
+
+fn http_request(method: &str, target: &str) -> Result<Request, HttpError> {
+    if method != "GET" {
+        return Err(HttpError::Bad(format!("unsupported method {method:?}; all endpoints are GET")));
+    }
+    let (path, query) = match target.split_once('?') {
+        Some((p, q)) => (p, q),
+        None => (target, ""),
+    };
+    let req = match path {
+        "/snapshot" => Request::Snapshot,
+        "/aggregate" => Request::Aggregate,
+        "/subscribe" => Request::Subscribe,
+        "/top_k_worst" => Request::TopK(parse_param(query, "k")?),
+        "/count_below" => Request::CountBelow(parse_param(query, "t")?),
+        "/auc_histogram" => Request::AucHistogram(parse_param(query, "bins")?),
+        "/score_histogram" => Request::ScoreHistogram(parse_param(query, "bins")?),
+        other => return Err(HttpError::NotFound(other.to_string())),
+    };
+    validate(&req).map_err(HttpError::Bad)?;
+    Ok(req)
+}
+
+fn parse_param<T: std::str::FromStr>(query: &str, name: &str) -> Result<T, HttpError>
+where
+    T::Err: std::fmt::Display,
+{
+    let raw = query
+        .split('&')
+        .find_map(|kv| kv.strip_prefix(name).and_then(|rest| rest.strip_prefix('=')))
+        .ok_or_else(|| HttpError::Bad(format!("missing query parameter {name}")))?;
+    raw.parse()
+        .map_err(|e| HttpError::Bad(format!("query parameter {name}={raw}: {e}")))
+}
+
+fn subscribe_http(mut stream: TcpStream, shared: &Shared) -> io::Result<()> {
+    let st = shared.pub_state.lock().expect("publisher state");
+    let line = json::sketch_to_json(st.seq, &st.last);
+    // Streaming body: no Content-Length, the connection is the frame.
+    stream.write_all(
+        b"HTTP/1.1 200 OK\r\nContent-Type: application/x-ndjson\r\nConnection: close\r\n\r\n",
+    )?;
+    stream.write_all(line.as_bytes())?;
+    stream.write_all(b"\n")?;
+    shared
+        .subs
+        .lock()
+        .expect("subscriber list")
+        .push(Subscriber { stream, proto: Proto::Http });
+    drop(st);
+    Ok(())
+}
+
+fn error_body(msg: &str) -> String {
+    use std::fmt::Write as _;
+    let mut out = String::with_capacity(msg.len() + 16);
+    out.push_str("{\"error\":\"");
+    for ch in msg.chars() {
+        match ch {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push_str("\"}");
+    out
+}
+
+fn write_http(stream: &mut TcpStream, status: u16, body: &str, close: bool) -> io::Result<()> {
+    let reason = match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        _ => "Error",
+    };
+    let head = format!(
+        "HTTP/1.1 {status} {reason}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: {}\r\n\r\n",
+        body.len(),
+        if close { "close" } else { "keep-alive" }
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(body.as_bytes())
+}

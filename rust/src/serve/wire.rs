@@ -1,0 +1,575 @@
+//! Compact binary codec and framing for the serving layer.
+//!
+//! Layout is fixed little-endian with no self-description — both ends
+//! are this crate, and the protocol is versioned by the magic
+//! preamble. Floats travel as raw `f64::to_bits` words, so wire values
+//! are bit-identical to the in-process answers by construction; the
+//! 128-bit fixed-point AUC sum is 16 bytes LE; `usize` counters widen
+//! to `u64`.
+//!
+//! A binary session opens with [`MAGIC`] (first byte `0xAB`, which can
+//! never begin an HTTP method token — that is how the listener routes
+//! the two protocols on one port) and then exchanges frames:
+//! `[u8 opcode][u32 LE payload length][payload]`. Requests use the
+//! `OP_*` opcodes; every response is a [`STATUS_OK`] frame holding the
+//! encoded answer or a [`STATUS_ERR`] frame holding a UTF-8 message.
+//! Subscriptions additionally push [`OP_DELTA`] frames after the
+//! baseline response.
+
+use crate::fleet::{
+    AucHistogram, FleetAggregate, FleetSketch, FleetSnapshot, ScoreHistogram, StreamSnapshot,
+};
+use std::io::{self, Read, Write};
+
+/// Binary-session preamble; `0xAB` disambiguates from HTTP.
+pub const MAGIC: [u8; 4] = [0xAB, b'S', b'A', b'1'];
+
+/// Request: full [`FleetSnapshot`]. Empty payload.
+pub const OP_SNAPSHOT: u8 = 1;
+/// Request: [`FleetAggregate`]. Empty payload.
+pub const OP_AGGREGATE: u8 = 2;
+/// Request: worst-k streams. Payload: `u32` k.
+pub const OP_TOP_K: u8 = 3;
+/// Request: streams with AUC below a threshold. Payload: `f64` bits.
+pub const OP_COUNT_BELOW: u8 = 4;
+/// Request: [`AucHistogram`]. Payload: `u32` bins (must be ≥ 1).
+pub const OP_AUC_HISTOGRAM: u8 = 5;
+/// Request: [`ScoreHistogram`]. Payload: `u32` bins (must be ≥ 1).
+pub const OP_SCORE_HISTOGRAM: u8 = 6;
+/// Request: subscribe to sketch deltas. Empty payload; the OK response
+/// carries the baseline `(seq, sketch)`.
+pub const OP_SUBSCRIBE: u8 = 7;
+/// Server push: one `(seq, sketch-delta)` per ingestion drain.
+pub const OP_DELTA: u8 = 8;
+
+/// Response opcode: payload is the encoded answer.
+pub const STATUS_OK: u8 = 0;
+/// Response opcode: payload is a UTF-8 error message.
+pub const STATUS_ERR: u8 = 1;
+
+/// Upper bound on a frame payload; anything larger is a corrupt or
+/// hostile length prefix, not a real answer.
+const MAX_FRAME: usize = 1 << 30;
+
+// ---------------------------------------------------------------------
+// Primitives
+// ---------------------------------------------------------------------
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_usize(out: &mut Vec<u8>, v: usize) {
+    put_u64(out, v as u64);
+}
+
+fn put_f64(out: &mut Vec<u8>, v: f64) {
+    put_u64(out, v.to_bits());
+}
+
+fn put_i128(out: &mut Vec<u8>, v: i128) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_bool(out: &mut Vec<u8>, v: bool) {
+    out.push(u8::from(v));
+}
+
+fn put_opt_f64(out: &mut Vec<u8>, v: Option<f64>) {
+    match v {
+        Some(x) => {
+            out.push(1);
+            put_f64(out, x);
+        }
+        None => out.push(0),
+    }
+}
+
+/// Bounds-checked reader over one frame payload.
+pub struct Cursor<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Cursor<'a> {
+    /// Wrap a payload for decoding.
+    pub fn new(b: &'a [u8]) -> Self {
+        Cursor { b, i: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], String> {
+        let end = self
+            .i
+            .checked_add(n)
+            .filter(|&e| e <= self.b.len())
+            .ok_or_else(|| format!("payload truncated at offset {}", self.i))?;
+        let s = &self.b[self.i..end];
+        self.i = end;
+        Ok(s)
+    }
+
+    /// Read a `u8`.
+    pub fn u8(&mut self) -> Result<u8, String> {
+        Ok(self.take(1)?[0])
+    }
+
+    /// Read a LE `u32`.
+    pub fn u32(&mut self) -> Result<u32, String> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().expect("4 bytes")))
+    }
+
+    /// Read a LE `u64`.
+    pub fn u64(&mut self) -> Result<u64, String> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().expect("8 bytes")))
+    }
+
+    /// Read a `usize` carried as LE `u64`.
+    pub fn usize(&mut self) -> Result<usize, String> {
+        usize::try_from(self.u64()?).map_err(|_| "count exceeds usize".to_string())
+    }
+
+    /// Read an `f64` carried as raw bits.
+    pub fn f64(&mut self) -> Result<f64, String> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    /// Read a LE `i128`.
+    pub fn i128(&mut self) -> Result<i128, String> {
+        Ok(i128::from_le_bytes(self.take(16)?.try_into().expect("16 bytes")))
+    }
+
+    /// Read a `bool` byte (strictly 0 or 1).
+    pub fn bool(&mut self) -> Result<bool, String> {
+        match self.u8()? {
+            0 => Ok(false),
+            1 => Ok(true),
+            other => Err(format!("invalid bool byte {other}")),
+        }
+    }
+
+    /// Read a tagged optional `f64`.
+    pub fn opt_f64(&mut self) -> Result<Option<f64>, String> {
+        if self.bool()? {
+            self.f64().map(Some)
+        } else {
+            Ok(None)
+        }
+    }
+
+    /// Require that the whole payload was consumed.
+    pub fn done(&self) -> Result<(), String> {
+        if self.i == self.b.len() {
+            Ok(())
+        } else {
+            Err(format!("{} trailing payload bytes", self.b.len() - self.i))
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Framing
+// ---------------------------------------------------------------------
+
+/// Write one `[opcode][len][payload]` frame.
+pub fn write_frame(w: &mut impl Write, opcode: u8, payload: &[u8]) -> io::Result<()> {
+    debug_assert!(payload.len() <= MAX_FRAME);
+    let mut head = [0u8; 5];
+    head[0] = opcode;
+    head[1..5].copy_from_slice(&(payload.len() as u32).to_le_bytes());
+    w.write_all(&head)?;
+    w.write_all(payload)
+}
+
+/// Read one frame; errors on EOF or an implausible length prefix.
+pub fn read_frame(r: &mut impl Read) -> io::Result<(u8, Vec<u8>)> {
+    let mut head = [0u8; 5];
+    r.read_exact(&mut head)?;
+    let len = u32::from_le_bytes(head[1..5].try_into().expect("4 bytes")) as usize;
+    if len > MAX_FRAME {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            format!("frame length {len} exceeds the {MAX_FRAME}-byte cap"),
+        ));
+    }
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload)?;
+    Ok((head[0], payload))
+}
+
+// ---------------------------------------------------------------------
+// Value encoding
+// ---------------------------------------------------------------------
+
+fn put_stream_snapshot(out: &mut Vec<u8>, s: &StreamSnapshot) {
+    put_u64(out, s.stream);
+    put_f64(out, s.auc);
+    put_usize(out, s.len);
+    put_usize(out, s.compressed_len);
+    put_u64(out, s.events);
+    put_u32(out, s.alarms);
+    put_bool(out, s.alarmed);
+    put_opt_f64(out, s.baseline);
+}
+
+fn stream_snapshot_from(c: &mut Cursor) -> Result<StreamSnapshot, String> {
+    Ok(StreamSnapshot {
+        stream: c.u64()?,
+        auc: c.f64()?,
+        len: c.usize()?,
+        compressed_len: c.usize()?,
+        events: c.u64()?,
+        alarms: c.u32()?,
+        alarmed: c.bool()?,
+        baseline: c.opt_f64()?,
+    })
+}
+
+fn put_stream_list(out: &mut Vec<u8>, streams: &[StreamSnapshot]) {
+    put_u32(out, streams.len() as u32);
+    for s in streams {
+        put_stream_snapshot(out, s);
+    }
+}
+
+fn stream_list_from(c: &mut Cursor) -> Result<Vec<StreamSnapshot>, String> {
+    let n = c.u32()? as usize;
+    let mut streams = Vec::with_capacity(n.min(1 << 20));
+    for _ in 0..n {
+        streams.push(stream_snapshot_from(c)?);
+    }
+    Ok(streams)
+}
+
+/// Encode a [`FleetSnapshot`].
+pub fn encode_snapshot(s: &FleetSnapshot) -> Vec<u8> {
+    let mut out = Vec::with_capacity(16 + 52 * s.streams.len() + 8 * s.alarmed_streams.len());
+    put_u64(&mut out, s.total_events);
+    put_u32(&mut out, s.alarmed_streams.len() as u32);
+    for &id in &s.alarmed_streams {
+        put_u64(&mut out, id);
+    }
+    put_stream_list(&mut out, &s.streams);
+    out
+}
+
+/// Decode a [`FleetSnapshot`].
+pub fn decode_snapshot(payload: &[u8]) -> Result<FleetSnapshot, String> {
+    let mut c = Cursor::new(payload);
+    let total_events = c.u64()?;
+    let n_alarmed = c.u32()? as usize;
+    let mut alarmed_streams = Vec::with_capacity(n_alarmed.min(1 << 20));
+    for _ in 0..n_alarmed {
+        alarmed_streams.push(c.u64()?);
+    }
+    let streams = stream_list_from(&mut c)?;
+    c.done()?;
+    Ok(FleetSnapshot { streams, alarmed_streams, total_events })
+}
+
+/// Encode a [`FleetAggregate`].
+pub fn encode_aggregate(a: &FleetAggregate) -> Vec<u8> {
+    let mut out = Vec::with_capacity(80);
+    put_usize(&mut out, a.streams);
+    put_usize(&mut out, a.live_streams);
+    put_usize(&mut out, a.alarmed_streams);
+    put_u64(&mut out, a.total_events);
+    for v in [a.min_auc, a.p10_auc, a.median_auc, a.p90_auc, a.max_auc, a.mean_auc] {
+        put_f64(&mut out, v);
+    }
+    out
+}
+
+/// Decode a [`FleetAggregate`].
+pub fn decode_aggregate(payload: &[u8]) -> Result<FleetAggregate, String> {
+    let mut c = Cursor::new(payload);
+    let a = FleetAggregate {
+        streams: c.usize()?,
+        live_streams: c.usize()?,
+        alarmed_streams: c.usize()?,
+        total_events: c.u64()?,
+        min_auc: c.f64()?,
+        p10_auc: c.f64()?,
+        median_auc: c.f64()?,
+        p90_auc: c.f64()?,
+        max_auc: c.f64()?,
+        mean_auc: c.f64()?,
+    };
+    c.done()?;
+    Ok(a)
+}
+
+/// Encode a worst-k answer.
+pub fn encode_top_k(streams: &[StreamSnapshot]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(4 + 52 * streams.len());
+    put_stream_list(&mut out, streams);
+    out
+}
+
+/// Decode a worst-k answer.
+pub fn decode_top_k(payload: &[u8]) -> Result<Vec<StreamSnapshot>, String> {
+    let mut c = Cursor::new(payload);
+    let streams = stream_list_from(&mut c)?;
+    c.done()?;
+    Ok(streams)
+}
+
+/// Encode a count-below answer as `(threshold, count)`.
+pub fn encode_count_below(threshold: f64, count: usize) -> Vec<u8> {
+    let mut out = Vec::with_capacity(16);
+    put_f64(&mut out, threshold);
+    put_usize(&mut out, count);
+    out
+}
+
+/// Decode a count-below answer.
+pub fn decode_count_below(payload: &[u8]) -> Result<(f64, usize), String> {
+    let mut c = Cursor::new(payload);
+    let pair = (c.f64()?, c.usize()?);
+    c.done()?;
+    Ok(pair)
+}
+
+/// Encode an [`AucHistogram`].
+pub fn encode_auc_histogram(h: &AucHistogram) -> Vec<u8> {
+    let mut out = Vec::with_capacity(12 + 8 * h.counts.len());
+    put_u32(&mut out, h.counts.len() as u32);
+    for &cnt in &h.counts {
+        put_usize(&mut out, cnt);
+    }
+    put_usize(&mut out, h.live_streams);
+    out
+}
+
+/// Decode an [`AucHistogram`].
+pub fn decode_auc_histogram(payload: &[u8]) -> Result<AucHistogram, String> {
+    let mut c = Cursor::new(payload);
+    let n = c.u32()? as usize;
+    let mut counts = Vec::with_capacity(n.min(1 << 20));
+    for _ in 0..n {
+        counts.push(c.usize()?);
+    }
+    let live_streams = c.usize()?;
+    c.done()?;
+    Ok(AucHistogram { counts, live_streams })
+}
+
+/// Encode a [`ScoreHistogram`].
+pub fn encode_score_histogram(h: &ScoreHistogram) -> Vec<u8> {
+    let mut out = Vec::with_capacity(12 + 8 * h.counts.len());
+    put_u32(&mut out, h.counts.len() as u32);
+    for &cnt in &h.counts {
+        put_u64(&mut out, cnt);
+    }
+    put_u64(&mut out, h.entries);
+    out
+}
+
+/// Decode a [`ScoreHistogram`].
+pub fn decode_score_histogram(payload: &[u8]) -> Result<ScoreHistogram, String> {
+    let mut c = Cursor::new(payload);
+    let n = c.u32()? as usize;
+    let mut counts = Vec::with_capacity(n.min(1 << 20));
+    for _ in 0..n {
+        counts.push(c.u64()?);
+    }
+    let entries = c.u64()?;
+    c.done()?;
+    Ok(ScoreHistogram { counts, entries })
+}
+
+/// Encode a subscription baseline `(seq, sketch)` — full bin array.
+pub fn encode_sketch(seq: u64, sk: &FleetSketch) -> Vec<u8> {
+    let mut out = Vec::with_capacity(64 + 8 * sk.bins.len());
+    put_u64(&mut out, seq);
+    put_usize(&mut out, sk.streams);
+    put_usize(&mut out, sk.live);
+    put_usize(&mut out, sk.alarmed);
+    put_i128(&mut out, sk.qauc_sum);
+    put_u32(&mut out, sk.bins.len() as u32);
+    for &b in &sk.bins {
+        put_u64(&mut out, b);
+    }
+    out
+}
+
+/// Decode a subscription baseline.
+pub fn decode_sketch(payload: &[u8]) -> Result<(u64, FleetSketch), String> {
+    let mut c = Cursor::new(payload);
+    let seq = c.u64()?;
+    let streams = c.usize()?;
+    let live = c.usize()?;
+    let alarmed = c.usize()?;
+    let qauc_sum = c.i128()?;
+    let n = c.u32()? as usize;
+    let mut bins = Vec::with_capacity(n.min(1 << 20));
+    for _ in 0..n {
+        bins.push(c.u64()?);
+    }
+    c.done()?;
+    Ok((seq, FleetSketch { bins, live, alarmed, streams, qauc_sum }))
+}
+
+/// Encode a subscription delta: absolute scalars plus the
+/// `[bin, new_count]` pairs that differ between `prev` and `next`.
+pub fn encode_delta(seq: u64, prev: &FleetSketch, next: &FleetSketch) -> Vec<u8> {
+    let mut out = Vec::with_capacity(64);
+    put_u64(&mut out, seq);
+    put_usize(&mut out, next.streams);
+    put_usize(&mut out, next.live);
+    put_usize(&mut out, next.alarmed);
+    put_i128(&mut out, next.qauc_sum);
+    let changed: Vec<(u32, u64)> = prev
+        .bins
+        .iter()
+        .zip(next.bins.iter())
+        .enumerate()
+        .filter(|(_, (p, n))| p != n)
+        .map(|(b, (_, &n))| (b as u32, n))
+        .collect();
+    put_u32(&mut out, changed.len() as u32);
+    for (b, n) in changed {
+        put_u32(&mut out, b);
+        put_u64(&mut out, n);
+    }
+    out
+}
+
+/// Apply one delta payload onto `onto`, returning its sequence number.
+pub fn apply_delta(payload: &[u8], onto: &mut FleetSketch) -> Result<u64, String> {
+    let mut c = Cursor::new(payload);
+    let seq = c.u64()?;
+    onto.streams = c.usize()?;
+    onto.live = c.usize()?;
+    onto.alarmed = c.usize()?;
+    onto.qauc_sum = c.i128()?;
+    let n = c.u32()? as usize;
+    for _ in 0..n {
+        let bin = c.u32()? as usize;
+        let count = c.u64()?;
+        let slot = onto
+            .bins
+            .get_mut(bin)
+            .ok_or_else(|| format!("delta bin {bin} out of range"))?;
+        *slot = count;
+    }
+    c.done()?;
+    Ok(seq)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn snap(stream: u64, auc: f64, baseline: Option<f64>) -> StreamSnapshot {
+        StreamSnapshot {
+            stream,
+            auc,
+            len: 3,
+            compressed_len: 3,
+            events: 11,
+            alarms: 1,
+            alarmed: baseline.is_some(),
+            baseline,
+        }
+    }
+
+    #[test]
+    fn frames_round_trip_and_reject_hostile_lengths() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, OP_TOP_K, &7u32.to_le_bytes()).unwrap();
+        write_frame(&mut buf, STATUS_OK, b"").unwrap();
+        let mut r = &buf[..];
+        assert_eq!(read_frame(&mut r).unwrap(), (OP_TOP_K, 7u32.to_le_bytes().to_vec()));
+        assert_eq!(read_frame(&mut r).unwrap(), (STATUS_OK, Vec::new()));
+        assert!(read_frame(&mut r).is_err(), "EOF must error");
+
+        let mut hostile = vec![OP_SNAPSHOT];
+        hostile.extend_from_slice(&u32::MAX.to_le_bytes());
+        assert!(read_frame(&mut &hostile[..]).is_err());
+    }
+
+    #[test]
+    fn every_value_round_trips_bitwise() {
+        let snapshot = FleetSnapshot {
+            streams: vec![snap(1, 0.1 + 0.2, None), snap(2, 1.0 / 3.0, Some(0.5))],
+            alarmed_streams: vec![2],
+            total_events: u64::MAX,
+        };
+        assert_eq!(decode_snapshot(&encode_snapshot(&snapshot)).unwrap(), snapshot);
+
+        let agg = FleetAggregate {
+            streams: 5,
+            live_streams: 4,
+            alarmed_streams: 1,
+            total_events: 1 << 40,
+            min_auc: 5e-324,
+            p10_auc: 0.1,
+            median_auc: 0.5,
+            p90_auc: 0.9,
+            max_auc: 1.0,
+            mean_auc: 2.0 / 3.0,
+        };
+        let back = decode_aggregate(&encode_aggregate(&agg)).unwrap();
+        assert_eq!(back, agg);
+        assert_eq!(back.mean_auc.to_bits(), agg.mean_auc.to_bits());
+
+        let streams = vec![snap(9, 0.25, Some(0.9))];
+        assert_eq!(decode_top_k(&encode_top_k(&streams)).unwrap(), streams);
+        assert_eq!(decode_count_below(&encode_count_below(0.7, 3)).unwrap(), (0.7, 3));
+
+        let h = AucHistogram { counts: vec![1, 0, 4], live_streams: 5 };
+        assert_eq!(decode_auc_histogram(&encode_auc_histogram(&h)).unwrap(), h);
+        let s = ScoreHistogram { counts: vec![u64::MAX, 2], entries: 9 };
+        assert_eq!(decode_score_histogram(&encode_score_histogram(&s)).unwrap(), s);
+    }
+
+    #[test]
+    fn truncated_and_padded_payloads_are_rejected() {
+        let agg = decode_aggregate(&encode_aggregate(&FleetAggregate {
+            streams: 1,
+            live_streams: 1,
+            alarmed_streams: 0,
+            total_events: 1,
+            min_auc: 0.5,
+            p10_auc: 0.5,
+            median_auc: 0.5,
+            p90_auc: 0.5,
+            max_auc: 0.5,
+            mean_auc: 0.5,
+        }))
+        .unwrap();
+        let full = encode_aggregate(&agg);
+        assert!(decode_aggregate(&full[..full.len() - 1]).is_err());
+        let mut padded = full.clone();
+        padded.push(0);
+        assert!(decode_aggregate(&padded).is_err());
+    }
+
+    #[test]
+    fn deltas_reconstruct_the_sketch() {
+        let mut prev = FleetSketch {
+            bins: vec![0; 64],
+            live: 2,
+            alarmed: 0,
+            streams: 2,
+            qauc_sum: 1 << 90,
+        };
+        prev.bins[0] = 1;
+        prev.bins[32] = 1;
+        let (seq, base) = decode_sketch(&encode_sketch(4, &prev)).unwrap();
+        assert_eq!((seq, &base), (4, &prev));
+
+        let mut next = prev.clone();
+        next.bins[32] = 0;
+        next.bins[33] = 2;
+        next.live = 3;
+        next.qauc_sum = -(1 << 70);
+        let mut applied = prev.clone();
+        assert_eq!(apply_delta(&encode_delta(5, &prev, &next), &mut applied).unwrap(), 5);
+        assert_eq!(applied, next);
+    }
+}

@@ -26,6 +26,7 @@ use streamauc::fleet::{
     AucFleet, AucHistogram, EstimatorKind, FleetAggregate, FleetAlarm, FleetConfig,
     FleetExecutor, MonitorConfig, StreamConfig, StreamSnapshot,
 };
+use streamauc::serve::{http_get, json, wire, BinClient, FleetServer};
 use streamauc::stream::Pcg;
 
 type Event = (u64, f64, bool);
@@ -487,6 +488,159 @@ fn three_way_mixed_estimator_fleet_is_bit_identical_to_serial() {
             );
         }
     });
+}
+
+// ---------------------------------------------------------------------
+// Loopback serving digest (wire ≡ in-process, rust/src/serve)
+// ---------------------------------------------------------------------
+
+/// The digest contract extended over the wire: the same adversarial
+/// schedule replayed against a pooled, **pipelined** fleet behind a
+/// loopback [`FleetServer`] — ingestion routed through the server so
+/// every drain publishes, every query answered over *both* protocols —
+/// must reproduce the serial in-process digest exactly. Each wire
+/// answer is held to three standards: the JSON body re-encodes to the
+/// identical bytes, the binary payload re-encodes to the identical
+/// bytes, and the decoded values (collected into a [`Digest`]) equal
+/// the serial reference bit-for-bit.
+#[test]
+fn served_wire_answers_reproduce_the_serial_digest() {
+    let mut rng = Pcg::seed(0x5E2F_ED16);
+    let n_streams = 24;
+    let n_batches = 40;
+    let batches = skewed_batches(&mut rng, n_streams, n_batches);
+    let mut steps = Vec::new();
+    for i in 0..n_batches {
+        steps.push(Step::Batch(i));
+        if i % 5 == 2 {
+            steps.push(Step::Aggregate);
+        }
+        if i % 7 == 3 {
+            steps.push(Step::TopK(1 + rng.below(6) as usize));
+        }
+        if i % 11 == 4 {
+            steps.push(Step::CountBelow(0.4 + rng.uniform() * 0.4));
+        }
+        if i % 9 == 6 {
+            steps.push(Step::Histogram(1 + rng.below(16) as usize));
+        }
+    }
+    let mut serial = fleet_with(1, false, false);
+    let reference = run_schedule(&mut serial, &batches, &steps);
+    assert!(!reference.alarms.is_empty(), "serving scenario must alarm to compare");
+    assert!(
+        reference.top_k.iter().any(|k| !k.is_empty()),
+        "serving scenario must produce triage results to compare"
+    );
+
+    let server =
+        FleetServer::start(fleet_with(8, true, true), "127.0.0.1:0").expect("bind loopback");
+    let addr = server.local_addr();
+    let mut bin = BinClient::connect(addr).expect("binary session");
+    let mut aggregates = Vec::new();
+    let mut top_k = Vec::new();
+    let mut below = Vec::new();
+    let mut histograms = Vec::new();
+    for &step in &steps {
+        match step {
+            Step::Batch(i) => server.ingest_batch_at(&batches[i], (i as u64 + 1) * BATCH_CLOCK),
+            Step::Aggregate => {
+                let (status, body) = http_get(addr, "/aggregate").expect("http aggregate");
+                assert_eq!(status, 200);
+                let agg = json::aggregate_from_json(&body).expect("decode aggregate body");
+                assert_eq!(json::aggregate_to_json(&agg), body, "aggregate re-encode drifted");
+                let (code, payload) =
+                    bin.request(wire::OP_AGGREGATE, &[]).expect("binary aggregate");
+                assert_eq!(code, wire::STATUS_OK);
+                assert_eq!(wire::decode_aggregate(&payload).expect("decode payload"), agg);
+                assert_eq!(wire::encode_aggregate(&agg), payload, "aggregate bytes drifted");
+                aggregates.push(agg);
+            }
+            Step::TopK(k) => {
+                let (status, body) =
+                    http_get(addr, &format!("/top_k_worst?k={k}")).expect("http top-k");
+                assert_eq!(status, 200);
+                let worst = json::top_k_from_json(&body).expect("decode top-k body");
+                assert_eq!(json::top_k_to_json(&worst), body, "top-k re-encode drifted");
+                let (code, payload) = bin
+                    .request(wire::OP_TOP_K, &(k as u32).to_le_bytes())
+                    .expect("binary top-k");
+                assert_eq!(code, wire::STATUS_OK);
+                assert_eq!(wire::decode_top_k(&payload).expect("decode payload"), worst);
+                assert_eq!(wire::encode_top_k(&worst), payload, "top-k bytes drifted");
+                top_k.push(worst);
+            }
+            Step::CountBelow(t) => {
+                let (status, body) =
+                    http_get(addr, &format!("/count_below?t={t}")).expect("http count-below");
+                assert_eq!(status, 200);
+                let (echoed, n) = json::count_below_from_json(&body).expect("decode count body");
+                assert_eq!(echoed.to_bits(), t.to_bits(), "threshold echo drifted");
+                let (code, payload) = bin
+                    .request(wire::OP_COUNT_BELOW, &t.to_bits().to_le_bytes())
+                    .expect("binary count-below");
+                assert_eq!(code, wire::STATUS_OK);
+                assert_eq!(wire::decode_count_below(&payload).expect("decode payload"), (t, n));
+                below.push(n);
+            }
+            Step::Histogram(bins) => {
+                let (status, body) = http_get(addr, &format!("/auc_histogram?bins={bins}"))
+                    .expect("http histogram");
+                assert_eq!(status, 200);
+                let h = json::auc_histogram_from_json(&body).expect("decode histogram body");
+                assert_eq!(json::auc_histogram_to_json(&h), body, "histogram re-encode drifted");
+                let (code, payload) = bin
+                    .request(wire::OP_AUC_HISTOGRAM, &(bins as u32).to_le_bytes())
+                    .expect("binary histogram");
+                assert_eq!(code, wire::STATUS_OK);
+                assert_eq!(wire::decode_auc_histogram(&payload).expect("decode payload"), h);
+                histograms.push(h);
+            }
+            Step::SnapshotIter | Step::EvictIdle(_) | Step::EvictOlderThan(_) => {
+                unreachable!("not part of the served schedule")
+            }
+        }
+    }
+
+    // The served fleet's running sketches survive the schedule, and the
+    // final snapshot crosses the wire byte-identically too.
+    server.with_fleet(|f| f.verify_sketches());
+    let (status, body) = http_get(addr, "/snapshot").expect("http snapshot");
+    assert_eq!(status, 200);
+    let snap = json::snapshot_from_json(&body).expect("decode snapshot body");
+    assert_eq!(json::snapshot_to_json(&snap), body, "snapshot re-encode drifted");
+    let (code, payload) = bin.request(wire::OP_SNAPSHOT, &[]).expect("binary snapshot");
+    assert_eq!(code, wire::STATUS_OK);
+    assert_eq!(wire::decode_snapshot(&payload).expect("decode payload"), snap);
+    assert_eq!(wire::encode_snapshot(&snap), payload, "snapshot bytes drifted");
+
+    let digest = Digest {
+        aggregates,
+        iter_snapshots: Vec::new(),
+        top_k,
+        below,
+        histograms,
+        evicted: Vec::new(),
+        evicted_by_age: Vec::new(),
+        final_streams: snap.streams,
+        final_alarmed: snap.alarmed_streams,
+        alarms: server.with_fleet_mut(|f| f.alarms().to_vec()),
+        total_events: snap.total_events,
+        clock: server.with_fleet(|f| f.clock()),
+    };
+    assert_eq!(reference, digest, "wire-served digest diverged from the serial reference");
+
+    // The raw score distribution rides the same contract.
+    let ref_scores = serial.score_histogram(8);
+    let (status, body) = http_get(addr, "/score_histogram?bins=8").expect("http scores");
+    assert_eq!(status, 200);
+    let scores = json::score_histogram_from_json(&body).expect("decode scores body");
+    assert_eq!(json::score_histogram_to_json(&scores), body, "score re-encode drifted");
+    assert_eq!(scores, ref_scores, "served score distribution diverged from serial");
+    let (code, payload) =
+        bin.request(wire::OP_SCORE_HISTOGRAM, &8u32.to_le_bytes()).expect("binary scores");
+    assert_eq!(code, wire::STATUS_OK);
+    assert_eq!(wire::decode_score_histogram(&payload).expect("decode payload"), ref_scores);
 }
 
 /// Reconfiguring workers mid-stream (respawning the pool) must splice

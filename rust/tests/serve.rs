@@ -1,0 +1,457 @@
+//! Integration suite for the serving layer (`src/serve/`).
+//!
+//! The load-bearing property is **wire ≡ in-process**: every endpoint
+//! response, on both protocols, must decode to a value equal to the
+//! in-process query — and *byte-derived* equal: re-encoding the
+//! decoded value reproduces the exact response bytes, so nothing was
+//! lost or reformatted in flight. The suite drives seeded
+//! mixed-estimator fleets (approx + maintained-exact + binned in one
+//! fleet), the empty- and one-stream edges that used to underflow
+//! before the quantile-rank fix, the malformed requests that must be
+//! rejected at the surface instead of panicking the fleet, and the
+//! delta-subscription stream on both protocols.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+
+use streamauc::fleet::{AucFleet, FleetConfig, StreamConfig};
+use streamauc::serve::{http_get, http_subscribe, json, wire, BinClient, FleetServer, HttpClient};
+use streamauc::stream::Pcg;
+
+// ---------------------------------------------------------------------
+// Fixtures
+// ---------------------------------------------------------------------
+
+fn fleet_with(workers: usize, pipeline: bool, defaults: StreamConfig) -> AucFleet {
+    AucFleet::new(FleetConfig {
+        shards: 8,
+        workers,
+        pool: true,
+        pipeline,
+        adaptive: false,
+        stream_defaults: defaults,
+    })
+}
+
+/// A seeded fleet mixing all three estimator kinds, fed enough traffic
+/// to spread streams across sketch bins.
+fn mixed_fleet(workers: usize, pipeline: bool) -> AucFleet {
+    let mut fleet = fleet_with(workers, pipeline, StreamConfig::new(32, 0.1).without_monitor());
+    fleet.configure_stream(3, StreamConfig::exact(32).without_monitor());
+    fleet.configure_stream(5, StreamConfig::binned(32, 64, 0.0, 1.0).without_monitor());
+    let mut rng = Pcg::seed(0x5EAF);
+    let mut batch = Vec::new();
+    for _ in 0..30 {
+        batch.clear();
+        for _ in 0..40 {
+            let id = rng.below(24);
+            let pos = rng.chance(0.5);
+            let score = if pos { rng.range(0.05, 0.7) } else { rng.range(0.3, 0.95) };
+            batch.push((id, score, pos));
+        }
+        fleet.push_batch(&batch);
+    }
+    fleet
+}
+
+/// One deterministic batch for post-subscription ingestion.
+fn delta_batch(seed: u64) -> Vec<(u64, f64, bool)> {
+    let mut rng = Pcg::seed(seed);
+    (0..64)
+        .map(|_| {
+            let pos = rng.chance(0.5);
+            let score = if pos { rng.range(0.05, 0.6) } else { rng.range(0.4, 0.95) };
+            (rng.below(30), score, pos)
+        })
+        .collect()
+}
+
+/// Send a raw request (must carry `Connection: close`) and return
+/// `(status, body)`.
+fn raw_http(addr: SocketAddr, request: &str) -> (u16, String) {
+    let mut s = TcpStream::connect(addr).expect("connect");
+    s.write_all(request.as_bytes()).expect("send");
+    let mut buf = String::new();
+    s.read_to_string(&mut buf).expect("read");
+    let status = buf
+        .split_whitespace()
+        .nth(1)
+        .and_then(|v| v.parse().ok())
+        .unwrap_or_else(|| panic!("no status in {buf:?}"));
+    let body = buf.split_once("\r\n\r\n").map(|(_, b)| b.to_string()).unwrap_or_default();
+    (status, body)
+}
+
+fn get_ok(addr: SocketAddr, target: &str) -> String {
+    let (status, body) = http_get(addr, target).expect("http round-trip");
+    assert_eq!(status, 200, "GET {target} → {body}");
+    body
+}
+
+fn bad_request(addr: SocketAddr, target: &str) {
+    let (status, body) = http_get(addr, target).expect("http round-trip");
+    assert_eq!(status, 400, "GET {target} must be rejected, got {status}: {body}");
+    let err = json::Json::parse(&body).expect("error body is JSON");
+    let msg = err.get("error").expect("error key");
+    assert!(matches!(msg, json::Json::Str(s) if !s.is_empty()), "{body}");
+}
+
+// ---------------------------------------------------------------------
+// Wire ≡ in-process
+// ---------------------------------------------------------------------
+
+#[test]
+fn http_endpoints_are_byte_derived_equal_to_in_process_queries() {
+    for (workers, pipeline) in [(1, false), (4, true)] {
+        let server =
+            FleetServer::start(mixed_fleet(workers, pipeline), "127.0.0.1:0").expect("bind");
+        let addr = server.local_addr();
+        let label = format!("workers={workers} pipeline={pipeline}");
+
+        let body = get_ok(addr, "/snapshot");
+        let snap = json::snapshot_from_json(&body).expect("decode snapshot");
+        assert_eq!(snap, server.with_fleet(|f| f.snapshot()), "{label}");
+        assert_eq!(json::snapshot_to_json(&snap), body, "{label}");
+
+        let body = get_ok(addr, "/aggregate");
+        let agg = json::aggregate_from_json(&body).expect("decode aggregate");
+        assert_eq!(agg, server.with_fleet(|f| f.aggregate()), "{label}");
+        assert_eq!(json::aggregate_to_json(&agg), body, "{label}");
+
+        let body = get_ok(addr, "/top_k_worst?k=5");
+        let top = json::top_k_from_json(&body).expect("decode top-k");
+        assert_eq!(top, server.with_fleet(|f| f.top_k_worst(5)), "{label}");
+        assert_eq!(json::top_k_to_json(&top), body, "{label}");
+
+        for t in ["0.5", "0.015625", "1", "-2", "3.5"] {
+            let body = get_ok(addr, &format!("/count_below?t={t}"));
+            let (threshold, count) = json::count_below_from_json(&body).expect("decode count");
+            assert_eq!(threshold, t.parse::<f64>().unwrap(), "{label}");
+            assert_eq!(count, server.with_fleet(|f| f.count_below(threshold)), "{label} t={t}");
+            assert_eq!(json::count_below_to_json(threshold, count), body, "{label}");
+        }
+
+        let body = get_ok(addr, "/auc_histogram?bins=7");
+        let hist = json::auc_histogram_from_json(&body).expect("decode histogram");
+        assert_eq!(hist, server.with_fleet(|f| f.auc_histogram(7)), "{label}");
+        assert_eq!(json::auc_histogram_to_json(&hist), body, "{label}");
+
+        let body = get_ok(addr, "/score_histogram?bins=9");
+        let hist = json::score_histogram_from_json(&body).expect("decode histogram");
+        assert_eq!(hist, server.with_fleet(|f| f.score_histogram(9)), "{label}");
+        assert_eq!(json::score_histogram_to_json(&hist), body, "{label}");
+    }
+}
+
+#[test]
+fn binary_endpoints_are_byte_derived_equal_to_in_process_queries() {
+    let server = FleetServer::start(mixed_fleet(4, true), "127.0.0.1:0").expect("bind");
+    let mut bin = BinClient::connect(server.local_addr()).expect("binary session");
+
+    let mut ask = |op: u8, payload: &[u8]| -> Vec<u8> {
+        let (status, body) = bin.request(op, payload).expect("binary round-trip");
+        assert_eq!(status, wire::STATUS_OK, "{}", String::from_utf8_lossy(&body));
+        body
+    };
+
+    let body = ask(wire::OP_SNAPSHOT, &[]);
+    let snap = wire::decode_snapshot(&body).expect("decode snapshot");
+    assert_eq!(snap, server.with_fleet(|f| f.snapshot()));
+    assert_eq!(wire::encode_snapshot(&snap), body);
+
+    let body = ask(wire::OP_AGGREGATE, &[]);
+    let agg = wire::decode_aggregate(&body).expect("decode aggregate");
+    assert_eq!(agg, server.with_fleet(|f| f.aggregate()));
+    assert_eq!(wire::encode_aggregate(&agg), body);
+
+    let body = ask(wire::OP_TOP_K, &4u32.to_le_bytes());
+    let top = wire::decode_top_k(&body).expect("decode top-k");
+    assert_eq!(top, server.with_fleet(|f| f.top_k_worst(4)));
+    assert_eq!(wire::encode_top_k(&top), body);
+
+    let body = ask(wire::OP_COUNT_BELOW, &0.62_f64.to_bits().to_le_bytes());
+    let (threshold, count) = wire::decode_count_below(&body).expect("decode count");
+    assert_eq!(threshold.to_bits(), 0.62_f64.to_bits());
+    assert_eq!(count, server.with_fleet(|f| f.count_below(0.62)));
+    assert_eq!(wire::encode_count_below(threshold, count), body);
+
+    let body = ask(wire::OP_AUC_HISTOGRAM, &11u32.to_le_bytes());
+    let hist = wire::decode_auc_histogram(&body).expect("decode histogram");
+    assert_eq!(hist, server.with_fleet(|f| f.auc_histogram(11)));
+    assert_eq!(wire::encode_auc_histogram(&hist), body);
+
+    let body = ask(wire::OP_SCORE_HISTOGRAM, &6u32.to_le_bytes());
+    let hist = wire::decode_score_histogram(&body).expect("decode histogram");
+    assert_eq!(hist, server.with_fleet(|f| f.score_histogram(6)));
+    assert_eq!(wire::encode_score_histogram(&hist), body);
+}
+
+#[test]
+fn http_and_binary_answers_decode_to_the_same_value() {
+    let server = FleetServer::start(mixed_fleet(2, false), "127.0.0.1:0").expect("bind");
+    let addr = server.local_addr();
+    let via_http = json::aggregate_from_json(&get_ok(addr, "/aggregate")).expect("decode http");
+    let mut bin = BinClient::connect(addr).expect("binary session");
+    let (status, payload) = bin.request(wire::OP_AGGREGATE, &[]).expect("binary round-trip");
+    assert_eq!(status, wire::STATUS_OK);
+    let via_bin = wire::decode_aggregate(&payload).expect("decode binary");
+    assert_eq!(via_http, via_bin);
+    for (a, b) in [
+        (via_http.min_auc, via_bin.min_auc),
+        (via_http.median_auc, via_bin.median_auc),
+        (via_http.mean_auc, via_bin.mean_auc),
+    ] {
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+}
+
+// ---------------------------------------------------------------------
+// Empty-fleet and one-stream edges (network-reachable since the
+// quantile-rank underflow fix)
+// ---------------------------------------------------------------------
+
+#[test]
+fn empty_fleet_endpoints_answer_totally() {
+    let empty = fleet_with(2, false, StreamConfig::new(16, 0.0).without_monitor());
+    let server = FleetServer::start(empty, "127.0.0.1:0").expect("bind");
+    let addr = server.local_addr();
+
+    let agg = json::aggregate_from_json(&get_ok(addr, "/aggregate")).expect("decode");
+    assert_eq!(agg, server.with_fleet(|f| f.aggregate()));
+    assert_eq!(agg.live_streams, 0);
+
+    let snap = json::snapshot_from_json(&get_ok(addr, "/snapshot")).expect("decode");
+    assert!(snap.streams.is_empty());
+
+    let top = json::top_k_from_json(&get_ok(addr, "/top_k_worst?k=3")).expect("decode");
+    assert!(top.is_empty());
+
+    let (_, count) =
+        json::count_below_from_json(&get_ok(addr, "/count_below?t=0.5")).expect("decode");
+    assert_eq!(count, 0);
+
+    let hist = json::auc_histogram_from_json(&get_ok(addr, "/auc_histogram?bins=4")).expect("ok");
+    assert_eq!(hist.counts, vec![0; 4]);
+    let hist =
+        json::score_histogram_from_json(&get_ok(addr, "/score_histogram?bins=4")).expect("ok");
+    assert_eq!(hist.counts, vec![0; 4]);
+}
+
+#[test]
+fn one_stream_fleet_serves_degenerate_quantiles() {
+    let mut fleet = fleet_with(2, false, StreamConfig::new(16, 0.0).without_monitor());
+    fleet.push_batch(&[(42, 0.2, true), (42, 0.8, false), (42, 0.5, true)]);
+    let server = FleetServer::start(fleet, "127.0.0.1:0").expect("bind");
+    let addr = server.local_addr();
+
+    let agg = json::aggregate_from_json(&get_ok(addr, "/aggregate")).expect("decode");
+    assert_eq!(agg, server.with_fleet(|f| f.aggregate()));
+    assert_eq!(agg.live_streams, 1);
+    // Every quantile of a one-stream fleet is that stream's AUC.
+    for q in [agg.min_auc, agg.p10_auc, agg.median_auc, agg.p90_auc, agg.max_auc] {
+        assert_eq!(q.to_bits(), agg.mean_auc.to_bits());
+    }
+    let top = json::top_k_from_json(&get_ok(addr, "/top_k_worst?k=8")).expect("decode");
+    assert_eq!(top.len(), 1);
+    assert_eq!(top[0].stream, 42);
+}
+
+// ---------------------------------------------------------------------
+// Malformed requests error cleanly on both protocols
+// ---------------------------------------------------------------------
+
+#[test]
+fn malformed_http_requests_get_client_errors_not_panics() {
+    let server = FleetServer::start(mixed_fleet(2, false), "127.0.0.1:0").expect("bind");
+    let addr = server.local_addr();
+
+    // Zero-bin histograms: the in-process methods assert, the wire
+    // surface must reject instead.
+    bad_request(addr, "/auc_histogram?bins=0");
+    bad_request(addr, "/score_histogram?bins=0");
+    // Non-finite and unparseable thresholds.
+    bad_request(addr, "/count_below?t=nan");
+    bad_request(addr, "/count_below?t=inf");
+    bad_request(addr, "/count_below?t=half");
+    // Missing parameters.
+    bad_request(addr, "/top_k_worst");
+    bad_request(addr, "/count_below");
+    bad_request(addr, "/auc_histogram");
+    bad_request(addr, "/auc_histogram?bins=-1");
+
+    let (status, body) = http_get(addr, "/nope").expect("http round-trip");
+    assert_eq!(status, 404, "{body}");
+    json::Json::parse(&body).expect("404 body is JSON");
+
+    let (status, _) =
+        raw_http(addr, "POST /aggregate HTTP/1.1\r\nConnection: close\r\n\r\n");
+    assert_eq!(status, 400, "non-GET must be rejected");
+
+    // The server survives all of the above.
+    let agg = json::aggregate_from_json(&get_ok(addr, "/aggregate")).expect("decode");
+    assert_eq!(agg, server.with_fleet(|f| f.aggregate()));
+}
+
+#[test]
+fn malformed_binary_requests_get_error_frames() {
+    let server = FleetServer::start(mixed_fleet(2, false), "127.0.0.1:0").expect("bind");
+    let mut bin = BinClient::connect(server.local_addr()).expect("binary session");
+
+    let mut expect_err = |op: u8, payload: &[u8]| {
+        let (status, body) = bin.request(op, payload).expect("binary round-trip");
+        assert_eq!(status, wire::STATUS_ERR, "opcode {op} must error");
+        assert!(!body.is_empty(), "error frame carries a message");
+        String::from_utf8(body).expect("error message is UTF-8");
+    };
+
+    expect_err(99, &[]); // unknown opcode
+    expect_err(wire::OP_AUC_HISTOGRAM, &0u32.to_le_bytes());
+    expect_err(wire::OP_SCORE_HISTOGRAM, &0u32.to_le_bytes());
+    expect_err(wire::OP_COUNT_BELOW, &f64::NAN.to_bits().to_le_bytes());
+    expect_err(wire::OP_COUNT_BELOW, &f64::INFINITY.to_bits().to_le_bytes());
+    expect_err(wire::OP_TOP_K, &[1, 2]); // truncated k
+    expect_err(wire::OP_SNAPSHOT, &[0]); // trailing payload
+
+    // The session keeps working after rejected requests.
+    let (status, payload) = bin.request(wire::OP_TOP_K, &2u32.to_le_bytes()).expect("ok");
+    assert_eq!(status, wire::STATUS_OK);
+    let top = wire::decode_top_k(&payload).expect("decode");
+    assert_eq!(top, server.with_fleet(|f| f.top_k_worst(2)));
+}
+
+// ---------------------------------------------------------------------
+// Keep-alive and concurrency
+// ---------------------------------------------------------------------
+
+#[test]
+fn http_keep_alive_serves_many_requests_on_one_connection() {
+    let server = FleetServer::start(mixed_fleet(2, false), "127.0.0.1:0").expect("bind");
+    let mut client = HttpClient::connect(server.local_addr()).expect("connect");
+    let reference = server.with_fleet(|f| f.aggregate());
+    for _ in 0..25 {
+        let (status, body) = client.get("/aggregate").expect("keep-alive get");
+        assert_eq!(status, 200);
+        assert_eq!(json::aggregate_from_json(&body).expect("decode"), reference);
+    }
+}
+
+#[test]
+fn queries_stay_well_formed_under_concurrent_pooled_ingestion() {
+    let fleet = fleet_with(4, true, StreamConfig::new(32, 0.1).without_monitor());
+    let server = std::sync::Arc::new(FleetServer::start(fleet, "127.0.0.1:0").expect("bind"));
+    let addr = server.local_addr();
+
+    let ingest = {
+        let server = std::sync::Arc::clone(&server);
+        std::thread::spawn(move || {
+            for round in 0..40u64 {
+                server.ingest_batch(&delta_batch(0xFEED ^ round));
+            }
+        })
+    };
+    let mut client = HttpClient::connect(addr).expect("connect");
+    for i in 0..60 {
+        let target = match i % 4 {
+            0 => "/aggregate",
+            1 => "/snapshot",
+            2 => "/top_k_worst?k=3",
+            _ => "/auc_histogram?bins=5",
+        };
+        let (status, body) = client.get(target).expect("get under ingestion");
+        assert_eq!(status, 200);
+        // Under live mutation the *value* changes between requests,
+        // but every response must still be a complete, decodable
+        // document.
+        match i % 4 {
+            0 => {
+                json::aggregate_from_json(&body).expect("decode");
+            }
+            1 => {
+                json::snapshot_from_json(&body).expect("decode");
+            }
+            2 => {
+                json::top_k_from_json(&body).expect("decode");
+            }
+            _ => {
+                json::auc_histogram_from_json(&body).expect("decode");
+            }
+        }
+    }
+    ingest.join().expect("ingest thread");
+    // Quiesced: wire and in-process agree again, byte-derived.
+    let body = get_ok(addr, "/aggregate");
+    let agg = json::aggregate_from_json(&body).expect("decode");
+    assert_eq!(agg, server.with_fleet(|f| f.aggregate()));
+    assert_eq!(json::aggregate_to_json(&agg), body);
+}
+
+// ---------------------------------------------------------------------
+// Subscriptions
+// ---------------------------------------------------------------------
+
+#[test]
+fn http_subscription_baseline_plus_deltas_reconstruct_the_sketch() {
+    let server = FleetServer::start(mixed_fleet(2, false), "127.0.0.1:0").expect("bind");
+    let mut lines = http_subscribe(server.local_addr()).expect("subscribe");
+
+    let baseline_line = lines.next().expect("baseline line").expect("read");
+    let (base_seq, mut sketch) = json::sketch_from_json(&baseline_line).expect("decode baseline");
+    assert_eq!(sketch, server.with_fleet(|f| f.sketch_state()));
+
+    for round in 0..3u64 {
+        server.ingest_batch(&delta_batch(0xD17A ^ round));
+        let delta_line = lines.next().expect("delta line").expect("read");
+        let seq = json::apply_subscription_json(&delta_line, &mut sketch).expect("apply");
+        // Gapless: one delta per publishing drain, in order.
+        assert_eq!(seq, base_seq + round + 1);
+        let (want_seq, want) = server.last_published();
+        assert_eq!((seq, &sketch), (want_seq, &want));
+    }
+    assert_eq!(sketch, server.with_fleet(|f| f.sketch_state()));
+}
+
+#[test]
+fn binary_subscription_baseline_plus_deltas_reconstruct_the_sketch() {
+    let server = FleetServer::start(mixed_fleet(4, true), "127.0.0.1:0").expect("bind");
+    let mut bin = BinClient::connect(server.local_addr()).expect("binary session");
+
+    let baseline = bin.subscribe().expect("subscribe");
+    let (base_seq, mut sketch) = wire::decode_sketch(&baseline).expect("decode baseline");
+    assert_eq!(sketch, server.with_fleet(|f| f.sketch_state()));
+    assert_eq!(server.subscriber_count(), 1);
+
+    // A quiet drain publishes nothing.
+    server.ingest_batch(&[]);
+    assert_eq!(server.last_published().0, base_seq);
+
+    for round in 0..3u64 {
+        server.ingest_batch(&delta_batch(0xB1A5 ^ round));
+        let payload = bin.next_delta().expect("delta frame");
+        let seq = wire::apply_delta(&payload, &mut sketch).expect("apply");
+        assert_eq!(seq, base_seq + round + 1);
+        let (want_seq, want) = server.last_published();
+        assert_eq!((seq, &sketch), (want_seq, &want));
+    }
+    assert_eq!(sketch, server.with_fleet(|f| f.sketch_state()));
+}
+
+#[test]
+fn dropped_subscribers_are_pruned_on_the_next_publish() {
+    let server = FleetServer::start(mixed_fleet(2, false), "127.0.0.1:0").expect("bind");
+    {
+        let mut bin = BinClient::connect(server.local_addr()).expect("binary session");
+        bin.subscribe().expect("subscribe");
+        assert_eq!(server.subscriber_count(), 1);
+    } // client dropped — socket closed
+    // Publishing notices the dead socket and prunes it. Early writes
+    // can still land in the closed socket's buffer until the kernel
+    // processes the reset, so publish until the prune shows up.
+    for round in 0..50u64 {
+        server.ingest_batch(&delta_batch(0xDEAD ^ round));
+        if server.subscriber_count() == 0 {
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(10));
+    }
+    assert_eq!(server.subscriber_count(), 0);
+}
