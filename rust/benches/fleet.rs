@@ -65,10 +65,24 @@
 //! load. The 1-stream row skips the server and reports 0 — one stream
 //! is not a serving scenario.
 //!
+//! A **mem** section measures the million-stream memory story
+//! (`rust/DESIGN.md` §Memory): for each stream count it fills a fleet
+//! (window [`MEM_WINDOW`], ~[`MEM_FILL`] events/stream), reads the
+//! logical footprint from the shard sketches and the process RSS from
+//! `/proc/self/status` (`VmRSS`), hibernates every stream
+//! (`hibernate_idle(0)` — arenas reset outright once a shard holds no
+//! live-form stream), re-reads both, and times transparent
+//! rehydration by pushing one event into a sample of frozen streams.
+//! Per-stream byte budgets are **asserted**, not just reported: live ≤
+//! [`LIVE_BUDGET_BYTES`], hibernated ≤ [`HIB_BUDGET_BYTES`], and the
+//! hibernated form ≤ ⅓ of live. The default run tops out at 100k
+//! streams so smoke stays fast; `-- --streams 1000000` produces the
+//! million-stream row.
+//!
 //! Besides the human-readable tables, the run writes machine-readable
 //! `BENCH_fleet.json` at the repository root (events/sec or calls/sec
-//! per scenario per stream count, plus parallel speedups) so the perf
-//! trajectory is tracked across PRs.
+//! per scenario per stream count, plus parallel speedups and the `mem`
+//! rows) so the perf trajectory is tracked across PRs.
 //!
 //! Expected shape: batched ≥ one-at-a-time everywhere; pooled ≥ scoped
 //! at small batches (no spawn/join per batch) and under skew (stealing
@@ -95,6 +109,17 @@ const EPSILON: f64 = 0.1;
 const BATCH: usize = 8192;
 const SMALL_BATCH: usize = 64;
 const SHARDS: usize = 64;
+
+/// Window capacity for the `mem` section — small enough that the
+/// million-stream row fits a dev box, large enough that the live form
+/// carries real tree/list structure per stream.
+const MEM_WINDOW: usize = 32;
+/// Events per stream the `mem` section ingests (windows ~half full).
+const MEM_FILL: usize = 16;
+/// Asserted ceiling on logical bytes per live stream at `MEM_WINDOW`.
+const LIVE_BUDGET_BYTES: f64 = 6144.0;
+/// Asserted ceiling on logical bytes per hibernated stream.
+const HIB_BUDGET_BYTES: f64 = 768.0;
 
 struct Row {
     streams: usize,
@@ -195,6 +220,104 @@ fn calls_per_sec(mut op: impl FnMut()) -> f64 {
     f64::from(iters) / start.elapsed().as_secs_f64()
 }
 
+struct MemRow {
+    streams: usize,
+    live: usize,
+    live_bytes: u64,
+    hib_bytes: u64,
+    rss_live_kb: u64,
+    rss_hib_kb: u64,
+    rehydrate_ns: u64,
+}
+
+/// Resident set size in kB from `/proc/self/status` (0 where absent —
+/// non-Linux hosts report logical footprint only).
+fn vm_rss_kb() -> u64 {
+    let Ok(status) = std::fs::read_to_string("/proc/self/status") else {
+        return 0;
+    };
+    status
+        .lines()
+        .find_map(|l| l.strip_prefix("VmRSS:"))
+        .and_then(|rest| rest.trim().strip_suffix("kB"))
+        .and_then(|n| n.trim().parse().ok())
+        .unwrap_or(0)
+}
+
+/// One `mem` row: fill a fleet, read logical + resident cost live,
+/// hibernate everything, read both again, then time transparent
+/// rehydration. The per-stream byte budgets are asserted here — the
+/// bench run *fails* if a regression pushes a stream over budget.
+fn mem_row(workers: usize, n_streams: usize) -> MemRow {
+    let mut fleet = AucFleet::new(FleetConfig {
+        shards: SHARDS,
+        workers,
+        pool: true,
+        pipeline: false,
+        adaptive: false,
+        stream_defaults: StreamConfig::new(MEM_WINDOW, EPSILON).without_monitor(),
+    });
+    // Generate and ingest chunk by chunk so no event buffer survives
+    // into the RSS readings.
+    let mut gen = MultiStream::new(n_streams, 0x3E3).with_mean_burst(4.0);
+    let mut remaining = n_streams * MEM_FILL;
+    while remaining > 0 {
+        let n = remaining.min(BATCH);
+        fleet.push_batch(&gen.next_batch(n));
+        remaining -= n;
+    }
+    let live = fleet.stream_count();
+    let live_bytes = fleet.footprint_bytes();
+    let rss_live_kb = vm_rss_kb();
+
+    // The sketch-maintained footprint is part of the aggregate's
+    // bit-identity contract — prove it before trusting the numbers.
+    assert_eq!(
+        fleet.aggregate(),
+        fleet.aggregate_rescan(),
+        "mem row: sketch aggregate diverged from rescan"
+    );
+
+    let frozen = fleet.hibernate_idle(0);
+    assert_eq!(frozen, live, "every stream should hibernate");
+    let hib_bytes = fleet.footprint_bytes();
+    let rss_hib_kb = vm_rss_kb();
+
+    let live_per = live_bytes as f64 / live as f64;
+    let hib_per = hib_bytes as f64 / live as f64;
+    assert!(
+        live_per <= LIVE_BUDGET_BYTES,
+        "live footprint {live_per:.0} B/stream exceeds the {LIVE_BUDGET_BYTES} budget"
+    );
+    assert!(
+        hib_per <= HIB_BUDGET_BYTES,
+        "hibernated footprint {hib_per:.0} B/stream exceeds the {HIB_BUDGET_BYTES} budget"
+    );
+    assert!(
+        hib_bytes * 3 <= live_bytes,
+        "hibernated form must cost ≤ ⅓ of live: {hib_bytes} vs {live_bytes}"
+    );
+    if live >= 100_000 && rss_live_kb > 0 && rss_hib_kb > 0 {
+        assert!(
+            rss_hib_kb <= rss_live_kb,
+            "hibernation must not grow RSS: {rss_hib_kb} kB vs {rss_live_kb} kB"
+        );
+    }
+
+    // Transparent rehydration: one event into each of a sample of
+    // frozen streams (the shard asserts bit-identity on every thaw).
+    let sample: Vec<u64> =
+        (0..n_streams as u64).filter(|&id| fleet.is_hibernated(id)).take(1000).collect();
+    let t = Instant::now();
+    for &id in &sample {
+        fleet.push(id, 0.5, true);
+    }
+    let rehydrate_ns = t.elapsed().as_nanos() as u64 / sample.len().max(1) as u64;
+    assert_eq!(fleet.hibernated_count(), live - sample.len(), "sampled streams must rehydrate");
+
+    MemRow { streams: n_streams, live, live_bytes, hib_bytes, rss_live_kb, rss_hib_kb, rehydrate_ns }
+}
+
 fn flag(args: &[String], name: &str, default: usize) -> usize {
     match args.iter().position(|a| a == name) {
         Some(i) => args
@@ -206,7 +329,7 @@ fn flag(args: &[String], name: &str, default: usize) -> usize {
     }
 }
 
-fn json_report(events_per_row: usize, workers: usize, rows: &[Row]) -> String {
+fn json_report(events_per_row: usize, workers: usize, rows: &[Row], mem: &[MemRow]) -> String {
     let mut s = String::new();
     s.push_str("{\n");
     let _ = writeln!(s, "  \"bench\": \"fleet\",");
@@ -280,6 +403,34 @@ fn json_report(events_per_row: usize, workers: usize, rows: &[Row]) -> String {
         );
         s.push_str(if i + 1 < rows.len() { ",\n" } else { "\n" });
     }
+    s.push_str("  ],\n");
+    let _ = writeln!(s, "  \"mem_window\": {MEM_WINDOW},");
+    let _ = writeln!(s, "  \"mem_fill\": {MEM_FILL},");
+    let _ = writeln!(s, "  \"mem_live_budget_bytes\": {LIVE_BUDGET_BYTES},");
+    let _ = writeln!(s, "  \"mem_hibernated_budget_bytes\": {HIB_BUDGET_BYTES},");
+    s.push_str("  \"mem\": [\n");
+    for (i, m) in mem.iter().enumerate() {
+        let _ = write!(
+            s,
+            "    {{\"streams\": {}, \"live_streams\": {}, \
+             \"live_bytes_per_stream\": {:.1}, \"hibernated_bytes_per_stream\": {:.1}, \
+             \"hibernated_to_live_ratio\": {:.3}, \
+             \"live_total_bytes\": {}, \"hibernated_total_bytes\": {}, \
+             \"rss_live_kb\": {}, \"rss_hibernated_kb\": {}, \
+             \"rehydrate_ns_per_stream\": {}}}",
+            m.streams,
+            m.live,
+            m.live_bytes as f64 / m.live.max(1) as f64,
+            m.hib_bytes as f64 / m.live.max(1) as f64,
+            m.hib_bytes as f64 / m.live_bytes.max(1) as f64,
+            m.live_bytes,
+            m.hib_bytes,
+            m.rss_live_kb,
+            m.rss_hib_kb,
+            m.rehydrate_ns,
+        );
+        s.push_str(if i + 1 < mem.len() { ",\n" } else { "\n" });
+    }
     s.push_str("  ]\n}\n");
     s
 }
@@ -288,6 +439,9 @@ fn main() {
     let args: Vec<String> = std::env::args().collect();
     let events_per_row = flag(&args, "--events", 400_000);
     let workers = flag(&args, "--workers", 4);
+    // Largest `mem`-section fleet; pass `--streams 1000000` for the
+    // million-stream row (the default keeps smoke runs fast).
+    let mem_streams = flag(&args, "--streams", 100_000);
 
     println!("== fleet: ingestion throughput — batching and execution strategies ==");
     println!(
@@ -607,8 +761,36 @@ fn main() {
         }
     }
 
+    println!(
+        "\n== mem: bytes/stream live vs hibernated (k={MEM_WINDOW}, ~{MEM_FILL} events/stream; \
+         budgets asserted: live ≤ {LIVE_BUDGET_BYTES:.0} B, hibernated ≤ {HIB_BUDGET_BYTES:.0} B, \
+         ratio ≤ ⅓) ==\n"
+    );
+    println!(
+        "{:>9}  {:>10}  {:>12}  {:>6}  {:>11}  {:>11}  {:>12}",
+        "streams", "live B/st", "hib B/st", "ratio", "RSS live", "RSS hib", "rehydrate"
+    );
+    let mut mem_rows = Vec::new();
+    for &n in &[10_000usize, mem_streams] {
+        if mem_rows.iter().any(|m: &MemRow| m.streams == n) {
+            continue;
+        }
+        let m = mem_row(workers, n);
+        println!(
+            "{:>9}  {:>10.0}  {:>12.0}  {:>5.2}x  {:>8} kB  {:>8} kB  {:>9} ns",
+            m.streams,
+            m.live_bytes as f64 / m.live.max(1) as f64,
+            m.hib_bytes as f64 / m.live.max(1) as f64,
+            m.hib_bytes as f64 / m.live_bytes.max(1) as f64,
+            m.rss_live_kb,
+            m.rss_hib_kb,
+            m.rehydrate_ns,
+        );
+        mem_rows.push(m);
+    }
+
     let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_fleet.json");
-    let report = json_report(events_per_row, workers, &rows);
+    let report = json_report(events_per_row, workers, &rows, &mem_rows);
     match std::fs::write(&path, &report) {
         Ok(()) => println!("\nwrote {}", path.display()),
         Err(e) => eprintln!("could not write {}: {e}", path.display()),

@@ -1,0 +1,211 @@
+//! Typed slab arenas: index-addressed storage decoupled from its owner.
+//!
+//! The paper's structures (the trees `T`/`TP` and the weighted lists
+//! `P`/`C`, §3) are long-lived and churn-heavy: every window slide
+//! allocates and frees a handful of nodes. With one `Vec` slab per
+//! structure per stream, a million-stream fleet pays the global
+//! allocator per stream *and* retains every stream's peak capacity
+//! forever. An [`Arena`] extracts the slab: slots are addressed by
+//! `u32` index, freed slots go on a free list for reuse, and — the
+//! point — the arena can be owned by a *shard* and shared by every
+//! stream in it. A stream's structures then shrink to a handful of
+//! integers (root index, head/tail indices, lengths) while node churn
+//! recycles shard-local slots without touching the allocator
+//! (`rust/DESIGN.md` §Memory).
+//!
+//! Index stability: a slot index is stable for the lifetime of the
+//! allocation; [`Arena::release`] invalidates it (the slot may be
+//! recycled by any later [`Arena::alloc`] on the same arena).
+
+/// A typed slab with a free list. Plain owned data (no `Rc`, no
+/// interior mutability), so it is `Send` whenever `T` is — the fleet
+/// moves whole shard-owned arenas across pool workers.
+#[derive(Clone, Debug)]
+pub struct Arena<T> {
+    /// Backing slots; freed slots stay in place until recycled.
+    pub(crate) slots: Vec<T>,
+    /// Indices of freed slots, recycled LIFO.
+    pub(crate) free: Vec<u32>,
+}
+
+impl<T> Default for Arena<T> {
+    fn default() -> Self {
+        Arena::new()
+    }
+}
+
+impl<T> Arena<T> {
+    /// Empty arena.
+    pub fn new() -> Arena<T> {
+        Arena { slots: Vec::new(), free: Vec::new() }
+    }
+
+    /// Empty arena with room for `cap` slots before reallocating.
+    pub fn with_capacity(cap: usize) -> Arena<T> {
+        Arena { slots: Vec::with_capacity(cap), free: Vec::new() }
+    }
+
+    /// Number of live (allocated, not freed) slots.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.slots.len() - self.free.len()
+    }
+
+    /// True when no slot is live.
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Total slots the arena has ever grown to (live + freed) — the
+    /// retained-capacity measure the shrink hooks act on.
+    #[inline]
+    pub fn slot_count(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Allocate a slot holding `value`, recycling a freed slot if one
+    /// exists.
+    #[inline]
+    pub fn alloc(&mut self, value: T) -> u32 {
+        match self.free.pop() {
+            Some(i) => {
+                self.slots[i as usize] = value;
+                i
+            }
+            None => {
+                let i = u32::try_from(self.slots.len()).expect("arena overflow (> u32::MAX slots)");
+                self.slots.push(value);
+                i
+            }
+        }
+    }
+
+    /// Free a slot for reuse. The index (and any copies) become
+    /// invalid; the slot's old value stays in place until recycled.
+    #[inline]
+    pub fn release(&mut self, i: u32) {
+        debug_assert!((i as usize) < self.slots.len(), "release of out-of-range slot");
+        self.free.push(i);
+    }
+
+    /// Drop all storage. Callers must have released every slot first —
+    /// this is the bulk-release hook for "no live owner left" moments
+    /// (a shard whose streams are all frozen, a tree drained to empty),
+    /// where retaining the peak-capacity slab would leak RSS forever.
+    pub fn reset(&mut self) {
+        assert_eq!(self.free.len(), self.slots.len(), "arena reset with live slots");
+        self.slots = Vec::new();
+        self.free = Vec::new();
+    }
+
+    /// Release retained capacity without moving any live slot: freed
+    /// slots at the *tail* of the slab are truncated away (interior
+    /// freed slots must stay — live indices are stable), then both
+    /// vectors shrink to fit. Cheap relative to the churn that grew
+    /// the arena; `O(slot_count)`.
+    pub fn shrink_to_fit(&mut self) {
+        if self.free.len() == self.slots.len() {
+            self.slots.clear();
+            self.free.clear();
+        } else if !self.free.is_empty() {
+            let mut is_free = vec![false; self.slots.len()];
+            for &i in &self.free {
+                is_free[i as usize] = true;
+            }
+            let mut keep = self.slots.len();
+            while keep > 0 && is_free[keep - 1] {
+                keep -= 1;
+            }
+            if keep < self.slots.len() {
+                self.slots.truncate(keep);
+                self.free.retain(|&i| (i as usize) < keep);
+            }
+        }
+        self.slots.shrink_to_fit();
+        self.free.shrink_to_fit();
+    }
+
+    /// Logical bytes held by live slots. Deliberately *logical* (live
+    /// count × slot size, ignoring capacity slack and free-list
+    /// backing): footprint numbers flow into snapshots and wire
+    /// digests, so they must be a function of content, never of the
+    /// allocation history that produced it.
+    #[inline]
+    pub fn live_bytes(&self) -> usize {
+        self.len() * std::mem::size_of::<T>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_recycles_released_slots() {
+        let mut ar: Arena<u64> = Arena::new();
+        let a = ar.alloc(1);
+        let b = ar.alloc(2);
+        assert_eq!((a, b), (0, 1));
+        assert_eq!(ar.len(), 2);
+        ar.release(a);
+        assert_eq!(ar.len(), 1);
+        let c = ar.alloc(3);
+        assert_eq!(c, a, "freed slot must be recycled");
+        assert_eq!(ar.slots[c as usize], 3);
+        assert_eq!(ar.slot_count(), 2);
+    }
+
+    #[test]
+    fn reset_drops_everything() {
+        let mut ar: Arena<u64> = Arena::with_capacity(8);
+        let a = ar.alloc(1);
+        let b = ar.alloc(2);
+        ar.release(b);
+        ar.release(a);
+        ar.reset();
+        assert_eq!(ar.slot_count(), 0);
+        assert!(ar.is_empty());
+        assert_eq!(ar.alloc(9), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "arena reset with live slots")]
+    fn reset_with_live_slots_panics() {
+        let mut ar: Arena<u64> = Arena::new();
+        ar.alloc(1);
+        ar.reset();
+    }
+
+    #[test]
+    fn shrink_truncates_freed_tail_only() {
+        let mut ar: Arena<u64> = Arena::new();
+        let ids: Vec<u32> = (0..8).map(|i| ar.alloc(i)).collect();
+        // Free an interior slot and the whole tail.
+        ar.release(ids[2]);
+        for &i in &ids[5..] {
+            ar.release(i);
+        }
+        ar.shrink_to_fit();
+        // Tail slots 5..8 are gone; interior freed slot 2 survives.
+        assert_eq!(ar.slot_count(), 5);
+        assert_eq!(ar.len(), 4);
+        assert_eq!(ar.free, vec![2]);
+        // Live slots kept their indices and values.
+        assert_eq!(ar.slots[4], 4);
+        // Recycling still works.
+        assert_eq!(ar.alloc(99), 2);
+    }
+
+    #[test]
+    fn shrink_of_fully_freed_arena_clears() {
+        let mut ar: Arena<u64> = Arena::new();
+        let ids: Vec<u32> = (0..16).map(|i| ar.alloc(i)).collect();
+        for &i in &ids {
+            ar.release(i);
+        }
+        ar.shrink_to_fit();
+        assert_eq!(ar.slot_count(), 0);
+        assert_eq!(ar.live_bytes(), 0);
+    }
+}

@@ -1,5 +1,8 @@
 //! Supporting data structures for estimating AUC (paper §3).
 //!
+//! * [`arena`] — typed slab arenas with free lists. Every tree node and
+//!   list cell lives in one; standalone estimators bundle private
+//!   arenas, the fleet pools them per shard (`rust/DESIGN.md` §Memory).
 //! * [`rbtree`] — arena-based augmented red-black tree. Instantiated twice
 //!   by the coordinator: as the score tree `T` (per-node label counters
 //!   `p`, `n` plus subtree sums `accpos`, `accneg` maintained through
@@ -10,10 +13,12 @@
 //! * [`score`] — total ordering for `f64` classifier scores, including the
 //!   `±∞` sentinels of paper §3.1.
 
+pub mod arena;
 pub mod rbtree;
 pub mod score;
 pub mod weighted_list;
 
+pub use arena::Arena;
 pub use rbtree::{Augment, NodeId, RbTree};
 pub use score::Score;
 pub use weighted_list::{CellId, WeightedList};

@@ -5,21 +5,32 @@
 //! maintained through rotations “without additional costs”, and keeps a
 //! second tree `TP` over the positive nodes for the `MaxPos` query (§3.2).
 //!
-//! Both trees are instances of [`RbTree`]: nodes live in a slab (`Vec` with
-//! a free list), are addressed by [`NodeId`], and carry a user value `V`
+//! Both trees are instances of the same machinery: nodes live in a typed
+//! [`Arena`] slab, are addressed by [`NodeId`], and carry a user value `V`
 //! plus an augmentation `A` recomputed locally from a node's value and its
 //! children's augmentations. Rotations and the insert/delete fix-ups keep
 //! the augmentation consistent, so subtree-sum queries such as
 //! `HeadStats` (Algorithm 1) remain `O(log k)`.
 //!
+//! The tree comes in two forms sharing one implementation:
+//!
+//! * [`RbTreeCore`] — the storage-free form: a root index and a length.
+//!   Every method takes the backing `Arena<Node<V, A>>` explicitly, so
+//!   many cores (one per stream) can share one shard-owned arena — the
+//!   million-stream memory layout (`rust/DESIGN.md` §Memory).
+//! * [`RbTree`] — the self-contained form bundling a core with its own
+//!   private arena; the ergonomic owner for standalone estimators,
+//!   tests and benches.
+//!
 //! Augmentation-maintenance order (important for correctness):
 //! 1. structural change (BST insert / transplant-delete);
-//! 2. [`RbTree::update_upward`] from the deepest structurally changed node
-//!    — after this the whole path to the root is consistent;
+//! 2. [`RbTreeCore::update_upward`] from the deepest structurally changed
+//!    node — after this the whole path to the root is consistent;
 //! 3. rebalancing fix-up — each rotation recomputes exactly the two
 //!    rotated nodes from their (already consistent) children, and
 //!    recolourings never touch the augmentation.
 
+use super::arena::Arena;
 use super::score::Score;
 
 /// Handle to a tree node. Stable for the node's lifetime; slots are
@@ -50,8 +61,9 @@ impl<V> Augment<V> for () {
     fn recompute(_: &V, _: Option<&Self>, _: Option<&Self>) -> Self {}
 }
 
+/// One tree node as stored in the arena slab.
 #[derive(Clone, Debug)]
-struct Node<V, A> {
+pub(crate) struct Node<V, A> {
     key: Score,
     val: V,
     aug: A,
@@ -61,134 +73,172 @@ struct Node<V, A> {
     red: bool,
 }
 
-/// Augmented red-black tree keyed by [`Score`].
+#[inline]
+fn min_of<V, A>(ar: &Arena<Node<V, A>>, mut i: u32) -> u32 {
+    while ar.slots[i as usize].left != NIL {
+        i = ar.slots[i as usize].left;
+    }
+    i
+}
+
+#[inline]
+fn max_of<V, A>(ar: &Arena<Node<V, A>>, mut i: u32) -> u32 {
+    while ar.slots[i as usize].right != NIL {
+        i = ar.slots[i as usize].right;
+    }
+    i
+}
+
+/// In-order successor by link-walking (independent of the root).
+fn succ<V, A>(ar: &Arena<Node<V, A>>, id: u32) -> u32 {
+    let mut i = id;
+    if ar.slots[i as usize].right != NIL {
+        return min_of(ar, ar.slots[i as usize].right);
+    }
+    let mut p = ar.slots[i as usize].parent;
+    while p != NIL && ar.slots[p as usize].right == i {
+        i = p;
+        p = ar.slots[p as usize].parent;
+    }
+    p
+}
+
+/// In-order predecessor by link-walking.
+fn pred<V, A>(ar: &Arena<Node<V, A>>, id: u32) -> u32 {
+    let mut i = id;
+    if ar.slots[i as usize].left != NIL {
+        return max_of(ar, ar.slots[i as usize].left);
+    }
+    let mut p = ar.slots[i as usize].parent;
+    while p != NIL && ar.slots[p as usize].left == i {
+        i = p;
+        p = ar.slots[p as usize].parent;
+    }
+    p
+}
+
+fn recompute_aug<V, A: Augment<V>>(ar: &mut Arena<Node<V, A>>, i: u32) {
+    let (l, r) = {
+        let n = &ar.slots[i as usize];
+        (n.left, n.right)
+    };
+    let la = if l == NIL { None } else { Some(&ar.slots[l as usize].aug) };
+    let ra = if r == NIL { None } else { Some(&ar.slots[r as usize].aug) };
+    let aug = A::recompute(&ar.slots[i as usize].val, la, ra);
+    ar.slots[i as usize].aug = aug;
+}
+
+/// Storage-free augmented red-black tree: root index + length, with the
+/// backing arena passed into every operation. Copyable — a stream's
+/// whole tree handle is twelve bytes.
 ///
-/// Duplicate keys are rejected by [`RbTree::insert`] (it returns the
-/// existing node), matching the paper where one tree node aggregates every
-/// window entry sharing a score.
-#[derive(Clone, Debug)]
-pub struct RbTree<V, A> {
-    nodes: Vec<Node<V, A>>,
-    free: Vec<u32>,
+/// Duplicate keys are rejected by [`RbTreeCore::insert`] (it returns the
+/// existing node), matching the paper where one tree node aggregates
+/// every window entry sharing a score.
+///
+/// Correct use requires passing the *same* arena the core's nodes were
+/// allocated from to every call; the shard layer guarantees this by
+/// owning arenas and cores together.
+#[derive(Clone, Copy, Debug)]
+pub(crate) struct RbTreeCore {
     root: u32,
     len: usize,
 }
 
-impl<V, A: Augment<V>> Default for RbTree<V, A> {
+impl Default for RbTreeCore {
     fn default() -> Self {
         Self::new()
     }
 }
 
-impl<V, A: Augment<V>> RbTree<V, A> {
+impl RbTreeCore {
     /// Empty tree.
-    pub fn new() -> Self {
-        RbTree { nodes: Vec::new(), free: Vec::new(), root: NIL, len: 0 }
-    }
-
-    /// Empty tree with room for `cap` nodes before reallocating.
-    pub fn with_capacity(cap: usize) -> Self {
-        RbTree { nodes: Vec::with_capacity(cap), free: Vec::new(), root: NIL, len: 0 }
+    pub(crate) fn new() -> RbTreeCore {
+        RbTreeCore { root: NIL, len: 0 }
     }
 
     /// Number of live nodes.
     #[inline]
-    pub fn len(&self) -> usize {
+    pub(crate) fn len(&self) -> usize {
         self.len
     }
 
     /// True when the tree holds no nodes.
     #[inline]
-    pub fn is_empty(&self) -> bool {
+    pub(crate) fn is_empty(&self) -> bool {
         self.len == 0
     }
 
     /// Root node, if any.
     #[inline]
-    pub fn root(&self) -> Option<NodeId> {
+    pub(crate) fn root(&self) -> Option<NodeId> {
         wrap(self.root)
-    }
-
-    #[inline]
-    fn node(&self, id: NodeId) -> &Node<V, A> {
-        &self.nodes[id.idx()]
-    }
-
-    #[inline]
-    fn node_mut(&mut self, id: NodeId) -> &mut Node<V, A> {
-        &mut self.nodes[id.idx()]
     }
 
     /// Key (score) of a node.
     #[inline]
-    pub fn key(&self, id: NodeId) -> Score {
-        self.node(id).key
+    pub(crate) fn key<V, A>(&self, ar: &Arena<Node<V, A>>, id: NodeId) -> Score {
+        ar.slots[id.idx()].key
     }
 
     /// Value of a node.
     #[inline]
-    pub fn val(&self, id: NodeId) -> &V {
-        &self.node(id).val
+    pub(crate) fn val<'a, V, A>(&self, ar: &'a Arena<Node<V, A>>, id: NodeId) -> &'a V {
+        &ar.slots[id.idx()].val
     }
 
     /// Augmentation of a node (the subtree summary).
     #[inline]
-    pub fn aug(&self, id: NodeId) -> &A {
-        &self.node(id).aug
+    pub(crate) fn aug<'a, V, A>(&self, ar: &'a Arena<Node<V, A>>, id: NodeId) -> &'a A {
+        &ar.slots[id.idx()].aug
     }
 
     /// Left child.
     #[inline]
-    pub fn left(&self, id: NodeId) -> Option<NodeId> {
-        wrap(self.node(id).left)
+    pub(crate) fn left<V, A>(&self, ar: &Arena<Node<V, A>>, id: NodeId) -> Option<NodeId> {
+        wrap(ar.slots[id.idx()].left)
     }
 
     /// Right child.
     #[inline]
-    pub fn right(&self, id: NodeId) -> Option<NodeId> {
-        wrap(self.node(id).right)
+    pub(crate) fn right<V, A>(&self, ar: &Arena<Node<V, A>>, id: NodeId) -> Option<NodeId> {
+        wrap(ar.slots[id.idx()].right)
     }
 
     /// Parent node.
     #[inline]
-    pub fn parent(&self, id: NodeId) -> Option<NodeId> {
-        wrap(self.node(id).parent)
+    pub(crate) fn parent<V, A>(&self, ar: &Arena<Node<V, A>>, id: NodeId) -> Option<NodeId> {
+        wrap(ar.slots[id.idx()].parent)
     }
 
     /// Mutate a node's value, then restore the augmentation along the path
     /// to the root (`O(log k)`, paper §3.3 “update the accpos counters …
     /// only for the ancestors”).
-    pub fn with_val_mut<R>(&mut self, id: NodeId, f: impl FnOnce(&mut V) -> R) -> R {
-        let r = f(&mut self.node_mut(id.into()).val);
-        self.update_upward(id);
+    pub(crate) fn with_val_mut<V, A: Augment<V>, R>(
+        &mut self,
+        ar: &mut Arena<Node<V, A>>,
+        id: NodeId,
+        f: impl FnOnce(&mut V) -> R,
+    ) -> R {
+        let r = f(&mut ar.slots[id.idx()].val);
+        self.update_upward(ar, id);
         r
     }
 
     /// Recompute augmentations from `id` up to the root.
-    pub fn update_upward(&mut self, id: NodeId) {
+    pub(crate) fn update_upward<V, A: Augment<V>>(&self, ar: &mut Arena<Node<V, A>>, id: NodeId) {
         let mut cur = id.0;
         while cur != NIL {
-            self.recompute_aug(cur);
-            cur = self.nodes[cur as usize].parent;
+            recompute_aug(ar, cur);
+            cur = ar.slots[cur as usize].parent;
         }
     }
 
-    fn recompute_aug(&mut self, i: u32) {
-        let (l, r) = {
-            let n = &self.nodes[i as usize];
-            (n.left, n.right)
-        };
-        let la = if l == NIL { None } else { Some(&self.nodes[l as usize].aug) };
-        let ra = if r == NIL { None } else { Some(&self.nodes[r as usize].aug) };
-        let aug = A::recompute(&self.nodes[i as usize].val, la, ra);
-        self.nodes[i as usize].aug = aug;
-    }
-
     /// Find the node with exactly this key.
-    pub fn find(&self, key: Score) -> Option<NodeId> {
+    pub(crate) fn find<V, A>(&self, ar: &Arena<Node<V, A>>, key: Score) -> Option<NodeId> {
         let mut cur = self.root;
         while cur != NIL {
-            let n = &self.nodes[cur as usize];
+            let n = &ar.slots[cur as usize];
             cur = match key.cmp(&n.key) {
                 std::cmp::Ordering::Less => n.left,
                 std::cmp::Ordering::Greater => n.right,
@@ -199,11 +249,11 @@ impl<V, A: Augment<V>> RbTree<V, A> {
     }
 
     /// Largest node with key `≤ key` (the shape of `MaxPos`, paper §3.2).
-    pub fn floor(&self, key: Score) -> Option<NodeId> {
+    pub(crate) fn floor<V, A>(&self, ar: &Arena<Node<V, A>>, key: Score) -> Option<NodeId> {
         let mut cur = self.root;
         let mut best = NIL;
         while cur != NIL {
-            let n = &self.nodes[cur as usize];
+            let n = &ar.slots[cur as usize];
             if n.key <= key {
                 best = cur;
                 cur = n.right;
@@ -215,11 +265,11 @@ impl<V, A: Augment<V>> RbTree<V, A> {
     }
 
     /// Smallest node with key `≥ key`.
-    pub fn ceil(&self, key: Score) -> Option<NodeId> {
+    pub(crate) fn ceil<V, A>(&self, ar: &Arena<Node<V, A>>, key: Score) -> Option<NodeId> {
         let mut cur = self.root;
         let mut best = NIL;
         while cur != NIL {
-            let n = &self.nodes[cur as usize];
+            let n = &ar.slots[cur as usize];
             if n.key >= key {
                 best = cur;
                 cur = n.left;
@@ -231,79 +281,52 @@ impl<V, A: Augment<V>> RbTree<V, A> {
     }
 
     /// Node with the smallest key.
-    pub fn first(&self) -> Option<NodeId> {
+    pub(crate) fn first<V, A>(&self, ar: &Arena<Node<V, A>>) -> Option<NodeId> {
         if self.root == NIL {
             return None;
         }
-        Some(NodeId(self.min_of(self.root)))
+        Some(NodeId(min_of(ar, self.root)))
     }
 
     /// Node with the largest key.
-    pub fn last(&self) -> Option<NodeId> {
+    pub(crate) fn last<V, A>(&self, ar: &Arena<Node<V, A>>) -> Option<NodeId> {
         if self.root == NIL {
             return None;
         }
-        Some(NodeId(self.max_of(self.root)))
-    }
-
-    fn min_of(&self, mut i: u32) -> u32 {
-        while self.nodes[i as usize].left != NIL {
-            i = self.nodes[i as usize].left;
-        }
-        i
-    }
-
-    fn max_of(&self, mut i: u32) -> u32 {
-        while self.nodes[i as usize].right != NIL {
-            i = self.nodes[i as usize].right;
-        }
-        i
+        Some(NodeId(max_of(ar, self.root)))
     }
 
     /// In-order successor.
-    pub fn successor(&self, id: NodeId) -> Option<NodeId> {
-        let mut i = id.0;
-        if self.nodes[i as usize].right != NIL {
-            return Some(NodeId(self.min_of(self.nodes[i as usize].right)));
-        }
-        let mut p = self.nodes[i as usize].parent;
-        while p != NIL && self.nodes[p as usize].right == i {
-            i = p;
-            p = self.nodes[p as usize].parent;
-        }
-        wrap(p)
+    pub(crate) fn successor<V, A>(&self, ar: &Arena<Node<V, A>>, id: NodeId) -> Option<NodeId> {
+        wrap(succ(ar, id.0))
     }
 
     /// In-order predecessor.
-    pub fn predecessor(&self, id: NodeId) -> Option<NodeId> {
-        let mut i = id.0;
-        if self.nodes[i as usize].left != NIL {
-            return Some(NodeId(self.max_of(self.nodes[i as usize].left)));
-        }
-        let mut p = self.nodes[i as usize].parent;
-        while p != NIL && self.nodes[p as usize].left == i {
-            i = p;
-            p = self.nodes[p as usize].parent;
-        }
-        wrap(p)
+    pub(crate) fn predecessor<V, A>(&self, ar: &Arena<Node<V, A>>, id: NodeId) -> Option<NodeId> {
+        wrap(pred(ar, id.0))
     }
 
     /// In-order iteration over node ids (ascending key).
-    pub fn iter(&self) -> InOrder<'_, V, A> {
-        InOrder { tree: self, next: self.first() }
+    pub(crate) fn iter_in<'a, V, A>(&self, ar: &'a Arena<Node<V, A>>) -> InOrder<'a, V, A> {
+        InOrder { ar, next: self.first(ar) }
     }
 
     /// Insert `key`, creating the node with `make()` if absent.
     ///
     /// Returns the node and whether it was newly created. On creation the
     /// augmentation path to the root is restored.
-    pub fn insert(&mut self, key: Score, make: impl FnOnce() -> V) -> (NodeId, bool) {
+    pub(crate) fn insert<V, A: Augment<V>>(
+        &mut self,
+        ar: &mut Arena<Node<V, A>>,
+        key: Score,
+        make: impl FnOnce() -> V,
+    ) -> (NodeId, bool) {
         let mut parent = NIL;
         let mut cur = self.root;
         let mut went_left = false;
         while cur != NIL {
             parent = cur;
-            let n = &self.nodes[cur as usize];
+            let n = &ar.slots[cur as usize];
             match key.cmp(&n.key) {
                 std::cmp::Ordering::Less => {
                     cur = n.left;
@@ -319,85 +342,77 @@ impl<V, A: Augment<V>> RbTree<V, A> {
         let val = make();
         let aug = A::recompute(&val, None, None);
         let node = Node { key, val, aug, left: NIL, right: NIL, parent, red: true };
-        let id = match self.free.pop() {
-            Some(slot) => {
-                self.nodes[slot as usize] = node;
-                slot
-            }
-            None => {
-                self.nodes.push(node);
-                (self.nodes.len() - 1) as u32
-            }
-        };
+        let id = ar.alloc(node);
         if parent == NIL {
             self.root = id;
         } else if went_left {
-            self.nodes[parent as usize].left = id;
+            ar.slots[parent as usize].left = id;
         } else {
-            self.nodes[parent as usize].right = id;
+            ar.slots[parent as usize].right = id;
         }
         self.len += 1;
         if parent != NIL {
-            self.update_upward(NodeId(parent));
+            self.update_upward(ar, NodeId(parent));
         }
-        self.insert_fixup(id);
+        self.insert_fixup(ar, id);
         (NodeId(id), true)
     }
 
-    /// Remove a node. The handle (and any copies) become invalid; the slot
-    /// may be recycled by a later insert.
-    pub fn remove(&mut self, id: NodeId) {
+    /// Remove a node, returning its slot to the arena's free list. The
+    /// handle (and any copies) become invalid; the slot may be recycled
+    /// by a later insert into *any* structure sharing the arena.
+    pub(crate) fn remove<V, A: Augment<V>>(&mut self, ar: &mut Arena<Node<V, A>>, id: NodeId) {
         let z = id.0;
-        debug_assert!(self.is_live(id), "remove of dead node");
-        let (zl, zr) = (self.nodes[z as usize].left, self.nodes[z as usize].right);
+        debug_assert!(self.is_live(ar, id), "remove of dead node");
+        let (zl, zr) = (ar.slots[z as usize].left, ar.slots[z as usize].right);
         // y: node physically unlinked or moved; x: subtree replacing y's
         // old position (possibly NIL); xp: x's parent after the transplant.
         let y_red;
         let x;
         let xp;
         if zl == NIL {
-            y_red = self.nodes[z as usize].red;
+            y_red = ar.slots[z as usize].red;
             x = zr;
-            xp = self.nodes[z as usize].parent;
-            self.transplant(z, zr);
+            xp = ar.slots[z as usize].parent;
+            self.transplant(ar, z, zr);
         } else if zr == NIL {
-            y_red = self.nodes[z as usize].red;
+            y_red = ar.slots[z as usize].red;
             x = zl;
-            xp = self.nodes[z as usize].parent;
-            self.transplant(z, zl);
+            xp = ar.slots[z as usize].parent;
+            self.transplant(ar, z, zl);
         } else {
-            let y = self.min_of(zr);
-            y_red = self.nodes[y as usize].red;
-            x = self.nodes[y as usize].right;
-            if self.nodes[y as usize].parent == z {
+            let y = min_of(ar, zr);
+            y_red = ar.slots[y as usize].red;
+            x = ar.slots[y as usize].right;
+            if ar.slots[y as usize].parent == z {
                 xp = y;
             } else {
-                xp = self.nodes[y as usize].parent;
-                self.transplant(y, x);
-                let zr_now = self.nodes[z as usize].right;
-                self.nodes[y as usize].right = zr_now;
-                self.nodes[zr_now as usize].parent = y;
+                xp = ar.slots[y as usize].parent;
+                self.transplant(ar, y, x);
+                let zr_now = ar.slots[z as usize].right;
+                ar.slots[y as usize].right = zr_now;
+                ar.slots[zr_now as usize].parent = y;
             }
-            self.transplant(z, y);
-            let zl_now = self.nodes[z as usize].left;
-            self.nodes[y as usize].left = zl_now;
-            self.nodes[zl_now as usize].parent = y;
-            self.nodes[y as usize].red = self.nodes[z as usize].red;
+            self.transplant(ar, z, y);
+            let zl_now = ar.slots[z as usize].left;
+            ar.slots[y as usize].left = zl_now;
+            ar.slots[zl_now as usize].parent = y;
+            ar.slots[y as usize].red = ar.slots[z as usize].red;
         }
         // Restore augmentation along the whole changed path before any
         // rebalancing rotations (they recompute locally from children).
         if xp != NIL {
-            self.update_upward(NodeId(xp));
+            self.update_upward(ar, NodeId(xp));
         }
         if !y_red {
-            self.delete_fixup(x, xp);
+            self.delete_fixup(ar, x, xp);
         }
         // Retire the slot.
-        self.free.push(z);
+        ar.release(z);
         self.len -= 1;
         // Poison links in debug builds to catch stale handles.
         if cfg!(debug_assertions) {
-            let n = &mut self.nodes[z as usize];
+            let n = &mut ar.slots[z as usize];
             n.left = NIL;
             n.right = NIL;
             n.parent = NIL;
@@ -405,273 +420,473 @@ impl<V, A: Augment<V>> RbTree<V, A> {
     }
 
     /// True if `id` currently addresses a live node (test/debug helper; it
-    /// is linear in the free list).
-    pub fn is_live(&self, id: NodeId) -> bool {
-        id.idx() < self.nodes.len() && !self.free.contains(&id.0)
+    /// is linear in the free list, and meaningful only for single-owner
+    /// arenas — on a shared arena a freed slot may belong to a sibling).
+    pub(crate) fn is_live<V, A>(&self, ar: &Arena<Node<V, A>>, id: NodeId) -> bool {
+        id.idx() < ar.slots.len() && !ar.free.contains(&id.0)
     }
 
-    fn transplant(&mut self, u: u32, v: u32) {
-        let p = self.nodes[u as usize].parent;
+    /// Release every node back to the arena in one `O(len)` pass —
+    /// no rebalancing, no per-node `remove`. The bulk-free hook for
+    /// dropping a pooled stream (freeze / evict): afterwards the core
+    /// is empty and all its slots are on the arena's free list.
+    /// (Successor walks only read links, and released slots keep
+    /// theirs intact until recycled — nothing allocates mid-walk.)
+    pub(crate) fn drain<V, A>(&mut self, ar: &mut Arena<Node<V, A>>) {
+        let mut cur = if self.root == NIL { NIL } else { min_of(ar, self.root) };
+        while cur != NIL {
+            let nxt = succ(ar, cur);
+            ar.release(cur);
+            cur = nxt;
+        }
+        self.root = NIL;
+        self.len = 0;
+    }
+
+    fn transplant<V, A>(&mut self, ar: &mut Arena<Node<V, A>>, u: u32, v: u32) {
+        let p = ar.slots[u as usize].parent;
         if p == NIL {
             self.root = v;
-        } else if self.nodes[p as usize].left == u {
-            self.nodes[p as usize].left = v;
+        } else if ar.slots[p as usize].left == u {
+            ar.slots[p as usize].left = v;
         } else {
-            self.nodes[p as usize].right = v;
+            ar.slots[p as usize].right = v;
         }
         if v != NIL {
-            self.nodes[v as usize].parent = p;
+            ar.slots[v as usize].parent = p;
         }
     }
 
     /// Left rotation around `x`; recomputes the augmentation of exactly the
     /// two rotated nodes (paper §3.3: counters are maintainable during
     /// rotations without additional cost).
-    fn rotate_left(&mut self, x: u32) {
-        let y = self.nodes[x as usize].right;
+    fn rotate_left<V, A: Augment<V>>(&mut self, ar: &mut Arena<Node<V, A>>, x: u32) {
+        let y = ar.slots[x as usize].right;
         debug_assert_ne!(y, NIL);
-        let yl = self.nodes[y as usize].left;
-        self.nodes[x as usize].right = yl;
+        let yl = ar.slots[y as usize].left;
+        ar.slots[x as usize].right = yl;
         if yl != NIL {
-            self.nodes[yl as usize].parent = x;
+            ar.slots[yl as usize].parent = x;
         }
-        let xp = self.nodes[x as usize].parent;
-        self.nodes[y as usize].parent = xp;
+        let xp = ar.slots[x as usize].parent;
+        ar.slots[y as usize].parent = xp;
         if xp == NIL {
             self.root = y;
-        } else if self.nodes[xp as usize].left == x {
-            self.nodes[xp as usize].left = y;
+        } else if ar.slots[xp as usize].left == x {
+            ar.slots[xp as usize].left = y;
         } else {
-            self.nodes[xp as usize].right = y;
+            ar.slots[xp as usize].right = y;
         }
-        self.nodes[y as usize].left = x;
-        self.nodes[x as usize].parent = y;
-        self.recompute_aug(x);
-        self.recompute_aug(y);
+        ar.slots[y as usize].left = x;
+        ar.slots[x as usize].parent = y;
+        recompute_aug(ar, x);
+        recompute_aug(ar, y);
     }
 
-    fn rotate_right(&mut self, x: u32) {
-        let y = self.nodes[x as usize].left;
+    fn rotate_right<V, A: Augment<V>>(&mut self, ar: &mut Arena<Node<V, A>>, x: u32) {
+        let y = ar.slots[x as usize].left;
         debug_assert_ne!(y, NIL);
-        let yr = self.nodes[y as usize].right;
-        self.nodes[x as usize].left = yr;
+        let yr = ar.slots[y as usize].right;
+        ar.slots[x as usize].left = yr;
         if yr != NIL {
-            self.nodes[yr as usize].parent = x;
+            ar.slots[yr as usize].parent = x;
         }
-        let xp = self.nodes[x as usize].parent;
-        self.nodes[y as usize].parent = xp;
+        let xp = ar.slots[x as usize].parent;
+        ar.slots[y as usize].parent = xp;
         if xp == NIL {
             self.root = y;
-        } else if self.nodes[xp as usize].left == x {
-            self.nodes[xp as usize].left = y;
+        } else if ar.slots[xp as usize].left == x {
+            ar.slots[xp as usize].left = y;
         } else {
-            self.nodes[xp as usize].right = y;
+            ar.slots[xp as usize].right = y;
         }
-        self.nodes[y as usize].right = x;
-        self.nodes[x as usize].parent = y;
-        self.recompute_aug(x);
-        self.recompute_aug(y);
+        ar.slots[y as usize].right = x;
+        ar.slots[x as usize].parent = y;
+        recompute_aug(ar, x);
+        recompute_aug(ar, y);
     }
 
-    fn insert_fixup(&mut self, mut z: u32) {
+    fn insert_fixup<V, A: Augment<V>>(&mut self, ar: &mut Arena<Node<V, A>>, mut z: u32) {
         while {
-            let p = self.nodes[z as usize].parent;
-            p != NIL && self.nodes[p as usize].red
+            let p = ar.slots[z as usize].parent;
+            p != NIL && ar.slots[p as usize].red
         } {
-            let p = self.nodes[z as usize].parent;
-            let g = self.nodes[p as usize].parent;
+            let p = ar.slots[z as usize].parent;
+            let g = ar.slots[p as usize].parent;
             debug_assert_ne!(g, NIL, "red root");
-            if self.nodes[g as usize].left == p {
-                let u = self.nodes[g as usize].right;
-                if u != NIL && self.nodes[u as usize].red {
-                    self.nodes[p as usize].red = false;
-                    self.nodes[u as usize].red = false;
-                    self.nodes[g as usize].red = true;
+            if ar.slots[g as usize].left == p {
+                let u = ar.slots[g as usize].right;
+                if u != NIL && ar.slots[u as usize].red {
+                    ar.slots[p as usize].red = false;
+                    ar.slots[u as usize].red = false;
+                    ar.slots[g as usize].red = true;
                     z = g;
                 } else {
-                    if self.nodes[p as usize].right == z {
+                    if ar.slots[p as usize].right == z {
                         z = p;
-                        self.rotate_left(z);
+                        self.rotate_left(ar, z);
                     }
-                    let p = self.nodes[z as usize].parent;
-                    let g = self.nodes[p as usize].parent;
-                    self.nodes[p as usize].red = false;
-                    self.nodes[g as usize].red = true;
-                    self.rotate_right(g);
+                    let p = ar.slots[z as usize].parent;
+                    let g = ar.slots[p as usize].parent;
+                    ar.slots[p as usize].red = false;
+                    ar.slots[g as usize].red = true;
+                    self.rotate_right(ar, g);
                 }
             } else {
-                let u = self.nodes[g as usize].left;
-                if u != NIL && self.nodes[u as usize].red {
-                    self.nodes[p as usize].red = false;
-                    self.nodes[u as usize].red = false;
-                    self.nodes[g as usize].red = true;
+                let u = ar.slots[g as usize].left;
+                if u != NIL && ar.slots[u as usize].red {
+                    ar.slots[p as usize].red = false;
+                    ar.slots[u as usize].red = false;
+                    ar.slots[g as usize].red = true;
                     z = g;
                 } else {
-                    if self.nodes[p as usize].left == z {
+                    if ar.slots[p as usize].left == z {
                         z = p;
-                        self.rotate_right(z);
+                        self.rotate_right(ar, z);
                     }
-                    let p = self.nodes[z as usize].parent;
-                    let g = self.nodes[p as usize].parent;
-                    self.nodes[p as usize].red = false;
-                    self.nodes[g as usize].red = true;
-                    self.rotate_left(g);
+                    let p = ar.slots[z as usize].parent;
+                    let g = ar.slots[p as usize].parent;
+                    ar.slots[p as usize].red = false;
+                    ar.slots[g as usize].red = true;
+                    self.rotate_left(ar, g);
                 }
             }
         }
         let r = self.root;
-        self.nodes[r as usize].red = false;
+        ar.slots[r as usize].red = false;
     }
 
     /// CLRS delete-fixup adapted to arena form: `x` may be NIL, so its
     /// parent is tracked explicitly in `xp`.
-    fn delete_fixup(&mut self, mut x: u32, mut xp: u32) {
-        while x != self.root && (x == NIL || !self.nodes[x as usize].red) {
+    fn delete_fixup<V, A: Augment<V>>(
+        &mut self,
+        ar: &mut Arena<Node<V, A>>,
+        mut x: u32,
+        mut xp: u32,
+    ) {
+        while x != self.root && (x == NIL || !ar.slots[x as usize].red) {
             if xp == NIL {
                 break; // tree became empty
             }
-            if self.nodes[xp as usize].left == x {
-                let mut w = self.nodes[xp as usize].right;
-                if w != NIL && self.nodes[w as usize].red {
-                    self.nodes[w as usize].red = false;
-                    self.nodes[xp as usize].red = true;
-                    self.rotate_left(xp);
-                    w = self.nodes[xp as usize].right;
+            if ar.slots[xp as usize].left == x {
+                let mut w = ar.slots[xp as usize].right;
+                if w != NIL && ar.slots[w as usize].red {
+                    ar.slots[w as usize].red = false;
+                    ar.slots[xp as usize].red = true;
+                    self.rotate_left(ar, xp);
+                    w = ar.slots[xp as usize].right;
                 }
                 if w == NIL {
                     x = xp;
-                    xp = self.nodes[x as usize].parent;
+                    xp = ar.slots[x as usize].parent;
                     continue;
                 }
-                let wl = self.nodes[w as usize].left;
-                let wr = self.nodes[w as usize].right;
-                let wl_red = wl != NIL && self.nodes[wl as usize].red;
-                let wr_red = wr != NIL && self.nodes[wr as usize].red;
+                let wl = ar.slots[w as usize].left;
+                let wr = ar.slots[w as usize].right;
+                let wl_red = wl != NIL && ar.slots[wl as usize].red;
+                let wr_red = wr != NIL && ar.slots[wr as usize].red;
                 if !wl_red && !wr_red {
-                    self.nodes[w as usize].red = true;
+                    ar.slots[w as usize].red = true;
                     x = xp;
-                    xp = self.nodes[x as usize].parent;
+                    xp = ar.slots[x as usize].parent;
                 } else {
                     if !wr_red {
                         if wl != NIL {
-                            self.nodes[wl as usize].red = false;
+                            ar.slots[wl as usize].red = false;
                         }
-                        self.nodes[w as usize].red = true;
-                        self.rotate_right(w);
-                        w = self.nodes[xp as usize].right;
+                        ar.slots[w as usize].red = true;
+                        self.rotate_right(ar, w);
+                        w = ar.slots[xp as usize].right;
                     }
-                    self.nodes[w as usize].red = self.nodes[xp as usize].red;
-                    self.nodes[xp as usize].red = false;
-                    let wr = self.nodes[w as usize].right;
+                    ar.slots[w as usize].red = ar.slots[xp as usize].red;
+                    ar.slots[xp as usize].red = false;
+                    let wr = ar.slots[w as usize].right;
                     if wr != NIL {
-                        self.nodes[wr as usize].red = false;
+                        ar.slots[wr as usize].red = false;
                     }
-                    self.rotate_left(xp);
+                    self.rotate_left(ar, xp);
                     x = self.root;
                     xp = NIL;
                 }
             } else {
-                let mut w = self.nodes[xp as usize].left;
-                if w != NIL && self.nodes[w as usize].red {
-                    self.nodes[w as usize].red = false;
-                    self.nodes[xp as usize].red = true;
-                    self.rotate_right(xp);
-                    w = self.nodes[xp as usize].left;
+                let mut w = ar.slots[xp as usize].left;
+                if w != NIL && ar.slots[w as usize].red {
+                    ar.slots[w as usize].red = false;
+                    ar.slots[xp as usize].red = true;
+                    self.rotate_right(ar, xp);
+                    w = ar.slots[xp as usize].left;
                 }
                 if w == NIL {
                     x = xp;
-                    xp = self.nodes[x as usize].parent;
+                    xp = ar.slots[x as usize].parent;
                     continue;
                 }
-                let wl = self.nodes[w as usize].left;
-                let wr = self.nodes[w as usize].right;
-                let wl_red = wl != NIL && self.nodes[wl as usize].red;
-                let wr_red = wr != NIL && self.nodes[wr as usize].red;
+                let wl = ar.slots[w as usize].left;
+                let wr = ar.slots[w as usize].right;
+                let wl_red = wl != NIL && ar.slots[wl as usize].red;
+                let wr_red = wr != NIL && ar.slots[wr as usize].red;
                 if !wl_red && !wr_red {
-                    self.nodes[w as usize].red = true;
+                    ar.slots[w as usize].red = true;
                     x = xp;
-                    xp = self.nodes[x as usize].parent;
+                    xp = ar.slots[x as usize].parent;
                 } else {
                     if !wl_red {
                         if wr != NIL {
-                            self.nodes[wr as usize].red = false;
+                            ar.slots[wr as usize].red = false;
                         }
-                        self.nodes[w as usize].red = true;
-                        self.rotate_left(w);
-                        w = self.nodes[xp as usize].left;
+                        ar.slots[w as usize].red = true;
+                        self.rotate_left(ar, w);
+                        w = ar.slots[xp as usize].left;
                     }
-                    self.nodes[w as usize].red = self.nodes[xp as usize].red;
-                    self.nodes[xp as usize].red = false;
-                    let wl = self.nodes[w as usize].left;
+                    ar.slots[w as usize].red = ar.slots[xp as usize].red;
+                    ar.slots[xp as usize].red = false;
+                    let wl = ar.slots[w as usize].left;
                     if wl != NIL {
-                        self.nodes[wl as usize].red = false;
+                        ar.slots[wl as usize].red = false;
                     }
-                    self.rotate_right(xp);
+                    self.rotate_right(ar, xp);
                     x = self.root;
                     xp = NIL;
                 }
             }
         }
         if x != NIL {
-            self.nodes[x as usize].red = false;
+            ar.slots[x as usize].red = false;
         }
     }
 
     /// Validate every red-black + BST + augmentation invariant. Test and
     /// property-test helper; panics with a description on violation.
-    pub fn check_invariants(&self)
+    pub(crate) fn check_invariants<V, A>(&self, ar: &Arena<Node<V, A>>)
     where
-        A: PartialEq + std::fmt::Debug,
+        A: Augment<V> + PartialEq + std::fmt::Debug,
     {
         if self.root == NIL {
             assert_eq!(self.len, 0, "len ≠ 0 for empty tree");
             return;
         }
-        assert!(!self.nodes[self.root as usize].red, "red root");
-        assert_eq!(self.nodes[self.root as usize].parent, NIL, "root has parent");
-        let (count, _) = self.check_node(self.root);
+        assert!(!ar.slots[self.root as usize].red, "red root");
+        assert_eq!(ar.slots[self.root as usize].parent, NIL, "root has parent");
+        let (count, _) = self.check_node(ar, self.root);
         assert_eq!(count, self.len, "len mismatch");
         // Keys strictly increasing in order.
         let mut prev: Option<Score> = None;
-        for id in self.iter() {
+        for id in self.iter_in(ar) {
             if let Some(p) = prev {
-                assert!(p < self.key(id), "in-order keys not strictly increasing");
+                assert!(p < self.key(ar, id), "in-order keys not strictly increasing");
             }
-            prev = Some(self.key(id));
+            prev = Some(self.key(ar, id));
         }
     }
 
     /// Returns (node count, black height) of subtree `i`, checking
     /// red-black, parent-pointer and augmentation invariants.
-    fn check_node(&self, i: u32) -> (usize, usize)
+    fn check_node<V, A>(&self, ar: &Arena<Node<V, A>>, i: u32) -> (usize, usize)
     where
-        A: PartialEq + std::fmt::Debug,
+        A: Augment<V> + PartialEq + std::fmt::Debug,
     {
-        let n = &self.nodes[i as usize];
+        let n = &ar.slots[i as usize];
         for c in [n.left, n.right] {
             if c != NIL {
-                assert_eq!(self.nodes[c as usize].parent, i, "broken parent pointer");
+                assert_eq!(ar.slots[c as usize].parent, i, "broken parent pointer");
                 if n.red {
-                    assert!(!self.nodes[c as usize].red, "red node with red child");
+                    assert!(!ar.slots[c as usize].red, "red node with red child");
                 }
             }
         }
-        let (lc, lb) = if n.left != NIL { self.check_node(n.left) } else { (0, 1) };
-        let (rc, rb) = if n.right != NIL { self.check_node(n.right) } else { (0, 1) };
+        let (lc, lb) = if n.left != NIL { self.check_node(ar, n.left) } else { (0, 1) };
+        let (rc, rb) = if n.right != NIL { self.check_node(ar, n.right) } else { (0, 1) };
         assert_eq!(lb, rb, "black height mismatch");
-        let la = if n.left == NIL { None } else { Some(&self.nodes[n.left as usize].aug) };
-        let ra = if n.right == NIL { None } else { Some(&self.nodes[n.right as usize].aug) };
+        let la = if n.left == NIL { None } else { Some(&ar.slots[n.left as usize].aug) };
+        let ra = if n.right == NIL { None } else { Some(&ar.slots[n.right as usize].aug) };
         let expect = A::recompute(&n.val, la, ra);
         assert_eq!(n.aug, expect, "stale augmentation at node {i}");
         (lc + rc + 1, lb + usize::from(!n.red))
     }
 }
 
+/// Augmented red-black tree bundling its own node arena — the
+/// self-contained form for standalone estimators, tests and benches.
+/// Delegates everything to an [`RbTreeCore`] over a private [`Arena`];
+/// the shard layer uses the core directly against shared arenas.
+#[derive(Clone, Debug)]
+pub struct RbTree<V, A> {
+    ar: Arena<Node<V, A>>,
+    core: RbTreeCore,
+}
+
+impl<V, A: Augment<V>> Default for RbTree<V, A> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<V, A: Augment<V>> RbTree<V, A> {
+    /// Empty tree.
+    pub fn new() -> Self {
+        RbTree { ar: Arena::new(), core: RbTreeCore::new() }
+    }
+
+    /// Empty tree with room for `cap` nodes before reallocating.
+    pub fn with_capacity(cap: usize) -> Self {
+        RbTree { ar: Arena::with_capacity(cap), core: RbTreeCore::new() }
+    }
+
+    /// Number of live nodes.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.core.len()
+    }
+
+    /// True when the tree holds no nodes.
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.core.is_empty()
+    }
+
+    /// Root node, if any.
+    #[inline]
+    pub fn root(&self) -> Option<NodeId> {
+        self.core.root()
+    }
+
+    /// Key (score) of a node.
+    #[inline]
+    pub fn key(&self, id: NodeId) -> Score {
+        self.core.key(&self.ar, id)
+    }
+
+    /// Value of a node.
+    #[inline]
+    pub fn val(&self, id: NodeId) -> &V {
+        self.core.val(&self.ar, id)
+    }
+
+    /// Augmentation of a node (the subtree summary).
+    #[inline]
+    pub fn aug(&self, id: NodeId) -> &A {
+        self.core.aug(&self.ar, id)
+    }
+
+    /// Left child.
+    #[inline]
+    pub fn left(&self, id: NodeId) -> Option<NodeId> {
+        self.core.left(&self.ar, id)
+    }
+
+    /// Right child.
+    #[inline]
+    pub fn right(&self, id: NodeId) -> Option<NodeId> {
+        self.core.right(&self.ar, id)
+    }
+
+    /// Parent node.
+    #[inline]
+    pub fn parent(&self, id: NodeId) -> Option<NodeId> {
+        self.core.parent(&self.ar, id)
+    }
+
+    /// Mutate a node's value, then restore the augmentation along the
+    /// path to the root.
+    pub fn with_val_mut<R>(&mut self, id: NodeId, f: impl FnOnce(&mut V) -> R) -> R {
+        self.core.with_val_mut(&mut self.ar, id, f)
+    }
+
+    /// Recompute augmentations from `id` up to the root.
+    pub fn update_upward(&mut self, id: NodeId) {
+        self.core.update_upward(&mut self.ar, id);
+    }
+
+    /// Find the node with exactly this key.
+    pub fn find(&self, key: Score) -> Option<NodeId> {
+        self.core.find(&self.ar, key)
+    }
+
+    /// Largest node with key `≤ key` (the shape of `MaxPos`, paper §3.2).
+    pub fn floor(&self, key: Score) -> Option<NodeId> {
+        self.core.floor(&self.ar, key)
+    }
+
+    /// Smallest node with key `≥ key`.
+    pub fn ceil(&self, key: Score) -> Option<NodeId> {
+        self.core.ceil(&self.ar, key)
+    }
+
+    /// Node with the smallest key.
+    pub fn first(&self) -> Option<NodeId> {
+        self.core.first(&self.ar)
+    }
+
+    /// Node with the largest key.
+    pub fn last(&self) -> Option<NodeId> {
+        self.core.last(&self.ar)
+    }
+
+    /// In-order successor.
+    pub fn successor(&self, id: NodeId) -> Option<NodeId> {
+        self.core.successor(&self.ar, id)
+    }
+
+    /// In-order predecessor.
+    pub fn predecessor(&self, id: NodeId) -> Option<NodeId> {
+        self.core.predecessor(&self.ar, id)
+    }
+
+    /// In-order iteration over node ids (ascending key).
+    pub fn iter(&self) -> InOrder<'_, V, A> {
+        self.core.iter_in(&self.ar)
+    }
+
+    /// Insert `key`, creating the node with `make()` if absent. Returns
+    /// the node and whether it was newly created.
+    pub fn insert(&mut self, key: Score, make: impl FnOnce() -> V) -> (NodeId, bool) {
+        self.core.insert(&mut self.ar, key, make)
+    }
+
+    /// Remove a node. The handle (and any copies) become invalid; the
+    /// slot may be recycled by a later insert. Removing the last node
+    /// resets the arena outright — a drained tree releases its peak
+    /// capacity instead of retaining it forever (the churn-shrink hook).
+    pub fn remove(&mut self, id: NodeId) {
+        self.core.remove(&mut self.ar, id);
+        if self.core.is_empty() {
+            self.ar.reset();
+        }
+    }
+
+    /// True if `id` currently addresses a live node (test/debug helper;
+    /// linear in the free list).
+    pub fn is_live(&self, id: NodeId) -> bool {
+        self.core.is_live(&self.ar, id)
+    }
+
+    /// Release retained slab capacity (freed tail slots + vector slack)
+    /// without disturbing live nodes. See [`Arena::shrink_to_fit`].
+    pub fn shrink_to_fit(&mut self) {
+        self.ar.shrink_to_fit();
+    }
+
+    /// Slots the backing arena currently retains (live + freed) — the
+    /// measure the capacity-regression tests bound after churn.
+    pub fn capacity(&self) -> usize {
+        self.ar.slot_count()
+    }
+
+    /// Validate every red-black + BST + augmentation invariant. Panics
+    /// with a description on violation.
+    pub fn check_invariants(&self)
+    where
+        A: PartialEq + std::fmt::Debug,
+    {
+        self.core.check_invariants(&self.ar);
+    }
+}
+
 // The arena is plain owned data (a `Vec` of nodes addressed by index —
 // no `Rc`, no interior mutability), so a tree is `Send` whenever its
-// value and augmentation types are. The fleet's scoped-thread executor
-// relies on this to move whole per-stream estimators across workers;
-// keep it provable at compile time.
+// value and augmentation types are. The fleet's pool executor relies on
+// this to move whole per-stream estimators across workers; keep it
+// provable at compile time.
 const _: () = {
     const fn assert_send<T: Send>() {}
     assert_send::<RbTree<u64, ()>>();
@@ -688,16 +903,16 @@ fn wrap(i: u32) -> Option<NodeId> {
 
 /// Ascending in-order iterator over node ids.
 pub struct InOrder<'a, V, A> {
-    tree: &'a RbTree<V, A>,
+    ar: &'a Arena<Node<V, A>>,
     next: Option<NodeId>,
 }
 
-impl<V, A: Augment<V>> Iterator for InOrder<'_, V, A> {
+impl<V, A> Iterator for InOrder<'_, V, A> {
     type Item = NodeId;
 
     fn next(&mut self) -> Option<NodeId> {
         let cur = self.next?;
-        self.next = self.tree.successor(cur);
+        self.next = wrap(succ(self.ar, cur.0));
         Some(cur)
     }
 }
@@ -857,6 +1072,38 @@ mod tests {
         // Slot of the removed node is reused.
         assert_eq!(nid.0, id.0);
         t.check_invariants();
+    }
+
+    #[test]
+    fn drain_to_empty_releases_capacity() {
+        let mut t = tree_from(&(0..512).map(f64::from).collect::<Vec<_>>());
+        assert!(t.capacity() >= 512);
+        let keys: Vec<f64> = t.iter().map(|id| t.key(id).0).collect();
+        for k in keys {
+            let id = t.find(Score(k)).unwrap();
+            t.remove(id);
+        }
+        // The drained tree must not retain its peak slab.
+        assert_eq!(t.capacity(), 0);
+        // …and must keep working afterwards.
+        t.insert(Score(1.0), || 0);
+        t.check_invariants();
+        assert_eq!(t.len(), 1);
+    }
+
+    #[test]
+    fn shrink_to_fit_trims_churn_slack() {
+        let mut t = tree_from(&(0..256).map(f64::from).collect::<Vec<_>>());
+        // Evict the upper half (tail slots in insertion order).
+        for k in 128..256 {
+            let id = t.find(Score(f64::from(k))).unwrap();
+            t.remove(id);
+        }
+        let before = t.capacity();
+        t.shrink_to_fit();
+        assert!(t.capacity() < before, "shrink must drop freed tail slots");
+        t.check_invariants();
+        assert_eq!(t.len(), 128);
     }
 
     /// Randomized stress: mirror a `BTreeMap`, checking invariants and

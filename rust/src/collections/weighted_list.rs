@@ -7,14 +7,25 @@
 //! plus every tree node strictly between `u` and `v`.
 //!
 //! The two paper-critical operations are `O(1)`:
-//! * [`WeightedList::remove`] — delete an element, folding its gap into
+//! * [`ListCore::remove`] — delete an element, folding its gap into
 //!   the predecessor (`Remove(L, v)`);
-//! * [`WeightedList::insert_after`] — insert `v` after `u` given the label
+//! * [`ListCore::insert_after`] — insert `v` after `u` given the label
 //!   sums over `[s(u), s(v))` (`Add(L, u, v, p, n)`).
 //!
-//! Cells live in a slab; a dense `tree-node → cell` map gives the `O(1)`
-//! membership test `w ∉ L` needed by `AddNext` (Algorithm 5).
+//! Cells live in a [`CellArena`] — an [`Arena`] slab plus a dense
+//! `tree-node → cell` map giving the `O(1)` membership test `w ∉ L`
+//! needed by `AddNext` (Algorithm 5). Like the rbtree, the list comes
+//! in two forms: the storage-free [`ListCore`] (head/tail/len, arena
+//! passed into every call — many per-stream lists share one
+//! shard-owned arena) and the self-contained [`WeightedList`] bundling
+//! core and arena for standalone use (`rust/DESIGN.md` §Memory).
+//!
+//! A shared [`CellArena`] serves one *role* (the fleet keeps one for
+//! every stream's `P` list and another for every `C` list): the
+//! `by_node` map is keyed by tree-node slot, and a tree node belongs to
+//! exactly one stream, so per-role sharing keeps the map collision-free.
 
+use super::arena::Arena;
 use super::rbtree::NodeId;
 
 /// Handle to a list cell.
@@ -24,7 +35,7 @@ pub struct CellId(u32);
 const NIL: u32 = u32::MAX;
 
 #[derive(Clone, Debug)]
-struct Cell {
+pub(crate) struct Cell {
     node: NodeId,
     next: u32,
     prev: u32,
@@ -41,292 +52,18 @@ struct Cell {
     n: u64,
 }
 
-/// Weighted linked list over tree nodes. See module docs.
+/// Cell storage for weighted lists: slab plus the dense
+/// `tree-node slot → cell` membership map.
 #[derive(Clone, Debug, Default)]
-pub struct WeightedList {
-    cells: Vec<Cell>,
-    free: Vec<u32>,
-    head: u32,
-    tail: u32,
+pub(crate) struct CellArena {
+    pub(crate) cells: Arena<Cell>,
     /// Dense map: tree-node slot → cell id (NIL when absent).
     by_node: Vec<u32>,
-    len: usize,
 }
 
-impl WeightedList {
-    /// Empty list (no sentinels yet).
-    pub fn new() -> Self {
-        WeightedList { cells: Vec::new(), free: Vec::new(), head: NIL, tail: NIL, by_node: Vec::new(), len: 0 }
-    }
-
-    /// Number of elements, including any sentinel cells the coordinator
-    /// pushed.
-    #[inline]
-    pub fn len(&self) -> usize {
-        self.len
-    }
-
-    /// True when no cells are present.
-    #[inline]
-    pub fn is_empty(&self) -> bool {
-        self.len == 0
-    }
-
-    /// First cell.
-    #[inline]
-    pub fn head(&self) -> Option<CellId> {
-        wrap(self.head)
-    }
-
-    /// Last cell.
-    #[inline]
-    pub fn tail(&self) -> Option<CellId> {
-        wrap(self.tail)
-    }
-
-    /// `next(u; L)`.
-    #[inline]
-    pub fn next(&self, c: CellId) -> Option<CellId> {
-        wrap(self.cells[c.0 as usize].next)
-    }
-
-    /// `prev(u; L)`.
-    #[inline]
-    pub fn prev(&self, c: CellId) -> Option<CellId> {
-        wrap(self.cells[c.0 as usize].prev)
-    }
-
-    /// Tree node this cell references.
-    #[inline]
-    pub fn node(&self, c: CellId) -> NodeId {
-        self.cells[c.0 as usize].node
-    }
-
-    /// Gap positive count `gp(u; L)`.
-    #[inline]
-    pub fn gp(&self, c: CellId) -> u64 {
-        self.cells[c.0 as usize].gp
-    }
-
-    /// Gap negative count `gn(u; L)`.
-    #[inline]
-    pub fn gn(&self, c: CellId) -> u64 {
-        self.cells[c.0 as usize].gn
-    }
-
-    /// Add `delta` to `gp(u; L)` (counter maintenance on label arrival /
-    /// departure).
-    #[inline]
-    pub fn add_gp(&mut self, c: CellId, delta: i64) {
-        let g = &mut self.cells[c.0 as usize].gp;
-        *g = g.checked_add_signed(delta).expect("gp underflow");
-    }
-
-    /// Add `delta` to `gn(u; L)`.
-    #[inline]
-    pub fn add_gn(&mut self, c: CellId, delta: i64) {
-        let g = &mut self.cells[c.0 as usize].gn;
-        *g = g.checked_add_signed(delta).expect("gn underflow");
-    }
-
-    /// Cell holding `node`, if `node ∈ L`.
-    #[inline]
-    pub fn cell_of(&self, node: NodeId) -> Option<CellId> {
-        let i = node.0 as usize;
-        if i < self.by_node.len() {
-            wrap(self.by_node[i])
-        } else {
-            None
-        }
-    }
-
-    /// `O(1)` membership test.
-    #[inline]
-    pub fn contains(&self, node: NodeId) -> bool {
-        self.cell_of(node).is_some()
-    }
-
-    /// Cached score of the cell's node.
-    #[inline]
-    pub fn key(&self, c: CellId) -> f64 {
-        self.cells[c.0 as usize].key
-    }
-
-    /// Cached `p(v)` of the cell's node.
-    #[inline]
-    pub fn cp(&self, c: CellId) -> u64 {
-        self.cells[c.0 as usize].p
-    }
-
-    /// Cached `n(v)` of the cell's node.
-    #[inline]
-    pub fn cn(&self, c: CellId) -> u64 {
-        self.cells[c.0 as usize].n
-    }
-
-    /// Adjust the cached `p(v)` (call alongside the tree counter).
-    #[inline]
-    pub fn add_cp(&mut self, c: CellId, delta: i64) {
-        let p = &mut self.cells[c.0 as usize].p;
-        *p = p.checked_add_signed(delta).expect("cached p underflow");
-    }
-
-    /// Adjust the cached `n(v)` (call alongside the tree counter).
-    #[inline]
-    pub fn add_cn(&mut self, c: CellId, delta: i64) {
-        let n = &mut self.cells[c.0 as usize].n;
-        *n = n.checked_add_signed(delta).expect("cached n underflow");
-    }
-
-    /// Append a cell at the back with explicit gap counters. Used only to
-    /// seed the sentinel cells; ordinary insertion goes through
-    /// [`WeightedList::insert_after`].
-    pub fn push_back(&mut self, node: NodeId, key: f64, gp: u64, gn: u64) -> CellId {
-        let id = self.alloc(Cell { node, next: NIL, prev: self.tail, gp, gn, key, p: 0, n: 0 });
-        if self.tail != NIL {
-            self.cells[self.tail as usize].next = id;
-        } else {
-            self.head = id;
-        }
-        self.tail = id;
-        self.map(node, id);
-        self.len += 1;
-        CellId(id)
-    }
-
-    /// `Add(L, u, v, p, n)` — insert `v` immediately after `u`, where `p`
-    /// and `n` are the label sums over `[s(u), s(v))` *at the time of the
-    /// call*. Splits `u`'s gap: `gp(u)′ = p`, `gp(v)′ = gp(u) − p` (same
-    /// for `gn`). `key`/`vp`/`vn` seed the new cell's caches. `O(1)`.
-    #[allow(clippy::too_many_arguments)] // mirrors the paper's Add(L, u, v, p, n) plus caches
-    pub fn insert_after(
-        &mut self,
-        u: CellId,
-        v: NodeId,
-        key: f64,
-        vp: u64,
-        vn: u64,
-        p: u64,
-        n: u64,
-    ) -> CellId {
-        debug_assert!(!self.contains(v), "insert_after of node already in list");
-        let (u_next, u_gp, u_gn) = {
-            let cu = &self.cells[u.0 as usize];
-            (cu.next, cu.gp, cu.gn)
-        };
-        debug_assert!(u_gp >= p, "gap split underflow (gp={u_gp}, p={p})");
-        debug_assert!(u_gn >= n, "gap split underflow (gn={u_gn}, n={n})");
-        let id = self.alloc(Cell {
-            node: v,
-            next: u_next,
-            prev: u.0,
-            gp: u_gp - p,
-            gn: u_gn - n,
-            key,
-            p: vp,
-            n: vn,
-        });
-        {
-            let cu = &mut self.cells[u.0 as usize];
-            cu.next = id;
-            cu.gp = p;
-            cu.gn = n;
-        }
-        if u_next != NIL {
-            self.cells[u_next as usize].prev = id;
-        } else {
-            self.tail = id;
-        }
-        self.map(v, id);
-        self.len += 1;
-        CellId(id)
-    }
-
-    /// `Remove(L, v)` — delete a cell, folding its gap counters into the
-    /// predecessor so coverage is preserved. `O(1)`. The head cell (the
-    /// `−∞` sentinel, which has no predecessor to absorb its gap) must not
-    /// be removed.
-    pub fn remove(&mut self, c: CellId) {
-        let Cell { node, next, prev, gp, gn, .. } = self.cells[c.0 as usize].clone();
-        assert_ne!(prev, NIL, "cannot remove the head cell of a weighted list");
-        {
-            let cp = &mut self.cells[prev as usize];
-            cp.next = next;
-            cp.gp += gp;
-            cp.gn += gn;
-        }
-        if next != NIL {
-            self.cells[next as usize].prev = prev;
-        } else {
-            self.tail = prev;
-        }
-        self.unmap(node);
-        self.free.push(c.0);
-        self.len -= 1;
-    }
-
-    /// Iterate cells front to back.
-    pub fn iter(&self) -> Cells<'_> {
-        Cells { list: self, cur: self.head }
-    }
-
-    /// Snapshot of one cell's hot fields (scan-friendly: one slab lookup
-    /// per cell instead of one per accessor; see §Perf).
-    #[inline]
-    pub fn view(&self, c: CellId) -> CellView {
-        let cell = &self.cells[c.0 as usize];
-        CellView { key: cell.key, p: cell.p, n: cell.n, gp: cell.gp, gn: cell.gn }
-    }
-
-    /// Iterate cell snapshots front to back (the `ApproxAUC` read path).
-    pub fn views(&self) -> Views<'_> {
-        Views { list: self, cur: self.head }
-    }
-
-    /// Largest cell with cached `key ≤ s`, plus the prefix `gp` *and*
-    /// `gn` sums of the cells before it (the `c_floor` hot scan).
-    /// Assumes the head cell's key is `−∞`. The `gn` prefix rides the
-    /// same hops for free; it is what lets the estimator's incremental
-    /// doubled-area accumulator compute its suffix-negative term in
-    /// `O(1)` instead of an extra tree query (approx.rs, DESIGN.md
-    /// §Incremental-reads).
-    pub fn floor_scan(&self, s: f64) -> (CellId, u64, u64) {
-        let mut cur = self.head;
-        let mut hp = 0u64;
-        let mut hn = 0u64;
-        loop {
-            let cell = &self.cells[cur as usize];
-            let next = cell.next;
-            if next == NIL || self.cells[next as usize].key > s {
-                return (CellId(cur), hp, hn);
-            }
-            hp += cell.gp;
-            hn += cell.gn;
-            cur = next;
-        }
-    }
-
-    /// Total `gp` over all cells (= positive labels covered; test helper).
-    pub fn total_gp(&self) -> u64 {
-        self.iter().map(|c| self.gp(c)).sum()
-    }
-
-    /// Total `gn` over all cells.
-    pub fn total_gn(&self) -> u64 {
-        self.iter().map(|c| self.gn(c)).sum()
-    }
-
+impl CellArena {
     fn alloc(&mut self, cell: Cell) -> u32 {
-        match self.free.pop() {
-            Some(slot) => {
-                self.cells[slot as usize] = cell;
-                slot
-            }
-            None => {
-                self.cells.push(cell);
-                (self.cells.len() - 1) as u32
-            }
-        }
+        self.cells.alloc(cell)
     }
 
     fn map(&mut self, node: NodeId, cell: u32) {
@@ -340,6 +77,541 @@ impl WeightedList {
 
     fn unmap(&mut self, node: NodeId) {
         self.by_node[node.0 as usize] = NIL;
+    }
+
+    /// Drop all storage (callers must have removed every cell — see
+    /// [`Arena::reset`]).
+    pub(crate) fn reset(&mut self) {
+        self.cells.reset();
+        debug_assert!(self.by_node.iter().all(|&c| c == NIL), "reset with mapped cells");
+        self.by_node = Vec::new();
+    }
+
+    /// Release retained capacity without disturbing live cells: freed
+    /// tail slots truncate away, and the membership map drops its
+    /// trailing unmapped region.
+    pub(crate) fn shrink_to_fit(&mut self) {
+        self.cells.shrink_to_fit();
+        let mut keep = self.by_node.len();
+        while keep > 0 && self.by_node[keep - 1] == NIL {
+            keep -= 1;
+        }
+        self.by_node.truncate(keep);
+        self.by_node.shrink_to_fit();
+    }
+
+    /// Logical bytes of live cells plus the mapped region of `by_node`
+    /// (logical, not capacity — see [`Arena::live_bytes`]).
+    pub(crate) fn live_bytes(&self) -> usize {
+        self.cells.live_bytes()
+    }
+}
+
+/// Storage-free weighted linked list: head/tail indices and a length,
+/// with the backing [`CellArena`] passed into every operation. The
+/// same-arena rule of [`super::rbtree::RbTreeCore`] applies.
+#[derive(Clone, Copy, Debug)]
+pub(crate) struct ListCore {
+    head: u32,
+    tail: u32,
+    len: usize,
+}
+
+impl Default for ListCore {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ListCore {
+    /// Empty list (no sentinels yet).
+    pub(crate) fn new() -> Self {
+        ListCore { head: NIL, tail: NIL, len: 0 }
+    }
+
+    /// Number of elements, including any sentinel cells the coordinator
+    /// pushed.
+    #[inline]
+    pub(crate) fn len(&self) -> usize {
+        self.len
+    }
+
+    /// True when no cells are present.
+    #[inline]
+    pub(crate) fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// First cell.
+    #[inline]
+    pub(crate) fn head(&self) -> Option<CellId> {
+        wrap(self.head)
+    }
+
+    /// Last cell.
+    #[inline]
+    pub(crate) fn tail(&self) -> Option<CellId> {
+        wrap(self.tail)
+    }
+
+    /// `next(u; L)`.
+    #[inline]
+    pub(crate) fn next(&self, ar: &CellArena, c: CellId) -> Option<CellId> {
+        wrap(ar.cells.slots[c.0 as usize].next)
+    }
+
+    /// `prev(u; L)`.
+    #[inline]
+    pub(crate) fn prev(&self, ar: &CellArena, c: CellId) -> Option<CellId> {
+        wrap(ar.cells.slots[c.0 as usize].prev)
+    }
+
+    /// Tree node this cell references.
+    #[inline]
+    pub(crate) fn node(&self, ar: &CellArena, c: CellId) -> NodeId {
+        ar.cells.slots[c.0 as usize].node
+    }
+
+    /// Gap positive count `gp(u; L)`.
+    #[inline]
+    pub(crate) fn gp(&self, ar: &CellArena, c: CellId) -> u64 {
+        ar.cells.slots[c.0 as usize].gp
+    }
+
+    /// Gap negative count `gn(u; L)`.
+    #[inline]
+    pub(crate) fn gn(&self, ar: &CellArena, c: CellId) -> u64 {
+        ar.cells.slots[c.0 as usize].gn
+    }
+
+    /// Add `delta` to `gp(u; L)` (counter maintenance on label arrival /
+    /// departure).
+    #[inline]
+    pub(crate) fn add_gp(&self, ar: &mut CellArena, c: CellId, delta: i64) {
+        let g = &mut ar.cells.slots[c.0 as usize].gp;
+        *g = g.checked_add_signed(delta).expect("gp underflow");
+    }
+
+    /// Add `delta` to `gn(u; L)`.
+    #[inline]
+    pub(crate) fn add_gn(&self, ar: &mut CellArena, c: CellId, delta: i64) {
+        let g = &mut ar.cells.slots[c.0 as usize].gn;
+        *g = g.checked_add_signed(delta).expect("gn underflow");
+    }
+
+    /// Cell holding `node`, if `node ∈ L`.
+    #[inline]
+    pub(crate) fn cell_of(&self, ar: &CellArena, node: NodeId) -> Option<CellId> {
+        let i = node.0 as usize;
+        if i < ar.by_node.len() {
+            wrap(ar.by_node[i])
+        } else {
+            None
+        }
+    }
+
+    /// `O(1)` membership test.
+    #[inline]
+    pub(crate) fn contains(&self, ar: &CellArena, node: NodeId) -> bool {
+        self.cell_of(ar, node).is_some()
+    }
+
+    /// Cached score of the cell's node.
+    #[inline]
+    pub(crate) fn key(&self, ar: &CellArena, c: CellId) -> f64 {
+        ar.cells.slots[c.0 as usize].key
+    }
+
+    /// Cached `p(v)` of the cell's node.
+    #[inline]
+    pub(crate) fn cp(&self, ar: &CellArena, c: CellId) -> u64 {
+        ar.cells.slots[c.0 as usize].p
+    }
+
+    /// Cached `n(v)` of the cell's node.
+    #[inline]
+    pub(crate) fn cn(&self, ar: &CellArena, c: CellId) -> u64 {
+        ar.cells.slots[c.0 as usize].n
+    }
+
+    /// Adjust the cached `p(v)` (call alongside the tree counter).
+    #[inline]
+    pub(crate) fn add_cp(&self, ar: &mut CellArena, c: CellId, delta: i64) {
+        let p = &mut ar.cells.slots[c.0 as usize].p;
+        *p = p.checked_add_signed(delta).expect("cached p underflow");
+    }
+
+    /// Adjust the cached `n(v)` (call alongside the tree counter).
+    #[inline]
+    pub(crate) fn add_cn(&self, ar: &mut CellArena, c: CellId, delta: i64) {
+        let n = &mut ar.cells.slots[c.0 as usize].n;
+        *n = n.checked_add_signed(delta).expect("cached n underflow");
+    }
+
+    /// Append a cell at the back with explicit gap counters. Used only to
+    /// seed the sentinel cells; ordinary insertion goes through
+    /// [`ListCore::insert_after`].
+    pub(crate) fn push_back(
+        &mut self,
+        ar: &mut CellArena,
+        node: NodeId,
+        key: f64,
+        gp: u64,
+        gn: u64,
+    ) -> CellId {
+        let id = ar.alloc(Cell { node, next: NIL, prev: self.tail, gp, gn, key, p: 0, n: 0 });
+        if self.tail != NIL {
+            ar.cells.slots[self.tail as usize].next = id;
+        } else {
+            self.head = id;
+        }
+        self.tail = id;
+        ar.map(node, id);
+        self.len += 1;
+        CellId(id)
+    }
+
+    /// `Add(L, u, v, p, n)` — insert `v` immediately after `u`, where `p`
+    /// and `n` are the label sums over `[s(u), s(v))` *at the time of the
+    /// call*. Splits `u`'s gap: `gp(u)′ = p`, `gp(v)′ = gp(u) − p` (same
+    /// for `gn`). `key`/`vp`/`vn` seed the new cell's caches. `O(1)`.
+    #[allow(clippy::too_many_arguments)] // mirrors the paper's Add(L, u, v, p, n) plus caches
+    pub(crate) fn insert_after(
+        &mut self,
+        ar: &mut CellArena,
+        u: CellId,
+        v: NodeId,
+        key: f64,
+        vp: u64,
+        vn: u64,
+        p: u64,
+        n: u64,
+    ) -> CellId {
+        debug_assert!(!self.contains(ar, v), "insert_after of node already in list");
+        let (u_next, u_gp, u_gn) = {
+            let cu = &ar.cells.slots[u.0 as usize];
+            (cu.next, cu.gp, cu.gn)
+        };
+        debug_assert!(u_gp >= p, "gap split underflow (gp={u_gp}, p={p})");
+        debug_assert!(u_gn >= n, "gap split underflow (gn={u_gn}, n={n})");
+        let id = ar.alloc(Cell {
+            node: v,
+            next: u_next,
+            prev: u.0,
+            gp: u_gp - p,
+            gn: u_gn - n,
+            key,
+            p: vp,
+            n: vn,
+        });
+        {
+            let cu = &mut ar.cells.slots[u.0 as usize];
+            cu.next = id;
+            cu.gp = p;
+            cu.gn = n;
+        }
+        if u_next != NIL {
+            ar.cells.slots[u_next as usize].prev = id;
+        } else {
+            self.tail = id;
+        }
+        ar.map(v, id);
+        self.len += 1;
+        CellId(id)
+    }
+
+    /// `Remove(L, v)` — delete a cell, folding its gap counters into the
+    /// predecessor so coverage is preserved. `O(1)`. The head cell (the
+    /// `−∞` sentinel, which has no predecessor to absorb its gap) must not
+    /// be removed.
+    pub(crate) fn remove(&mut self, ar: &mut CellArena, c: CellId) {
+        let Cell { node, next, prev, gp, gn, .. } = ar.cells.slots[c.0 as usize].clone();
+        assert_ne!(prev, NIL, "cannot remove the head cell of a weighted list");
+        {
+            let cp = &mut ar.cells.slots[prev as usize];
+            cp.next = next;
+            cp.gp += gp;
+            cp.gn += gn;
+        }
+        if next != NIL {
+            ar.cells.slots[next as usize].prev = prev;
+        } else {
+            self.tail = prev;
+        }
+        ar.unmap(node);
+        ar.cells.release(c.0);
+        self.len -= 1;
+    }
+
+    /// Iterate cells front to back.
+    pub(crate) fn iter_in<'a>(&self, ar: &'a CellArena) -> Cells<'a> {
+        Cells { ar, cur: self.head }
+    }
+
+    /// Snapshot of one cell's hot fields (scan-friendly: one slab lookup
+    /// per cell instead of one per accessor; see §Perf).
+    #[inline]
+    pub(crate) fn view(&self, ar: &CellArena, c: CellId) -> CellView {
+        let cell = &ar.cells.slots[c.0 as usize];
+        CellView { key: cell.key, p: cell.p, n: cell.n, gp: cell.gp, gn: cell.gn }
+    }
+
+    /// Iterate cell snapshots front to back (the `ApproxAUC` read path).
+    pub(crate) fn views_in<'a>(&self, ar: &'a CellArena) -> Views<'a> {
+        Views { ar, cur: self.head }
+    }
+
+    /// Largest cell with cached `key ≤ s`, plus the prefix `gp` *and*
+    /// `gn` sums of the cells before it (the `c_floor` hot scan).
+    /// Assumes the head cell's key is `−∞`. The `gn` prefix rides the
+    /// same hops for free; it is what lets the estimator's incremental
+    /// doubled-area accumulator compute its suffix-negative term in
+    /// `O(1)` instead of an extra tree query (approx.rs, DESIGN.md
+    /// §Incremental-reads).
+    pub(crate) fn floor_scan(&self, ar: &CellArena, s: f64) -> (CellId, u64, u64) {
+        let mut cur = self.head;
+        let mut hp = 0u64;
+        let mut hn = 0u64;
+        loop {
+            let cell = &ar.cells.slots[cur as usize];
+            let next = cell.next;
+            if next == NIL || ar.cells.slots[next as usize].key > s {
+                return (CellId(cur), hp, hn);
+            }
+            hp += cell.gp;
+            hn += cell.gn;
+            cur = next;
+        }
+    }
+
+    /// Release every cell (sentinels included) back to the arena in one
+    /// `O(len)` pass, unmapping each node. The bulk-free hook for
+    /// dropping a pooled stream (freeze / evict); afterwards the core
+    /// is empty.
+    pub(crate) fn drain(&mut self, ar: &mut CellArena) {
+        let mut cur = self.head;
+        while cur != NIL {
+            let (node, next) = {
+                let cell = &ar.cells.slots[cur as usize];
+                (cell.node, cell.next)
+            };
+            ar.unmap(node);
+            ar.cells.release(cur);
+            cur = next;
+        }
+        self.head = NIL;
+        self.tail = NIL;
+        self.len = 0;
+    }
+
+    /// Total `gp` over all cells (= positive labels covered; test helper).
+    pub(crate) fn total_gp(&self, ar: &CellArena) -> u64 {
+        self.iter_in(ar).map(|c| self.gp(ar, c)).sum()
+    }
+
+    /// Total `gn` over all cells.
+    pub(crate) fn total_gn(&self, ar: &CellArena) -> u64 {
+        self.iter_in(ar).map(|c| self.gn(ar, c)).sum()
+    }
+}
+
+/// Weighted linked list bundling its own cell arena — the
+/// self-contained form for standalone estimators and tests. Delegates
+/// to a [`ListCore`] over a private [`CellArena`]; the fleet uses cores
+/// against shard-owned arenas.
+#[derive(Clone, Debug, Default)]
+pub struct WeightedList {
+    ar: CellArena,
+    core: ListCore,
+}
+
+impl WeightedList {
+    /// Empty list (no sentinels yet).
+    pub fn new() -> Self {
+        WeightedList::default()
+    }
+
+    /// Number of elements, including any sentinel cells the coordinator
+    /// pushed.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.core.len()
+    }
+
+    /// True when no cells are present.
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.core.is_empty()
+    }
+
+    /// First cell.
+    #[inline]
+    pub fn head(&self) -> Option<CellId> {
+        self.core.head()
+    }
+
+    /// Last cell.
+    #[inline]
+    pub fn tail(&self) -> Option<CellId> {
+        self.core.tail()
+    }
+
+    /// `next(u; L)`.
+    #[inline]
+    pub fn next(&self, c: CellId) -> Option<CellId> {
+        self.core.next(&self.ar, c)
+    }
+
+    /// `prev(u; L)`.
+    #[inline]
+    pub fn prev(&self, c: CellId) -> Option<CellId> {
+        self.core.prev(&self.ar, c)
+    }
+
+    /// Tree node this cell references.
+    #[inline]
+    pub fn node(&self, c: CellId) -> NodeId {
+        self.core.node(&self.ar, c)
+    }
+
+    /// Gap positive count `gp(u; L)`.
+    #[inline]
+    pub fn gp(&self, c: CellId) -> u64 {
+        self.core.gp(&self.ar, c)
+    }
+
+    /// Gap negative count `gn(u; L)`.
+    #[inline]
+    pub fn gn(&self, c: CellId) -> u64 {
+        self.core.gn(&self.ar, c)
+    }
+
+    /// Add `delta` to `gp(u; L)`.
+    #[inline]
+    pub fn add_gp(&mut self, c: CellId, delta: i64) {
+        self.core.add_gp(&mut self.ar, c, delta);
+    }
+
+    /// Add `delta` to `gn(u; L)`.
+    #[inline]
+    pub fn add_gn(&mut self, c: CellId, delta: i64) {
+        self.core.add_gn(&mut self.ar, c, delta);
+    }
+
+    /// Cell holding `node`, if `node ∈ L`.
+    #[inline]
+    pub fn cell_of(&self, node: NodeId) -> Option<CellId> {
+        self.core.cell_of(&self.ar, node)
+    }
+
+    /// `O(1)` membership test.
+    #[inline]
+    pub fn contains(&self, node: NodeId) -> bool {
+        self.core.contains(&self.ar, node)
+    }
+
+    /// Cached score of the cell's node.
+    #[inline]
+    pub fn key(&self, c: CellId) -> f64 {
+        self.core.key(&self.ar, c)
+    }
+
+    /// Cached `p(v)` of the cell's node.
+    #[inline]
+    pub fn cp(&self, c: CellId) -> u64 {
+        self.core.cp(&self.ar, c)
+    }
+
+    /// Cached `n(v)` of the cell's node.
+    #[inline]
+    pub fn cn(&self, c: CellId) -> u64 {
+        self.core.cn(&self.ar, c)
+    }
+
+    /// Adjust the cached `p(v)` (call alongside the tree counter).
+    #[inline]
+    pub fn add_cp(&mut self, c: CellId, delta: i64) {
+        self.core.add_cp(&mut self.ar, c, delta);
+    }
+
+    /// Adjust the cached `n(v)` (call alongside the tree counter).
+    #[inline]
+    pub fn add_cn(&mut self, c: CellId, delta: i64) {
+        self.core.add_cn(&mut self.ar, c, delta);
+    }
+
+    /// Append a cell at the back with explicit gap counters (sentinel
+    /// seeding; ordinary insertion goes through
+    /// [`WeightedList::insert_after`]).
+    pub fn push_back(&mut self, node: NodeId, key: f64, gp: u64, gn: u64) -> CellId {
+        self.core.push_back(&mut self.ar, node, key, gp, gn)
+    }
+
+    /// `Add(L, u, v, p, n)` — insert `v` immediately after `u`; see
+    /// [`ListCore::insert_after`].
+    #[allow(clippy::too_many_arguments)] // mirrors the paper's Add(L, u, v, p, n) plus caches
+    pub fn insert_after(
+        &mut self,
+        u: CellId,
+        v: NodeId,
+        key: f64,
+        vp: u64,
+        vn: u64,
+        p: u64,
+        n: u64,
+    ) -> CellId {
+        self.core.insert_after(&mut self.ar, u, v, key, vp, vn, p, n)
+    }
+
+    /// `Remove(L, v)` — delete a cell, folding its gap counters into the
+    /// predecessor. The head cell must not be removed.
+    pub fn remove(&mut self, c: CellId) {
+        self.core.remove(&mut self.ar, c);
+    }
+
+    /// Iterate cells front to back.
+    pub fn iter(&self) -> Cells<'_> {
+        self.core.iter_in(&self.ar)
+    }
+
+    /// Snapshot of one cell's hot fields.
+    #[inline]
+    pub fn view(&self, c: CellId) -> CellView {
+        self.core.view(&self.ar, c)
+    }
+
+    /// Iterate cell snapshots front to back (the `ApproxAUC` read path).
+    pub fn views(&self) -> Views<'_> {
+        self.core.views_in(&self.ar)
+    }
+
+    /// Largest cell with cached `key ≤ s`, plus the prefix `gp` and `gn`
+    /// sums of the cells before it (the `c_floor` hot scan).
+    pub fn floor_scan(&self, s: f64) -> (CellId, u64, u64) {
+        self.core.floor_scan(&self.ar, s)
+    }
+
+    /// Total `gp` over all cells (= positive labels covered; test helper).
+    pub fn total_gp(&self) -> u64 {
+        self.core.total_gp(&self.ar)
+    }
+
+    /// Total `gn` over all cells.
+    pub fn total_gn(&self) -> u64 {
+        self.core.total_gn(&self.ar)
+    }
+
+    /// Release retained slab capacity (freed tail slots, membership-map
+    /// tail, vector slack) without disturbing live cells — the
+    /// churn-shrink hook for standalone lists.
+    pub fn shrink_to_fit(&mut self) {
+        self.ar.shrink_to_fit();
+    }
+
+    /// Slots the backing arena currently retains (live + freed) — the
+    /// measure the capacity-regression tests bound after churn.
+    pub fn capacity(&self) -> usize {
+        self.ar.cells.slot_count()
     }
 }
 
@@ -369,7 +641,7 @@ pub struct CellView {
 
 /// Front-to-back snapshot iterator.
 pub struct Views<'a> {
-    list: &'a WeightedList,
+    ar: &'a CellArena,
     cur: u32,
 }
 
@@ -381,7 +653,7 @@ impl Iterator for Views<'_> {
         if self.cur == NIL {
             return None;
         }
-        let cell = &self.list.cells[self.cur as usize];
+        let cell = &self.ar.cells.slots[self.cur as usize];
         self.cur = cell.next;
         Some(CellView { key: cell.key, p: cell.p, n: cell.n, gp: cell.gp, gn: cell.gn })
     }
@@ -389,7 +661,7 @@ impl Iterator for Views<'_> {
 
 /// Front-to-back cell iterator.
 pub struct Cells<'a> {
-    list: &'a WeightedList,
+    ar: &'a CellArena,
     cur: u32,
 }
 
@@ -401,17 +673,18 @@ impl Iterator for Cells<'_> {
             return None;
         }
         let c = CellId(self.cur);
-        self.cur = self.list.cells[self.cur as usize].next;
+        self.cur = self.ar.cells.slots[self.cur as usize].next;
         Some(c)
     }
 }
 
 // Cells live in a plain `Vec` slab addressed by index — no `Rc`, no
 // interior mutability — so the list moves freely across the fleet's
-// scoped worker threads. Enforced at compile time.
+// pool worker threads. Enforced at compile time.
 const _: () = {
     const fn assert_send<T: Send>() {}
     assert_send::<WeightedList>();
+    assert_send::<CellArena>();
 };
 
 #[cfg(test)]
@@ -542,5 +815,26 @@ mod tests {
         let nodes: Vec<u32> = l.iter().map(|c| l.node(c).0).collect();
         assert_eq!(nodes, vec![1000, 2, 3, 1001]);
         let _ = b;
+    }
+
+    #[test]
+    fn shrink_releases_churn_capacity() {
+        let (mut l, h, _t) = seeded(1000, 0);
+        // Grow a long list, then remove everything but the sentinels.
+        let mut cells = Vec::new();
+        let mut prev = h;
+        for i in 0..200u32 {
+            let gap = 999 - u64::from(i);
+            prev = l.insert_after(prev, nid(i), f64::from(i), 1, 0, gap.min(l.gp(prev)), 0);
+            cells.push(prev);
+        }
+        for c in cells {
+            l.remove(c);
+        }
+        assert!(l.capacity() >= 200);
+        l.shrink_to_fit();
+        assert!(l.capacity() <= 2, "churned-out list must release its slab");
+        assert_eq!(l.len(), 2);
+        assert_eq!((l.total_gp(), l.total_gn()), (1000, 0));
     }
 }

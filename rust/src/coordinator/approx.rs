@@ -31,6 +31,19 @@
 //! in `DESIGN.md` §Incremental-reads, property-tested per op in
 //! `rust/tests/differential.rs` and in [`ApproxAuc::check_invariants`].
 //!
+//! Like the layers underneath, the estimator comes in two forms: the
+//! storage-free [`ApproxCore`] allocating from a caller-supplied
+//! [`EstimatorArenas`] (the fleet pools one bundle per shard) and the
+//! self-contained [`ApproxAuc`] wrapper with private arenas. The core
+//! additionally supports **rehydration** ([`ApproxCore::rebuild_in`]):
+//! a hibernated stream stores only its window content plus the finite
+//! keys of `C`; replaying the content through the support structure and
+//! rebuilding `C`'s cells from those keys (gap counters are a pure
+//! function of the key set and the window) reproduces the frozen
+//! estimator bit-for-bit — `C`'s shape depends on the full insertion
+//! history, so it must be restored, not re-derived (`rust/DESIGN.md`
+//! §Memory).
+//!
 //! Deviations from the paper's pseudo-code (all behaviour-preserving;
 //! rationale in DESIGN.md §Pseudo-code-fixes):
 //!
@@ -45,92 +58,110 @@
 //!   positive list `P` (paper §5: “essentially equivalent … if we set
 //!   ε = 0”).
 
-use super::support::SupportTree;
+use super::support::{EstimatorArenas, SupportCore};
 use super::{finish_auc, AucEstimator};
-use crate::collections::{CellId, Score, WeightedList};
+use crate::collections::weighted_list::ListCore;
+use crate::collections::{CellId, Score};
 
-/// Approximate sliding-window AUC estimator (`|ãuc − auc| ≤ ε·auc/2`).
-#[derive(Clone, Debug)]
-pub struct ApproxAuc {
-    sup: SupportTree,
-    /// The `(1+ε)`-compressed list `C`.
-    c: WeightedList,
+/// Storage-free form of the approximate estimator: a [`SupportCore`],
+/// the compressed list's head/tail, and two scalars. All nodes and
+/// cells live in the [`EstimatorArenas`] passed into every call.
+#[derive(Clone, Copy, Debug)]
+pub(crate) struct ApproxCore {
+    pub(crate) sup: SupportCore,
+    /// The `(1+ε)`-compressed list `C` (cells in the bundle's `c` arena).
+    c: ListCore,
     /// `α = 1 + ε`.
     alpha: f64,
     /// Running doubled-area accumulator: at every op boundary equal —
     /// bit-for-bit — to what the Algorithm 4 scan over `C` would sum
-    /// ([`ApproxAuc::doubled_area_scan`]). Maintained by integer deltas
-    /// at each list mutation; makes [`ApproxAuc::auc`] `O(1)`.
+    /// ([`ApproxCore::doubled_area_scan`]). Maintained by integer deltas
+    /// at each list mutation; makes the `auc` read `O(1)`.
     a2: u128,
 }
 
-impl ApproxAuc {
-    /// New estimator with approximation parameter `ε ≥ 0`.
-    ///
-    /// `ε = 0` yields the exact AUC with `|C| = |P|` (every positive node
-    /// enumerated); larger `ε` trades accuracy for a smaller `C`.
-    pub fn new(epsilon: f64) -> Self {
+impl ApproxCore {
+    /// New estimator with approximation parameter `ε ≥ 0`, allocating
+    /// its sentinels from `ars`.
+    pub(crate) fn new_in(ars: &mut EstimatorArenas, epsilon: f64) -> Self {
         assert!(
             epsilon >= 0.0 && epsilon.is_finite(),
             "epsilon must be finite and non-negative"
         );
-        let sup = SupportTree::new();
-        let mut c = WeightedList::new();
-        c.push_back(sup.neg_sentinel(), f64::NEG_INFINITY, 0, 0);
-        c.push_back(sup.pos_sentinel(), f64::INFINITY, 0, 0);
-        ApproxAuc { sup, c, alpha: 1.0 + epsilon, a2: 0 }
+        let sup = SupportCore::new_in(ars);
+        let mut c = ListCore::new();
+        c.push_back(&mut ars.c, sup.neg_sentinel(), f64::NEG_INFINITY, 0, 0);
+        c.push_back(&mut ars.c, sup.pos_sentinel(), f64::INFINITY, 0, 0);
+        ApproxCore { sup, c, alpha: 1.0 + epsilon, a2: 0 }
+    }
+
+    /// Release every node and cell back to the arenas (`O(k)`). The core
+    /// must not be used afterwards.
+    pub(crate) fn free_in(&mut self, ars: &mut EstimatorArenas) {
+        self.sup.free_in(ars);
+        self.c.drain(&mut ars.c);
+        self.a2 = 0;
     }
 
     /// The `ε` this estimator was built with.
     #[inline]
-    pub fn epsilon(&self) -> f64 {
+    pub(crate) fn epsilon(&self) -> f64 {
         self.alpha - 1.0
     }
 
-    /// Current size of the compressed list `C`, sentinels included (the
-    /// quantity plotted in Figure 2 bottom).
+    /// Current size of the compressed list `C`, sentinels included.
     #[inline]
-    pub fn compressed_len(&self) -> usize {
+    pub(crate) fn compressed_len(&self) -> usize {
         self.c.len()
     }
 
-    /// Positive / negative totals (exposed for experiment drivers).
-    pub fn class_totals(&self) -> (u64, u64) {
+    /// Logical bytes of arena storage this estimator's structures
+    /// occupy: the support bundle plus the `C` cells. Content-determined
+    /// (live counts × slot sizes), never arena capacity.
+    pub(crate) fn live_bytes(&self) -> usize {
+        self.sup.live_bytes()
+            + self.c.len() * std::mem::size_of::<crate::collections::weighted_list::Cell>()
+    }
+
+    /// Positive / negative totals.
+    #[inline]
+    pub(crate) fn class_totals(&self) -> (u64, u64) {
         (self.sup.total_pos(), self.sup.total_neg())
     }
 
-    /// Access to the underlying §3 structure (read-only).
-    pub fn support(&self) -> &SupportTree {
-        &self.sup
-    }
-
-    /// Exact AUC via `O(k)` enumeration of the support tree. Used by the
-    /// error-measurement experiments so approx and exact share one window.
-    pub fn exact_auc(&self) -> f64 {
-        self.sup.exact_auc()
-    }
-
-    /// The running doubled-area accumulator behind the `O(1)`
-    /// [`ApproxAuc::auc`] read. Exposed for the bit-equality property
-    /// tests and the bench's cached-vs-scan comparison.
+    /// Window size (all entries).
     #[inline]
-    pub fn doubled_area(&self) -> u128 {
+    pub(crate) fn len(&self) -> usize {
+        self.sup.len()
+    }
+
+    /// Exact AUC via `O(k)` enumeration of the support tree.
+    pub(crate) fn exact_auc(&self, ars: &EstimatorArenas) -> f64 {
+        self.sup.exact_auc(ars)
+    }
+
+    /// The running doubled-area accumulator behind the `O(1)` read.
+    #[inline]
+    pub(crate) fn doubled_area(&self) -> u128 {
         self.a2
+    }
+
+    /// `ApproxAUC(C)` (Algorithm 4) in `O(1)` from the running
+    /// accumulator.
+    #[inline]
+    pub(crate) fn auc(&self) -> f64 {
+        finish_auc(self.a2, self.sup.total_pos(), self.sup.total_neg())
     }
 
     /// The doubled-area accumulator recomputed from scratch by the
     /// Algorithm 4 scan over `C` — `O(|C|)`. This is the reference the
-    /// running accumulator must equal bit-for-bit after every
-    /// operation (`rust/tests/differential.rs`,
-    /// [`ApproxAuc::check_invariants`]); it is also the read path every
-    /// call to [`ApproxAuc::auc`] used before the accumulator existed,
-    /// retained for the `benches/core.rs` speedup measurement.
-    pub fn doubled_area_scan(&self) -> u128 {
+    /// running accumulator must equal bit-for-bit after every operation.
+    pub(crate) fn doubled_area_scan(&self, ars: &EstimatorArenas) -> u128 {
         let mut hp: u64 = 0;
         let mut a2: u128 = 0;
         // Cell-local read: cached (p, n), one slab lookup per cell
         // (§Perf) — no tree dereferences at all.
-        for cell in self.c.views() {
+        for cell in self.c.views_in(&ars.c) {
             // The C node itself, exact.
             a2 += u128::from(2 * hp + cell.p) * u128::from(cell.n);
             hp += cell.p;
@@ -144,10 +175,55 @@ impl ApproxAuc {
     }
 
     /// The estimate read via the full `O(|C|)` scan instead of the
-    /// cached accumulator. Bit-identical to [`ApproxAuc::auc`]; kept as
-    /// the reference/benchmark read path.
-    pub fn auc_full_scan(&self) -> f64 {
-        finish_auc(self.doubled_area_scan(), self.sup.total_pos(), self.sup.total_neg())
+    /// cached accumulator.
+    pub(crate) fn auc_full_scan(&self, ars: &EstimatorArenas) -> f64 {
+        finish_auc(self.doubled_area_scan(ars), self.sup.total_pos(), self.sup.total_neg())
+    }
+
+    /// The finite keys of `C` in ascending order (sentinels excluded) —
+    /// exactly what hibernation must store to restore `C`'s shape
+    /// ([`ApproxCore::rebuild_in`]).
+    pub(crate) fn compressed_keys(&self, ars: &EstimatorArenas) -> Vec<f64> {
+        self.c
+            .iter_in(&ars.c)
+            .filter_map(|cell| {
+                let k = self.c.key(&ars.c, cell);
+                k.is_finite().then_some(k)
+            })
+            .collect()
+    }
+
+    /// Rebuild `C` from a frozen key set (rehydration). `self.sup` must
+    /// already hold the full window content and `C` must be pristine
+    /// (sentinels only, zero gaps — the state [`ApproxCore::new_in`]
+    /// leaves). The gap counters of the rebuilt cells are pure
+    /// functions of the key set and the window, so the result is
+    /// bit-identical to the estimator that was frozen; `a2` is
+    /// re-derived by the reference scan, which the running value always
+    /// equals.
+    pub(crate) fn rebuild_in(&mut self, ars: &mut EstimatorArenas, keys: &[f64]) {
+        debug_assert_eq!(self.c.len(), 2, "rebuild over a non-pristine C");
+        let head = self.c.head().expect("C sentinels present");
+        // Seed the −∞ sentinel's gap with the whole window, then split
+        // off each stored cell left to right.
+        let tp = i64::try_from(self.sup.total_pos()).expect("window too large");
+        let tn = i64::try_from(self.sup.total_neg()).expect("window too large");
+        self.c.add_gp(&mut ars.c, head, tp);
+        self.c.add_gn(&mut ars.c, head, tn);
+        let mut prev = head;
+        let (mut hp_prev, mut hn_prev) = (0u64, 0u64);
+        for &key in keys {
+            let s = Score(key);
+            let node = self.sup.t.find(&ars.t, s).expect("frozen C key missing from T");
+            let cnt = *self.sup.t.val(&ars.t, node);
+            let (hp, hn) = self.sup.head_stats(ars, s);
+            prev = self
+                .c
+                .insert_after(&mut ars.c, prev, node, key, cnt.p, cnt.n, hp - hp_prev, hn - hn_prev);
+            hp_prev = hp;
+            hn_prev = hn;
+        }
+        self.a2 = self.doubled_area_scan(ars);
     }
 
     // ------------------------------------------------------------------
@@ -158,9 +234,9 @@ impl ApproxAuc {
     /// `hn(u)` accumulated from the gap counters of the cells before
     /// `u`. Linear in `|C|`, which is the budgeted `O((log k)/ε)`
     /// (§4.2).
-    fn c_floor(&self, s: Score) -> (CellId, u64, u64) {
+    fn c_floor(&self, ars: &EstimatorArenas, s: Score) -> (CellId, u64, u64) {
         // Hot loop: cached keys + single slab lookup per hop (§Perf).
-        self.c.floor_scan(s.0)
+        self.c.floor_scan(&ars.c, s.0)
     }
 
     /// One cell's contribution to the doubled-area accumulator, given
@@ -168,8 +244,8 @@ impl ApproxAuc {
     /// then the grouped gap behind it as one pseudo-node — the two
     /// terms the Algorithm 4 scan adds per cell.
     #[inline]
-    fn cell_a2(&self, cell: CellId, h: u64) -> u128 {
-        let v = self.c.view(cell);
+    fn cell_a2(&self, ars: &EstimatorArenas, cell: CellId, h: u64) -> u128 {
+        let v = self.c.view(&ars.c, cell);
         let node = u128::from(2 * h + v.p) * u128::from(v.n);
         let gp = v.gp - v.p;
         let gn = v.gn - v.n;
@@ -184,24 +260,24 @@ impl ApproxAuc {
     /// to recompute the two touched cells' `a2` contributions (the gap
     /// split moves no positives across later cells, so the delta is
     /// purely local).
-    fn add_next(&mut self, v_cell: CellId, h: u64) {
-        let v_node = self.c.node(v_cell);
-        let p = self.sup.p_list();
-        let v_in_p = p.cell_of(v_node).expect("C nodes are always in P");
-        let Some(w_in_p) = p.next(v_in_p) else {
+    fn add_next(&mut self, ars: &mut EstimatorArenas, v_cell: CellId, h: u64) {
+        let v_node = self.c.node(&ars.c, v_cell);
+        let p = self.sup.p;
+        let v_in_p = p.cell_of(&ars.p, v_node).expect("C nodes are always in P");
+        let Some(w_in_p) = p.next(&ars.p, v_in_p) else {
             return; // v is the +∞ sentinel; nothing follows
         };
-        let w_node = p.node(w_in_p);
-        if self.c.contains(w_node) {
+        let w_node = p.node(&ars.p, w_in_p);
+        if self.c.contains(&ars.c, w_node) {
             return;
         }
-        let (gp, gn) = (p.gp(v_in_p), p.gn(v_in_p));
-        let (key, wp, wn) = (p.key(w_in_p), p.cp(w_in_p), p.cn(w_in_p));
-        let old = self.cell_a2(v_cell, h);
-        let w_cell = self.c.insert_after(v_cell, w_node, key, wp, wn, gp, gn);
+        let (gp, gn) = (p.gp(&ars.p, v_in_p), p.gn(&ars.p, v_in_p));
+        let (key, wp, wn) = (p.key(&ars.p, w_in_p), p.cp(&ars.p, w_in_p), p.cn(&ars.p, w_in_p));
+        let old = self.cell_a2(ars, v_cell, h);
+        let w_cell = self.c.insert_after(&mut ars.c, v_cell, w_node, key, wp, wn, gp, gn);
         self.a2 = self.a2 - old
-            + self.cell_a2(v_cell, h)
-            + self.cell_a2(w_cell, h + self.c.gp(v_cell));
+            + self.cell_a2(ars, v_cell, h)
+            + self.cell_a2(ars, w_cell, h + self.c.gp(&ars.c, v_cell));
     }
 
     /// `Compress(C, α)` alone (Algorithm 6): merge-only pass for
@@ -210,22 +286,23 @@ impl ApproxAuc {
     /// per-cell work for nothing (§Perf). A merge folds `w` into `v`
     /// without moving positives across later cells, so each one is a
     /// local `a2` recompute of the pair → merged cell.
-    fn compress(&mut self) {
+    fn compress(&mut self, ars: &mut EstimatorArenas) {
         let Some(mut v) = self.c.head() else { return };
         let mut c_hp = 0u64;
         loop {
-            let Some(w) = self.c.next(v) else { break };
-            if self.c.next(w).is_none() {
+            let Some(w) = self.c.next(&ars.c, v) else { break };
+            if self.c.next(&ars.c, w).is_none() {
                 break; // w is the last cell (+∞ sentinel): keep it
             }
-            let merged = c_hp + self.c.gp(v) + self.c.gp(w);
-            let bound = self.alpha * (c_hp + self.c.cp(v)) as f64;
+            let merged = c_hp + self.c.gp(&ars.c, v) + self.c.gp(&ars.c, w);
+            let bound = self.alpha * (c_hp + self.c.cp(&ars.c, v)) as f64;
             if (merged as f64) <= bound {
-                let old = self.cell_a2(v, c_hp) + self.cell_a2(w, c_hp + self.c.gp(v));
-                self.c.remove(w);
-                self.a2 = self.a2 - old + self.cell_a2(v, c_hp);
+                let old = self.cell_a2(ars, v, c_hp)
+                    + self.cell_a2(ars, w, c_hp + self.c.gp(&ars.c, v));
+                self.c.remove(&mut ars.c, w);
+                self.a2 = self.a2 - old + self.cell_a2(ars, v, c_hp);
             } else {
-                c_hp += self.c.gp(v);
+                c_hp += self.c.gp(&ars.c, v);
                 v = w;
             }
         }
@@ -233,31 +310,31 @@ impl ApproxAuc {
 
     /// Eq. 3 check for the pair starting at cell `v` given `c = hp(v)`.
     #[inline]
-    fn eq3_violated(&self, v: CellId, c_hp: u64) -> bool {
-        let hp_next = c_hp + self.c.gp(v);
-        (hp_next as f64) > self.alpha * (c_hp + self.c.cp(v)) as f64
+    fn eq3_violated(&self, ars: &EstimatorArenas, v: CellId, c_hp: u64) -> bool {
+        let hp_next = c_hp + self.c.gp(&ars.c, v);
+        (hp_next as f64) > self.alpha * (c_hp + self.c.cp(&ars.c, v)) as f64
     }
 
     /// `AddPos` (Algorithm 7).
-    fn add_pos(&mut self, s: Score) {
-        let _v = self.sup.add_pos(s);
-        let (u_cell, c_hp, c_hn) = self.c_floor(s);
+    fn add_pos(&mut self, ars: &mut EstimatorArenas, s: Score) {
+        let _v = self.sup.add_pos(ars, s);
+        let (u_cell, c_hp, c_hn) = self.c_floor(ars, s);
         // The new positive becomes one more predecessor of every
         // negative in the cells after u: their scan terms grow by
         // 2·gn each, one suffix adjustment totalling 2·suffix_gn. The
         // gn prefix rides the floor scan, so this is O(1) extra.
-        let suffix_gn = self.sup.total_neg() - c_hn - self.c.gn(u_cell);
-        let old = self.cell_a2(u_cell, c_hp);
-        self.c.add_gp(u_cell, 1);
-        if self.c.key(u_cell) == s.0 {
-            self.c.add_cp(u_cell, 1);
+        let suffix_gn = self.sup.total_neg() - c_hn - self.c.gn(&ars.c, u_cell);
+        let old = self.cell_a2(ars, u_cell, c_hp);
+        self.c.add_gp(&mut ars.c, u_cell, 1);
+        if self.c.key(&ars.c, u_cell) == s.0 {
+            self.c.add_cp(&mut ars.c, u_cell, 1);
         }
-        self.a2 = self.a2 - old + self.cell_a2(u_cell, c_hp) + 2 * u128::from(suffix_gn);
+        self.a2 = self.a2 - old + self.cell_a2(ars, u_cell, c_hp) + 2 * u128::from(suffix_gn);
         // At most one Eq. 3 violation, at u (Lemma 1 discussion, §4.2).
-        if self.eq3_violated(u_cell, c_hp) {
-            self.add_next(u_cell, c_hp);
+        if self.eq3_violated(ars, u_cell, c_hp) {
+            self.add_next(ars, u_cell, c_hp);
         }
-        self.compress();
+        self.compress(ars);
     }
 
     /// `RemovePos` (Algorithm 8).
@@ -268,36 +345,35 @@ impl ApproxAuc {
     /// own C-gap (`gp(u; C) = p(u) = 1`), the literal order drives the
     /// new cell's counter to `−1`. Splitting first, then decrementing,
     /// performs the identical net transfer without the underflow.
-    fn remove_pos(&mut self, s: Score) {
-        let (u_cell, c_hp, c_hn) = self.c_floor(s);
-        if self.c.key(u_cell) == s.0 && self.c.cp(u_cell) == 1 {
+    fn remove_pos(&mut self, ars: &mut EstimatorArenas, s: Score) {
+        let (u_cell, c_hp, c_hn) = self.c_floor(ars, s);
+        if self.c.key(&ars.c, u_cell) == s.0 && self.c.cp(&ars.c, u_cell) == 1 {
             // u is about to stop being positive: pull in its P-successor
             // so the coverage of C is preserved, account the departing
             // label inside [u, w), then drop u from C.
-            self.add_next(u_cell, c_hp);
+            self.add_next(ars, u_cell, c_hp);
             // Fused a2 step for {gp(u) −= 1; remove u}: retract prev's
             // and u's contributions while both are coherent, apply both
             // mutations, re-add the merged predecessor, and charge the
             // departed positive against the negatives after u.
-            let suffix_gn = self.sup.total_neg() - c_hn - self.c.gn(u_cell);
-            let prev = self.c.prev(u_cell).expect("floor of a finite score is never the head");
-            let h_prev = c_hp - self.c.gp(prev);
-            let old = self.cell_a2(prev, h_prev) + self.cell_a2(u_cell, c_hp);
-            self.c.add_gp(u_cell, -1);
-            self.c.remove(u_cell);
-            self.a2 =
-                self.a2 - old + self.cell_a2(prev, h_prev) - 2 * u128::from(suffix_gn);
+            let suffix_gn = self.sup.total_neg() - c_hn - self.c.gn(&ars.c, u_cell);
+            let prev =
+                self.c.prev(&ars.c, u_cell).expect("floor of a finite score is never the head");
+            let h_prev = c_hp - self.c.gp(&ars.c, prev);
+            let old = self.cell_a2(ars, prev, h_prev) + self.cell_a2(ars, u_cell, c_hp);
+            self.c.add_gp(&mut ars.c, u_cell, -1);
+            self.c.remove(&mut ars.c, u_cell);
+            self.a2 = self.a2 - old + self.cell_a2(ars, prev, h_prev) - 2 * u128::from(suffix_gn);
         } else {
-            let suffix_gn = self.sup.total_neg() - c_hn - self.c.gn(u_cell);
-            let old = self.cell_a2(u_cell, c_hp);
-            self.c.add_gp(u_cell, -1);
-            if self.c.key(u_cell) == s.0 {
-                self.c.add_cp(u_cell, -1);
+            let suffix_gn = self.sup.total_neg() - c_hn - self.c.gn(&ars.c, u_cell);
+            let old = self.cell_a2(ars, u_cell, c_hp);
+            self.c.add_gp(&mut ars.c, u_cell, -1);
+            if self.c.key(&ars.c, u_cell) == s.0 {
+                self.c.add_cp(&mut ars.c, u_cell, -1);
             }
-            self.a2 =
-                self.a2 - old + self.cell_a2(u_cell, c_hp) - 2 * u128::from(suffix_gn);
+            self.a2 = self.a2 - old + self.cell_a2(ars, u_cell, c_hp) - 2 * u128::from(suffix_gn);
         }
-        self.sup.remove_pos(s);
+        self.sup.remove_pos(ars, s);
         // Re-establish Eq. 3 along the whole list (two violation shapes
         // are possible after a removal; Lemma 1 repairs each by one
         // AddNext), then Eq. 4. Measured §Perf note: fusing these two
@@ -305,53 +381,74 @@ impl ApproxAuc {
         // loop ran ~10% slower than two tight passes.
         let Some(mut v) = self.c.head() else { return };
         let mut c_hp = 0u64;
-        while let Some(w) = self.c.next(v) {
-            let x = self.c.gp(v);
-            if self.eq3_violated(v, c_hp) {
-                self.add_next(v, c_hp);
+        while let Some(w) = self.c.next(&ars.c, v) {
+            let x = self.c.gp(&ars.c, v);
+            if self.eq3_violated(ars, v, c_hp) {
+                self.add_next(ars, v, c_hp);
             }
             c_hp += x;
             v = w;
         }
-        self.compress();
+        self.compress(ars);
     }
 
     /// Add-negative update (§4.2): one gap counter in `C`. Negatives
     /// never shift the positive prefix of later cells, so the `a2`
     /// delta is purely local to the floor cell.
-    fn add_neg(&mut self, s: Score) {
-        self.sup.add_neg(s);
-        let (u_cell, c_hp, _) = self.c_floor(s);
-        let old = self.cell_a2(u_cell, c_hp);
-        self.c.add_gn(u_cell, 1);
-        if self.c.key(u_cell) == s.0 {
-            self.c.add_cn(u_cell, 1);
+    fn add_neg(&mut self, ars: &mut EstimatorArenas, s: Score) {
+        self.sup.add_neg(ars, s);
+        let (u_cell, c_hp, _) = self.c_floor(ars, s);
+        let old = self.cell_a2(ars, u_cell, c_hp);
+        self.c.add_gn(&mut ars.c, u_cell, 1);
+        if self.c.key(&ars.c, u_cell) == s.0 {
+            self.c.add_cn(&mut ars.c, u_cell, 1);
         }
-        self.a2 = self.a2 - old + self.cell_a2(u_cell, c_hp);
+        self.a2 = self.a2 - old + self.cell_a2(ars, u_cell, c_hp);
     }
 
     /// Remove-negative update (§4.2).
-    fn remove_neg(&mut self, s: Score) {
-        self.sup.remove_neg(s);
-        let (u_cell, c_hp, _) = self.c_floor(s);
-        let old = self.cell_a2(u_cell, c_hp);
-        self.c.add_gn(u_cell, -1);
-        if self.c.key(u_cell) == s.0 {
-            self.c.add_cn(u_cell, -1);
+    fn remove_neg(&mut self, ars: &mut EstimatorArenas, s: Score) {
+        self.sup.remove_neg(ars, s);
+        let (u_cell, c_hp, _) = self.c_floor(ars, s);
+        let old = self.cell_a2(ars, u_cell, c_hp);
+        self.c.add_gn(&mut ars.c, u_cell, -1);
+        if self.c.key(&ars.c, u_cell) == s.0 {
+            self.c.add_cn(&mut ars.c, u_cell, -1);
         }
-        self.a2 = self.a2 - old + self.cell_a2(u_cell, c_hp);
+        self.a2 = self.a2 - old + self.cell_a2(ars, u_cell, c_hp);
+    }
+
+    /// Insert one labelled entry ([`AucEstimator::insert`] semantics).
+    pub(crate) fn insert_in(&mut self, ars: &mut EstimatorArenas, score: f64, pos: bool) {
+        let s = Score(super::canon(score));
+        assert!(s.is_valid_entry(), "scores must be finite");
+        if pos {
+            self.add_pos(ars, s);
+        } else {
+            self.add_neg(ars, s);
+        }
+    }
+
+    /// Remove one labelled entry ([`AucEstimator::remove`] semantics).
+    pub(crate) fn remove_in(&mut self, ars: &mut EstimatorArenas, score: f64, pos: bool) {
+        let s = Score(super::canon(score));
+        if pos {
+            self.remove_pos(ars, s);
+        } else {
+            self.remove_neg(ars, s);
+        }
     }
 
     /// Validate the §4 invariants on `C` (tests / property harness):
     /// coverage, ordering, Eq. 3, Eq. 4, and gap counters against brute
     /// force. Panics on violation.
-    pub fn check_invariants(&self) {
-        self.sup.check_invariants();
-        let cells: Vec<CellId> = self.c.iter().collect();
+    pub(crate) fn check_invariants(&self, ars: &EstimatorArenas) {
+        self.sup.check_invariants(ars);
+        let cells: Vec<CellId> = self.c.iter_in(&ars.c).collect();
         assert!(cells.len() >= 2, "C lost its sentinels");
-        assert_eq!(self.c.node(cells[0]), self.sup.neg_sentinel(), "C head sentinel");
+        assert_eq!(self.c.node(&ars.c, cells[0]), self.sup.neg_sentinel(), "C head sentinel");
         assert_eq!(
-            self.c.node(*cells.last().unwrap()),
+            self.c.node(&ars.c, *cells.last().unwrap()),
             self.sup.pos_sentinel(),
             "C tail sentinel"
         );
@@ -359,73 +456,163 @@ impl ApproxAuc {
         // the gap counters match brute-force head-stat differences.
         for w in cells.windows(2) {
             let (a, b) = (w[0], w[1]);
-            let (na, nb) = (self.c.node(a), self.c.node(b));
-            assert!(self.sup.p_list().contains(na), "C node not in P");
-            let (sa, sb) = (self.sup.score(na), self.sup.score(nb));
+            let (na, nb) = (self.c.node(&ars.c, a), self.c.node(&ars.c, b));
+            assert!(self.sup.p.contains(&ars.p, na), "C node not in P");
+            let (sa, sb) = (self.sup.score(ars, na), self.sup.score(ars, nb));
             assert!(sa < sb, "C not score-ascending");
-            let (hp_a, hn_a) = self.sup.head_stats(sa);
-            let (hp_b, hn_b) = self.sup.head_stats(sb);
-            assert_eq!(self.c.gp(a), hp_b - hp_a, "gp(·;C) brute mismatch");
-            assert_eq!(self.c.gn(a), hn_b - hn_a, "gn(·;C) brute mismatch");
+            let (hp_a, hn_a) = self.sup.head_stats(ars, sa);
+            let (hp_b, hn_b) = self.sup.head_stats(ars, sb);
+            assert_eq!(self.c.gp(&ars.c, a), hp_b - hp_a, "gp(·;C) brute mismatch");
+            assert_eq!(self.c.gn(&ars.c, a), hn_b - hn_a, "gn(·;C) brute mismatch");
         }
-        assert_eq!(self.c.total_gp(), self.sup.total_pos(), "C misses positives");
-        assert_eq!(self.c.total_gn(), self.sup.total_neg(), "C misses negatives");
+        assert_eq!(self.c.total_gp(&ars.c), self.sup.total_pos(), "C misses positives");
+        assert_eq!(self.c.total_gn(&ars.c), self.sup.total_neg(), "C misses negatives");
         // Cell caches (key, p, n) coherent with the tree.
         for &cell in &cells {
-            let node = self.c.node(cell);
-            assert_eq!(self.c.key(cell), self.sup.score(node).0, "C cache: stale key");
-            let cnt = self.sup.counts(node);
-            assert_eq!(self.c.cp(cell), cnt.p, "C cache: stale p");
-            assert_eq!(self.c.cn(cell), cnt.n, "C cache: stale n");
+            let node = self.c.node(&ars.c, cell);
+            assert_eq!(self.c.key(&ars.c, cell), self.sup.score(ars, node).0, "C cache: stale key");
+            let cnt = self.sup.counts(ars, node);
+            assert_eq!(self.c.cp(&ars.c, cell), cnt.p, "C cache: stale p");
+            assert_eq!(self.c.cn(&ars.c, cell), cnt.n, "C cache: stale n");
         }
         // The running doubled-area accumulator never drifts from the
         // from-scratch Algorithm 4 scan — integer bit-equality.
         assert_eq!(
             self.a2,
-            self.doubled_area_scan(),
+            self.doubled_area_scan(ars),
             "incremental a2 drifted from the full scan"
         );
         // Eq. 3 for all consecutive pairs; Eq. 4 for all triples.
         let mut hp = 0u64;
         for (i, &v) in cells.iter().enumerate() {
-            let p_v = self.sup.counts(self.c.node(v)).p;
+            let p_v = self.sup.counts(ars, self.c.node(&ars.c, v)).p;
             let bound = self.alpha * (hp + p_v) as f64;
             if i + 1 < cells.len() {
-                let hp_w = hp + self.c.gp(v);
+                let hp_w = hp + self.c.gp(&ars.c, v);
                 assert!(
                     hp_w as f64 <= bound,
                     "Eq. 3 violated at cell {i}: hp(w)={hp_w} > {bound}"
                 );
                 if i + 2 < cells.len() {
-                    let hp_u = hp_w + self.c.gp(cells[i + 1]);
+                    let hp_u = hp_w + self.c.gp(&ars.c, cells[i + 1]);
                     assert!(
                         hp_u as f64 > bound,
                         "Eq. 4 violated at cell {i}: hp(u)={hp_u} ≤ {bound}"
                     );
                 }
             }
-            hp += self.c.gp(v);
+            hp += self.c.gp(&ars.c, v);
         }
+    }
+}
+
+/// Approximate sliding-window AUC estimator (`|ãuc − auc| ≤ ε·auc/2`)
+/// with private arenas — the self-contained form for standalone use.
+/// Delegates to an [`ApproxCore`]; the fleet uses cores against
+/// shard-owned arenas.
+#[derive(Clone, Debug)]
+pub struct ApproxAuc {
+    ars: EstimatorArenas,
+    core: ApproxCore,
+}
+
+impl ApproxAuc {
+    /// New estimator with approximation parameter `ε ≥ 0`.
+    ///
+    /// `ε = 0` yields the exact AUC with `|C| = |P|` (every positive node
+    /// enumerated); larger `ε` trades accuracy for a smaller `C`.
+    pub fn new(epsilon: f64) -> Self {
+        let mut ars = EstimatorArenas::default();
+        let core = ApproxCore::new_in(&mut ars, epsilon);
+        ApproxAuc { ars, core }
+    }
+
+    /// The `ε` this estimator was built with.
+    #[inline]
+    pub fn epsilon(&self) -> f64 {
+        self.core.epsilon()
+    }
+
+    /// Current size of the compressed list `C`, sentinels included (the
+    /// quantity plotted in Figure 2 bottom).
+    #[inline]
+    pub fn compressed_len(&self) -> usize {
+        self.core.compressed_len()
+    }
+
+    /// Positive / negative totals (exposed for experiment drivers).
+    pub fn class_totals(&self) -> (u64, u64) {
+        self.core.class_totals()
+    }
+
+    /// Exact AUC via `O(k)` enumeration of the support tree. Used by the
+    /// error-measurement experiments so approx and exact share one window.
+    pub fn exact_auc(&self) -> f64 {
+        self.core.exact_auc(&self.ars)
+    }
+
+    /// The running doubled-area accumulator behind the `O(1)`
+    /// [`ApproxAuc::auc`] read. Exposed for the bit-equality property
+    /// tests and the bench's cached-vs-scan comparison.
+    #[inline]
+    pub fn doubled_area(&self) -> u128 {
+        self.core.doubled_area()
+    }
+
+    /// The doubled-area accumulator recomputed from scratch by the
+    /// Algorithm 4 scan over `C` — `O(|C|)`. This is the reference the
+    /// running accumulator must equal bit-for-bit after every
+    /// operation (`rust/tests/differential.rs`,
+    /// [`ApproxAuc::check_invariants`]); it is also the read path every
+    /// call to [`ApproxAuc::auc`] used before the accumulator existed,
+    /// retained for the `benches/core.rs` speedup measurement.
+    pub fn doubled_area_scan(&self) -> u128 {
+        self.core.doubled_area_scan(&self.ars)
+    }
+
+    /// The estimate read via the full `O(|C|)` scan instead of the
+    /// cached accumulator. Bit-identical to [`ApproxAuc::auc`]; kept as
+    /// the reference/benchmark read path.
+    pub fn auc_full_scan(&self) -> f64 {
+        self.core.auc_full_scan(&self.ars)
+    }
+
+    /// Release retained arena capacity (freed slots at the slab tails)
+    /// without touching live state. Called automatically when the
+    /// window drains to empty; exposed for explicit trimming after a
+    /// churn spike.
+    pub fn shrink_to_fit(&mut self) {
+        self.ars.shrink_to_fit();
+    }
+
+    /// Total slots retained across the four backing arenas (live +
+    /// reusable) — the capacity measure the shrink hooks act on.
+    pub fn capacity(&self) -> usize {
+        self.ars.t.slot_count()
+            + self.ars.tp.slot_count()
+            + self.ars.p.cells.slot_count()
+            + self.ars.c.cells.slot_count()
+    }
+
+    /// Validate the §4 invariants on `C` (tests / property harness):
+    /// coverage, ordering, Eq. 3, Eq. 4, and gap counters against brute
+    /// force. Panics on violation.
+    pub fn check_invariants(&self) {
+        self.core.check_invariants(&self.ars);
     }
 }
 
 impl AucEstimator for ApproxAuc {
     fn insert(&mut self, score: f64, pos: bool) {
-        let s = Score(super::canon(score));
-        assert!(s.is_valid_entry(), "scores must be finite");
-        if pos {
-            self.add_pos(s);
-        } else {
-            self.add_neg(s);
-        }
+        self.core.insert_in(&mut self.ars, score, pos);
     }
 
     fn remove(&mut self, score: f64, pos: bool) {
-        let s = Score(super::canon(score));
-        if pos {
-            self.remove_pos(s);
-        } else {
-            self.remove_neg(s);
+        self.core.remove_in(&mut self.ars, score, pos);
+        if self.core.len() == 0 {
+            // Drained windows shed their churn slack so idle standalone
+            // estimators never pin peak capacity (`DESIGN.md` §Memory).
+            self.ars.shrink_to_fit();
         }
     }
 
@@ -434,11 +621,11 @@ impl AucEstimator for ApproxAuc {
     /// (bit-identical — see [`ApproxAuc::doubled_area_scan`]). No cell
     /// iteration happens on this path.
     fn auc(&self) -> f64 {
-        finish_auc(self.a2, self.sup.total_pos(), self.sup.total_neg())
+        self.core.auc()
     }
 
     fn len(&self) -> usize {
-        self.sup.len()
+        self.core.len()
     }
 }
 
@@ -692,6 +879,87 @@ mod tests {
             assert!(e.is_empty(), "round {round}");
             e.check_invariants();
             assert_eq!(e.compressed_len(), 2);
+        }
+    }
+
+    #[test]
+    fn drained_estimator_sheds_capacity() {
+        let mut e = ApproxAuc::new(0.1);
+        let mut rng = Pcg::seed(0x5123);
+        let mut live: Vec<(f64, bool)> = Vec::new();
+        for _ in 0..2000 {
+            let pair = (rng.uniform(), rng.chance(0.5));
+            e.insert(pair.0, pair.1);
+            live.push(pair);
+        }
+        let peak = e.capacity();
+        assert!(peak > 1000, "peak capacity should reflect the fill: {peak}");
+        rng.shuffle(&mut live);
+        for (s, p) in live {
+            e.remove(s, p);
+        }
+        // The empty-window hook trims the slack down to the sentinels.
+        assert!(
+            e.capacity() <= 8,
+            "drained estimator retains {} slots (peak {peak})",
+            e.capacity()
+        );
+        e.check_invariants();
+        // And the estimator is fully usable afterwards.
+        e.insert(0.25, true);
+        e.insert(0.75, false);
+        assert_eq!(e.auc(), 1.0);
+        e.check_invariants();
+    }
+
+    #[test]
+    fn rebuild_reproduces_frozen_state_bit_for_bit() {
+        // The hibernation contract at unit scale: replay the window
+        // content through a fresh support core, rebuild C from the
+        // stored finite keys, and every observable — auc bits, a2,
+        // |C|, invariants — matches the live twin. Integration-scale
+        // version (through the fleet API) lives in tests/differential.rs.
+        for eps in [0.0, 0.05, 0.3] {
+            check(0xF207 ^ (eps * 1e3) as u64, 6, |rng| {
+                let grid = if rng.chance(0.5) { Some(4 + rng.below(10)) } else { None };
+                let ops = gen_ops(rng, 300, 60, grid);
+                let mut live = ApproxAuc::new(eps);
+                let mut window: Vec<(f64, bool)> = Vec::new();
+                for op in &ops {
+                    match *op {
+                        Op::Insert { score, pos } => {
+                            live.insert(score, pos);
+                            window.push((score, pos));
+                        }
+                        Op::Remove { score, pos } => {
+                            live.remove(score, pos);
+                            let at = window
+                                .iter()
+                                .position(|&(s, p)| s == score && p == pos)
+                                .expect("removal of live entry");
+                            window.remove(at);
+                        }
+                    }
+                }
+                // Freeze: the compact representation of the live core.
+                let keys = live.core.compressed_keys(&live.ars);
+                // Thaw into a fresh bundle: replay content, rebuild C.
+                let mut ars = EstimatorArenas::default();
+                let mut thawed = ApproxCore::new_in(&mut ars, eps);
+                for &(score, pos) in &window {
+                    let s = Score(crate::coordinator::canon(score));
+                    if pos {
+                        thawed.sup.add_pos(&mut ars, s);
+                    } else {
+                        thawed.sup.add_neg(&mut ars, s);
+                    }
+                }
+                thawed.rebuild_in(&mut ars, &keys);
+                thawed.check_invariants(&ars);
+                assert_eq!(thawed.auc().to_bits(), live.auc().to_bits(), "auc bits");
+                assert_eq!(thawed.doubled_area(), live.doubled_area(), "a2");
+                assert_eq!(thawed.compressed_len(), live.compressed_len(), "|C|");
+            });
         }
     }
 

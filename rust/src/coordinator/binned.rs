@@ -101,6 +101,14 @@ impl BinnedAuc {
         self.pos.len()
     }
 
+    /// Bytes held by the two count arrays: `2·bins·4`, independent of
+    /// the window size `k` and of allocation history — the figure the
+    /// fleet's per-stream footprint accounting reports for this
+    /// estimator.
+    pub fn footprint_bytes(&self) -> usize {
+        (self.pos.len() + self.neg.len()) * std::mem::size_of::<u32>()
+    }
+
     /// The declared score range `(lo, hi)`.
     pub fn range(&self) -> (f64, f64) {
         (self.lo, self.hi)

@@ -28,6 +28,14 @@
 //! Eq. 1 scan — **bit-identical**, asserted after every op by the
 //! differential suite and [`MaintainedExactAuc::check_invariants`].
 //!
+//! Like the other estimators, this one comes as a storage-free
+//! [`MaintainedCore`] (nodes in a caller-supplied [`EstimatorArenas`];
+//! only the `t` slab is used) and a self-contained
+//! [`MaintainedExactAuc`] wrapper. Because `a2` always equals the
+//! content-determined Eq. 1 scan, rehydrating a hibernated stream is
+//! just replaying its window content — no extra frozen state is needed
+//! (contrast [`super::approx::ApproxCore::rebuild_in`]).
+//!
 //! The same tree yields the exact H-measure (Hand 2009; maintained
 //! exactly over time in the same paper) via
 //! [`MaintainedExactAuc::h_measure`] — an `O(k)` read over the score
@@ -35,57 +43,85 @@
 //! is future work, `DESIGN.md` §Estimators).
 
 use super::metrics::h_measure;
-use super::support::{Acc, Counts};
+use super::support::{Acc, Counts, EstimatorArenas};
 use super::{auc_terms_doubled, finish_auc, AucEstimator};
-use crate::collections::{RbTree, Score};
+use crate::collections::rbtree::RbTreeCore;
+use crate::collections::Score;
 
-/// Exact estimator with an O(log k) update and an O(1) AUC read.
-///
-/// Same augmented tree as [`super::ExactAuc`] (so the `benches/core.rs`
-/// three-way row isolates the read-path difference), plus the running
-/// doubled-area accumulator that replaces the per-read Eq. 1 scan.
-#[derive(Clone, Debug, Default)]
-pub struct MaintainedExactAuc {
-    t: RbTree<Counts, Acc>,
+/// Storage-free form of the maintained exact estimator: a tree root
+/// plus three scalars, nodes in the bundle's `t` arena.
+#[derive(Clone, Copy, Debug)]
+pub(crate) struct MaintainedCore {
+    t: RbTreeCore,
     /// Running doubled area: at every op boundary bit-equal to the
-    /// retained scan ([`MaintainedExactAuc::doubled_area_scan`]).
+    /// retained scan ([`MaintainedCore::doubled_area_scan`]).
     a2: u128,
     total_pos: u64,
     total_neg: u64,
 }
 
-impl MaintainedExactAuc {
-    /// Empty estimator.
-    pub fn new() -> Self {
-        Self::default()
+impl Default for MaintainedCore {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl MaintainedCore {
+    /// Empty estimator (allocates nothing — no sentinels in this tree).
+    pub(crate) fn new() -> Self {
+        MaintainedCore { t: RbTreeCore::new(), a2: 0, total_pos: 0, total_neg: 0 }
     }
 
-    /// Number of distinct scores currently held (tree nodes) — the
-    /// exact-path analogue of `ApproxAuc::compressed_len` for footprint
-    /// reporting.
-    pub fn distinct_scores(&self) -> usize {
+    /// Release every node back to the arena (`O(k)`). The core must not
+    /// be used afterwards.
+    pub(crate) fn free_in(&mut self, ars: &mut EstimatorArenas) {
+        self.t.drain(&mut ars.t);
+        self.a2 = 0;
+        self.total_pos = 0;
+        self.total_neg = 0;
+    }
+
+    /// Number of distinct scores currently held (tree nodes).
+    #[inline]
+    pub(crate) fn distinct_scores(&self) -> usize {
         self.t.len()
     }
 
-    /// Positive / negative totals (exposed for experiment drivers).
-    pub fn class_totals(&self) -> (u64, u64) {
+    /// Logical bytes of arena storage the score tree occupies (live
+    /// node count × slot size; never arena capacity).
+    pub(crate) fn live_bytes(&self) -> usize {
+        use crate::collections::rbtree::Node;
+        self.t.len() * std::mem::size_of::<Node<Counts, Acc>>()
+    }
+
+    /// Positive / negative totals.
+    #[inline]
+    pub(crate) fn class_totals(&self) -> (u64, u64) {
         (self.total_pos, self.total_neg)
     }
 
     /// The running doubled-area accumulator behind the O(1) read.
-    /// Exposed for the bit-equality property tests.
     #[inline]
-    pub fn doubled_area(&self) -> u128 {
+    pub(crate) fn doubled_area(&self) -> u128 {
         self.a2
     }
 
+    /// Window size (all entries).
+    #[inline]
+    pub(crate) fn len(&self) -> usize {
+        (self.total_pos + self.total_neg) as usize
+    }
+
+    /// O(1) read: the running accumulator over the stored totals.
+    #[inline]
+    pub(crate) fn auc(&self) -> f64 {
+        finish_auc(self.a2, self.total_pos, self.total_neg)
+    }
+
     /// The doubled area recomputed by the full Eq. 1 tree scan — `O(k)`.
-    /// This is the read path `ExactAuc` pays on every query, retained
-    /// here as the reference the running accumulator must equal
-    /// bit-for-bit after every operation.
-    pub fn doubled_area_scan(&self) -> u128 {
-        let groups = self.t.iter().map(|id| {
-            let c = self.t.val(id);
+    pub(crate) fn doubled_area_scan(&self, ars: &EstimatorArenas) -> u128 {
+        let groups = self.t.iter_in(&ars.t).map(|id| {
+            let c = self.t.val(&ars.t, id);
             (c.p, c.n)
         });
         let (a2, pos, neg) = auc_terms_doubled(groups);
@@ -95,42 +131,40 @@ impl MaintainedExactAuc {
     }
 
     /// The estimate read via the full scan instead of the accumulator.
-    /// Bit-identical to [`AucEstimator::auc`]; kept as the
-    /// reference/benchmark read path.
-    pub fn auc_full_scan(&self) -> f64 {
-        finish_auc(self.doubled_area_scan(), self.total_pos, self.total_neg)
+    pub(crate) fn auc_full_scan(&self, ars: &EstimatorArenas) -> f64 {
+        finish_auc(self.doubled_area_scan(ars), self.total_pos, self.total_neg)
     }
 
     /// `(hp, hn)`: positives / negatives strictly below `s`, from one
     /// O(log k) descent over the augmented subtree sums.
-    fn head_stats(&self, s: Score) -> (u64, u64) {
+    fn head_stats(&self, ars: &EstimatorArenas, s: Score) -> (u64, u64) {
         let mut hp = 0;
         let mut hn = 0;
         let mut cur = self.t.root();
         while let Some(v) = cur {
-            if self.t.key(v) < s {
-                let c = self.t.val(v);
+            if self.t.key(&ars.t, v) < s {
+                let c = self.t.val(&ars.t, v);
                 hp += c.p;
                 hn += c.n;
-                if let Some(l) = self.t.left(v) {
-                    let a = self.t.aug(l);
+                if let Some(l) = self.t.left(&ars.t, v) {
+                    let a = self.t.aug(&ars.t, l);
                     hp += a.pos;
                     hn += a.neg;
                 }
-                cur = self.t.right(v);
+                cur = self.t.right(&ars.t, v);
             } else {
-                cur = self.t.left(v);
+                cur = self.t.left(&ars.t, v);
             }
         }
         (hp, hn)
     }
 
-    fn update(&mut self, score: f64, pos: bool, add: bool) {
+    fn update(&mut self, ars: &mut EstimatorArenas, score: f64, pos: bool, add: bool) {
         let s = Score(super::canon(score));
         assert!(s.is_valid_entry(), "scores must be finite");
         // Everything the delta needs is read before the tree mutates.
-        let (hp, hn) = self.head_stats(s);
-        let at_s = self.t.find(s).map_or(Counts { p: 0, n: 0 }, |v| *self.t.val(v));
+        let (hp, hn) = self.head_stats(ars, s);
+        let at_s = self.t.find(&ars.t, s).map_or(Counts { p: 0, n: 0 }, |v| *self.t.val(&ars.t, v));
         let delta = if pos {
             // The moved positive gains/loses 2 per negative strictly
             // above s and 1 per negative tied at s:
@@ -143,9 +177,9 @@ impl MaintainedExactAuc {
         };
         if add {
             let init = if pos { Counts { p: 1, n: 0 } } else { Counts { p: 0, n: 1 } };
-            let (v, fresh) = self.t.insert(s, || init);
+            let (v, fresh) = self.t.insert(&mut ars.t, s, || init);
             if !fresh {
-                self.t.with_val_mut(v, |c| if pos { c.p += 1 } else { c.n += 1 });
+                self.t.with_val_mut(&mut ars.t, v, |c| if pos { c.p += 1 } else { c.n += 1 });
             }
             self.a2 = self
                 .a2
@@ -157,15 +191,15 @@ impl MaintainedExactAuc {
                 self.total_neg += 1;
             }
         } else {
-            let v = self.t.find(s).expect("maintained exact remove: score not present");
+            let v = self.t.find(&ars.t, s).expect("maintained exact remove: score not present");
             if pos {
                 assert!(at_s.p > 0, "maintained exact remove: no positive at this score");
             } else {
                 assert!(at_s.n > 0, "maintained exact remove: no negative at this score");
             }
-            self.t.with_val_mut(v, |c| if pos { c.p -= 1 } else { c.n -= 1 });
+            self.t.with_val_mut(&mut ars.t, v, |c| if pos { c.p -= 1 } else { c.n -= 1 });
             if at_s.p + at_s.n == 1 {
-                self.t.remove(v);
+                self.t.remove(&mut ars.t, v);
             }
             self.a2 = self
                 .a2
@@ -185,12 +219,24 @@ impl MaintainedExactAuc {
         }
     }
 
+    /// Insert one labelled entry ([`AucEstimator::insert`] semantics).
+    #[inline]
+    pub(crate) fn insert_in(&mut self, ars: &mut EstimatorArenas, score: f64, pos: bool) {
+        self.update(ars, score, pos, true);
+    }
+
+    /// Remove one labelled entry ([`AucEstimator::remove`] semantics).
+    #[inline]
+    pub(crate) fn remove_in(&mut self, ars: &mut EstimatorArenas, score: f64, pos: bool) {
+        self.update(ars, score, pos, false);
+    }
+
     /// Exact H-measure (Hand 2009) of the current window under the
     /// Beta(2,2) cost prior — an `O(k)` read over the tree's score
     /// groups ([`h_measure`]). Returns 0 when either class is empty.
-    pub fn h_measure(&self) -> f64 {
-        h_measure(self.t.iter().map(|id| {
-            let c = self.t.val(id);
+    pub(crate) fn h_measure(&self, ars: &EstimatorArenas) -> f64 {
+        h_measure(self.t.iter_in(&ars.t).map(|id| {
+            let c = self.t.val(&ars.t, id);
             (c.p, c.n)
         }))
     }
@@ -198,12 +244,12 @@ impl MaintainedExactAuc {
     /// Validate the tree invariants, the stored class totals and the
     /// accumulator's bit-equality with the Eq. 1 scan. Panics on
     /// violation (tests / property harness).
-    pub fn check_invariants(&self) {
-        self.t.check_invariants();
+    pub(crate) fn check_invariants(&self, ars: &EstimatorArenas) {
+        self.t.check_invariants(&ars.t);
         let mut pos = 0;
         let mut neg = 0;
-        for id in self.t.iter() {
-            let c = self.t.val(id);
+        for id in self.t.iter_in(&ars.t) {
+            let c = self.t.val(&ars.t, id);
             assert!(c.p + c.n > 0, "maintained exact: empty node survived");
             pos += c.p;
             neg += c.n;
@@ -214,30 +260,114 @@ impl MaintainedExactAuc {
         // the headline invariant — the O(1) read never drifts.
         assert_eq!(
             self.a2,
-            self.doubled_area_scan(),
+            self.doubled_area_scan(ars),
             "maintained exact: incremental a2 drifted from the full scan"
         );
     }
 }
 
+/// Exact estimator with an O(log k) update and an O(1) AUC read.
+///
+/// Same augmented tree as [`super::ExactAuc`] (so the `benches/core.rs`
+/// three-way row isolates the read-path difference), plus the running
+/// doubled-area accumulator that replaces the per-read Eq. 1 scan.
+/// Self-contained form with private arenas; the fleet uses
+/// [`MaintainedCore`] against shard-owned arenas.
+#[derive(Clone, Debug, Default)]
+pub struct MaintainedExactAuc {
+    ars: EstimatorArenas,
+    core: MaintainedCore,
+}
+
+impl MaintainedExactAuc {
+    /// Empty estimator.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Number of distinct scores currently held (tree nodes) — the
+    /// exact-path analogue of `ApproxAuc::compressed_len` for footprint
+    /// reporting.
+    pub fn distinct_scores(&self) -> usize {
+        self.core.distinct_scores()
+    }
+
+    /// Positive / negative totals (exposed for experiment drivers).
+    pub fn class_totals(&self) -> (u64, u64) {
+        self.core.class_totals()
+    }
+
+    /// The running doubled-area accumulator behind the O(1) read.
+    /// Exposed for the bit-equality property tests.
+    #[inline]
+    pub fn doubled_area(&self) -> u128 {
+        self.core.doubled_area()
+    }
+
+    /// The doubled area recomputed by the full Eq. 1 tree scan — `O(k)`.
+    /// This is the read path `ExactAuc` pays on every query, retained
+    /// here as the reference the running accumulator must equal
+    /// bit-for-bit after every operation.
+    pub fn doubled_area_scan(&self) -> u128 {
+        self.core.doubled_area_scan(&self.ars)
+    }
+
+    /// The estimate read via the full scan instead of the accumulator.
+    /// Bit-identical to [`AucEstimator::auc`]; kept as the
+    /// reference/benchmark read path.
+    pub fn auc_full_scan(&self) -> f64 {
+        self.core.auc_full_scan(&self.ars)
+    }
+
+    /// Exact H-measure (Hand 2009) of the current window under the
+    /// Beta(2,2) cost prior — an `O(k)` read over the tree's score
+    /// groups ([`h_measure`]). Returns 0 when either class is empty.
+    pub fn h_measure(&self) -> f64 {
+        self.core.h_measure(&self.ars)
+    }
+
+    /// Release retained arena capacity. Called automatically when the
+    /// window drains to empty; exposed for explicit trimming.
+    pub fn shrink_to_fit(&mut self) {
+        self.ars.shrink_to_fit();
+    }
+
+    /// Total slots retained by the backing arena (live + reusable).
+    pub fn capacity(&self) -> usize {
+        self.ars.t.slot_count()
+    }
+
+    /// Validate the tree invariants, the stored class totals and the
+    /// accumulator's bit-equality with the Eq. 1 scan. Panics on
+    /// violation (tests / property harness).
+    pub fn check_invariants(&self) {
+        self.core.check_invariants(&self.ars);
+    }
+}
+
 impl AucEstimator for MaintainedExactAuc {
     fn insert(&mut self, score: f64, pos: bool) {
-        self.update(score, pos, true);
+        self.core.insert_in(&mut self.ars, score, pos);
     }
 
     fn remove(&mut self, score: f64, pos: bool) {
-        self.update(score, pos, false);
+        self.core.remove_in(&mut self.ars, score, pos);
+        if self.core.len() == 0 {
+            // Drained windows shed their churn slack (`DESIGN.md`
+            // §Memory).
+            self.ars.shrink_to_fit();
+        }
     }
 
     /// O(1): the running accumulator over the stored totals — the same
     /// `finish_auc` division the Eq. 1 scan ends with, so the result is
     /// bit-identical to [`super::ExactAuc`]'s O(k) read.
     fn auc(&self) -> f64 {
-        finish_auc(self.a2, self.total_pos, self.total_neg)
+        self.core.auc()
     }
 
     fn len(&self) -> usize {
-        (self.total_pos + self.total_neg) as usize
+        self.core.len()
     }
 }
 
@@ -335,6 +465,22 @@ mod tests {
         assert_eq!(e.auc(), 0.5);
         assert!(e.h_measure().abs() < 1e-12, "h = {}", e.h_measure());
         e.check_invariants();
+    }
+
+    #[test]
+    fn drained_estimator_sheds_capacity() {
+        let mut e = MaintainedExactAuc::new();
+        for i in 0..500 {
+            e.insert(f64::from(i), i % 2 == 0);
+        }
+        assert!(e.capacity() >= 500);
+        for i in 0..500 {
+            e.remove(f64::from(i), i % 2 == 0);
+        }
+        assert_eq!(e.capacity(), 0, "drained estimator retains slots");
+        e.check_invariants();
+        e.insert(0.5, true);
+        assert_eq!(e.len(), 1);
     }
 
     #[test]

@@ -1,6 +1,6 @@
 //! Supporting data structures for estimating AUC (paper §3).
 //!
-//! [`SupportTree`] bundles the three §3 structures and their maintenance:
+//! [`SupportCore`] bundles the three §3 structures and their maintenance:
 //!
 //! * `T` — augmented red-black tree over distinct scores with per-node
 //!   counters `p(v)`, `n(v)` and subtree sums `accpos(v)`, `accneg(v)`;
@@ -12,17 +12,27 @@
 //! Both `T` and the lists carry the `±∞` sentinel nodes of §3.1, so every
 //! query has a well-defined predecessor.
 //!
+//! Like the collections underneath, the structure comes in two forms:
+//! the storage-free [`SupportCore`] whose nodes and cells live in an
+//! [`EstimatorArenas`] passed into every call (the fleet keeps one
+//! arena bundle per shard, shared by every stream in it), and the
+//! self-contained [`SupportTree`] wrapper bundling a core with private
+//! arenas for standalone use (`rust/DESIGN.md` §Memory).
+//!
 //! Two places fix small gaps in the paper's pseudo-code (behaviour is
 //! unchanged for unique scores, which is the paper's implicit setting):
 //!
 //! 1. Algorithm 3 line 8 passes `1` for the positive-gap split; with
 //!    duplicate scores the positives in `[s(w), s(v))` amount to `p(w)`,
-//!    which is what [`SupportTree::add_pos`] uses (computed from
+//!    which is what [`SupportCore::add_pos`] uses (computed from
 //!    `HeadStats` and asserted equal to `p(w)` in debug builds).
 //! 2. Algorithm 3 only shows the new-node path; when the score already
 //!    exists as a positive node, `gp(v; P)` must still be increased.
 
-use crate::collections::{Augment, CellId, NodeId, RbTree, Score, WeightedList};
+use crate::collections::arena::Arena;
+use crate::collections::rbtree::{Node, RbTreeCore};
+use crate::collections::weighted_list::{CellArena, Cells, ListCore};
+use crate::collections::{Augment, CellId, NodeId, Score};
 
 /// Per-node label counters (paper §3.1): `p(v)` positives and `n(v)`
 /// negatives sharing the node's score.
@@ -53,19 +63,435 @@ impl Augment<Counts> for Acc {
     }
 }
 
-/// The bundled §3 structure (`T`, `TP`, `P`); see module docs.
-#[derive(Clone, Debug)]
-pub struct SupportTree {
+/// The four backing slabs every ε-sketch / exact estimator allocates
+/// from: `T` nodes, `TP` nodes, `P` cells and `C` cells. One bundle is
+/// shared by **many** streams (the fleet owns one per shard); a
+/// standalone estimator owns a private bundle. Per-role arenas keep the
+/// `node → cell` membership maps collision-free: a tree node belongs to
+/// exactly one stream, and each list role gets its own map.
+#[derive(Clone, Debug, Default)]
+pub(crate) struct EstimatorArenas {
+    /// `T` nodes (also used by the maintained-exact estimator, which is
+    /// a `T`-only core).
+    pub(crate) t: Arena<Node<Counts, Acc>>,
+    /// `TP` nodes.
+    pub(crate) tp: Arena<Node<NodeId, ()>>,
+    /// `P` cells.
+    pub(crate) p: CellArena,
+    /// `C` cells.
+    pub(crate) c: CellArena,
+}
+
+impl EstimatorArenas {
+    /// Logical bytes of all live nodes and cells (content-determined —
+    /// safe to surface in snapshots and wire digests; see
+    /// [`Arena::live_bytes`]).
+    pub(crate) fn live_bytes(&self) -> usize {
+        self.t.live_bytes() + self.tp.live_bytes() + self.p.live_bytes() + self.c.live_bytes()
+    }
+
+    /// Drop all storage. Every core allocating from the bundle must
+    /// have been freed first ([`Arena::reset`] asserts it) — the
+    /// bulk-release hook for a shard whose last live stream froze.
+    pub(crate) fn reset(&mut self) {
+        self.t.reset();
+        self.tp.reset();
+        self.p.reset();
+        self.c.reset();
+    }
+
+    /// Release retained capacity without disturbing live slots.
+    pub(crate) fn shrink_to_fit(&mut self) {
+        self.t.shrink_to_fit();
+        self.tp.shrink_to_fit();
+        self.p.shrink_to_fit();
+        self.c.shrink_to_fit();
+    }
+}
+
+/// Storage-free form of the bundled §3 structure: tree roots, list
+/// heads and the class totals — a few dozen bytes per stream, with all
+/// nodes and cells in a shared [`EstimatorArenas`]. The same-arena rule
+/// applies: every call must receive the bundle the core was built in.
+#[derive(Clone, Copy, Debug)]
+pub(crate) struct SupportCore {
     /// `T`: all distinct scores in the window (+ sentinels).
-    t: RbTree<Counts, Acc>,
+    pub(crate) t: RbTreeCore,
     /// `TP`: scores of positive nodes (+ sentinels) → node in `T`.
-    tp: RbTree<NodeId, ()>,
+    tp: RbTreeCore,
     /// `P`: weighted linked list over positive nodes (+ sentinels).
-    p: WeightedList,
+    pub(crate) p: ListCore,
     neg_sentinel: NodeId,
     pos_sentinel: NodeId,
     total_pos: u64,
     total_neg: u64,
+}
+
+impl SupportCore {
+    /// Fresh structure holding only the two sentinels, allocated from
+    /// `ars`.
+    pub(crate) fn new_in(ars: &mut EstimatorArenas) -> Self {
+        let mut t = RbTreeCore::new();
+        let (lo, _) = t.insert(&mut ars.t, Score::NEG_SENTINEL, Counts::default);
+        let (hi, _) = t.insert(&mut ars.t, Score::POS_SENTINEL, Counts::default);
+        let mut tp = RbTreeCore::new();
+        tp.insert(&mut ars.tp, Score::NEG_SENTINEL, || lo);
+        tp.insert(&mut ars.tp, Score::POS_SENTINEL, || hi);
+        let mut p = ListCore::new();
+        p.push_back(&mut ars.p, lo, f64::NEG_INFINITY, 0, 0);
+        p.push_back(&mut ars.p, hi, f64::INFINITY, 0, 0);
+        SupportCore { t, tp, p, neg_sentinel: lo, pos_sentinel: hi, total_pos: 0, total_neg: 0 }
+    }
+
+    /// Release every node and cell back to the arenas (`O(k)`, no
+    /// rebalancing). The core must not be used afterwards.
+    pub(crate) fn free_in(&mut self, ars: &mut EstimatorArenas) {
+        self.t.drain(&mut ars.t);
+        self.tp.drain(&mut ars.tp);
+        self.p.drain(&mut ars.p);
+        self.total_pos = 0;
+        self.total_neg = 0;
+    }
+
+    /// Total positive labels in the window.
+    #[inline]
+    pub(crate) fn total_pos(&self) -> u64 {
+        self.total_pos
+    }
+
+    /// Total negative labels in the window.
+    #[inline]
+    pub(crate) fn total_neg(&self) -> u64 {
+        self.total_neg
+    }
+
+    /// Window size `k` (all entries).
+    #[inline]
+    pub(crate) fn len(&self) -> usize {
+        (self.total_pos + self.total_neg) as usize
+    }
+
+    /// True when the window holds no entries (sentinels don't count).
+    #[inline]
+    pub(crate) fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Number of distinct-score nodes in `T`, sentinels included.
+    #[inline]
+    pub(crate) fn t_len(&self) -> usize {
+        self.t.len()
+    }
+
+    /// Logical bytes this structure's nodes occupy in the shared arenas:
+    /// live node/cell counts times slot sizes. Deliberately *not* the
+    /// arena capacity — capacity is allocation-history-dependent and
+    /// would make per-stream footprints (and everything derived from
+    /// them, e.g. served snapshots) depend on pool scheduling.
+    pub(crate) fn live_bytes(&self) -> usize {
+        use crate::collections::weighted_list::Cell;
+        use std::mem::size_of;
+        self.t.len() * size_of::<Node<Counts, Acc>>()
+            + self.tp.len() * size_of::<Node<NodeId, ()>>()
+            + self.p.len() * size_of::<Cell>()
+    }
+
+    /// The `−∞` sentinel node.
+    #[inline]
+    pub(crate) fn neg_sentinel(&self) -> NodeId {
+        self.neg_sentinel
+    }
+
+    /// The `+∞` sentinel node.
+    #[inline]
+    pub(crate) fn pos_sentinel(&self) -> NodeId {
+        self.pos_sentinel
+    }
+
+    /// Score of a `T` node.
+    #[inline]
+    pub(crate) fn score(&self, ars: &EstimatorArenas, v: NodeId) -> Score {
+        self.t.key(&ars.t, v)
+    }
+
+    /// Label counters of a `T` node.
+    #[inline]
+    pub(crate) fn counts(&self, ars: &EstimatorArenas, v: NodeId) -> Counts {
+        *self.t.val(&ars.t, v)
+    }
+
+    /// `MaxPos(s)` (paper §3.2): the positive node with the largest score
+    /// `≤ s`, falling back to the `−∞` sentinel. Also returns its `P`
+    /// cell. `O(log k)`.
+    pub(crate) fn max_pos(&self, ars: &EstimatorArenas, s: Score) -> (NodeId, CellId) {
+        let id = self.tp.floor(&ars.tp, s).expect("−∞ sentinel bounds every query");
+        let node = *self.tp.val(&ars.tp, id);
+        let cell = self.p.cell_of(&ars.p, node).expect("TP node must be in P");
+        (node, cell)
+    }
+
+    /// `HeadStats(s)` (Algorithm 1): cumulative counts
+    /// `hp = Σ_{s(v) < s} p(v)` and `hn = Σ_{s(v) < s} n(v)`, in
+    /// `O(log k)`. Generalised to not require a node with score `s`.
+    pub(crate) fn head_stats(&self, ars: &EstimatorArenas, s: Score) -> (u64, u64) {
+        let mut hp = 0;
+        let mut hn = 0;
+        let mut cur = self.t.root();
+        while let Some(v) = cur {
+            if self.t.key(&ars.t, v) < s {
+                let c = self.t.val(&ars.t, v);
+                hp += c.p;
+                hn += c.n;
+                if let Some(l) = self.t.left(&ars.t, v) {
+                    let a = self.t.aug(&ars.t, l);
+                    hp += a.pos;
+                    hn += a.neg;
+                }
+                cur = self.t.right(&ars.t, v);
+            } else {
+                cur = self.t.left(&ars.t, v);
+            }
+        }
+        (hp, hn)
+    }
+
+    /// `AddTreePos(s)` (Algorithm 3): insert a positive entry. Returns the
+    /// node holding the score. `O(log k)`.
+    pub(crate) fn add_pos(&mut self, ars: &mut EstimatorArenas, s: Score) -> NodeId {
+        debug_assert!(s.is_valid_entry(), "scores must be finite");
+        // w = MaxPos(s) *before* the insertion.
+        let (w, w_cell) = self.max_pos(ars, s);
+        let (v, fresh_in_t) = self.t.insert(&mut ars.t, s, || Counts { p: 1, n: 0 });
+        if !fresh_in_t {
+            self.t.with_val_mut(&mut ars.t, v, |c| c.p += 1);
+        }
+        self.total_pos += 1;
+        if w == v {
+            // Score already existed as a positive node: its own gap in P
+            // absorbs the new label (pseudo-code gap 2 in module docs).
+            self.p.add_gp(&mut ars.p, w_cell, 1);
+            self.p.add_cp(&mut ars.p, w_cell, 1);
+        } else if self.p.contains(&ars.p, v) {
+            // Unreachable: if v were positive before, MaxPos(s) == v.
+            unreachable!("positive node not returned by MaxPos");
+        } else {
+            // v is new to P (either a brand-new node, or an existing
+            // negative-only node turning positive). Account the new label
+            // in w's gap, then split the gap at v.
+            self.p.add_gp(&mut ars.p, w_cell, 1);
+            let w_key = self.t.key(&ars.t, w);
+            let (hp_w, hn_w) = self.head_stats(ars, w_key);
+            let (hp_v, hn_v) = self.head_stats(ars, s);
+            let p_wv = hp_v - hp_w;
+            let n_wv = hn_v - hn_w;
+            debug_assert_eq!(
+                p_wv,
+                self.t.val(&ars.t, w).p,
+                "positives in [w, v) must equal p(w) since w = MaxPos"
+            );
+            let cv = *self.t.val(&ars.t, v);
+            self.p.insert_after(&mut ars.p, w_cell, v, s.0, cv.p, cv.n, p_wv, n_wv);
+            self.tp.insert(&mut ars.tp, s, || v);
+        }
+        v
+    }
+
+    /// `AddTreeNeg(s)` (§3.3): insert a negative entry. Returns the node.
+    /// `O(log k)`.
+    pub(crate) fn add_neg(&mut self, ars: &mut EstimatorArenas, s: Score) -> NodeId {
+        debug_assert!(s.is_valid_entry(), "scores must be finite");
+        let (v, fresh) = self.t.insert(&mut ars.t, s, || Counts { p: 0, n: 1 });
+        if !fresh {
+            self.t.with_val_mut(&mut ars.t, v, |c| c.n += 1);
+        }
+        self.total_neg += 1;
+        let (_, u_cell) = self.max_pos(ars, s);
+        self.p.add_gn(&mut ars.p, u_cell, 1);
+        if self.p.key(&ars.p, u_cell) == s.0 {
+            self.p.add_cn(&mut ars.p, u_cell, 1);
+        }
+        v
+    }
+
+    /// `RemoveTreePos(s)` (Algorithm 2): remove one positive entry with
+    /// score `s` (must exist). `O(log k)`.
+    pub(crate) fn remove_pos(&mut self, ars: &mut EstimatorArenas, s: Score) {
+        let v = self.t.find(&ars.t, s).expect("remove_pos: score not present");
+        let c = *self.t.val(&ars.t, v);
+        assert!(c.p > 0, "remove_pos: node has no positive labels");
+        self.t.with_val_mut(&mut ars.t, v, |c| c.p -= 1);
+        self.total_pos -= 1;
+        let v_cell = self.p.cell_of(&ars.p, v).expect("positive node must be in P");
+        self.p.add_gp(&mut ars.p, v_cell, -1);
+        self.p.add_cp(&mut ars.p, v_cell, -1);
+        if c.p == 1 {
+            // v is no longer positive: leaves P and TP; its remaining gap
+            // (negatives between v and the next positive) folds into the
+            // predecessor's gap.
+            self.p.remove(&mut ars.p, v_cell);
+            let tp_id = self.tp.find(&ars.tp, s).expect("positive node must be in TP");
+            self.tp.remove(&mut ars.tp, tp_id);
+            if c.n == 0 {
+                self.t.remove(&mut ars.t, v);
+            }
+        }
+    }
+
+    /// `RemoveTreeNeg(s)` (§3.3): remove one negative entry with score `s`
+    /// (must exist). `O(log k)`.
+    pub(crate) fn remove_neg(&mut self, ars: &mut EstimatorArenas, s: Score) {
+        let v = self.t.find(&ars.t, s).expect("remove_neg: score not present");
+        let c = *self.t.val(&ars.t, v);
+        assert!(c.n > 0, "remove_neg: node has no negative labels");
+        self.t.with_val_mut(&mut ars.t, v, |c| c.n -= 1);
+        self.total_neg -= 1;
+        let (_, u_cell) = self.max_pos(ars, s);
+        self.p.add_gn(&mut ars.p, u_cell, -1);
+        if self.p.key(&ars.p, u_cell) == s.0 {
+            self.p.add_cn(&mut ars.p, u_cell, -1);
+        }
+        if c.n == 1 && c.p == 0 {
+            self.t.remove(&mut ars.t, v);
+        }
+    }
+
+    /// Exact AUC by full in-order enumeration of `T` (Eq. 1); `O(k)`. This
+    /// is the §5 baseline query (Brzezinski & Stefanowski recompute).
+    pub(crate) fn exact_auc(&self, ars: &EstimatorArenas) -> f64 {
+        let groups = self.t.iter_in(&ars.t).map(|id| {
+            let c = self.t.val(&ars.t, id);
+            (c.p, c.n)
+        });
+        let (a2, pos, neg) = super::auc_terms_doubled(groups);
+        debug_assert_eq!(pos, self.total_pos);
+        debug_assert_eq!(neg, self.total_neg);
+        super::finish_auc(a2, pos, neg)
+    }
+
+    /// Iterate `(score, p, n)` for all live non-sentinel nodes ascending.
+    pub(crate) fn groups<'a>(
+        &'a self,
+        ars: &'a EstimatorArenas,
+    ) -> impl Iterator<Item = (Score, u64, u64)> + 'a {
+        self.t.iter_in(&ars.t).filter_map(move |id| {
+            let k = self.t.key(&ars.t, id);
+            if k.is_sentinel() {
+                None
+            } else {
+                let c = self.t.val(&ars.t, id);
+                Some((k, c.p, c.n))
+            }
+        })
+    }
+
+    /// `MaxPos` computed from `T` alone by descending with `accpos` (no
+    /// `TP`). Used by the ablation bench (`benches/ops.rs`) to quantify
+    /// what the dedicated `TP` buys; also a cross-check in tests.
+    pub(crate) fn max_pos_via_t(&self, ars: &EstimatorArenas, s: Score) -> NodeId {
+        self.rightmost_pos(ars, self.t.root(), s).unwrap_or(self.neg_sentinel)
+    }
+
+    /// Rightmost node in `sub` with `key ≤ s` and `p > 0`, pruning
+    /// positive-free subtrees via `accpos`.
+    fn rightmost_pos(
+        &self,
+        ars: &EstimatorArenas,
+        sub: Option<NodeId>,
+        s: Score,
+    ) -> Option<NodeId> {
+        let v = sub?;
+        if self.t.aug(&ars.t, v).pos == 0 {
+            return None;
+        }
+        if self.t.key(&ars.t, v) > s {
+            return self.rightmost_pos(ars, self.t.left(&ars.t, v), s);
+        }
+        // key(v) ≤ s: everything in the right subtree is > key(v) but may
+        // exceed s; prefer it, then v itself, then the left subtree.
+        self.rightmost_pos(ars, self.t.right(&ars.t, v), s)
+            .or_else(|| if self.t.val(&ars.t, v).p > 0 { Some(v) } else { None })
+            .or_else(|| self.rightmost_pos(ars, self.t.left(&ars.t, v), s))
+    }
+
+    /// Validate every §3 invariant (tests / property harness). Panics with
+    /// a description on violation. `O(k)`.
+    pub(crate) fn check_invariants(&self, ars: &EstimatorArenas) {
+        self.t.check_invariants(&ars.t);
+        self.tp.check_invariants(&ars.tp);
+        // Totals match the root accumulators.
+        let root = self.t.root().expect("sentinels always present");
+        assert_eq!(self.t.aug(&ars.t, root).pos, self.total_pos, "accpos total");
+        assert_eq!(self.t.aug(&ars.t, root).neg, self.total_neg, "accneg total");
+        // Every positive node is in TP and P; TP/P contain nothing else
+        // beyond the sentinels.
+        let mut pos_nodes = 2; // sentinels
+        for id in self.t.iter_in(&ars.t) {
+            let k = self.t.key(&ars.t, id);
+            let c = self.t.val(&ars.t, id);
+            if k.is_sentinel() {
+                assert_eq!((c.p, c.n), (0, 0), "sentinel with labels");
+                continue;
+            }
+            assert!(c.p + c.n > 0, "empty node left in T");
+            if c.p > 0 {
+                pos_nodes += 1;
+                let tp = self.tp.find(&ars.tp, k).expect("positive node missing from TP");
+                assert_eq!(*self.tp.val(&ars.tp, tp), id, "TP maps to wrong T node");
+                assert!(self.p.contains(&ars.p, id), "positive node missing from P");
+            } else {
+                assert!(self.tp.find(&ars.tp, k).is_none(), "non-positive node in TP");
+                assert!(!self.p.contains(&ars.p, id), "non-positive node in P");
+            }
+        }
+        assert_eq!(self.tp.len(), pos_nodes, "TP size");
+        assert_eq!(self.p.len(), pos_nodes, "P size");
+        // P is score-ascending and its gap counters match brute force.
+        let cells: Vec<_> = self.p.iter_in(&ars.p).collect();
+        assert_eq!(self.p.node(&ars.p, cells[0]), self.neg_sentinel, "P head sentinel");
+        assert_eq!(
+            self.p.node(&ars.p, *cells.last().unwrap()),
+            self.pos_sentinel,
+            "P tail sentinel"
+        );
+        for w in cells.windows(2) {
+            let (a, b) = (w[0], w[1]);
+            let (sa, sb) = (
+                self.score(ars, self.p.node(&ars.p, a)),
+                self.score(ars, self.p.node(&ars.p, b)),
+            );
+            assert!(sa < sb, "P not score-ascending");
+            let (hp_a, hn_a) = self.head_stats(ars, sa);
+            let (hp_b, hn_b) = self.head_stats(ars, sb);
+            assert_eq!(self.p.gp(&ars.p, a), hp_b - hp_a, "gp(a;P) brute mismatch");
+            assert_eq!(self.p.gn(&ars.p, a), hn_b - hn_a, "gn(a;P) brute mismatch");
+            // In P specifically, gaps contain no other positive node.
+            assert_eq!(
+                self.p.gp(&ars.p, a),
+                self.t.val(&ars.t, self.p.node(&ars.p, a)).p,
+                "gp(a;P) ≠ p(a)"
+            );
+        }
+        // Cell caches (key, p, n) coherent with the tree.
+        for &c in &cells {
+            let node = self.p.node(&ars.p, c);
+            assert_eq!(self.p.key(&ars.p, c), self.score(ars, node).0, "P cache: stale key");
+            let cnt = self.t.val(&ars.t, node);
+            assert_eq!(self.p.cp(&ars.p, c), cnt.p, "P cache: stale p");
+            assert_eq!(self.p.cn(&ars.p, c), cnt.n, "P cache: stale n");
+        }
+        assert_eq!(self.p.total_gp(&ars.p), self.total_pos, "P covers all positives");
+        assert_eq!(self.p.total_gn(&ars.p), self.total_neg, "P covers all negatives");
+    }
+}
+
+/// The bundled §3 structure (`T`, `TP`, `P`) with its own private
+/// arenas — the self-contained form for standalone estimators, tests
+/// and benches. Delegates to a [`SupportCore`]; the fleet uses cores
+/// against shard-owned arenas.
+#[derive(Clone, Debug)]
+pub struct SupportTree {
+    ars: EstimatorArenas,
+    core: SupportCore,
 }
 
 impl Default for SupportTree {
@@ -77,323 +503,228 @@ impl Default for SupportTree {
 impl SupportTree {
     /// Fresh structure holding only the two sentinels.
     pub fn new() -> Self {
-        let mut t = RbTree::new();
-        let (lo, _) = t.insert(Score::NEG_SENTINEL, Counts::default);
-        let (hi, _) = t.insert(Score::POS_SENTINEL, Counts::default);
-        let mut tp = RbTree::new();
-        tp.insert(Score::NEG_SENTINEL, || lo);
-        tp.insert(Score::POS_SENTINEL, || hi);
-        let mut p = WeightedList::new();
-        p.push_back(lo, f64::NEG_INFINITY, 0, 0);
-        p.push_back(hi, f64::INFINITY, 0, 0);
-        SupportTree { t, tp, p, neg_sentinel: lo, pos_sentinel: hi, total_pos: 0, total_neg: 0 }
+        let mut ars = EstimatorArenas::default();
+        let core = SupportCore::new_in(&mut ars);
+        SupportTree { ars, core }
     }
 
     /// Total positive labels in the window.
     #[inline]
     pub fn total_pos(&self) -> u64 {
-        self.total_pos
+        self.core.total_pos()
     }
 
     /// Total negative labels in the window.
     #[inline]
     pub fn total_neg(&self) -> u64 {
-        self.total_neg
+        self.core.total_neg()
     }
 
     /// Window size `k` (all entries).
     #[inline]
     pub fn len(&self) -> usize {
-        (self.total_pos + self.total_neg) as usize
+        self.core.len()
     }
 
     /// True when the window holds no entries (sentinels don't count).
     #[inline]
     pub fn is_empty(&self) -> bool {
-        self.len() == 0
+        self.core.is_empty()
     }
 
     /// Number of distinct-score nodes in `T`, sentinels included.
     #[inline]
     pub fn t_len(&self) -> usize {
-        self.t.len()
+        self.core.t_len()
     }
 
     /// The `−∞` sentinel node.
     #[inline]
     pub fn neg_sentinel(&self) -> NodeId {
-        self.neg_sentinel
+        self.core.neg_sentinel()
     }
 
     /// The `+∞` sentinel node.
     #[inline]
     pub fn pos_sentinel(&self) -> NodeId {
-        self.pos_sentinel
+        self.core.pos_sentinel()
     }
 
     /// Score of a `T` node.
     #[inline]
     pub fn score(&self, v: NodeId) -> Score {
-        self.t.key(v)
+        self.core.score(&self.ars, v)
     }
 
     /// Label counters of a `T` node.
     #[inline]
     pub fn counts(&self, v: NodeId) -> Counts {
-        *self.t.val(v)
+        self.core.counts(&self.ars, v)
     }
 
-    /// The positive list `P` (read access for `AddNext` and checks).
+    /// Read-only view of the positive list `P` (for `AddNext`-style
+    /// consumers and checks).
     #[inline]
-    pub fn p_list(&self) -> &WeightedList {
-        &self.p
+    pub fn p_list(&self) -> PListView<'_> {
+        PListView { core: self.core.p, ar: &self.ars.p }
     }
 
     /// `MaxPos(s)` (paper §3.2): the positive node with the largest score
     /// `≤ s`, falling back to the `−∞` sentinel. Also returns its `P`
     /// cell. `O(log k)`.
     pub fn max_pos(&self, s: Score) -> (NodeId, CellId) {
-        let id = self.tp.floor(s).expect("−∞ sentinel bounds every query");
-        let node = *self.tp.val(id);
-        let cell = self.p.cell_of(node).expect("TP node must be in P");
-        (node, cell)
+        self.core.max_pos(&self.ars, s)
     }
 
-    /// `HeadStats(s)` (Algorithm 1): cumulative counts
-    /// `hp = Σ_{s(v) < s} p(v)` and `hn = Σ_{s(v) < s} n(v)`, in
-    /// `O(log k)`. Generalised to not require a node with score `s`.
+    /// `HeadStats(s)` (Algorithm 1): cumulative counts below `s` in
+    /// `O(log k)`.
     pub fn head_stats(&self, s: Score) -> (u64, u64) {
-        let mut hp = 0;
-        let mut hn = 0;
-        let mut cur = self.t.root();
-        while let Some(v) = cur {
-            if self.t.key(v) < s {
-                let c = self.t.val(v);
-                hp += c.p;
-                hn += c.n;
-                if let Some(l) = self.t.left(v) {
-                    let a = self.t.aug(l);
-                    hp += a.pos;
-                    hn += a.neg;
-                }
-                cur = self.t.right(v);
-            } else {
-                cur = self.t.left(v);
-            }
-        }
-        (hp, hn)
+        self.core.head_stats(&self.ars, s)
     }
 
     /// `AddTreePos(s)` (Algorithm 3): insert a positive entry. Returns the
     /// node holding the score. `O(log k)`.
     pub fn add_pos(&mut self, s: Score) -> NodeId {
-        debug_assert!(s.is_valid_entry(), "scores must be finite");
-        // w = MaxPos(s) *before* the insertion.
-        let (w, w_cell) = self.max_pos(s);
-        let (v, fresh_in_t) = self.t.insert(s, || Counts { p: 1, n: 0 });
-        if !fresh_in_t {
-            self.t.with_val_mut(v, |c| c.p += 1);
-        }
-        self.total_pos += 1;
-        if w == v {
-            // Score already existed as a positive node: its own gap in P
-            // absorbs the new label (pseudo-code gap 2 in module docs).
-            self.p.add_gp(w_cell, 1);
-            self.p.add_cp(w_cell, 1);
-        } else if self.p.contains(v) {
-            // Unreachable: if v were positive before, MaxPos(s) == v.
-            unreachable!("positive node not returned by MaxPos");
-        } else {
-            // v is new to P (either a brand-new node, or an existing
-            // negative-only node turning positive). Account the new label
-            // in w's gap, then split the gap at v.
-            self.p.add_gp(w_cell, 1);
-            let (hp_w, hn_w) = self.head_stats(self.t.key(w));
-            let (hp_v, hn_v) = self.head_stats(s);
-            let p_wv = hp_v - hp_w;
-            let n_wv = hn_v - hn_w;
-            debug_assert_eq!(
-                p_wv,
-                self.t.val(w).p,
-                "positives in [w, v) must equal p(w) since w = MaxPos"
-            );
-            let cv = *self.t.val(v);
-            self.p.insert_after(w_cell, v, s.0, cv.p, cv.n, p_wv, n_wv);
-            self.tp.insert(s, || v);
-        }
-        v
+        self.core.add_pos(&mut self.ars, s)
     }
 
     /// `AddTreeNeg(s)` (§3.3): insert a negative entry. Returns the node.
     /// `O(log k)`.
     pub fn add_neg(&mut self, s: Score) -> NodeId {
-        debug_assert!(s.is_valid_entry(), "scores must be finite");
-        let (v, fresh) = self.t.insert(s, || Counts { p: 0, n: 1 });
-        if !fresh {
-            self.t.with_val_mut(v, |c| c.n += 1);
-        }
-        self.total_neg += 1;
-        let (_, u_cell) = self.max_pos(s);
-        self.p.add_gn(u_cell, 1);
-        if self.p.key(u_cell) == s.0 {
-            self.p.add_cn(u_cell, 1);
-        }
-        v
+        self.core.add_neg(&mut self.ars, s)
     }
 
     /// `RemoveTreePos(s)` (Algorithm 2): remove one positive entry with
     /// score `s` (must exist). `O(log k)`.
     pub fn remove_pos(&mut self, s: Score) {
-        let v = self.t.find(s).expect("remove_pos: score not present");
-        let c = *self.t.val(v);
-        assert!(c.p > 0, "remove_pos: node has no positive labels");
-        self.t.with_val_mut(v, |c| c.p -= 1);
-        self.total_pos -= 1;
-        let v_cell = self.p.cell_of(v).expect("positive node must be in P");
-        self.p.add_gp(v_cell, -1);
-        self.p.add_cp(v_cell, -1);
-        if c.p == 1 {
-            // v is no longer positive: leaves P and TP; its remaining gap
-            // (negatives between v and the next positive) folds into the
-            // predecessor's gap.
-            self.p.remove(v_cell);
-            let tp_id = self.tp.find(s).expect("positive node must be in TP");
-            self.tp.remove(tp_id);
-            if c.n == 0 {
-                self.t.remove(v);
-            }
-        }
+        self.core.remove_pos(&mut self.ars, s);
     }
 
     /// `RemoveTreeNeg(s)` (§3.3): remove one negative entry with score `s`
     /// (must exist). `O(log k)`.
     pub fn remove_neg(&mut self, s: Score) {
-        let v = self.t.find(s).expect("remove_neg: score not present");
-        let c = *self.t.val(v);
-        assert!(c.n > 0, "remove_neg: node has no negative labels");
-        self.t.with_val_mut(v, |c| c.n -= 1);
-        self.total_neg -= 1;
-        let (_, u_cell) = self.max_pos(s);
-        self.p.add_gn(u_cell, -1);
-        if self.p.key(u_cell) == s.0 {
-            self.p.add_cn(u_cell, -1);
-        }
-        if c.n == 1 && c.p == 0 {
-            self.t.remove(v);
-        }
+        self.core.remove_neg(&mut self.ars, s);
     }
 
-    /// Exact AUC by full in-order enumeration of `T` (Eq. 1); `O(k)`. This
-    /// is the §5 baseline query (Brzezinski & Stefanowski recompute).
+    /// Exact AUC by full in-order enumeration of `T` (Eq. 1); `O(k)`.
     pub fn exact_auc(&self) -> f64 {
-        let groups = self.t.iter().map(|id| {
-            let c = self.t.val(id);
-            (c.p, c.n)
-        });
-        let (a2, pos, neg) = super::auc_terms_doubled(groups);
-        debug_assert_eq!(pos, self.total_pos);
-        debug_assert_eq!(neg, self.total_neg);
-        super::finish_auc(a2, pos, neg)
+        self.core.exact_auc(&self.ars)
     }
 
     /// Iterate `(score, p, n)` for all live non-sentinel nodes ascending.
     pub fn groups(&self) -> impl Iterator<Item = (Score, u64, u64)> + '_ {
-        self.t.iter().filter_map(move |id| {
-            let k = self.t.key(id);
-            if k.is_sentinel() {
-                None
-            } else {
-                let c = self.t.val(id);
-                Some((k, c.p, c.n))
-            }
-        })
+        self.core.groups(&self.ars)
     }
 
     /// `MaxPos` computed from `T` alone by descending with `accpos` (no
-    /// `TP`). Used by the ablation bench (`benches/ops.rs`) to quantify
-    /// what the dedicated `TP` buys; also a cross-check in tests.
+    /// `TP`). Ablation / cross-check path.
     pub fn max_pos_via_t(&self, s: Score) -> NodeId {
-        self.rightmost_pos(self.t.root(), s).unwrap_or(self.neg_sentinel)
-    }
-
-    /// Rightmost node in `sub` with `key ≤ s` and `p > 0`, pruning
-    /// positive-free subtrees via `accpos`.
-    fn rightmost_pos(&self, sub: Option<NodeId>, s: Score) -> Option<NodeId> {
-        let v = sub?;
-        if self.t.aug(v).pos == 0 {
-            return None;
-        }
-        if self.t.key(v) > s {
-            return self.rightmost_pos(self.t.left(v), s);
-        }
-        // key(v) ≤ s: everything in the right subtree is > key(v) but may
-        // exceed s; prefer it, then v itself, then the left subtree.
-        self.rightmost_pos(self.t.right(v), s)
-            .or_else(|| if self.t.val(v).p > 0 { Some(v) } else { None })
-            .or_else(|| self.rightmost_pos(self.t.left(v), s))
+        self.core.max_pos_via_t(&self.ars, s)
     }
 
     /// Validate every §3 invariant (tests / property harness). Panics with
     /// a description on violation. `O(k)`.
     pub fn check_invariants(&self) {
-        self.t.check_invariants();
-        self.tp.check_invariants();
-        // Totals match the root accumulators.
-        let root = self.t.root().expect("sentinels always present");
-        assert_eq!(self.t.aug(root).pos, self.total_pos, "accpos total");
-        assert_eq!(self.t.aug(root).neg, self.total_neg, "accneg total");
-        // Every positive node is in TP and P; TP/P contain nothing else
-        // beyond the sentinels.
-        let mut pos_nodes = 2; // sentinels
-        for id in self.t.iter() {
-            let k = self.t.key(id);
-            let c = self.t.val(id);
-            if k.is_sentinel() {
-                assert_eq!((c.p, c.n), (0, 0), "sentinel with labels");
-                continue;
-            }
-            assert!(c.p + c.n > 0, "empty node left in T");
-            if c.p > 0 {
-                pos_nodes += 1;
-                let tp = self.tp.find(k).expect("positive node missing from TP");
-                assert_eq!(*self.tp.val(tp), id, "TP maps to wrong T node");
-                assert!(self.p.contains(id), "positive node missing from P");
-            } else {
-                assert!(self.tp.find(k).is_none(), "non-positive node in TP");
-                assert!(!self.p.contains(id), "non-positive node in P");
-            }
-        }
-        assert_eq!(self.tp.len(), pos_nodes, "TP size");
-        assert_eq!(self.p.len(), pos_nodes, "P size");
-        // P is score-ascending and its gap counters match brute force.
-        let cells: Vec<_> = self.p.iter().collect();
-        assert_eq!(self.p.node(cells[0]), self.neg_sentinel, "P head sentinel");
-        assert_eq!(
-            self.p.node(*cells.last().unwrap()),
-            self.pos_sentinel,
-            "P tail sentinel"
-        );
-        for w in cells.windows(2) {
-            let (a, b) = (w[0], w[1]);
-            let (sa, sb) = (self.score(self.p.node(a)), self.score(self.p.node(b)));
-            assert!(sa < sb, "P not score-ascending");
-            let (hp_a, hn_a) = self.head_stats(sa);
-            let (hp_b, hn_b) = self.head_stats(sb);
-            assert_eq!(self.p.gp(a), hp_b - hp_a, "gp(a;P) brute mismatch");
-            assert_eq!(self.p.gn(a), hn_b - hn_a, "gn(a;P) brute mismatch");
-            // In P specifically, gaps contain no other positive node.
-            assert_eq!(self.p.gp(a), self.t.val(self.p.node(a)).p, "gp(a;P) ≠ p(a)");
-        }
-        // Cell caches (key, p, n) coherent with the tree.
-        for &c in &cells {
-            let node = self.p.node(c);
-            assert_eq!(self.p.key(c), self.score(node).0, "P cache: stale key");
-            let cnt = self.t.val(node);
-            assert_eq!(self.p.cp(c), cnt.p, "P cache: stale p");
-            assert_eq!(self.p.cn(c), cnt.n, "P cache: stale n");
-        }
-        assert_eq!(self.p.total_gp(), self.total_pos, "P covers all positives");
-        assert_eq!(self.p.total_gn(), self.total_neg, "P covers all negatives");
+        self.core.check_invariants(&self.ars);
+    }
+}
+
+/// Read-only view of a weighted list living in someone else's arena
+/// (the positive list `P` as exposed by [`SupportTree::p_list`]).
+#[derive(Clone, Copy)]
+pub struct PListView<'a> {
+    core: ListCore,
+    ar: &'a CellArena,
+}
+
+impl<'a> PListView<'a> {
+    /// Number of cells, sentinels included.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.core.len()
+    }
+
+    /// True when no cells are present.
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.core.is_empty()
+    }
+
+    /// First cell.
+    #[inline]
+    pub fn head(&self) -> Option<CellId> {
+        self.core.head()
+    }
+
+    /// Last cell.
+    #[inline]
+    pub fn tail(&self) -> Option<CellId> {
+        self.core.tail()
+    }
+
+    /// `next(u; L)`.
+    #[inline]
+    pub fn next(&self, c: CellId) -> Option<CellId> {
+        self.core.next(self.ar, c)
+    }
+
+    /// `prev(u; L)`.
+    #[inline]
+    pub fn prev(&self, c: CellId) -> Option<CellId> {
+        self.core.prev(self.ar, c)
+    }
+
+    /// Tree node this cell references.
+    #[inline]
+    pub fn node(&self, c: CellId) -> NodeId {
+        self.core.node(self.ar, c)
+    }
+
+    /// Gap positive count `gp(u; L)`.
+    #[inline]
+    pub fn gp(&self, c: CellId) -> u64 {
+        self.core.gp(self.ar, c)
+    }
+
+    /// Gap negative count `gn(u; L)`.
+    #[inline]
+    pub fn gn(&self, c: CellId) -> u64 {
+        self.core.gn(self.ar, c)
+    }
+
+    /// Cached score of the cell's node.
+    #[inline]
+    pub fn key(&self, c: CellId) -> f64 {
+        self.core.key(self.ar, c)
+    }
+
+    /// Cached `p(v)` of the cell's node.
+    #[inline]
+    pub fn cp(&self, c: CellId) -> u64 {
+        self.core.cp(self.ar, c)
+    }
+
+    /// Cached `n(v)` of the cell's node.
+    #[inline]
+    pub fn cn(&self, c: CellId) -> u64 {
+        self.core.cn(self.ar, c)
+    }
+
+    /// `O(1)` membership test.
+    #[inline]
+    pub fn contains(&self, node: NodeId) -> bool {
+        self.core.contains(self.ar, node)
+    }
+
+    /// Cell holding `node`, if present.
+    #[inline]
+    pub fn cell_of(&self, node: NodeId) -> Option<CellId> {
+        self.core.cell_of(self.ar, node)
+    }
+
+    /// Iterate cells front to back.
+    pub fn iter(&self) -> Cells<'a> {
+        self.core.iter_in(self.ar)
     }
 }
 
@@ -405,6 +736,7 @@ impl SupportTree {
 const _: () = {
     const fn assert_send<T: Send>() {}
     assert_send::<SupportTree>();
+    assert_send::<EstimatorArenas>();
 };
 
 #[cfg(test)]
@@ -661,5 +993,30 @@ mod tests {
         }
         assert_eq!(t.len(), 100);
         t.check_invariants();
+    }
+
+    #[test]
+    fn free_in_returns_every_slot() {
+        let mut ars = EstimatorArenas::default();
+        let mut core = SupportCore::new_in(&mut ars);
+        let mut rng = Pcg::seed(7);
+        for _ in 0..200 {
+            let sc = s(rng.below(32) as f64 / 32.0);
+            if rng.chance(0.5) {
+                core.add_pos(&mut ars, sc);
+            } else {
+                core.add_neg(&mut ars, sc);
+            }
+        }
+        core.check_invariants(&ars);
+        core.free_in(&mut ars);
+        // Every slot is back on a free list: reset (which asserts
+        // exactly that) must succeed and leave zero bytes live.
+        ars.reset();
+        assert_eq!(ars.live_bytes(), 0);
+        // The bundle is reusable afterwards.
+        let core = SupportCore::new_in(&mut ars);
+        assert_eq!(core.t_len(), 2);
+        core.check_invariants(&ars);
     }
 }

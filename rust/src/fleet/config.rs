@@ -7,6 +7,9 @@
 //! otherwise. All configs are plain `Copy` data so the hot ingestion
 //! path never clones heap state.
 
+use crate::coordinator::approx::ApproxCore;
+use crate::coordinator::maintained::MaintainedCore;
+use crate::coordinator::support::EstimatorArenas;
 use crate::coordinator::window::Window;
 use crate::coordinator::{ApproxAuc, AucEstimator, AucMonitor, BinnedAuc, MaintainedExactAuc};
 
@@ -154,6 +157,129 @@ const _: () = {
     const fn assert_send<T: Send>() {}
     assert_send::<FleetEstimator>();
     assert_send::<Window<FleetEstimator>>();
+};
+
+impl EstimatorKind {
+    /// Instantiate the pooled (arena-backed) per-stream estimator, with
+    /// its node/cell storage in the shard's shared `ars`. The fleet's
+    /// stream states hold this form; [`EstimatorKind::build`] remains
+    /// for standalone (self-owning) use.
+    ///
+    /// # Panics
+    ///
+    /// Same validation as [`EstimatorKind::build`].
+    pub(crate) fn build_in(self, ars: &mut EstimatorArenas) -> PooledEstimator {
+        match self {
+            EstimatorKind::Approx { epsilon } => {
+                PooledEstimator::Approx(ApproxCore::new_in(ars, epsilon))
+            }
+            EstimatorKind::ExactMaintained => PooledEstimator::Exact(MaintainedCore::new()),
+            EstimatorKind::Binned { bins, lo, hi } => {
+                PooledEstimator::Binned(BinnedAuc::new(bins, lo, hi))
+            }
+        }
+    }
+}
+
+/// The arena-backed counterpart of [`FleetEstimator`]: the handle form
+/// the fleet's stream states actually hold. Tree nodes and list cells
+/// live in the owning shard's [`EstimatorArenas`]; this enum is just
+/// roots, counters and accumulators (the binned arm keeps its two flat
+/// count arrays — they are contiguous and `k`-independent, so pooling
+/// them buys nothing). Every operation that touches node/cell storage
+/// takes the shard's arenas explicitly.
+#[derive(Clone, Debug)]
+pub(crate) enum PooledEstimator {
+    /// `(1+ε)`-compressed approximate estimator (arena-backed core).
+    Approx(ApproxCore),
+    /// Tree-maintained exact estimator (arena-backed core).
+    Exact(MaintainedCore),
+    /// Fixed-bin bounded-score estimator (self-contained; no arena use).
+    Binned(BinnedAuc),
+}
+
+impl PooledEstimator {
+    pub(crate) fn insert_in(&mut self, ars: &mut EstimatorArenas, score: f64, pos: bool) {
+        match self {
+            PooledEstimator::Approx(e) => e.insert_in(ars, score, pos),
+            PooledEstimator::Exact(e) => e.insert_in(ars, score, pos),
+            PooledEstimator::Binned(e) => e.insert(score, pos),
+        }
+    }
+
+    pub(crate) fn remove_in(&mut self, ars: &mut EstimatorArenas, score: f64, pos: bool) {
+        match self {
+            PooledEstimator::Approx(e) => e.remove_in(ars, score, pos),
+            PooledEstimator::Exact(e) => e.remove_in(ars, score, pos),
+            PooledEstimator::Binned(e) => e.remove(score, pos),
+        }
+    }
+
+    /// O(1) read — all three arms maintain their doubled-area
+    /// accumulator incrementally.
+    pub(crate) fn auc(&self) -> f64 {
+        match self {
+            PooledEstimator::Approx(e) => e.auc(),
+            PooledEstimator::Exact(e) => e.auc(),
+            PooledEstimator::Binned(e) => e.auc(),
+        }
+    }
+
+    pub(crate) fn len(&self) -> usize {
+        match self {
+            PooledEstimator::Approx(e) => e.len(),
+            PooledEstimator::Exact(e) => e.len(),
+            PooledEstimator::Binned(e) => e.len(),
+        }
+    }
+
+    /// Structure size in cells/nodes — same semantics as
+    /// [`FleetEstimator::footprint`] (feeds `StreamSnapshot::compressed_len`).
+    pub(crate) fn footprint(&self) -> usize {
+        match self {
+            PooledEstimator::Approx(e) => e.compressed_len(),
+            PooledEstimator::Exact(e) => e.distinct_scores(),
+            PooledEstimator::Binned(e) => 2 * e.bins(),
+        }
+    }
+
+    /// Logical bytes of backing storage (arena slots or flat arrays)
+    /// this stream's estimator occupies. Content-determined — live
+    /// counts times slot sizes, never allocation capacity — so served
+    /// footprints cannot depend on pool scheduling.
+    pub(crate) fn footprint_bytes(&self) -> usize {
+        match self {
+            PooledEstimator::Approx(e) => e.live_bytes(),
+            PooledEstimator::Exact(e) => e.live_bytes(),
+            PooledEstimator::Binned(e) => e.footprint_bytes(),
+        }
+    }
+
+    /// Declared bounded score range of a binned stream; `None`
+    /// otherwise. Same contract as [`FleetEstimator::declared_range`].
+    pub(crate) fn declared_range(&self) -> Option<(f64, f64)> {
+        match self {
+            PooledEstimator::Binned(e) => Some(e.range()),
+            PooledEstimator::Approx(_) | PooledEstimator::Exact(_) => None,
+        }
+    }
+
+    /// Return every arena slot this estimator holds to the shard's free
+    /// lists (eviction / hibernation). The estimator is unusable
+    /// afterwards and must be dropped.
+    pub(crate) fn free_in(&mut self, ars: &mut EstimatorArenas) {
+        match self {
+            PooledEstimator::Approx(e) => e.free_in(ars),
+            PooledEstimator::Exact(e) => e.free_in(ars),
+            PooledEstimator::Binned(_) => {}
+        }
+    }
+}
+
+const _: () = {
+    const fn assert_send<T: Send>() {}
+    assert_send::<PooledEstimator>();
+    assert_send::<EstimatorArenas>();
 };
 
 /// Drift-monitor parameters for one stream (see [`AucMonitor::new`] for

@@ -1,0 +1,176 @@
+//! Compact frozen form of an idle stream — cold-stream hibernation.
+//!
+//! A hibernated stream trades its live structures (support tree `T`,
+//! positive index `TP`, lists `P`/`C`, window FIFO — several arena
+//! slots per window entry) for three contiguous buffers: the window's
+//! scores in arrival order, the labels as a bitset, and — for the
+//! `(1+ε)`-compressed estimator only — the finite keys of the
+//! compressed list `C`. That is ~9 bytes per entry instead of the
+//! live form's ~60–100, and every arena slot the stream held returns
+//! to the shard's free lists at freeze time ([`super::shard::Shard`]
+//! then resets the arenas outright once no live-form stream remains).
+//!
+//! **Why rehydration is bit-identical.** Every estimator in this crate
+//! keeps state that is a pure function of the window *content* —
+//! counts, totals and a doubled-area accumulator that is proven
+//! bit-equal to the content-determined full scan at every op boundary
+//! (`coordinator/*::check_invariants`) — with one exception: the shape
+//! of the compressed list `C` depends on the *history* of inserts and
+//! compressions, not just the current content. So the frozen form
+//! stores `C`'s keys explicitly. Thawing replays the entries into the
+//! support structure (a multiset — arrival order only perturbs
+//! internal node placement, never a counter), rebuilds `C` from the
+//! stored keys (the gap counters `gp`/`gn` are pure functions of the
+//! key set and the window content), and re-derives the accumulator
+//! from the content-determined scan — which the live accumulator was
+//! bit-equal to when the stream froze. Hence the thawed estimator
+//! reads the exact same `auc()` bits, passes `check_invariants`, and
+//! every subsequent operation proceeds from bit-identical state: a
+//! stream that hibernated is indistinguishable, digest-for-digest,
+//! from one that never did (`tests/differential.rs`,
+//! `tests/executor.rs`). [`super::shard::Shard`] additionally asserts
+//! the estimate bits on every thaw.
+//!
+//! **Tiering.** Hibernation sits between staying hot and eviction
+//! ([`super::AucFleet::evict_idle`]): an evicted stream loses its
+//! window, counters and monitor baseline and starts cold on
+//! reappearance; a hibernated one keeps everything — it still answers
+//! snapshots and queries (estimate pinned by the frozen form, sketch
+//! contribution retained) and resumes exactly where it left off. See
+//! `rust/DESIGN.md` §Memory.
+
+use std::collections::VecDeque;
+
+use crate::collections::Score;
+use crate::coordinator::approx::ApproxCore;
+use crate::coordinator::canon;
+use crate::coordinator::support::EstimatorArenas;
+
+use super::config::{EstimatorKind, PooledEstimator, StreamConfig};
+use super::shard::PooledWindow;
+
+/// One hibernated stream: configuration plus the window serialized
+/// into contiguous buffers. Holds no arena slots.
+#[derive(Clone, Debug)]
+pub(super) struct FrozenStream {
+    /// The stream's configuration — everything needed to rebuild the
+    /// estimator on thaw.
+    cfg: StreamConfig,
+    /// The estimate at freeze time; bit-equal to what the rehydrated
+    /// estimator reads (asserted on every thaw).
+    auc: f64,
+    /// Estimator structure size (cells/nodes) at freeze time — what
+    /// snapshots report as `compressed_len` while frozen.
+    footprint_cells: usize,
+    /// Window scores, oldest first.
+    scores: Box<[f64]>,
+    /// Window labels as a bitset, same order (bit i ↔ `scores[i]`).
+    labels: Box<[u64]>,
+    /// Finite keys of the compressed list `C`, ascending — present
+    /// only for the `(1+ε)`-compressed estimator (empty otherwise).
+    c_keys: Box<[f64]>,
+}
+
+impl FrozenStream {
+    /// Serialize a live window into the frozen form. Reads only; the
+    /// caller frees the live structures afterwards
+    /// ([`PooledEstimator::free_in`]).
+    pub(super) fn freeze(
+        win: &PooledWindow,
+        cfg: &StreamConfig,
+        ars: &EstimatorArenas,
+    ) -> FrozenStream {
+        let n = win.len();
+        let mut scores = Vec::with_capacity(n);
+        #[allow(clippy::manual_div_ceil)] // usize::div_ceil is 1.73; crate floor is 1.66
+        let mut labels = vec![0u64; (n + 63) / 64];
+        for (i, (s, p)) in win.entries().enumerate() {
+            scores.push(s);
+            if p {
+                labels[i / 64] |= 1 << (i % 64);
+            }
+        }
+        let c_keys: Box<[f64]> = match &win.est {
+            PooledEstimator::Approx(e) => e.compressed_keys(ars).into(),
+            PooledEstimator::Exact(_) | PooledEstimator::Binned(_) => Box::default(),
+        };
+        FrozenStream {
+            cfg: *cfg,
+            auc: win.auc(),
+            footprint_cells: win.est.footprint(),
+            scores: scores.into(),
+            labels: labels.into(),
+            c_keys,
+        }
+    }
+
+    /// Rebuild the live window from the frozen buffers (see the module
+    /// docs for why the result is bit-identical to the frozen state).
+    pub(super) fn thaw(&self, ars: &mut EstimatorArenas) -> PooledWindow {
+        let est = match self.cfg.estimator {
+            EstimatorKind::Approx { epsilon } => {
+                // Replay content into the support structure only, then
+                // reconstruct `C` from its stored keys — replaying
+                // through the full insert path would re-run compression
+                // and grow a history-dependent, generally different `C`.
+                let mut core = ApproxCore::new_in(ars, epsilon);
+                for (s, p) in self.entries() {
+                    let sc = Score(canon(s));
+                    if p {
+                        core.sup.add_pos(ars, sc);
+                    } else {
+                        core.sup.add_neg(ars, sc);
+                    }
+                }
+                core.rebuild_in(ars, &self.c_keys);
+                PooledEstimator::Approx(core)
+            }
+            EstimatorKind::ExactMaintained | EstimatorKind::Binned { .. } => {
+                // Maintained-exact and binned state is entirely
+                // content-determined: plain replay reproduces it.
+                let mut est = self.cfg.estimator.build_in(ars);
+                for (s, p) in self.entries() {
+                    est.insert_in(ars, s, p);
+                }
+                est
+            }
+        };
+        let fifo: VecDeque<(f64, bool)> = self.entries().collect();
+        PooledWindow::from_parts(est, fifo, self.cfg.window)
+    }
+
+    /// The pinned estimate (bit-equal to the rehydrated read).
+    pub(super) fn auc(&self) -> f64 {
+        self.auc
+    }
+
+    /// Window entries held.
+    pub(super) fn len(&self) -> usize {
+        self.scores.len()
+    }
+
+    /// Estimator structure size (cells/nodes) at freeze time.
+    pub(super) fn footprint_cells(&self) -> usize {
+        self.footprint_cells
+    }
+
+    /// Logical bytes of the frozen buffers.
+    pub(super) fn footprint_bytes(&self) -> usize {
+        (self.scores.len() + self.labels.len() + self.c_keys.len()) * 8
+    }
+
+    /// Window contents, oldest first — identical to what the live
+    /// window's `entries()` returned at freeze time.
+    pub(super) fn entries(&self) -> impl Iterator<Item = (f64, bool)> + '_ {
+        self.scores
+            .iter()
+            .enumerate()
+            .map(|(i, &s)| (s, self.labels[i / 64] >> (i % 64) & 1 == 1))
+    }
+}
+
+// Frozen streams live inside shards, which cross worker threads.
+const _: () = {
+    const fn assert_send<T: Send>() {}
+    assert_send::<FrozenStream>();
+};

@@ -20,6 +20,21 @@
 //! order the serial path produces, so parallel and serial ingestion
 //! are bit-identical (`rust/DESIGN.md` §Parallelism).
 //!
+//! **Memory.** The shard also owns the [`EstimatorArenas`] every one of
+//! its streams allocates tree nodes and list cells from: streams hold
+//! arena-backed cores ([`PooledEstimator`] — roots, counters,
+//! accumulators) rather than per-stream `Vec`s, so a million estimators
+//! share a handful of large slabs per shard instead of millions of
+//! small allocations (`rust/DESIGN.md` §Memory). Eviction and
+//! hibernation return every slot a stream held to the arena free lists
+//! ([`PooledEstimator::free_in`]); when no live-form stream remains the
+//! arenas reset and release their slabs, and trailing freed capacity is
+//! trimmed after every eviction/hibernation pass so free lists never
+//! ratchet. Idle streams can further be **hibernated** into the compact
+//! frozen form ([`FrozenStream`]): window contents as contiguous
+//! buffers, live structures freed, transparently rehydrated —
+//! bit-identically — on the stream's next event.
+//!
 //! Besides ingestion, the shard exposes the **read-only visitor
 //! methods** the typed job layer (`fleet/pool.rs` `ShardWork`) runs
 //! shard-parallel: per-shard snapshots, aggregate partials and the
@@ -39,13 +54,17 @@
 //! `top_k_worst` / quantile refinement scan only candidate bins — see
 //! `rust/DESIGN.md` §Incremental-reads for the invalidation rules
 //! (refresh on every ingested event; retract on evict and reset).
+//! Hibernated streams keep their sketch contribution — their estimate
+//! is pinned by the frozen form — so sketch-backed reads never need to
+//! rehydrate anything.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 
-use crate::coordinator::window::Window;
+use crate::coordinator::support::EstimatorArenas;
 use crate::coordinator::{AucMonitor, MonitorEvent};
 
-use super::config::{FleetEstimator, StreamConfig};
+use super::config::{EstimatorKind, PooledEstimator, StreamConfig};
+use super::frozen::FrozenStream;
 use super::snapshot::{FleetAlarm, StreamSnapshot};
 
 /// Bins of the shard-maintained AUC sketch. Exactly 64 so a set of
@@ -107,7 +126,7 @@ pub(super) fn worst_first(a: (f64, u64), b: (f64, u64)) -> std::cmp::Ordering {
 /// shard's [`ShardSketch`]. Kept on the stream so the drain can
 /// retract exactly what it recorded (`Shard::refresh_stat`); also the
 /// cache the candidate-bin refinement scans read (`bin`, `auc`) —
-/// `auc` is bit-equal to `win.auc()` by construction.
+/// `auc` is bit-equal to the stream's estimate by construction.
 #[derive(Clone, Copy, Debug, Default)]
 pub(super) struct StreamStat {
     /// Window non-empty: only live streams enter the distribution.
@@ -120,19 +139,25 @@ pub(super) struct StreamStat {
     pub(super) qauc: i64,
     /// The windowed AUC estimate itself.
     pub(super) auc: f64,
+    /// [`StreamState::footprint_bytes`] as last recorded — counted for
+    /// *every* stream (an empty window still holds sentinel slots), so
+    /// the sketch-backed fleet footprint needs no stream rescan.
+    pub(super) footprint: u64,
 }
 
 impl StreamStat {
     /// The stat of a stream in its current state. `O(1)` — the AUC
-    /// read is the estimator's cached accumulator.
+    /// read is the estimator's cached accumulator (or the frozen
+    /// form's pinned estimate, bit-equal by the rehydration contract).
     fn of(st: &StreamState) -> StreamStat {
-        let auc = st.win.auc();
+        let auc = st.auc();
         StreamStat {
-            live: !st.win.is_empty(),
+            live: !st.is_window_empty(),
             alarmed: st.monitor.as_ref().map_or(false, AucMonitor::is_alarmed),
             bin: sketch_bin(auc),
             qauc: quantize_auc(auc),
             auc,
+            footprint: st.footprint_bytes() as u64,
         }
     }
 }
@@ -154,11 +179,15 @@ pub(super) struct ShardSketch {
     /// Σ [`quantize_auc`] over live streams (`i128`: fleet-scale sums
     /// of 2⁵²-scaled values overflow `i64`).
     pub(super) qauc_sum: i128,
+    /// Σ [`StreamStat::footprint`] over *all* streams — the shard's
+    /// logical memory footprint, maintained incrementally so
+    /// fleet-wide footprint reads are `O(shards)`, not `O(streams)`.
+    pub(super) footprint: u64,
 }
 
 impl Default for ShardSketch {
     fn default() -> Self {
-        ShardSketch { bins: [0; SKETCH_BINS], live: 0, alarmed: 0, qauc_sum: 0 }
+        ShardSketch { bins: [0; SKETCH_BINS], live: 0, alarmed: 0, qauc_sum: 0, footprint: 0 }
     }
 }
 
@@ -173,6 +202,7 @@ impl ShardSketch {
         if s.alarmed {
             self.alarmed += 1;
         }
+        self.footprint += s.footprint;
     }
 
     /// Remove a previously recorded contribution (exact inverse).
@@ -185,21 +215,121 @@ impl ShardSketch {
         if s.alarmed {
             self.alarmed -= 1;
         }
+        self.footprint -= s.footprint;
     }
 }
 
-/// One stream's state: sliding estimator window plus optional drift
-/// monitor. Factored out of the shard so future per-stream features
-/// (decay, flipped estimators) have one place to live.
+/// Sliding window over an arena-backed [`PooledEstimator`]: the pooled
+/// counterpart of [`Window`](crate::coordinator::window::Window), with
+/// every storage-touching operation taking the owning shard's arenas
+/// explicitly. Semantics (FIFO eviction, finite-score rejection
+/// *before* mutation) are identical — the executor's panic-recovery
+/// contract relies on the latter.
+#[derive(Clone, Debug)]
+pub(super) struct PooledWindow {
+    /// The arena-backed estimator core.
+    pub(super) est: PooledEstimator,
+    fifo: VecDeque<(f64, bool)>,
+    capacity: usize,
+}
+
+impl PooledWindow {
+    pub(super) fn new(capacity: usize, est: PooledEstimator) -> Self {
+        assert!(capacity > 0, "window capacity must be positive");
+        PooledWindow { est, fifo: VecDeque::with_capacity(capacity + 1), capacity }
+    }
+
+    /// Reassemble a window from rehydrated parts (`fleet/frozen.rs`).
+    pub(super) fn from_parts(
+        est: PooledEstimator,
+        fifo: VecDeque<(f64, bool)>,
+        capacity: usize,
+    ) -> Self {
+        assert!(capacity > 0, "window capacity must be positive");
+        debug_assert!(fifo.len() <= capacity, "rehydrated window overfull");
+        PooledWindow { est, fifo, capacity }
+    }
+
+    /// Push a pair; evicts and returns the oldest pair when the window
+    /// is full. Panics on a non-finite score **before** any state is
+    /// touched (same contract as `Window::push`).
+    pub(super) fn push(
+        &mut self,
+        ars: &mut EstimatorArenas,
+        score: f64,
+        pos: bool,
+    ) -> Option<(f64, bool)> {
+        assert!(score.is_finite(), "window scores must be finite, got {score}");
+        self.est.insert_in(ars, score, pos);
+        self.fifo.push_back((score, pos));
+        if self.fifo.len() > self.capacity {
+            let (s, p) = self.fifo.pop_front().expect("non-empty");
+            self.est.remove_in(ars, s, p);
+            Some((s, p))
+        } else {
+            None
+        }
+    }
+
+    /// Current AUC — `O(1)`, the estimator's cached accumulator.
+    pub(super) fn auc(&self) -> f64 {
+        self.est.auc()
+    }
+
+    pub(super) fn len(&self) -> usize {
+        self.fifo.len()
+    }
+
+    pub(super) fn is_empty(&self) -> bool {
+        self.fifo.is_empty()
+    }
+
+    pub(super) fn is_full(&self) -> bool {
+        self.fifo.len() == self.capacity
+    }
+
+    /// Window contents, oldest first.
+    pub(super) fn entries(&self) -> impl Iterator<Item = (f64, bool)> + '_ {
+        self.fifo.iter().copied()
+    }
+
+    /// Logical bytes: the estimator's arena slots plus the FIFO pairs.
+    pub(super) fn footprint_bytes(&self) -> usize {
+        self.est.footprint_bytes() + self.fifo.len() * std::mem::size_of::<(f64, bool)>()
+    }
+}
+
+/// The two forms a stream's window state takes: the live arena-backed
+/// window, or the compact frozen buffer an idle stream is hibernated
+/// into ([`FrozenStream`] — `rust/DESIGN.md` §Memory). Everything
+/// observable (estimate, length, entries, snapshot) is identical
+/// across the two forms; only cost differs.
+#[derive(Clone, Debug)]
+pub(super) enum StreamRepr {
+    /// Live arena-backed window (hot path).
+    Live(PooledWindow),
+    /// Hibernated: contiguous buffers, no arena slots held. Boxed so
+    /// the slab's per-stream stride stays one pointer wide for this
+    /// variant's payload.
+    Frozen(Box<FrozenStream>),
+}
+
+/// One stream's state: sliding estimator window (live or frozen) plus
+/// optional drift monitor. Factored out of the shard so future
+/// per-stream features (decay, flipped estimators) have one place to
+/// live. The monitor and lifetime counters stay resident across
+/// hibernation — they are a few machine words, and keeping them live
+/// means rehydration rebuilds *only* the estimator, whose state is
+/// content-determined (the bit-identity contract).
 #[derive(Clone, Debug)]
 pub(super) struct StreamState {
     /// Stream id (also the key in the owning shard's index).
     pub(super) id: u64,
-    /// The sliding estimator window — approximate, exact-maintained or
-    /// binned per the stream's [`EstimatorKind`](super::EstimatorKind);
-    /// all kinds read their AUC in `O(1)`, so everything downstream
-    /// (monitor, sketch, snapshots) is estimator-agnostic.
-    pub(super) win: Window<FleetEstimator>,
+    /// The stream's configuration; retained so hibernation can rebuild
+    /// the estimator on rehydrate and resets don't re-resolve overrides.
+    pub(super) cfg: StreamConfig,
+    /// The window state — live arena-backed or hibernated.
+    pub(super) repr: StreamRepr,
     /// Drift monitor; `None` when monitoring is disabled for the stream.
     pub(super) monitor: Option<AucMonitor>,
     /// Stream-local events ingested over the stream's lifetime.
@@ -221,10 +351,11 @@ pub(super) struct StreamState {
 }
 
 impl StreamState {
-    pub(super) fn new(id: u64, cfg: &StreamConfig) -> StreamState {
+    pub(super) fn new_in(id: u64, cfg: &StreamConfig, ars: &mut EstimatorArenas) -> StreamState {
         StreamState {
             id,
-            win: Window::with_estimator(cfg.window, cfg.estimator.build()),
+            cfg: *cfg,
+            repr: StreamRepr::Live(PooledWindow::new(cfg.window, cfg.estimator.build_in(ars))),
             monitor: cfg.monitor.map(|m| m.build()),
             events: 0,
             alarms: 0,
@@ -234,13 +365,79 @@ impl StreamState {
         }
     }
 
+    /// The stream's current estimate: the live accumulator, or the
+    /// frozen form's pinned value (bit-equal by the rehydration
+    /// contract). `O(1)` either way.
+    pub(super) fn auc(&self) -> f64 {
+        match &self.repr {
+            StreamRepr::Live(w) => w.auc(),
+            StreamRepr::Frozen(f) => f.auc(),
+        }
+    }
+
+    /// Pairs currently in the window.
+    pub(super) fn window_len(&self) -> usize {
+        match &self.repr {
+            StreamRepr::Live(w) => w.len(),
+            StreamRepr::Frozen(f) => f.len(),
+        }
+    }
+
+    /// True before the stream's first event.
+    pub(super) fn is_window_empty(&self) -> bool {
+        self.window_len() == 0
+    }
+
+    /// True while hibernated (frozen form).
+    pub(super) fn is_hibernated(&self) -> bool {
+        matches!(self.repr, StreamRepr::Frozen(_))
+    }
+
+    /// Window contents, oldest first, identical across both forms.
+    pub(super) fn window_entries(&self) -> Vec<(f64, bool)> {
+        match &self.repr {
+            StreamRepr::Live(w) => w.entries().collect(),
+            StreamRepr::Frozen(f) => f.entries().collect(),
+        }
+    }
+
+    /// Estimator structure size in cells/nodes (see
+    /// [`PooledEstimator::footprint`]); frozen streams report the size
+    /// the structure had when frozen (= will have again on rehydrate).
+    pub(super) fn footprint_cells(&self) -> usize {
+        match &self.repr {
+            StreamRepr::Live(w) => w.est.footprint(),
+            StreamRepr::Frozen(f) => f.footprint_cells(),
+        }
+    }
+
+    /// Logical bytes of backing storage this stream currently holds:
+    /// arena slots + FIFO pairs when live, the contiguous buffers when
+    /// frozen. Content-determined in both forms — never allocation
+    /// capacity — so the figure is identical across execution
+    /// strategies and serves deterministically.
+    pub(super) fn footprint_bytes(&self) -> usize {
+        match &self.repr {
+            StreamRepr::Live(w) => w.footprint_bytes(),
+            StreamRepr::Frozen(f) => f.footprint_bytes(),
+        }
+    }
+
+    /// Return held arena slots to the free lists (evict / reset).
+    fn free_storage(&mut self, ars: &mut EstimatorArenas) {
+        if let StreamRepr::Live(w) = &mut self.repr {
+            w.est.free_in(ars);
+        }
+    }
+
     /// Point-in-time snapshot of this stream.
     pub(super) fn snapshot(&self) -> StreamSnapshot {
         StreamSnapshot {
             stream: self.id,
-            auc: self.win.auc(),
-            len: self.win.len(),
-            compressed_len: self.win.estimator().footprint(),
+            auc: self.auc(),
+            len: self.window_len(),
+            compressed_len: self.footprint_cells(),
+            footprint_bytes: self.footprint_bytes() as u64,
             events: self.events,
             alarms: self.alarms,
             alarmed: self.monitor.as_ref().map_or(false, AucMonitor::is_alarmed),
@@ -249,8 +446,9 @@ impl StreamState {
     }
 }
 
-/// One shard: dense stream slab, id index and local alarm log. See the
-/// module docs for the ownership/determinism rules.
+/// One shard: dense stream slab, id index, local alarm log and the
+/// arenas every stream's estimator allocates from. See the module docs
+/// for the ownership/determinism/memory rules.
 #[derive(Clone, Debug, Default)]
 pub(super) struct Shard {
     /// Dense slab of stream states (hot streams stay contiguous).
@@ -261,6 +459,8 @@ pub(super) struct Shard {
     alarms: Vec<FleetAlarm>,
     /// Running sufficient stats over the slab (see module docs).
     sketch: ShardSketch,
+    /// Pooled node/cell storage shared by every stream in this shard.
+    ars: EstimatorArenas,
 }
 
 impl Shard {
@@ -293,8 +493,13 @@ impl Shard {
         }
         let cfg = overrides.get(&id).copied().unwrap_or(*defaults);
         let slot = self.streams.len();
-        self.streams.push(StreamState::new(id, &cfg));
+        self.streams.push(StreamState::new_in(id, &cfg, &mut self.ars));
         self.index.insert(id, slot as u32);
+        // Record the fresh stream's stat right away: the live-gated
+        // fields are inert (empty window, no alarm), but the sentinel
+        // slots it just allocated must enter the sketch's footprint sum
+        // so the sketch stays bit-equal to the rescan reference.
+        self.refresh_stat(slot);
         slot
     }
 
@@ -307,15 +512,22 @@ impl Shard {
     pub(super) fn reset_stream(&mut self, id: u64, cfg: &StreamConfig, now: u64, at: u64) -> bool {
         match self.index.get(&id) {
             Some(&slot) => {
-                let mut st = StreamState::new(id, cfg);
-                st.last_seen = now;
-                st.last_seen_at = at;
+                let slot = slot as usize;
                 // Sketch invalidation: the old state's contribution
                 // goes; the fresh state's default stat is inert (empty
                 // window, no alarm), so nothing is recorded until the
-                // stream's next event refreshes it.
-                self.sketch.retract(self.streams[slot as usize].stat);
-                self.streams[slot as usize] = st;
+                // stream's next event refreshes it. The old storage
+                // returns to the arena free lists before the new state
+                // allocates its own.
+                self.sketch.retract(self.streams[slot].stat);
+                self.streams[slot].free_storage(&mut self.ars);
+                let mut st = StreamState::new_in(id, cfg, &mut self.ars);
+                st.last_seen = now;
+                st.last_seen_at = at;
+                self.streams[slot] = st;
+                // Re-record immediately (live-gated fields stay inert;
+                // the new sentinels' footprint must not go missing).
+                self.refresh_stat(slot);
                 true
             }
             None => false,
@@ -336,30 +548,40 @@ impl Shard {
     /// observation (only on full windows, so partially filled streams
     /// never alarm on warm-up noise). `tick` is the fleet-wide event
     /// number of this event (1-based); `at` is the caller's timestamp
-    /// for the batch the event arrived in.
+    /// for the batch the event arrived in. A hibernated stream is
+    /// transparently rehydrated first.
     pub(super) fn push_slot(&mut self, slot: usize, score: f64, label: bool, tick: u64, at: u64) {
-        let st = &mut self.streams[slot];
         // Bounded-score declarations are enforced here, naming the
         // stream — before any state mutates (like the finite-score
-        // check in `Window::push`), so a caught panic leaves stream,
-        // sketch and FIFO exactly as they were. NaN fails the
-        // comparison and is rejected by the same message.
-        if let Some((lo, hi)) = st.win.estimator().declared_range() {
+        // check in `PooledWindow::push`), so a caught panic leaves
+        // stream, sketch, FIFO *and hibernation state* exactly as they
+        // were. The range comes from the stored config, so a frozen
+        // stream rejects without rehydrating. NaN fails the comparison
+        // and is rejected by the same message.
+        if let EstimatorKind::Binned { lo, hi, .. } = self.streams[slot].cfg.estimator {
             assert!(
                 score >= lo && score <= hi,
                 "stream {}: score {score} outside declared range [{lo}, {hi}]",
-                st.id
+                self.streams[slot].id
             );
         }
-        st.win.push(score, label);
+        assert!(
+            score.is_finite(),
+            "stream {}: window scores must be finite, got {score}",
+            self.streams[slot].id
+        );
+        self.thaw_slot(slot);
+        let st = &mut self.streams[slot];
+        let StreamRepr::Live(win) = &mut st.repr else { unreachable!("thawed above") };
+        win.push(&mut self.ars, score, label);
         st.events += 1;
         st.last_seen = tick;
         st.last_seen_at = at;
-        if st.win.is_full() {
+        if win.is_full() {
             if let Some(m) = st.monitor.as_mut() {
                 // O(1): the window's cached accumulator — monitoring no
                 // longer pays a compressed-list scan per event.
-                let auc = st.win.auc();
+                let auc = win.auc();
                 if m.observe(auc) == MonitorEvent::Alarm {
                     st.alarms += 1;
                     self.alarms.push(FleetAlarm {
@@ -371,7 +593,7 @@ impl Shard {
                 }
             }
         }
-        // Per event, not per batch: `Window::push` panics before
+        // Per event, not per batch: `PooledWindow::push` panics before
         // mutating, so even a mid-bucket panic leaves the sketch
         // coherent with exactly the events that landed.
         self.refresh_stat(slot);
@@ -419,12 +641,16 @@ impl Shard {
     /// Drop every stream matching `dead`, compacting the slab via
     /// swap-remove and repairing the index. Returns the number of
     /// evicted streams. Shared engine behind both eviction flavours.
+    /// Every arena slot an evicted stream held returns to the free
+    /// lists, and storage is reclaimed afterwards
+    /// ([`Shard::reclaim_storage`]).
     fn evict_where(&mut self, dead: impl Fn(&StreamState) -> bool) -> usize {
         let mut evicted = 0;
         let mut slot = 0;
         while slot < self.streams.len() {
             if dead(&self.streams[slot]) {
-                let gone = self.streams.swap_remove(slot);
+                let mut gone = self.streams.swap_remove(slot);
+                gone.free_storage(&mut self.ars);
                 self.sketch.retract(gone.stat);
                 self.index.remove(&gone.id);
                 if let Some(moved) = self.streams.get(slot) {
@@ -435,7 +661,23 @@ impl Shard {
                 slot += 1;
             }
         }
+        if evicted > 0 {
+            self.reclaim_storage();
+        }
         evicted
+    }
+
+    /// Release arena memory that no live stream can be holding: when no
+    /// stream is in live form, every slot has been freed and the arenas
+    /// reset (slabs fully released); in any case trailing freed
+    /// capacity is trimmed, so eviction/hibernation churn can never
+    /// ratchet the free lists (the capacity-regression tests in
+    /// `tests/structures.rs` pin this).
+    fn reclaim_storage(&mut self) {
+        if self.streams.iter().all(|st| !matches!(st.repr, StreamRepr::Live(_))) {
+            self.ars.reset();
+        }
+        self.ars.shrink_to_fit();
     }
 
     /// Drop streams idle for at least `max_idle` fleet ticks (`now` is
@@ -452,6 +694,70 @@ impl Shard {
         self.evict_where(|st| now.saturating_sub(st.last_seen_at) >= max_age)
     }
 
+    /// Hibernate live-form streams idle for at least `max_idle` fleet
+    /// ticks into the compact frozen form — the middle tier between
+    /// staying hot and being evicted (`rust/DESIGN.md` §Memory). The
+    /// stream stays fully addressable (snapshots, queries, sketch) and
+    /// rehydrates bit-identically on its next event. Returns the
+    /// number of streams frozen by this call.
+    pub(super) fn hibernate_idle(&mut self, now: u64, max_idle: u64) -> usize {
+        let mut frozen = 0;
+        for slot in 0..self.streams.len() {
+            let st = &self.streams[slot];
+            if matches!(st.repr, StreamRepr::Live(_))
+                && now.saturating_sub(st.last_seen) >= max_idle
+            {
+                self.freeze_slot(slot);
+                frozen += 1;
+            }
+        }
+        if frozen > 0 {
+            self.reclaim_storage();
+        }
+        frozen
+    }
+
+    /// Freeze one live-form stream: capture the frozen buffers, free
+    /// every arena slot the estimator held, swap the representation.
+    /// Observable state (estimate, length, entries, counters, monitor)
+    /// is unchanged, so the sketch contribution stays valid as-is.
+    fn freeze_slot(&mut self, slot: usize) {
+        let st = &mut self.streams[slot];
+        let StreamRepr::Live(win) = &mut st.repr else { return };
+        let frozen = FrozenStream::freeze(win, &st.cfg, &self.ars);
+        win.est.free_in(&mut self.ars);
+        st.repr = StreamRepr::Frozen(Box::new(frozen));
+        // The estimate is unchanged but the footprint shrank — re-point
+        // the sketch contribution at the frozen cost.
+        self.refresh_stat(slot);
+    }
+
+    /// Rehydrate one hibernated stream back to live form. Asserts the
+    /// bit-identity contract: the rebuilt estimator must reproduce the
+    /// frozen estimate exactly (`fleet/frozen.rs` explains why it
+    /// always does).
+    fn thaw_slot(&mut self, slot: usize) {
+        let st = &mut self.streams[slot];
+        let win = match &st.repr {
+            StreamRepr::Frozen(f) => f.thaw(&mut self.ars),
+            StreamRepr::Live(_) => return,
+        };
+        assert_eq!(
+            win.auc().to_bits(),
+            st.auc().to_bits(),
+            "stream {}: rehydration changed the estimate",
+            st.id
+        );
+        st.repr = StreamRepr::Live(win);
+        // Back to live-form cost in the sketch's footprint sum.
+        self.refresh_stat(slot);
+    }
+
+    /// Streams currently hibernated in this shard.
+    pub(super) fn hibernated(&self) -> usize {
+        self.streams.iter().filter(|st| st.is_hibernated()).count()
+    }
+
     // ---- read-only visitor methods (run shard-parallel by the typed
     // job layer; each returns owned data merged in shard-index order) --
 
@@ -461,24 +767,36 @@ impl Shard {
     }
 
     /// Aggregate partial: the windowed AUC of every live (non-empty)
-    /// stream in slab order, the currently-alarmed count, and the
-    /// total stream count. This is the **rescan reference** behind
-    /// `AucFleet::aggregate_rescan` — it deliberately reads each
-    /// stream's estimator directly (not the cached stats), so tests
-    /// comparing it against the sketch-backed path prove the running
-    /// sketch never drifts.
-    pub(super) fn aggregate_partial(&self) -> (Vec<f64>, usize, usize) {
+    /// stream in slab order, the currently-alarmed count, the total
+    /// stream count, and the summed logical footprint in bytes. This
+    /// is the **rescan reference** behind `AucFleet::aggregate_rescan`
+    /// — it deliberately reads each stream's state directly (not the
+    /// cached stats), so tests comparing it against the sketch-backed
+    /// path prove the running sketch never drifts.
+    pub(super) fn aggregate_partial(&self) -> (Vec<f64>, usize, usize, u64) {
         let mut aucs = Vec::with_capacity(self.streams.len());
         let mut alarmed = 0usize;
+        let mut footprint = 0u64;
         for st in &self.streams {
-            if !st.win.is_empty() {
-                aucs.push(st.win.auc());
+            if !st.is_window_empty() {
+                aucs.push(st.auc());
             }
             if st.monitor.as_ref().map_or(false, AucMonitor::is_alarmed) {
                 alarmed += 1;
             }
+            footprint += st.footprint_bytes() as u64;
         }
-        (aucs, alarmed, self.streams.len())
+        (aucs, alarmed, self.streams.len(), footprint)
+    }
+
+    /// Summed logical footprint of this shard's streams in bytes
+    /// (arena slots + FIFOs for live form, contiguous buffers for
+    /// frozen form). Logical — live counts × slot sizes, not arena
+    /// capacity — so it is execution-strategy-independent; the memory
+    /// benchmark (`benches/fleet.rs` `mem`) compares it against
+    /// process RSS.
+    pub(super) fn footprint_bytes(&self) -> u64 {
+        self.streams.iter().map(|st| st.footprint_bytes() as u64).sum()
     }
 
     /// The running sufficient stats over this shard's streams.
@@ -562,32 +880,62 @@ impl Shard {
     /// estimator itself holds each score. With power-of-two cell
     /// counts the float products are exact and this is bit-identical
     /// to the FIFO rescan (the cross-check in `fleet/query.rs` tests);
-    /// in general it is the estimator's own quantized view. Everything
-    /// else falls back to one pass over the window FIFO.
+    /// in general it is the estimator's own quantized view. A
+    /// *hibernated* binned stream has no count arrays, so its stored
+    /// scores go through the **same stream-cell map** before grouping —
+    /// reproducing the live fast path's answer exactly, which keeps
+    /// hibernation invisible to query results. Everything else falls
+    /// back to one pass over the window entries.
     pub(super) fn score_histogram(&self, bins: usize) -> (Vec<u64>, u64) {
         let mut counts = vec![0u64; bins];
         let mut entries = 0u64;
         for st in &self.streams {
-            match st.win.estimator() {
-                FleetEstimator::Binned(e)
-                    if e.range() == (0.0, 1.0) && e.bins() % bins == 0 =>
-                {
-                    let group = e.bins() / bins;
-                    for (i, (p, n)) in e.cells().enumerate() {
-                        let c = u64::from(p) + u64::from(n);
-                        counts[i / group] += c;
-                        entries += c;
+            match &st.repr {
+                StreamRepr::Live(w) => match &w.est {
+                    PooledEstimator::Binned(e)
+                        if e.range() == (0.0, 1.0) && e.bins() % bins == 0 =>
+                    {
+                        let group = e.bins() / bins;
+                        for (i, (p, n)) in e.cells().enumerate() {
+                            let c = u64::from(p) + u64::from(n);
+                            counts[i / group] += c;
+                            entries += c;
+                        }
                     }
-                }
-                _ => {
-                    for (score, _) in st.win.entries() {
-                        // `as usize` saturates: negative scores land in
-                        // cell 0, the `.min` clamps `score ≥ 1`.
-                        let cell = ((score * bins as f64) as usize).min(bins - 1);
-                        counts[cell] += 1;
-                        entries += 1;
+                    _ => {
+                        for (score, _) in w.entries() {
+                            // `as usize` saturates: negative scores land
+                            // in cell 0, the `.min` clamps `score ≥ 1`.
+                            let cell = ((score * bins as f64) as usize).min(bins - 1);
+                            counts[cell] += 1;
+                            entries += 1;
+                        }
                     }
-                }
+                },
+                StreamRepr::Frozen(f) => match st.cfg.estimator {
+                    EstimatorKind::Binned { bins: sb, lo, hi }
+                        if lo == 0.0 && hi == 1.0 && sb % bins == 0 =>
+                    {
+                        // Per-score stream cell grouped down to the
+                        // query's bins — the same map as
+                        // `BinnedAuc::bin_of` over [0, 1], so the
+                        // answer is exactly what the live fast path
+                        // reports for the same contents.
+                        let group = sb / bins;
+                        for (score, _) in f.entries() {
+                            let cell = ((score * sb as f64) as usize).min(sb - 1);
+                            counts[cell / group] += 1;
+                            entries += 1;
+                        }
+                    }
+                    _ => {
+                        for (score, _) in f.entries() {
+                            let cell = ((score * bins as f64) as usize).min(bins - 1);
+                            counts[cell] += 1;
+                            entries += 1;
+                        }
+                    }
+                },
             }
         }
         (counts, entries)
@@ -602,6 +950,7 @@ impl Shard {
             let fresh = StreamStat::of(st);
             assert_eq!(st.stat.live, fresh.live, "stale live flag on stream {}", st.id);
             assert_eq!(st.stat.alarmed, fresh.alarmed, "stale alarm flag on stream {}", st.id);
+            assert_eq!(st.stat.footprint, fresh.footprint, "stale footprint on stream {}", st.id);
             if st.stat.live {
                 assert_eq!(
                     st.stat.auc.to_bits(),
@@ -619,8 +968,9 @@ impl Shard {
 }
 
 // Shards cross thread boundaries (pool workers lock and drain them);
-// this compiles only while every constituent (rbtree arena, weighted
-// lists, window FIFO, monitor) stays free of `Rc`/interior mutability.
+// this compiles only while every constituent (arenas, estimator cores,
+// frozen buffers, window FIFO, monitor) stays free of `Rc`/interior
+// mutability.
 const _: () = {
     const fn assert_send<T: Send>() {}
     assert_send::<StreamState>();

@@ -41,6 +41,11 @@ pub struct StreamSnapshot {
     pub alarmed: bool,
     /// Monitor baseline (`None` when monitoring is disabled).
     pub baseline: Option<f64>,
+    /// Logical memory cost of the stream in bytes: estimator
+    /// structures plus window FIFO while live, frozen buffers while
+    /// hibernated. Counts live structure sizes (never allocation
+    /// capacity), so it is identical across execution strategies.
+    pub footprint_bytes: u64,
 }
 
 /// Point-in-time state of the whole fleet
@@ -109,6 +114,11 @@ pub struct FleetAggregate {
     /// sum is what lets the shard sketches maintain the mean
     /// incrementally yet bit-identically to a from-scratch rescan.
     pub mean_auc: f64,
+    /// Total logical footprint of the fleet in bytes — the sum of
+    /// every stream's [`StreamSnapshot::footprint_bytes`], live or
+    /// hibernated (maintained in the shard sketches, so the
+    /// sketch-backed aggregate reads it without visiting streams).
+    pub footprint_bytes: u64,
 }
 
 impl FleetAggregate {
@@ -117,6 +127,7 @@ impl FleetAggregate {
         streams: usize,
         alarmed_streams: usize,
         total_events: u64,
+        footprint_bytes: u64,
     ) -> FleetAggregate {
         FleetAggregate {
             streams,
@@ -129,6 +140,7 @@ impl FleetAggregate {
             p90_auc: 0.5,
             max_auc: 0.5,
             mean_auc: 0.5,
+            footprint_bytes,
         }
     }
 
@@ -171,10 +183,11 @@ impl FleetAggregate {
         streams: usize,
         alarmed_streams: usize,
         total_events: u64,
+        footprint_bytes: u64,
     ) -> FleetAggregate {
         let live_streams = aucs.len();
         if live_streams == 0 {
-            return FleetAggregate::no_live(streams, alarmed_streams, total_events);
+            return FleetAggregate::no_live(streams, alarmed_streams, total_events, footprint_bytes);
         }
         aucs.sort_unstable_by(f64::total_cmp);
         let [r_min, r10, r50, r90, r_max] = FleetAggregate::ranks(live_streams);
@@ -191,6 +204,7 @@ impl FleetAggregate {
             p90_auc: aucs[r90],
             max_auc: aucs[r_max],
             mean_auc: FleetAggregate::mean_of_quantized(qauc_sum, live_streams),
+            footprint_bytes,
         }
     }
 }
@@ -244,6 +258,7 @@ mod tests {
             alarms: 0,
             alarmed: false,
             baseline: None,
+            footprint_bytes: 64,
         }
     }
 
@@ -273,11 +288,12 @@ mod tests {
     fn aggregate_quantiles_nearest_rank() {
         // 11 values 0.0, 0.1, …, 1.0: every quantile lands on a rank.
         let aucs: Vec<f64> = (0..11).map(|i| f64::from(i) / 10.0).collect();
-        let agg = FleetAggregate::compute(aucs, 11, 2, 99);
+        let agg = FleetAggregate::compute(aucs, 11, 2, 99, 4096);
         assert_eq!(agg.streams, 11);
         assert_eq!(agg.live_streams, 11);
         assert_eq!(agg.alarmed_streams, 2);
         assert_eq!(agg.total_events, 99);
+        assert_eq!(agg.footprint_bytes, 4096);
         assert_eq!(agg.min_auc, 0.0);
         assert_eq!(agg.p10_auc, 0.1);
         assert_eq!(agg.median_auc, 0.5);
@@ -288,14 +304,14 @@ mod tests {
 
     #[test]
     fn aggregate_is_order_independent() {
-        let a = FleetAggregate::compute(vec![0.9, 0.1, 0.5], 3, 0, 3);
-        let b = FleetAggregate::compute(vec![0.5, 0.9, 0.1], 3, 0, 3);
+        let a = FleetAggregate::compute(vec![0.9, 0.1, 0.5], 3, 0, 3, 7);
+        let b = FleetAggregate::compute(vec![0.5, 0.9, 0.1], 3, 0, 3, 7);
         assert_eq!(a, b);
     }
 
     #[test]
     fn aggregate_empty_is_half() {
-        let agg = FleetAggregate::compute(Vec::new(), 0, 0, 0);
+        let agg = FleetAggregate::compute(Vec::new(), 0, 0, 0, 0);
         assert_eq!(agg.live_streams, 0);
         assert_eq!(agg.min_auc, 0.5);
         assert_eq!(agg.median_auc, 0.5);

@@ -17,7 +17,11 @@
 //!
 //! * [`collections`] — the supporting data structures of paper §3:
 //!   augmented red-black tree (`T`, `TP`) and weighted linked lists
-//!   (`P`, `C`).
+//!   (`P`, `C`), both backed by typed slab arenas
+//!   (`collections/arena.rs`): nodes and cells are `u32`-indexed slots
+//!   in pools a *shard* can own, so a million streams share free lists
+//!   instead of each pinning peak-capacity `Vec`s (`rust/DESIGN.md`
+//!   §Memory).
 //! * [`coordinator`] — the estimators of paper §4 (approximate — with
 //!   the incremental `O(1)` read, `coordinator/approx.rs` — exact
 //!   baseline, naive oracle, flipped variant, §7 weighted extension,
@@ -53,7 +57,14 @@
 //!   plus candidate-bin refinement instead of per-stream rescans —
 //!   bit-identical to the retained rescan reference; plus fleet-wide
 //!   drift alarms, streaming snapshots, and idle- and age-based stream
-//!   eviction.
+//!   eviction. Between hot and evicted sits cold-stream hibernation
+//!   (`fleet/frozen.rs`): `hibernate_idle` freezes idle windows into
+//!   compact contiguous buffers — arena slots returned to the shard,
+//!   estimate pinned, queries still answered — and the next push
+//!   rehydrates bit-identically, so a stream that hibernated is
+//!   indistinguishable digest-for-digest from one that never did;
+//!   logical memory accounting (`footprint_bytes`) rides the sketches
+//!   and both wire protocols (`rust/DESIGN.md` §Memory).
 //! * [`serve`] — the fleet's query surface over the wire: a std-only
 //!   [`FleetServer`](serve::FleetServer) speaking HTTP/1.1 (JSON) and a
 //!   length-prefixed binary protocol on one `TcpListener` port, with

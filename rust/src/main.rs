@@ -6,7 +6,8 @@
 //! streamauc fleet  [--streams N] [--events N] [--shards S] [--workers W] [--window K]
 //!                  [--estimator approx|exact|binned] [--epsilon E] [--bins N]
 //!                  [--score-range LO,HI] [--batch B] [--drift-frac F]
-//!                  [--skew X] [--seed S] [--evict-idle N] [--evict-age N] [--pool BOOL]
+//!                  [--skew X] [--seed S] [--evict-idle N] [--evict-age N]
+//!                  [--hibernate-idle N] [--pool BOOL]
 //!                  [--pipeline] [--adaptive] [--top K] [--count-below X] [--hist BINS]
 //! streamauc fleet serve [--addr HOST:PORT] [fleet flags as above]
 //! streamauc train  [--dataset D] [--steps N] [--lr X] [--events N] [--artifacts DIR] [--out FILE]
@@ -87,7 +88,8 @@ USAGE:
   streamauc fleet  [--streams N] [--events N] [--shards S] [--workers W] [--window K]
                    [--estimator approx|exact|binned] [--epsilon E] [--bins N]
                    [--score-range LO,HI] [--batch B] [--drift-frac F]
-                   [--skew X] [--seed S] [--evict-idle N] [--evict-age N] [--pool BOOL]
+                   [--skew X] [--seed S] [--evict-idle N] [--evict-age N]
+                   [--hibernate-idle N] [--pool BOOL]
                    [--pipeline] [--adaptive] [--top K] [--count-below X] [--hist BINS]
   streamauc fleet serve [--addr HOST:PORT] [fleet flags as above]
   streamauc train  [--dataset D] [--steps N] [--lr X] [--events N]
@@ -223,6 +225,7 @@ struct FleetFlags {
     seed: u64,
     evict_idle: u64,
     evict_age: u64,
+    hibernate_idle: u64,
     top: usize,
     hist_bins: usize,
     count_below: Option<f64>,
@@ -231,8 +234,8 @@ struct FleetFlags {
 fn parse_fleet_flags(args: &Args, serve: bool) -> Result<FleetFlags> {
     let mut allowed = vec![
         "streams", "events", "shards", "workers", "window", "estimator", "epsilon", "bins",
-        "score-range", "batch", "drift-frac", "skew", "seed", "evict-idle", "evict-age", "pool",
-        "pipeline", "adaptive", "top", "count-below", "hist",
+        "score-range", "batch", "drift-frac", "skew", "seed", "evict-idle", "evict-age",
+        "hibernate-idle", "pool", "pipeline", "adaptive", "top", "count-below", "hist",
     ];
     if serve {
         allowed.push("addr");
@@ -255,6 +258,7 @@ fn parse_fleet_flags(args: &Args, serve: bool) -> Result<FleetFlags> {
     // Parsed as f64 so `--evict-age inf`/`nan` is *rejected* instead of
     // saturating into a silently-wrong u64 threshold.
     let evict_age_raw: f64 = args.get_or("evict-age", 0.0)?;
+    let hibernate_idle: u64 = args.get_or("hibernate-idle", 0)?;
     let top: usize = args.get_or("top", 10)?;
     let hist_bins: usize = args.get_or("hist", 10)?;
     // `t ≤ 0` counts nothing, `t > 1` counts every live stream — both
@@ -346,6 +350,7 @@ fn parse_fleet_flags(args: &Args, serve: bool) -> Result<FleetFlags> {
         seed,
         evict_idle,
         evict_age: evict_age_raw as u64,
+        hibernate_idle,
         top,
         hist_bins,
         count_below,
@@ -394,6 +399,7 @@ fn cmd_fleet(args: &Args) -> Result<()> {
         batch,
         evict_idle,
         evict_age,
+        hibernate_idle,
         top,
         hist_bins,
         count_below,
@@ -452,6 +458,16 @@ fn cmd_fleet(args: &Args) -> Result<()> {
             "# evicted {dropped} stream(s) older than {evict_age} (clock {}); {} remain",
             fleet.clock(),
             fleet.stream_count()
+        );
+    }
+    if hibernate_idle > 0 {
+        let before = fleet.footprint_bytes();
+        let frozen = fleet.hibernate_idle(hibernate_idle);
+        println!(
+            "# hibernated {frozen} stream(s) idle ≥ {hibernate_idle} events \
+             ({} total frozen); footprint {before} → {} bytes",
+            fleet.hibernated_count(),
+            fleet.footprint_bytes()
         );
     }
     let agg = fleet.aggregate();
@@ -619,6 +635,7 @@ mod tests {
         assert_eq!(f.workers, 1);
         assert_eq!(f.hist_bins, 10);
         assert_eq!(f.evict_age, 0);
+        assert_eq!(f.hibernate_idle, 0);
         assert_eq!(f.count_below, None);
         assert_eq!(f.estimator, EstimatorKind::Approx { epsilon: 0.05 });
     }
@@ -702,5 +719,12 @@ mod tests {
     fn fleet_age_threshold_truncates_to_events() {
         let f = parse_fleet_flags(&fleet_args("--evict-age 1500"), false).unwrap();
         assert_eq!(f.evict_age, 1500);
+    }
+
+    #[test]
+    fn fleet_hibernate_idle_parses_as_events() {
+        let f = parse_fleet_flags(&fleet_args("--hibernate-idle 250"), false).unwrap();
+        assert_eq!(f.hibernate_idle, 250);
+        reject("--hibernate-idle -1", "--hibernate-idle");
     }
 }

@@ -37,8 +37,8 @@ fn stream_snapshot(out: &mut String, s: &StreamSnapshot) {
     num(out, s.auc);
     let _ = write!(
         out,
-        ",\"len\":{},\"compressed_len\":{},\"events\":{},\"alarms\":{},\"alarmed\":{}",
-        s.len, s.compressed_len, s.events, s.alarms, s.alarmed
+        ",\"len\":{},\"compressed_len\":{},\"footprint_bytes\":{},\"events\":{},\"alarms\":{},\"alarmed\":{}",
+        s.len, s.compressed_len, s.footprint_bytes, s.events, s.alarms, s.alarmed
     );
     out.push_str(",\"baseline\":");
     match s.baseline {
@@ -74,8 +74,8 @@ pub fn aggregate_to_json(a: &FleetAggregate) -> String {
     let mut out = String::with_capacity(256);
     let _ = write!(
         out,
-        "{{\"streams\":{},\"live_streams\":{},\"alarmed_streams\":{},\"total_events\":{}",
-        a.streams, a.live_streams, a.alarmed_streams, a.total_events
+        "{{\"streams\":{},\"live_streams\":{},\"alarmed_streams\":{},\"total_events\":{},\"footprint_bytes\":{}",
+        a.streams, a.live_streams, a.alarmed_streams, a.total_events, a.footprint_bytes
     );
     for (key, v) in [
         ("min_auc", a.min_auc),
@@ -470,6 +470,7 @@ fn stream_snapshot_from(v: &Json) -> Result<StreamSnapshot, String> {
         alarms: v.get("alarms")?.u32()?,
         alarmed: v.get("alarmed")?.bool()?,
         baseline: v.get("baseline")?.opt_f64()?,
+        footprint_bytes: v.get("footprint_bytes")?.u64()?,
     })
 }
 
@@ -505,6 +506,7 @@ pub fn aggregate_from_json(text: &str) -> Result<FleetAggregate, String> {
         p90_auc: v.get("p90_auc")?.f64()?,
         max_auc: v.get("max_auc")?.f64()?,
         mean_auc: v.get("mean_auc")?.f64()?,
+        footprint_bytes: v.get("footprint_bytes")?.u64()?,
     })
 }
 
@@ -602,6 +604,7 @@ mod tests {
             alarms: 2,
             alarmed: baseline.is_some(),
             baseline,
+            footprint_bytes: 1234,
         }
     }
 
@@ -665,6 +668,7 @@ mod tests {
             p90_auc: 2.0 / 3.0,
             max_auc: 1.0,
             mean_auc: 0.123_456_789_012_345_67,
+            footprint_bytes: u64::MAX,
         };
         let back = aggregate_from_json(&aggregate_to_json(&agg)).unwrap();
         assert_eq!(back, agg);

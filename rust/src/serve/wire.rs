@@ -209,6 +209,7 @@ fn put_stream_snapshot(out: &mut Vec<u8>, s: &StreamSnapshot) {
     put_f64(out, s.auc);
     put_usize(out, s.len);
     put_usize(out, s.compressed_len);
+    put_u64(out, s.footprint_bytes);
     put_u64(out, s.events);
     put_u32(out, s.alarms);
     put_bool(out, s.alarmed);
@@ -221,6 +222,7 @@ fn stream_snapshot_from(c: &mut Cursor) -> Result<StreamSnapshot, String> {
         auc: c.f64()?,
         len: c.usize()?,
         compressed_len: c.usize()?,
+        footprint_bytes: c.u64()?,
         events: c.u64()?,
         alarms: c.u32()?,
         alarmed: c.bool()?,
@@ -277,6 +279,7 @@ pub fn encode_aggregate(a: &FleetAggregate) -> Vec<u8> {
     put_usize(&mut out, a.live_streams);
     put_usize(&mut out, a.alarmed_streams);
     put_u64(&mut out, a.total_events);
+    put_u64(&mut out, a.footprint_bytes);
     for v in [a.min_auc, a.p10_auc, a.median_auc, a.p90_auc, a.max_auc, a.mean_auc] {
         put_f64(&mut out, v);
     }
@@ -291,6 +294,7 @@ pub fn decode_aggregate(payload: &[u8]) -> Result<FleetAggregate, String> {
         live_streams: c.usize()?,
         alarmed_streams: c.usize()?,
         total_events: c.u64()?,
+        footprint_bytes: c.u64()?,
         min_auc: c.f64()?,
         p10_auc: c.f64()?,
         median_auc: c.f64()?,
@@ -474,6 +478,7 @@ mod tests {
             alarms: 1,
             alarmed: baseline.is_some(),
             baseline,
+            footprint_bytes: 256,
         }
     }
 
@@ -512,6 +517,7 @@ mod tests {
             p90_auc: 0.9,
             max_auc: 1.0,
             mean_auc: 2.0 / 3.0,
+            footprint_bytes: u64::MAX,
         };
         let back = decode_aggregate(&encode_aggregate(&agg)).unwrap();
         assert_eq!(back, agg);
@@ -540,6 +546,7 @@ mod tests {
             p90_auc: 0.5,
             max_auc: 0.5,
             mean_auc: 0.5,
+            footprint_bytes: 640,
         }))
         .unwrap();
         let full = encode_aggregate(&agg);

@@ -28,12 +28,16 @@
 //!   half the same-bin positive–negative pair fraction — after every
 //!   operation, and the fleet auto-selection rule `bins = ⌈2/ε⌉`
 //!   ([`StreamConfig::auto`]) lands both the bound and the realized
-//!   error under `ε/2` on dense uniform windows, for every paper ε.
+//!   error under `ε/2` on dense uniform windows, for every paper ε;
+//! * hibernate/rehydrate bit-identity: a stream frozen into the compact
+//!   cold form and thawed by its next push reads the same `auc()` bits
+//!   after every event as one that never hibernated, for every
+//!   estimator kind in both regimes (`fleet/frozen.rs`).
 
 use streamauc::coordinator::{
     ApproxAuc, AucEstimator, BinnedAuc, ExactAuc, FlippedAuc, MaintainedExactAuc, NaiveAuc,
 };
-use streamauc::fleet::{EstimatorKind, StreamConfig};
+use streamauc::fleet::{AucFleet, EstimatorKind, FleetConfig, StreamConfig};
 use streamauc::testing::{check, gen_ops, Op};
 
 const CASES: u64 = 100;
@@ -338,6 +342,74 @@ fn flipped_guarantee_against_naive() {
                 (est - truth).abs() <= tol,
                 "flipped: |{est} − {truth}| > (1 − auc)·ε/2 (ε = {eps})"
             );
+        });
+    }
+}
+
+/// Hibernate/rehydrate bit-identity (`fleet/frozen.rs`): for every
+/// estimator kind and both score regimes, a single-stream fleet that
+/// freezes at random points along a windowed trace — thawed
+/// transparently by the next push — reads the same `auc()` bits after
+/// every event as a twin that never hibernates. `Shard::thaw_slot`
+/// additionally asserts the rebuilt estimator reproduces the frozen
+/// estimate's bits, so every `hibernate_idle(0)` here also arms that
+/// internal check for the very next push.
+#[test]
+fn hibernation_is_bit_identical_for_every_estimator_kind() {
+    let kinds = [
+        EstimatorKind::Approx { epsilon: 0.1 },
+        EstimatorKind::Approx { epsilon: 0.01 },
+        EstimatorKind::ExactMaintained,
+        EstimatorKind::Binned { bins: 64, lo: 0.0, hi: 1.0 },
+    ];
+    for (j, kind) in kinds.into_iter().enumerate() {
+        check(0xF07E_0000 ^ j as u64, 25, |rng| {
+            // Duplicate-grid and continuum regimes alike; grids are
+            // power-of-two so exact score arithmetic is preserved.
+            let grid = if rng.chance(0.5) { Some(1u64 << (2 + rng.below(4))) } else { None };
+            let window = 40 + rng.below(60) as usize;
+            let defaults = StreamConfig { window, estimator: kind, monitor: None };
+            let mk = || {
+                AucFleet::new(FleetConfig {
+                    shards: 4,
+                    workers: 1,
+                    pool: false,
+                    pipeline: false,
+                    adaptive: false,
+                    stream_defaults: defaults,
+                })
+            };
+            let (mut hib, mut twin) = (mk(), mk());
+            for i in 0..3 * window {
+                let score = match grid {
+                    Some(g) => rng.below(g) as f64 / g as f64,
+                    None => rng.uniform(),
+                };
+                let pos = rng.chance(0.5);
+                hib.push(7, score, pos);
+                twin.push(7, score, pos);
+                if rng.chance(0.08) {
+                    assert_eq!(hib.hibernate_idle(0), 1, "the lone stream must freeze");
+                    assert!(hib.is_hibernated(7));
+                }
+                // Reads agree to the bit after every event, whether the
+                // stream is live, frozen (pinned estimate), or was just
+                // rehydrated by this push.
+                assert_eq!(
+                    hib.auc(7).map(f64::to_bits),
+                    twin.auc(7).map(f64::to_bits),
+                    "estimate bits diverged at event {i} ({kind:?})"
+                );
+                assert_eq!(hib.stream_len(7), twin.stream_len(7));
+            }
+            // One final push thaws a still-frozen survivor; the fleets
+            // must then be indistinguishable wholesale — live logical
+            // footprints included, because they are content-determined.
+            hib.push(7, 0.5, true);
+            twin.push(7, 0.5, true);
+            assert!(!hib.is_hibernated(7));
+            hib.verify_sketches();
+            assert_eq!(hib.snapshot(), twin.snapshot());
         });
     }
 }

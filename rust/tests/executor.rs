@@ -61,6 +61,9 @@ enum Step {
     EvictIdle(u64),
     /// Timestamp-age eviction with the given threshold between batches.
     EvictOlderThan(u64),
+    /// Cold-stream hibernation sweep with the given idle threshold
+    /// between batches; subsequent batches rehydrate transparently.
+    Hibernate(u64),
 }
 
 /// Everything observable about a schedule run. Two fleets are
@@ -74,6 +77,7 @@ struct Digest {
     histograms: Vec<AucHistogram>,
     evicted: Vec<usize>,
     evicted_by_age: Vec<usize>,
+    hibernated: Vec<usize>,
     final_streams: Vec<StreamSnapshot>,
     final_alarmed: Vec<u64>,
     alarms: Vec<FleetAlarm>,
@@ -89,6 +93,7 @@ fn run_schedule(fleet: &mut AucFleet, batches: &[Vec<Event>], steps: &[Step]) ->
     let mut histograms = Vec::new();
     let mut evicted = Vec::new();
     let mut evicted_by_age = Vec::new();
+    let mut hibernated = Vec::new();
     for &step in steps {
         match step {
             Step::Batch(i) => fleet.push_batch_at(&batches[i], (i as u64 + 1) * BATCH_CLOCK),
@@ -146,6 +151,7 @@ fn run_schedule(fleet: &mut AucFleet, batches: &[Vec<Event>], steps: &[Step]) ->
             }
             Step::EvictIdle(max_idle) => evicted.push(fleet.evict_idle(max_idle)),
             Step::EvictOlderThan(max_age) => evicted_by_age.push(fleet.evict_older_than(max_age)),
+            Step::Hibernate(max_idle) => hibernated.push(fleet.hibernate_idle(max_idle)),
         }
     }
     // Whatever the schedule did — drains, evictions, resets — every
@@ -160,6 +166,7 @@ fn run_schedule(fleet: &mut AucFleet, batches: &[Vec<Event>], steps: &[Step]) ->
         histograms,
         evicted,
         evicted_by_age,
+        hibernated,
         final_streams: snap.streams,
         final_alarmed: snap.alarmed_streams,
         alarms: fleet.alarms().to_vec(),
@@ -281,6 +288,13 @@ fn pooled_ingestion_is_bit_identical_to_serial_under_adversarial_schedules() {
                 };
                 steps.push(Step::Histogram(bins));
             }
+            if i % 23 == 11 {
+                // Thresholds derived from `i` (no rng draw, so the
+                // seeded schedule above is unperturbed): i = 80 yields
+                // 0 — a freeze-everything sweep the very next batch
+                // must transparently rehydrate out of.
+                steps.push(Step::Hibernate((i as u64 % 5) * 150));
+            }
             let in_age_window = i >= 2 * n_batches / 3 && i < 5 * n_batches / 6;
             if i % 29 == 17 && !in_age_window {
                 // Small enough that the tail's silent stretch (≥ 14
@@ -307,6 +321,10 @@ fn pooled_ingestion_is_bit_identical_to_serial_under_adversarial_schedules() {
             reference.top_k.iter().any(|k| !k.is_empty())
                 && reference.histograms.iter().any(|h| h.live_streams > 0),
             "adversarial scenario must produce query results to compare"
+        );
+        assert!(
+            reference.hibernated.iter().any(|&h| h > 0),
+            "adversarial scenario must hibernate something to compare"
         );
 
         for workers in [2usize, 4, 8, 16] {
@@ -1172,4 +1190,62 @@ fn age_eviction_is_bit_identical_across_strategies() {
     assert_eq!(serial.snapshot(), pooled.snapshot());
     assert_eq!(serial.clock(), pooled.clock());
     assert_eq!(serial.alarms(), pooled.alarms());
+}
+
+/// `hibernate_idle` across strategies — and against a twin that never
+/// hibernates at all. Freeze sweeps (cold-only and freeze-everything)
+/// interleave with skewed batches that transparently rehydrate
+/// whatever they touch; the serial and pooled/pipelined/adaptive
+/// hibernating fleets must freeze identical counts and answer
+/// identical sketch-vs-rescan aggregates, and once a final batch thaws
+/// every survivor, all three fleets — including the never-hibernated
+/// twin — must be indistinguishable snapshot-for-snapshot (footprints
+/// included: live footprint is content-determined, so a rehydrated
+/// stream weighs exactly what its never-frozen twin does).
+#[test]
+fn hibernation_is_bit_identical_across_strategies() {
+    let mut rng = Pcg::seed(0xF0_C01D);
+    let n_streams = 32u64;
+    let batches = skewed_batches(&mut rng, n_streams, 40);
+    let mut serial = fleet_with(1, false, false);
+    let mut pooled = fleet_with_adaptive(8, true, true, true);
+    let mut never = fleet_with(4, true, false);
+    let mut frozen_counts = Vec::new();
+    for (which, fleet) in [&mut serial, &mut pooled, &mut never].into_iter().enumerate() {
+        let hibernating = which < 2;
+        let mut frozen = Vec::new();
+        for (i, batch) in batches.iter().enumerate() {
+            fleet.push_batch_at(batch, (i as u64 + 1) * 100);
+            if hibernating && i % 7 == 3 {
+                // Alternate a freeze-everything sweep (threshold 0)
+                // with a cold-only sweep; the silent stretches of the
+                // skewed trace guarantee the latter finds victims too.
+                frozen.push(fleet.hibernate_idle(if i % 14 == 3 { 0 } else { 400 }));
+                assert_eq!(
+                    fleet.aggregate(),
+                    fleet.aggregate_rescan(),
+                    "sketch aggregate drifted over frozen streams at batch {i}"
+                );
+            }
+        }
+        if hibernating {
+            frozen_counts.push(frozen);
+        }
+    }
+    assert_eq!(frozen_counts[0], frozen_counts[1], "hibernation counts diverged");
+    assert!(frozen_counts[0].iter().any(|&h| h > 0), "scenario must hibernate something");
+    // Thaw every survivor with one event per stream, identically on
+    // all three fleets, then compare them whole.
+    let tail: Vec<Event> = (0..n_streams).map(|id| (id, 0.5, id % 2 == 0)).collect();
+    for fleet in [&mut serial, &mut pooled, &mut never] {
+        fleet.push_batch_at(&tail, 41 * 100);
+        assert_eq!(fleet.hibernated_count(), 0, "tail batch must rehydrate every stream");
+        fleet.verify_sketches();
+    }
+    let reference = never.snapshot();
+    assert_eq!(serial.snapshot(), reference, "serial hibernating fleet diverged");
+    assert_eq!(pooled.snapshot(), reference, "pooled hibernating fleet diverged");
+    assert_eq!(serial.alarms(), never.alarms());
+    assert_eq!(pooled.alarms(), never.alarms());
+    assert_eq!(serial.footprint_bytes(), never.footprint_bytes());
 }

@@ -206,6 +206,61 @@ fn http_and_binary_answers_decode_to_the_same_value() {
 }
 
 // ---------------------------------------------------------------------
+// Memory accounting over the wire
+// ---------------------------------------------------------------------
+
+/// `footprint_bytes` — per stream and in the aggregate — must survive
+/// both protocols byte-derived, sum to the fleet-wide total, and track
+/// hibernation: freezing every stream shrinks each served figure to
+/// the compact form's cost while AUC bits and lengths stay pinned.
+#[test]
+fn footprint_bytes_track_hibernation_on_both_protocols() {
+    let server = FleetServer::start(mixed_fleet(2, false), "127.0.0.1:0").expect("bind");
+    let addr = server.local_addr();
+
+    let live_total = server.with_fleet(|f| f.footprint_bytes());
+    assert!(live_total > 0);
+    let live = json::snapshot_from_json(&get_ok(addr, "/snapshot")).expect("decode");
+    assert!(live.streams.iter().all(|s| s.footprint_bytes > 0));
+    assert_eq!(live.streams.iter().map(|s| s.footprint_bytes).sum::<u64>(), live_total);
+    let agg = json::aggregate_from_json(&get_ok(addr, "/aggregate")).expect("decode");
+    assert_eq!(agg.footprint_bytes, live_total);
+
+    let frozen = server.with_fleet_mut(|f| f.hibernate_idle(0));
+    assert_eq!(frozen, live.streams.len(), "every stream must freeze");
+
+    // HTTP: byte-derived, shrunk per stream, estimates pinned.
+    let body = get_ok(addr, "/snapshot");
+    let hib = json::snapshot_from_json(&body).expect("decode");
+    assert_eq!(json::snapshot_to_json(&hib), body);
+    let hib_total = server.with_fleet(|f| f.footprint_bytes());
+    assert!(
+        hib_total * 3 <= live_total,
+        "hibernated total {hib_total} not ≤ ⅓ of live {live_total}"
+    );
+    assert_eq!(hib.streams.iter().map(|s| s.footprint_bytes).sum::<u64>(), hib_total);
+    for (l, h) in live.streams.iter().zip(&hib.streams) {
+        assert_eq!(l.stream, h.stream);
+        assert_eq!(l.auc.to_bits(), h.auc.to_bits(), "frozen estimate must stay pinned");
+        assert_eq!(l.len, h.len);
+        assert!(h.footprint_bytes < l.footprint_bytes, "stream {} did not shrink", l.stream);
+    }
+
+    // The binary protocol serves the same figures, byte-derived.
+    let mut bin = BinClient::connect(addr).expect("binary session");
+    let (status, payload) = bin.request(wire::OP_SNAPSHOT, &[]).expect("binary round-trip");
+    assert_eq!(status, wire::STATUS_OK);
+    let via_bin = wire::decode_snapshot(&payload).expect("decode snapshot");
+    assert_eq!(via_bin, hib);
+    assert_eq!(wire::encode_snapshot(&via_bin), payload);
+    let (status, payload) = bin.request(wire::OP_AGGREGATE, &[]).expect("binary round-trip");
+    assert_eq!(status, wire::STATUS_OK);
+    let agg = wire::decode_aggregate(&payload).expect("decode aggregate");
+    assert_eq!(agg.footprint_bytes, hib_total);
+    assert_eq!(wire::encode_aggregate(&agg), payload);
+}
+
+// ---------------------------------------------------------------------
 // Empty-fleet and one-stream edges (network-reachable since the
 // quantile-rank underflow fix)
 // ---------------------------------------------------------------------

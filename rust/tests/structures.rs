@@ -17,6 +17,11 @@
 //!   recount, and the delta-maintained doubled-area accumulator vs the
 //!   Eq. 1 scan — all via `MaintainedExactAuc::check_invariants`.
 //!
+//! * Arena capacity regression: the pooled free lists must not grow
+//!   monotonically — `shrink_to_fit` (and the automatic drain-to-empty
+//!   hook) returns a churn spike's slot capacity instead of pinning
+//!   the peak forever.
+//!
 //! All sequences come from the seeded harness; failures print a replay
 //! seed.
 
@@ -164,6 +169,55 @@ fn maintained_exact_invariants_hold_after_every_op() {
             }
         });
     }
+}
+
+#[test]
+fn arena_capacity_sheds_after_a_churn_spike() {
+    // The estimators' arenas recycle freed slots but never release
+    // them on their own; `shrink_to_fit` is the explicit trim, and
+    // draining to empty trims automatically. A spike of 2000 entries
+    // followed by a LIFO drain to a small residue frees the slab tails
+    // (tree nodes never move slots, so last-inserted sits last), which
+    // is exactly what the trim must give back.
+    check(0x5EED_CA9, 10, |rng| {
+        let mut approx = ApproxAuc::new(0.1);
+        let mut maintained = MaintainedExactAuc::new();
+        let mut window: Vec<(f64, bool)> = Vec::new();
+        for _ in 0..2000 {
+            let (s, l) = (rng.uniform(), rng.chance(0.5));
+            approx.insert(s, l);
+            maintained.insert(s, l);
+            window.push((s, l));
+        }
+        let (peak_a, peak_m) = (approx.capacity(), maintained.capacity());
+        while window.len() > 16 {
+            let (s, l) = window.pop().unwrap();
+            approx.remove(s, l);
+            maintained.remove(s, l);
+        }
+        // Freed slots are retained for reuse until explicitly trimmed…
+        approx.shrink_to_fit();
+        maintained.shrink_to_fit();
+        assert!(
+            approx.capacity() < peak_a / 4,
+            "approx capacity {} did not shed from peak {peak_a}",
+            approx.capacity()
+        );
+        assert!(
+            maintained.capacity() < peak_m / 4,
+            "maintained capacity {} did not shed from peak {peak_m}",
+            maintained.capacity()
+        );
+        approx.check_invariants();
+        maintained.check_invariants();
+        // …and draining to empty trims to nothing without being asked.
+        while let Some((s, l)) = window.pop() {
+            approx.remove(s, l);
+            maintained.remove(s, l);
+        }
+        assert_eq!(approx.capacity(), 0, "drained approx must release all slots");
+        assert_eq!(maintained.capacity(), 0, "drained maintained must release all slots");
+    });
 }
 
 #[test]
