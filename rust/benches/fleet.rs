@@ -60,10 +60,21 @@
 //! A **served-reads** measurement rides the same data over the wire
 //! (`rust/src/serve`): a pre-ingested pooled fleet goes behind a
 //! loopback `FleetServer` while a background thread keeps feeding
-//! 64-event batches through it, and `serve_qps` counts keep-alive HTTP
-//! `/aggregate` round-trips per second under that concurrent write
-//! load. The 1-stream row skips the server and reports 0 — one stream
-//! is not a serving scenario.
+//! 64-event batches through it. `serve_qps` counts keep-alive HTTP
+//! `/aggregate` round-trips per second — the snapshot-read path,
+//! answered from the epoch-swapped `PublishedView` with zero
+//! fleet-lock acquisitions — and `serve_qps_locked` counts
+//! `/score_histogram?bins=10` round-trips, the one endpoint that must
+//! take the fleet lock per request; their ratio (`speedup_serve_view`)
+//! is what the publish layer buys under concurrent write load. The
+//! 1-stream row skips the server and reports 0 — one stream is not a
+//! serving scenario. A separate **fan-out** section attaches
+//! [`FANOUT_SUBS`] binary subscribers to one server, publishes
+//! [`FANOUT_ROUNDS`] sketch deltas through it, and reports delivered
+//! push frames per second across all subscribers (lag resyncs — a
+//! coalesced notice + fresh baseline — count as the frames actually
+//! written); every subscriber is asserted to land on the final
+//! publication seq.
 //!
 //! A **mem** section measures the million-stream memory story
 //! (`rust/DESIGN.md` §Memory): for each stream count it fills a fleet
@@ -96,12 +107,12 @@
 use std::fmt::Write as _;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use streamauc::coordinator::window::Window;
 use streamauc::coordinator::{ApproxAuc, AucMonitor};
 use streamauc::fleet::{AucFleet, FleetConfig, StreamConfig};
-use streamauc::serve::{FleetServer, HttpClient};
+use streamauc::serve::{BinClient, FleetServer, HttpClient, ServeLimits, SubEvent};
 use streamauc::stream::MultiStream;
 
 const WINDOW: usize = 100;
@@ -120,6 +131,11 @@ const MEM_FILL: usize = 16;
 const LIVE_BUDGET_BYTES: f64 = 6144.0;
 /// Asserted ceiling on logical bytes per hibernated stream.
 const HIB_BUDGET_BYTES: f64 = 768.0;
+
+/// Binary subscribers attached in the fan-out section.
+const FANOUT_SUBS: usize = 256;
+/// Sketch publications driven through the fan-out server.
+const FANOUT_ROUNDS: usize = 200;
 
 struct Row {
     streams: usize,
@@ -146,7 +162,15 @@ struct Row {
     binned_serial: f64,
     binned_pooled: f64,
     serve_qps: f64,
+    serve_qps_locked: f64,
     live: usize,
+}
+
+/// The subscriber fan-out measurement: one server, [`FANOUT_SUBS`]
+/// binary subscribers, [`FANOUT_ROUNDS`] publications.
+struct FanoutRow {
+    deliveries_per_sec: f64,
+    lag_resyncs: usize,
 }
 
 fn fresh_fleet(monitor: bool, workers: usize, pool: bool, pipeline: bool, adaptive: bool) -> AucFleet {
@@ -318,6 +342,73 @@ fn mem_row(workers: usize, n_streams: usize) -> MemRow {
     MemRow { streams: n_streams, live, live_bytes, hib_bytes, rss_live_kb, rss_hib_kb, rehydrate_ns }
 }
 
+/// The fan-out measurement: attach [`FANOUT_SUBS`] binary subscribers
+/// to one server, drive [`FANOUT_ROUNDS`] publications through it,
+/// then drain every subscriber to the final publication seq. Seq
+/// tracking rides the protocol contract — one delta per seq bump,
+/// gapless until a lag notice, whose following baseline lands at the
+/// notice's seq — so a subscriber that lagged and one that kept up
+/// both converge on the same seq, asserted per subscriber. The rate is
+/// push frames actually delivered (deltas + lag notices + baselines)
+/// across all subscribers over the publish+drain wall clock — the
+/// coalescing policy means a lagging subscriber costs *less* to catch
+/// up, not more, and the number reflects that.
+fn fanout_row(workers: usize) -> FanoutRow {
+    let mut gen = MultiStream::new(1_000, 0xFA17).with_mean_burst(4.0);
+    let mut fed = fresh_fleet(false, workers, true, false, false);
+    fed.push_batch(&gen.next_batch(20_000));
+    // max_conns caps attached subscribers too — leave headroom over
+    // FANOUT_SUBS; the generous timeout keeps writers blocked on full
+    // loopback buffers alive until the drain below reads them out.
+    let server = FleetServer::start_with(
+        fed,
+        "127.0.0.1:0",
+        ServeLimits { workers: 4, max_conns: 2 * FANOUT_SUBS, timeout: Duration::from_secs(30) },
+    )
+    .expect("bind loopback");
+    let addr = server.local_addr();
+    // (client, seq it has caught up to) — the subscribe response's seq
+    // echo is the baseline's publication epoch.
+    let mut subs: Vec<(BinClient, u64)> = (0..FANOUT_SUBS)
+        .map(|_| {
+            let mut c = BinClient::connect(addr).expect("connect subscriber");
+            c.subscribe().expect("subscribe");
+            let seq = c.last_seq().expect("baseline seq echo");
+            (c, seq)
+        })
+        .collect();
+    assert_eq!(server.subscriber_count(), FANOUT_SUBS, "every subscriber attached");
+
+    let start = Instant::now();
+    for _ in 0..FANOUT_ROUNDS {
+        server.ingest_batch(&gen.next_batch(SMALL_BATCH));
+    }
+    let final_seq = server.last_published().0;
+
+    let mut deliveries = 0usize;
+    let mut lag_resyncs = 0usize;
+    for (sub, seq) in &mut subs {
+        while *seq < final_seq {
+            deliveries += 1;
+            match sub.next_event().expect("push frame") {
+                SubEvent::Delta(_) => *seq += 1,
+                SubEvent::Lagged(at) => {
+                    lag_resyncs += 1;
+                    match sub.next_event().expect("frame after lag") {
+                        SubEvent::Baseline(_) => deliveries += 1,
+                        _ => panic!("lag notice not followed by a baseline"),
+                    }
+                    *seq = at;
+                }
+                SubEvent::Baseline(_) => panic!("baseline without a lag notice"),
+            }
+        }
+        assert_eq!(*seq, final_seq, "subscriber overshot the final publication");
+    }
+    let elapsed = start.elapsed().as_secs_f64();
+    FanoutRow { deliveries_per_sec: deliveries as f64 / elapsed, lag_resyncs }
+}
+
 fn flag(args: &[String], name: &str, default: usize) -> usize {
     match args.iter().position(|a| a == name) {
         Some(i) => args
@@ -329,7 +420,13 @@ fn flag(args: &[String], name: &str, default: usize) -> usize {
     }
 }
 
-fn json_report(events_per_row: usize, workers: usize, rows: &[Row], mem: &[MemRow]) -> String {
+fn json_report(
+    events_per_row: usize,
+    workers: usize,
+    rows: &[Row],
+    fanout: &FanoutRow,
+    mem: &[MemRow],
+) -> String {
     let mut s = String::new();
     s.push_str("{\n");
     let _ = writeln!(s, "  \"bench\": \"fleet\",");
@@ -356,13 +453,14 @@ fn json_report(events_per_row: usize, workers: usize, rows: &[Row], mem: &[MemRo
              \"small_batch_pooled\": {:.1}, \"small_batch_adaptive\": {:.1}, \
              \"mixed_serial\": {:.1}, \"mixed_pooled\": {:.1}, \
              \"binned_serial\": {:.1}, \"binned_pooled\": {:.1}, \
-             \"serve_qps\": {:.1}, \
+             \"serve_qps\": {:.1}, \"serve_qps_locked\": {:.1}, \
              \"speedup_scoped\": {:.3}, \"speedup_pooled\": {:.3}, \"speedup_pipelined\": {:.3}, \
              \"speedup_monitor\": {:.3}, \"speedup_monitor_read\": {:.3}, \
              \"speedup_aggregate\": {:.3}, \"speedup_aggregate_sketch\": {:.3}, \
              \"speedup_query\": {:.3}, \
              \"speedup_snapshot\": {:.3}, \"speedup_small_batch\": {:.3}, \
-             \"speedup_mixed\": {:.3}, \"speedup_binned\": {:.3}}}",
+             \"speedup_mixed\": {:.3}, \"speedup_binned\": {:.3}, \
+             \"speedup_serve_view\": {:.3}}}",
             r.streams,
             r.live,
             r.one_at_a_time,
@@ -388,6 +486,7 @@ fn json_report(events_per_row: usize, workers: usize, rows: &[Row], mem: &[MemRo
             r.binned_serial,
             r.binned_pooled,
             r.serve_qps,
+            r.serve_qps_locked,
             r.batched_scoped / r.batched_serial,
             r.batched_pooled / r.batched_serial,
             r.pipelined / r.batched_serial,
@@ -400,10 +499,22 @@ fn json_report(events_per_row: usize, workers: usize, rows: &[Row], mem: &[MemRo
             r.small_batch_adaptive / r.small_batch_pooled,
             r.mixed_pooled / r.mixed_serial,
             r.binned_pooled / r.binned_serial,
+            // 0 for the skipped 1-stream row — 0/0 would print NaN,
+            // which is not JSON.
+            if r.serve_qps_locked > 0.0 {
+                r.serve_qps / r.serve_qps_locked
+            } else {
+                0.0
+            },
         );
         s.push_str(if i + 1 < rows.len() { ",\n" } else { "\n" });
     }
     s.push_str("  ],\n");
+    let fanout_rate = fanout.deliveries_per_sec;
+    let _ = writeln!(s, "  \"serve_fanout_subscribers\": {FANOUT_SUBS},");
+    let _ = writeln!(s, "  \"serve_fanout_rounds\": {FANOUT_ROUNDS},");
+    let _ = writeln!(s, "  \"serve_fanout_deliveries_per_sec\": {fanout_rate:.1},");
+    let _ = writeln!(s, "  \"serve_fanout_lag_resyncs\": {},", fanout.lag_resyncs);
     let _ = writeln!(s, "  \"mem_window\": {MEM_WINDOW},");
     let _ = writeln!(s, "  \"mem_fill\": {MEM_FILL},");
     let _ = writeln!(s, "  \"mem_live_budget_bytes\": {LIVE_BUDGET_BYTES},");
@@ -605,16 +716,26 @@ fn main() {
         let monitored_cached = monitored_stack(&soup, false);
         let monitored_scan = monitored_stack(&soup, true);
 
-        // ---- served reads: keep-alive HTTP /aggregate round-trips
-        // answered while a background thread keeps ingesting 64-event
-        // batches through the same server --------------------------
-        let serve_qps = if n_streams > 1 {
+        // ---- served reads: keep-alive HTTP round-trips answered
+        // while a background thread keeps ingesting 64-event batches
+        // through the same server. /aggregate answers from the
+        // epoch-swapped published view (no fleet lock);
+        // /score_histogram is the one endpoint that must lock the
+        // fleet per request — the pair prices the snapshot-read
+        // path against the fleet-lock path under write load. ---------
+        let (serve_qps, serve_qps_locked) = if n_streams > 1 {
             let mut fed = fresh_fleet(false, workers, true, false, false);
             for batch in soup.chunks(BATCH) {
                 fed.push_batch(batch);
             }
-            let server =
-                Arc::new(FleetServer::start(fed, "127.0.0.1:0").expect("bind loopback"));
+            let server = Arc::new(
+                FleetServer::start_with(
+                    fed,
+                    "127.0.0.1:0",
+                    ServeLimits { workers: 4, max_conns: 64, timeout: Duration::from_secs(10) },
+                )
+                .expect("bind loopback"),
+            );
             let addr = server.local_addr();
             let stop = Arc::new(AtomicBool::new(false));
             let feeder = {
@@ -631,16 +752,22 @@ fn main() {
                 })
             };
             let mut client = HttpClient::connect(addr).expect("connect loopback");
-            let qps = calls_per_sec(|| {
+            let view_qps = calls_per_sec(|| {
                 let (status, body) = client.get("/aggregate").expect("served aggregate");
                 assert_eq!(status, 200, "served aggregate errored mid-bench");
                 assert!(!body.is_empty());
             });
+            let locked_qps = calls_per_sec(|| {
+                let (status, body) =
+                    client.get("/score_histogram?bins=10").expect("served histogram");
+                assert_eq!(status, 200, "served score histogram errored mid-bench");
+                assert!(!body.is_empty());
+            });
             stop.store(true, Ordering::Relaxed);
             feeder.join().expect("feeder thread");
-            qps
+            (view_qps, locked_qps)
         } else {
-            0.0
+            (0.0, 0.0)
         };
 
         println!(
@@ -675,6 +802,7 @@ fn main() {
             binned_serial,
             binned_pooled,
             serve_qps,
+            serve_qps_locked,
             live,
         });
     }
@@ -751,15 +879,32 @@ fn main() {
         );
     }
 
-    println!("\n== served reads: HTTP /aggregate qps under concurrent ingestion ==\n");
-    println!("{:>8}  {:>12}", "streams", "serve_qps");
+    println!(
+        "\n== served reads: HTTP qps under concurrent ingestion \
+         (view = /aggregate from the published view, locked = /score_histogram \
+         through the fleet lock) ==\n"
+    );
+    println!("{:>8}  {:>12}  {:>12}  {:>6}", "streams", "view qps", "locked qps", "gain");
     for r in &rows {
         if r.serve_qps > 0.0 {
-            println!("{:>8}  {:>10.0}/s", r.streams, r.serve_qps);
+            println!(
+                "{:>8}  {:>10.0}/s  {:>10.0}/s  {:>5.2}x",
+                r.streams, r.serve_qps, r.serve_qps_locked, r.serve_qps / r.serve_qps_locked
+            );
         } else {
-            println!("{:>8}  {:>12}", r.streams, "(skipped)");
+            println!("{:>8}  {:>12}  {:>12}  {:>6}", r.streams, "(skipped)", "", "");
         }
     }
+
+    println!(
+        "\n== served fan-out: {FANOUT_SUBS} binary subscribers × {FANOUT_ROUNDS} \
+         publications ==\n"
+    );
+    let fanout = fanout_row(workers);
+    println!(
+        "  {:>10.0} push frames/s delivered, {} lag resync(s) coalesced",
+        fanout.deliveries_per_sec, fanout.lag_resyncs
+    );
 
     println!(
         "\n== mem: bytes/stream live vs hibernated (k={MEM_WINDOW}, ~{MEM_FILL} events/stream; \
@@ -790,7 +935,7 @@ fn main() {
     }
 
     let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_fleet.json");
-    let report = json_report(events_per_row, workers, &rows, &mem_rows);
+    let report = json_report(events_per_row, workers, &rows, &fanout, &mem_rows);
     match std::fs::write(&path, &report) {
         Ok(()) => println!("\nwrote {}", path.display()),
         Err(e) => eprintln!("could not write {}: {e}", path.display()),

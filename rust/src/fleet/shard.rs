@@ -114,11 +114,13 @@ pub(super) fn threshold_bin(threshold: f64) -> usize {
 
 /// The "worst stream first" total order on `(windowed AUC, stream id)`
 /// keys: ascending AUC, ties broken by id. Shared by
-/// [`Shard::top_k_worst`] and the global merge in `fleet/query.rs` —
+/// [`Shard::top_k_worst`], the global merge in `fleet/query.rs`, and
+/// the serving layer's published-view ranking (`serve/publish.rs`) —
 /// the per-shard truncation argument ("any global top-k member is in
-/// its own shard's top-k") is sound **only** while both sorts use this
-/// exact order, so neither site may diverge from it.
-pub(super) fn worst_first(a: (f64, u64), b: (f64, u64)) -> std::cmp::Ordering {
+/// its own shard's top-k") and the wire-answer bit-identity proof are
+/// sound **only** while every sort uses this exact order, so no site
+/// may diverge from it.
+pub(crate) fn worst_first(a: (f64, u64), b: (f64, u64)) -> std::cmp::Ordering {
     a.0.total_cmp(&b.0).then(a.1.cmp(&b.1))
 }
 

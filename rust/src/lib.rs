@@ -68,9 +68,18 @@
 //! * [`serve`] — the fleet's query surface over the wire: a std-only
 //!   [`FleetServer`](serve::FleetServer) speaking HTTP/1.1 (JSON) and a
 //!   length-prefixed binary protocol on one `TcpListener` port, with
-//!   every endpoint answering bit-identical to the in-process query and
-//!   a subscription stream pushing one fleet-sketch delta per ingestion
-//!   drain (`rust/DESIGN.md` §Serving).
+//!   every endpoint answering bit-identical to the in-process query at
+//!   an echoed publication seq and a subscription stream pushing one
+//!   fleet-sketch delta per ingestion drain. The front-end is bounded
+//!   and deadline-driven: `serve/limits.rs` (worker pool sizing, the
+//!   bounded accept queue that sheds overload with 503/`STATUS_BUSY`,
+//!   socket timeouts + per-request deadline budgets, the
+//!   live-connection tracker that makes shutdown a real drain) and
+//!   `serve/publish.rs` (epoch-swapped
+//!   [`PublishedView`](serve::PublishedView)s serving sketch-answerable
+//!   reads without the fleet lock, plus per-subscriber bounded queues
+//!   with a lag-coalescing resync so no stuck client stalls ingestion)
+//!   (`rust/DESIGN.md` §Serving).
 //! * [`stream`] — deterministic synthetic data sources standing in for the
 //!   paper's UCI datasets (see `DESIGN.md` §Substitutions), the
 //!   multi-stream fleet generator, drift injectors and CSV I/O.

@@ -9,7 +9,8 @@
 //!                  [--skew X] [--seed S] [--evict-idle N] [--evict-age N]
 //!                  [--hibernate-idle N] [--pool BOOL]
 //!                  [--pipeline] [--adaptive] [--top K] [--count-below X] [--hist BINS]
-//! streamauc fleet serve [--addr HOST:PORT] [fleet flags as above]
+//! streamauc fleet serve [--addr HOST:PORT] [--serve-workers W] [--max-conns N]
+//!                  [--timeout-ms MS] [fleet flags as above]
 //! streamauc train  [--dataset D] [--steps N] [--lr X] [--events N] [--artifacts DIR] [--out FILE]
 //! streamauc help
 //! ```
@@ -28,7 +29,11 @@
 //! the wire — HTTP/1.1 JSON and a binary protocol on one `--addr`
 //! port, plus a `/subscribe` stream of per-drain sketch deltas
 //! (`rust/DESIGN.md` §Serving) — and keeps serving after the ingest
-//! completes, until interrupted.
+//! completes, until interrupted. Its front-end is bounded:
+//! `--serve-workers` connection workers (distinct from the ingestion
+//! pool's `--workers`), a `--max-conns` accept queue that sheds
+//! overload with 503/`STATUS_BUSY`, and `--timeout-ms` socket
+//! timeouts doubling as the per-request deadline budget.
 //! `--estimator` selects the per-stream estimator: `approx` (default)
 //! runs the paper's `ε`-compressed sketch, `exact` the tree-maintained
 //! exact accumulator (no `ε`; `--epsilon` is ignored), `binned` the
@@ -51,7 +56,7 @@ use streamauc::coordinator::{ApproxAuc, AucMonitor, MonitorEvent, NaiveAuc};
 use streamauc::experiments::{fig1, fig2, fig3, table1, ExpConfig, Table};
 use streamauc::fleet::{AucFleet, EstimatorKind, FleetConfig, StreamConfig};
 use streamauc::runtime::{Runtime, Scorer, Trainer};
-use streamauc::serve::FleetServer;
+use streamauc::serve::{FleetServer, ServeLimits};
 use streamauc::stream::source::write_csv;
 use streamauc::stream::synth::{paper_datasets, Dataset, DatasetSpec};
 use streamauc::stream::{Drift, DriftSchedule, MultiStream, StreamProfile};
@@ -91,7 +96,8 @@ USAGE:
                    [--skew X] [--seed S] [--evict-idle N] [--evict-age N]
                    [--hibernate-idle N] [--pool BOOL]
                    [--pipeline] [--adaptive] [--top K] [--count-below X] [--hist BINS]
-  streamauc fleet serve [--addr HOST:PORT] [fleet flags as above]
+  streamauc fleet serve [--addr HOST:PORT] [--serve-workers W] [--max-conns N]
+                   [--timeout-ms MS] [fleet flags as above]
   streamauc train  [--dataset D] [--steps N] [--lr X] [--events N]
                    [--artifacts DIR] [--out stream.csv]
   streamauc help
@@ -238,7 +244,7 @@ fn parse_fleet_flags(args: &Args, serve: bool) -> Result<FleetFlags> {
         "hibernate-idle", "pool", "pipeline", "adaptive", "top", "count-below", "hist",
     ];
     if serve {
-        allowed.push("addr");
+        allowed.extend(["addr", "serve-workers", "max-conns", "timeout-ms"]);
     }
     args.validate_flags(&allowed)?;
     let streams: usize = args.get_or("streams", 1000)?;
@@ -354,6 +360,33 @@ fn parse_fleet_flags(args: &Args, serve: bool) -> Result<FleetFlags> {
         top,
         hist_bins,
         count_below,
+    })
+}
+
+/// Serve-only knobs of `streamauc fleet serve`, validated at the
+/// boundary like the fleet flags: a zero worker pool, connection
+/// budget or timeout is a misconfiguration that must fail with a
+/// message naming the flag, not bind a port that can never answer.
+/// (`--serve-workers` is distinct from `--workers`, which sizes the
+/// *ingestion* pool.)
+fn parse_serve_limits(args: &Args) -> Result<ServeLimits> {
+    let defaults = ServeLimits::default();
+    let workers: usize = args.get_or("serve-workers", defaults.workers)?;
+    let max_conns: usize = args.get_or("max-conns", defaults.max_conns)?;
+    let timeout_ms: u64 = args.get_or("timeout-ms", defaults.timeout.as_millis() as u64)?;
+    if workers == 0 {
+        bail!("--serve-workers must be ≥ 1 connection worker");
+    }
+    if max_conns == 0 {
+        bail!("--max-conns must be ≥ 1 queued connection");
+    }
+    if timeout_ms == 0 {
+        bail!("--timeout-ms must be ≥ 1 (socket timeouts and the per-request deadline budget)");
+    }
+    Ok(ServeLimits {
+        workers,
+        max_conns,
+        timeout: std::time::Duration::from_millis(timeout_ms),
     })
 }
 
@@ -518,15 +551,23 @@ fn cmd_fleet(args: &Args) -> Result<()> {
 /// answering after the ingest completes, until the process is killed.
 fn cmd_fleet_serve(args: &Args) -> Result<()> {
     let flags = parse_fleet_flags(args, true)?;
+    let limits = parse_serve_limits(args)?;
     let addr = args.get("addr").unwrap_or("127.0.0.1:7878");
     let (mut gen, fleet, drifted) = build_fleet(&flags);
-    let server = FleetServer::start(fleet, addr).with_context(|| format!("binding {addr}"))?;
+    let server =
+        FleetServer::start_with(fleet, addr, limits).with_context(|| format!("binding {addr}"))?;
     // Flushed by the trailing newline — CI's smoke job waits for this
     // line before it starts hitting endpoints.
     println!("# serving fleet queries on http://{}", server.local_addr());
     println!(
         "#   GET /snapshot  /aggregate  /top_k_worst?k=K  /count_below?t=T  \
          /auc_histogram?bins=B  /score_histogram?bins=B  /subscribe"
+    );
+    println!(
+        "#   limits: {} connection workers, {} max conns, {}ms socket/request timeout",
+        limits.workers,
+        limits.max_conns,
+        limits.timeout.as_millis()
     );
     println!(
         "# ingesting {} events over {} streams ({} drifted), batch {}",
@@ -679,6 +720,38 @@ mod tests {
         reject("--addr 127.0.0.1:0", "addr");
         let ok = parse_fleet_flags(&fleet_args("--addr 127.0.0.1:0"), true);
         assert!(ok.is_ok(), "{:?}", ok.err().map(|e| e.to_string()));
+    }
+
+    #[test]
+    fn fleet_serve_gates_and_validates_the_limit_flags() {
+        // Serve-only flags are rejected by plain `fleet` …
+        reject("--serve-workers 2", "serve-workers");
+        reject("--max-conns 8", "max-conns");
+        reject("--timeout-ms 100", "timeout-ms");
+        // … accepted (and parsed into limits) under `fleet serve` …
+        let args = fleet_args("--serve-workers 2 --max-conns 8 --timeout-ms 250");
+        parse_fleet_flags(&args, true).expect("serve flags allowed");
+        let limits = parse_serve_limits(&args).expect("limits parse");
+        assert_eq!(limits.workers, 2);
+        assert_eq!(limits.max_conns, 8);
+        assert_eq!(limits.timeout, std::time::Duration::from_millis(250));
+        // … with defaults matching the library's.
+        let defaults = parse_serve_limits(&fleet_args("")).expect("defaults parse");
+        assert_eq!(defaults.workers, ServeLimits::default().workers);
+        assert_eq!(defaults.max_conns, ServeLimits::default().max_conns);
+        assert_eq!(defaults.timeout, ServeLimits::default().timeout);
+        // Zero limits are misconfigurations, named at the boundary.
+        for (extra, needle) in [
+            ("--serve-workers 0", "--serve-workers"),
+            ("--max-conns 0", "--max-conns"),
+            ("--timeout-ms 0", "--timeout-ms"),
+        ] {
+            let err = parse_serve_limits(&fleet_args(extra))
+                .err()
+                .unwrap_or_else(|| panic!("`fleet serve {extra}` must be rejected"))
+                .to_string();
+            assert!(err.contains(needle), "{err:?} (wanted {needle:?})");
+        }
     }
 
     #[test]

@@ -2,6 +2,11 @@
 //! integration tests, the load-generating bench, and the example.
 //! They are deliberately thin: connect, frame, and hand bytes back;
 //! decoding belongs to `super::json` / `super::wire`.
+//!
+//! Both clients capture the server's seq echo (`X-Fleet-Seq` header /
+//! the 8-byte payload prefix) as [`HttpClient::last_seq`] and
+//! [`BinClient::last_seq`] — the publication epoch a response is
+//! bit-identical to.
 
 use std::io::{self, BufRead, BufReader, Read, Write};
 use std::net::{SocketAddr, TcpStream};
@@ -12,6 +17,7 @@ use super::wire;
 pub struct HttpClient {
     stream: TcpStream,
     reader: BufReader<TcpStream>,
+    last_seq: Option<u64>,
 }
 
 impl HttpClient {
@@ -19,7 +25,7 @@ impl HttpClient {
     pub fn connect(addr: SocketAddr) -> io::Result<HttpClient> {
         let stream = TcpStream::connect(addr)?;
         let reader = BufReader::new(stream.try_clone()?);
-        Ok(HttpClient { stream, reader })
+        Ok(HttpClient { stream, reader, last_seq: None })
     }
 
     /// Issue `GET target` and return `(status, body)`.
@@ -27,6 +33,12 @@ impl HttpClient {
         let head = format!("GET {target} HTTP/1.1\r\nHost: fleet\r\n\r\n");
         self.stream.write_all(head.as_bytes())?;
         self.read_response()
+    }
+
+    /// The `X-Fleet-Seq` echo of the last response — the publication
+    /// epoch its body answers at. `None` before the first response.
+    pub fn last_seq(&self) -> Option<u64> {
+        self.last_seq
     }
 
     fn read_response(&mut self) -> io::Result<(u16, String)> {
@@ -54,6 +66,8 @@ impl HttpClient {
             if let Some((name, value)) = header.split_once(':') {
                 if name.eq_ignore_ascii_case("content-length") {
                     content_length = value.trim().parse().ok();
+                } else if name.eq_ignore_ascii_case("x-fleet-seq") {
+                    self.last_seq = value.trim().parse().ok();
                 }
             }
         }
@@ -75,7 +89,9 @@ pub fn http_get(addr: SocketAddr, target: &str) -> io::Result<(u16, String)> {
 
 /// Open `/subscribe` over HTTP and return a line iterator positioned
 /// at the baseline line (streaming ndjson body — read lines as the
-/// server drains batches).
+/// server drains batches). A line may also be a lagged notice
+/// (`super::json::parse_lagged_notice`) followed by a fresh baseline,
+/// when the subscriber fell behind the publisher.
 pub fn http_subscribe(addr: SocketAddr) -> io::Result<impl Iterator<Item = io::Result<String>>> {
     let mut stream = TcpStream::connect(addr)?;
     stream.write_all(b"GET /subscribe HTTP/1.1\r\nHost: fleet\r\n\r\n")?;
@@ -100,9 +116,22 @@ pub fn http_subscribe(addr: SocketAddr) -> io::Result<impl Iterator<Item = io::R
     Ok(reader.lines())
 }
 
+/// One pushed subscription frame, decoded to its kind.
+pub enum SubEvent {
+    /// A sketch delta payload (apply with [`wire::apply_delta`]).
+    Delta(Vec<u8>),
+    /// The subscriber lagged; a [`SubEvent::Baseline`] at this seq
+    /// follows immediately.
+    Lagged(u64),
+    /// A fresh full baseline payload (decode with
+    /// [`wire::decode_sketch`]), replacing everything missed.
+    Baseline(Vec<u8>),
+}
+
 /// A binary-protocol client over one framed connection.
 pub struct BinClient {
     stream: TcpStream,
+    last_seq: Option<u64>,
 }
 
 impl BinClient {
@@ -110,18 +139,34 @@ impl BinClient {
     pub fn connect(addr: SocketAddr) -> io::Result<BinClient> {
         let mut stream = TcpStream::connect(addr)?;
         stream.write_all(&wire::MAGIC)?;
-        Ok(BinClient { stream })
+        Ok(BinClient { stream, last_seq: None })
     }
 
-    /// Issue one request frame and return `(status, payload)`.
+    /// Issue one request frame and return `(status, payload)` with the
+    /// server's 8-byte seq echo already stripped from the payload (it
+    /// is captured as [`BinClient::last_seq`]).
     pub fn request(&mut self, opcode: u8, payload: &[u8]) -> io::Result<(u8, Vec<u8>)> {
         wire::write_frame(&mut self.stream, opcode, payload)?;
-        wire::read_frame(&mut self.stream)
+        let (status, full) = wire::read_frame(&mut self.stream)?;
+        if full.len() < 8 {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                "response payload shorter than its seq echo",
+            ));
+        }
+        self.last_seq = Some(u64::from_le_bytes(full[..8].try_into().expect("8 bytes")));
+        Ok((status, full[8..].to_vec()))
+    }
+
+    /// The seq echo of the last response — the publication epoch its
+    /// payload answers at. `None` before the first response.
+    pub fn last_seq(&self) -> Option<u64> {
+        self.last_seq
     }
 
     /// Subscribe; returns the baseline payload (decode with
     /// [`wire::decode_sketch`]), after which [`BinClient::next_delta`]
-    /// yields pushed deltas.
+    /// or [`BinClient::next_event`] yields pushed frames.
     pub fn subscribe(&mut self) -> io::Result<Vec<u8>> {
         let (status, payload) = self.request(wire::OP_SUBSCRIBE, &[])?;
         if status != wire::STATUS_OK {
@@ -134,15 +179,35 @@ impl BinClient {
     }
 
     /// Block for the next pushed delta frame payload (apply with
-    /// [`wire::apply_delta`]).
+    /// [`wire::apply_delta`]). Errors on a lag resync — use
+    /// [`BinClient::next_event`] when the subscriber may fall behind.
     pub fn next_delta(&mut self) -> io::Result<Vec<u8>> {
-        let (op, payload) = wire::read_frame(&mut self.stream)?;
-        if op != wire::OP_DELTA {
-            return Err(io::Error::new(
+        match self.next_event()? {
+            SubEvent::Delta(payload) => Ok(payload),
+            SubEvent::Lagged(seq) => Err(io::Error::new(
                 io::ErrorKind::InvalidData,
-                format!("expected a delta frame, got opcode {op}"),
-            ));
+                format!("expected a delta frame, got a lag resync to seq {seq}"),
+            )),
+            SubEvent::Baseline(_) => Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                "expected a delta frame, got a baseline",
+            )),
         }
-        Ok(payload)
+    }
+
+    /// Block for the next pushed subscription frame of any kind.
+    pub fn next_event(&mut self) -> io::Result<SubEvent> {
+        let (op, payload) = wire::read_frame(&mut self.stream)?;
+        match op {
+            wire::OP_DELTA => Ok(SubEvent::Delta(payload)),
+            wire::OP_BASELINE => Ok(SubEvent::Baseline(payload)),
+            wire::OP_LAGGED => wire::decode_lagged(&payload)
+                .map(SubEvent::Lagged)
+                .map_err(|e| io::Error::new(io::ErrorKind::InvalidData, e)),
+            other => Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                format!("unexpected push frame opcode {other}"),
+            )),
+        }
     }
 }

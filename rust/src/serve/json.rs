@@ -188,6 +188,25 @@ pub fn delta_to_json(seq: u64, prev: &FleetSketch, next: &FleetSketch) -> String
     out
 }
 
+/// A subscription **lagged** notice line: this subscriber fell behind
+/// and its missed deltas were coalesced; the very next line is a fresh
+/// baseline at `seq` to resume from.
+pub fn lagged_to_json(seq: u64) -> String {
+    format!("{{\"lagged\":true,\"seq\":{seq}}}")
+}
+
+/// Recognize a lagged notice line, returning the baseline seq it
+/// announces. `None` for any other line (baseline or delta) — callers
+/// check this before [`apply_subscription_json`].
+pub fn parse_lagged_notice(text: &str) -> Option<u64> {
+    let v = Json::parse(text).ok()?;
+    if v.get("lagged").ok()?.bool().ok()? {
+        v.get("seq").ok()?.u64().ok()
+    } else {
+        None
+    }
+}
+
 // ---------------------------------------------------------------------
 // Parsing
 // ---------------------------------------------------------------------
@@ -687,6 +706,15 @@ mod tests {
         assert_eq!(top_k_from_json(&top_k_to_json(&[])).unwrap(), Vec::new());
         let (t, c) = count_below_from_json(&count_below_to_json(0.8, 17)).unwrap();
         assert_eq!((t, c), (0.8, 17));
+    }
+
+    #[test]
+    fn lagged_notices_round_trip_and_reject_other_lines() {
+        assert_eq!(parse_lagged_notice(&lagged_to_json(42)), Some(42));
+        let sk = FleetSketch { bins: vec![0; 64], live: 0, alarmed: 0, streams: 0, qauc_sum: 0 };
+        assert_eq!(parse_lagged_notice(&sketch_to_json(7, &sk)), None);
+        assert_eq!(parse_lagged_notice(&delta_to_json(8, &sk, &sk)), None);
+        assert_eq!(parse_lagged_notice("not json"), None);
     }
 
     #[test]

@@ -1,0 +1,254 @@
+//! Admission control for the serving front-end: the resource limits a
+//! [`FleetServer`](super::FleetServer) enforces, the bounded queue the
+//! acceptor feeds and the connection workers drain (the park/claim
+//! idiom of `fleet/pool.rs`, with a capacity so overload is *shed* at
+//! the door instead of queueing unboundedly), the live-connection
+//! tracker `shutdown` uses to unwedge blocked socket reads, and the
+//! per-request deadline arithmetic.
+//!
+//! Nothing here knows about HTTP or the binary protocol — this module
+//! decides *whether* and *for how long* a connection may hold a
+//! worker; `super::server` decides what to say on it.
+
+use std::collections::VecDeque;
+use std::io;
+use std::net::{Shutdown, TcpStream};
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Resource limits of one [`FleetServer`](super::FleetServer).
+///
+/// Every socket the server touches gets `timeout` as its read *and*
+/// write timeout, and every request gets `timeout` as its total
+/// deadline budget once its first byte has arrived — so a half-open
+/// connect, a slow-loris head, and a stuck subscriber each cost at
+/// most one timeout before their worker (or writer) is released.
+#[derive(Clone, Copy, Debug)]
+pub struct ServeLimits {
+    /// Connection workers — the maximum number of in-flight requests.
+    pub workers: usize,
+    /// Accepted-but-unclaimed connections the server will hold (and
+    /// also the maximum number of attached subscribers). Beyond this
+    /// the acceptor sheds with HTTP 503 / a `STATUS_BUSY` frame.
+    pub max_conns: usize,
+    /// Socket read/write timeout and per-request deadline budget.
+    pub timeout: Duration,
+}
+
+impl Default for ServeLimits {
+    fn default() -> ServeLimits {
+        ServeLimits {
+            workers: 4,
+            max_conns: 64,
+            timeout: Duration::from_millis(5000),
+        }
+    }
+}
+
+/// The bounded hand-off between the acceptor and the connection
+/// workers. `offer` never blocks (the acceptor must keep accepting so
+/// it can shed); `take` parks the calling worker on the condvar until
+/// a connection or shutdown arrives.
+pub(super) struct AcceptQueue {
+    state: Mutex<QueueState>,
+    ready: Condvar,
+    cap: usize,
+}
+
+struct QueueState {
+    conns: VecDeque<TcpStream>,
+    open: bool,
+}
+
+impl AcceptQueue {
+    pub(super) fn new(cap: usize) -> AcceptQueue {
+        AcceptQueue {
+            state: Mutex::new(QueueState { conns: VecDeque::new(), open: true }),
+            ready: Condvar::new(),
+            cap: cap.max(1),
+        }
+    }
+
+    /// Enqueue an accepted connection, or hand it back when the queue
+    /// is at capacity (the caller sheds it) or the server is stopping.
+    pub(super) fn offer(&self, conn: TcpStream) -> Result<(), TcpStream> {
+        let mut st = lock(&self.state);
+        if !st.open || st.conns.len() >= self.cap {
+            return Err(conn);
+        }
+        st.conns.push_back(conn);
+        drop(st);
+        self.ready.notify_one();
+        Ok(())
+    }
+
+    /// Claim the next connection; parks until one arrives. `None`
+    /// means the queue was closed — the worker should exit. Closing
+    /// wins over queued connections (they are drained and dropped by
+    /// [`AcceptQueue::close`], not half-served during shutdown).
+    pub(super) fn take(&self) -> Option<TcpStream> {
+        let mut st = lock(&self.state);
+        loop {
+            if !st.open {
+                return None;
+            }
+            if let Some(conn) = st.conns.pop_front() {
+                return Some(conn);
+            }
+            st = self.ready.wait(st).unwrap_or_else(std::sync::PoisonError::into_inner);
+        }
+    }
+
+    /// Close the queue, wake every parked worker, and return whatever
+    /// was still queued so the caller can drop (reset) it.
+    pub(super) fn close(&self) -> VecDeque<TcpStream> {
+        let mut st = lock(&self.state);
+        st.open = false;
+        let queued = std::mem::take(&mut st.conns);
+        drop(st);
+        self.ready.notify_all();
+        queued
+    }
+}
+
+/// Live-connection registry: every socket a worker or subscriber
+/// writer is currently serving, as `try_clone`d control handles.
+/// `shutdown_all` half-closes them, which makes any blocked
+/// `read`/`write` on the real socket return immediately — that is what
+/// bounds `FleetServer::shutdown`'s drain to "already in flight plus
+/// one syscall" instead of one full socket timeout per connection.
+#[derive(Default)]
+pub(super) struct ConnTracker {
+    slots: Mutex<Vec<Option<TcpStream>>>,
+}
+
+impl ConnTracker {
+    /// Register a connection; returns the token for `deregister`.
+    pub(super) fn register(&self, conn: &TcpStream) -> Option<usize> {
+        let clone = conn.try_clone().ok()?;
+        let mut slots = lock(&self.slots);
+        if let Some(i) = slots.iter().position(Option::is_none) {
+            slots[i] = Some(clone);
+            return Some(i);
+        }
+        slots.push(Some(clone));
+        Some(slots.len() - 1)
+    }
+
+    pub(super) fn deregister(&self, token: Option<usize>) {
+        if let Some(i) = token {
+            lock(&self.slots)[i] = None;
+        }
+    }
+
+    /// Half-close every live connection (both directions); their
+    /// owners' blocked socket ops error out and the owners exit.
+    pub(super) fn shutdown_all(&self) {
+        for conn in lock(&self.slots).iter().flatten() {
+            let _ = conn.shutdown(Shutdown::Both);
+        }
+    }
+}
+
+/// A per-request deadline: started when the request's first byte
+/// arrives, consulted before every subsequent socket read so a client
+/// trickling one byte per timeout cannot extend a request forever.
+pub(super) struct Deadline {
+    end: Instant,
+}
+
+impl Deadline {
+    pub(super) fn after(budget: Duration) -> Deadline {
+        Deadline { end: Instant::now() + budget }
+    }
+
+    /// Time left, `None` once expired. Never returns `Some(0)` — a
+    /// zero `set_read_timeout` means "no timeout" to the OS, the
+    /// opposite of what an expired deadline wants.
+    pub(super) fn remaining(&self) -> Option<Duration> {
+        let rem = self.end.saturating_duration_since(Instant::now());
+        if rem.is_zero() {
+            None
+        } else {
+            Some(rem)
+        }
+    }
+}
+
+/// Did this I/O error come from a socket timeout? (`WouldBlock` on
+/// unix, `TimedOut` on windows — std documents either for expired
+/// read/write timeouts.)
+pub(super) fn is_timeout(e: &io::Error) -> bool {
+    matches!(e.kind(), io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut)
+}
+
+/// Is this the peer going away (or our own shutdown half-closing the
+/// socket) rather than a programming error? Such connections are
+/// closed quietly.
+pub(super) fn is_disconnect(e: &io::Error) -> bool {
+    matches!(
+        e.kind(),
+        io::ErrorKind::UnexpectedEof
+            | io::ErrorKind::ConnectionReset
+            | io::ErrorKind::ConnectionAborted
+            | io::ErrorKind::BrokenPipe
+            | io::ErrorKind::NotConnected
+    )
+}
+
+/// Lock a mutex, ignoring poisoning: queue and tracker state are
+/// plain data, safe to read after a panicking thread released them
+/// (same policy as `fleet/pool.rs`).
+fn lock<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::net::{TcpListener, TcpStream};
+
+    fn pair() -> (TcpStream, TcpStream) {
+        let l = TcpListener::bind("127.0.0.1:0").expect("bind");
+        let a = TcpStream::connect(l.local_addr().expect("addr")).expect("connect");
+        let (b, _) = l.accept().expect("accept");
+        (a, b)
+    }
+
+    #[test]
+    fn queue_sheds_at_capacity_and_drains_on_close() {
+        let q = AcceptQueue::new(2);
+        let (c1, _k1) = pair();
+        let (c2, _k2) = pair();
+        let (c3, _k3) = pair();
+        assert!(q.offer(c1).is_ok());
+        assert!(q.offer(c2).is_ok());
+        assert!(q.offer(c3).is_err(), "third connection must be shed");
+        let queued = q.close();
+        assert_eq!(queued.len(), 2);
+        assert!(q.take().is_none(), "closed queue releases workers");
+        let (c4, _k4) = pair();
+        assert!(q.offer(c4).is_err(), "closed queue refuses new connections");
+    }
+
+    #[test]
+    fn tracker_reuses_slots_and_survives_deregister() {
+        let t = ConnTracker::default();
+        let (a, _ka) = pair();
+        let (b, _kb) = pair();
+        let ta = t.register(&a);
+        t.deregister(ta);
+        let tb = t.register(&b);
+        assert_eq!(ta, tb, "freed slot is reused");
+        t.deregister(None); // no-op
+        t.shutdown_all();
+    }
+
+    #[test]
+    fn deadline_expires_and_never_reports_zero() {
+        let d = Deadline::after(Duration::from_millis(20));
+        assert!(d.remaining().is_some());
+        std::thread::sleep(Duration::from_millis(30));
+        assert!(d.remaining().is_none());
+    }
+}

@@ -13,22 +13,39 @@
 //!   `[opcode][u32 len][payload]` frames): the same queries with
 //!   fixed little-endian payloads.
 //!
+//! The front-end is bounded and deadline-driven: a fixed pool of
+//! connection workers fed by a bounded accept queue (overflow is shed
+//! with HTTP 503 / a `STATUS_BUSY` frame), read/write timeouts plus a
+//! per-request deadline budget on every socket (`limits`), and
+//! sketch-answerable reads served from an epoch-swapped
+//! [`PublishedView`] with zero fleet-lock acquisitions (`publish`).
+//! Every response echoes the publication `seq` it answers at, and
+//! subscribers ride per-subscriber bounded queues with a lag-coalescing
+//! resync policy — one stuck client can never stall ingestion or the
+//! other readers. Tune with [`ServeLimits`] via
+//! [`FleetServer::start_with`].
+//!
 //! Everything is hand-rolled on `std` — the build is offline, so there
 //! is no HTTP or serialization dependency to reach for. The codecs are
 //! lossless by construction (shortest-round-trip decimals in JSON, raw
 //! `f64` bits in binary), which upgrades "the server answers queries"
-//! to "a wire response decodes bit-identical to the in-process answer"
-//! — the property `rust/tests/serve.rs` and the executor digest
-//! harness pin down. Protocol grammar and the delta-subscription
-//! semantics are specified in `rust/DESIGN.md` §Serving.
+//! to "a wire response decodes bit-identical to the in-process answer
+//! at the echoed seq" — the property `rust/tests/serve.rs` and the
+//! executor digest harness pin down. Protocol grammar and the
+//! delta-subscription semantics are specified in `rust/DESIGN.md`
+//! §Serving.
 
 mod client;
 pub mod json;
+mod limits;
+mod publish;
 mod server;
 pub mod wire;
 
-pub use client::{http_get, http_subscribe, BinClient, HttpClient};
-pub use server::FleetServer;
+pub use client::{http_get, http_subscribe, BinClient, HttpClient, SubEvent};
+pub use limits::ServeLimits;
+pub use publish::PublishedView;
+pub use server::{FleetServer, MAX_HEAD_BYTES};
 
 #[cfg(test)]
 mod tests {

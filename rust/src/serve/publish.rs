@@ -1,0 +1,507 @@
+//! The reader/writer split of the serving layer: an epoch-swapped
+//! [`PublishedView`] that sketch-answerable read endpoints serve from
+//! with zero fleet-lock acquisitions, and the subscriber fan-out that
+//! cannot stall the publisher.
+//!
+//! **The epoch invariant.** Every fleet mutation the server performs
+//! (`ingest_batch`, `ingest_batch_at`, `with_fleet_mut`) calls
+//! [`Fanout::republish`] *while still holding the fleet lock*, and the
+//! republish swaps in a fresh view before the lock is released. So
+//! whoever holds the fleet lock knows the current view's epoch is
+//! exactly the fleet's state — which is what makes first-reader
+//! materialization sound: the first reader of an epoch takes the fleet
+//! lock once, re-checks the (necessarily same-epoch) current view, and
+//! swaps in a filled twin — same seq, `snapshot`/`aggregate` read
+//! under that lock. Every later reader of the epoch is lock-free. A
+//! quiet epoch costs nothing.
+//!
+//! **The sequence number.** `seq` counts sketch *publications*: it
+//! bumps exactly when the merged [`FleetSketch`] changes, and each
+//! bump broadcasts exactly one delta — the gapless-subscription
+//! contract. A mutation that leaves the sketch unchanged but may have
+//! moved snapshot-level state (hibernation changing footprints, a
+//! batch that left every estimate in place) swaps a fresh
+//! *unmaterialized* view at the same seq, so stale derived state is
+//! never served.
+//!
+//! **Fan-out.** Each subscriber owns a bounded queue drained by a
+//! dedicated writer thread; the publisher only ever `try_send`s. A
+//! full queue marks the subscriber *lagged* and drops the delta; its
+//! writer then discards the stale queue and resyncs with a `lagged`
+//! notice plus a fresh baseline — coalescing however many deltas were
+//! missed into one line. A vanished subscriber is pruned at the next
+//! publish. Either way `ingest_batch` never blocks on a socket.
+
+use std::io::{self, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{Receiver, RecvTimeoutError, SyncSender, TrySendError};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::{self, JoinHandle};
+use std::time::Duration;
+
+use super::limits::ConnTracker;
+use super::{json, wire};
+use crate::fleet::{
+    worst_first, AucFleet, AucHistogram, FleetAggregate, FleetSketch, FleetSnapshot,
+    StreamSnapshot,
+};
+
+/// Outbound messages a subscriber writer may hold, queued per
+/// subscriber. Capacity is small on purpose: a subscriber that cannot
+/// keep up with ~a handful of drains is better resynced with one fresh
+/// baseline than fed an ever-growing backlog.
+const SUB_QUEUE: usize = 32;
+
+/// How often an idle writer wakes to check the stop flag and the lag
+/// mark.
+const WRITER_TICK: Duration = Duration::from_millis(100);
+
+// ---------------------------------------------------------------------
+// Published views
+// ---------------------------------------------------------------------
+
+/// One publication epoch of the fleet: the merged sketch at that
+/// epoch, its sequence number, and — once the epoch has its first
+/// reader — the materialized query-answerable state
+/// ([`FleetSnapshot`] + [`FleetAggregate`]). Views are immutable;
+/// materialization swaps the *current* view for a filled twin at the
+/// same epoch (see [`Fanout::materialized_view`]), so no lazy cell or
+/// interior mutability is needed and a quiet epoch costs nothing.
+///
+/// The query methods answer **bit-identically** to the corresponding
+/// `AucFleet` calls at the same epoch:
+/// * `snapshot`/`aggregate` *are* the fleet's answers, captured under
+///   the fleet lock at materialization;
+/// * `top_k_worst` ranks the snapshot's live streams by the same
+///   [`worst_first`] total order the fleet's candidate-bin merge uses
+///   (a total order, so ranking all live streams or only the
+///   candidate bins yields the same first `k`);
+/// * `count_below` is the retained rescan the fleet's sketch-backed
+///   count is proven equal to (`fleet/query.rs`'s differential test);
+/// * `auc_histogram` bins the snapshot's live estimates with the exact
+///   product `⌊auc · bins⌋` — the shard fallback's formula, and for
+///   divisor bin counts also bit-identical to the sketch group-sum
+///   (both partitions use exact f64 products).
+///
+/// `rust/tests/serve.rs` asserts all four against the fleet directly.
+pub struct PublishedView {
+    seq: u64,
+    sketch: FleetSketch,
+    derived: Option<Derived>,
+}
+
+struct Derived {
+    snapshot: FleetSnapshot,
+    aggregate: FleetAggregate,
+}
+
+impl PublishedView {
+    fn new(seq: u64, sketch: FleetSketch) -> PublishedView {
+        PublishedView { seq, sketch, derived: None }
+    }
+
+    /// The publication sequence number echoed in every wire response.
+    pub fn seq(&self) -> u64 {
+        self.seq
+    }
+
+    /// The merged fleet sketch at this epoch.
+    pub fn sketch(&self) -> &FleetSketch {
+        &self.sketch
+    }
+
+    fn is_materialized(&self) -> bool {
+        self.derived.is_some()
+    }
+
+    /// A filled twin of this view at the same epoch, with derived
+    /// state read from `fleet`. Sound only under the epoch invariant:
+    /// the caller holds the fleet lock and `self` is the current view,
+    /// so `fleet`'s state *is* this epoch.
+    fn materialized(&self, fleet: &AucFleet) -> PublishedView {
+        PublishedView {
+            seq: self.seq,
+            sketch: self.sketch.clone(),
+            derived: Some(Derived { snapshot: fleet.snapshot(), aggregate: fleet.aggregate() }),
+        }
+    }
+
+    fn derived(&self) -> &Derived {
+        self.derived.as_ref().expect("published view read before materialization")
+    }
+
+    /// The fleet snapshot at this epoch.
+    ///
+    /// # Panics
+    ///
+    /// Panics if the view has not been materialized — views handed out
+    /// by the server ([`FleetServer::published_view`]
+    /// (super::FleetServer::published_view) and the read endpoints)
+    /// always are.
+    pub fn snapshot(&self) -> &FleetSnapshot {
+        &self.derived().snapshot
+    }
+
+    /// The fleet aggregate at this epoch. Panics like
+    /// [`PublishedView::snapshot`] on an unmaterialized view.
+    pub fn aggregate(&self) -> &FleetAggregate {
+        &self.derived().aggregate
+    }
+
+    /// The `k` worst live streams, [`worst_first`]-ordered — equal to
+    /// `AucFleet::top_k_worst(k)` at this epoch.
+    pub fn top_k_worst(&self, k: usize) -> Vec<StreamSnapshot> {
+        let mut live: Vec<&StreamSnapshot> =
+            self.snapshot().streams.iter().filter(|s| s.len > 0).collect();
+        live.sort_by(|a, b| worst_first((a.auc, a.stream), (b.auc, b.stream)));
+        live.truncate(k);
+        live.into_iter().cloned().collect()
+    }
+
+    /// Live streams with AUC strictly below `t` — equal to
+    /// `AucFleet::count_below(t)` at this epoch (same explicit edge
+    /// semantics: NaN and `t ≤ 0` count nothing, `t > 1` counts every
+    /// live stream).
+    pub fn count_below(&self, t: f64) -> usize {
+        if t.is_nan() || t <= 0.0 {
+            return 0;
+        }
+        let live = self.snapshot().streams.iter().filter(|s| s.len > 0);
+        if t > 1.0 {
+            live.count()
+        } else {
+            live.filter(|s| s.auc < t).count()
+        }
+    }
+
+    /// Histogram of live-stream AUCs over `bins` equal-width buckets —
+    /// equal to `AucFleet::auc_histogram(bins)` at this epoch.
+    ///
+    /// # Panics
+    ///
+    /// Panics if `bins == 0`, matching the fleet method (the serving
+    /// surface validates first and answers 400 instead).
+    pub fn auc_histogram(&self, bins: usize) -> AucHistogram {
+        assert!(bins >= 1, "auc_histogram: bins must be >= 1");
+        let mut counts = vec![0usize; bins];
+        let mut live_streams = 0usize;
+        for s in &self.snapshot().streams {
+            if s.len == 0 {
+                continue;
+            }
+            counts[((s.auc * bins as f64) as usize).min(bins - 1)] += 1;
+            live_streams += 1;
+        }
+        AucHistogram { counts, live_streams }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Publisher + subscriber fan-out
+// ---------------------------------------------------------------------
+
+/// Which wire dialect a subscriber speaks.
+#[derive(Clone, Copy)]
+pub(super) enum SubProto {
+    Http,
+    Binary,
+}
+
+enum OutMsg {
+    /// One pre-encoded delta, shared across every subscriber's queue.
+    Delta { json: Arc<str>, bin: Arc<[u8]> },
+    /// Verbatim bytes (the subscription preamble + baseline).
+    Raw(Vec<u8>),
+    /// Liveness probe from the registration path; writers ignore it.
+    Ping,
+}
+
+/// The publisher-side handle of one subscriber.
+struct SubHandle {
+    tx: SyncSender<OutMsg>,
+    lagged: Arc<AtomicBool>,
+}
+
+impl SubHandle {
+    /// Offer one delta; `false` means the writer is gone (prune).
+    /// A full queue marks the subscriber lagged and *keeps* it — its
+    /// writer resyncs from the current view instead.
+    fn offer(&self, json: &Arc<str>, bin: &Arc<[u8]>) -> bool {
+        match self.tx.try_send(OutMsg::Delta { json: Arc::clone(json), bin: Arc::clone(bin) }) {
+            Ok(()) => true,
+            Err(TrySendError::Full(_)) => {
+                self.lagged.store(true, Ordering::Release);
+                true
+            }
+            Err(TrySendError::Disconnected(_)) => false,
+        }
+    }
+
+    /// Is the writer still attached? (Used to prune before the
+    /// subscriber-cap check; a `Full` answer still proves liveness.)
+    fn alive(&self) -> bool {
+        !matches!(self.tx.try_send(OutMsg::Ping), Err(TrySendError::Disconnected(_)))
+    }
+}
+
+struct PubSub {
+    view: Arc<PublishedView>,
+    subs: Vec<SubHandle>,
+}
+
+/// The publisher state + subscriber fan-out of one server.
+pub(super) struct Fanout {
+    pubsub: Mutex<PubSub>,
+    writers: Mutex<Vec<JoinHandle<()>>>,
+    stop: Arc<AtomicBool>,
+    max_subs: usize,
+}
+
+impl Fanout {
+    pub(super) fn new(baseline: FleetSketch, stop: Arc<AtomicBool>, max_subs: usize) -> Fanout {
+        Fanout {
+            pubsub: Mutex::new(PubSub {
+                view: Arc::new(PublishedView::new(0, baseline)),
+                subs: Vec::new(),
+            }),
+            writers: Mutex::new(Vec::new()),
+            stop,
+            max_subs,
+        }
+    }
+
+    /// The current view, possibly unmaterialized — for seq echoes and
+    /// `last_published`.
+    pub(super) fn view(&self) -> Arc<PublishedView> {
+        Arc::clone(&lock(&self.pubsub).view)
+    }
+
+    /// The current view, materialized — what the read endpoints serve
+    /// from. Fast path: one brief `pubsub` lock. First read of an
+    /// epoch: one fleet-lock acquisition, then the current view is
+    /// swapped for a filled twin at the same seq (see the module docs
+    /// for why re-reading the view under the fleet lock is what makes
+    /// this sound). Views are immutable, so readers holding the
+    /// unfilled `Arc` are unaffected; lock order is fleet → pubsub,
+    /// matching [`Fanout::republish`].
+    pub(super) fn materialized_view(&self, fleet: &Mutex<AucFleet>) -> Arc<PublishedView> {
+        let view = self.view();
+        if view.is_materialized() {
+            return view;
+        }
+        let guard = fleet.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+        let mut ps = lock(&self.pubsub);
+        if !ps.view.is_materialized() {
+            ps.view = Arc::new(ps.view.materialized(&guard));
+        }
+        Arc::clone(&ps.view)
+    }
+
+    /// Publish the fleet's current state. **Must be called with the
+    /// fleet lock held** (the epoch invariant). Swaps the view; if the
+    /// sketch changed, bumps `seq` and enqueues one delta per
+    /// subscriber — `try_send` only, never a socket write.
+    pub(super) fn republish(&self, fleet: &AucFleet) {
+        let next = fleet.sketch_state();
+        let mut ps = lock(&self.pubsub);
+        if *ps.view.sketch() == next {
+            // Quiet epoch: subscribers owe nothing, but snapshot-level
+            // state may still have moved (e.g. hibernation changing
+            // footprints) — refresh a materialized view in place.
+            if ps.view.is_materialized() {
+                ps.view = Arc::new(PublishedView::new(ps.view.seq(), next));
+            }
+            return;
+        }
+        let seq = ps.view.seq() + 1;
+        let json_line: Arc<str> = json::delta_to_json(seq, ps.view.sketch(), &next).into();
+        let bin: Arc<[u8]> = wire::encode_delta(seq, ps.view.sketch(), &next).into();
+        ps.view = Arc::new(PublishedView::new(seq, next));
+        ps.subs.retain(|sub| sub.offer(&json_line, &bin));
+    }
+
+    /// Attached subscribers (writers still running).
+    pub(super) fn subscriber_count(&self) -> usize {
+        let mut ps = lock(&self.pubsub);
+        ps.subs.retain(SubHandle::alive);
+        ps.subs.len()
+    }
+
+    /// Attach a subscriber: enqueue its preamble + baseline atomically
+    /// with joining the broadcast list (so the first delta it sees is
+    /// `baseline_seq + 1` — gapless), then hand the socket to a
+    /// dedicated writer thread. `Err(stream)` means the subscriber cap
+    /// (`max_conns`) is reached and the caller should shed.
+    pub(super) fn subscribe(
+        self: &Arc<Fanout>,
+        stream: TcpStream,
+        proto: SubProto,
+        tracker: &Arc<ConnTracker>,
+    ) -> Result<(), TcpStream> {
+        let (tx, rx) = mpsc::sync_channel(SUB_QUEUE);
+        let lagged = Arc::new(AtomicBool::new(false));
+        {
+            let mut ps = lock(&self.pubsub);
+            ps.subs.retain(SubHandle::alive);
+            if ps.subs.len() >= self.max_subs {
+                return Err(stream);
+            }
+            let preamble = match proto {
+                SubProto::Http => {
+                    let mut bytes = b"HTTP/1.1 200 OK\r\nContent-Type: application/x-ndjson\r\nConnection: close\r\n\r\n".to_vec();
+                    bytes.extend_from_slice(
+                        json::sketch_to_json(ps.view.seq(), ps.view.sketch()).as_bytes(),
+                    );
+                    bytes.push(b'\n');
+                    bytes
+                }
+                SubProto::Binary => {
+                    let mut frame = Vec::new();
+                    let payload = seq_prefixed(
+                        ps.view.seq(),
+                        &wire::encode_sketch(ps.view.seq(), ps.view.sketch()),
+                    );
+                    wire::write_frame(&mut frame, wire::STATUS_OK, &payload)
+                        .expect("vec write is infallible");
+                    frame
+                }
+            };
+            tx.try_send(OutMsg::Raw(preamble)).expect("fresh queue has room for the baseline");
+            ps.subs.push(SubHandle { tx, lagged: Arc::clone(&lagged) });
+        }
+        let token = tracker.register(&stream);
+        let fanout = Arc::clone(self);
+        let tracker_for_writer = Arc::clone(tracker);
+        let writer = thread::Builder::new().name("fleet-serve-sub".to_string()).spawn(move || {
+            run_writer(stream, proto, rx, lagged, &fanout);
+            tracker_for_writer.deregister(token);
+        });
+        match writer {
+            Ok(handle) => {
+                let mut writers = lock(&self.writers);
+                writers.retain(|w| !w.is_finished());
+                writers.push(handle);
+            }
+            // Spawn failure (process out of threads) closes the
+            // stream — it was moved into the dropped closure — and
+            // the dead handle is pruned at the next publish. Degrade,
+            // don't panic.
+            Err(_) => tracker.deregister(token),
+        }
+        Ok(())
+    }
+
+    /// Drop every subscriber handle (disconnecting their queues) and
+    /// join the writer threads. Called by `FleetServer::shutdown`
+    /// after the connection tracker has half-closed the sockets, so
+    /// writers blocked mid-`write` return immediately.
+    pub(super) fn shutdown(&self) {
+        lock(&self.pubsub).subs.clear();
+        let writers = std::mem::take(&mut *lock(&self.writers));
+        for w in writers {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Prefix a response body with the 8-byte LE sequence number — the
+/// binary protocol's seq echo (HTTP echoes `X-Fleet-Seq` instead).
+pub(super) fn seq_prefixed(seq: u64, body: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(8 + body.len());
+    out.extend_from_slice(&seq.to_le_bytes());
+    out.extend_from_slice(body);
+    out
+}
+
+/// One subscriber's writer loop: drain the queue onto the socket;
+/// on lag, discard the stale queue and resync (notice + baseline);
+/// on any write failure or disconnect, exit — the publisher prunes
+/// the handle at its next publish.
+fn run_writer(
+    mut stream: TcpStream,
+    proto: SubProto,
+    rx: Receiver<OutMsg>,
+    lagged: Arc<AtomicBool>,
+    fanout: &Fanout,
+) {
+    loop {
+        if fanout.stop.load(Ordering::Acquire) {
+            return;
+        }
+        // Lag wins over whatever is queued: everything in the queue
+        // predates the mark, and the resync replaces it wholesale.
+        if lagged.load(Ordering::Acquire) {
+            match resync(&mut stream, proto, &rx, &lagged, fanout) {
+                Ok(()) => continue,
+                Err(_) => return,
+            }
+        }
+        match rx.recv_timeout(WRITER_TICK) {
+            Ok(msg) => {
+                if write_msg(&mut stream, proto, &msg).is_err() {
+                    return;
+                }
+            }
+            Err(RecvTimeoutError::Timeout) => {}
+            Err(RecvTimeoutError::Disconnected) => return,
+        }
+    }
+}
+
+/// Coalesce a lagged subscriber back to the current epoch: under the
+/// `pubsub` lock (so the publisher cannot enqueue concurrently) drain
+/// and discard the stale queue, clear the mark, and encode a `lagged`
+/// notice plus a fresh baseline from the current view. The next delta
+/// the publisher enqueues is `baseline_seq + 1` — gapless again.
+fn resync(
+    stream: &mut TcpStream,
+    proto: SubProto,
+    rx: &Receiver<OutMsg>,
+    lagged: &AtomicBool,
+    fanout: &Fanout,
+) -> io::Result<()> {
+    let bytes = {
+        let ps = lock(&fanout.pubsub);
+        while rx.try_recv().is_ok() {}
+        lagged.store(false, Ordering::Release);
+        let (seq, sketch) = (ps.view.seq(), ps.view.sketch());
+        match proto {
+            SubProto::Http => {
+                let mut out = json::lagged_to_json(seq).into_bytes();
+                out.push(b'\n');
+                out.extend_from_slice(json::sketch_to_json(seq, sketch).as_bytes());
+                out.push(b'\n');
+                out
+            }
+            SubProto::Binary => {
+                let mut out = Vec::new();
+                wire::write_frame(&mut out, wire::OP_LAGGED, &seq.to_le_bytes())
+                    .expect("vec write is infallible");
+                wire::write_frame(&mut out, wire::OP_BASELINE, &wire::encode_sketch(seq, sketch))
+                    .expect("vec write is infallible");
+                out
+            }
+        }
+    };
+    stream.write_all(&bytes)
+}
+
+fn write_msg(stream: &mut TcpStream, proto: SubProto, msg: &OutMsg) -> io::Result<()> {
+    match msg {
+        OutMsg::Delta { json, bin } => match proto {
+            SubProto::Http => {
+                stream.write_all(json.as_bytes())?;
+                stream.write_all(b"\n")
+            }
+            SubProto::Binary => wire::write_frame(stream, wire::OP_DELTA, bin),
+        },
+        OutMsg::Raw(bytes) => stream.write_all(bytes),
+        OutMsg::Ping => Ok(()),
+    }
+}
+
+/// Same poison-ignoring lock policy as `serve/limits.rs`.
+fn lock<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}

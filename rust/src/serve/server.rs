@@ -1,7 +1,7 @@
 //! The serving front-end: a [`FleetServer`] owns an [`AucFleet`]
-//! behind a mutex, answers read queries from any number of
-//! connections, and pushes sketch deltas to subscribers after every
-//! ingestion drain.
+//! behind a mutex, answers read queries from a **bounded pool of
+//! connection workers**, and pushes sketch deltas to subscribers
+//! through per-subscriber queues after every ingestion drain.
 //!
 //! One listener port speaks both protocols. The first byte of a
 //! connection routes it: [`wire::MAGIC`]'s `0xAB` can never begin an
@@ -9,12 +9,23 @@
 //! (`GET`-only, keep-alive, `Content-Length`-framed JSON bodies)
 //! and a `0xAB` preamble opens a length-prefixed binary session.
 //!
-//! **Wire ≡ in-process.** Handlers call the exact same [`AucFleet`]
-//! query methods a linked-in caller would, under the same lock, and
-//! the codecs (`super::json`, `super::wire`) are lossless for every
-//! served type — so a decoded response is bit-identical to the
-//! in-process answer at the same instant. `rust/tests/serve.rs` and
-//! the executor digest harness enforce this end to end.
+//! **Degrade gracefully.** The acceptor feeds a bounded queue
+//! (`super::limits`); when it is full the connection is shed at the
+//! door with HTTP 503 / a [`wire::STATUS_BUSY`] frame instead of
+//! queueing unboundedly. Every socket carries read/write timeouts,
+//! every request a deadline budget once its first byte arrives, and
+//! HTTP heads are capped at [`MAX_HEAD_BYTES`] (431 beyond) — so
+//! half-open connects, slow-loris heads and endless-header clients
+//! each cost one worker for at most one timeout.
+//!
+//! **Wire ≡ in-process, at an echoed seq.** Sketch-answerable reads
+//! are served from the current [`PublishedView`](super::PublishedView)
+//! with zero fleet-lock acquisitions (`super::publish`); only
+//! `/score_histogram` — which needs raw window entries no snapshot
+//! carries — takes the fleet lock. Every response echoes the view's
+//! publication seq (`X-Fleet-Seq` header / an 8-byte payload prefix),
+//! and `rust/tests/serve.rs` proves each wire answer bit-identical to
+//! the in-process query at that seq.
 //!
 //! Malformed requests never panic the fleet: parameters are validated
 //! at the surface ([`validate`]) and rejected with HTTP 400 or a
@@ -27,12 +38,27 @@ use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
 use std::thread::{self, JoinHandle};
+use std::time::Duration;
 
+use super::limits::{is_disconnect, is_timeout, AcceptQueue, ConnTracker, Deadline, ServeLimits};
+use super::publish::{seq_prefixed, Fanout, PublishedView, SubProto};
 use super::{json, wire};
 use crate::fleet::{AucFleet, FleetSketch};
 
+/// Cap on one HTTP request head (request line + headers, bytes).
+/// Beyond it the server answers `431 Request Header Fields Too Large`
+/// and closes — a client streaming endless headers can no longer grow
+/// a `String` without bound.
+pub const MAX_HEAD_BYTES: usize = 8 * 1024;
+
+/// How long the acceptor will wait for a to-be-shed connection to
+/// reveal its protocol before dropping it silently. Short on purpose:
+/// shedding runs on the accept thread, and a flood of half-open
+/// connects must not stall admission of real ones behind it.
+const SHED_WAIT: Duration = Duration::from_millis(100);
+
 /// A query decoded from either protocol; both surfaces funnel into
-/// the same fleet calls so their answers cannot diverge.
+/// the same answers so they cannot diverge.
 enum Request {
     Snapshot,
     Aggregate,
@@ -56,27 +82,55 @@ fn validate(req: &Request) -> Result<(), String> {
     }
 }
 
-fn answer_json(fleet: &AucFleet, req: &Request) -> String {
+/// Answer one query as `(seq, JSON body)`. Sketch-answerable requests
+/// read the current published view — no fleet lock once the epoch is
+/// materialized; `score_histogram` needs raw window entries and takes
+/// the fleet lock, reading the seq while still holding it (the epoch
+/// invariant makes that seq exactly this answer's epoch).
+fn answer_json(shared: &Shared, req: &Request) -> (u64, String) {
     match *req {
-        Request::Snapshot => json::snapshot_to_json(&fleet.snapshot()),
-        Request::Aggregate => json::aggregate_to_json(&fleet.aggregate()),
-        Request::TopK(k) => json::top_k_to_json(&fleet.top_k_worst(k)),
-        Request::CountBelow(t) => json::count_below_to_json(t, fleet.count_below(t)),
-        Request::AucHistogram(b) => json::auc_histogram_to_json(&fleet.auc_histogram(b)),
-        Request::ScoreHistogram(b) => json::score_histogram_to_json(&fleet.score_histogram(b)),
+        Request::ScoreHistogram(b) => {
+            let fleet = lock(&shared.fleet);
+            let body = json::score_histogram_to_json(&fleet.score_histogram(b));
+            (shared.fanout.view().seq(), body)
+        }
         Request::Subscribe => unreachable!("subscribe is handled by the session loop"),
+        _ => {
+            let view = shared.fanout.materialized_view(&shared.fleet);
+            let body = match *req {
+                Request::Snapshot => json::snapshot_to_json(view.snapshot()),
+                Request::Aggregate => json::aggregate_to_json(view.aggregate()),
+                Request::TopK(k) => json::top_k_to_json(&view.top_k_worst(k)),
+                Request::CountBelow(t) => json::count_below_to_json(t, view.count_below(t)),
+                Request::AucHistogram(b) => json::auc_histogram_to_json(&view.auc_histogram(b)),
+                _ => unreachable!("score_histogram and subscribe handled above"),
+            };
+            (view.seq(), body)
+        }
     }
 }
 
-fn answer_binary(fleet: &AucFleet, req: &Request) -> Vec<u8> {
+/// Binary twin of [`answer_json`] — same routing, wire codec.
+fn answer_binary(shared: &Shared, req: &Request) -> (u64, Vec<u8>) {
     match *req {
-        Request::Snapshot => wire::encode_snapshot(&fleet.snapshot()),
-        Request::Aggregate => wire::encode_aggregate(&fleet.aggregate()),
-        Request::TopK(k) => wire::encode_top_k(&fleet.top_k_worst(k)),
-        Request::CountBelow(t) => wire::encode_count_below(t, fleet.count_below(t)),
-        Request::AucHistogram(b) => wire::encode_auc_histogram(&fleet.auc_histogram(b)),
-        Request::ScoreHistogram(b) => wire::encode_score_histogram(&fleet.score_histogram(b)),
+        Request::ScoreHistogram(b) => {
+            let fleet = lock(&shared.fleet);
+            let body = wire::encode_score_histogram(&fleet.score_histogram(b));
+            (shared.fanout.view().seq(), body)
+        }
         Request::Subscribe => unreachable!("subscribe is handled by the session loop"),
+        _ => {
+            let view = shared.fanout.materialized_view(&shared.fleet);
+            let body = match *req {
+                Request::Snapshot => wire::encode_snapshot(view.snapshot()),
+                Request::Aggregate => wire::encode_aggregate(view.aggregate()),
+                Request::TopK(k) => wire::encode_top_k(&view.top_k_worst(k)),
+                Request::CountBelow(t) => wire::encode_count_below(t, view.count_below(t)),
+                Request::AucHistogram(b) => wire::encode_auc_histogram(&view.auc_histogram(b)),
+                _ => unreachable!("score_histogram and subscribe handled above"),
+            };
+            (view.seq(), body)
+        }
     }
 }
 
@@ -84,52 +138,26 @@ fn answer_binary(fleet: &AucFleet, req: &Request) -> Vec<u8> {
 // Shared state
 // ---------------------------------------------------------------------
 
-enum Proto {
-    Http,
-    Binary,
-}
-
-struct Subscriber {
-    stream: TcpStream,
-    proto: Proto,
-}
-
-impl Subscriber {
-    /// Push one delta; a `false` return drops the subscriber.
-    fn send(&mut self, json_line: &str, bin_payload: &[u8]) -> bool {
-        let r = match self.proto {
-            Proto::Http => self
-                .stream
-                .write_all(json_line.as_bytes())
-                .and_then(|()| self.stream.write_all(b"\n")),
-            Proto::Binary => wire::write_frame(&mut self.stream, wire::OP_DELTA, bin_payload),
-        };
-        r.is_ok()
-    }
-}
-
-/// Publisher state: the last broadcast sketch and its sequence number.
-/// Lock order is `pub_state` → `subs` in both the publish and the
-/// subscribe paths, which is what makes the baseline/delta hand-off
-/// gapless: a subscriber's baseline is written while `pub_state` is
-/// held, so no delta can slip in between the baseline and the
-/// subscriber joining the broadcast list.
-struct PubState {
-    seq: u64,
-    last: FleetSketch,
-}
-
 struct Shared {
     fleet: Mutex<AucFleet>,
-    subs: Mutex<Vec<Subscriber>>,
-    pub_state: Mutex<PubState>,
-    stop: AtomicBool,
+    fanout: Arc<Fanout>,
+    queue: AcceptQueue,
+    tracker: Arc<ConnTracker>,
+    stop: Arc<AtomicBool>,
+    limits: ServeLimits,
 }
 
 const _: () = {
     const fn assert_send_sync<T: Send + Sync>() {}
     assert_send_sync::<Shared>();
 };
+
+/// Lock the fleet (or any serve-layer mutex), ignoring poisoning: a
+/// panicking connection worker must not wedge every later request
+/// (same policy as `fleet/pool.rs`).
+fn lock<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
 
 // ---------------------------------------------------------------------
 // Server
@@ -138,29 +166,56 @@ const _: () = {
 /// A running serving front-end over one [`AucFleet`].
 ///
 /// The server is `Sync`: ingestion goes through `&self`
-/// ([`FleetServer::ingest_batch_at`]) while the acceptor thread
-/// answers queries concurrently, so one thread can drive the event
-/// feed while clients read. Dropping the server stops the acceptor
-/// and disconnects subscribers.
+/// ([`FleetServer::ingest_batch_at`]) while the worker pool answers
+/// queries concurrently, so one thread can drive the event feed while
+/// clients read. Dropping the server stops the acceptor, drains the
+/// connection workers and subscriber writers (each socket op is
+/// timeout-bounded and the live-connection tracker half-closes
+/// whatever is still blocked), and disconnects subscribers.
 pub struct FleetServer {
     shared: Arc<Shared>,
     addr: SocketAddr,
     acceptor: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
 }
 
 impl FleetServer {
     /// Bind `addr` (e.g. `"127.0.0.1:0"` for an ephemeral port) and
-    /// start accepting connections over `fleet`.
+    /// start accepting connections over `fleet`, with
+    /// [`ServeLimits::default`].
     pub fn start(fleet: AucFleet, addr: &str) -> io::Result<FleetServer> {
+        FleetServer::start_with(fleet, addr, ServeLimits::default())
+    }
+
+    /// [`FleetServer::start`] with explicit [`ServeLimits`].
+    pub fn start_with(fleet: AucFleet, addr: &str, limits: ServeLimits) -> io::Result<FleetServer> {
+        if limits.workers == 0 || limits.max_conns == 0 || limits.timeout.is_zero() {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidInput,
+                "serve limits must be positive (workers, max_conns, timeout)",
+            ));
+        }
         let listener = TcpListener::bind(addr)?;
         let local = listener.local_addr()?;
         let baseline = fleet.sketch_state();
+        let stop = Arc::new(AtomicBool::new(false));
         let shared = Arc::new(Shared {
             fleet: Mutex::new(fleet),
-            subs: Mutex::new(Vec::new()),
-            pub_state: Mutex::new(PubState { seq: 0, last: baseline }),
-            stop: AtomicBool::new(false),
+            fanout: Arc::new(Fanout::new(baseline, Arc::clone(&stop), limits.max_conns)),
+            queue: AcceptQueue::new(limits.max_conns),
+            tracker: Arc::new(ConnTracker::default()),
+            stop,
+            limits,
         });
+        let mut workers = Vec::with_capacity(limits.workers);
+        for i in 0..limits.workers {
+            let worker_shared = Arc::clone(&shared);
+            workers.push(
+                thread::Builder::new()
+                    .name(format!("fleet-serve-worker-{i}"))
+                    .spawn(move || worker_loop(&worker_shared))?,
+            );
+        }
         let accept_shared = Arc::clone(&shared);
         let acceptor = thread::Builder::new()
             .name("fleet-serve-accept".to_string())
@@ -170,18 +225,12 @@ impl FleetServer {
                         break;
                     }
                     let Ok(stream) = conn else { continue };
-                    let conn_shared = Arc::clone(&accept_shared);
-                    // Handlers are detached: they exit when their
-                    // connection closes, and shutdown disconnects
-                    // subscribers by clearing the broadcast list.
-                    let _ = thread::Builder::new()
-                        .name("fleet-serve-conn".to_string())
-                        .spawn(move || {
-                            let _ = handle_connection(stream, &conn_shared);
-                        });
+                    if let Err(stream) = accept_shared.queue.offer(stream) {
+                        shed(stream, &accept_shared);
+                    }
                 }
             })?;
-        Ok(FleetServer { shared, addr: local, acceptor: Some(acceptor) })
+        Ok(FleetServer { shared, addr: local, acceptor: Some(acceptor), workers })
     }
 
     /// The bound address (with the real port when bound to `:0`).
@@ -189,68 +238,72 @@ impl FleetServer {
         self.addr
     }
 
-    /// Feed a batch at the fleet's internal clock, then publish the
-    /// resulting sketch delta to subscribers.
-    pub fn ingest_batch(&self, batch: &[(u64, f64, bool)]) {
-        let next = {
-            let mut fleet = self.shared.fleet.lock().expect("fleet lock");
-            fleet.push_batch(batch);
-            // Waits for the drain — per-drain deltas are the contract.
-            fleet.sketch_state()
-        };
-        self.publish(next);
+    /// The limits this server enforces.
+    pub fn limits(&self) -> ServeLimits {
+        self.shared.limits
     }
 
-    /// Feed a batch at an explicit clock, then publish the delta.
+    /// Feed a batch at the fleet's internal clock, then publish the
+    /// resulting view (and the sketch delta, if any) to subscribers.
+    /// Never blocks on a subscriber socket: fan-out is queue-only.
+    pub fn ingest_batch(&self, batch: &[(u64, f64, bool)]) {
+        let mut fleet = lock(&self.shared.fleet);
+        fleet.push_batch(batch);
+        // republish reads sketch_state, which waits for the drain —
+        // per-drain deltas are the contract.
+        self.shared.fanout.republish(&fleet);
+    }
+
+    /// Feed a batch at an explicit clock, then publish.
     pub fn ingest_batch_at(&self, batch: &[(u64, f64, bool)], at: u64) {
-        let next = {
-            let mut fleet = self.shared.fleet.lock().expect("fleet lock");
-            fleet.push_batch_at(batch, at);
-            fleet.sketch_state()
-        };
-        self.publish(next);
+        let mut fleet = lock(&self.shared.fleet);
+        fleet.push_batch_at(batch, at);
+        self.shared.fanout.republish(&fleet);
     }
 
     /// Run `f` against the fleet under the serving lock — the
     /// in-process answer a wire response must be bit-identical to.
     pub fn with_fleet<R>(&self, f: impl FnOnce(&AucFleet) -> R) -> R {
-        f(&self.shared.fleet.lock().expect("fleet lock"))
+        f(&lock(&self.shared.fleet))
     }
 
-    /// Run `f` against the fleet mutably (eviction, reconfiguration).
-    /// No delta is published; pair with [`FleetServer::ingest_batch`]
-    /// or rely on the next drain to refresh subscribers.
+    /// Run `f` against the fleet mutably (eviction, hibernation,
+    /// reconfiguration), then republish the view so reads never see
+    /// pre-mutation state — with a sketch delta to subscribers if the
+    /// mutation moved the sketch.
     pub fn with_fleet_mut<R>(&self, f: impl FnOnce(&mut AucFleet) -> R) -> R {
-        f(&mut self.shared.fleet.lock().expect("fleet lock"))
+        let mut fleet = lock(&self.shared.fleet);
+        let r = f(&mut fleet);
+        self.shared.fanout.republish(&fleet);
+        r
     }
 
-    /// Currently attached subscribers.
+    /// Currently attached subscribers (writers still running).
     pub fn subscriber_count(&self) -> usize {
-        self.shared.subs.lock().expect("subscriber list").len()
+        self.shared.fanout.subscriber_count()
     }
 
     /// The last published `(seq, sketch)` — what an up-to-date
     /// subscriber has reconstructed.
     pub fn last_published(&self) -> (u64, FleetSketch) {
-        let st = self.shared.pub_state.lock().expect("publisher state");
-        (st.seq, st.last.clone())
+        let v = self.shared.fanout.view();
+        (v.seq(), v.sketch().clone())
     }
 
-    fn publish(&self, next: FleetSketch) {
-        let mut st = self.shared.pub_state.lock().expect("publisher state");
-        if st.last == next {
-            return; // quiet drain: subscribers owe nothing
-        }
-        st.seq += 1;
-        let json_line = json::delta_to_json(st.seq, &st.last, &next);
-        let bin_payload = wire::encode_delta(st.seq, &st.last, &next);
-        st.last = next;
-        let mut subs = self.shared.subs.lock().expect("subscriber list");
-        subs.retain_mut(|sub| sub.send(&json_line, &bin_payload));
+    /// The current [`PublishedView`], materialized — the state every
+    /// sketch-answerable wire response at this seq is bit-identical
+    /// to.
+    pub fn published_view(&self) -> Arc<PublishedView> {
+        self.shared.fanout.materialized_view(&self.shared.fleet)
     }
 
-    /// Stop accepting, join the acceptor, and drop all subscribers.
-    /// Idempotent; also runs on drop.
+    /// Stop accepting, then drain everything before returning: join
+    /// the acceptor, drop queued connections, half-close live ones so
+    /// blocked workers and subscriber writers unblock immediately,
+    /// and join them all. The drain is deadline-bounded by
+    /// construction — every socket op has a timeout and every loop
+    /// re-checks the stop flag — so no handler can outlive shutdown
+    /// and answer afterwards. Idempotent; also runs on drop.
     pub fn shutdown(&mut self) {
         if self.shared.stop.swap(true, Ordering::AcqRel) {
             return;
@@ -260,7 +313,17 @@ impl FleetServer {
         if let Some(handle) = self.acceptor.take() {
             let _ = handle.join();
         }
-        self.shared.subs.lock().expect("subscriber list").clear();
+        // Reset whatever was accepted but never claimed, and wake
+        // every parked worker so it can observe the closed queue.
+        drop(self.shared.queue.close());
+        // Live connections: half-close so in-flight reads/writes
+        // return now instead of after a full socket timeout.
+        self.shared.tracker.shutdown_all();
+        for handle in self.workers.drain(..) {
+            let _ = handle.join();
+        }
+        // Disconnect subscriber queues and join their writers.
+        self.shared.fanout.shutdown();
     }
 }
 
@@ -271,12 +334,60 @@ impl Drop for FleetServer {
 }
 
 // ---------------------------------------------------------------------
+// Admission: workers and shedding
+// ---------------------------------------------------------------------
+
+fn worker_loop(shared: &Arc<Shared>) {
+    while let Some(conn) = shared.queue.take() {
+        let token = shared.tracker.register(&conn);
+        let _ = serve_connection(conn, shared);
+        shared.tracker.deregister(token);
+    }
+}
+
+/// Overload response on the accept thread: give the connection
+/// [`SHED_WAIT`] to reveal its protocol, answer 503 / `STATUS_BUSY`,
+/// drop it. Never blocks longer — admission must keep moving.
+fn shed(mut stream: TcpStream, shared: &Shared) {
+    if stream.set_read_timeout(Some(SHED_WAIT)).is_err()
+        || stream.set_write_timeout(Some(SHED_WAIT)).is_err()
+    {
+        return;
+    }
+    let mut first = [0u8; 1];
+    let Ok(n) = stream.peek(&mut first) else { return };
+    if n == 0 {
+        return;
+    }
+    let seq = shared.fanout.view().seq();
+    let busy = "server busy: connection limit reached";
+    if first[0] == wire::MAGIC[0] {
+        let _ = wire::write_frame(
+            &mut stream,
+            wire::STATUS_BUSY,
+            &seq_prefixed(seq, busy.as_bytes()),
+        );
+    } else {
+        let _ = write_http(&mut stream, 503, &error_body(busy), true, seq);
+    }
+}
+
+// ---------------------------------------------------------------------
 // Connection handling
 // ---------------------------------------------------------------------
 
-fn handle_connection(stream: TcpStream, shared: &Shared) -> io::Result<()> {
+fn serve_connection(stream: TcpStream, shared: &Arc<Shared>) -> io::Result<()> {
+    stream.set_read_timeout(Some(shared.limits.timeout))?;
+    stream.set_write_timeout(Some(shared.limits.timeout))?;
     let mut first = [0u8; 1];
-    if stream.peek(&mut first)? == 0 {
+    // The peek carries the read timeout: a half-open connect that
+    // never sends a byte releases this worker after one timeout.
+    let n = match stream.peek(&mut first) {
+        Ok(n) => n,
+        Err(e) if is_timeout(&e) || is_disconnect(&e) => return Ok(()),
+        Err(e) => return Err(e),
+    };
+    if n == 0 {
         return Ok(()); // closed before sending anything
     }
     if first[0] == wire::MAGIC[0] {
@@ -286,26 +397,65 @@ fn handle_connection(stream: TcpStream, shared: &Shared) -> io::Result<()> {
     }
 }
 
-fn handle_binary(mut stream: TcpStream, shared: &Shared) -> io::Result<()> {
+fn handle_binary(mut stream: TcpStream, shared: &Arc<Shared>) -> io::Result<()> {
     let mut magic = [0u8; 4];
     stream.read_exact(&mut magic)?;
     if magic != wire::MAGIC {
-        return wire::write_frame(&mut stream, wire::STATUS_ERR, b"bad magic");
+        let seq = shared.fanout.view().seq();
+        return wire::write_frame(
+            &mut stream,
+            wire::STATUS_ERR,
+            &seq_prefixed(seq, b"bad magic"),
+        );
     }
     loop {
-        let Ok((op, payload)) = wire::read_frame(&mut stream) else {
-            return Ok(()); // client hung up
+        if shared.stop.load(Ordering::Acquire) {
+            return Ok(());
+        }
+        let (op, payload) = match read_request_frame(&mut stream, shared.limits.timeout)? {
+            FrameOutcome::Frame(op, payload) => (op, payload),
+            FrameOutcome::Closed => return Ok(()), // hangup, idle expiry, or mid-frame stall
+            FrameOutcome::Oversized(len) => {
+                // The unread payload makes resync impossible — reject
+                // and close.
+                let seq = shared.fanout.view().seq();
+                let msg = format!(
+                    "frame length {len} exceeds the {}-byte request cap",
+                    wire::MAX_REQUEST_FRAME
+                );
+                return wire::write_frame(
+                    &mut stream,
+                    wire::STATUS_ERR,
+                    &seq_prefixed(seq, msg.as_bytes()),
+                );
+            }
         };
         match binary_request(op, &payload) {
-            Ok(Request::Subscribe) => return subscribe_binary(stream, shared),
-            Ok(req) => {
-                let body = {
-                    let fleet = shared.fleet.lock().expect("fleet lock");
-                    answer_binary(&fleet, &req)
+            Ok(Request::Subscribe) => {
+                return match shared.fanout.subscribe(stream, SubProto::Binary, &shared.tracker) {
+                    Ok(()) => Ok(()),
+                    Err(mut stream) => {
+                        let seq = shared.fanout.view().seq();
+                        wire::write_frame(
+                            &mut stream,
+                            wire::STATUS_BUSY,
+                            &seq_prefixed(seq, b"server busy: subscriber limit reached"),
+                        )
+                    }
                 };
-                wire::write_frame(&mut stream, wire::STATUS_OK, &body)?;
             }
-            Err(msg) => wire::write_frame(&mut stream, wire::STATUS_ERR, msg.as_bytes())?,
+            Ok(req) => {
+                let (seq, body) = answer_binary(shared, &req);
+                wire::write_frame(&mut stream, wire::STATUS_OK, &seq_prefixed(seq, &body))?;
+            }
+            Err(msg) => {
+                let seq = shared.fanout.view().seq();
+                wire::write_frame(
+                    &mut stream,
+                    wire::STATUS_ERR,
+                    &seq_prefixed(seq, msg.as_bytes()),
+                )?;
+            }
         }
     }
 }
@@ -327,20 +477,79 @@ fn binary_request(op: u8, payload: &[u8]) -> Result<Request, String> {
     Ok(req)
 }
 
-fn subscribe_binary(mut stream: TcpStream, shared: &Shared) -> io::Result<()> {
-    // Hold pub_state across baseline write + subscriber insertion so
-    // the first delta a subscriber sees is seq(baseline) + 1.
-    let st = shared.pub_state.lock().expect("publisher state");
-    let payload = wire::encode_sketch(st.seq, &st.last);
-    wire::write_frame(&mut stream, wire::STATUS_OK, &payload)?;
-    shared
-        .subs
-        .lock()
-        .expect("subscriber list")
-        .push(Subscriber { stream, proto: Proto::Binary });
-    drop(st);
-    Ok(())
+/// One request frame read under the deadline discipline: the opcode
+/// byte is the idle wait (bounded by the socket read timeout); once it
+/// arrives the rest of the frame must land within one deadline budget,
+/// read in chunks so a byte-trickling client cannot reset the clock.
+enum FrameOutcome {
+    Frame(u8, Vec<u8>),
+    Closed,
+    Oversized(usize),
 }
+
+fn read_request_frame(stream: &mut TcpStream, budget: Duration) -> io::Result<FrameOutcome> {
+    let mut op = [0u8; 1];
+    match stream.read(&mut op) {
+        Ok(0) => return Ok(FrameOutcome::Closed),
+        Ok(_) => {}
+        Err(e) if is_timeout(&e) || is_disconnect(&e) => return Ok(FrameOutcome::Closed),
+        Err(e) => return Err(e),
+    }
+    let deadline = Deadline::after(budget);
+    let outcome = read_frame_rest(stream, op[0], &deadline);
+    // Restore the idle allowance for the next request (the deadline
+    // reads shrank the socket timeout).
+    stream.set_read_timeout(Some(budget))?;
+    outcome
+}
+
+fn read_frame_rest(
+    stream: &mut TcpStream,
+    op: u8,
+    deadline: &Deadline,
+) -> io::Result<FrameOutcome> {
+    let mut head = [0u8; 4];
+    if !read_full_by_deadline(stream, &mut head, deadline)? {
+        return Ok(FrameOutcome::Closed);
+    }
+    let len = u32::from_le_bytes(head) as usize;
+    if len > wire::MAX_REQUEST_FRAME {
+        return Ok(FrameOutcome::Oversized(len));
+    }
+    let mut payload = vec![0u8; len];
+    if !read_full_by_deadline(stream, &mut payload, deadline)? {
+        return Ok(FrameOutcome::Closed);
+    }
+    Ok(FrameOutcome::Frame(op, payload))
+}
+
+/// Fill `buf` before `deadline` expires; `Ok(false)` means the peer
+/// went away or ran out the clock (close quietly either way). Reads
+/// chunk-at-a-time with the timeout pinned to the *remaining* budget,
+/// so each arriving byte cannot restart the full socket timeout.
+fn read_full_by_deadline(
+    stream: &mut TcpStream,
+    buf: &mut [u8],
+    deadline: &Deadline,
+) -> io::Result<bool> {
+    let mut filled = 0;
+    while filled < buf.len() {
+        let Some(rem) = deadline.remaining() else { return Ok(false) };
+        stream.set_read_timeout(Some(rem))?;
+        match stream.read(&mut buf[filled..]) {
+            Ok(0) => return Ok(false),
+            Ok(n) => filled += n,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+            Err(e) if is_timeout(&e) || is_disconnect(&e) => return Ok(false),
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(true)
+}
+
+// ---------------------------------------------------------------------
+// HTTP
+// ---------------------------------------------------------------------
 
 enum HttpError {
     /// 400 with a message.
@@ -349,27 +558,85 @@ enum HttpError {
     NotFound(String),
 }
 
-fn handle_http(stream: TcpStream, shared: &Shared) -> io::Result<()> {
+/// How one attempt to read a request head ended.
+enum HeadOutcome {
+    Request { method: String, target: String, close: bool },
+    /// Peer hung up, idled out between requests, or sent non-UTF-8
+    /// garbage — close quietly.
+    Closed,
+    /// Head exceeded [`MAX_HEAD_BYTES`] — answer 431.
+    TooLarge,
+    /// Head started but did not finish within the deadline budget —
+    /// answer 408.
+    TimedOut,
+}
+
+fn handle_http(stream: TcpStream, shared: &Arc<Shared>) -> io::Result<()> {
+    let ctl = stream.try_clone()?;
     let mut reader = BufReader::new(stream.try_clone()?);
     let mut stream = stream;
     loop {
-        let Some((method, target, close)) = read_http_request(&mut reader)? else {
-            return Ok(()); // client hung up between requests
-        };
+        if shared.stop.load(Ordering::Acquire) {
+            return Ok(());
+        }
+        let (method, target, close) =
+            match read_http_head(&mut reader, &ctl, shared.limits.timeout)? {
+                HeadOutcome::Request { method, target, close } => (method, target, close),
+                HeadOutcome::Closed => return Ok(()),
+                HeadOutcome::TooLarge => {
+                    let seq = shared.fanout.view().seq();
+                    return write_http(
+                        &mut stream,
+                        431,
+                        &error_body(&format!("request head exceeds {MAX_HEAD_BYTES} bytes")),
+                        true,
+                        seq,
+                    );
+                }
+                HeadOutcome::TimedOut => {
+                    let seq = shared.fanout.view().seq();
+                    return write_http(
+                        &mut stream,
+                        408,
+                        &error_body("request head not completed within the deadline"),
+                        true,
+                        seq,
+                    );
+                }
+            };
         match http_request(&method, &target) {
-            Ok(Request::Subscribe) => return subscribe_http(stream, shared),
-            Ok(req) => {
-                let body = {
-                    let fleet = shared.fleet.lock().expect("fleet lock");
-                    answer_json(&fleet, &req)
+            Ok(Request::Subscribe) => {
+                return match shared.fanout.subscribe(stream, SubProto::Http, &shared.tracker) {
+                    Ok(()) => Ok(()),
+                    Err(mut stream) => {
+                        let seq = shared.fanout.view().seq();
+                        write_http(
+                            &mut stream,
+                            503,
+                            &error_body("server busy: subscriber limit reached"),
+                            true,
+                            seq,
+                        )
+                    }
                 };
-                write_http(&mut stream, 200, &body, close)?;
+            }
+            Ok(req) => {
+                let (seq, body) = answer_json(shared, &req);
+                write_http(&mut stream, 200, &body, close, seq)?;
             }
             Err(HttpError::NotFound(path)) => {
-                write_http(&mut stream, 404, &error_body(&format!("no such endpoint {path}")), close)?;
+                let seq = shared.fanout.view().seq();
+                write_http(
+                    &mut stream,
+                    404,
+                    &error_body(&format!("no such endpoint {path}")),
+                    close,
+                    seq,
+                )?;
             }
             Err(HttpError::Bad(msg)) => {
-                write_http(&mut stream, 400, &error_body(&msg), close)?;
+                let seq = shared.fanout.view().seq();
+                write_http(&mut stream, 400, &error_body(&msg), close, seq)?;
             }
         }
         if close {
@@ -378,26 +645,77 @@ fn handle_http(stream: TcpStream, shared: &Shared) -> io::Result<()> {
     }
 }
 
-/// Read one request head; `None` on a clean EOF.
-fn read_http_request(
+enum LineError {
+    TooLong,
+    Io(io::Error),
+}
+
+/// `read_line` capped at `cap` bytes — the primitive that makes every
+/// head read bounded even when no newline ever arrives.
+fn bounded_line(
     reader: &mut BufReader<TcpStream>,
-) -> io::Result<Option<(String, String, bool)>> {
-    let mut line = String::new();
-    if reader.read_line(&mut line)? == 0 {
-        return Ok(None);
+    line: &mut String,
+    cap: usize,
+) -> Result<usize, LineError> {
+    let mut limited = reader.by_ref().take(cap as u64 + 1);
+    let n = limited.read_line(line).map_err(LineError::Io)?;
+    if n > cap {
+        return Err(LineError::TooLong);
     }
-    let mut parts = line.split_whitespace();
-    let method = parts.next().unwrap_or("").to_string();
-    let target = parts.next().unwrap_or("/").to_string();
-    let mut close = false;
-    loop {
-        let mut header = String::new();
-        if reader.read_line(&mut header)? == 0 {
-            return Ok(None); // truncated head
+    Ok(n)
+}
+
+/// Read one request head under the cap and deadline discipline: the
+/// request line is the idle keep-alive wait (bounded by the socket
+/// read timeout); once it arrives the remaining headers must land
+/// within one deadline budget and [`MAX_HEAD_BYTES`] in total.
+fn read_http_head(
+    reader: &mut BufReader<TcpStream>,
+    ctl: &TcpStream,
+    budget: Duration,
+) -> io::Result<HeadOutcome> {
+    let mut line = String::new();
+    match bounded_line(reader, &mut line, MAX_HEAD_BYTES) {
+        Ok(0) => return Ok(HeadOutcome::Closed),
+        Ok(_) => {}
+        Err(LineError::TooLong) => return Ok(HeadOutcome::TooLarge),
+        Err(LineError::Io(e)) if is_timeout(&e) || is_disconnect(&e) => {
+            return Ok(HeadOutcome::Closed)
         }
-        let header = header.trim_end();
+        Err(LineError::Io(e)) if e.kind() == io::ErrorKind::InvalidData => {
+            return Ok(HeadOutcome::Closed) // non-UTF-8 garbage preamble
+        }
+        Err(LineError::Io(e)) => return Err(e),
+    }
+    let mut used = line.len();
+    let (method, target) = {
+        let mut parts = line.split_whitespace();
+        (parts.next().unwrap_or("").to_string(), parts.next().unwrap_or("/").to_string())
+    };
+    let deadline = Deadline::after(budget);
+    let mut close = false;
+    let outcome = loop {
+        if used >= MAX_HEAD_BYTES {
+            break HeadOutcome::TooLarge;
+        }
+        let Some(rem) = deadline.remaining() else { break HeadOutcome::TimedOut };
+        ctl.set_read_timeout(Some(rem))?;
+        line.clear();
+        match bounded_line(reader, &mut line, MAX_HEAD_BYTES - used) {
+            Ok(0) => break HeadOutcome::Closed,
+            Ok(n) => used += n,
+            Err(LineError::TooLong) => break HeadOutcome::TooLarge,
+            Err(LineError::Io(e)) if is_timeout(&e) => break HeadOutcome::TimedOut,
+            Err(LineError::Io(e))
+                if is_disconnect(&e) || e.kind() == io::ErrorKind::InvalidData =>
+            {
+                break HeadOutcome::Closed
+            }
+            Err(LineError::Io(e)) => return Err(e),
+        }
+        let header = line.trim_end();
         if header.is_empty() {
-            break;
+            break HeadOutcome::Request { method, target, close };
         }
         if let Some((name, value)) = header.split_once(':') {
             if name.eq_ignore_ascii_case("connection") && value.trim().eq_ignore_ascii_case("close")
@@ -405,8 +723,10 @@ fn read_http_request(
                 close = true;
             }
         }
-    }
-    Ok(Some((method, target, close)))
+    };
+    // Restore the idle allowance for the next request.
+    ctl.set_read_timeout(Some(budget))?;
+    Ok(outcome)
 }
 
 fn http_request(method: &str, target: &str) -> Result<Request, HttpError> {
@@ -443,24 +763,6 @@ where
         .map_err(|e| HttpError::Bad(format!("query parameter {name}={raw}: {e}")))
 }
 
-fn subscribe_http(mut stream: TcpStream, shared: &Shared) -> io::Result<()> {
-    let st = shared.pub_state.lock().expect("publisher state");
-    let line = json::sketch_to_json(st.seq, &st.last);
-    // Streaming body: no Content-Length, the connection is the frame.
-    stream.write_all(
-        b"HTTP/1.1 200 OK\r\nContent-Type: application/x-ndjson\r\nConnection: close\r\n\r\n",
-    )?;
-    stream.write_all(line.as_bytes())?;
-    stream.write_all(b"\n")?;
-    shared
-        .subs
-        .lock()
-        .expect("subscriber list")
-        .push(Subscriber { stream, proto: Proto::Http });
-    drop(st);
-    Ok(())
-}
-
 fn error_body(msg: &str) -> String {
     use std::fmt::Write as _;
     let mut out = String::with_capacity(msg.len() + 16);
@@ -480,15 +782,24 @@ fn error_body(msg: &str) -> String {
     out
 }
 
-fn write_http(stream: &mut TcpStream, status: u16, body: &str, close: bool) -> io::Result<()> {
+fn write_http(
+    stream: &mut TcpStream,
+    status: u16,
+    body: &str,
+    close: bool,
+    seq: u64,
+) -> io::Result<()> {
     let reason = match status {
         200 => "OK",
         400 => "Bad Request",
         404 => "Not Found",
+        408 => "Request Timeout",
+        431 => "Request Header Fields Too Large",
+        503 => "Service Unavailable",
         _ => "Error",
     };
     let head = format!(
-        "HTTP/1.1 {status} {reason}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: {}\r\n\r\n",
+        "HTTP/1.1 {status} {reason}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nX-Fleet-Seq: {seq}\r\nConnection: {}\r\n\r\n",
         body.len(),
         if close { "close" } else { "keep-alive" }
     );

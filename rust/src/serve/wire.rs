@@ -12,9 +12,14 @@
 //! the two protocols on one port) and then exchanges frames:
 //! `[u8 opcode][u32 LE payload length][payload]`. Requests use the
 //! `OP_*` opcodes; every response is a [`STATUS_OK`] frame holding the
-//! encoded answer or a [`STATUS_ERR`] frame holding a UTF-8 message.
+//! 8-byte LE publication seq followed by the encoded answer, a
+//! [`STATUS_ERR`] frame holding the seq followed by a UTF-8 message,
+//! or a [`STATUS_BUSY`] frame when the server is shedding load.
 //! Subscriptions additionally push [`OP_DELTA`] frames after the
-//! baseline response.
+//! baseline response — or, when the subscriber lags behind the
+//! publisher, an [`OP_LAGGED`] notice followed by a fresh
+//! [`OP_BASELINE`] coalescing everything missed. Push frames carry
+//! their seq inside the payload, not as a prefix.
 
 use crate::fleet::{
     AucHistogram, FleetAggregate, FleetSketch, FleetSnapshot, ScoreHistogram, StreamSnapshot,
@@ -41,15 +46,36 @@ pub const OP_SCORE_HISTOGRAM: u8 = 6;
 pub const OP_SUBSCRIBE: u8 = 7;
 /// Server push: one `(seq, sketch-delta)` per ingestion drain.
 pub const OP_DELTA: u8 = 8;
+/// Server push: a fresh full baseline `(seq, sketch)` replacing
+/// everything a lagged subscriber missed (follows an [`OP_LAGGED`]
+/// notice; resume applying [`OP_DELTA`]s from its seq).
+pub const OP_BASELINE: u8 = 9;
+/// Server push: this subscriber lagged and its missed deltas were
+/// coalesced. Payload: `u64` LE — the seq of the [`OP_BASELINE`] that
+/// follows immediately.
+pub const OP_LAGGED: u8 = 10;
 
-/// Response opcode: payload is the encoded answer.
+/// Response opcode: payload is the 8-byte LE seq echo followed by the
+/// encoded answer.
 pub const STATUS_OK: u8 = 0;
-/// Response opcode: payload is a UTF-8 error message.
+/// Response opcode: payload is the 8-byte LE seq echo followed by a
+/// UTF-8 error message.
 pub const STATUS_ERR: u8 = 1;
+/// Response opcode: the server is shedding load (connection or
+/// subscriber limit reached). Payload like [`STATUS_ERR`]; the server
+/// closes the connection after sending it.
+pub const STATUS_BUSY: u8 = 2;
 
 /// Upper bound on a frame payload; anything larger is a corrupt or
 /// hostile length prefix, not a real answer.
 const MAX_FRAME: usize = 1 << 30;
+
+/// Upper bound on a *request* frame payload the server will accept.
+/// Every request payload is a few bytes (a `u32` or an `f64`), so
+/// anything beyond this is hostile or corrupt — the server answers
+/// [`STATUS_ERR`] and closes without reading (or allocating) the
+/// claimed length.
+pub const MAX_REQUEST_FRAME: usize = 64 << 10;
 
 // ---------------------------------------------------------------------
 // Primitives
@@ -460,6 +486,15 @@ pub fn apply_delta(payload: &[u8], onto: &mut FleetSketch) -> Result<u64, String
             .ok_or_else(|| format!("delta bin {bin} out of range"))?;
         *slot = count;
     }
+    c.done()?;
+    Ok(seq)
+}
+
+/// Decode an [`OP_LAGGED`] payload: the seq of the baseline that
+/// follows.
+pub fn decode_lagged(payload: &[u8]) -> Result<u64, String> {
+    let mut c = Cursor::new(payload);
+    let seq = c.u64()?;
     c.done()?;
     Ok(seq)
 }

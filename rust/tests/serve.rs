@@ -2,20 +2,35 @@
 //!
 //! The load-bearing property is **wire ≡ in-process**: every endpoint
 //! response, on both protocols, must decode to a value equal to the
-//! in-process query — and *byte-derived* equal: re-encoding the
-//! decoded value reproduces the exact response bytes, so nothing was
-//! lost or reformatted in flight. The suite drives seeded
-//! mixed-estimator fleets (approx + maintained-exact + binned in one
-//! fleet), the empty- and one-stream edges that used to underflow
-//! before the quantile-rank fix, the malformed requests that must be
-//! rejected at the surface instead of panicking the fleet, and the
-//! delta-subscription stream on both protocols.
+//! in-process query *at the publication seq the response echoes* — and
+//! *byte-derived* equal: re-encoding the decoded value reproduces the
+//! exact response bytes, so nothing was lost or reformatted in flight.
+//! The suite drives seeded mixed-estimator fleets (approx +
+//! maintained-exact + binned in one fleet), the empty- and one-stream
+//! edges that used to underflow before the quantile-rank fix, the
+//! malformed requests that must be rejected at the surface instead of
+//! panicking the fleet, and the delta-subscription stream on both
+//! protocols.
+//!
+//! The robustness half attacks the bounded front-end: hostile clients
+//! (garbage preambles, mid-frame hangups, half-open connects,
+//! oversized frame lengths, slow-loris heads, connect floods past the
+//! connection limit) must be answered or shed — never panic or wedge
+//! the server — and a deliberately unread subscriber must not stall
+//! `ingest_batch` (the fan-out is queue-only; a lagging subscriber is
+//! resynced with a `lagged` notice plus a fresh baseline).
 
 use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpStream};
+use std::sync::Arc;
+use std::thread;
+use std::time::{Duration, Instant};
 
 use streamauc::fleet::{AucFleet, FleetConfig, StreamConfig};
-use streamauc::serve::{http_get, http_subscribe, json, wire, BinClient, FleetServer, HttpClient};
+use streamauc::serve::{
+    http_get, http_subscribe, json, wire, BinClient, FleetServer, HttpClient, MAX_HEAD_BYTES,
+    ServeLimits, SubEvent,
+};
 use streamauc::stream::Pcg;
 
 // ---------------------------------------------------------------------
@@ -64,6 +79,15 @@ fn delta_batch(seed: u64) -> Vec<(u64, f64, bool)> {
             (rng.below(30), score, pos)
         })
         .collect()
+}
+
+/// One event per stream with fresh random scores — maximal sketch-bin
+/// churn per publish at minimal ingestion cost. Sized for the lag
+/// test, which needs many kilobytes of delta traffic to overflow a
+/// subscriber's bounded queue plus its unread socket buffers.
+fn churn_batch(round: u64) -> Vec<(u64, f64, bool)> {
+    let mut rng = Pcg::seed(0xC0FE ^ round);
+    (0..24u64).map(|id| (id, rng.range(0.02, 0.98), rng.chance(0.5))).collect()
 }
 
 /// Send a raw request (must carry `Connection: close`) and return
@@ -509,4 +533,454 @@ fn dropped_subscribers_are_pruned_on_the_next_publish() {
         std::thread::sleep(std::time::Duration::from_millis(10));
     }
     assert_eq!(server.subscriber_count(), 0);
+}
+
+// ---------------------------------------------------------------------
+// Seq echo: every response names the publication epoch it answers at,
+// and the answer is bit-identical to the in-process query at that seq
+// ---------------------------------------------------------------------
+
+#[test]
+fn every_response_echoes_the_seq_it_answers_at() {
+    let server = FleetServer::start(mixed_fleet(2, false), "127.0.0.1:0").expect("bind");
+    let addr = server.local_addr();
+    let mut http = HttpClient::connect(addr).expect("connect");
+    let mut bin = BinClient::connect(addr).expect("binary session");
+
+    let (status, body) = http.get("/aggregate").expect("get");
+    assert_eq!(status, 200);
+    let seq = http.last_seq().expect("200 responses echo a seq");
+    let view = server.published_view();
+    assert_eq!(view.seq(), seq, "the echo names the current published epoch");
+    // Bit-identity at the echoed seq: re-encoding that epoch's view
+    // reproduces the exact response bytes.
+    assert_eq!(json::aggregate_to_json(view.aggregate()), body);
+
+    // Errors answer at an epoch too.
+    let (status, _) = http.get("/nope").expect("get");
+    assert_eq!(status, 404);
+    assert_eq!(http.last_seq(), Some(seq));
+
+    let (bstatus, payload) = bin.request(wire::OP_SNAPSHOT, &[]).expect("round-trip");
+    assert_eq!(bstatus, wire::STATUS_OK);
+    assert_eq!(bin.last_seq(), Some(seq));
+    assert_eq!(wire::encode_snapshot(view.snapshot()), payload);
+
+    let (bstatus, _) = bin.request(99, &[]).expect("round-trip");
+    assert_eq!(bstatus, wire::STATUS_ERR);
+    assert_eq!(bin.last_seq(), Some(seq), "error frames echo the epoch");
+
+    // Ingestion that changes the sketch bumps the epoch by exactly
+    // one; fresh responses echo the new seq and answer at it.
+    server.ingest_batch(&delta_batch(0x5EC0));
+    let (status, body) = http.get("/top_k_worst?k=6").expect("get");
+    assert_eq!(status, 200);
+    assert_eq!(http.last_seq(), Some(seq + 1));
+    let view = server.published_view();
+    assert_eq!(view.seq(), seq + 1);
+    assert_eq!(json::top_k_to_json(&view.top_k_worst(6)), body);
+
+    let (bstatus, payload) =
+        bin.request(wire::OP_AUC_HISTOGRAM, &8u32.to_le_bytes()).expect("round-trip");
+    assert_eq!(bstatus, wire::STATUS_OK);
+    assert_eq!(bin.last_seq(), Some(seq + 1));
+    assert_eq!(wire::encode_auc_histogram(&view.auc_histogram(8)), payload);
+}
+
+#[test]
+fn seq_echoes_are_monotonic_under_concurrent_ingestion() {
+    let fleet = fleet_with(4, true, StreamConfig::new(32, 0.1).without_monitor());
+    let server = Arc::new(FleetServer::start(fleet, "127.0.0.1:0").expect("bind"));
+    let ingest = {
+        let server = Arc::clone(&server);
+        thread::spawn(move || {
+            for round in 0..40u64 {
+                server.ingest_batch(&delta_batch(0xC0DE ^ round));
+            }
+        })
+    };
+    let mut client = HttpClient::connect(server.local_addr()).expect("connect");
+    let mut last = 0u64;
+    for _ in 0..60 {
+        let (status, _) = client.get("/aggregate").expect("get under ingestion");
+        assert_eq!(status, 200);
+        let seq = client.last_seq().expect("echo");
+        assert!(seq >= last, "seq echo went backwards: {seq} < {last}");
+        last = seq;
+    }
+    ingest.join().expect("ingest thread");
+    // Quiesced, the echo is exactly the last published epoch.
+    let (status, _) = client.get("/aggregate").expect("get");
+    assert_eq!(status, 200);
+    assert_eq!(client.last_seq(), Some(server.last_published().0));
+}
+
+/// The published view's query methods — what the wire serves without
+/// the fleet lock — must match the fleet's own answers exactly,
+/// including the non-divisor bin counts that exercise the direct
+/// rebin formula rather than the sketch group-sum.
+#[test]
+fn published_view_queries_match_the_fleet_exactly() {
+    let server = FleetServer::start(mixed_fleet(2, false), "127.0.0.1:0").expect("bind");
+    let view = server.published_view();
+    server.with_fleet(|f| {
+        assert_eq!(view.snapshot(), &f.snapshot());
+        assert_eq!(view.aggregate(), &f.aggregate());
+        for k in [0, 1, 3, 24, 100] {
+            assert_eq!(view.top_k_worst(k), f.top_k_worst(k), "k={k}");
+        }
+        for t in [-1.0, 0.0, 0.015625, 0.25, 0.5, 0.9999, 1.0, 3.5, f64::NAN] {
+            assert_eq!(view.count_below(t), f.count_below(t), "t={t}");
+        }
+        for bins in [1, 2, 7, 10, 13, 64] {
+            assert_eq!(view.auc_histogram(bins), f.auc_histogram(bins), "bins={bins}");
+        }
+    });
+
+    // Epoch isolation: a retained view keeps answering its own epoch
+    // after the fleet moves on; the server's current view advances.
+    let before = json::aggregate_to_json(view.aggregate());
+    server.ingest_batch(&delta_batch(0xE90C));
+    assert_eq!(json::aggregate_to_json(view.aggregate()), before);
+    let after = server.published_view();
+    assert_eq!(after.seq(), view.seq() + 1);
+    assert_eq!(after.aggregate(), &server.with_fleet(|f| f.aggregate()));
+}
+
+// ---------------------------------------------------------------------
+// Subscriber lag: fan-out is queue-only, so ingestion never waits on
+// a socket, and a lagging subscriber is coalesced onto a fresh
+// baseline instead of being fed an unbounded backlog
+// ---------------------------------------------------------------------
+
+#[test]
+fn unread_subscriber_cannot_stall_ingestion() {
+    let server = FleetServer::start_with(
+        mixed_fleet(2, false),
+        "127.0.0.1:0",
+        ServeLimits { workers: 2, max_conns: 8, timeout: Duration::from_secs(30) },
+    )
+    .expect("bind");
+    let addr = server.local_addr();
+
+    // A subscriber that never reads a byte.
+    let mut sock = TcpStream::connect(addr).expect("connect");
+    sock.write_all(b"GET /subscribe HTTP/1.1\r\nHost: fleet\r\n\r\n").expect("send");
+    let t0 = Instant::now();
+    while server.subscriber_count() == 0 {
+        assert!(t0.elapsed() < Duration::from_secs(10), "subscriber never attached");
+        thread::sleep(Duration::from_millis(5));
+    }
+
+    // 400 drains publish far more than the subscriber's bounded queue
+    // plus its unread socket can absorb. The publisher only ever
+    // try_sends, so this completes at ingestion speed — with the old
+    // blocking fan-out it would wedge on the first full socket buffer.
+    let t0 = Instant::now();
+    for round in 0..400u64 {
+        server.ingest_batch(&delta_batch(0x57A1 ^ round));
+    }
+    assert!(
+        t0.elapsed() < Duration::from_secs(30),
+        "ingestion stalled behind an unread subscriber: {:?}",
+        t0.elapsed()
+    );
+
+    // And reads still answer, exactly.
+    let agg = json::aggregate_from_json(&get_ok(addr, "/aggregate")).expect("decode");
+    assert_eq!(agg, server.with_fleet(|f| f.aggregate()));
+    drop(sock);
+}
+
+#[test]
+fn lagged_subscriber_resyncs_with_a_notice_and_fresh_baseline() {
+    let server = FleetServer::start_with(
+        mixed_fleet(1, false),
+        "127.0.0.1:0",
+        ServeLimits { workers: 2, max_conns: 8, timeout: Duration::from_secs(120) },
+    )
+    .expect("bind");
+    let mut bin = BinClient::connect(server.local_addr()).expect("binary session");
+    let baseline = bin.subscribe().expect("subscribe");
+    let (base_seq, mut sketch) = wire::decode_sketch(&baseline).expect("decode baseline");
+
+    // Publish far more delta bytes than the subscriber's bounded queue
+    // plus its unread socket buffers can hold: the writer blocks on
+    // the full socket, the queue fills, and the publisher marks the
+    // subscriber lagged instead of waiting.
+    let t0 = Instant::now();
+    for round in 0..4000u64 {
+        server.ingest_batch(&churn_batch(round));
+    }
+    assert!(
+        t0.elapsed() < Duration::from_secs(60),
+        "publishing stalled behind a lagging subscriber: {:?}",
+        t0.elapsed()
+    );
+    let (final_seq, final_sketch) = server.last_published();
+
+    // Drain the stream: pre-lag deltas apply gaplessly, then one
+    // lagged notice announces the jump, and the very next frame is a
+    // fresh baseline replacing everything missed.
+    let mut seq = base_seq;
+    let mut saw_lag = false;
+    while seq < final_seq {
+        match bin.next_event().expect("subscription event") {
+            SubEvent::Delta(payload) => {
+                let got = wire::apply_delta(&payload, &mut sketch).expect("apply");
+                assert_eq!(got, seq + 1, "delta stream must stay gapless");
+                seq = got;
+            }
+            SubEvent::Lagged(at) => {
+                let payload = match bin.next_event().expect("frame after lag notice") {
+                    SubEvent::Baseline(payload) => payload,
+                    _ => panic!("a lagged notice must be followed by a baseline"),
+                };
+                let (bseq, fresh) = wire::decode_sketch(&payload).expect("decode baseline");
+                assert_eq!(bseq, at, "the baseline answers at the notice's seq");
+                assert!(at > seq, "a resync must move the subscriber forward");
+                sketch = fresh;
+                seq = at;
+                saw_lag = true;
+            }
+            SubEvent::Baseline(_) => panic!("baseline without a lagged notice"),
+        }
+    }
+    assert!(saw_lag, "the subscriber never lagged — raise the round count");
+    assert_eq!((seq, sketch), (final_seq, final_sketch));
+}
+
+// ---------------------------------------------------------------------
+// Hostile clients: answer or shed, never panic or wedge
+// ---------------------------------------------------------------------
+
+#[test]
+fn oversized_http_heads_get_431_and_a_close() {
+    let server = FleetServer::start(mixed_fleet(2, false), "127.0.0.1:0").expect("bind");
+    let addr = server.local_addr();
+
+    // One endless request line. Sized so the server consumes exactly
+    // what we send (its cap probe reads MAX_HEAD_BYTES + 1 bytes) —
+    // no unread bytes, so the close is a clean FIN, not an RST race.
+    let mut s = TcpStream::connect(addr).expect("connect");
+    s.write_all(&vec![b'A'; MAX_HEAD_BYTES + 1]).expect("send");
+    let mut buf = String::new();
+    s.read_to_string(&mut buf).expect("read");
+    assert!(buf.starts_with("HTTP/1.1 431 "), "{buf:?}");
+
+    // A legal request line followed by endless headers; 4-byte filler
+    // lines land the cap exactly on a line boundary (the request line
+    // counts toward the cap), again leaving nothing unread.
+    let mut s = TcpStream::connect(addr).expect("connect");
+    let first = b"GET / HTTP/1.1\r\n";
+    s.write_all(first).expect("send");
+    assert_eq!((MAX_HEAD_BYTES - first.len()) % 4, 0);
+    for _ in 0..(MAX_HEAD_BYTES - first.len()) / 4 {
+        s.write_all(b"A:\r\n").expect("send filler header");
+    }
+    let mut buf = String::new();
+    s.read_to_string(&mut buf).expect("read");
+    assert!(buf.starts_with("HTTP/1.1 431 "), "{buf:?}");
+
+    // The server shrugged both off.
+    get_ok(addr, "/aggregate");
+}
+
+#[test]
+fn slow_heads_time_out_with_408_and_half_open_connects_close_quietly() {
+    let server = FleetServer::start_with(
+        mixed_fleet(1, false),
+        "127.0.0.1:0",
+        ServeLimits { workers: 1, max_conns: 4, timeout: Duration::from_millis(300) },
+    )
+    .expect("bind");
+    let addr = server.local_addr();
+
+    // Half-open: connect and send nothing. The worker's first-byte
+    // wait expires and the connection is dropped without a response.
+    let mut idle = TcpStream::connect(addr).expect("connect");
+    let mut buf = String::new();
+    idle.read_to_string(&mut buf).expect("read");
+    assert!(buf.is_empty(), "half-open connections get no response, got {buf:?}");
+
+    // Slow-loris: a complete request line, then silence. The head
+    // deadline expires and the server answers 408 before closing —
+    // and with workers=1 this also proves the worker was released by
+    // the half-open connection above.
+    let mut slow = TcpStream::connect(addr).expect("connect");
+    slow.write_all(b"GET /aggregate HTTP/1.1\r\n").expect("send");
+    let mut buf = String::new();
+    slow.read_to_string(&mut buf).expect("read");
+    assert!(buf.starts_with("HTTP/1.1 408 "), "{buf:?}");
+
+    // The lone worker survived both and still answers.
+    get_ok(addr, "/aggregate");
+}
+
+#[test]
+fn hostile_preambles_and_broken_frames_never_wedge_the_server() {
+    let server = FleetServer::start_with(
+        mixed_fleet(2, false),
+        "127.0.0.1:0",
+        ServeLimits { workers: 2, max_conns: 8, timeout: Duration::from_millis(500) },
+    )
+    .expect("bind");
+    let addr = server.local_addr();
+
+    // Printable garbage preamble: routed as HTTP, rejected politely.
+    let mut s = TcpStream::connect(addr).expect("connect");
+    s.write_all(b"garbage preamble\r\n\r\n").expect("send");
+    let mut buf = String::new();
+    s.read_to_string(&mut buf).expect("read");
+    assert!(buf.starts_with("HTTP/1.1 400 "), "{buf:?}");
+
+    // Non-UTF-8 garbage that is not the protocol magic: closed
+    // quietly — there is no dialect to answer in.
+    let mut s = TcpStream::connect(addr).expect("connect");
+    s.write_all(&[0xFF, 0xFE, 0xFD, b'\n']).expect("send");
+    let mut junk = Vec::new();
+    s.read_to_end(&mut junk).expect("read");
+    assert!(junk.is_empty(), "binary garbage gets no response");
+
+    // A magic-like preamble that is not the magic: one error frame.
+    let mut s = TcpStream::connect(addr).expect("connect");
+    s.write_all(&[wire::MAGIC[0], b'X', b'Y', b'Z']).expect("send");
+    let (op, payload) = wire::read_frame(&mut s).expect("error frame");
+    assert_eq!(op, wire::STATUS_ERR);
+    assert_eq!(&payload[8..], b"bad magic");
+
+    // Mid-frame hangup: magic, an opcode, half a length header, gone.
+    let mut s = TcpStream::connect(addr).expect("connect");
+    s.write_all(&wire::MAGIC).expect("send");
+    s.write_all(&[wire::OP_SNAPSHOT, 0x10]).expect("send");
+    drop(s);
+
+    // Oversized frame length: rejected before any allocation, with an
+    // error frame naming the cap, then closed.
+    let mut s = TcpStream::connect(addr).expect("connect");
+    s.write_all(&wire::MAGIC).expect("send");
+    s.write_all(&[wire::OP_SNAPSHOT]).expect("send");
+    s.write_all(&(8u32 << 20).to_le_bytes()).expect("send");
+    let (op, payload) = wire::read_frame(&mut s).expect("error frame");
+    assert_eq!(op, wire::STATUS_ERR);
+    let msg = String::from_utf8(payload[8..].to_vec()).expect("utf8 message");
+    assert!(msg.contains("exceeds"), "{msg}");
+    let mut rest = Vec::new();
+    s.read_to_end(&mut rest).expect("read");
+    assert!(rest.is_empty(), "connection must close after an oversized frame");
+
+    // A clean client still gets exact answers after all of the above.
+    let body = get_ok(addr, "/aggregate");
+    let agg = json::aggregate_from_json(&body).expect("decode");
+    assert_eq!(agg, server.with_fleet(|f| f.aggregate()));
+    let mut bin = BinClient::connect(addr).expect("binary session");
+    let (status, payload) = bin.request(wire::OP_AGGREGATE, &[]).expect("round-trip");
+    assert_eq!(status, wire::STATUS_OK);
+    assert_eq!(wire::decode_aggregate(&payload).expect("decode"), agg);
+}
+
+#[test]
+fn connect_floods_past_max_conns_are_shed_with_busy_answers() {
+    let server = FleetServer::start_with(
+        mixed_fleet(1, false),
+        "127.0.0.1:0",
+        ServeLimits { workers: 1, max_conns: 2, timeout: Duration::from_secs(2) },
+    )
+    .expect("bind");
+    let addr = server.local_addr();
+
+    // Pin the lone worker: a connection that starts a binary frame
+    // and stalls holds it for one deadline budget.
+    let mut pin = TcpStream::connect(addr).expect("connect");
+    pin.write_all(&wire::MAGIC).expect("send");
+    pin.write_all(&[wire::OP_SNAPSHOT]).expect("send");
+    thread::sleep(Duration::from_millis(100)); // let the worker claim it
+
+    // Fill the accept queue behind it.
+    let q1 = TcpStream::connect(addr).expect("connect");
+    let q2 = TcpStream::connect(addr).expect("connect");
+    thread::sleep(Duration::from_millis(100)); // let the acceptor queue both
+
+    // Overflow is shed with the dialect-appropriate busy answer.
+    let mut flood_http = TcpStream::connect(addr).expect("connect");
+    flood_http.write_all(b"GET /aggregate HTTP/1.1\r\nHost: x\r\n\r\n").expect("send");
+    let mut buf = String::new();
+    flood_http.read_to_string(&mut buf).expect("read");
+    assert!(buf.starts_with("HTTP/1.1 503 "), "{buf:?}");
+
+    let mut flood_bin = TcpStream::connect(addr).expect("connect");
+    flood_bin.write_all(&wire::MAGIC).expect("send");
+    let (op, payload) = wire::read_frame(&mut flood_bin).expect("busy frame");
+    assert_eq!(op, wire::STATUS_BUSY);
+    assert!(String::from_utf8_lossy(&payload[8..]).contains("busy"));
+
+    // Release everything; the server drains and recovers.
+    drop(pin);
+    drop(q1);
+    drop(q2);
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        match http_get(addr, "/aggregate") {
+            Ok((200, body)) => {
+                json::aggregate_from_json(&body).expect("decode");
+                break;
+            }
+            _ => {
+                assert!(Instant::now() < deadline, "server did not recover from the flood");
+                thread::sleep(Duration::from_millis(50));
+            }
+        }
+    }
+}
+
+#[test]
+fn subscriber_overflow_is_shed_with_busy_not_queued() {
+    let server = FleetServer::start_with(
+        mixed_fleet(2, false),
+        "127.0.0.1:0",
+        ServeLimits { workers: 2, max_conns: 2, timeout: Duration::from_secs(5) },
+    )
+    .expect("bind");
+    let addr = server.local_addr();
+
+    let mut a = BinClient::connect(addr).expect("first subscriber");
+    a.subscribe().expect("subscribe");
+    let mut b = BinClient::connect(addr).expect("second subscriber");
+    b.subscribe().expect("subscribe");
+    assert_eq!(server.subscriber_count(), 2);
+
+    let mut c = BinClient::connect(addr).expect("third connection");
+    let err = c.subscribe().expect_err("subscriber cap reached must answer busy");
+    assert!(err.to_string().contains("busy"), "{err}");
+}
+
+// ---------------------------------------------------------------------
+// Shutdown drains: no connection outlives it, no new answers after it
+// ---------------------------------------------------------------------
+
+#[test]
+fn shutdown_drains_connections_and_refuses_new_answers() {
+    let mut server = FleetServer::start(mixed_fleet(2, false), "127.0.0.1:0").expect("bind");
+    let addr = server.local_addr();
+
+    // Live traffic: a keep-alive reader and an attached subscriber.
+    let mut client = HttpClient::connect(addr).expect("connect");
+    let (status, _) = client.get("/aggregate").expect("get");
+    assert_eq!(status, 200);
+    let mut sub = BinClient::connect(addr).expect("binary session");
+    sub.subscribe().expect("subscribe");
+
+    let t0 = Instant::now();
+    server.shutdown();
+    assert!(
+        t0.elapsed() < Duration::from_secs(10),
+        "shutdown did not drain promptly: {:?}",
+        t0.elapsed()
+    );
+
+    // The drain half-closed every live socket...
+    assert!(client.get("/aggregate").is_err(), "keep-alive connection must be gone");
+    assert!(sub.next_event().is_err(), "subscriber stream must be gone");
+    // ...and the port no longer answers at all.
+    assert!(http_get(addr, "/aggregate").is_err(), "no new answers after shutdown");
 }
